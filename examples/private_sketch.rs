@@ -1,0 +1,54 @@
+//! Differential privacy demo: release the sketch with example-level
+//! epsilon-DP (Laplace count noise) and measure the accuracy cost across
+//! an epsilon sweep. The device keeps its exact counters; only the noisy
+//! release leaves the device.
+//!
+//! ```text
+//! cargo run --release --example private_sketch
+//! ```
+
+use storm::config::{OptimizerConfig, StormConfig};
+use storm::data::scale::scale_to_unit_ball_quantile;
+use storm::data::synthetic;
+use storm::linalg::solve::{lstsq, mse, LstsqMethod};
+use storm::optim::dfo::DfoOptimizer;
+use storm::optim::FnOracle;
+use storm::sketch::privacy::PrivateStormRelease;
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+use storm::util::mathx::norm2;
+
+fn main() {
+    let mut ds = synthetic::autos(21);
+    scale_to_unit_ball_quantile(&mut ds, storm::data::scale::DEFAULT_RADIUS, 0.9);
+    let d = ds.dim();
+    let theta_ls = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
+    let cfg = StormConfig { rows: 300, power: 4, saturating: true };
+    let mut sketch = StormSketch::new(cfg, d + 1, 5);
+    for i in 0..ds.len() {
+        sketch.insert(&ds.augmented(i));
+    }
+
+    let rescale = |q: &[f64]| -> Vec<f64> {
+        let n = norm2(q);
+        let r = storm::data::scale::query_radius();
+        if n <= r { q.to_vec() } else { q.iter().map(|v| v * r / n).collect() }
+    };
+    let train = |risk: &dyn Fn(&[f64]) -> f64, seed: u64| -> Vec<f64> {
+        let oracle = FnOracle::new(d, risk);
+        let ocfg = OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters: 300, seed };
+        DfoOptimizer::new(ocfg, d).run(&oracle, ocfg.iters)
+    };
+
+    println!("dataset autos (159 x 26), sketch {} bytes, ls mse {:.4e}", sketch.bytes(), mse(&ds.x, &ds.y, &theta_ls));
+    println!("{:>8} {:>12} {:>12}", "epsilon", "mse", "vs_exact");
+    let theta_exact = train(&|q: &[f64]| sketch.estimate_risk_scaled(q), 1);
+    let mse_exact = mse(&ds.x, &ds.y, &theta_exact);
+    for eps in [0.1, 0.5, 1.0, 5.0, 10.0] {
+        let release = PrivateStormRelease::release(&sketch, eps, 33);
+        let theta = train(&|q: &[f64]| release.estimate_risk(&rescale(q)), 1);
+        let m = mse(&ds.x, &ds.y, &theta);
+        println!("{eps:>8} {m:>12.4e} {:>11.2}x", m / mse_exact.max(1e-300));
+    }
+    println!("{:>8} {mse_exact:>12.4e} {:>11.2}x   (non-private sketch)", "inf", 1.0);
+}

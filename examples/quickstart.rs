@@ -1,0 +1,50 @@
+//! Quickstart: sketch a dataset, train a linear model from the sketch
+//! alone, and compare against exact least squares.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use storm::config::{OptimizerConfig, StormConfig};
+use storm::data::scale::scale_to_unit_ball_quantile;
+use storm::data::synthetic;
+use storm::linalg::solve::{lstsq, mse, LstsqMethod};
+use storm::optim::dfo::DfoOptimizer;
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+
+fn main() {
+    // 1. A dataset (Table-1 substitute: airfoil, 1400 x 9).
+    let mut ds = synthetic::airfoil(42);
+    // 2. Unit-ball scaling — required by the asymmetric inner-product LSH.
+    scale_to_unit_ball_quantile(&mut ds, storm::data::scale::DEFAULT_RADIUS, 0.9);
+
+    // 3. One-pass sketching: every example updates 2 counters per row and
+    //    is then forgotten. The sketch is the ONLY thing training sees.
+    let cfg = StormConfig { rows: 400, power: 4, saturating: true };
+    let mut sketch = StormSketch::new(cfg, ds.dim() + 1, 7);
+    for i in 0..ds.len() {
+        sketch.insert(&ds.augmented(i));
+    }
+    println!(
+        "sketched {} examples into {} bytes ({}x smaller than the raw data)",
+        ds.len(),
+        sketch.bytes(),
+        ds.raw_bytes() / sketch.bytes()
+    );
+
+    // 4. Derivative-free training against the sketch (Algorithm 2).
+    let ocfg = OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters: 400, seed: 3 };
+    let mut opt = DfoOptimizer::new(ocfg, ds.dim());
+    let theta = opt.run(&sketch, ocfg.iters);
+
+    // 5. Compare with exact least squares on the full data.
+    let theta_ls = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
+    let zero = vec![0.0; ds.dim()];
+    println!("training MSE:");
+    println!("  zero model      {:.4e}", mse(&ds.x, &ds.y, &zero));
+    println!("  STORM (sketch)  {:.4e}", mse(&ds.x, &ds.y, &theta));
+    println!("  exact LS (full) {:.4e}", mse(&ds.x, &ds.y, &theta_ls));
+    println!("theta (storm) = {theta:?}");
+    println!("theta (ls)    = {theta_ls:?}");
+}

@@ -1,0 +1,69 @@
+//! Online streaming scenario: a long-running sensor stream feeds the
+//! sketch continuously; the model is re-trained periodically from the
+//! *same* sketch, which keeps absorbing data between retrainings. Shows
+//! the one-pass / anytime property: no example is ever stored.
+//!
+//! ```text
+//! cargo run --release --example streaming_regression
+//! ```
+
+use storm::config::{OptimizerConfig, StormConfig};
+use storm::data::scale::scale_to_unit_ball_quantile;
+use storm::data::stream::{ResampleStream, StreamSource};
+use storm::data::synthetic;
+use storm::linalg::solve::{lstsq, mse, LstsqMethod};
+use storm::optim::dfo::DfoOptimizer;
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+
+fn main() {
+    // The "sensor": resamples an airfoil-like distribution indefinitely.
+    let mut base = synthetic::airfoil(3);
+    scale_to_unit_ball_quantile(&mut base, storm::data::scale::DEFAULT_RADIUS, 0.9);
+    let theta_ls = lstsq(&base.x, &base.y, 0.0, LstsqMethod::Qr);
+    let d = base.dim();
+    let mut stream = ResampleStream::new(base.clone(), 99, 60_000);
+
+    let cfg = StormConfig { rows: 1000, power: 4, saturating: true };
+    let mut sketch = StormSketch::new(cfg, d + 1, 11);
+
+    println!("streaming 60k examples; retraining from the sketch every 10k:");
+    println!("{:>9} {:>12} {:>12} {:>10}", "examples", "storm_mse", "ls_mse", "param_err");
+    let mut seen = 0u64;
+    let retrain_every = 10_000;
+    loop {
+        let batch = stream.next_batch(512);
+        if batch.is_empty() {
+            break;
+        }
+        for z in &batch {
+            sketch.insert(z);
+        }
+        let before = seen;
+        seen += batch.len() as u64;
+        if seen / retrain_every != before / retrain_every {
+            let ocfg = OptimizerConfig {
+                queries: 8,
+                sigma: 0.3,
+                step: 0.6,
+                iters: 500,
+                seed: seen, // fresh DFO path each retrain
+            };
+            let mut opt = DfoOptimizer::new(ocfg, d);
+            let theta = opt.run(&sketch, ocfg.iters);
+            println!(
+                "{:>9} {:>12.4e} {:>12.4e} {:>10.3}",
+                seen,
+                mse(&base.x, &base.y, &theta),
+                mse(&base.x, &base.y, &theta_ls),
+                storm::metrics::relative_param_error(&theta, &theta_ls),
+            );
+        }
+    }
+    println!(
+        "final sketch: {} examples in {} bytes (raw would be {} bytes)",
+        sketch.count(),
+        sketch.bytes(),
+        sketch.count() as usize * (d + 1) * 8,
+    );
+}

@@ -1,0 +1,103 @@
+"""L1 Pallas kernels for the STORM hot spot.
+
+Two kernels:
+
+* `matmul_sign` — the projection core: a tiled `[B, A] @ [A, M]` matmul
+  producing raw projection values. On TPU this is the MXU workload; the
+  batch dimension is tiled through VMEM via BlockSpec while the (small)
+  plane matrix stays resident.
+* `onehot_hist` — histogram-by-matmul: for each sketch row, build the
+  one-hot encoding of the batch's bucket ids and contract it with the
+  mask. This replaces the CPU formulation's scatter-increment with two
+  dense passes — the standard TPU trick (scatter is memory-bound and
+  serializes; one-hot contraction runs on the MXU).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+scalar edge CPUs; there is no warp/shared-memory structure to port.
+Instead the *bulk* insert path (the leader / simulation hot loop) is
+reformulated as MXU-shaped dense algebra: batch-tile in VMEM, planes
+resident, scatter -> one-hot matmul.
+
+Both kernels are lowered with `interpret=True` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; numerics are identical and the TPU
+analysis lives in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch tile for the projection kernel. 128 matches the MXU systolic edge.
+TILE_B = 128
+
+
+def _matmul_sign_kernel(x_ref, w_ref, o_ref):
+    """One batch tile: o = x @ w (f32)."""
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def matmul_project(x, w):
+    """Tiled projection `x @ w` via Pallas.
+
+    x: [B, A] (augmented examples or queries)
+    w: [A, M] (transposed plane matrix, M = R * P)
+    Returns [B, M] raw projections (f32).
+    """
+    b, a = x.shape
+    a2, m = w.shape
+    assert a == a2, f"inner dims mismatch: {a} vs {a2}"
+    # Pad the batch to a tile multiple so the grid is rectangular.
+    pad = (-b) % TILE_B
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    bp = x.shape[0]
+    out = pl.pallas_call(
+        _matmul_sign_kernel,
+        grid=(bp // TILE_B,),
+        in_specs=[
+            pl.BlockSpec((TILE_B, a), lambda i: (i, 0)),
+            pl.BlockSpec((a, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, m), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:b]
+
+
+def _onehot_hist_kernel(buckets_ref, mask_ref, o_ref, *, num_buckets):
+    """One sketch row: counts[b] = sum_i mask[i] * [buckets[i] == b].
+
+    buckets_ref: [B, 1] f32 bucket ids for this row
+    mask_ref:    [B, 1] f32 weights
+    o_ref:       [1, num_buckets] f32 counts
+    """
+    ids = buckets_ref[...]  # [B, 1]
+    iota = jax.lax.broadcasted_iota(jnp.float32, (1, num_buckets), 1)
+    onehot = (ids == iota).astype(jnp.float32)  # [B, num_buckets]
+    o_ref[...] = mask_ref[...].T @ onehot  # [1, B] @ [B, nb] -> [1, nb]
+
+
+def onehot_histogram(buckets, mask, num_buckets):
+    """Per-row histogram of bucket ids via one-hot contraction.
+
+    buckets: [B, R] int32
+    mask:    [B]    f32
+    Returns [R, num_buckets] f32 counts.
+    """
+    b, rows = buckets.shape
+    kernel = functools.partial(_onehot_hist_kernel, num_buckets=num_buckets)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((b, 1), lambda r: (0, r)),
+            pl.BlockSpec((b, 1), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, num_buckets), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, num_buckets), jnp.float32),
+        interpret=True,
+    )(buckets.astype(jnp.float32), mask.astype(jnp.float32)[:, None])
+    return out

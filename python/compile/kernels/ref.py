@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracle for the STORM kernels.
+
+Everything here is the *specification*: straightforward, unfused jnp that
+mirrors the rust scalar implementation bit-for-bit in structure. The
+Pallas kernels in `prp.py` and the L2 graphs in `model.py` are tested
+against these functions by `python/tests/`.
+
+Conventions (shared with the rust side — see rust/src/lsh/):
+
+* data-side augmentation:  z -> [z, 0, sqrt(1 - |z|^2)]
+* query-side augmentation: q -> [q, sqrt(1 - |q|^2), 0]
+* a p-bit SRP bucket packs bit j = (proj_j >= 0) as 2^j
+* PRP inserts both z and -z; a query reads one bucket per row
+* normalized query estimate = mean_r counts[r, bucket_r] / n, and the
+  paper's surrogate risk is that divided by SCALE = 2.
+"""
+
+import jax.numpy as jnp
+
+# Normalization constant relating raw counts to the surrogate loss g
+# (mirrors rust sketch::storm::SCALE).
+SCALE = 2.0
+
+
+def augment_data(z):
+    """Data-side MIPS augmentation. z: [B, D] inside the unit ball."""
+    sq = jnp.sum(z * z, axis=-1, keepdims=True)
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - sq))
+    zeros = jnp.zeros_like(tail)
+    return jnp.concatenate([z, zeros, tail], axis=-1)
+
+
+def augment_query(q):
+    """Query-side MIPS augmentation. q: [K, D] inside the unit ball."""
+    sq = jnp.sum(q * q, axis=-1, keepdims=True)
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - sq))
+    zeros = jnp.zeros_like(tail)
+    return jnp.concatenate([q, tail, zeros], axis=-1)
+
+
+def buckets_from_projections(proj, rows, power):
+    """Pack sign bits into bucket ids.
+
+    proj: [N, rows * power] raw projection values. Bit j of a row's bucket
+    is (proj >= 0), weighted 2^j — identical to the rust SRP tie-break.
+    Returns int32 [N, rows].
+    """
+    n = proj.shape[0]
+    bits = (proj >= 0.0).astype(jnp.int32).reshape(n, rows, power)
+    weights = (2 ** jnp.arange(power, dtype=jnp.int32))[None, None, :]
+    return jnp.sum(bits * weights, axis=-1)
+
+
+def prp_insert_counts_ref(z, mask, planes):
+    """Reference PRP batch insert.
+
+    z:      [B, D]   augmented examples (inside unit ball)
+    mask:   [B]      1.0 for real rows, 0.0 for padding
+    planes: [R, P, D+2] hyperplanes (shared with the rust hash family)
+
+    Returns counts delta [R, 2^P] (f32): for every real example, +1 at
+    bucket(l_r(z)) and +1 at bucket(l_r(-z)) per row.
+    """
+    rows, power, _ = planes.shape
+    w = planes.reshape(rows * power, -1)  # [R*P, D+2]
+    apos = augment_data(z)                # [B, D+2]
+    aneg = augment_data(-z)
+    proj_pos = apos @ w.T                 # [B, R*P]
+    proj_neg = aneg @ w.T
+    bpos = buckets_from_projections(proj_pos, rows, power)  # [B, R]
+    bneg = buckets_from_projections(proj_neg, rows, power)
+    nb = 1 << power
+    # Cast BEFORE adding: the two PRP arms can land in the same bucket
+    # (tail-dominated rows), and bool + bool would OR instead of count 2.
+    onehot_pos = jnp.equal(bpos[..., None], jnp.arange(nb)[None, None, :]).astype(jnp.float32)
+    onehot_neg = jnp.equal(bneg[..., None], jnp.arange(nb)[None, None, :]).astype(jnp.float32)
+    m = mask[:, None, None]
+    counts = jnp.sum((onehot_pos + onehot_neg) * m, axis=0)  # [R, nb]
+    return counts.astype(jnp.float32)
+
+
+def storm_query_ref(counts, q, planes, n):
+    """Reference STORM risk query.
+
+    counts: [R, 2^P] f32 counters
+    q:      [K, D]   query vectors (inside unit ball)
+    planes: [R, P, D+2]
+    n:      [1]      examples ingested
+
+    Returns [K] surrogate risks: mean_r counts[r, bucket_r(q)] / n / SCALE.
+    """
+    rows, power, _ = planes.shape
+    w = planes.reshape(rows * power, -1)
+    aq = augment_query(q)                 # [K, D+2]
+    proj = aq @ w.T                       # [K, R*P]
+    b = buckets_from_projections(proj, rows, power)  # [K, R]
+    nb = 1 << power
+    onehot = jnp.equal(b[..., None], jnp.arange(nb)[None, None, :]).astype(counts.dtype)
+    gathered = jnp.einsum("krb,rb->kr", onehot, counts)  # [K, R]
+    mean_count = jnp.mean(gathered, axis=-1)
+    return mean_count / jnp.maximum(n[0], 1.0) / SCALE

@@ -1,0 +1,71 @@
+"""L2: the STORM compute graphs, composed from the L1 Pallas kernels.
+
+Two jit-able entry points mirror the rust runtime's interface exactly
+(see rust/src/runtime/executor.rs):
+
+* `prp_insert(z, mask, planes)`       -> counts delta [R, 2^P]
+* `storm_query(counts, q, planes, n)` -> surrogate risks [K]
+
+Hyperplanes are *inputs* (not baked constants) so the rust coordinator
+feeds the very same hash family its scalar path uses — counters agree
+bit-for-bit between backends, which the integration tests assert.
+
+Python never runs at serving time: `aot.py` lowers these functions once
+to HLO text and the rust PJRT runtime executes the artifacts.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import prp as kernels
+from .kernels import ref
+
+
+def prp_insert(z, mask, planes):
+    """Batch PRP insert: the counts delta for a (padded) example batch.
+
+    z:      [B, D] f32 augmented examples, unit-ball scaled
+    mask:   [B]    f32 1.0 = real row, 0.0 = padding
+    planes: [R, P, D+2] f32
+
+    Returns [R, 2^P] f32 — add-mergeable with the live sketch.
+    """
+    rows, power, _ = planes.shape
+    w = planes.reshape(rows * power, -1).T  # [D+2, R*P]
+    # L1 projection kernel over both PRP arms. aug(z) and aug(-z) share
+    # the tail coordinate, so negation happens before augmentation.
+    apos = ref.augment_data(z)
+    aneg = ref.augment_data(-z)
+    proj_pos = kernels.matmul_project(apos, w)  # [B, R*P]
+    proj_neg = kernels.matmul_project(aneg, w)
+    bpos = ref.buckets_from_projections(proj_pos, rows, power)  # [B, R]
+    bneg = ref.buckets_from_projections(proj_neg, rows, power)
+    nb = 1 << power
+    # L1 histogram kernel (one-hot contraction per sketch row).
+    cpos = kernels.onehot_histogram(bpos, mask, nb)
+    cneg = kernels.onehot_histogram(bneg, mask, nb)
+    return cpos + cneg
+
+
+def storm_query(counts, q, planes, n):
+    """Risk query: estimate the surrogate risk at each candidate.
+
+    counts: [R, 2^P] f32 live counters
+    q:      [K, D]   f32 queries, unit-ball scaled
+    planes: [R, P, D+2] f32
+    n:      [1]      f32 total examples ingested
+
+    Returns [K] f32 risks (mean bucket count / n / SCALE) — identical
+    normalization to rust `StormSketch::estimate_risk`.
+    """
+    rows, power, _ = planes.shape
+    w = planes.reshape(rows * power, -1).T
+    aq = ref.augment_query(q)
+    proj = kernels.matmul_project(aq, w)  # [K, R*P]
+    buckets = ref.buckets_from_projections(proj, rows, power)  # [K, R]
+    nb = 1 << power
+    onehot = jnp.equal(
+        buckets[..., None], jnp.arange(nb, dtype=jnp.int32)[None, None, :]
+    ).astype(counts.dtype)
+    gathered = jnp.einsum("krb,rb->kr", onehot, counts)
+    mean_count = jnp.mean(gathered, axis=-1)
+    return mean_count / jnp.maximum(n[0], 1.0) / ref.SCALE

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels vs the pure-jnp oracle, including hypothesis sweeps
+over shapes — the core correctness signal for the compiled hot path."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prp, ref
+
+
+def rand_ball(rng, n, d, radius=0.9):
+    x = rng.normal(size=(n, d))
+    norms = np.linalg.norm(x, axis=1, keepdims=True)
+    r = radius * rng.uniform(size=(n, 1)) ** (1.0 / d)
+    return (x / np.maximum(norms, 1e-12) * r).astype(np.float32)
+
+
+def test_matmul_project_matches_jnp_exact_shape():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(prp.TILE_B, 12)).astype(np.float32)
+    w = rng.normal(size=(12, 40)).astype(np.float32)
+    got = np.asarray(prp.matmul_project(jnp.asarray(x), jnp.asarray(w)))
+    want = x @ w
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    a=st.integers(min_value=1, max_value=24),
+    m=st.integers(min_value=1, max_value=48),
+)
+def test_matmul_project_shape_sweep(b, a, m):
+    # Padding to the batch tile must be invisible to callers.
+    rng = np.random.default_rng(b * 1000 + a * 10 + m)
+    x = rng.normal(size=(b, a)).astype(np.float32)
+    w = rng.normal(size=(a, m)).astype(np.float32)
+    got = np.asarray(prp.matmul_project(jnp.asarray(x), jnp.asarray(w)))
+    assert got.shape == (b, m)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_onehot_histogram_matches_numpy():
+    rng = np.random.default_rng(1)
+    b, rows, nb = 50, 6, 8
+    buckets = rng.integers(0, nb, size=(b, rows)).astype(np.int32)
+    mask = (rng.uniform(size=b) > 0.3).astype(np.float32)
+    got = np.asarray(
+        prp.onehot_histogram(jnp.asarray(buckets), jnp.asarray(mask), nb)
+    )
+    want = np.zeros((rows, nb), dtype=np.float32)
+    for i in range(b):
+        if mask[i] > 0:
+            for r in range(rows):
+                want[r, buckets[i, r]] += 1.0
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=80),
+    rows=st.integers(min_value=1, max_value=12),
+    power=st.integers(min_value=1, max_value=5),
+)
+def test_onehot_histogram_shape_sweep(b, rows, power):
+    nb = 1 << power
+    rng = np.random.default_rng(b * 100 + rows * 10 + power)
+    buckets = rng.integers(0, nb, size=(b, rows)).astype(np.int32)
+    mask = np.ones(b, dtype=np.float32)
+    got = np.asarray(prp.onehot_histogram(jnp.asarray(buckets), jnp.asarray(mask), nb))
+    assert got.shape == (rows, nb)
+    # Every row's histogram must total b.
+    np.testing.assert_allclose(got.sum(axis=1), b, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=64),
+    d=st.integers(min_value=1, max_value=10),
+    rows=st.integers(min_value=1, max_value=8),
+    power=st.integers(min_value=1, max_value=4),
+)
+def test_full_insert_pipeline_vs_ref(b, d, rows, power):
+    from compile import model
+
+    rng = np.random.default_rng(b * 997 + d * 31 + rows * 7 + power)
+    z = rand_ball(rng, b, d)
+    mask = (rng.uniform(size=b) > 0.2).astype(np.float32)
+    planes = rng.normal(size=(rows, power, d + 2)).astype(np.float32)
+    got = np.asarray(
+        model.prp_insert(jnp.asarray(z), jnp.asarray(mask), jnp.asarray(planes))
+    )
+    want = np.asarray(
+        ref.prp_insert_counts_ref(jnp.asarray(z), jnp.asarray(mask), jnp.asarray(planes))
+    )
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=20),
+    d=st.integers(min_value=1, max_value=10),
+    rows=st.integers(min_value=1, max_value=8),
+    power=st.integers(min_value=1, max_value=4),
+)
+def test_full_query_pipeline_vs_ref(k, d, rows, power):
+    from compile import model
+
+    rng = np.random.default_rng(k * 13 + d * 101 + rows * 3 + power)
+    nb = 1 << power
+    counts = rng.integers(0, 50, size=(rows, nb)).astype(np.float32)
+    q = rand_ball(rng, k, d)
+    planes = rng.normal(size=(rows, power, d + 2)).astype(np.float32)
+    n = jnp.asarray([123.0])
+    got = np.asarray(
+        model.storm_query(jnp.asarray(counts), jnp.asarray(q), jnp.asarray(planes), n)
+    )
+    want = np.asarray(
+        ref.storm_query_ref(jnp.asarray(counts), jnp.asarray(q), jnp.asarray(planes), n)
+    )
+    assert got.shape == (k,)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,120 @@
+"""Invariants of the pure-jnp reference oracle itself — these pin down the
+specification the Pallas kernels and the rust scalar path both implement."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def rand_ball(rng, n, d, radius=0.9):
+    x = rng.normal(size=(n, d))
+    norms = np.linalg.norm(x, axis=1, keepdims=True)
+    r = radius * rng.uniform(size=(n, 1)) ** (1.0 / d)
+    return (x / np.maximum(norms, 1e-12) * r).astype(np.float32)
+
+
+def rand_planes(rng, rows, power, dim):
+    return rng.normal(size=(rows, power, dim + 2)).astype(np.float32)
+
+
+def test_augmentation_preserves_inner_product_and_norm():
+    rng = np.random.default_rng(0)
+    z = rand_ball(rng, 20, 5)
+    q = rand_ball(rng, 20, 5)
+    az = np.asarray(ref.augment_data(jnp.asarray(z)))
+    aq = np.asarray(ref.augment_query(jnp.asarray(q)))
+    # Unit norm after augmentation.
+    np.testing.assert_allclose(np.linalg.norm(az, axis=1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(aq, axis=1), 1.0, atol=1e-5)
+    # Cross inner products preserved.
+    np.testing.assert_allclose(
+        np.sum(aq * az, axis=1), np.sum(q * z, axis=1), atol=1e-5
+    )
+
+
+def test_buckets_pack_bits_lsb_first():
+    # proj bits [>=0] weighted 2^j, j over the last (power) axis.
+    proj = jnp.asarray([[1.0, -1.0, 1.0, 1.0]])  # rows=2, power=2
+    b = np.asarray(ref.buckets_from_projections(proj, rows=2, power=2))
+    assert b.shape == (1, 2)
+    assert b[0, 0] == 1  # bits (1, 0) -> 1
+    assert b[0, 1] == 3  # bits (1, 1) -> 3
+
+
+def test_sign_zero_counts_as_positive():
+    proj = jnp.asarray([[0.0]])
+    b = np.asarray(ref.buckets_from_projections(proj, rows=1, power=1))
+    assert b[0, 0] == 1
+
+
+def test_insert_counts_total_is_2n_per_row():
+    rng = np.random.default_rng(1)
+    z = rand_ball(rng, 33, 4)
+    mask = np.ones(33, dtype=np.float32)
+    planes = rand_planes(rng, 7, 3, 4)
+    counts = np.asarray(
+        ref.prp_insert_counts_ref(jnp.asarray(z), jnp.asarray(mask), jnp.asarray(planes))
+    )
+    assert counts.shape == (7, 8)
+    np.testing.assert_allclose(counts.sum(axis=1), 2 * 33, atol=1e-4)
+
+
+def test_mask_zeroes_padding():
+    rng = np.random.default_rng(2)
+    z = rand_ball(rng, 10, 3)
+    planes = rand_planes(rng, 5, 2, 3)
+    mask_full = np.ones(10, dtype=np.float32)
+    mask_half = mask_full.copy()
+    mask_half[5:] = 0.0
+    c_half = np.asarray(
+        ref.prp_insert_counts_ref(jnp.asarray(z), jnp.asarray(mask_half), jnp.asarray(planes))
+    )
+    c_first5 = np.asarray(
+        ref.prp_insert_counts_ref(
+            jnp.asarray(z[:5]), jnp.asarray(mask_full[:5]), jnp.asarray(planes)
+        )
+    )
+    np.testing.assert_allclose(c_half, c_first5, atol=1e-5)
+
+
+def test_query_normalization():
+    # Single example, query landing where we can compute by hand: risk =
+    # mean_r count[r, bucket_r] / n / 2.
+    rng = np.random.default_rng(3)
+    z = rand_ball(rng, 50, 3)
+    planes = rand_planes(rng, 11, 4, 3)
+    mask = np.ones(50, dtype=np.float32)
+    counts = ref.prp_insert_counts_ref(jnp.asarray(z), jnp.asarray(mask), jnp.asarray(planes))
+    q = rand_ball(rng, 4, 3)
+    risks = np.asarray(
+        ref.storm_query_ref(counts, jnp.asarray(q), jnp.asarray(planes), jnp.asarray([50.0]))
+    )
+    assert risks.shape == (4,)
+    assert np.all(risks >= 0.0)
+    # Bound: counts per bucket <= 2n, so risk <= 1.
+    assert np.all(risks <= 1.0 + 1e-6)
+
+
+def test_query_estimates_match_expected_loss_statistically():
+    # With many rows, the estimate approaches the closed-form surrogate:
+    # g(q, z) averaged over data (PRP collision probability).
+    rng = np.random.default_rng(4)
+    d = 3
+    z = rand_ball(rng, 100, d, radius=0.8)
+    q = rand_ball(rng, 1, d, radius=0.7)
+    rows, power = 3000, 4
+    planes = rand_planes(rng, rows, power, d)
+    mask = np.ones(100, dtype=np.float32)
+    counts = ref.prp_insert_counts_ref(jnp.asarray(z), jnp.asarray(mask), jnp.asarray(planes))
+    risk = float(
+        np.asarray(
+            ref.storm_query_ref(counts, jnp.asarray(q), jnp.asarray(planes), jnp.asarray([100.0]))
+        )[0]
+    )
+    t = z @ q[0]
+    f = 1.0 - np.arccos(np.clip(t, -1, 1)) / np.pi
+    g = 0.5 * f**power + 0.5 * (1.0 - f) ** power
+    want = float(g.mean())
+    assert abs(risk - want) < 0.02, (risk, want)

@@ -1,0 +1,10 @@
+//! Ablation bench: the design-choice comparison table (probe strategy,
+//! iterate selection, scaling, hash power) — see experiments::ablate.
+
+use storm::experiments::{ablate, Effort};
+use storm::util::bench::section;
+
+fn main() {
+    section("ablate: design choices (variant ids in experiments::ablate)");
+    ablate::run(Effort::from_env(), 0).print();
+}

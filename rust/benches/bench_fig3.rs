@@ -1,0 +1,25 @@
+//! Figure 3 regeneration bench: emits the fig3a/fig3b series and times
+//! the surrogate-loss evaluation kernel.
+
+use storm::experiments::fig3;
+use storm::loss::prp_loss::prp_surrogate;
+use storm::util::bench::{bench_items, black_box, config_from_env, section};
+
+fn main() {
+    section("fig3a: surrogate loss vs t (closed form + sketch overlay)");
+    fig3::run_fig3a(0).print();
+
+    section("fig3b: slope at t=0.1 vs p");
+    fig3::run_fig3b().print();
+
+    section("loss evaluation kernel");
+    let cfg = config_from_env();
+    let ts: Vec<f64> = (0..1000).map(|i| -0.99 + 1.98 * i as f64 / 999.0).collect();
+    for p in [2u32, 4, 16] {
+        bench_items(&format!("prp_surrogate_1k_p{p}"), cfg, ts.len() as u64, || {
+            for &t in &ts {
+                black_box(prp_surrogate(t, p));
+            }
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Figure 4 regeneration: the full memory sweep (STORM vs random
+//! sampling vs leverage sampling vs Clarkson–Woodruff) on the three
+//! Table-1 datasets. Fast effort by default; set `STORM_BENCH_FULL=1`
+//! for the paper protocol (10 runs per point).
+
+use storm::experiments::{fig4, Effort};
+use storm::util::bench::section;
+use storm::util::timer::Timer;
+
+fn main() {
+    let effort = Effort::from_env();
+    section(&format!("fig4: MSE vs memory ({effort:?} effort)"));
+    let t = Timer::start();
+    for table in fig4::run(effort, 0) {
+        table.print();
+        println!();
+    }
+    println!("# fig4 total wall: {:.1}s", t.elapsed_secs());
+}

@@ -1,0 +1,15 @@
+//! Figure 5 regeneration: the 2-D qualitative experiments (regression
+//! with PRP p=4, classification with the margin loss p=1; R=100, 100 DFO
+//! iterations — the paper's settings).
+
+use storm::experiments::{fig5, Effort};
+use storm::util::bench::section;
+
+fn main() {
+    let effort = Effort::from_env();
+    section("fig5: 2-D synthetic regression + classification");
+    for table in fig5::run(effort, 0) {
+        table.print();
+        println!();
+    }
+}

@@ -1,0 +1,9 @@
+//! Figure 6 regeneration: STORM's margin loss vs classical losses.
+
+use storm::experiments::fig6;
+use storm::util::bench::section;
+
+fn main() {
+    section("fig6: classification losses");
+    fig6::run().print();
+}

@@ -1,0 +1,64 @@
+//! Fleet benchmarks: end-to-end sketch aggregation throughput across
+//! device counts and topologies, plus the merge/backpressure profile —
+//! regenerates the mergeability experiment numbers.
+
+use storm::config::{FleetConfig, StormConfig};
+use storm::data::scale::scale_to_unit_ball;
+use storm::data::stream::partition_streams;
+use storm::data::synthetic;
+use storm::edge::fleet::run_fleet;
+use storm::edge::topology::Topology;
+use storm::experiments::{merge, Effort};
+use storm::util::bench::{bench_items, config_from_env, section};
+
+fn main() {
+    let cfg = config_from_env();
+    let mut ds = synthetic::parkinsons(5);
+    scale_to_unit_ball(&mut ds, 0.9);
+    let storm_cfg = StormConfig { rows: 100, power: 4, saturating: true };
+
+    section("fleet: ingest throughput vs devices (star)");
+    for devices in [1usize, 2, 4, 8] {
+        let n = ds.len() as u64;
+        let dsc = ds.clone();
+        bench_items(&format!("fleet_star_{devices}dev_5800ex"), cfg, n, || {
+            let fleet = FleetConfig {
+                devices,
+                batch: 64,
+                channel_capacity: 8,
+                link_latency_us: 0,
+                link_bandwidth_bps: 0,
+                seed: 0,
+            };
+            let streams = partition_streams(&dsc, devices, None);
+            let r = run_fleet(fleet, storm_cfg, Topology::Star, dsc.dim() + 1, 3, streams);
+            assert_eq!(r.examples, n);
+        });
+    }
+
+    section("fleet: topology comparison (8 devices)");
+    for (name, topo) in [
+        ("star", Topology::Star),
+        ("tree2", Topology::Tree { fanout: 2 }),
+        ("chain", Topology::Chain),
+    ] {
+        let n = ds.len() as u64;
+        let dsc = ds.clone();
+        bench_items(&format!("fleet_{name}_8dev"), cfg, n, || {
+            let fleet = FleetConfig {
+                devices: 8,
+                batch: 64,
+                channel_capacity: 8,
+                link_latency_us: 0,
+                link_bandwidth_bps: 0,
+                seed: 0,
+            };
+            let streams = partition_streams(&dsc, 8, None);
+            let r = run_fleet(fleet, storm_cfg, topo, dsc.dim() + 1, 3, streams);
+            assert_eq!(r.examples, n);
+        });
+    }
+
+    section("merge experiment table");
+    merge::run(Effort::from_env(), 5).print();
+}

@@ -1,0 +1,70 @@
+//! Runtime benchmarks: the AOT/XLA batched path vs the scalar rust path —
+//! insert throughput and query (DFO probe) latency. These are the §Perf
+//! headline numbers. Skips cleanly when `artifacts/` is missing.
+
+use storm::config::StormConfig;
+use storm::coordinator::oracle::XlaRiskOracle;
+use storm::runtime::XlaStorm;
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+use storm::testing::gen_ball_point;
+use storm::util::bench::{bench_items, black_box, config_from_env, section};
+use storm::util::rng::Xoshiro256;
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.toml").exists() {
+        eprintln!("SKIP bench_runtime: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let cfg = config_from_env();
+    // synth2d artifact config: D = 3, R = 100, p = 4.
+    let scfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let mut sk = StormSketch::new(scfg, 3, 7);
+    let mut rng = Xoshiro256::new(1);
+    let data: Vec<Vec<f64>> = (0..4096).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+    for z in &data {
+        sk.insert(z);
+    }
+    let exe = XlaStorm::load(dir, 3, 100, 4, sk.hashes()).expect("load artifacts");
+
+    section("insert: scalar rust vs XLA batched (batch=256)");
+    let mut scratch = StormSketch::new(scfg, 3, 7);
+    bench_items("insert_rust_scalar_4096", cfg, data.len() as u64, || {
+        for z in &data {
+            scratch.insert(z);
+        }
+    });
+    bench_items("insert_xla_batched_4096", cfg, data.len() as u64, || {
+        for chunk in data.chunks(exe.batch_size()) {
+            black_box(exe.insert_counts(chunk).unwrap());
+        }
+    });
+
+    section("query: scalar rust vs XLA batched (16 probes)");
+    let queries: Vec<Vec<f64>> = (0..16)
+        .map(|_| {
+            let mut q = gen_ball_point(&mut rng, 2, 0.5);
+            q.push(-1.0);
+            q
+        })
+        .collect();
+    bench_items("query_rust_scalar_x16", cfg, 16, || {
+        for q in &queries {
+            black_box(sk.estimate_risk_scaled(q));
+        }
+    });
+    let oracle = XlaRiskOracle::new(&exe, &sk);
+    bench_items("query_xla_batched_x16", cfg, 16, || {
+        black_box(oracle.risks(&queries));
+    });
+
+    section("fused DFO step (1 XLA execution per iteration)");
+    let mut theta = vec![0.0, 0.0, -1.0];
+    let mut rng2 = Xoshiro256::new(9);
+    bench_items("dfo_step_fused", cfg, 1, || {
+        black_box(storm::coordinator::oracle::fused_dfo_step(
+            &oracle, &mut theta, 8, 0.3, 0.6, &mut rng2,
+        ));
+    });
+}

@@ -1,0 +1,70 @@
+//! Sketch micro-benchmarks: insert throughput, query latency, merge and
+//! wire-format throughput — the L3 hot-path numbers for EXPERIMENTS.md
+//! §Perf. Run with `cargo bench --bench bench_sketch`; set
+//! `STORM_BENCH_FAST=1` for a quick pass.
+
+use storm::config::StormConfig;
+use storm::sketch::serialize::{decode, encode};
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+use storm::testing::gen_ball_point;
+use storm::util::bench::{bench_items, black_box, config_from_env, section};
+use storm::util::rng::Xoshiro256;
+
+fn main() {
+    let cfg = config_from_env();
+    section("sketch: insert throughput (scalar rust path)");
+    for (rows, power) in [(50usize, 4u32), (100, 4), (400, 4), (100, 8)] {
+        let scfg = StormConfig { rows, power, saturating: true };
+        let mut rng = Xoshiro256::new(1);
+        let data: Vec<Vec<f64>> = (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();
+        let mut sk = StormSketch::new(scfg, 22, 7);
+        bench_items(
+            &format!("insert_1k_R{rows}_p{power}_d22"),
+            cfg,
+            data.len() as u64,
+            || {
+                for z in &data {
+                    sk.insert(z);
+                }
+            },
+        );
+    }
+
+    section("sketch: query latency");
+    for rows in [50usize, 100, 400] {
+        let scfg = StormConfig { rows, power: 4, saturating: true };
+        let mut rng = Xoshiro256::new(2);
+        let mut sk = StormSketch::new(scfg, 22, 7);
+        for _ in 0..2000 {
+            let z = gen_ball_point(&mut rng, 22, 0.9);
+            sk.insert(&z);
+        }
+        let q = gen_ball_point(&mut rng, 22, 0.8);
+        bench_items(&format!("query_R{rows}_d22"), cfg, 1, || {
+            black_box(sk.estimate_risk(&q));
+        });
+    }
+
+    section("sketch: merge + wire format");
+    let scfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let mut rng = Xoshiro256::new(3);
+    let mut a = StormSketch::new(scfg, 22, 9);
+    let mut b = StormSketch::new(scfg, 22, 9);
+    for _ in 0..1000 {
+        a.insert(&gen_ball_point(&mut rng, 22, 0.9));
+        b.insert(&gen_ball_point(&mut rng, 22, 0.9));
+    }
+    bench_items("merge_R100", cfg, 1, || {
+        let mut c = a.grid().clone();
+        c.merge_from(black_box(b.grid()));
+        black_box(c.total());
+    });
+    let bytes = encode(&a);
+    bench_items("wire_encode_R100", cfg, bytes.len() as u64, || {
+        black_box(encode(&a));
+    });
+    bench_items("wire_decode_R100", cfg, bytes.len() as u64, || {
+        black_box(decode(&bytes).unwrap());
+    });
+}

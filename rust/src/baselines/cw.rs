@@ -1,0 +1,140 @@
+//! Clarkson–Woodruff sketch-and-solve baseline (STOC'09): project the
+//! `n x (d+1)` augmented system down to `s x (d+1)` with a count-sketch
+//! matrix `S` (each row of X lands in one of `s` buckets with a random
+//! sign, one pass, streaming-friendly) and solve the small least-squares
+//! problem `min || S X theta - S y ||`.
+
+use super::CompressedRegression;
+use crate::data::dataset::Dataset;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::solve::{lstsq, LstsqMethod};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Apply a count-sketch projection `S X` with `s` output rows, one pass.
+pub fn countsketch_project(x: &Matrix, s: usize, seed: u64) -> Matrix {
+    assert!(s >= 1);
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Matrix::zeros(s, x.cols());
+    for r in 0..x.rows() {
+        let bucket = rng.below(s as u64) as usize;
+        let sign = if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
+        let row = x.row(r);
+        let dst = out.row_mut(bucket);
+        for c in 0..row.len() {
+            dst[c] += sign * row[c];
+        }
+    }
+    out
+}
+
+/// Count-sketch both X and y with the *same* S (same seed stream).
+pub fn countsketch_system(x: &Matrix, y: &[f64], s: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    assert_eq!(x.rows(), y.len());
+    let mut rng = Xoshiro256::new(seed);
+    let mut sx = Matrix::zeros(s, x.cols());
+    let mut sy = vec![0.0; s];
+    for r in 0..x.rows() {
+        let bucket = rng.below(s as u64) as usize;
+        let sign = if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
+        let row = x.row(r);
+        let dst = sx.row_mut(bucket);
+        for c in 0..row.len() {
+            dst[c] += sign * row[c];
+        }
+        sy[bucket] += sign * y[r];
+    }
+    (sx, sy)
+}
+
+/// The baseline: sketch rows = budget / bytes-per-row (f32 storage, same
+/// accounting as the sampling baselines).
+pub struct ClarksonWoodruff;
+
+impl CompressedRegression for ClarksonWoodruff {
+    fn name(&self) -> &'static str {
+        "cw-sketch"
+    }
+
+    fn fit(&self, ds: &Dataset, budget_bytes: usize, seed: u64) -> (Vec<f64>, usize) {
+        let d = ds.dim();
+        let s = super::rows_for_budget(budget_bytes, d).max(1);
+        let (sx, sy) = countsketch_system(&ds.x, &ds.y, s, seed);
+        let theta = lstsq(&sx, &sy, 0.0, LstsqMethod::NormalEquations);
+        (theta, super::sample_bytes(s, d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::solve::mse;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn projection_preserves_column_sums_in_expectation() {
+        // E[S X] column norms relate to X's: check the unbiasedness of
+        // <Sx, Sy> for fixed vectors over many seeds.
+        let mut rng = Xoshiro256::new(1);
+        let x = Matrix::gaussian(40, 2, &mut rng);
+        let col0 = x.col(0);
+        let col1 = x.col(1);
+        let exact: f64 = crate::util::mathx::dot(&col0, &col1);
+        let trials = 3000;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let sx = countsketch_project(&x, 12, t as u64);
+            acc += crate::util::mathx::dot(&sx.col(0), &sx.col(1));
+        }
+        let emp = acc / trials as f64;
+        let scale = exact.abs().max(1.0);
+        assert_close(emp / scale, exact / scale, 0.1);
+    }
+
+    #[test]
+    fn sketched_solve_approaches_exact_with_size() {
+        let ds = synthetic::airfoil(9);
+        let exact = crate::linalg::solve::lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
+        let m_exact = mse(&ds.x, &ds.y, &exact);
+        let cw = ClarksonWoodruff;
+        let (theta, _) = cw.fit(&ds, super::super::sample_bytes(400, ds.dim()), 3);
+        let m_cw = mse(&ds.x, &ds.y, &theta);
+        // (1 + eps) approximation at s >> d.
+        assert!(m_cw < m_exact * 1.5 + 1e-9, "cw mse {m_cw} vs exact {m_exact}");
+    }
+
+    #[test]
+    fn fit_improves_with_budget() {
+        let ds = synthetic::parkinsons(4);
+        let cw = ClarksonWoodruff;
+        let runs = 5;
+        let avg = |rows: usize| -> f64 {
+            (0..runs)
+                .map(|s| {
+                    let (t, _) = cw.fit(&ds, super::super::sample_bytes(rows, ds.dim()), s);
+                    mse(&ds.x, &ds.y, &t).min(1e12)
+                })
+                .sum::<f64>()
+                / runs as f64
+        };
+        assert!(avg(600) < avg(40), "no improvement with budget");
+    }
+
+    #[test]
+    fn system_sketch_consistent_with_projection() {
+        let mut rng = Xoshiro256::new(5);
+        let x = Matrix::gaussian(30, 3, &mut rng);
+        let y: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let (sx, sy) = countsketch_system(&x, &y, 8, 42);
+        // Augment y as a 4th column and project with the same seed: the
+        // first 3 columns must agree and the 4th must equal sy.
+        let aug = Matrix::from_fn(30, 4, |r, c| if c < 3 { x[(r, c)] } else { y[r] });
+        let s_aug = countsketch_project(&aug, 8, 42);
+        for r in 0..8 {
+            for c in 0..3 {
+                assert_close(sx[(r, c)], s_aug[(r, c)], 1e-12);
+            }
+            assert_close(sy[r], s_aug[(r, 3)], 1e-12);
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Exact (uncompressed) least squares — the reference every compressed
+//! method is measured against, and the "optimal theta under least-squares
+//! ERM" STORM is shown to converge to.
+
+use super::CompressedRegression;
+use crate::data::dataset::Dataset;
+use crate::linalg::solve::{lstsq, LstsqMethod};
+
+/// Full-data least squares (ignores the budget; reports the true bytes of
+/// the raw data, which is the honest memory cost of this "method").
+pub struct ExactLeastSquares;
+
+impl CompressedRegression for ExactLeastSquares {
+    fn name(&self) -> &'static str {
+        "exact-ls"
+    }
+
+    fn fit(&self, ds: &Dataset, _budget_bytes: usize, _seed: u64) -> (Vec<f64>, usize) {
+        let theta = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
+        (theta, ds.raw_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::solve::mse;
+
+    #[test]
+    fn exact_ls_is_the_floor() {
+        // No compressed method can beat exact LS on training MSE.
+        let ds = synthetic::airfoil(11);
+        let (theta, bytes) = ExactLeastSquares.fit(&ds, 0, 0);
+        let m_exact = mse(&ds.x, &ds.y, &theta);
+        assert_eq!(bytes, ds.raw_bytes());
+        let rs = crate::baselines::random_sampling::RandomSampling;
+        let (theta_rs, _) =
+            crate::baselines::CompressedRegression::fit(&rs, &ds, 4096, 1);
+        assert!(m_exact <= mse(&ds.x, &ds.y, &theta_rs) + 1e-12);
+    }
+}

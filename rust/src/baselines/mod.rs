@@ -1,0 +1,56 @@
+//! Comparison baselines from the paper's evaluation (Figure 4):
+//! random sampling, leverage-score sampling, and the Clarkson–Woodruff
+//! linear-algebra sketch, plus the exact least-squares reference. Each
+//! reports its memory footprint in bytes so the Figure-4 sweep can place
+//! every method on a common memory axis.
+
+pub mod random_sampling;
+pub mod leverage;
+pub mod cw;
+pub mod exact;
+
+use crate::data::dataset::Dataset;
+
+/// A compressed-regression baseline: consumes a dataset under a memory
+/// budget and produces a linear model.
+pub trait CompressedRegression {
+    /// Human-readable method name (figure legend).
+    fn name(&self) -> &'static str;
+
+    /// Fit under the given memory budget (bytes). Returns `theta`
+    /// (length d) and the *actual* bytes used (methods quantize budgets
+    /// to whole rows/columns).
+    fn fit(&self, ds: &Dataset, budget_bytes: usize, seed: u64) -> (Vec<f64>, usize);
+}
+
+/// Bytes needed to store `rows` examples of dimension `d` in the smallest
+/// standard dtype the paper allows (f32), plus the f32 target column.
+pub fn sample_bytes(rows: usize, d: usize) -> usize {
+    rows * (d + 1) * std::mem::size_of::<f32>()
+}
+
+/// Largest sample count that fits the budget.
+pub fn rows_for_budget(budget_bytes: usize, d: usize) -> usize {
+    budget_bytes / ((d + 1) * std::mem::size_of::<f32>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting_roundtrip() {
+        let d = 9;
+        for rows in [1usize, 7, 100] {
+            let b = sample_bytes(rows, d);
+            assert_eq!(rows_for_budget(b, d), rows);
+        }
+    }
+
+    #[test]
+    fn rows_for_budget_floors() {
+        // 100 bytes, d=9 -> (9+1)*4 = 40 bytes/row -> 2 rows.
+        assert_eq!(rows_for_budget(100, 9), 2);
+        assert_eq!(rows_for_budget(39, 9), 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Random-sampling baseline: keep a uniform sample of the stream
+//! (reservoir sampling — one pass, bounded memory, the honest streaming
+//! counterpart of "random sampling" in the paper) and solve least squares
+//! on the sample.
+//!
+//! This is the baseline that exhibits *sample-wise double descent*
+//! (Nakkiran 2019): test/train risk peaks when the sample size crosses the
+//! intrinsic dimension d. The Figure-4 harness sweeps straight through
+//! that regime.
+
+use super::CompressedRegression;
+use crate::data::dataset::Dataset;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::solve::{lstsq, LstsqMethod};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Classic reservoir sampler over row indices.
+pub struct Reservoir {
+    k: usize,
+    seen: u64,
+    items: Vec<usize>,
+    rng: Xoshiro256,
+}
+
+impl Reservoir {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k > 0);
+        Reservoir { k, seen: 0, items: Vec::with_capacity(k), rng: Xoshiro256::new(seed) }
+    }
+
+    /// Offer one item index.
+    pub fn offer(&mut self, idx: usize) {
+        self.seen += 1;
+        if self.items.len() < self.k {
+            self.items.push(idx);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.k {
+                self.items[j as usize] = idx;
+            }
+        }
+    }
+
+    pub fn items(&self) -> &[usize] {
+        &self.items
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+}
+
+/// The baseline.
+pub struct RandomSampling;
+
+impl CompressedRegression for RandomSampling {
+    fn name(&self) -> &'static str {
+        "random-sampling"
+    }
+
+    fn fit(&self, ds: &Dataset, budget_bytes: usize, seed: u64) -> (Vec<f64>, usize) {
+        let d = ds.dim();
+        let k = super::rows_for_budget(budget_bytes, d).max(1).min(ds.len());
+        let mut res = Reservoir::new(k, seed);
+        for i in 0..ds.len() {
+            res.offer(i);
+        }
+        let idx = res.items();
+        let xs = ds.x.select_rows(idx);
+        let ys: Vec<f64> = idx.iter().map(|&i| ds.y[i]).collect();
+        let theta = fit_sample(&xs, &ys);
+        (theta, super::sample_bytes(idx.len(), d))
+    }
+}
+
+/// Solve LS on a (possibly undersized) sample, ridge-stabilized only when
+/// numerically necessary — intentionally NOT regularized enough to hide
+/// double descent.
+pub fn fit_sample(xs: &Matrix, ys: &[f64]) -> Vec<f64> {
+    lstsq(xs, ys, 0.0, LstsqMethod::NormalEquations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::solve::mse;
+
+    #[test]
+    fn reservoir_keeps_k_items() {
+        let mut r = Reservoir::new(5, 1);
+        for i in 0..100 {
+            r.offer(i);
+        }
+        assert_eq!(r.items().len(), 5);
+        assert_eq!(r.seen(), 100);
+        assert!(r.items().iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn reservoir_is_approximately_uniform() {
+        // Each of 20 items should appear in a k=5 reservoir with prob 1/4.
+        let trials = 4000;
+        let mut hits = vec![0usize; 20];
+        for t in 0..trials {
+            let mut r = Reservoir::new(5, t as u64);
+            for i in 0..20 {
+                r.offer(i);
+            }
+            for &i in r.items() {
+                hits[i] += 1;
+            }
+        }
+        for (i, &h) in hits.iter().enumerate() {
+            let p = h as f64 / trials as f64;
+            assert!((p - 0.25).abs() < 0.035, "item {i}: p={p}");
+        }
+    }
+
+    #[test]
+    fn fit_improves_with_budget() {
+        let ds = synthetic::airfoil(5);
+        let rs = RandomSampling;
+        let (theta_small, b_small) = rs.fit(&ds, super::super::sample_bytes(12, ds.dim()), 3);
+        let (theta_big, b_big) = rs.fit(&ds, super::super::sample_bytes(600, ds.dim()), 3);
+        assert!(b_small < b_big);
+        let m_small = mse(&ds.x, &ds.y, &theta_small);
+        let m_big = mse(&ds.x, &ds.y, &theta_big);
+        assert!(m_big < m_small, "big-sample mse {m_big} !< small-sample {m_small}");
+    }
+
+    #[test]
+    fn budget_clamped_to_dataset() {
+        let ds = synthetic::autos(1);
+        let rs = RandomSampling;
+        let (_, bytes) = rs.fit(&ds, usize::MAX / 2, 0);
+        assert_eq!(bytes, super::super::sample_bytes(ds.len(), ds.dim()));
+    }
+
+    #[test]
+    fn double_descent_peak_near_d() {
+        // Average fit MSE over seeds at n ~ d should exceed MSE at both
+        // n << d and n >> d (the Figure-4 phenomenon).
+        let ds = synthetic::autos(7); // d = 26
+        let rs = RandomSampling;
+        let avg_mse = |rows: usize| -> f64 {
+            let mut acc = 0.0;
+            let runs = 12;
+            for s in 0..runs {
+                let (theta, _) = rs.fit(&ds, super::super::sample_bytes(rows, ds.dim()), s);
+                acc += mse(&ds.x, &ds.y, &theta).min(1e9);
+            }
+            acc / runs as f64
+        };
+        let under = avg_mse(8);
+        let at_d = avg_mse(26);
+        let over = avg_mse(120);
+        assert!(at_d > over, "peak {at_d} !> over {over}");
+        assert!(at_d > under * 0.8, "peak {at_d} vs under {under}");
+    }
+}

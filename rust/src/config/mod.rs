@@ -1,0 +1,248 @@
+//! Configuration system: typed configs for every subsystem plus a minimal
+//! TOML-subset parser (`toml.rs`) so runs are reproducible from checked-in
+//! config files without a `serde` dependency.
+
+pub mod toml;
+pub mod validate;
+
+use crate::config::toml::TomlDoc;
+use std::path::Path;
+
+/// Sketch hyperparameters (Section 3 / 4.1 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StormConfig {
+    /// Number of independent repetitions R (rows of the sketch).
+    pub rows: usize,
+    /// Number of hyperplanes p per PRP hash; the row has `2^p` buckets.
+    /// The paper finds p = 4 the sweet spot (Figure 3).
+    pub power: u32,
+    /// Counter width policy: saturate instead of wrapping.
+    pub saturating: bool,
+}
+
+impl Default for StormConfig {
+    fn default() -> Self {
+        StormConfig { rows: 50, power: 4, saturating: true }
+    }
+}
+
+impl StormConfig {
+    /// Buckets per row, `B = 2^p`.
+    pub fn buckets(&self) -> usize {
+        1usize << self.power
+    }
+
+    /// Sketch memory in bytes with `u32` counters (the paper's "tiny array
+    /// of integer counters"; reported on the Figure-4 memory axis).
+    pub fn sketch_bytes(&self) -> usize {
+        self.rows * self.buckets() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Derivative-free optimizer settings (Algorithm 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OptimizerConfig {
+    /// Queries per gradient estimate (paper: k = 8).
+    pub queries: usize,
+    /// Sphere radius sigma (paper: 0.5).
+    pub sigma: f64,
+    /// Step size eta.
+    pub step: f64,
+    /// Iteration budget.
+    pub iters: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        OptimizerConfig { queries: 8, sigma: 0.5, step: 0.5, iters: 300, seed: 0 }
+    }
+}
+
+/// Edge-fleet simulation settings.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetConfig {
+    pub devices: usize,
+    /// Per-device ingest batch size.
+    pub batch: usize,
+    /// Bounded channel capacity between devices and the aggregator
+    /// (backpressure window, in sketch-delta messages).
+    pub channel_capacity: usize,
+    /// Simulated link latency per message, microseconds.
+    pub link_latency_us: u64,
+    /// Simulated link bandwidth, bytes/second (0 = infinite).
+    pub link_bandwidth_bps: u64,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            devices: 4,
+            batch: 64,
+            channel_capacity: 16,
+            link_latency_us: 200,
+            link_bandwidth_bps: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Top-level run configuration assembled from a TOML file or CLI flags.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub storm: StormConfig,
+    pub optimizer: OptimizerConfig,
+    pub fleet: FleetConfig,
+    /// Path to the AOT artifact directory (None = pure-rust path).
+    pub artifacts_dir: Option<String>,
+}
+
+/// Configuration errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+impl RunConfig {
+    /// Load from a TOML file (see `configs/` for examples). Unknown keys
+    /// are rejected — configs are an interface, typos should not pass
+    /// silently.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<RunConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<RunConfig, ConfigError> {
+        let doc = TomlDoc::parse(text).map_err(ConfigError::Parse)?;
+        let mut cfg = RunConfig {
+            dataset: "airfoil".to_string(),
+            ..Default::default()
+        };
+        for (section, key, value) in doc.entries() {
+            match (section.as_str(), key.as_str()) {
+                ("", "dataset") => cfg.dataset = value.as_str().to_string(),
+                ("", "artifacts_dir") => cfg.artifacts_dir = Some(value.as_str().to_string()),
+                ("storm", "rows") => cfg.storm.rows = value.as_usize().map_err(ConfigError::Parse)?,
+                ("storm", "power") => {
+                    cfg.storm.power = value.as_usize().map_err(ConfigError::Parse)? as u32
+                }
+                ("storm", "saturating") => {
+                    cfg.storm.saturating = value.as_bool().map_err(ConfigError::Parse)?
+                }
+                ("optimizer", "queries") => {
+                    cfg.optimizer.queries = value.as_usize().map_err(ConfigError::Parse)?
+                }
+                ("optimizer", "sigma") => {
+                    cfg.optimizer.sigma = value.as_f64().map_err(ConfigError::Parse)?
+                }
+                ("optimizer", "step") => {
+                    cfg.optimizer.step = value.as_f64().map_err(ConfigError::Parse)?
+                }
+                ("optimizer", "iters") => {
+                    cfg.optimizer.iters = value.as_usize().map_err(ConfigError::Parse)?
+                }
+                ("optimizer", "seed") => {
+                    cfg.optimizer.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
+                }
+                ("fleet", "devices") => {
+                    cfg.fleet.devices = value.as_usize().map_err(ConfigError::Parse)?
+                }
+                ("fleet", "batch") => cfg.fleet.batch = value.as_usize().map_err(ConfigError::Parse)?,
+                ("fleet", "channel_capacity") => {
+                    cfg.fleet.channel_capacity = value.as_usize().map_err(ConfigError::Parse)?
+                }
+                ("fleet", "link_latency_us") => {
+                    cfg.fleet.link_latency_us = value.as_usize().map_err(ConfigError::Parse)? as u64
+                }
+                ("fleet", "link_bandwidth_bps") => {
+                    cfg.fleet.link_bandwidth_bps =
+                        value.as_usize().map_err(ConfigError::Parse)? as u64
+                }
+                ("fleet", "seed") => {
+                    cfg.fleet.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
+                }
+                (s, k) => {
+                    return Err(ConfigError::Parse(format!("unknown config key [{s}] {k}")));
+                }
+            }
+        }
+        validate::validate(&cfg).map_err(ConfigError::Invalid)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_values() {
+        let s = StormConfig::default();
+        assert_eq!(s.power, 4);
+        assert_eq!(s.buckets(), 16);
+        let o = OptimizerConfig::default();
+        assert_eq!(o.queries, 8);
+        assert_eq!(o.sigma, 0.5);
+    }
+
+    #[test]
+    fn sketch_bytes_formula() {
+        let s = StormConfig { rows: 100, power: 4, saturating: true };
+        assert_eq!(s.sketch_bytes(), 100 * 16 * 4);
+    }
+
+    #[test]
+    fn parses_full_toml() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+dataset = "autos"
+artifacts_dir = "artifacts"
+
+[storm]
+rows = 100
+power = 4
+
+[optimizer]
+queries = 8
+sigma = 0.5
+step = 0.25
+iters = 500
+seed = 3
+
+[fleet]
+devices = 8
+batch = 32
+channel_capacity = 4
+link_latency_us = 100
+link_bandwidth_bps = 1000000
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, "autos");
+        assert_eq!(cfg.storm.rows, 100);
+        assert_eq!(cfg.optimizer.iters, 500);
+        assert_eq!(cfg.fleet.devices, 8);
+        assert_eq!(cfg.fleet.link_bandwidth_bps, 1_000_000);
+        assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts"));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_toml_str("[storm]\nwat = 3\n").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RunConfig::from_toml_str("[storm]\nrows = 0\n").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` pairs,
+//! `#` comments; values are strings ("..."), booleans, integers, and
+//! floats. That covers the crate's config files without a serde stack.
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> &str {
+        match self {
+            TomlValue::Str(s) => s,
+            _ => "",
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, String> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {other:?}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, String> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => Err(format!("expected non-negative integer, got {other:?}")),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, String> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(format!("expected number, got {other:?}")),
+        }
+    }
+}
+
+/// A parsed document: ordered `(section, key, value)` triples. The root
+/// section is the empty string.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.entries.push((section.clone(), key.to_string(), value));
+        }
+        Ok(doc)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &(String, String, TomlValue)> {
+        self.entries.iter()
+    }
+
+    /// Look up a single key.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string is preserved.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".to_string());
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".to_string());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = \"root\"\n[a]\nx = 1\ny = 2.5\nz = true\n[b]\ns = \"hi\" # comment\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_str(), "root");
+        assert_eq!(doc.get("a", "x").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("a", "y").unwrap().as_f64().unwrap(), 2.5);
+        assert!(doc.get("a", "z").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("b", "s").unwrap().as_str(), "hi");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let doc = TomlDoc::parse("# header\n\nx = 3 # trailing\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let doc = TomlDoc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), "a#b");
+    }
+
+    #[test]
+    fn negative_int_not_usize() {
+        let doc = TomlDoc::parse("x = -3\n").unwrap();
+        assert!(doc.get("", "x").unwrap().as_usize().is_err());
+        assert_eq!(doc.get("", "x").unwrap().as_f64().unwrap(), -3.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("x = 1\noops\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = TomlDoc::parse("[bad\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(TomlDoc::parse("s = \"abc\n").is_err());
+    }
+}

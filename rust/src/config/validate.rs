@@ -1,0 +1,94 @@
+//! Config validation: reject configurations that would silently produce
+//! meaningless experiments (zero rows, p outside the hashable range, empty
+//! fleets, and so on).
+
+use super::RunConfig;
+
+/// Validate a full run configuration; returns a human-readable error.
+pub fn validate(cfg: &RunConfig) -> Result<(), String> {
+    if cfg.storm.rows == 0 {
+        return Err("storm.rows must be >= 1".to_string());
+    }
+    if cfg.storm.rows > 1_000_000 {
+        return Err("storm.rows unreasonably large (> 1e6)".to_string());
+    }
+    if cfg.storm.power == 0 || cfg.storm.power > 24 {
+        return Err("storm.power must be in 1..=24 (buckets = 2^power)".to_string());
+    }
+    if cfg.optimizer.queries == 0 {
+        return Err("optimizer.queries must be >= 1".to_string());
+    }
+    if !(cfg.optimizer.sigma > 0.0) || cfg.optimizer.sigma > 2.0 {
+        return Err("optimizer.sigma must be in (0, 2]".to_string());
+    }
+    if !(cfg.optimizer.step > 0.0) {
+        return Err("optimizer.step must be > 0".to_string());
+    }
+    if cfg.fleet.devices == 0 {
+        return Err("fleet.devices must be >= 1".to_string());
+    }
+    if cfg.fleet.batch == 0 {
+        return Err("fleet.batch must be >= 1".to_string());
+    }
+    if cfg.fleet.channel_capacity == 0 {
+        return Err("fleet.channel_capacity must be >= 1".to_string());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn base() -> RunConfig {
+        RunConfig {
+            dataset: "airfoil".to_string(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn default_is_valid() {
+        assert!(validate(&base()).is_ok());
+    }
+
+    #[test]
+    fn catches_each_violation() {
+        let mut c = base();
+        c.storm.rows = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.storm.power = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.storm.power = 30;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.optimizer.queries = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.optimizer.sigma = 0.0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.optimizer.step = 0.0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.devices = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.batch = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.channel_capacity = 0;
+        assert!(validate(&c).is_err());
+    }
+}

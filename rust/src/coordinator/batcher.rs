@@ -1,0 +1,108 @@
+//! Fixed-shape batching for the AOT insert path.
+//!
+//! The compiled insert executable has a static batch dimension; this
+//! batcher accumulates streamed examples and emits full batches (plus a
+//! final short batch), so the hot loop never recompiles. Padding rows are
+//! masked inside the kernel — a padded example contributes exactly zero
+//! counts, which the integration tests verify.
+
+use crate::data::stream::Example;
+
+/// Accumulates examples into fixed-size batches.
+pub struct Batcher {
+    capacity: usize,
+    dim: usize,
+    pending: Vec<Example>,
+    emitted_batches: u64,
+    emitted_examples: u64,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, dim: usize) -> Self {
+        assert!(capacity > 0 && dim > 0);
+        Batcher {
+            capacity,
+            dim,
+            pending: Vec::with_capacity(capacity),
+            emitted_batches: 0,
+            emitted_examples: 0,
+        }
+    }
+
+    /// Offer one example; returns a full batch when ready.
+    pub fn push(&mut self, example: Example) -> Option<Vec<Example>> {
+        assert_eq!(example.len(), self.dim, "batcher dim mismatch");
+        self.pending.push(example);
+        if self.pending.len() >= self.capacity {
+            self.emit()
+        } else {
+            None
+        }
+    }
+
+    /// Flush whatever is pending as a final (short) batch.
+    pub fn flush(&mut self) -> Option<Vec<Example>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.emit()
+        }
+    }
+
+    fn emit(&mut self) -> Option<Vec<Example>> {
+        let batch = std::mem::take(&mut self.pending);
+        self.emitted_batches += 1;
+        self.emitted_examples += batch.len() as u64;
+        Some(batch)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn emitted_batches(&self) -> u64 {
+        self.emitted_batches
+    }
+
+    pub fn emitted_examples(&self) -> u64 {
+        self.emitted_examples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(v: f64) -> Example {
+        vec![v, v]
+    }
+
+    #[test]
+    fn emits_full_batches() {
+        let mut b = Batcher::new(3, 2);
+        assert!(b.push(ex(1.0)).is_none());
+        assert!(b.push(ex(2.0)).is_none());
+        let batch = b.push(ex(3.0)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.emitted_batches(), 1);
+    }
+
+    #[test]
+    fn flush_emits_partial() {
+        let mut b = Batcher::new(4, 2);
+        b.push(ex(1.0));
+        b.push(ex(2.0));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.flush().is_none());
+        assert_eq!(b.emitted_examples(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_dim_rejected() {
+        let mut b = Batcher::new(2, 3);
+        b.push(vec![1.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! The leader/coordinator: glues the fleet, the sketch, the optimizer and
+//! the XLA runtime into the end-to-end training system.
+//!
+//! * [`batcher`] — fixed-shape batching (pad + mask) for the AOT insert
+//!   path, whose compiled batch size is static;
+//! * [`oracle`] — [`crate::optim::RiskOracle`] implementations backed by
+//!   the XLA query executable (batched DFO probes in one call);
+//! * [`driver`] — the end-to-end train loop: stream -> fleet -> merged
+//!   sketch -> (linopt init) -> DFO -> report;
+//! * [`state`] — training state checkpointing.
+
+pub mod batcher;
+pub mod ingest;
+pub mod oracle;
+pub mod driver;
+pub mod state;

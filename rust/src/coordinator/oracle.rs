@@ -1,0 +1,166 @@
+//! Risk oracles bridging the optimizer to the two execution backends.
+//!
+//! The pure-rust oracle is `StormSketch` itself (scalar queries). The XLA
+//! oracle routes every risk evaluation through the AOT query executable —
+//! and because the executable evaluates K query vectors per call, the DFO
+//! optimizer's per-iteration probes are batched into a *single* PJRT
+//! execution via [`BatchedRiskOracle`].
+
+use crate::optim::RiskOracle;
+use crate::runtime::XlaStorm;
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+use crate::util::mathx::norm2;
+use std::cell::{Cell, RefCell};
+
+/// Oracle that evaluates risks through the XLA query executable.
+///
+/// Scalar `risk()` calls are buffered per call (size-1 batches); the
+/// batched entry point [`Self::risks`] evaluates many candidates in one
+/// execution and is what the fused DFO loop uses.
+pub struct XlaRiskOracle<'a> {
+    exe: &'a XlaStorm,
+    counts: Vec<u32>,
+    n: u64,
+    d: usize,
+    evals: Cell<u64>,
+    /// Executions performed (for the batching-efficiency metric).
+    executions: Cell<u64>,
+    last_error: RefCell<Option<String>>,
+}
+
+impl<'a> XlaRiskOracle<'a> {
+    /// Snapshot the sketch's counters into an oracle. `d` is the feature
+    /// dimension (queries have length d + 1).
+    pub fn new(exe: &'a XlaStorm, sketch: &StormSketch) -> Self {
+        XlaRiskOracle {
+            exe,
+            counts: sketch.grid().data().to_vec(),
+            n: sketch.count(),
+            d: StormSketch::dim(sketch) - 1,
+            evals: Cell::new(0),
+            executions: Cell::new(0),
+            last_error: RefCell::new(None),
+        }
+    }
+
+    /// Rescale a query into the unit ball exactly like the rust path.
+    fn rescale(q: &[f64]) -> Vec<f64> {
+        let radius = crate::data::scale::query_radius();
+        let n = norm2(q);
+        if n <= radius {
+            q.to_vec()
+        } else {
+            q.iter().map(|v| v * radius / n).collect()
+        }
+    }
+
+    /// Batched risk evaluation: one PJRT execution for up to
+    /// `exe.query_size()` candidates.
+    pub fn risks(&self, candidates: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(candidates.len());
+        for chunk in candidates.chunks(self.exe.query_size().max(1)) {
+            let scaled: Vec<Vec<f64>> = chunk.iter().map(|q| Self::rescale(q)).collect();
+            match self.exe.query_risks(&self.counts, self.n, &scaled) {
+                Ok(risks) => {
+                    self.executions.set(self.executions.get() + 1);
+                    self.evals.set(self.evals.get() + chunk.len() as u64);
+                    out.extend(risks);
+                }
+                Err(e) => {
+                    *self.last_error.borrow_mut() = Some(e.to_string());
+                    out.extend(std::iter::repeat(f64::INFINITY).take(chunk.len()));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.get()
+    }
+
+    pub fn last_error(&self) -> Option<String> {
+        self.last_error.borrow().clone()
+    }
+}
+
+impl RiskOracle for XlaRiskOracle<'_> {
+    fn risk(&self, theta_tilde: &[f64]) -> f64 {
+        self.risks(std::slice::from_ref(&theta_tilde.to_vec()))[0]
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals.get()
+    }
+}
+
+/// A fused DFO step that batches the baseline + k probes into a single
+/// XLA execution. Returns the new theta~ and the baseline risk.
+pub fn fused_dfo_step(
+    oracle: &XlaRiskOracle<'_>,
+    theta_tilde: &mut Vec<f64>,
+    queries: usize,
+    sigma: f64,
+    step: f64,
+    rng: &mut crate::util::rng::Xoshiro256,
+) -> f64 {
+    use crate::util::mathx::axpy;
+    use crate::util::rng::Rng;
+    let dim = theta_tilde.len();
+    let pairs = (queries / 2).max(1);
+    let mut candidates = Vec::with_capacity(2 * pairs + 1);
+    candidates.push(theta_tilde.clone());
+    let mut dirs = Vec::with_capacity(pairs);
+    for _ in 0..pairs {
+        let mut u = rng.sphere_vec(dim, 1.0);
+        u[dim - 1] = 0.0;
+        let mut plus = theta_tilde.clone();
+        axpy(&mut plus, sigma, &u);
+        let mut minus = theta_tilde.clone();
+        axpy(&mut minus, -sigma, &u);
+        candidates.push(plus);
+        candidates.push(minus);
+        dirs.push(u);
+    }
+    let risks = oracle.risks(&candidates);
+    let base = risks[0];
+    let mut grad = vec![0.0; dim];
+    for (j, u) in dirs.iter().enumerate() {
+        let delta = 0.5 * (risks[1 + 2 * j] - risks[2 + 2 * j]);
+        axpy(&mut grad, delta, u);
+    }
+    let scale = dim as f64 / (pairs as f64 * sigma);
+    for g in &mut grad {
+        *g *= scale;
+    }
+    axpy(theta_tilde, -step, &grad);
+    theta_tilde[dim - 1] = -1.0;
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    // The XLA-backed oracle is exercised by rust/tests/integration_runtime.rs
+    // (requires `make artifacts`). Here we only test the rescale helper.
+    use super::*;
+
+    #[test]
+    fn rescale_preserves_direction() {
+        let q = vec![3.0, 4.0];
+        let s = XlaRiskOracle::rescale(&q);
+        let n = norm2(&s);
+        assert!((n - crate::data::scale::query_radius()).abs() < 1e-12);
+        assert!((s[0] / s[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescale_noop_inside_ball() {
+        let q = vec![0.1, 0.1];
+        assert_eq!(XlaRiskOracle::rescale(&q), q);
+    }
+}

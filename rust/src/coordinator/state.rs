@@ -1,0 +1,149 @@
+//! Training-state checkpointing: theta, iteration, and the risk trace in
+//! a line-oriented text format (no serde), with atomic replace.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Checkpointable training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainingState {
+    pub dataset: String,
+    pub iter: usize,
+    pub theta: Vec<f64>,
+    pub trace: Vec<(usize, f64)>,
+}
+
+/// Checkpoint errors.
+#[derive(Debug, thiserror::Error)]
+pub enum StateError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt checkpoint: {0}")]
+    Corrupt(String),
+}
+
+impl TrainingState {
+    /// Serialize as lines: `dataset <name>`, `iter <n>`, `theta v v v...`,
+    /// `trace i risk` per point.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("dataset {}\n", self.dataset));
+        s.push_str(&format!("iter {}\n", self.iter));
+        s.push_str("theta");
+        for v in &self.theta {
+            s.push_str(&format!(" {v:.17e}"));
+        }
+        s.push('\n');
+        for (i, r) in &self.trace {
+            s.push_str(&format!("trace {i} {r:.17e}\n"));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> Result<TrainingState, StateError> {
+        let mut dataset = None;
+        let mut iter = None;
+        let mut theta = None;
+        let mut trace = Vec::new();
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("dataset") => dataset = parts.next().map(str::to_string),
+                Some("iter") => {
+                    iter = Some(
+                        parts
+                            .next()
+                            .and_then(|v| v.parse::<usize>().ok())
+                            .ok_or_else(|| StateError::Corrupt("bad iter".into()))?,
+                    )
+                }
+                Some("theta") => {
+                    let vals: Result<Vec<f64>, _> = parts.map(str::parse::<f64>).collect();
+                    theta = Some(vals.map_err(|_| StateError::Corrupt("bad theta".into()))?);
+                }
+                Some("trace") => {
+                    let i = parts
+                        .next()
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .ok_or_else(|| StateError::Corrupt("bad trace iter".into()))?;
+                    let r = parts
+                        .next()
+                        .and_then(|v| v.parse::<f64>().ok())
+                        .ok_or_else(|| StateError::Corrupt("bad trace risk".into()))?;
+                    trace.push((i, r));
+                }
+                Some(other) => {
+                    return Err(StateError::Corrupt(format!("unknown record {other:?}")))
+                }
+                None => {}
+            }
+        }
+        Ok(TrainingState {
+            dataset: dataset.ok_or_else(|| StateError::Corrupt("missing dataset".into()))?,
+            iter: iter.ok_or_else(|| StateError::Corrupt("missing iter".into()))?,
+            theta: theta.ok_or_else(|| StateError::Corrupt("missing theta".into()))?,
+            trace,
+        })
+    }
+
+    /// Atomic save: write to `<path>.tmp`, then rename.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(self.to_text().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TrainingState, StateError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainingState {
+        TrainingState {
+            dataset: "airfoil".to_string(),
+            iter: 42,
+            theta: vec![0.1, -0.25, 3.5e-7],
+            trace: vec![(0, 1.0), (1, 0.5)],
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_exact() {
+        let s = sample();
+        let back = TrainingState::from_text(&s.to_text()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("storm_state_test");
+        let p = dir.join("ckpt.txt");
+        let s = sample();
+        s.save(&p).unwrap();
+        assert_eq!(TrainingState::load(&p).unwrap(), s);
+        // Overwrite is atomic-replace, not append.
+        s.save(&p).unwrap();
+        assert_eq!(TrainingState::load(&p).unwrap(), s);
+    }
+
+    #[test]
+    fn corrupt_input_rejected() {
+        assert!(TrainingState::from_text("garbage here\n").is_err());
+        assert!(TrainingState::from_text("dataset a\niter x\ntheta 1\n").is_err());
+        assert!(TrainingState::from_text("dataset a\n").is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal CSV loading so real UCI files can be dropped in for the
+//! experiments when available (the synthetic generators are the default in
+//! this offline environment).
+
+use super::dataset::Dataset;
+use crate::linalg::matrix::Matrix;
+use std::io::BufRead;
+use std::path::Path;
+
+/// CSV parse errors.
+#[derive(Debug, thiserror::Error)]
+pub enum CsvError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("empty file")]
+    Empty,
+    #[error("row {row} has {got} fields, expected {want}")]
+    Ragged { row: usize, got: usize, want: usize },
+    #[error("row {row}, column {col}: cannot parse {value:?} as f64")]
+    BadNumber { row: usize, col: usize, value: String },
+    #[error("need at least 2 columns (features + target), got {0}")]
+    TooNarrow(usize),
+}
+
+/// Parse CSV text into a dataset. The **last column** is the target; all
+/// preceding columns are features. A non-numeric first line is treated as
+/// a header and skipped. Blank lines are ignored.
+pub fn parse_csv(name: &str, text: &str) -> Result<Dataset, CsvError> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f64>, usize> = fields
+            .iter()
+            .enumerate()
+            .map(|(i, f)| f.parse::<f64>().map_err(|_| i))
+            .collect();
+        match parsed {
+            Ok(vals) => {
+                if let Some(w) = width {
+                    if vals.len() != w {
+                        return Err(CsvError::Ragged { row: lineno, got: vals.len(), want: w });
+                    }
+                } else {
+                    width = Some(vals.len());
+                }
+                rows.push(vals);
+            }
+            Err(col) => {
+                // Header line is only tolerated before any data rows.
+                if rows.is_empty() && width.is_none() {
+                    continue;
+                }
+                return Err(CsvError::BadNumber {
+                    row: lineno,
+                    col,
+                    value: fields.get(col).unwrap_or(&"").to_string(),
+                });
+            }
+        }
+    }
+    let w = width.ok_or(CsvError::Empty)?;
+    if w < 2 {
+        return Err(CsvError::TooNarrow(w));
+    }
+    let n = rows.len();
+    let d = w - 1;
+    let mut x = Matrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for (r, vals) in rows.into_iter().enumerate() {
+        x.row_mut(r).copy_from_slice(&vals[..d]);
+        y.push(vals[d]);
+    }
+    Ok(Dataset::new(name, x, y))
+}
+
+/// Load a CSV file from disk.
+pub fn load_csv(path: impl AsRef<Path>) -> Result<Dataset, CsvError> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)?;
+    let mut text = String::new();
+    for line in std::io::BufReader::new(file).lines() {
+        text.push_str(&line?);
+        text.push('\n');
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "csv".to_string());
+    parse_csv(&name, &text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_csv() {
+        let ds = parse_csv("t", "1,2,3\n4,5,6\n").unwrap();
+        assert_eq!(ds.x.shape(), (2, 2));
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn skips_header_and_blank_lines() {
+        let ds = parse_csv("t", "a,b,target\n\n1,2,3\n").unwrap();
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds.y, vec![3.0]);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(matches!(
+            parse_csv("t", "1,2,3\n4,5\n"),
+            Err(CsvError::Ragged { row: 1, got: 2, want: 3 })
+        ));
+    }
+
+    #[test]
+    fn rejects_mid_file_text() {
+        assert!(matches!(
+            parse_csv("t", "1,2,3\nx,5,6\n"),
+            Err(CsvError::BadNumber { row: 1, col: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_empty_and_narrow() {
+        assert!(matches!(parse_csv("t", ""), Err(CsvError::Empty)));
+        assert!(matches!(parse_csv("t", "1\n2\n"), Err(CsvError::TooNarrow(1))));
+    }
+
+    #[test]
+    fn loads_from_disk() {
+        let dir = std::env::temp_dir().join("storm_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.csv");
+        std::fs::write(&p, "f1,f2,y\n1,0,2\n0,1,3\n").unwrap();
+        let ds = load_csv(&p).unwrap();
+        assert_eq!(ds.name, "toy");
+        assert_eq!(ds.len(), 2);
+    }
+}

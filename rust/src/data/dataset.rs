@@ -1,0 +1,167 @@
+//! In-memory regression/classification dataset representation.
+
+use crate::linalg::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// A supervised dataset: feature matrix `X` (`n x d`) and targets `y`.
+///
+/// For STORM, examples are sketched as the concatenated vector `[x, y]`
+/// ([`Dataset::augmented`]), following the paper's formulation of the
+/// least-squares loss through `<[theta, -1], [x, y]>`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    /// Scale factor applied by unit-ball normalization (see `scale.rs`);
+    /// 1.0 when unscaled. Kept so losses can be reported in original units.
+    pub scale_factor: f64,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Matrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "X rows must match y length");
+        Dataset { name: name.into(), x, y, scale_factor: 1.0 }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature dimensionality `d`.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Iterate `(x_i, y_i)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&[f64], f64)> + '_ {
+        (0..self.len()).map(move |i| (self.x.row(i), self.y[i]))
+    }
+
+    /// The augmented example `z_i = [x_i, y_i]` the sketch ingests.
+    pub fn augmented(&self, i: usize) -> Vec<f64> {
+        let mut z = self.x.row(i).to_vec();
+        z.push(self.y[i]);
+        z
+    }
+
+    /// Full augmented matrix `[X | y]` (`n x (d+1)`).
+    pub fn augmented_matrix(&self) -> Matrix {
+        let (n, d) = self.x.shape();
+        Matrix::from_fn(n, d + 1, |r, c| {
+            if c < d {
+                self.x[(r, c)]
+            } else {
+                self.y[r]
+            }
+        })
+    }
+
+    /// Random train/test split: `frac` of rows go to train.
+    pub fn split(&self, frac: f64, rng: &mut impl Rng) -> (Dataset, Dataset) {
+        let n = self.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let k = ((n as f64) * frac).round() as usize;
+        let (tr, te) = idx.split_at(k.min(n));
+        (self.subset(tr, "train"), self.subset(te, "test"))
+    }
+
+    /// Extract a row subset.
+    pub fn subset(&self, idx: &[usize], suffix: &str) -> Dataset {
+        Dataset {
+            name: format!("{}/{}", self.name, suffix),
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            scale_factor: self.scale_factor,
+        }
+    }
+
+    /// Split the dataset into `k` contiguous shards (for distributing over
+    /// edge devices). Shard sizes differ by at most one.
+    pub fn shards(&self, k: usize) -> Vec<Dataset> {
+        assert!(k > 0);
+        let n = self.len();
+        let base = n / k;
+        let extra = n % k;
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0;
+        for s in 0..k {
+            let len = base + usize::from(s < extra);
+            let idx: Vec<usize> = (start..start + len).collect();
+            out.push(self.subset(&idx, &format!("shard{s}")));
+            start += len;
+        }
+        out
+    }
+
+    /// In-memory size of the raw data in bytes (f64 storage), used as the
+    /// "full dataset" reference point on the Figure 4 memory axis.
+    pub fn raw_bytes(&self) -> usize {
+        (self.x.rows() * self.x.cols() + self.y.len()) * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        Dataset::new("toy", x, vec![10.0, 20.0, 30.0])
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let d = toy();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.augmented(1), vec![3.0, 4.0, 20.0]);
+    }
+
+    #[test]
+    fn augmented_matrix_layout() {
+        let d = toy();
+        let a = d.augmented_matrix();
+        assert_eq!(a.shape(), (3, 3));
+        assert_eq!(a.row(0), &[1.0, 2.0, 10.0]);
+        assert_eq!(a.row(2), &[5.0, 6.0, 30.0]);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let d = toy();
+        let mut rng = Xoshiro256::new(5);
+        let (tr, te) = d.split(2.0 / 3.0, &mut rng);
+        assert_eq!(tr.len(), 2);
+        assert_eq!(te.len(), 1);
+    }
+
+    #[test]
+    fn shards_cover_everything() {
+        let d = toy();
+        let shards = d.shards(2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 3);
+        assert_eq!(shards[0].len(), 2); // extra row goes to shard 0
+    }
+
+    #[test]
+    fn raw_bytes_counts_f64s() {
+        let d = toy();
+        assert_eq!(d.raw_bytes(), (3 * 2 + 3) * 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let x = Matrix::zeros(2, 2);
+        let _ = Dataset::new("bad", x, vec![1.0]);
+    }
+}

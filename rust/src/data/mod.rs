@@ -1,0 +1,17 @@
+//! Datasets and streaming sources.
+//!
+//! The paper evaluates on three UCI regression datasets (Table 1) and on
+//! 2-D synthetic data (Figure 5). This offline environment cannot fetch
+//! UCI, so `synthetic` provides deterministic generators matched to each
+//! dataset's (N, d) and conditioning profile — see DESIGN.md §5 for the
+//! substitution argument. A CSV loader is included so real UCI files drop
+//! in unchanged when available.
+
+pub mod dataset;
+pub mod scale;
+pub mod synthetic;
+pub mod csv;
+pub mod stream;
+pub mod registry;
+
+pub use dataset::Dataset;

@@ -1,0 +1,104 @@
+//! Dataset registry — the programmatic form of the paper's Table 1, plus
+//! the synthetic 2-D sets of Figure 5. The experiment harness and CLI look
+//! datasets up by name here.
+
+use super::dataset::Dataset;
+use super::synthetic;
+
+/// A registry entry mirroring one row of Table 1.
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub name: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub description: &'static str,
+    /// True when this offline build substitutes a synthetic generator for
+    /// the original UCI source (see DESIGN.md §5).
+    pub synthetic_substitute: bool,
+}
+
+/// Table 1 of the paper (+ the Figure-5 synthetic sets).
+pub const REGISTRY: &[DatasetInfo] = &[
+    DatasetInfo {
+        name: "airfoil",
+        n: 1400,
+        d: 9,
+        description: "Airfoil parameters to predict sound level",
+        synthetic_substitute: true,
+    },
+    DatasetInfo {
+        name: "autos",
+        n: 159,
+        d: 26,
+        description: "Automobile prices and information to predict acquisition risk",
+        synthetic_substitute: true,
+    },
+    DatasetInfo {
+        name: "parkinsons",
+        n: 5800,
+        d: 21,
+        description: "Telemonitoring data from parkinsons patients, with disease progression",
+        synthetic_substitute: true,
+    },
+    DatasetInfo {
+        name: "synth2d-reg",
+        n: 1000,
+        d: 2,
+        description: "2-D synthetic regression (Figure 5)",
+        synthetic_substitute: false,
+    },
+    DatasetInfo {
+        name: "synth2d-clf",
+        n: 1000,
+        d: 2,
+        description: "2-D synthetic classification (Figure 5)",
+        synthetic_substitute: false,
+    },
+];
+
+/// Look up registry metadata by name.
+pub fn info(name: &str) -> Option<&'static DatasetInfo> {
+    REGISTRY.iter().find(|i| i.name == name)
+}
+
+/// Instantiate a dataset by registry name. Unknown names return `None`.
+pub fn load(name: &str, seed: u64) -> Option<Dataset> {
+    match name {
+        "airfoil" => Some(synthetic::airfoil(seed)),
+        "autos" => Some(synthetic::autos(seed)),
+        "parkinsons" => Some(synthetic::parkinsons(seed)),
+        "synth2d-reg" => Some(synthetic::synth2d_regression(1000, 0.8, 0.1, 0.05, seed)),
+        "synth2d-clf" => Some(synthetic::synth2d_classification(1000, 0.8, 0.25, seed)),
+        _ => None,
+    }
+}
+
+/// Names of the three Table-1 regression datasets used by Figure 4.
+pub const TABLE1_NAMES: &[&str] = &["airfoil", "autos", "parkinsons"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_generators() {
+        for name in TABLE1_NAMES {
+            let meta = info(name).unwrap();
+            let ds = load(name, 1).unwrap();
+            assert_eq!(ds.len(), meta.n, "{name} n");
+            assert_eq!(ds.dim(), meta.d, "{name} d");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(info("nope").is_none());
+        assert!(load("nope", 1).is_none());
+    }
+
+    #[test]
+    fn synthetic_sets_load() {
+        assert_eq!(load("synth2d-reg", 2).unwrap().dim(), 2);
+        assert_eq!(load("synth2d-clf", 2).unwrap().dim(), 2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Streaming data sources.
+//!
+//! STORM is an *online* sketch: devices see examples one at a time (or in
+//! small batches) and may not retain them. These adapters turn in-memory
+//! datasets into streams for the edge-device simulator — replayed in
+//! order, shuffled, or partitioned round-robin / contiguously across a
+//! fleet.
+
+use super::dataset::Dataset;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// One streamed example: the augmented vector `[x, y]`.
+pub type Example = Vec<f64>;
+
+/// A pull-based stream of augmented examples.
+pub trait StreamSource: Send {
+    /// Next example, or `None` when exhausted.
+    fn next_example(&mut self) -> Option<Example>;
+
+    /// Pull up to `n` examples into a batch.
+    fn next_batch(&mut self, n: usize) -> Vec<Example> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.next_example() {
+                Some(e) => out.push(e),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Total examples this source will yield, if known.
+    fn remaining_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Replays a dataset in index order.
+pub struct ReplayStream {
+    ds: Dataset,
+    pos: usize,
+}
+
+impl ReplayStream {
+    pub fn new(ds: Dataset) -> Self {
+        ReplayStream { ds, pos: 0 }
+    }
+}
+
+impl StreamSource for ReplayStream {
+    fn next_example(&mut self) -> Option<Example> {
+        if self.pos >= self.ds.len() {
+            return None;
+        }
+        let e = self.ds.augmented(self.pos);
+        self.pos += 1;
+        Some(e)
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        Some(self.ds.len() - self.pos)
+    }
+}
+
+/// Replays a dataset in a seeded random order (one-pass shuffle).
+pub struct ShuffledStream {
+    ds: Dataset,
+    order: Vec<usize>,
+    pos: usize,
+}
+
+impl ShuffledStream {
+    pub fn new(ds: Dataset, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        ShuffledStream { ds, order, pos: 0 }
+    }
+}
+
+impl StreamSource for ShuffledStream {
+    fn next_example(&mut self) -> Option<Example> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let e = self.ds.augmented(self.order[self.pos]);
+        self.pos += 1;
+        Some(e)
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        Some(self.order.len() - self.pos)
+    }
+}
+
+/// An infinite stream that re-draws from the dataset with replacement —
+/// models a long-running sensor that keeps emitting from the same
+/// distribution. `take_limit` bounds it for tests/experiments.
+pub struct ResampleStream {
+    ds: Dataset,
+    rng: Xoshiro256,
+    emitted: usize,
+    take_limit: usize,
+}
+
+impl ResampleStream {
+    pub fn new(ds: Dataset, seed: u64, take_limit: usize) -> Self {
+        ResampleStream { ds, rng: Xoshiro256::new(seed), emitted: 0, take_limit }
+    }
+}
+
+impl StreamSource for ResampleStream {
+    fn next_example(&mut self) -> Option<Example> {
+        if self.emitted >= self.take_limit || self.ds.is_empty() {
+            return None;
+        }
+        self.emitted += 1;
+        let i = self.rng.below(self.ds.len() as u64) as usize;
+        Some(self.ds.augmented(i))
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        Some(self.take_limit - self.emitted)
+    }
+}
+
+/// Partition a dataset into per-device streams (contiguous shards), the
+/// topology the paper's distributed setting implies: each device sees its
+/// own locally-collected slice of the global dataset.
+pub fn partition_streams(ds: &Dataset, devices: usize, shuffled_seed: Option<u64>) -> Vec<Box<dyn StreamSource>> {
+    ds.shards(devices)
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| -> Box<dyn StreamSource> {
+            match shuffled_seed {
+                Some(s) => Box::new(ShuffledStream::new(shard, s.wrapping_add(i as u64))),
+                None => Box::new(ReplayStream::new(shard)),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+
+    fn ds(n: usize) -> Dataset {
+        let x = Matrix::from_fn(n, 2, |r, c| (r * 2 + c) as f64);
+        let y = (0..n).map(|i| i as f64).collect();
+        Dataset::new("s", x, y)
+    }
+
+    #[test]
+    fn replay_yields_in_order_and_exhausts() {
+        let mut s = ReplayStream::new(ds(3));
+        assert_eq!(s.remaining_hint(), Some(3));
+        assert_eq!(s.next_example().unwrap(), vec![0.0, 1.0, 0.0]);
+        assert_eq!(s.next_example().unwrap(), vec![2.0, 3.0, 1.0]);
+        assert_eq!(s.next_example().unwrap(), vec![4.0, 5.0, 2.0]);
+        assert!(s.next_example().is_none());
+    }
+
+    #[test]
+    fn shuffled_is_a_permutation() {
+        let mut s = ShuffledStream::new(ds(10), 4);
+        let mut ys: Vec<f64> = std::iter::from_fn(|| s.next_example())
+            .map(|e| e[2])
+            .collect();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys, (0..10).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_pull_respects_size() {
+        let mut s = ReplayStream::new(ds(5));
+        assert_eq!(s.next_batch(2).len(), 2);
+        assert_eq!(s.next_batch(10).len(), 3);
+        assert!(s.next_batch(1).is_empty());
+    }
+
+    #[test]
+    fn resample_bounded_and_from_support() {
+        let mut s = ResampleStream::new(ds(4), 9, 100);
+        let mut count = 0;
+        while let Some(e) = s.next_example() {
+            assert!(e[2] < 4.0);
+            count += 1;
+        }
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    fn partition_covers_dataset() {
+        let d = ds(10);
+        let mut streams = partition_streams(&d, 3, None);
+        let total: usize = streams
+            .iter_mut()
+            .map(|s| {
+                let mut c = 0;
+                while s.next_example().is_some() {
+                    c += 1;
+                }
+                c
+            })
+            .sum();
+        assert_eq!(total, 10);
+    }
+}

@@ -1,0 +1,173 @@
+//! A simulated edge device: owns a local stream and a local STORM sketch,
+//! ingests in batches, and periodically flushes sketch *deltas* upstream.
+//!
+//! Flushing deltas (the counts accumulated since the last flush) rather
+//! than cumulative sketches makes upstream aggregation idempotent-free
+//! simple addition and keeps every wire message the same size — the
+//! mergeable-summary property doing real work.
+
+use super::network::{Link, Message};
+use crate::config::StormConfig;
+use crate::data::stream::StreamSource;
+use crate::sketch::serialize::encode;
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+
+/// Device runtime parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceConfig {
+    pub id: usize,
+    /// Ingest batch size.
+    pub batch: usize,
+    /// Flush the delta sketch upstream every `flush_batches` batches.
+    pub flush_batches: usize,
+    /// Sketch configuration (must match fleet-wide; merging enforces it).
+    pub storm: StormConfig,
+    /// Shared hash-family seed (fleet-wide).
+    pub family_seed: u64,
+    /// Augmented example dimension (d + 1).
+    pub dim: usize,
+}
+
+/// Summary the device thread returns.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceReport {
+    pub id: usize,
+    pub examples: u64,
+    pub batches: u64,
+    pub flushes: u64,
+    pub ingest_secs: f64,
+}
+
+/// Run one device to stream exhaustion: sketch locally, flush deltas over
+/// the link, then send `Done`. This is the body of each fleet thread.
+pub fn run_device(
+    cfg: DeviceConfig,
+    mut stream: Box<dyn StreamSource>,
+    link: Link,
+) -> DeviceReport {
+    let mut delta = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
+    let mut report = DeviceReport { id: cfg.id, ..Default::default() };
+    let timer = crate::util::timer::Timer::start();
+    let mut batches_since_flush = 0usize;
+    loop {
+        let batch = stream.next_batch(cfg.batch);
+        if batch.is_empty() {
+            break;
+        }
+        for z in &batch {
+            delta.insert(z);
+        }
+        report.examples += batch.len() as u64;
+        report.batches += 1;
+        batches_since_flush += 1;
+        if batches_since_flush >= cfg.flush_batches && delta.count() > 0 {
+            if flush(&mut delta, &cfg, &link) {
+                report.flushes += 1;
+            }
+            batches_since_flush = 0;
+        }
+    }
+    if delta.count() > 0 && flush(&mut delta, &cfg, &link) {
+        report.flushes += 1;
+    }
+    report.ingest_secs = timer.elapsed_secs();
+    let _ = link.send(Message::Done { device_id: cfg.id, examples: report.examples });
+    report
+}
+
+/// Serialize + ship the delta, then reset it. Returns false if the link is
+/// down (aggregator gone) — the device stops flushing but keeps counting.
+fn flush(delta: &mut StormSketch, cfg: &DeviceConfig, link: &Link) -> bool {
+    let bytes = encode(delta);
+    let ok = link.send(Message::Delta(bytes)).is_ok();
+    *delta = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::stream::ReplayStream;
+    use crate::edge::network::Link;
+    use crate::linalg::matrix::Matrix;
+    use crate::sketch::serialize::decode;
+
+    fn toy_dataset(n: usize) -> Dataset {
+        let x = Matrix::from_fn(n, 2, |r, c| ((r + c) % 5) as f64 * 0.1);
+        let y = (0..n).map(|i| (i % 3) as f64 * 0.1).collect();
+        Dataset::new("dev", x, y)
+    }
+
+    fn dev_cfg(id: usize) -> DeviceConfig {
+        DeviceConfig {
+            id,
+            batch: 8,
+            flush_batches: 2,
+            storm: StormConfig { rows: 10, power: 3, saturating: true },
+            family_seed: 42,
+            dim: 3,
+        }
+    }
+
+    #[test]
+    fn device_sketches_whole_stream() {
+        let ds = toy_dataset(50);
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let report = run_device(dev_cfg(0), Box::new(ReplayStream::new(ds.clone())), link);
+        assert_eq!(report.examples, 50);
+        assert_eq!(report.batches, 7); // ceil(50/8)
+        // Reassemble: merged deltas equal a locally-built sketch.
+        let mut merged = StormSketch::new(dev_cfg(0).storm, 3, 42);
+        let mut done = false;
+        for msg in rx.iter() {
+            match msg {
+                Message::Delta(b) => merged.merge_from(&decode(&b).unwrap()),
+                Message::Done { examples, .. } => {
+                    assert_eq!(examples, 50);
+                    done = true;
+                }
+            }
+        }
+        assert!(done);
+        let mut reference = StormSketch::new(dev_cfg(0).storm, 3, 42);
+        for i in 0..ds.len() {
+            reference.insert(&ds.augmented(i));
+        }
+        assert_eq!(merged.grid().data(), reference.grid().data());
+        assert_eq!(merged.count(), 50);
+    }
+
+    #[test]
+    fn flush_cadence_respected() {
+        let ds = toy_dataset(64); // 8 batches of 8 -> flush every 2 -> 4 flushes
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let report = run_device(dev_cfg(1), Box::new(ReplayStream::new(ds)), link);
+        assert_eq!(report.flushes, 4);
+        let deltas = rx.iter().filter(|m| matches!(m, Message::Delta(_))).count();
+        assert_eq!(deltas, 4);
+    }
+
+    #[test]
+    fn empty_stream_sends_only_done() {
+        let ds = toy_dataset(0);
+        let (link, rx, _) = Link::new(8, 0, 0);
+        let report = run_device(dev_cfg(2), Box::new(ReplayStream::new(ds)), link);
+        assert_eq!(report.examples, 0);
+        assert_eq!(report.flushes, 0);
+        let msgs: Vec<Message> = rx.iter().collect();
+        assert_eq!(msgs.len(), 1);
+        assert!(matches!(msgs[0], Message::Done { .. }));
+    }
+
+    #[test]
+    fn dead_link_does_not_panic() {
+        let ds = toy_dataset(30);
+        let (link, rx, _) = Link::new(8, 0, 0);
+        drop(rx);
+        let report = run_device(dev_cfg(3), Box::new(ReplayStream::new(ds)), link);
+        assert_eq!(report.examples, 30);
+        assert_eq!(report.flushes, 0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Energy accounting — the paper's motivating claim is that shipping a
+//! tiny sketch beats shipping raw data on transmit energy ("data transfer
+//! is an energy intensive procedure"; Broader Impacts). This model uses
+//! standard first-order constants for wireless edge hardware and exposes
+//! the sketch-vs-raw comparison the `energy` experiment reports.
+
+/// Energy model constants (first-order, typical LTE-class radio + MCU).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Joules per byte transmitted (LTE cat-M1 class: ~1-5 uJ/bit).
+    pub tx_j_per_byte: f64,
+    /// Joules per sketch insert (a few hundred flops on an MCU).
+    pub insert_j: f64,
+    /// Joules per derivative-free query evaluation.
+    pub query_j: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            tx_j_per_byte: 20e-6,  // 2.5 uJ/bit
+            insert_j: 2e-6,
+            query_j: 2e-6,
+        }
+    }
+}
+
+/// Energy breakdown for one strategy.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyReport {
+    pub tx_joules: f64,
+    pub compute_joules: f64,
+}
+
+impl EnergyReport {
+    pub fn total(&self) -> f64 {
+        self.tx_joules + self.compute_joules
+    }
+}
+
+impl EnergyModel {
+    /// Energy for the STORM strategy: sketch locally (`inserts`), transmit
+    /// `sketch_bytes` total over the network.
+    pub fn storm_energy(&self, inserts: u64, sketch_bytes: u64) -> EnergyReport {
+        EnergyReport {
+            tx_joules: sketch_bytes as f64 * self.tx_j_per_byte,
+            compute_joules: inserts as f64 * self.insert_j,
+        }
+    }
+
+    /// Energy for the cloud strategy: transmit every raw example.
+    pub fn raw_energy(&self, raw_bytes: u64) -> EnergyReport {
+        EnergyReport {
+            tx_joules: raw_bytes as f64 * self.tx_j_per_byte,
+            compute_joules: 0.0,
+        }
+    }
+
+    /// Ratio raw/storm (>1 means STORM wins).
+    pub fn savings_ratio(&self, inserts: u64, sketch_bytes: u64, raw_bytes: u64) -> f64 {
+        let s = self.storm_energy(inserts, sketch_bytes).total();
+        if s == 0.0 {
+            return f64::INFINITY;
+        }
+        self.raw_energy(raw_bytes).total() / s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_beats_raw_for_large_streams() {
+        let m = EnergyModel::default();
+        // 1M examples x 22 dims x 8B raw vs one 6.4KB sketch shipped 100x.
+        let raw_bytes = 1_000_000u64 * 22 * 8;
+        let sketch_bytes = 6_400u64 * 100;
+        let ratio = m.savings_ratio(1_000_000, sketch_bytes, raw_bytes);
+        assert!(ratio > 10.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn tiny_streams_may_not_benefit() {
+        let m = EnergyModel::default();
+        // 10 examples: shipping raw is cheaper than one sketch flush.
+        let raw_bytes = 10u64 * 22 * 8;
+        let sketch_bytes = 6_400u64;
+        assert!(m.savings_ratio(10, sketch_bytes, raw_bytes) < 1.0);
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let m = EnergyModel::default();
+        let r = m.storm_energy(1000, 5000);
+        assert!((r.total() - (r.tx_joules + r.compute_joules)).abs() < 1e-18);
+        assert!(r.tx_joules > 0.0 && r.compute_joules > 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Fleet orchestration: spawn device threads, wire up the aggregation
+//! topology with simulated links, merge everything into the leader's
+//! sketch, and report transfer/energy statistics.
+
+use super::device::{run_device, DeviceConfig, DeviceReport};
+use super::network::{Link, LinkSnapshot, Message};
+use super::topology::{plan, Stage, Topology, LEADER};
+use crate::config::{FleetConfig, StormConfig};
+use crate::data::stream::StreamSource;
+use crate::sketch::serialize::{decode, encode};
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+
+/// Result of a fleet run.
+pub struct FleetResult {
+    /// The leader's merged sketch — the only artifact that leaves the
+    /// fleet, and everything training needs.
+    pub sketch: StormSketch,
+    pub devices: Vec<DeviceReport>,
+    /// Aggregate link statistics across every hop.
+    pub network: LinkSnapshot,
+    pub wall_secs: f64,
+    /// Total examples ingested fleet-wide.
+    pub examples: u64,
+}
+
+/// Run a fleet over per-device streams. `dim` is the augmented example
+/// dimension (d + 1); `family_seed` fixes the shared hash family.
+pub fn run_fleet(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+) -> FleetResult {
+    assert_eq!(streams.len(), fleet.devices, "one stream per device");
+    let n = fleet.devices;
+    let stages = plan(topology, n);
+    let timer = crate::util::timer::Timer::start();
+
+    // One link per non-leaf node (aggregators + leader), keyed by parent.
+    let mut rx_for: BTreeMap<usize, Receiver<Message>> = BTreeMap::new();
+    let mut tx_for: BTreeMap<usize, Link> = BTreeMap::new();
+    let mut stats = Vec::new();
+    for stage in &stages {
+        let (link, rx, st) = Link::new(
+            fleet.channel_capacity,
+            fleet.link_latency_us,
+            fleet.link_bandwidth_bps,
+        );
+        rx_for.insert(stage.parent, rx);
+        tx_for.insert(stage.parent, link);
+        stats.push(st);
+    }
+    // Map each child node to the link of its parent stage.
+    let mut uplink: BTreeMap<usize, Link> = BTreeMap::new();
+    for stage in &stages {
+        for &c in &stage.children {
+            uplink.insert(c, tx_for[&stage.parent].clone());
+        }
+    }
+    drop(tx_for); // aggregator threads hold the remaining clones
+
+    // Device threads. Flush cadence adapts to the sketch size: a delta is
+    // shipped once the device has ingested several wire-messages' worth
+    // of raw bytes, so steady-state sketch traffic stays well below what
+    // shipping the raw data would cost (the whole point of sketches). A
+    // final flush at stream end bounds staleness.
+    const FLUSH_RAW_MULTIPLE: usize = 8;
+    let wire = crate::sketch::serialize::wire_bytes(&storm);
+    let raw_bytes_per_batch = fleet.batch * dim * 8;
+    let flush_batches = (FLUSH_RAW_MULTIPLE * wire / raw_bytes_per_batch.max(1)).max(4);
+    let mut device_handles = Vec::new();
+    for (id, stream) in streams.into_iter().enumerate() {
+        let cfg = DeviceConfig {
+            id,
+            batch: fleet.batch,
+            flush_batches,
+            storm,
+            family_seed,
+            dim,
+        };
+        let link = uplink.remove(&id).expect("device uplink");
+        device_handles.push(std::thread::spawn(move || run_device(cfg, stream, link)));
+    }
+
+    // Aggregator threads, in stage order. Each drains its receiver,
+    // merges deltas, and forwards ONE merged delta + Done upstream.
+    let mut agg_handles = Vec::new();
+    for stage in &stages {
+        if stage.parent == LEADER {
+            continue;
+        }
+        let rx = rx_for.remove(&stage.parent).expect("aggregator rx");
+        let up = uplink.remove(&stage.parent).expect("aggregator uplink");
+        let expect_done = stage.children.len();
+        agg_handles.push(std::thread::spawn(move || {
+            run_aggregator(rx, up, expect_done, storm, dim, family_seed)
+        }));
+    }
+
+    // Leader: drain the final stage.
+    let leader_stage: &Stage = stages.iter().find(|s| s.parent == LEADER).expect("leader stage");
+    let leader_rx = rx_for.remove(&LEADER).expect("leader rx");
+    let mut sketch = StormSketch::new(storm, dim, family_seed);
+    let mut done = 0usize;
+    let mut examples = 0u64;
+    while done < leader_stage.children.len() {
+        match leader_rx.recv() {
+            Ok(Message::Delta(bytes)) => {
+                let delta = decode(&bytes).expect("valid wire delta");
+                sketch.merge_from(&delta);
+            }
+            Ok(Message::Done { examples: e, .. }) => {
+                done += 1;
+                examples += e;
+            }
+            Err(_) => break,
+        }
+    }
+
+    let devices: Vec<DeviceReport> = device_handles
+        .into_iter()
+        .map(|h| h.join().expect("device thread"))
+        .collect();
+    for h in agg_handles {
+        h.join().expect("aggregator thread");
+    }
+    let mut network = LinkSnapshot::default();
+    for s in &stats {
+        network.merge(&s.snapshot());
+    }
+    FleetResult {
+        sketch,
+        devices,
+        network,
+        wall_secs: timer.elapsed_secs(),
+        examples,
+    }
+}
+
+/// Aggregator node: merge every delta from children, forward the merged
+/// sketch once all children are done (cascading Done upstream with the
+/// summed example count).
+fn run_aggregator(
+    rx: Receiver<Message>,
+    up: Link,
+    expect_done: usize,
+    storm: StormConfig,
+    dim: usize,
+    family_seed: u64,
+) {
+    let mut acc = StormSketch::new(storm, dim, family_seed);
+    let mut done = 0usize;
+    let mut examples = 0u64;
+    while done < expect_done {
+        match rx.recv() {
+            Ok(Message::Delta(bytes)) => {
+                if let Ok(delta) = decode(&bytes) {
+                    acc.merge_from(&delta);
+                }
+            }
+            Ok(Message::Done { examples: e, .. }) => {
+                done += 1;
+                examples += e;
+            }
+            Err(_) => break,
+        }
+    }
+    if acc.count() > 0 {
+        let _ = up.send(Message::Delta(encode(&acc)));
+    }
+    let _ = up.send(Message::Done { device_id: usize::MAX - 1, examples });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::partition_streams;
+    use crate::data::synthetic;
+
+    fn small_fleet_cfg(devices: usize) -> FleetConfig {
+        FleetConfig {
+            devices,
+            batch: 16,
+            channel_capacity: 4,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            seed: 0,
+        }
+    }
+
+    fn scaled_ds() -> crate::data::dataset::Dataset {
+        let mut ds = synthetic::synth2d_regression(300, 0.5, 0.0, 0.05, 7);
+        crate::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        ds
+    }
+
+    fn reference_sketch(storm: StormConfig, seed: u64) -> (StormSketch, u64) {
+        let ds = scaled_ds();
+        let mut sk = StormSketch::new(storm, ds.dim() + 1, seed);
+        for i in 0..ds.len() {
+            sk.insert(&ds.augmented(i));
+        }
+        (sk, ds.len() as u64)
+    }
+
+    fn run_with(topology: Topology, devices: usize) -> FleetResult {
+        let ds = scaled_ds();
+        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let streams = partition_streams(&ds, devices, None);
+        run_fleet(small_fleet_cfg(devices), storm, topology, ds.dim() + 1, 99, streams)
+    }
+
+    #[test]
+    fn star_fleet_equals_single_device_sketch() {
+        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let (reference, n) = reference_sketch(storm, 99);
+        let result = run_with(Topology::Star, 4);
+        assert_eq!(result.examples, n);
+        assert_eq!(result.sketch.count(), n);
+        assert_eq!(result.sketch.grid().data(), reference.grid().data());
+    }
+
+    #[test]
+    fn tree_and_chain_agree_with_star() {
+        let star = run_with(Topology::Star, 6);
+        let tree = run_with(Topology::Tree { fanout: 2 }, 6);
+        let chain = run_with(Topology::Chain, 6);
+        assert_eq!(star.sketch.grid().data(), tree.sketch.grid().data());
+        assert_eq!(star.sketch.grid().data(), chain.sketch.grid().data());
+        assert_eq!(star.examples, tree.examples);
+        assert_eq!(star.examples, chain.examples);
+    }
+
+    #[test]
+    fn network_bytes_scale_with_flushes() {
+        let result = run_with(Topology::Star, 3);
+        assert!(result.network.messages >= 3); // at least one delta + dones
+        assert!(result.network.bytes > 0);
+        let per_msg = crate::sketch::serialize::wire_bytes(&StormConfig {
+            rows: 12,
+            power: 3,
+            saturating: true,
+        });
+        // Every delta message is exactly wire_bytes; total is a multiple
+        // plus 16-byte Done frames.
+        let deltas = (result.network.bytes
+            - 16 * result.devices.len() as u64) / per_msg as u64;
+        assert!(deltas >= 3, "deltas={deltas}");
+    }
+
+    #[test]
+    fn device_reports_cover_dataset() {
+        let result = run_with(Topology::Star, 5);
+        let total: u64 = result.devices.iter().map(|d| d.examples).sum();
+        assert_eq!(total, 300);
+        assert!(result.devices.iter().all(|d| d.batches > 0));
+    }
+
+    #[test]
+    fn single_device_fleet_works() {
+        let result = run_with(Topology::Star, 1);
+        assert_eq!(result.examples, 300);
+    }
+}

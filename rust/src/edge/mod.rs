@@ -1,0 +1,18 @@
+//! Edge-device fleet simulation.
+//!
+//! The paper's deployment story: data is born on edge devices; each device
+//! sketches its local stream one-pass; sketches (a few KB) flow over a
+//! communication network and merge by addition; a leader trains against
+//! the merged sketch. No raw example ever leaves a device.
+//!
+//! This module simulates that system faithfully enough to measure the
+//! claims: thread-per-device ingestion, bounded channels for backpressure,
+//! explicit link models (latency, bandwidth, byte counters), aggregation
+//! topologies (star / tree / chain), and an energy model comparing sketch
+//! shipping against raw-data shipping.
+
+pub mod device;
+pub mod network;
+pub mod topology;
+pub mod fleet;
+pub mod energy;

@@ -1,0 +1,143 @@
+//! Aggregation topologies: how device sketches flow to the leader.
+//!
+//! The paper imagines devices "propagating their sketches along the edges
+//! of a communication network". Because merge is associative and
+//! commutative, *any* aggregation tree yields identical counters — the
+//! topologies differ only in link traffic and stall profile, which is
+//! exactly what the fleet benchmarks measure.
+
+/// Supported aggregation shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every device sends directly to the leader.
+    Star,
+    /// Balanced aggregation tree with the given fanout; internal
+    /// aggregator nodes merge children before forwarding upstream.
+    Tree { fanout: usize },
+    /// Devices form a chain; each forwards its merged prefix downstream
+    /// (the paper's "propagate along the edges" picture).
+    Chain,
+}
+
+/// One aggregation stage: the devices/aggregators at `children` feed the
+/// node `parent`. Leader is node index `usize::MAX`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Stage {
+    pub parent: usize,
+    pub children: Vec<usize>,
+}
+
+/// The leader's pseudo-node id.
+pub const LEADER: usize = usize::MAX;
+
+/// Build the aggregation plan for `n` devices. Returns stages in
+/// evaluation order (children of a later stage may be aggregator outputs
+/// of earlier stages, identified by ids >= n).
+pub fn plan(topology: Topology, n: usize) -> Vec<Stage> {
+    assert!(n > 0);
+    match topology {
+        Topology::Star => vec![Stage { parent: LEADER, children: (0..n).collect() }],
+        Topology::Chain => {
+            // device 0 -> 1 -> ... -> n-1 -> leader; stage i merges node
+            // (i-1)'s running aggregate with device i. We model it as each
+            // consecutive pair producing an aggregator node.
+            let mut stages = Vec::new();
+            let mut upstream = 0usize; // running aggregate starts at device 0
+            let mut next_agg = n;
+            for dev in 1..n {
+                stages.push(Stage { parent: next_agg, children: vec![upstream, dev] });
+                upstream = next_agg;
+                next_agg += 1;
+            }
+            stages.push(Stage { parent: LEADER, children: vec![upstream] });
+            stages
+        }
+        Topology::Tree { fanout } => {
+            assert!(fanout >= 2, "tree fanout must be >= 2");
+            let mut level: Vec<usize> = (0..n).collect();
+            let mut next_agg = n;
+            let mut stages = Vec::new();
+            while level.len() > fanout {
+                let mut next_level = Vec::new();
+                for chunk in level.chunks(fanout) {
+                    if chunk.len() == 1 {
+                        next_level.push(chunk[0]);
+                    } else {
+                        stages.push(Stage { parent: next_agg, children: chunk.to_vec() });
+                        next_level.push(next_agg);
+                        next_agg += 1;
+                    }
+                }
+                level = next_level;
+            }
+            stages.push(Stage { parent: LEADER, children: level });
+            stages
+        }
+    }
+}
+
+/// Total number of aggregator (non-device, non-leader) nodes in a plan.
+pub fn aggregator_count(stages: &[Stage]) -> usize {
+    stages.iter().filter(|s| s.parent != LEADER).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn devices_covered(stages: &[Stage], n: usize) -> bool {
+        // Every device id < n appears exactly once as a child across all
+        // stages; every aggregator output feeds exactly one parent.
+        let mut seen = BTreeSet::new();
+        for s in stages {
+            for &c in &s.children {
+                assert!(seen.insert(c), "node {c} consumed twice");
+            }
+        }
+        (0..n).all(|d| seen.contains(&d))
+    }
+
+    #[test]
+    fn star_single_stage() {
+        let p = plan(Topology::Star, 5);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].parent, LEADER);
+        assert!(devices_covered(&p, 5));
+        assert_eq!(aggregator_count(&p), 0);
+    }
+
+    #[test]
+    fn chain_has_n_minus_1_aggregators() {
+        let p = plan(Topology::Chain, 4);
+        assert!(devices_covered(&p, 4));
+        assert_eq!(aggregator_count(&p), 3);
+        assert_eq!(p.last().unwrap().parent, LEADER);
+    }
+
+    #[test]
+    fn tree_reduces_to_leader() {
+        let p = plan(Topology::Tree { fanout: 2 }, 8);
+        assert!(devices_covered(&p, 8));
+        // 8 leaves, fanout 2: 4 + 2 internal aggregators, final stage of 2.
+        assert_eq!(aggregator_count(&p), 6);
+        assert_eq!(p.last().unwrap().parent, LEADER);
+        assert!(p.last().unwrap().children.len() <= 2);
+    }
+
+    #[test]
+    fn tree_with_small_n_is_single_stage() {
+        let p = plan(Topology::Tree { fanout: 4 }, 3);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].parent, LEADER);
+    }
+
+    #[test]
+    fn single_device_plans() {
+        for t in [Topology::Star, Topology::Chain, Topology::Tree { fanout: 2 }] {
+            let p = plan(t, 1);
+            assert_eq!(p.last().unwrap().parent, LEADER);
+            assert!(devices_covered(&p, 1));
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * probe strategy: antithetic pairs (ours) vs SPSA at matched budget;
+//! * iterate selection: tail averaging (ours) vs final iterate;
+//! * data scaling: quantile-0.9 (ours) vs max-norm;
+//! * hash power p: 2 / 4 / 8 at fixed memory (paper fixes p = 4).
+//!
+//! Each row reports mean training MSE over `Effort::runs()` independent
+//! sketches on the airfoil substitute — the same protocol as Figure 4.
+
+use super::Effort;
+use crate::config::{OptimizerConfig, StormConfig};
+use crate::data::registry;
+use crate::data::scale::{scale_to_unit_ball, scale_to_unit_ball_quantile};
+use crate::linalg::solve::mse;
+use crate::metrics::export::Table;
+use crate::optim::dfo::DfoOptimizer;
+use crate::optim::spsa::{spsa, SpsaConfig};
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+
+fn build_sketch(ds: &crate::data::dataset::Dataset, rows: usize, power: u32, seed: u64) -> StormSketch {
+    let cfg = StormConfig { rows, power, saturating: true };
+    let mut sk = StormSketch::new(cfg, ds.dim() + 1, seed);
+    for i in 0..ds.len() {
+        sk.insert(&ds.augmented(i));
+    }
+    sk
+}
+
+pub fn run(effort: Effort, seed: u64) -> Table {
+    let runs = effort.runs();
+    let iters = effort.dfo_iters();
+    let mut table = Table::new(
+        format!("ablate: design choices on airfoil (mean MSE of {runs} runs; lower is better)"),
+        &["variant", "mse"],
+    );
+    // Variant ids: 0 = ours (antithetic DFO + tail avg + quantile scale,
+    // p=4); 1 = SPSA; 2 = final iterate; 3 = max-norm scaling; 4 = p=2;
+    // 5 = p=8 (memory-matched: rows scaled to keep bytes constant).
+    let mut acc = [0.0f64; 6];
+    for r in 0..runs {
+        let s = seed + r as u64 * 101;
+        let mut ds_q = registry::load("airfoil", s).unwrap();
+        scale_to_unit_ball_quantile(&mut ds_q, 0.9, 0.9);
+        let mut ds_m = registry::load("airfoil", s).unwrap();
+        scale_to_unit_ball(&mut ds_m, 0.9);
+        let d = ds_q.dim();
+        let ocfg = OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters, seed: s ^ 7 };
+
+        // 0: ours.
+        let sk = build_sketch(&ds_q, 1000, 4, s);
+        let theta = DfoOptimizer::new(ocfg, d).run(&sk, iters);
+        acc[0] += mse(&ds_q.x, &ds_q.y, &theta).min(1e6);
+
+        // 1: SPSA at the same total query budget (iters * 9 queries / 2).
+        let spsa_iters = iters * 9 / 2;
+        let theta = spsa(&sk, SpsaConfig { c: 0.3, a: 0.3, iters: spsa_iters, seed: s ^ 7 });
+        acc[1] += mse(&ds_q.x, &ds_q.y, &theta).min(1e6);
+
+        // 2: final iterate instead of tail average.
+        let mut opt = DfoOptimizer::new(ocfg, d);
+        for _ in 0..iters {
+            opt.step(&sk);
+        }
+        acc[2] += mse(&ds_q.x, &ds_q.y, opt.theta()).min(1e6);
+
+        // 3: max-norm scaling.
+        let sk_m = build_sketch(&ds_m, 1000, 4, s);
+        let theta = DfoOptimizer::new(ocfg, d).run(&sk_m, iters);
+        acc[3] += mse(&ds_m.x, &ds_m.y, &theta).min(1e6);
+
+        // 4/5: p = 2 (rows x4 for equal bytes), p = 8 (rows / 16).
+        let sk2 = build_sketch(&ds_q, 4000, 2, s);
+        let theta = DfoOptimizer::new(ocfg, d).run(&sk2, iters);
+        acc[4] += mse(&ds_q.x, &ds_q.y, &theta).min(1e6);
+        let sk8 = build_sketch(&ds_q, 63, 8, s);
+        let theta = DfoOptimizer::new(ocfg, d).run(&sk8, iters);
+        acc[5] += mse(&ds_q.x, &ds_q.y, &theta).min(1e6);
+    }
+    for (i, a) in acc.iter().enumerate() {
+        table.push(vec![i as f64, a / runs as f64]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ablation_runs_and_ours_is_competitive() {
+        let t = super::run(super::Effort::Fast, 3);
+        assert_eq!(t.rows.len(), 6);
+        let ours = t.rows[0][1];
+        assert!(ours.is_finite() && ours > 0.0);
+        // Ours should not be the worst variant.
+        let worst = t.rows.iter().map(|r| r[1]).fold(0.0f64, f64::max);
+        assert!(ours < worst, "ours={ours} worst={worst}");
+    }
+}

@@ -1,0 +1,42 @@
+//! Energy experiment (Broader Impacts): transmit-energy comparison of
+//! shipping STORM sketches vs shipping raw examples, across stream sizes.
+
+use crate::config::StormConfig;
+use crate::edge::energy::EnergyModel;
+use crate::metrics::export::Table;
+use crate::sketch::serialize::wire_bytes;
+
+pub fn run() -> Table {
+    let model = EnergyModel::default();
+    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let d = 21usize; // parkinsons-like feature width
+    let flush_every = 256u64; // examples per delta flush
+    let mut table = Table::new(
+        "energy: raw-vs-sketch transmit energy (J) vs stream size",
+        &["examples", "raw_joules", "storm_joules", "savings_ratio"],
+    );
+    for exp in [3u32, 4, 5, 6, 7] {
+        let n = 10u64.pow(exp);
+        let raw_bytes = n * (d as u64 + 1) * 8;
+        let flushes = n.div_ceil(flush_every);
+        let sketch_bytes = flushes * wire_bytes(&cfg) as u64;
+        let raw = model.raw_energy(raw_bytes).total();
+        let storm = model.storm_energy(n, sketch_bytes).total();
+        table.push(vec![n as f64, raw, storm, raw / storm]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn savings_grow_with_stream_size() {
+        let t = super::run();
+        let ratios: Vec<f64> = t.rows.iter().map(|r| r[3]).collect();
+        assert!(ratios.windows(2).all(|w| w[1] >= w[0] * 0.99), "{ratios:?}");
+        assert!(
+            *ratios.last().unwrap() > 5.0,
+            "large streams should favor sketching: {ratios:?}"
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Figure 2 (intuition): random SRP partitions over 2-D data — the
+//! occupancy histogram shows dense vs sparse cells, the information a
+//! regression line's partition memberships expose.
+
+use crate::lsh::srp::SignedRandomProjection;
+use crate::lsh::LshFunction;
+use crate::metrics::export::Table;
+use crate::util::rng::{Rng, Xoshiro256};
+
+pub fn run(seed: u64) -> Table {
+    let mut rng = Xoshiro256::new(seed);
+    // Correlated 2-D cloud (the kind of structure a regression line fits).
+    let data: Vec<Vec<f64>> = (0..2000)
+        .map(|_| {
+            let t = rng.uniform_range(-1.0, 1.0);
+            vec![t, 0.8 * t + 0.15 * rng.gaussian()]
+        })
+        .collect();
+    let p = 4u32;
+    let hash = SignedRandomProjection::new(2, p, seed);
+    let mut counts = vec![0usize; hash.range()];
+    for z in &data {
+        counts[hash.hash(z)] += 1;
+    }
+    let mut table = Table::new(
+        "fig2: SRP partition occupancy on correlated 2-D data (p=4)",
+        &["bucket", "count", "fraction"],
+    );
+    let n = data.len() as f64;
+    for (b, &c) in counts.iter().enumerate() {
+        table.push(vec![b as f64, c as f64, c as f64 / n]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn occupancy_is_concentrated() {
+        // Correlated data occupies few partitions densely: the top-4 of 16
+        // buckets should hold most of the mass (that is the figure's point).
+        let t = super::run(4);
+        let mut fracs: Vec<f64> = t.rows.iter().map(|r| r[2]).collect();
+        fracs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top4: f64 = fracs[..4].iter().sum();
+        assert!(top4 > 0.6, "top4={top4}");
+        let total: f64 = fracs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,101 @@
+//! Figure 3: (a) the PRP surrogate loss for different p, with a
+//! sketch-estimated overlay; (b) the slope at `t = 0.1` as a function of p
+//! — the paper's argument that p = 4 maximizes local curvature.
+
+use crate::config::StormConfig;
+use crate::loss::prp_loss::{prp_slope_at, prp_surrogate};
+use crate::metrics::export::Table;
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+
+pub const POWERS: &[u32] = &[1, 2, 4, 8, 16];
+
+/// Figure 3a: loss curves over `t` in (-1, 1), closed form for each p,
+/// plus a STORM-estimated curve at p = 4 (R = 500) demonstrating that the
+/// sketch reproduces the analytic surrogate.
+pub fn run_fig3a(seed: u64) -> Table {
+    let mut cols: Vec<String> = vec!["t".to_string()];
+    for p in POWERS {
+        cols.push(format!("g_p{p}"));
+    }
+    cols.push("sketch_p4".to_string());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("fig3a: PRP surrogate loss vs t", &col_refs);
+
+    // One data point z on the first axis: then <theta~, z> = t is swept by
+    // moving the query along the same axis. (The surrogate is a function
+    // of t only, so a single example suffices and makes the sketch overlay
+    // exact in expectation.)
+    let dim = 2;
+    let cfg = StormConfig { rows: 500, power: 4, saturating: true };
+    let mut sk = StormSketch::new(cfg, dim, seed);
+    let z = vec![0.95, 0.0];
+    sk.insert(&z);
+
+    // Sweep |t| <= 0.9 so the matching query q = t/z0 stays inside the
+    // unit ball the asymmetric hash requires.
+    let steps = 81;
+    for i in 0..steps {
+        let t = -0.9 + 1.8 * i as f64 / (steps - 1) as f64;
+        let mut row = vec![t];
+        for &p in POWERS {
+            row.push(prp_surrogate(t, p));
+        }
+        // Query whose inner product with z is exactly t.
+        let q = vec![t / z[0], 0.0];
+        row.push(sk.estimate_risk(&q));
+        table.push(row);
+    }
+    table
+}
+
+/// Figure 3b: |dg/dt| at t = 0.1 for p = 1..16.
+pub fn run_fig3b() -> Table {
+    let mut table = Table::new("fig3b: surrogate slope at t=0.1 vs p", &["p", "slope"]);
+    for p in 1..=16u32 {
+        table.push(vec![p as f64, prp_slope_at(0.1, p)]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_sketch_tracks_closed_form() {
+        let t = run_fig3a(3);
+        assert_eq!(t.rows.len(), 81);
+        // Column 3 is g_p4 (t, p1, p2, p4, ...), column 6 the sketch
+        // estimate; they must agree within sketch noise (R = 500 -> ~5%).
+        let mut max_err: f64 = 0.0;
+        for row in &t.rows {
+            max_err = max_err.max((row[3] - row[6]).abs());
+        }
+        assert!(max_err < 0.08, "max_err={max_err}");
+    }
+
+    #[test]
+    fn fig3a_curves_ordered_at_large_t() {
+        // At t -> 1, larger p has larger g? No: all approach 1/2 f^p ->
+        // 0.5. At moderate t, smaller p is larger. Check p1 >= p16 at 0.5.
+        let t = run_fig3a(5);
+        let row = t
+            .rows
+            .iter()
+            .min_by(|a, b| ((a[0] - 0.5).abs()).partial_cmp(&(b[0] - 0.5).abs()).unwrap())
+            .unwrap();
+        assert!(row[1] >= row[5], "p1 {} vs p16 {}", row[1], row[5]);
+    }
+
+    #[test]
+    fn fig3b_peaks_at_p4() {
+        let t = run_fig3b();
+        let best = t
+            .rows
+            .iter()
+            .max_by(|a, b| a[1].partial_cmp(&b[1]).unwrap())
+            .unwrap();
+        assert_eq!(best[0], 4.0, "slope table: {:?}", t.rows);
+    }
+}

@@ -1,0 +1,54 @@
+//! Figure 6 (appendix): the STORM margin loss next to the classical
+//! classification losses — hinge, squared hinge, logistic, zero-one —
+//! over the margin t in [-1, 1].
+
+use crate::loss::margin::margin_loss;
+use crate::loss::reference;
+use crate::metrics::export::Table;
+
+pub fn run() -> Table {
+    let mut table = Table::new(
+        "fig6: classification losses vs margin t",
+        &["t", "storm_p1", "storm_p2", "storm_p4", "hinge", "sq_hinge", "logistic", "zero_one"],
+    );
+    let steps = 81;
+    for i in 0..steps {
+        let t = -1.0 + 2.0 * i as f64 / (steps - 1) as f64;
+        table.push(vec![
+            t,
+            margin_loss(t, 1),
+            margin_loss(t, 2),
+            margin_loss(t, 4),
+            reference::hinge(t),
+            reference::squared_hinge(t),
+            reference::logistic(t),
+            reference::zero_one(t),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_losses_penalize_misclassification_more() {
+        let t = run();
+        let first = &t.rows[0]; // t = -1
+        let last = t.rows.last().unwrap(); // t = +1
+        for c in 1..=7 {
+            assert!(first[c] >= last[c], "column {c} not decreasing overall");
+        }
+    }
+
+    #[test]
+    fn storm_losses_are_classification_calibrated_shape() {
+        // Strictly positive at t=0 and decreasing through it.
+        let t = run();
+        let mid = t.rows.iter().find(|r| r[0].abs() < 0.02).unwrap();
+        for c in 1..=3 {
+            assert!(mid[c] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Mergeability experiment: the §1/§6 claim that STORM is a mergeable
+//! summary. Sweeps fleet sizes and topologies, asserting the merged
+//! counters are *identical* to a single-device sketch while measuring the
+//! network traffic and stall profile each topology costs.
+
+use super::Effort;
+use crate::config::{FleetConfig, StormConfig};
+use crate::data::scale::scale_to_unit_ball;
+use crate::data::stream::partition_streams;
+use crate::data::synthetic;
+use crate::edge::fleet::run_fleet;
+use crate::edge::topology::Topology;
+use crate::metrics::export::Table;
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+
+pub fn run(effort: Effort, seed: u64) -> Table {
+    let device_sweep: &[usize] = match effort {
+        Effort::Fast => &[1, 2, 4, 8],
+        Effort::Full => &[1, 2, 4, 8, 16, 32],
+    };
+    let mut ds = synthetic::parkinsons(seed);
+    scale_to_unit_ball(&mut ds, 0.9);
+    let storm = StormConfig { rows: 100, power: 4, saturating: true };
+    let family_seed = seed ^ 0x4D45;
+
+    // Single-device reference.
+    let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
+    for i in 0..ds.len() {
+        reference.insert(&ds.augmented(i));
+    }
+
+    let mut table = Table::new(
+        "merge: fleet sketch == single-device sketch (0/1), traffic per topology",
+        &["devices", "topology", "identical", "net_bytes", "messages", "stall_ms", "wall_ms"],
+    );
+    for &devices in device_sweep {
+        for (tid, topo) in [
+            Topology::Star,
+            Topology::Tree { fanout: 2 },
+            Topology::Chain,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let fleet = FleetConfig {
+                devices,
+                batch: 64,
+                channel_capacity: 4,
+                link_latency_us: 0,
+                link_bandwidth_bps: 0,
+                seed,
+            };
+            let streams = partition_streams(&ds, devices, None);
+            let result = run_fleet(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
+            let identical = result.sketch.grid().data() == reference.grid().data()
+                && result.sketch.count() == reference.count();
+            table.push(vec![
+                devices as f64,
+                tid as f64,
+                f64::from(u8::from(identical)),
+                result.network.bytes as f64,
+                result.network.messages as f64,
+                result.network.blocked_ns as f64 / 1e6,
+                result.wall_secs * 1e3,
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_configurations_merge_exactly() {
+        let t = super::run(super::Effort::Fast, 5);
+        for row in &t.rows {
+            assert_eq!(row[2], 1.0, "devices={} topo={} not identical", row[0], row[1]);
+        }
+        // More devices -> at least as much traffic in star topology.
+        let star_rows: Vec<&Vec<f64>> = t.rows.iter().filter(|r| r[1] == 0.0).collect();
+        assert!(star_rows.last().unwrap()[3] >= star_rows[0][3]);
+    }
+}

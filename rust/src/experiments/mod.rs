@@ -1,0 +1,110 @@
+//! Experiment harnesses — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §4 for the index). Every harness returns
+//! [`crate::metrics::export::Table`]s with stable column schemas and can
+//! be invoked via `storm experiment <id>` or the corresponding
+//! `cargo bench` target.
+//!
+//! | id       | paper artifact                     |
+//! |----------|------------------------------------|
+//! | table1   | Table 1 (datasets)                 |
+//! | fig2     | Figure 2 (partition intuition)     |
+//! | fig3a    | Figure 3a (surrogate loss vs p)    |
+//! | fig3b    | Figure 3b (slope at 0.1 vs p)      |
+//! | fig4     | Figure 4 (MSE vs memory, 3 sets)   |
+//! | fig5     | Figure 5 (2-D reg + clf)           |
+//! | fig6     | Figure 6 (margin-loss comparison)  |
+//! | merge    | mergeability / fleet equivalence   |
+//! | privacy  | DP release epsilon sweep           |
+//! | energy   | sketch-vs-raw transmit energy      |
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod merge;
+pub mod ablate;
+pub mod privacy;
+pub mod energy;
+
+use crate::metrics::export::Table;
+
+/// Effort level: `Fast` for CI / benches, `Full` for paper-grade runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    Fast,
+    Full,
+}
+
+impl Effort {
+    pub fn from_env() -> Effort {
+        if std::env::var("STORM_BENCH_FULL").is_ok() {
+            Effort::Full
+        } else {
+            Effort::Fast
+        }
+    }
+
+    /// Paper protocol: 10 averaged runs. Fast mode: 3.
+    pub fn runs(self) -> usize {
+        match self {
+            Effort::Fast => 3,
+            Effort::Full => 10,
+        }
+    }
+
+    pub fn dfo_iters(self) -> usize {
+        match self {
+            Effort::Fast => 200,
+            Effort::Full => 400,
+        }
+    }
+}
+
+/// Run an experiment by id; returns its tables. Unknown ids return None.
+pub fn run(id: &str, effort: Effort, seed: u64) -> Option<Vec<Table>> {
+    let tables = match id {
+        "table1" => vec![table1::run()],
+        "fig2" => vec![fig2::run(seed)],
+        "fig3a" => vec![fig3::run_fig3a(seed)],
+        "fig3b" => vec![fig3::run_fig3b()],
+        "fig4" => fig4::run(effort, seed),
+        "fig5" => fig5::run(effort, seed),
+        "fig6" => vec![fig6::run()],
+        "merge" => vec![merge::run(effort, seed)],
+        "privacy" => vec![privacy::run(effort, seed)],
+        "energy" => vec![energy::run()],
+        "ablate" => vec![ablate::run(effort, seed)],
+        _ => return None,
+    };
+    Some(tables)
+}
+
+/// All known experiment ids.
+pub const ALL: &[&str] = &[
+    "table1", "fig2", "fig3a", "fig3b", "fig4", "fig5", "fig6", "merge", "privacy", "energy", "ablate",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_none() {
+        assert!(run("nope", Effort::Fast, 0).is_none());
+    }
+
+    #[test]
+    fn all_ids_resolve() {
+        // Only run the cheap ones here; the expensive ones have their own
+        // integration tests / bench targets.
+        for id in ["table1", "fig3a", "fig3b", "fig6", "energy"] {
+            let tables = run(id, Effort::Fast, 1).unwrap();
+            assert!(!tables.is_empty(), "{id} produced no tables");
+            for t in &tables {
+                assert!(!t.rows.is_empty(), "{id} table {} empty", t.title);
+            }
+        }
+    }
+}

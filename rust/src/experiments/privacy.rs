@@ -1,0 +1,89 @@
+//! Differential-privacy ablation (paper §2.2): train against
+//! Laplace-noised sketch releases across an epsilon sweep and measure the
+//! accuracy cost of privacy.
+
+use super::Effort;
+use crate::config::{OptimizerConfig, StormConfig};
+use crate::data::scale::scale_to_unit_ball_quantile;
+use crate::data::synthetic;
+use crate::linalg::solve::mse;
+use crate::metrics::export::Table;
+use crate::optim::dfo::DfoOptimizer;
+use crate::optim::FnOracle;
+use crate::sketch::privacy::PrivateStormRelease;
+use crate::sketch::storm::StormSketch;
+use crate::sketch::Sketch;
+use crate::util::mathx::norm2;
+
+const EPSILONS: &[f64] = &[0.1, 0.5, 1.0, 5.0, 10.0];
+
+pub fn run(effort: Effort, seed: u64) -> Table {
+    let iters = effort.dfo_iters();
+    let runs = effort.runs();
+    let mut ds = synthetic::synth2d_regression(1000, 0.8, 0.1, 0.03, seed);
+    scale_to_unit_ball_quantile(&mut ds, 0.9, 0.9);
+    let d = ds.dim();
+    let cfg = StormConfig { rows: 200, power: 4, saturating: true };
+
+    let mut table = Table::new(
+        format!("privacy: epsilon vs training MSE (mean of {runs} runs; inf = exact sketch)"),
+        &["epsilon", "mse"],
+    );
+    let train_on = |risk: &dyn Fn(&[f64]) -> f64, run_seed: u64| -> Vec<f64> {
+        let oracle = FnOracle::new(d, risk);
+        let ocfg = OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters, seed: run_seed };
+        DfoOptimizer::new(ocfg, d).run(&oracle, iters)
+    };
+    let rescale = |q: &[f64]| -> Vec<f64> {
+        let n = norm2(q);
+        let r = crate::data::scale::query_radius();
+        if n <= r {
+            q.to_vec()
+        } else {
+            q.iter().map(|v| v * r / n).collect()
+        }
+    };
+
+    for &eps in EPSILONS {
+        let mut acc = 0.0;
+        for r in 0..runs {
+            let fam = seed ^ (r as u64 * 31 + 7);
+            let mut sk = StormSketch::new(cfg, d + 1, fam);
+            for i in 0..ds.len() {
+                sk.insert(&ds.augmented(i));
+            }
+            let rel = PrivateStormRelease::release(&sk, eps, fam ^ 0xD0);
+            let theta = train_on(&|q: &[f64]| rel.estimate_risk(&rescale(q)), fam);
+            acc += mse(&ds.x, &ds.y, &theta).min(1e6);
+        }
+        table.push(vec![eps, acc / runs as f64]);
+    }
+    // Non-private reference (epsilon = inf encoded as 0 in the table tail).
+    let mut acc = 0.0;
+    for r in 0..runs {
+        let fam = seed ^ (r as u64 * 31 + 7);
+        let mut sk = StormSketch::new(cfg, d + 1, fam);
+        for i in 0..ds.len() {
+            sk.insert(&ds.augmented(i));
+        }
+        let theta = train_on(&|q: &[f64]| sk.estimate_risk_scaled(q), fam);
+        acc += mse(&ds.x, &ds.y, &theta).min(1e6);
+    }
+    table.push(vec![f64::INFINITY, acc / runs as f64]);
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn privacy_costs_accuracy_at_tight_epsilon() {
+        let t = super::run(super::Effort::Fast, 11);
+        let mse_tight = t.rows[0][1]; // eps = 0.1
+        let mse_exact = t.rows.last().unwrap()[1]; // eps = inf
+        assert!(
+            mse_tight >= mse_exact * 0.8,
+            "tight epsilon should not beat exact: {mse_tight} vs {mse_exact}"
+        );
+        assert!(t.rows.iter().all(|r| r[1].is_finite()));
+    }
+}

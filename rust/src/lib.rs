@@ -1,0 +1,60 @@
+//! # STORM — Sketches Toward Online Risk Minimization
+//!
+//! A production-grade reproduction of *"STORM: Foundations of End-to-End
+//! Empirical Risk Minimization on the Edge"* (Coleman, Gupta, Chen,
+//! Shrivastava, 2020).
+//!
+//! STORM compresses a data stream into a tiny array of integer counters
+//! indexed by locality-sensitive hash (LSH) functions. Querying the sketch
+//! at a parameter vector returns an unbiased estimate of a *surrogate
+//! empirical risk* whose minimizer coincides with the least-squares (or
+//! max-margin) minimizer — so regression and classification models can be
+//! trained directly from the sketch, on the edge, without retaining the
+//! data.
+//!
+//! ## Architecture
+//!
+//! This crate is layer 3 of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordinator: edge-device fleet simulation,
+//!   sketch merging over network topologies, backpressure, the
+//!   derivative-free optimization (DFO) outer loop, metrics and CLI.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs for bulk sketch
+//!   insertion, query, and fused DFO steps, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — the Pallas hot-spot kernel:
+//!   batched paired-random-projection hashing + one-hot histogram
+//!   accumulation.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT and executes
+//! them from the hot path; Python never runs at request time.
+
+pub mod util;
+pub mod testing;
+pub mod config;
+pub mod linalg;
+pub mod data;
+pub mod lsh;
+pub mod sketch;
+pub mod loss;
+pub mod optim;
+pub mod baselines;
+pub mod metrics;
+pub mod edge;
+pub mod coordinator;
+pub mod runtime;
+pub mod experiments;
+
+/// Convenient re-exports of the types most users need.
+pub mod prelude {
+    pub use crate::config::StormConfig;
+    pub use crate::data::dataset::Dataset;
+    pub use crate::linalg::matrix::Matrix;
+    pub use crate::lsh::srp::SignedRandomProjection;
+    pub use crate::optim::dfo::{DfoConfig, DfoOptimizer};
+    pub use crate::sketch::storm::StormSketch;
+    pub use crate::sketch::Sketch;
+    pub use crate::util::rng::{Rng, Xoshiro256};
+}
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

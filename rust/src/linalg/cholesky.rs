@@ -1,0 +1,140 @@
+//! Cholesky factorization and SPD solves — the workhorse behind the exact
+//! least-squares baseline (normal equations) and ridge regularization.
+
+use super::matrix::Matrix;
+
+/// Errors from factorization.
+#[derive(Debug, thiserror::Error)]
+pub enum CholeskyError {
+    #[error("matrix is not square ({0}x{1})")]
+    NotSquare(usize, usize),
+    #[error("matrix is not positive definite (pivot {0} = {1:.3e})")]
+    NotPositiveDefinite(usize, f64),
+}
+
+/// Lower-triangular Cholesky factor `L` with `A = L L^T`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    pub fn factor(a: &Matrix) -> Result<Self, CholeskyError> {
+        let (n, m) = a.shape();
+        if n != m {
+            return Err(CholeskyError::NotSquare(n, m));
+        }
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(CholeskyError::NotPositiveDefinite(i, sum));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The lower factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` via forward + back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        // Back: L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// log-determinant of `A` (2 * sum log diag L).
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, cases};
+    use crate::util::rng::Xoshiro256;
+
+    fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+        let a = Matrix::gaussian(n + 2, n, rng);
+        let mut g = a.gram();
+        for i in 0..n {
+            g[(i, i)] += 0.5; // well away from singular
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Xoshiro256::new(11);
+        let a = random_spd(5, &mut rng);
+        let ch = Cholesky::factor(&a).unwrap();
+        let recon = ch.l().matmul(&ch.l().transpose());
+        assert_allclose(recon.data(), a.data(), 1e-9);
+    }
+
+    #[test]
+    fn solve_recovers_known_x() {
+        cases(20, 21, |rng, _| {
+            let n = crate::testing::gen_dim(rng, 1, 12);
+            let a = random_spd(n, rng);
+            let x_true: Vec<f64> = (0..n).map(|i| (i as f64) - 1.5).collect();
+            let b = a.matvec(&x_true);
+            let x = Cholesky::factor(&a).unwrap().solve(&b);
+            assert_allclose(&x, &x_true, 1e-6);
+        });
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let a = Matrix::zeros(2, 3);
+        assert!(matches!(Cholesky::factor(&a), Err(CholeskyError::NotSquare(2, 3))));
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(matches!(
+            Cholesky::factor(&a),
+            Err(CholeskyError::NotPositiveDefinite(..))
+        ));
+    }
+
+    #[test]
+    fn log_det_identity_is_zero() {
+        let ch = Cholesky::factor(&Matrix::eye(4)).unwrap();
+        assert!(ch.log_det().abs() < 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate, written from scratch.
+//!
+//! Everything the baselines and solvers need: a row-major matrix type,
+//! blocked matrix products, Cholesky factorization (exact least squares /
+//! ridge via normal equations), Householder QR (leverage scores and a
+//! numerically robust least-squares path), and triangular solves.
+//!
+//! This is the "dependency" layer the paper assumes exists — the
+//! comparison baselines (exact LS, leverage-score sampling, the
+//! Clarkson–Woodruff sketch-and-solve) all sit on top of it.
+
+pub mod matrix;
+pub mod cholesky;
+pub mod qr;
+pub mod solve;
+
+pub use matrix::Matrix;

@@ -1,0 +1,180 @@
+//! Householder QR — used for (a) numerically robust least squares and
+//! (b) exact leverage scores (row norms of the thin Q factor), which the
+//! leverage-score sampling baseline needs.
+
+use super::matrix::Matrix;
+
+/// Thin QR factorization of an `n x d` matrix with `n >= d`:
+/// `A = Q R` with `Q` `n x d` orthonormal columns and `R` `d x d` upper
+/// triangular.
+#[derive(Clone, Debug)]
+pub struct ThinQr {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Factor via Householder reflections accumulated into an explicit thin Q.
+pub fn thin_qr(a: &Matrix) -> ThinQr {
+    let (n, d) = a.shape();
+    assert!(n >= d, "thin_qr requires n >= d (got {n} x {d})");
+    // Work on a copy; collect Householder vectors.
+    let mut r_work = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(d);
+    for k in 0..d {
+        // Build the Householder vector for column k below the diagonal.
+        let mut v = vec![0.0; n - k];
+        let mut norm_x = 0.0;
+        for i in k..n {
+            let x = r_work[(i, k)];
+            v[i - k] = x;
+            norm_x += x * x;
+        }
+        let norm_x = norm_x.sqrt();
+        if norm_x > 0.0 {
+            let alpha = if v[0] >= 0.0 { -norm_x } else { norm_x };
+            v[0] -= alpha;
+            let vnorm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if vnorm > 1e-300 {
+                for x in &mut v {
+                    *x /= vnorm;
+                }
+                // Apply H = I - 2 v v^T to the trailing submatrix.
+                for j in k..d {
+                    let mut dotp = 0.0;
+                    for i in k..n {
+                        dotp += v[i - k] * r_work[(i, j)];
+                    }
+                    for i in k..n {
+                        r_work[(i, j)] -= 2.0 * v[i - k] * dotp;
+                    }
+                }
+            } else {
+                v.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        vs.push(v);
+    }
+    // R = top d x d of the transformed matrix.
+    let mut r = Matrix::zeros(d, d);
+    for i in 0..d {
+        for j in i..d {
+            r[(i, j)] = r_work[(i, j)];
+        }
+    }
+    // Q = H_0 H_1 ... H_{d-1} * [I_d; 0] — apply reflections in reverse to
+    // the first d columns of the identity.
+    let mut q = Matrix::zeros(n, d);
+    for i in 0..d {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..d).rev() {
+        let v = &vs[k];
+        for j in 0..d {
+            let mut dotp = 0.0;
+            for i in k..n {
+                dotp += v[i - k] * q[(i, j)];
+            }
+            for i in k..n {
+                q[(i, j)] -= 2.0 * v[i - k] * dotp;
+            }
+        }
+    }
+    ThinQr { q, r }
+}
+
+impl ThinQr {
+    /// Least-squares solve `min ||A x - b||` via `R x = Q^T b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let d = self.r.rows();
+        let qtb = self.q.matvec_t(b);
+        let mut x = vec![0.0; d];
+        for i in (0..d).rev() {
+            let mut sum = qtb[i];
+            for k in i + 1..d {
+                sum -= self.r[(i, k)] * x[k];
+            }
+            let rii = self.r[(i, i)];
+            x[i] = if rii.abs() > 1e-300 { sum / rii } else { 0.0 };
+        }
+        x
+    }
+
+    /// Statistical leverage scores: `l_i = ||Q_{i,:}||^2`. They sum to d
+    /// (the column rank) and are the sampling probabilities (after
+    /// normalization) used by the leverage-sampling baseline.
+    pub fn leverage_scores(&self) -> Vec<f64> {
+        (0..self.q.rows())
+            .map(|i| self.q.row(i).iter().map(|v| v * v).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, assert_close, cases};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let mut rng = Xoshiro256::new(31);
+        let a = Matrix::gaussian(8, 4, &mut rng);
+        let f = thin_qr(&a);
+        let recon = f.q.matmul(&f.r);
+        assert_allclose(recon.data(), a.data(), 1e-9);
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Xoshiro256::new(32);
+        let a = Matrix::gaussian(10, 5, &mut rng);
+        let f = thin_qr(&a);
+        let qtq = f.q.gram();
+        assert_allclose(qtq.data(), Matrix::eye(5).data(), 1e-9);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Xoshiro256::new(33);
+        let a = Matrix::gaussian(7, 4, &mut rng);
+        let f = thin_qr(&a);
+        for i in 0..4 {
+            for j in 0..i {
+                assert!(f.r[(i, j)].abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_planted_model() {
+        cases(15, 34, |rng, _| {
+            let d = crate::testing::gen_dim(rng, 1, 8);
+            let n = d + 5 + crate::testing::gen_dim(rng, 0, 20);
+            let a = Matrix::gaussian(n, d, rng);
+            let x_true: Vec<f64> = (0..d).map(|i| (i % 3) as f64 - 1.0).collect();
+            let b = a.matvec(&x_true);
+            let x = thin_qr(&a).solve(&b);
+            assert_allclose(&x, &x_true, 1e-7);
+        });
+    }
+
+    #[test]
+    fn leverage_scores_sum_to_rank() {
+        let mut rng = Xoshiro256::new(35);
+        let a = Matrix::gaussian(20, 6, &mut rng);
+        let scores = thin_qr(&a).leverage_scores();
+        assert_eq!(scores.len(), 20);
+        assert_close(scores.iter().sum::<f64>(), 6.0, 1e-9);
+        for &s in &scores {
+            assert!((0.0..=1.0 + 1e-9).contains(&s), "score={s}");
+        }
+    }
+
+    #[test]
+    fn leverage_of_identity_rows_is_one() {
+        // A = I (n = d): every row has leverage exactly 1.
+        let a = Matrix::eye(5);
+        let scores = thin_qr(&a).leverage_scores();
+        assert_allclose(&scores, &[1.0; 5], 1e-10);
+    }
+}

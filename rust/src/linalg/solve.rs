@@ -1,0 +1,136 @@
+//! High-level least-squares solvers used throughout the baselines and the
+//! experiment harness.
+
+use super::cholesky::Cholesky;
+use super::matrix::Matrix;
+use super::qr::thin_qr;
+
+/// How to solve the least-squares problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LstsqMethod {
+    /// Normal equations + Cholesky (fast, squares the condition number).
+    NormalEquations,
+    /// Householder QR (slower, numerically robust).
+    Qr,
+}
+
+/// Solve `min_theta ||X theta - y||_2^2 + ridge * ||theta||^2`.
+///
+/// `ridge = 0` gives ordinary least squares; the normal-equation path adds
+/// a tiny jitter retry if the Gram matrix is numerically singular (e.g. in
+/// the undersampled n < d regime the sampling baselines hit around the
+/// double-descent peak).
+pub fn lstsq(x: &Matrix, y: &[f64], ridge: f64, method: LstsqMethod) -> Vec<f64> {
+    assert_eq!(x.rows(), y.len(), "row/label mismatch");
+    match method {
+        LstsqMethod::Qr if x.rows() >= x.cols() && ridge == 0.0 => thin_qr(x).solve(y),
+        _ => {
+            let d = x.cols();
+            let mut gram = x.gram();
+            let xty = x.matvec_t(y);
+            let mut jitter = ridge;
+            for attempt in 0..6 {
+                let mut a = gram.clone();
+                if jitter > 0.0 {
+                    for i in 0..d {
+                        a[(i, i)] += jitter;
+                    }
+                }
+                match Cholesky::factor(&a) {
+                    Ok(ch) => return ch.solve(&xty),
+                    Err(_) => {
+                        // Escalate jitter: scale with the Gram diagonal so the
+                        // regularization is dimensionally sensible.
+                        let diag_mean = (0..d).map(|i| gram[(i, i)]).sum::<f64>() / d.max(1) as f64;
+                        jitter = (diag_mean.max(1e-12)) * 1e-10 * 10f64.powi(attempt);
+                    }
+                }
+            }
+            // Degenerate fallback: heavy ridge.
+            for i in 0..d {
+                gram[(i, i)] += 1e-3;
+            }
+            Cholesky::factor(&gram)
+                .expect("heavily ridged Gram must be SPD")
+                .solve(&xty)
+        }
+    }
+}
+
+/// Mean squared error of a linear model `theta` on `(X, y)`.
+pub fn mse(x: &Matrix, y: &[f64], theta: &[f64]) -> f64 {
+    assert_eq!(x.rows(), y.len());
+    let pred = x.matvec(theta);
+    let n = y.len().max(1) as f64;
+    pred.iter()
+        .zip(y)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, cases};
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    #[test]
+    fn both_methods_recover_planted_model() {
+        cases(10, 41, |rng, _| {
+            let d = crate::testing::gen_dim(rng, 2, 8);
+            let n = d * 5 + 10;
+            let x = Matrix::gaussian(n, d, rng);
+            let theta: Vec<f64> = (0..d).map(|i| i as f64 * 0.5 - 1.0).collect();
+            let y = x.matvec(&theta);
+            let t1 = lstsq(&x, &y, 0.0, LstsqMethod::NormalEquations);
+            let t2 = lstsq(&x, &y, 0.0, LstsqMethod::Qr);
+            assert_allclose(&t1, &theta, 1e-6);
+            assert_allclose(&t2, &theta, 1e-6);
+        });
+    }
+
+    #[test]
+    fn ridge_shrinks_solution() {
+        let mut rng = Xoshiro256::new(42);
+        let x = Matrix::gaussian(50, 4, &mut rng);
+        let theta: Vec<f64> = vec![2.0, -1.0, 0.5, 3.0];
+        let y: Vec<f64> = x
+            .matvec(&theta)
+            .iter()
+            .map(|v| v + 0.01 * rng.gaussian())
+            .collect();
+        let t0 = lstsq(&x, &y, 0.0, LstsqMethod::NormalEquations);
+        let t_big = lstsq(&x, &y, 1e4, LstsqMethod::NormalEquations);
+        let n0: f64 = t0.iter().map(|v| v * v).sum();
+        let nb: f64 = t_big.iter().map(|v| v * v).sum();
+        assert!(nb < n0 * 0.1, "ridge failed to shrink: {nb} vs {n0}");
+    }
+
+    #[test]
+    fn singular_gram_does_not_panic() {
+        // n < d: Gram is rank deficient; jitter path must kick in.
+        let mut rng = Xoshiro256::new(43);
+        let x = Matrix::gaussian(3, 8, &mut rng);
+        let y = vec![1.0, 2.0, 3.0];
+        let t = lstsq(&x, &y, 0.0, LstsqMethod::NormalEquations);
+        assert_eq!(t.len(), 8);
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn mse_zero_for_exact_fit() {
+        let mut rng = Xoshiro256::new(44);
+        let x = Matrix::gaussian(20, 3, &mut rng);
+        let theta = vec![1.0, 2.0, 3.0];
+        let y = x.matvec(&theta);
+        assert!(mse(&x, &y, &theta) < 1e-18);
+    }
+
+    #[test]
+    fn mse_positive_for_wrong_model() {
+        let x = Matrix::eye(3);
+        let y = vec![1.0, 1.0, 1.0];
+        assert!(mse(&x, &y, &[0.0, 0.0, 0.0]) > 0.9);
+    }
+}

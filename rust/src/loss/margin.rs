@@ -1,0 +1,141 @@
+//! The STORM classification margin loss (paper §4.2, Theorem 3):
+//!
+//! ```text
+//! phi_p(t) = 2^p (1 - acos(-t)/pi)^p,   t = y <theta, x>  in [-1, 1]
+//! ```
+//!
+//! Classification-calibrated: convex for p >= 2 with `phi'(0) = -1/pi *
+//! 2^p * p * (1/2)^{p-1} < 0` — misclassified points (t < 0) are penalized
+//! more than correctly classified ones.
+
+use crate::util::mathx::{srp_collision, srp_collision_deriv};
+
+/// The margin loss `phi_p(t)` with the paper's `2^p` normalization.
+#[inline]
+pub fn margin_loss(t: f64, p: u32) -> f64 {
+    (1u64 << p) as f64 * srp_collision(-t).powi(p as i32)
+}
+
+/// d/dt of the margin loss.
+#[inline]
+pub fn margin_loss_deriv(t: f64, p: u32) -> f64 {
+    // d/dt f(-t)^p = -p f(-t)^{p-1} f'(-t)
+    -((1u64 << p) as f64)
+        * p as f64
+        * srp_collision(-t).powi(p as i32 - 1)
+        * srp_collision_deriv(-t)
+}
+
+/// Exact margin empirical risk `mean_i phi_p(y_i <theta, x_i>)`.
+pub fn exact_margin_risk(theta: &[f64], xs: &[Vec<f64>], ys: &[f64], p: u32) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    xs.iter()
+        .zip(ys)
+        .map(|(x, y)| margin_loss(y * crate::util::mathx::dot(theta, x), p))
+        .sum::<f64>()
+        / xs.len() as f64
+}
+
+/// 0-1 classification accuracy of a hyperplane model.
+pub fn accuracy(theta: &[f64], xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let correct = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, y)| crate::util::mathx::dot(theta, x) * **y > 0.0)
+        .count();
+    correct as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn calibrated_negative_slope_at_origin() {
+        // Necessary & sufficient condition for classification calibration
+        // of a convex margin loss: phi'(0) < 0.
+        for p in [1, 2, 4, 8] {
+            assert!(margin_loss_deriv(0.0, p) < 0.0, "p={p}");
+        }
+        // Paper's appendix computes the p-scaled value at the origin; for
+        // phi(t) = 2^p f(-t)^p it is -2^p p (1/2)^{p-1} / pi.
+        let p = 4u32;
+        let want = -(16.0) * 4.0 * 0.125 / std::f64::consts::PI;
+        assert_close(margin_loss_deriv(0.0, p), want, 1e-9);
+    }
+
+    #[test]
+    fn monotone_decreasing_in_margin() {
+        for p in [1, 2, 4] {
+            let mut prev = f64::INFINITY;
+            for i in 0..=20 {
+                let t = -1.0 + 0.1 * i as f64;
+                let v = margin_loss(t, p);
+                assert!(v <= prev + 1e-12, "p={p} t={t}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn convex_for_p_ge_2() {
+        for p in [2, 4, 8] {
+            let h = 0.01;
+            let mut t = -0.97;
+            while t <= 0.97 {
+                let second = margin_loss(t - h, p) - 2.0 * margin_loss(t, p) + margin_loss(t + h, p);
+                assert!(second >= -1e-8, "p={p} t={t} second={second}");
+                t += 0.02;
+            }
+        }
+    }
+
+    #[test]
+    fn endpoint_values() {
+        // t = -1 (worst): f(1)^p = 1 -> 2^p. t = 1 (best): f(-1)^p = 0.
+        for p in [1, 2, 4] {
+            assert_close(margin_loss(-1.0, p), (1u64 << p) as f64, 1e-9);
+            assert_close(margin_loss(1.0, p), 0.0, 1e-9);
+        }
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        cases(50, 3, |rng, _| {
+            let p = 2 + (rng.next_u64() % 6) as u32;
+            let t = rng.uniform_range(-0.9, 0.9);
+            let h = 1e-6;
+            let fd = (margin_loss(t + h, p) - margin_loss(t - h, p)) / (2.0 * h);
+            assert_close(margin_loss_deriv(t, p), fd, 1e-3);
+        });
+    }
+
+    #[test]
+    fn accuracy_counts_correct_side() {
+        let xs = vec![vec![1.0, 0.0], vec![-1.0, 0.0], vec![0.5, 0.0]];
+        let ys = vec![1.0, -1.0, -1.0];
+        assert_close(accuracy(&[1.0, 0.0], &xs, &ys), 2.0 / 3.0, 1e-12);
+    }
+
+    #[test]
+    fn exact_risk_separable_data_prefers_separator() {
+        // Risk of the true separator should be below a random direction.
+        let xs = vec![
+            vec![0.5, 0.1],
+            vec![0.6, -0.1],
+            vec![-0.5, 0.05],
+            vec![-0.55, -0.03],
+        ];
+        let ys = vec![1.0, 1.0, -1.0, -1.0];
+        let good = exact_margin_risk(&[0.9, 0.0], &xs, &ys, 2);
+        let bad = exact_margin_risk(&[0.0, 0.9], &xs, &ys, 2);
+        assert!(good < bad);
+    }
+}

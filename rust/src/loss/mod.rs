@@ -1,0 +1,12 @@
+//! Surrogate and reference loss functions.
+//!
+//! * [`prp_loss`] — the paper's PRP regression surrogate `g` (Theorem 2):
+//!   closed form, gradient, curvature factor, plus the exact dataset-level
+//!   surrogate risk used to validate the sketch estimator;
+//! * [`margin`] — the classification-calibrated margin loss (Theorem 3);
+//! * [`reference`] — classical losses (L2, hinge, logistic, squared hinge)
+//!   for the Figure-6 comparison and exact-ERM baselines.
+
+pub mod prp_loss;
+pub mod margin;
+pub mod reference;

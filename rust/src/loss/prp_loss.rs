@@ -1,0 +1,191 @@
+//! The PRP surrogate loss for linear regression (paper §4.1, Theorem 2):
+//!
+//! ```text
+//! g_p(t) = 1/2 (1 - acos(t)/pi)^p + 1/2 (1 - acos(-t)/pi)^p,
+//! t = <[theta, -1], [x, y]>
+//! ```
+//!
+//! Properties proved in the paper and verified by the tests here:
+//! symmetric in `t`, convex for p >= 2, minimized exactly at `t = 0` (the
+//! least-squares surface), with local curvature maximized near p = 4
+//! (Figure 3).
+
+use crate::util::mathx::{dot, srp_collision, srp_collision_deriv};
+
+/// Single-sided collision term `f(t) = (1 - acos(t)/pi)^p`.
+#[inline]
+pub fn collision_power(t: f64, p: u32) -> f64 {
+    srp_collision(t).powi(p as i32)
+}
+
+/// The PRP surrogate loss `g_p(t)`.
+#[inline]
+pub fn prp_surrogate(t: f64, p: u32) -> f64 {
+    0.5 * collision_power(t, p) + 0.5 * collision_power(-t, p)
+}
+
+/// d/dt of the surrogate: `p/2 (f(t)^{p-1} - f(-t)^{p-1}) f'(t)` with
+/// `f'(t) = 1/(pi sqrt(1-t^2))` shared by both terms (paper, proof of
+/// Thm 2).
+#[inline]
+pub fn prp_surrogate_deriv(t: f64, p: u32) -> f64 {
+    let fp = srp_collision(t);
+    let fm = srp_collision(-t);
+    0.5 * p as f64
+        * (fp.powi(p as i32 - 1) - fm.powi(p as i32 - 1))
+        * srp_collision_deriv(t)
+}
+
+/// Loss "sharpness" at offset `t` — the paper's Figure 3(b) quantity:
+/// the slope magnitude of the surrogate at `<theta, y[x,-1]> = t`.
+#[inline]
+pub fn prp_slope_at(t: f64, p: u32) -> f64 {
+    prp_surrogate_deriv(t, p).abs()
+}
+
+/// Exact surrogate empirical risk over a dataset:
+/// `mean_i g_p(<theta~, z_i>)`. This is the quantity the STORM sketch
+/// estimates; the tests cross-check the two.
+pub fn exact_surrogate_risk(theta_tilde: &[f64], examples: &[Vec<f64>], p: u32) -> f64 {
+    assert!(!examples.is_empty());
+    examples
+        .iter()
+        .map(|z| prp_surrogate(dot(theta_tilde, z), p))
+        .sum::<f64>()
+        / examples.len() as f64
+}
+
+/// Gradient of the exact surrogate risk w.r.t. `theta~` (used by the
+/// exact-gradient baseline; the gradient w.r.t. the *last* coordinate is
+/// discarded by the optimizer's projection step):
+/// `mean_i g'(t_i) z_i`.
+pub fn exact_surrogate_grad(theta_tilde: &[f64], examples: &[Vec<f64>], p: u32) -> Vec<f64> {
+    let mut grad = vec![0.0; theta_tilde.len()];
+    for z in examples {
+        let t = dot(theta_tilde, z);
+        let gp = prp_surrogate_deriv(t, p);
+        for (gi, zi) in grad.iter_mut().zip(z) {
+            *gi += gp * zi;
+        }
+    }
+    for gi in &mut grad {
+        *gi /= examples.len() as f64;
+    }
+    grad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, cases};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn symmetric_in_t() {
+        for p in [1, 2, 4, 8, 16] {
+            for i in 0..20 {
+                let t = i as f64 * 0.05;
+                assert_close(prp_surrogate(t, p), prp_surrogate(-t, p), 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn minimized_at_zero_for_p_ge_2() {
+        for p in [2, 3, 4, 8, 16] {
+            let g0 = prp_surrogate(0.0, p);
+            for i in 1..20 {
+                let t = i as f64 * 0.05;
+                assert!(
+                    prp_surrogate(t, p) > g0,
+                    "p={p} t={t}: {} !> {}",
+                    prp_surrogate(t, p),
+                    g0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p_equals_1_is_flat() {
+        // Theorem 2: gradient is identically zero when p = 1
+        // (f(t) + f(-t) = 1 for the single-bit SRP).
+        for i in 0..20 {
+            let t = -0.95 + i as f64 * 0.1;
+            assert_close(prp_surrogate(t, 1), 0.5, 1e-12);
+            assert_close(prp_surrogate_deriv(t, 1), 0.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn convex_for_p_ge_2() {
+        // Discrete second difference >= 0 across the domain.
+        for p in [2, 4, 8] {
+            let h = 0.01;
+            let mut t = -0.97;
+            while t <= 0.97 {
+                let second =
+                    prp_surrogate(t - h, p) - 2.0 * prp_surrogate(t, p) + prp_surrogate(t + h, p);
+                assert!(second >= -1e-10, "p={p} t={t} second={second}");
+                t += 0.02;
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        cases(100, 5, |rng, _| {
+            let p = 2 + (rng.next_u64() % 14) as u32;
+            let t = rng.uniform_range(-0.9, 0.9);
+            let h = 1e-6;
+            let fd = (prp_surrogate(t + h, p) - prp_surrogate(t - h, p)) / (2.0 * h);
+            assert_close(prp_surrogate_deriv(t, p), fd, 1e-4);
+        });
+    }
+
+    #[test]
+    fn p4_has_steepest_slope_near_optimum() {
+        // Figure 3(b): at t = 0.1 the slope peaks at p = 4 among powers of 2.
+        let slopes: Vec<(u32, f64)> = [1u32, 2, 4, 8, 16]
+            .iter()
+            .map(|&p| (p, prp_slope_at(0.1, p)))
+            .collect();
+        let best = slopes
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(best.0, 4, "slopes: {slopes:?}");
+    }
+
+    #[test]
+    fn exact_risk_and_grad_consistent() {
+        cases(30, 6, |rng, _| {
+            let d = crate::testing::gen_dim(rng, 2, 6);
+            let examples: Vec<Vec<f64>> = (0..20)
+                .map(|_| crate::testing::gen_ball_point(rng, d, 0.9))
+                .collect();
+            let theta = crate::testing::gen_ball_point(rng, d, 0.5);
+            let g = exact_surrogate_grad(&theta, &examples, 4);
+            // Directional finite difference.
+            let dir = rng.sphere_vec(d, 1.0);
+            let h = 1e-6;
+            let tp: Vec<f64> = theta.iter().zip(&dir).map(|(a, b)| a + h * b).collect();
+            let tm: Vec<f64> = theta.iter().zip(&dir).map(|(a, b)| a - h * b).collect();
+            let fd = (exact_surrogate_risk(&tp, &examples, 4)
+                - exact_surrogate_risk(&tm, &examples, 4))
+                / (2.0 * h);
+            assert_close(dot(&g, &dir), fd, 1e-4);
+        });
+    }
+
+    #[test]
+    fn surrogate_bounded_in_unit_interval() {
+        for p in [1, 2, 4, 8] {
+            for i in 0..=40 {
+                let t = -1.0 + i as f64 * 0.05;
+                let g = prp_surrogate(t, p);
+                assert!((0.0..=1.0).contains(&g), "p={p} t={t} g={g}");
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Classical reference losses, for the Figure-6 comparison and for the
+//! exact-ERM baselines the paper measures STORM against.
+
+/// Squared (L2) loss on the residual `r = h(x) - y`.
+#[inline]
+pub fn l2(r: f64) -> f64 {
+    r * r
+}
+
+/// Hinge loss on the margin `t = y h(x)`.
+#[inline]
+pub fn hinge(t: f64) -> f64 {
+    (1.0 - t).max(0.0)
+}
+
+/// Squared hinge loss.
+#[inline]
+pub fn squared_hinge(t: f64) -> f64 {
+    hinge(t).powi(2)
+}
+
+/// Logistic loss `log(1 + e^{-t})`, numerically stabilized.
+#[inline]
+pub fn logistic(t: f64) -> f64 {
+    if t > 0.0 {
+        (-t).exp().ln_1p()
+    } else {
+        -t + t.exp().ln_1p()
+    }
+}
+
+/// Zero-one loss on the margin.
+#[inline]
+pub fn zero_one(t: f64) -> f64 {
+    if t > 0.0 {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+/// Mean L2 empirical risk of a linear model over augmented examples
+/// `z = [x, y]`: `mean_i <theta~, z_i>^2` with `theta~ = [theta, -1]`.
+pub fn exact_l2_risk(theta_tilde: &[f64], examples: &[Vec<f64>]) -> f64 {
+    assert!(!examples.is_empty());
+    examples
+        .iter()
+        .map(|z| l2(crate::util::mathx::dot(theta_tilde, z)))
+        .sum::<f64>()
+        / examples.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn l2_parabola() {
+        assert_eq!(l2(0.0), 0.0);
+        assert_eq!(l2(2.0), 4.0);
+        assert_eq!(l2(-2.0), 4.0);
+    }
+
+    #[test]
+    fn hinge_piecewise() {
+        assert_eq!(hinge(2.0), 0.0);
+        assert_eq!(hinge(1.0), 0.0);
+        assert_close(hinge(0.0), 1.0, 1e-12);
+        assert_close(hinge(-1.0), 2.0, 1e-12);
+        assert_close(squared_hinge(-1.0), 4.0, 1e-12);
+    }
+
+    #[test]
+    fn logistic_stable_both_tails() {
+        assert!(logistic(100.0) < 1e-10);
+        assert_close(logistic(-100.0), 100.0, 1e-6);
+        assert_close(logistic(0.0), std::f64::consts::LN_2, 1e-12);
+    }
+
+    #[test]
+    fn zero_one_threshold() {
+        assert_eq!(zero_one(0.5), 0.0);
+        assert_eq!(zero_one(0.0), 1.0);
+        assert_eq!(zero_one(-0.5), 1.0);
+    }
+
+    #[test]
+    fn margin_losses_upper_bound_zero_one() {
+        // Calibration sanity: hinge and logistic dominate 0-1 (scaled).
+        for i in 0..40 {
+            let t = -2.0 + 0.1 * i as f64;
+            assert!(hinge(t) + 1e-12 >= zero_one(t));
+            assert!(logistic(t) / std::f64::consts::LN_2 + 1e-12 >= zero_one(t));
+        }
+    }
+
+    #[test]
+    fn exact_l2_risk_matches_mse_formulation() {
+        // <[theta,-1],[x,y]>^2 = (pred - y)^2.
+        let examples = vec![vec![1.0, 2.0, 3.0], vec![0.5, -1.0, 0.0]];
+        let theta_tilde = vec![1.0, 1.0, -1.0];
+        let want = ((1.0 + 2.0 - 3.0f64).powi(2) + (0.5 - 1.0 - 0.0f64).powi(2)) / 2.0;
+        assert_close(exact_l2_risk(&theta_tilde, &examples), want, 1e-12);
+    }
+}

@@ -1,0 +1,214 @@
+//! Asymmetric inner-product LSH (Shrivastava & Li, 2014).
+//!
+//! SRP collision probability is monotone in the *angle*; for ERM we need
+//! it monotone in the raw inner product `<theta, z>`. The trick (paper
+//! §2.2): append coordinates so both vectors land on the unit sphere
+//! without changing their inner product —
+//!
+//! * data    `z -> [z, 0, sqrt(1 - ||z||^2)]`
+//! * query   `q -> [q, sqrt(1 - ||q||^2), 0]`
+//!
+//! Then `<T_q(q), T_d(z)> = <q, z>` and both transformed vectors are unit
+//! norm, so the SRP collision probability becomes
+//! `(1 - acos(<q, z>)/pi)^p` — exactly the `f(a, b)` of Theorem 2. Both
+//! inputs must lie inside the unit ball (the dataset scaler guarantees
+//! this for data; the optimizer clips queries).
+
+use super::{LshFunction};
+use crate::util::mathx::{dot, srp_collision};
+use super::srp::SignedRandomProjection;
+
+/// Which side of the asymmetric pair a vector is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// Stream data (gets the `[z, 0, tail]` transform).
+    Data,
+    /// Query / parameter vector (gets the `[q, tail, 0]` transform).
+    Query,
+}
+
+/// Apply the MIPS augmentation. Panics if `||v|| > 1 + eps` (callers must
+/// scale first); tiny overshoots from rounding are clamped.
+pub fn augment(v: &[f64], side: Side) -> Vec<f64> {
+    let sq: f64 = v.iter().map(|x| x * x).sum();
+    assert!(
+        sq <= 1.0 + 1e-9,
+        "asymmetric LSH input must lie in the unit ball (||v||^2 = {sq})"
+    );
+    let tail = (1.0 - sq).max(0.0).sqrt();
+    let mut out = Vec::with_capacity(v.len() + 2);
+    out.extend_from_slice(v);
+    match side {
+        Side::Data => {
+            out.push(0.0);
+            out.push(tail);
+        }
+        Side::Query => {
+            out.push(tail);
+            out.push(0.0);
+        }
+    }
+    out
+}
+
+/// An asymmetric inner-product hash: a p-bit SRP over the augmented space
+/// `R^{d+2}`, with side-specific preprocessing.
+#[derive(Clone, Debug)]
+pub struct AsymmetricInnerProductHash {
+    srp: SignedRandomProjection,
+    dim: usize,
+}
+
+impl AsymmetricInnerProductHash {
+    pub fn new(dim: usize, p: u32, seed: u64) -> Self {
+        AsymmetricInnerProductHash {
+            srp: SignedRandomProjection::new(dim + 2, p, seed),
+            dim,
+        }
+    }
+
+    /// Hash a vector on the given side.
+    pub fn hash_side(&self, v: &[f64], side: Side) -> usize {
+        assert_eq!(v.len(), self.dim, "asym hash dim mismatch");
+        self.srp.hash(&augment(v, side))
+    }
+
+    /// Hash a vector that has already been augmented (hot path: the
+    /// augmentation is shared across every row of a sketch, so callers
+    /// compute it once per insert/query instead of once per row).
+    #[inline]
+    pub fn hash_augmented(&self, aug: &[f64]) -> usize {
+        debug_assert_eq!(aug.len(), self.dim + 2);
+        self.srp.hash(aug)
+    }
+
+    /// Bucket of the *negated* data vector (used by PRP): the augmented
+    /// tail coordinate is unchanged under `z -> -z` **only in the leading
+    /// d coordinates**, so this is NOT the plain bitwise complement — we
+    /// hash explicitly.
+    pub fn hash_data_negated(&self, v: &[f64]) -> usize {
+        let neg: Vec<f64> = v.iter().map(|x| -x).collect();
+        self.hash_side(&neg, Side::Data)
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.srp.bits()
+    }
+
+    pub fn range(&self) -> usize {
+        self.srp.range()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Underlying SRP (exposed for the AOT compile path, which must embed
+    /// identical hyperplanes into the XLA artifact).
+    pub fn srp(&self) -> &SignedRandomProjection {
+        &self.srp
+    }
+
+    /// Collision probability between a query `q` and data `z`, both inside
+    /// the unit ball: `(1 - acos(<q, z>)/pi)^p` — monotone *increasing* in
+    /// the inner product, unnormalized.
+    pub fn collision_probability_qd(&self, q: &[f64], z: &[f64]) -> f64 {
+        let t = dot(q, z).clamp(-1.0, 1.0);
+        srp_collision(t).powi(self.bits() as i32)
+    }
+}
+
+/// Adapter so an asymmetric hash can be used where a plain (data-side)
+/// `LshFunction` is expected — e.g. when feeding the generic RACE sketch.
+pub struct DataSideHash<'a>(pub &'a AsymmetricInnerProductHash);
+
+impl LshFunction for DataSideHash<'_> {
+    fn hash(&self, x: &[f64]) -> usize {
+        self.0.hash_side(x, Side::Data)
+    }
+
+    fn range(&self) -> usize {
+        self.0.range()
+    }
+
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, cases, gen_ball_point};
+    use crate::util::mathx::norm2;
+
+    #[test]
+    fn augmentation_preserves_inner_product_and_normalizes() {
+        cases(50, 1, |rng, _| {
+            let d = crate::testing::gen_dim(rng, 1, 10);
+            let q = gen_ball_point(rng, d, 0.95);
+            let z = gen_ball_point(rng, d, 0.95);
+            let aq = augment(&q, Side::Query);
+            let az = augment(&z, Side::Data);
+            assert_close(dot(&aq, &az), dot(&q, &z), 1e-9);
+            assert_close(norm2(&aq), 1.0, 1e-9);
+            assert_close(norm2(&az), 1.0, 1e-9);
+        });
+    }
+
+    #[test]
+    fn collision_matches_empirical() {
+        let q = vec![0.5, 0.2];
+        let z = vec![-0.3, 0.6];
+        let probe = AsymmetricInnerProductHash::new(2, 2, 0);
+        let analytic = probe.collision_probability_qd(&q, &z);
+        let trials = 20_000;
+        let mut hits = 0;
+        for s in 0..trials {
+            let h = AsymmetricInnerProductHash::new(2, 2, s as u64);
+            if h.hash_side(&q, Side::Query) == h.hash_side(&z, Side::Data) {
+                hits += 1;
+            }
+        }
+        assert_close(hits as f64 / trials as f64, analytic, 0.015);
+    }
+
+    #[test]
+    fn collision_monotone_in_inner_product() {
+        let h = AsymmetricInnerProductHash::new(1, 4, 3);
+        let q = vec![0.9];
+        let mut prev = -1.0;
+        for i in 0..19 {
+            let z = vec![-0.9 + 0.1 * i as f64];
+            let k = h.collision_probability_qd(&q, &z);
+            assert!(k >= prev, "not monotone at i={i}");
+            prev = k;
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn outside_unit_ball_rejected() {
+        augment(&[1.5, 0.0], Side::Data);
+    }
+
+    #[test]
+    fn data_side_adapter_consistent() {
+        let h = AsymmetricInnerProductHash::new(3, 4, 7);
+        let z = vec![0.1, -0.2, 0.3];
+        let adapter = DataSideHash(&h);
+        assert_eq!(adapter.hash(&z), h.hash_side(&z, Side::Data));
+        assert_eq!(adapter.range(), 16);
+        assert_eq!(adapter.dim(), 3);
+    }
+
+    #[test]
+    fn negated_hash_matches_explicit_negation() {
+        cases(30, 8, |rng, case| {
+            let h = AsymmetricInnerProductHash::new(4, 3, case as u64);
+            let z = gen_ball_point(rng, 4, 0.9);
+            let neg: Vec<f64> = z.iter().map(|v| -v).collect();
+            assert_eq!(h.hash_data_negated(&z), h.hash_side(&neg, Side::Data));
+        });
+    }
+}

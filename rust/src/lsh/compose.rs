@@ -1,0 +1,115 @@
+//! Injective LSH composition — the multiplication closure of Theorem 1.
+//!
+//! Given independent LSH functions `l1, l2` with collision probabilities
+//! `k1, k2`, the composed function `l(x) = pi(l1(x), l2(x))` with `pi`
+//! injective collides iff *both* constituents collide, so its collision
+//! probability is the product `k1 * k2`. The paper suggests
+//! `pi(a, b) = p1^a p2^b`; we use the equivalent (and overflow-free)
+//! row-major pairing `a * range2 + b`, which is injective on
+//! `[0, range1) x [0, range2)`.
+
+use super::{CollisionProbability, LshFunction};
+
+/// Composition of two LSH functions via an injective pairing.
+pub struct ComposedHash<A, B> {
+    a: A,
+    b: B,
+}
+
+impl<A: LshFunction, B: LshFunction> ComposedHash<A, B> {
+    pub fn new(a: A, b: B) -> Self {
+        assert_eq!(a.dim(), b.dim(), "composed hashes must share input dim");
+        ComposedHash { a, b }
+    }
+}
+
+impl<A: LshFunction, B: LshFunction> LshFunction for ComposedHash<A, B> {
+    fn hash(&self, x: &[f64]) -> usize {
+        self.a.hash(x) * self.b.range() + self.b.hash(x)
+    }
+
+    fn range(&self) -> usize {
+        self.a.range() * self.b.range()
+    }
+
+    fn dim(&self) -> usize {
+        self.a.dim()
+    }
+}
+
+impl<A, B> CollisionProbability for ComposedHash<A, B>
+where
+    A: LshFunction + CollisionProbability,
+    B: LshFunction + CollisionProbability,
+{
+    fn collision_probability(&self, x: &[f64], y: &[f64]) -> f64 {
+        self.a.collision_probability(x, y) * self.b.collision_probability(x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::empirical_collision;
+    use crate::lsh::pstable::PStableHash;
+    use crate::lsh::srp::SignedRandomProjection;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn pairing_is_injective() {
+        let a = SignedRandomProjection::new(3, 2, 0);
+        let b = SignedRandomProjection::new(3, 3, 1);
+        let c = ComposedHash::new(a, b);
+        assert_eq!(c.range(), 4 * 8);
+        // Exhaustively: distinct (ha, hb) pairs map to distinct outputs.
+        let mut seen = std::collections::BTreeSet::new();
+        for ha in 0..4 {
+            for hb in 0..8 {
+                assert!(seen.insert(ha * 8 + hb));
+            }
+        }
+        assert_eq!(seen.len(), 32);
+    }
+
+    #[test]
+    fn composed_collision_is_product_srp_x_srp() {
+        let x = vec![1.0, 0.0, 0.0];
+        let y = vec![0.7, 0.7141428, 0.0];
+        let make = |seed: u64| {
+            ComposedHash::new(
+                SignedRandomProjection::new(3, 1, seed.wrapping_mul(2).wrapping_add(1)),
+                SignedRandomProjection::new(3, 1, seed.wrapping_mul(2).wrapping_add(2)),
+            )
+        };
+        let probe = make(0);
+        let analytic = probe.collision_probability(&x, &y);
+        let emp = empirical_collision(make, &x, &y, 30_000);
+        assert_close(emp, analytic, 0.015);
+    }
+
+    #[test]
+    fn composed_collision_is_product_srp_x_pstable() {
+        // Mixed families — Theorem 1 allows any independent pair.
+        let x = vec![0.2, -0.4];
+        let y = vec![0.5, 0.3];
+        let make = |seed: u64| {
+            ComposedHash::new(
+                SignedRandomProjection::new(2, 1, seed.wrapping_mul(2).wrapping_add(100)),
+                PStableHash::new(2, 2.0, 64, seed.wrapping_mul(2).wrapping_add(200)),
+            )
+        };
+        let probe = make(0);
+        let analytic = probe.collision_probability(&x, &y);
+        let emp = empirical_collision(make, &x, &y, 30_000);
+        // p-stable folding adds a small positive bias; loose tolerance.
+        assert_close(emp, analytic, 0.02);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_rejected() {
+        let a = SignedRandomProjection::new(2, 1, 0);
+        let b = SignedRandomProjection::new(3, 1, 1);
+        let _ = ComposedHash::new(a, b);
+    }
+}

@@ -1,0 +1,62 @@
+//! Locality-sensitive hashing.
+//!
+//! The sketch is only as good as its hash family: STORM's loss estimators
+//! *are* LSH collision probabilities (Theorem 1). This module provides:
+//!
+//! * [`srp`] — signed random projections (p-bit angular LSH), the paper's
+//!   workhorse family;
+//! * [`asym`] — the asymmetric inner-product transform (Shrivastava & Li
+//!   MIPS hashing) that lets a query `theta` collide with data `[x, y]`
+//!   according to their raw inner product;
+//! * [`prp`] — paired random projections: the paper's regression
+//!   construction that inserts `z` and `-z` so the combined collision
+//!   probability is symmetric in `|<theta, z>|`;
+//! * [`pstable`] — p-stable (Euclidean) LSH, used by the general RACE
+//!   sketch for KDE-style estimates and in composition tests;
+//! * [`compose`] — injective composition of two LSH functions whose
+//!   collision probability is the *product* of the constituents
+//!   (Theorem 1's multiplication closure).
+
+pub mod srp;
+pub mod asym;
+pub mod prp;
+pub mod pstable;
+pub mod compose;
+
+/// A locality-sensitive hash function mapping vectors to bucket indices in
+/// `[0, range)`.
+pub trait LshFunction: Send + Sync {
+    /// Hash one vector.
+    fn hash(&self, x: &[f64]) -> usize;
+
+    /// Number of distinct hash values.
+    fn range(&self) -> usize;
+
+    /// Input dimensionality this function expects.
+    fn dim(&self) -> usize;
+}
+
+/// A family with a closed-form collision probability `k(x, y)` — the
+/// quantity STORM sketches estimate sums of.
+pub trait CollisionProbability {
+    /// `Pr[l(x) = l(y)]` under a random draw of `l` from the family.
+    fn collision_probability(&self, x: &[f64], y: &[f64]) -> f64;
+}
+
+/// Empirically estimate a collision probability by drawing `trials`
+/// functions from a family constructor (test helper, exposed because the
+/// python oracle cross-checks use it too).
+pub fn empirical_collision<F, L>(mut make: F, x: &[f64], y: &[f64], trials: usize) -> f64
+where
+    F: FnMut(u64) -> L,
+    L: LshFunction,
+{
+    let mut hits = 0usize;
+    for t in 0..trials {
+        let l = make(t as u64);
+        if l.hash(x) == l.hash(y) {
+            hits += 1;
+        }
+    }
+    hits as f64 / trials as f64
+}

@@ -1,0 +1,167 @@
+//! Paired random projections (PRP) — the paper's construction for a
+//! regression surrogate loss (Section 4.1).
+//!
+//! A PRP hash is an asymmetric inner-product hash where each *data* point
+//! `z = [x, y]` is inserted **twice**: once as `z` and once as `-z`. The
+//! query `theta~ = [theta, -1]` is hashed once. The expected (normalized)
+//! count at the queried bucket is then
+//!
+//! ```text
+//! E[count]/n = k(theta~, z) + k(theta~, -z)
+//!            = (1 - acos(+t)/pi)^p + (1 - acos(-t)/pi)^p,  t = <theta~, z>
+//! ```
+//!
+//! which is `2 * g(theta~, z)` — twice the paper's surrogate loss (the
+//! paper's definition carries the 1/2 normalization; we keep it in the
+//! estimator). It is symmetric in `t` and, for p >= 2, convex with its
+//! minimum exactly where `<theta~, z> = 0`, i.e. on the least-squares
+//! regression surface (Theorem 2).
+
+use super::asym::{AsymmetricInnerProductHash, Side};
+
+/// A PRP hash function over `R^dim` (dim includes the appended label
+/// coordinate, i.e. `dim = d + 1` for a d-feature regression problem).
+#[derive(Clone, Debug)]
+pub struct PairedRandomProjection {
+    inner: AsymmetricInnerProductHash,
+}
+
+impl PairedRandomProjection {
+    pub fn new(dim: usize, p: u32, seed: u64) -> Self {
+        PairedRandomProjection {
+            inner: AsymmetricInnerProductHash::new(dim, p, seed),
+        }
+    }
+
+    /// The two buckets a data point updates: `hash(z)` and `hash(-z)`.
+    pub fn insert_buckets(&self, z: &[f64]) -> (usize, usize) {
+        (
+            self.inner.hash_side(z, Side::Data),
+            self.inner.hash_data_negated(z),
+        )
+    }
+
+    /// Hot-path variant of [`Self::insert_buckets`]: takes the two
+    /// augmented arms (`augment(z)`, `augment(-z)`) precomputed once per
+    /// insert and shared across all sketch rows — the augmentation (a
+    /// norm + sqrt + two allocations) dominates the per-row cost
+    /// otherwise.
+    #[inline]
+    pub fn insert_buckets_aug(&self, aug_pos: &[f64], aug_neg: &[f64]) -> (usize, usize) {
+        (
+            self.inner.hash_augmented(aug_pos),
+            self.inner.hash_augmented(aug_neg),
+        )
+    }
+
+    /// The single bucket a query probes.
+    pub fn query_bucket(&self, theta_tilde: &[f64]) -> usize {
+        self.inner.hash_side(theta_tilde, Side::Query)
+    }
+
+    /// Hot-path variant of [`Self::query_bucket`] over a precomputed
+    /// query-side augmentation.
+    #[inline]
+    pub fn query_bucket_aug(&self, aug_query: &[f64]) -> usize {
+        self.inner.hash_augmented(aug_query)
+    }
+
+    /// Number of hyperplanes p.
+    pub fn bits(&self) -> u32 {
+        self.inner.bits()
+    }
+
+    /// Bucket count `2^p`.
+    pub fn range(&self) -> usize {
+        self.inner.range()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    /// Expected normalized count for a single example — the quantity the
+    /// sketch estimates, equal to `2 g(theta~, z)` with `g` the paper's
+    /// surrogate loss.
+    pub fn expected_count(&self, theta_tilde: &[f64], z: &[f64]) -> f64 {
+        let kp = self.inner.collision_probability_qd(theta_tilde, z);
+        let neg: Vec<f64> = z.iter().map(|v| -v).collect();
+        let km = self.inner.collision_probability_qd(theta_tilde, &neg);
+        kp + km
+    }
+
+    /// Access to the underlying asymmetric hash (AOT path).
+    pub fn asym(&self) -> &AsymmetricInnerProductHash {
+        &self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::prp_loss::prp_surrogate;
+    use crate::testing::{assert_close, cases, gen_ball_point};
+    use crate::util::mathx::dot;
+
+    #[test]
+    fn insert_buckets_in_range_and_distinct_in_general() {
+        cases(40, 1, |rng, case| {
+            let h = PairedRandomProjection::new(5, 4, case as u64);
+            let z = gen_ball_point(rng, 5, 0.9);
+            let (b1, b2) = h.insert_buckets(&z);
+            assert!(b1 < h.range() && b2 < h.range());
+        });
+    }
+
+    #[test]
+    fn expected_count_is_twice_surrogate_loss() {
+        cases(60, 2, |rng, case| {
+            let d = crate::testing::gen_dim(rng, 1, 8);
+            let p = 1 + (case % 6) as u32;
+            let h = PairedRandomProjection::new(d, p, case as u64);
+            let z = gen_ball_point(rng, d, 0.7);
+            let q = gen_ball_point(rng, d, 0.7);
+            let t = dot(&q, &z);
+            assert_close(h.expected_count(&q, &z), 2.0 * prp_surrogate(t, p), 1e-12);
+        });
+    }
+
+    #[test]
+    fn empirical_pair_count_matches_expectation() {
+        // Monte Carlo over hash draws: average of [query hits z-bucket] +
+        // [query hits (-z)-bucket] should match expected_count.
+        let z = vec![0.4, -0.3];
+        let q = vec![0.2, 0.5];
+        let probe = PairedRandomProjection::new(2, 2, 0);
+        let want = probe.expected_count(&q, &z);
+        let trials = 20_000;
+        let mut acc = 0.0;
+        for s in 0..trials {
+            let h = PairedRandomProjection::new(2, 2, s as u64);
+            let (b1, b2) = h.insert_buckets(&z);
+            let qb = h.query_bucket(&q);
+            acc += f64::from(qb == b1) + f64::from(qb == b2);
+        }
+        assert_close(acc / trials as f64, want, 0.02);
+    }
+
+    #[test]
+    fn expected_count_symmetric_in_t() {
+        let h = PairedRandomProjection::new(1, 4, 5);
+        for i in 0..10 {
+            let t = 0.08 * i as f64;
+            let a = h.expected_count(&[0.9], &[t / 0.9]);
+            let b = h.expected_count(&[0.9], &[-t / 0.9]);
+            assert_close(a, b, 1e-12);
+        }
+    }
+
+    #[test]
+    fn expected_count_minimized_at_orthogonality() {
+        let h = PairedRandomProjection::new(1, 4, 6);
+        let at_zero = h.expected_count(&[0.9], &[0.0]);
+        for &t in &[0.2, 0.5, 0.8] {
+            assert!(h.expected_count(&[0.9], &[t]) > at_zero);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Signed random projections (SRP): the angular LSH family of
+//! Goemans–Williamson / Charikar. A p-bit SRP draws p gaussian hyperplanes
+//! `w_j ~ N(0, I_d)` and maps `x` to the integer whose j-th bit is
+//! `sign(<w_j, x>)`. Two vectors collide on one bit with probability
+//! `1 - angle(x, y)/pi`; the p-bit collision probability is that raised to
+//! the p-th power.
+
+use super::{CollisionProbability, LshFunction};
+use crate::util::mathx::{acos_clamped, dot, norm2};
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// A p-bit signed random projection hash over `R^d`.
+///
+/// Hyperplanes are stored *flat* (row-major `[p, d]` in one contiguous
+/// buffer): the hash inner loop is `p` back-to-back dot products, and a
+/// contiguous layout lets the compiler keep them vectorized instead of
+/// chasing per-plane allocations (§Perf).
+#[derive(Clone, Debug)]
+pub struct SignedRandomProjection {
+    /// Hyperplane normals, row-major `[p, d]`, flattened.
+    flat: Vec<f64>,
+    p: u32,
+    dim: usize,
+}
+
+impl SignedRandomProjection {
+    /// Draw a fresh p-bit SRP for dimension `d` from `seed`.
+    pub fn new(dim: usize, p: u32, seed: u64) -> Self {
+        assert!(p >= 1 && p <= 24, "p must be in 1..=24");
+        assert!(dim >= 1);
+        let mut rng = Xoshiro256::new(seed);
+        let flat = rng.gaussian_vec(dim * p as usize);
+        SignedRandomProjection { flat, p, dim }
+    }
+
+    /// Number of hyperplanes p.
+    pub fn bits(&self) -> u32 {
+        self.p
+    }
+
+    /// Hyperplane `j` as a slice.
+    #[inline]
+    pub fn plane(&self, j: usize) -> &[f64] {
+        &self.flat[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// The raw projection values `<w_j, x>` (used by the linear-optimization
+    /// training mode, which needs more than the sign).
+    pub fn project(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.dim);
+        (0..self.p as usize).map(|j| dot(self.plane(j), x)).collect()
+    }
+
+    /// Access to the hyperplanes (the AOT compile path serializes them so
+    /// the XLA artifacts hash identically to the rust path).
+    pub fn planes(&self) -> Vec<Vec<f64>> {
+        (0..self.p as usize).map(|j| self.plane(j).to_vec()).collect()
+    }
+
+    /// The bucket of the antipode `-x`: all sign bits flip, so this is the
+    /// bitwise complement within the p-bit range. PRP exploits this to get
+    /// the second insert location for free.
+    pub fn antipodal_bucket(&self, bucket: usize) -> usize {
+        !bucket & (self.range() - 1)
+    }
+}
+
+impl LshFunction for SignedRandomProjection {
+    fn hash(&self, x: &[f64]) -> usize {
+        assert_eq!(x.len(), self.dim, "SRP dim mismatch");
+        let mut h = 0usize;
+        for j in 0..self.p as usize {
+            // Tie-break sign(0) as 1 so the bucket map is total.
+            if dot(self.plane(j), x) >= 0.0 {
+                h |= 1 << j;
+            }
+        }
+        h
+    }
+
+    fn range(&self) -> usize {
+        1usize << self.p
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+impl CollisionProbability for SignedRandomProjection {
+    /// `(1 - angle(x,y)/pi)^p` — the *normalized* (angular) collision
+    /// probability. For the unnormalized inner-product version see
+    /// [`crate::lsh::asym`].
+    fn collision_probability(&self, x: &[f64], y: &[f64]) -> f64 {
+        let nx = norm2(x);
+        let ny = norm2(y);
+        if nx == 0.0 || ny == 0.0 {
+            // Degenerate: the zero vector collides with everything under
+            // our sign(0)=1 tie-break.
+            return 1.0;
+        }
+        let cos = (dot(x, y) / (nx * ny)).clamp(-1.0, 1.0);
+        let single = 1.0 - acos_clamped(cos) / std::f64::consts::PI;
+        single.powi(self.bits() as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::empirical_collision;
+    use crate::testing::{assert_close, cases};
+
+    #[test]
+    fn hash_in_range_and_deterministic() {
+        let l = SignedRandomProjection::new(5, 4, 42);
+        let x = vec![0.3, -0.1, 0.7, 0.0, -0.5];
+        let h = l.hash(&x);
+        assert!(h < l.range());
+        assert_eq!(h, l.hash(&x));
+        assert_eq!(l.range(), 16);
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // SRP depends only on direction.
+        let l = SignedRandomProjection::new(4, 6, 1);
+        cases(50, 2, |rng, _| {
+            let x = crate::testing::gen_ball_point(rng, 4, 1.0);
+            if crate::util::mathx::norm2(&x) < 1e-6 {
+                return;
+            }
+            let scaled: Vec<f64> = x.iter().map(|v| v * 7.5).collect();
+            assert_eq!(l.hash(&x), l.hash(&scaled));
+        });
+    }
+
+    #[test]
+    fn antipodal_bucket_is_hash_of_negation() {
+        cases(50, 3, |rng, case| {
+            let l = SignedRandomProjection::new(6, 5, case as u64);
+            let x = crate::testing::gen_ball_point(rng, 6, 1.0);
+            let neg: Vec<f64> = x.iter().map(|v| -v).collect();
+            // Ties (exact zeros) break the complement identity; gaussian
+            // projections of continuous points are a.s. nonzero.
+            assert_eq!(l.antipodal_bucket(l.hash(&x)), l.hash(&neg));
+        });
+    }
+
+    #[test]
+    fn collision_probability_matches_empirical() {
+        let x = vec![1.0, 0.0, 0.0];
+        let y = vec![0.6, 0.8, 0.0]; // angle = acos(0.6)
+        let probe = SignedRandomProjection::new(3, 2, 0);
+        let analytic = probe.collision_probability(&x, &y);
+        let emp = empirical_collision(
+            |seed| SignedRandomProjection::new(3, 2, seed),
+            &x,
+            &y,
+            20_000,
+        );
+        assert_close(emp, analytic, 0.015);
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        let l = SignedRandomProjection::new(4, 8, 9);
+        let x = vec![0.2, 0.4, -0.1, 0.9];
+        assert_eq!(l.hash(&x), l.hash(&x.clone()));
+        assert_close(l.collision_probability(&x, &x), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_points_collide_at_half_per_bit() {
+        let l = SignedRandomProjection::new(2, 1, 0);
+        let x = vec![1.0, 0.0];
+        let y = vec![0.0, 1.0];
+        assert_close(l.collision_probability(&x, &y), 0.5, 1e-12);
+    }
+
+    #[test]
+    fn projection_values_match_sign_bits() {
+        let l = SignedRandomProjection::new(3, 4, 5);
+        let x = vec![0.1, -0.7, 0.4];
+        let proj = l.project(&x);
+        let h = l.hash(&x);
+        for (j, p) in proj.iter().enumerate() {
+            assert_eq!((h >> j) & 1 == 1, *p >= 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let l = SignedRandomProjection::new(3, 2, 0);
+        l.hash(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,263 @@
+//! `storm` — the coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`      — end-to-end: fleet -> merged sketch -> DFO -> report
+//! * `experiment` — regenerate a paper table/figure (see `--list`)
+//! * `sketch`     — build a sketch of a dataset and print its stats
+//! * `info`       — registry, artifact manifest and version info
+
+use storm::config::{RunConfig, StormConfig};
+use storm::coordinator::driver::{train, QueryBackend};
+use storm::data::registry;
+use storm::edge::topology::Topology;
+use storm::experiments::{self, Effort};
+use storm::sketch::Sketch;
+use storm::util::argparse::{ArgError, ArgParser};
+
+fn main() {
+    storm::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("sketch") => cmd_sketch(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "storm {} — sketches toward online risk minimization
+
+USAGE:
+  storm <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  train         train a model end-to-end on the edge-fleet simulator
+  experiment    regenerate a paper table/figure (try: storm experiment --list)
+  sketch        build a sketch of a dataset and print stats
+  info          registry + artifact info
+
+Run `storm <SUBCOMMAND> --help` for options.",
+        storm::VERSION
+    );
+}
+
+fn handle_help(parser: &ArgParser, err: ArgError) -> i32 {
+    match err {
+        ArgError::HelpRequested => {
+            print!("{}", parser.usage());
+            0
+        }
+        other => {
+            eprintln!("error: {other}");
+            2
+        }
+    }
+}
+
+fn cmd_train(args: &[String]) -> i32 {
+    let parser = ArgParser::new("storm train", "end-to-end edge training")
+        .opt("dataset", Some("airfoil"), "registry dataset name")
+        .opt("rows", Some("100"), "sketch rows R")
+        .opt("power", Some("4"), "hyperplanes per row p (buckets = 2^p)")
+        .opt("devices", Some("4"), "simulated edge devices")
+        .opt("iters", Some("400"), "DFO iterations")
+        .opt("queries", Some("8"), "DFO probes per iteration")
+        .opt("sigma", Some("0.3"), "DFO sphere radius")
+        .opt("step", Some("0.6"), "DFO step size")
+        .opt("seed", Some("0"), "run seed")
+        .opt("topology", Some("star"), "star | tree | chain")
+        .opt("backend", Some("rust"), "query backend: rust | xla")
+        .opt("artifacts", Some("artifacts"), "artifact dir for the xla backend")
+        .opt("checkpoint", None, "write final state to this path");
+    let parsed = match parser.parse(args.iter().cloned()) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&parser, e),
+    };
+    let run = || -> anyhow::Result<i32> {
+        let mut cfg = RunConfig {
+            dataset: parsed.get_string("dataset"),
+            ..Default::default()
+        };
+        cfg.storm.rows = parsed.get_usize("rows")?;
+        cfg.storm.power = parsed.get_usize("power")? as u32;
+        cfg.fleet.devices = parsed.get_usize("devices")?;
+        cfg.optimizer.iters = parsed.get_usize("iters")?;
+        cfg.optimizer.queries = parsed.get_usize("queries")?;
+        cfg.optimizer.sigma = parsed.get_f64("sigma")?;
+        cfg.optimizer.step = parsed.get_f64("step")?;
+        cfg.optimizer.seed = parsed.get_u64("seed")?;
+        cfg.artifacts_dir = Some(parsed.get_string("artifacts"));
+        let topology = match parsed.get_string("topology").as_str() {
+            "star" => Topology::Star,
+            "tree" => Topology::Tree { fanout: 2 },
+            "chain" => Topology::Chain,
+            other => anyhow::bail!("unknown topology {other:?}"),
+        };
+        let backend = match parsed.get_string("backend").as_str() {
+            "rust" => QueryBackend::Rust,
+            "xla" => QueryBackend::Xla,
+            other => anyhow::bail!("unknown backend {other:?}"),
+        };
+        let ds = registry::load(&cfg.dataset, cfg.optimizer.seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.dataset))?;
+        let report = train(&cfg, ds, topology, backend)?;
+        println!("{}", report.summary());
+        println!(
+            "fleet: {} examples over {} devices in {:.2}s; train: {:.2}s ({} iters)",
+            report.examples,
+            cfg.fleet.devices,
+            report.fleet_wall_secs,
+            report.train_wall_secs,
+            cfg.optimizer.iters
+        );
+        if let Some(path) = parsed.get("checkpoint") {
+            let state = storm::coordinator::state::TrainingState {
+                dataset: report.dataset.clone(),
+                iter: cfg.optimizer.iters,
+                theta: report.theta.clone(),
+                trace: report.trace.clone(),
+            };
+            state.save(path)?;
+            println!("checkpoint written to {path}");
+        }
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_experiment(args: &[String]) -> i32 {
+    let parser = ArgParser::new("storm experiment", "regenerate a paper table/figure")
+        .positional("id", "experiment id (see --list)")
+        .opt("seed", Some("0"), "experiment seed")
+        .opt("out-dir", None, "also write TSVs under this directory")
+        .switch("full", "paper-grade effort (10 runs) instead of fast")
+        .switch("list", "list experiment ids");
+    let parsed = match parser.parse(args.iter().cloned()) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&parser, e),
+    };
+    if parsed.get_bool("list") {
+        for id in experiments::ALL {
+            println!("{id}");
+        }
+        return 0;
+    }
+    let Some(id) = parsed.positionals().first() else {
+        eprintln!("error: missing experiment id (try --list)");
+        return 2;
+    };
+    let effort = if parsed.get_bool("full") { Effort::Full } else { Effort::Fast };
+    let seed = parsed.get_u64("seed").unwrap_or(0);
+    let Some(tables) = experiments::run(id, effort, seed) else {
+        eprintln!("error: unknown experiment {id:?} (try --list)");
+        return 2;
+    };
+    for (i, t) in tables.iter().enumerate() {
+        t.print();
+        if let Some(dir) = parsed.get("out-dir") {
+            let path = format!("{dir}/{id}_{i}.tsv");
+            if let Err(e) = t.write_file(&path) {
+                eprintln!("warning: could not write {path}: {e}");
+            } else {
+                println!("# wrote {path}");
+            }
+        }
+        println!();
+    }
+    0
+}
+
+fn cmd_sketch(args: &[String]) -> i32 {
+    let parser = ArgParser::new("storm sketch", "build a sketch and print stats")
+        .opt("dataset", Some("airfoil"), "registry dataset name")
+        .opt("rows", Some("100"), "sketch rows R")
+        .opt("power", Some("4"), "hyperplanes per row")
+        .opt("seed", Some("0"), "hash family seed");
+    let parsed = match parser.parse(args.iter().cloned()) {
+        Ok(p) => p,
+        Err(e) => return handle_help(&parser, e),
+    };
+    let run = || -> anyhow::Result<i32> {
+        let name = parsed.get_string("dataset");
+        let seed = parsed.get_u64("seed")?;
+        let mut ds = registry::load(&name, seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
+        storm::data::scale::scale_to_unit_ball(&mut ds, storm::data::scale::DEFAULT_RADIUS);
+        let cfg = StormConfig {
+            rows: parsed.get_usize("rows")?,
+            power: parsed.get_usize("power")? as u32,
+            saturating: true,
+        };
+        let mut sk = storm::sketch::storm::StormSketch::new(cfg, ds.dim() + 1, seed);
+        let (_, secs) = storm::util::timer::time_it(|| {
+            for i in 0..ds.len() {
+                sk.insert(&ds.augmented(i));
+            }
+        });
+        println!(
+            "dataset={name} n={} d={} | sketch R={} B={} -> {} bytes ({}x compression) | insert {:.1} ex/s",
+            ds.len(),
+            ds.dim(),
+            cfg.rows,
+            cfg.buckets(),
+            sk.bytes(),
+            ds.raw_bytes() / sk.bytes().max(1),
+            ds.len() as f64 / secs.max(1e-12),
+        );
+        println!(
+            "wire bytes per delta flush: {}",
+            storm::sketch::serialize::wire_bytes(&cfg)
+        );
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("storm {}", storm::VERSION);
+    println!("\ndatasets:");
+    for info in registry::REGISTRY {
+        println!(
+            "  {:<12} n={:<6} d={:<3} substitute={} {}",
+            info.name, info.n, info.d, info.synthetic_substitute, info.description
+        );
+    }
+    match storm::runtime::Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("\nartifacts ({}):", m.len());
+            for a in m.iter() {
+                println!(
+                    "  {:<26} kind={:?} dim={} rows={} power={} batch={} queries={}",
+                    a.name, a.kind, a.dim, a.rows, a.power, a.batch, a.queries
+                );
+            }
+        }
+        Err(_) => println!("\nartifacts: none (run `make artifacts`)"),
+    }
+    0
+}

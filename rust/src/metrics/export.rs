@@ -1,0 +1,90 @@
+//! Figure-data export: every experiment writes its series as TSV (stdout
+//! and/or files under `results/`) in a stable schema so figures can be
+//! regenerated and diffed run-over-run.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A tabular series: named columns, row-major data.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Render as TSV with a `# title` header line.
+    pub fn to_tsv(&self) -> String {
+        let mut out = format!("# {}\n", self.title);
+        out.push_str(&self.columns.join("\t"));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row.iter().map(|v| format!("{v:.6e}")).collect();
+            out.push_str(&line.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.to_tsv());
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_file(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_tsv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_layout() {
+        let mut t = Table::new("fig", &["x", "y"]);
+        t.push(vec![1.0, 2.0]);
+        let tsv = t.to_tsv();
+        let lines: Vec<&str> = tsv.lines().collect();
+        assert_eq!(lines[0], "# fig");
+        assert_eq!(lines[1], "x\ty");
+        assert!(lines[2].starts_with("1.0"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut t = Table::new("test", &["a"]);
+        t.push(vec![3.5]);
+        let p = std::env::temp_dir().join("storm_export_test/t.tsv");
+        t.write_file(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("3.5"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push(vec![1.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Latency histogram with log-spaced buckets — the coordinator's request
+//! telemetry (p50/p99 reporting without retaining every sample).
+
+/// Log-bucketed histogram over microsecond latencies.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * ratio^i, base * ratio^{i+1})
+    counts: Vec<u64>,
+    base_us: f64,
+    ratio: f64,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl LatencyHistogram {
+    /// 1us..~100s in 96 log buckets by default.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; 96],
+            base_us: 1.0,
+            ratio: 1.21,
+            total: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let us = us.max(0.0);
+        let idx = if us < self.base_us {
+            0
+        } else {
+            ((us / self.base_us).ln() / self.ratio.ln()).floor() as usize
+        };
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record_us(secs * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate percentile (bucket upper edge), q in [0, 100].
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base_us * self.ratio.powi(i as i32 + 1);
+            }
+        }
+        self.max_us
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p99={:.1}us max={:.1}us",
+            self.total,
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(99.0),
+            self.max_us
+        )
+    }
+
+    /// Merge another histogram (same shape by construction).
+    pub fn merge_from(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 > 350.0 && p50 < 750.0, "p50={p50}");
+        let p99 = h.percentile_us(99.0);
+        assert!(p99 > 800.0, "p99={p99}");
+        assert!(h.mean_us() > 400.0 && h.mean_us() < 600.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max_us(), 1000.0);
+    }
+
+    #[test]
+    fn summary_is_stable_format() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(5.0);
+        let s = h.summary();
+        assert!(s.contains("n=1") && s.contains("p99="));
+    }
+}

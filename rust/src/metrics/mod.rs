@@ -1,0 +1,72 @@
+//! Metrics, traces and figure-data export.
+
+pub mod histogram;
+pub mod export;
+
+use crate::linalg::matrix::Matrix;
+
+/// Mean squared error of predictions vs targets.
+pub fn mse_vec(pred: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    if y.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(y).map(|(p, t)| (p - t) * (p - t)).sum::<f64>() / y.len() as f64
+}
+
+/// MSE of a linear model on a design matrix.
+pub fn model_mse(x: &Matrix, y: &[f64], theta: &[f64]) -> f64 {
+    mse_vec(&x.matvec(theta), y)
+}
+
+/// Coefficient of determination R^2.
+pub fn r_squared(x: &Matrix, y: &[f64], theta: &[f64]) -> f64 {
+    let m = model_mse(x, y, theta);
+    let var = crate::util::mathx::variance(y);
+    if var == 0.0 {
+        return if m == 0.0 { 1.0 } else { f64::NEG_INFINITY };
+    }
+    1.0 - m / var
+}
+
+/// Parameter-space distance `||theta - theta_ref|| / ||theta_ref||` — how
+/// close a sketch-trained model is to the least-squares optimum (the
+/// paper's convergence check).
+pub fn relative_param_error(theta: &[f64], theta_ref: &[f64]) -> f64 {
+    assert_eq!(theta.len(), theta_ref.len());
+    let num: f64 = theta
+        .iter()
+        .zip(theta_ref)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    let den = crate::util::mathx::norm2(theta_ref).max(1e-300);
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn mse_basics() {
+        assert_close(mse_vec(&[1.0, 2.0], &[1.0, 4.0]), 2.0, 1e-12);
+        assert_eq!(mse_vec(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_model() {
+        let x = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let y = vec![2.0, 4.0, 6.0];
+        assert_close(r_squared(&x, &y, &[2.0]), 1.0, 1e-12);
+        // Zero model leaves all the variance.
+        assert!(r_squared(&x, &y, &[0.0]) < 0.0 + 1e-12);
+    }
+
+    #[test]
+    fn relative_error_zero_for_identical() {
+        assert_close(relative_param_error(&[1.0, 2.0], &[1.0, 2.0]), 0.0, 1e-12);
+        assert_close(relative_param_error(&[2.0, 0.0], &[1.0, 0.0]), 1.0, 1e-12);
+    }
+}

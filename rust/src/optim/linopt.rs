@@ -1,0 +1,199 @@
+//! Linear optimization over hash partitions (paper §3).
+//!
+//! "Such methods attempt to place theta into the optimal set of hash
+//! partitions. Linear optimization is possible when the hash function is
+//! a projection-based LSH in R^d."
+//!
+//! Concretely: every STORM row partitions the augmented space with p
+//! hyperplanes. For each row we identify the *lowest-count* bucket (the
+//! PRP count is monotone in the surrogate loss, so low count = low loss)
+//! and extract the sign pattern it corresponds to. Each (hyperplane, sign)
+//! pair is a linear constraint `s * <w, aug(theta~)> >= 0`; we run a
+//! count-weighted perceptron over all constraints to find a `theta` deep
+//! inside the intersection of the most promising partitions. The result is
+//! a strong initializer that DFO then refines — matching the paper's use
+//! of linear optimization as an "improvement over standard derivative-free
+//! methods".
+
+use crate::lsh::asym::{augment, Side};
+use crate::sketch::storm::StormSketch;
+use crate::util::mathx::{dot, norm2};
+
+/// One linear constraint in the *raw* augmented query space: we want
+/// `sign * <plane, aug_query(theta~)> >= margin`, weighted by how much
+/// better the target bucket is than the row average.
+#[derive(Clone, Debug)]
+struct Constraint {
+    plane: Vec<f64>,
+    sign: f64,
+    weight: f64,
+}
+
+/// Configuration for the partition perceptron.
+#[derive(Clone, Copy, Debug)]
+pub struct LinOptConfig {
+    /// Perceptron epochs over the constraint set.
+    pub epochs: usize,
+    /// Step size for constraint-violation updates.
+    pub step: f64,
+    /// Target query-ball radius (theta~ is renormalized to this).
+    pub radius: f64,
+}
+
+impl Default for LinOptConfig {
+    fn default() -> Self {
+        LinOptConfig { epochs: 40, step: 0.1, radius: 0.7 }
+    }
+}
+
+/// Extract constraints and run the perceptron. Returns `theta` (length d).
+pub fn linear_partition_init(sketch: &StormSketch, cfg: LinOptConfig) -> Vec<f64> {
+    let aug_dim = sketch.dim(); // d + 1
+    let mut constraints: Vec<Constraint> = Vec::new();
+    let grid = sketch.grid();
+    for (r, h) in sketch.hashes().iter().enumerate() {
+        let row = grid.row(r);
+        let (best_bucket, best_count) = row
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &c)| c)
+            .map(|(b, &c)| (b, c))
+            .unwrap();
+        let mean_count = row.iter().map(|&c| c as f64).sum::<f64>() / row.len() as f64;
+        let weight = (mean_count - best_count as f64).max(0.0);
+        if weight == 0.0 {
+            continue; // uninformative row
+        }
+        // The asymmetric SRP hashes aug(query) in R^{aug_dim + 2}; bit j of
+        // the bucket is sign(<w_j, aug(q)>).
+        for (j, plane) in h.asym().srp().planes().iter().enumerate() {
+            let sign = if (best_bucket >> j) & 1 == 1 { 1.0 } else { -1.0 };
+            constraints.push(Constraint { plane: plane.clone(), sign, weight });
+        }
+    }
+    // Start from the constraint-respecting zero model [0...0, -1].
+    let mut theta_tilde = vec![0.0; aug_dim];
+    theta_tilde[aug_dim - 1] = -1.0;
+    for _ in 0..cfg.epochs {
+        let mut violated = 0usize;
+        for c in &constraints {
+            // Renormalize into the query ball before augmenting.
+            let n = norm2(&theta_tilde);
+            let scaled: Vec<f64> = if n > cfg.radius {
+                theta_tilde.iter().map(|v| v * cfg.radius / n).collect()
+            } else {
+                theta_tilde.clone()
+            };
+            let aq = augment(&scaled, Side::Query);
+            if c.sign * dot(&c.plane, &aq) < 0.0 {
+                violated += 1;
+                // Nudge the free coordinates toward satisfying the plane.
+                for i in 0..aug_dim - 1 {
+                    theta_tilde[i] += cfg.step * c.weight.min(4.0) * c.sign * c.plane[i];
+                }
+                theta_tilde[aug_dim - 1] = -1.0;
+            }
+        }
+        if violated == 0 {
+            break;
+        }
+    }
+    // Normalize the perceptron output: only the *direction* of theta~ is
+    // identified by partition constraints (the query is rescaled into the
+    // unit ball anyway), and a large-norm init strands the downstream DFO
+    // in the direction-only regime where magnitude is unidentifiable.
+    let norm: f64 = theta_tilde[..aug_dim - 1]
+        .iter()
+        .map(|v| v * v)
+        .sum::<f64>()
+        .sqrt();
+    if norm > 1.0 {
+        for v in &mut theta_tilde[..aug_dim - 1] {
+            *v /= norm;
+        }
+    }
+    // Guarded init: the perceptron is a heuristic — keep its output only
+    // if the sketch scores it *clearly* better than the zero model (the
+    // margin guards against accepting pure estimator noise).
+    let candidate = theta_tilde[..aug_dim - 1].to_vec();
+    let mut zero_tilde = vec![0.0; aug_dim];
+    zero_tilde[aug_dim - 1] = -1.0;
+    let risk_candidate = sketch.estimate_risk_scaled(&theta_tilde);
+    let risk_zero = sketch.estimate_risk_scaled(&zero_tilde);
+    let noise_margin = 0.5 / (sketch.config().rows as f64).sqrt();
+    if risk_candidate + noise_margin <= risk_zero {
+        candidate
+    } else {
+        vec![0.0; aug_dim - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StormConfig;
+    use crate::optim::dfo::{DfoConfig, DfoOptimizer};
+    use crate::optim::RiskOracle;
+    use crate::sketch::Sketch;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn planted_sketch(seed: u64) -> (StormSketch, Vec<f64>) {
+        let mut rng = Xoshiro256::new(seed);
+        let d = 3;
+        let theta_star = vec![0.3, -0.2, 0.25];
+        let cfg = StormConfig { rows: 150, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, d + 1, seed);
+        for _ in 0..1500 {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform_range(-0.4, 0.4)).collect();
+            let y = crate::util::mathx::dot(&x, &theta_star) + 0.01 * rng.gaussian();
+            sk.insert_example(&x, y);
+        }
+        (sk, theta_star)
+    }
+
+    #[test]
+    fn init_is_finite_and_right_length() {
+        let (sk, _) = planted_sketch(1);
+        let t = linear_partition_init(&sk, LinOptConfig::default());
+        assert_eq!(t.len(), 3);
+        assert!(t.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn init_lowers_risk_vs_zero() {
+        let (sk, _) = planted_sketch(2);
+        let d = 3;
+        let mut zero_tilde = vec![0.0; d + 1];
+        zero_tilde[d] = -1.0;
+        let risk_zero = sk.risk(&zero_tilde);
+        let init = linear_partition_init(&sk, LinOptConfig::default());
+        let mut init_tilde = init.clone();
+        init_tilde.push(-1.0);
+        let risk_init = sk.risk(&init_tilde);
+        assert!(
+            risk_init <= risk_zero + 1e-9,
+            "init risk {risk_init} > zero risk {risk_zero}"
+        );
+    }
+
+    #[test]
+    fn warm_started_dfo_at_least_as_good() {
+        let (sk, _) = planted_sketch(3);
+        let cfg = DfoConfig { queries: 8, sigma: 0.3, step: 0.4, iters: 60, seed: 5 };
+        // Cold start.
+        let mut cold = DfoOptimizer::new(cfg, 3);
+        let t_cold = cold.run(&sk, 60);
+        // Warm start from the partition perceptron.
+        let init = linear_partition_init(&sk, LinOptConfig::default());
+        let mut warm = DfoOptimizer::new(cfg, 3).with_init(&init);
+        let t_warm = warm.run(&sk, 60);
+        let risk_of = |t: &[f64]| {
+            let mut tt = t.to_vec();
+            tt.push(-1.0);
+            sk.risk(&tt)
+        };
+        // Warm should not be dramatically worse; usually better. Allow
+        // small slack since both are stochastic.
+        assert!(risk_of(&t_warm) <= risk_of(&t_cold) * 1.25 + 1e-6);
+    }
+}

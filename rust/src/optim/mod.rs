@@ -1,0 +1,77 @@
+//! Optimization over sketches.
+//!
+//! STORM exposes the empirical risk only through *pointwise queries* of an
+//! integer counter array — there is no analytic gradient. The paper
+//! therefore trains with derivative-free optimization (Algorithm 2), which
+//! this module implements, plus the linear-optimization refinement of §3
+//! and exact-gradient baselines for comparison.
+//!
+//! Everything optimizes a [`RiskOracle`] — the sketch, a composite of
+//! sketches, an exact loss, or the AOT-compiled XLA query path all
+//! implement it, so the optimizer code is shared across all backends.
+
+pub mod dfo;
+pub mod coord;
+pub mod spsa;
+pub mod sgd;
+pub mod linopt;
+pub mod schedule;
+
+use crate::sketch::storm::StormSketch;
+
+/// Black-box access to an empirical-risk estimate at `theta~ = [theta, -1]`.
+pub trait RiskOracle {
+    /// Estimated risk at the *augmented* parameter vector (length `d + 1`,
+    /// last coordinate fixed to -1 by convention; implementations rescale
+    /// into the unit ball internally as needed).
+    fn risk(&self, theta_tilde: &[f64]) -> f64;
+
+    /// Feature dimension `d` (so `theta~` has length `d + 1`).
+    fn dim(&self) -> usize;
+
+    /// Number of oracle evaluations so far, if tracked (telemetry).
+    fn evals(&self) -> u64 {
+        0
+    }
+}
+
+impl RiskOracle for StormSketch {
+    fn risk(&self, theta_tilde: &[f64]) -> f64 {
+        self.estimate_risk_scaled(theta_tilde)
+    }
+
+    fn dim(&self) -> usize {
+        // Sketch dim is d + 1 (augmented).
+        StormSketch::dim(self) - 1
+    }
+}
+
+/// Adapter: any closure `Fn(&[f64]) -> f64` as a risk oracle (used for
+/// composite sketches, exact losses, and the XLA runtime query path).
+pub struct FnOracle<F: Fn(&[f64]) -> f64> {
+    f: F,
+    d: usize,
+    evals: std::cell::Cell<u64>,
+}
+
+impl<F: Fn(&[f64]) -> f64> FnOracle<F> {
+    /// `d` is the feature dimension (oracle receives `d + 1` vectors).
+    pub fn new(d: usize, f: F) -> Self {
+        FnOracle { f, d, evals: std::cell::Cell::new(0) }
+    }
+}
+
+impl<F: Fn(&[f64]) -> f64> RiskOracle for FnOracle<F> {
+    fn risk(&self, theta_tilde: &[f64]) -> f64 {
+        self.evals.set(self.evals.get() + 1);
+        (self.f)(theta_tilde)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals.get()
+    }
+}

@@ -1,0 +1,74 @@
+//! Step-size schedules for the derivative-free loop.
+
+/// A step-size schedule: iteration -> eta.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// Constant eta.
+    Constant(f64),
+    /// `eta0 / (1 + iter / decay_iters)`.
+    InverseTime { eta0: f64, decay_iters: f64 },
+    /// `eta0 / sqrt(1 + iter)` — the classic robust choice for noisy
+    /// gradient estimates.
+    InverseSqrt { eta0: f64 },
+    /// Piecewise: eta0 until `warm` iters, then eta0 * factor.
+    StepDecay { eta0: f64, warm: usize, factor: f64 },
+}
+
+impl Schedule {
+    pub fn at(&self, iter: usize) -> f64 {
+        match *self {
+            Schedule::Constant(e) => e,
+            Schedule::InverseTime { eta0, decay_iters } => {
+                eta0 / (1.0 + iter as f64 / decay_iters)
+            }
+            Schedule::InverseSqrt { eta0 } => eta0 / (1.0 + iter as f64).sqrt(),
+            Schedule::StepDecay { eta0, warm, factor } => {
+                if iter < warm {
+                    eta0
+                } else {
+                    eta0 * factor
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant(0.5);
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(10_000), 0.5);
+    }
+
+    #[test]
+    fn inverse_time_halves_at_decay() {
+        let s = Schedule::InverseTime { eta0: 1.0, decay_iters: 100.0 };
+        assert_close(s.at(0), 1.0, 1e-12);
+        assert_close(s.at(100), 0.5, 1e-12);
+    }
+
+    #[test]
+    fn inverse_sqrt_decays_monotonically() {
+        let s = Schedule::InverseSqrt { eta0: 1.0 };
+        let mut prev = f64::INFINITY;
+        for it in 0..100 {
+            let e = s.at(it);
+            assert!(e < prev);
+            prev = e;
+        }
+        assert_close(s.at(3), 0.5, 1e-12);
+    }
+
+    #[test]
+    fn step_decay_switches_once() {
+        let s = Schedule::StepDecay { eta0: 1.0, warm: 10, factor: 0.1 };
+        assert_eq!(s.at(9), 1.0);
+        assert_close(s.at(10), 0.1, 1e-12);
+        assert_close(s.at(99), 0.1, 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Exact-gradient baselines: projected gradient descent on the exact PRP
+//! surrogate risk and on the exact L2 risk. These are the "full data"
+//! references the sketch-trained models are compared against (Figure 4's
+//! "converges to the optimal theta under least-squares ERM" claim).
+
+use crate::loss::prp_loss::exact_surrogate_grad;
+use crate::util::mathx::axpy;
+
+/// Configuration for the exact-gradient descent baselines.
+#[derive(Clone, Copy, Debug)]
+pub struct GdConfig {
+    pub step: f64,
+    pub iters: usize,
+}
+
+impl Default for GdConfig {
+    fn default() -> Self {
+        GdConfig { step: 1.0, iters: 500 }
+    }
+}
+
+/// Projected GD on the exact PRP surrogate over augmented examples
+/// (`z = [x, y]`, all inside the unit ball). Maintains the `theta~_{d+1} =
+/// -1` constraint exactly like Algorithm 2, but with the true gradient.
+pub fn gd_prp_surrogate(examples: &[Vec<f64>], p: u32, cfg: GdConfig) -> Vec<f64> {
+    assert!(!examples.is_empty());
+    let dim = examples[0].len();
+    let mut theta_tilde = vec![0.0; dim];
+    theta_tilde[dim - 1] = -1.0;
+    for _ in 0..cfg.iters {
+        // Rescale the query into the unit ball the same way the sketch
+        // estimator does, so the two optimize the same landscape.
+        let norm = crate::util::mathx::norm2(&theta_tilde);
+        let radius = crate::data::scale::query_radius();
+        let query: Vec<f64> = if norm > radius {
+            theta_tilde.iter().map(|v| v * radius / norm).collect()
+        } else {
+            theta_tilde.clone()
+        };
+        let grad = exact_surrogate_grad(&query, examples, p);
+        axpy(&mut theta_tilde, -cfg.step, &grad);
+        theta_tilde[dim - 1] = -1.0;
+    }
+    theta_tilde[..dim - 1].to_vec()
+}
+
+/// Plain GD on the exact (unnormalized-by-scale) L2 risk over augmented
+/// examples: gradient of `mean <theta~, z>^2` w.r.t. the free coords.
+pub fn gd_l2(examples: &[Vec<f64>], cfg: GdConfig) -> Vec<f64> {
+    assert!(!examples.is_empty());
+    let dim = examples[0].len();
+    let mut theta_tilde = vec![0.0; dim];
+    theta_tilde[dim - 1] = -1.0;
+    let n = examples.len() as f64;
+    for _ in 0..cfg.iters {
+        let mut grad = vec![0.0; dim];
+        for z in examples {
+            let t = crate::util::mathx::dot(&theta_tilde, z);
+            axpy(&mut grad, 2.0 * t / n, z);
+        }
+        axpy(&mut theta_tilde, -cfg.step, &grad);
+        theta_tilde[dim - 1] = -1.0;
+    }
+    theta_tilde[..dim - 1].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::linalg::solve::{lstsq, LstsqMethod};
+    use crate::testing::assert_allclose;
+    use crate::util::rng::{Rng, Xoshiro256};
+
+    fn planted(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Xoshiro256::new(seed);
+        let theta: Vec<f64> = (0..d).map(|_| rng.uniform_range(-0.3, 0.3)).collect();
+        let examples: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let x: Vec<f64> = (0..d).map(|_| rng.uniform_range(-0.4, 0.4)).collect();
+                let y = crate::util::mathx::dot(&x, &theta);
+                let mut z = x;
+                z.push(y);
+                z
+            })
+            .collect();
+        (examples, theta)
+    }
+
+    #[test]
+    fn l2_gd_matches_closed_form() {
+        let (examples, _) = planted(100, 3, 1);
+        let x = Matrix::from_rows(
+            &examples.iter().map(|z| z[..3].to_vec()).collect::<Vec<_>>(),
+        );
+        let y: Vec<f64> = examples.iter().map(|z| z[3]).collect();
+        let closed = lstsq(&x, &y, 0.0, LstsqMethod::Qr);
+        let gd = gd_l2(&examples, GdConfig { step: 0.5, iters: 3000 });
+        assert_allclose(&gd, &closed, 1e-4);
+    }
+
+    #[test]
+    fn surrogate_gd_recovers_planted_model() {
+        let (examples, theta_star) = planted(300, 3, 2);
+        let got = gd_prp_surrogate(&examples, 4, GdConfig { step: 2.0, iters: 2000 });
+        for (a, b) in got.iter().zip(&theta_star) {
+            assert!((a - b).abs() < 0.05, "{got:?} vs {theta_star:?}");
+        }
+    }
+
+    #[test]
+    fn surrogate_and_l2_minimizers_agree() {
+        // Theorem 2: same minimizer (noise-free planted data).
+        let (examples, _) = planted(300, 4, 3);
+        let a = gd_prp_surrogate(&examples, 4, GdConfig { step: 2.0, iters: 2000 });
+        let b = gd_l2(&examples, GdConfig { step: 0.5, iters: 3000 });
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.05, "{a:?} vs {b:?}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! SPSA — simultaneous perturbation stochastic approximation (Spall).
+//!
+//! An alternative derivative-free estimator to Algorithm 2's sphere
+//! sampling: ONE Rademacher perturbation direction per iteration and a
+//! central difference along it, giving a gradient estimate from exactly
+//! two oracle queries regardless of dimension. Cheaper per iteration than
+//! DFO's k probes; noisier per step. Included as the ablation point the
+//! paper's "we employ a simple optimization algorithm" invites — the
+//! `bench_ablate` target compares the two at matched query budgets.
+
+use super::RiskOracle;
+use crate::util::mathx::axpy;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// SPSA settings.
+#[derive(Clone, Copy, Debug)]
+pub struct SpsaConfig {
+    /// Perturbation half-width c.
+    pub c: f64,
+    /// Step size a.
+    pub a: f64,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for SpsaConfig {
+    fn default() -> Self {
+        SpsaConfig { c: 0.3, a: 0.4, iters: 800, seed: 0 }
+    }
+}
+
+/// Run SPSA with the Algorithm-2 constraint (last coordinate pinned to
+/// -1) and Polyak tail averaging. Returns theta (length d).
+pub fn spsa(oracle: &dyn RiskOracle, cfg: SpsaConfig) -> Vec<f64> {
+    let d = oracle.dim();
+    let dim = d + 1;
+    let mut theta_tilde = vec![0.0; dim];
+    theta_tilde[dim - 1] = -1.0;
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let tail_start = cfg.iters.saturating_sub((cfg.iters / 3).max(1));
+    let mut tail_sum = vec![0.0; d];
+    let mut tail_n = 0u64;
+    for it in 0..cfg.iters {
+        // Rademacher direction over the free coordinates.
+        let mut delta = vec![0.0; dim];
+        for v in delta.iter_mut().take(d) {
+            *v = if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
+        }
+        let mut plus = theta_tilde.clone();
+        axpy(&mut plus, cfg.c, &delta);
+        let mut minus = theta_tilde.clone();
+        axpy(&mut minus, -cfg.c, &delta);
+        let g = (oracle.risk(&plus) - oracle.risk(&minus)) / (2.0 * cfg.c);
+        // SPSA update: divide by the perturbation elementwise (delta_i =
+        // +-1, so this is multiplication).
+        for i in 0..d {
+            theta_tilde[i] -= cfg.a * g * delta[i];
+        }
+        theta_tilde[dim - 1] = -1.0;
+        if it >= tail_start {
+            for (s, v) in tail_sum.iter_mut().zip(&theta_tilde[..d]) {
+                *s += v;
+            }
+            tail_n += 1;
+        }
+    }
+    if tail_n > 0 {
+        tail_sum.iter().map(|s| s / tail_n as f64).collect()
+    } else {
+        theta_tilde[..d].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::FnOracle;
+
+    #[test]
+    fn converges_on_quadratic() {
+        let target = vec![0.25, -0.4, 0.1];
+        let d = target.len();
+        let tgt = target.clone();
+        let oracle = FnOracle::new(d, move |tt: &[f64]| {
+            tt[..d].iter().zip(&tgt).map(|(a, b)| (a - b) * (a - b)).sum()
+        });
+        let theta = spsa(&oracle, SpsaConfig { c: 0.1, a: 0.05, iters: 2000, seed: 1 });
+        for (a, b) in theta.iter().zip(&target) {
+            assert!((a - b).abs() < 0.05, "{theta:?}");
+        }
+    }
+
+    #[test]
+    fn two_queries_per_iteration() {
+        let oracle = FnOracle::new(2, |tt: &[f64]| tt[0] * tt[0] + tt[1] * tt[1]);
+        let _ = spsa(&oracle, SpsaConfig { c: 0.1, a: 0.05, iters: 10, seed: 2 });
+        assert_eq!(oracle.evals(), 20);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let oracle = FnOracle::new(2, |tt: &[f64]| (tt[0] - 0.3).powi(2) + tt[1].powi(2));
+        let a = spsa(&oracle, SpsaConfig { c: 0.1, a: 0.05, iters: 100, seed: 7 });
+        let oracle2 = FnOracle::new(2, |tt: &[f64]| (tt[0] - 0.3).powi(2) + tt[1].powi(2));
+        let b = spsa(&oracle2, SpsaConfig { c: 0.1, a: 0.05, iters: 100, seed: 7 });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn works_against_a_sketch() {
+        use crate::config::StormConfig;
+        use crate::sketch::storm::StormSketch;
+        use crate::sketch::Sketch;
+        use crate::testing::gen_ball_point;
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(9);
+        let cfg = StormConfig { rows: 200, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, 3, 4);
+        for _ in 0..500 {
+            sk.insert(&gen_ball_point(&mut rng, 3, 0.9));
+        }
+        let theta = spsa(&sk, SpsaConfig { c: 0.2, a: 0.2, iters: 200, seed: 3 });
+        assert_eq!(theta.len(), 2);
+        assert!(theta.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,188 @@
+//! The XLA executor: compiles manifest artifacts on the PJRT CPU client
+//! and exposes typed insert/query calls to the coordinator.
+//!
+//! PJRT client state is not `Sync`; the coordinator therefore drives the
+//! executor from a single thread (the leader), while device threads use
+//! the pure-rust insert path. This matches the deployment model — the
+//! accelerator lives with the leader, the edge devices are scalar CPUs.
+
+use super::manifest::{ArtifactInfo, ArtifactKind, Manifest};
+use crate::lsh::prp::PairedRandomProjection;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A loaded STORM executor pair (insert + query) for one configuration.
+pub struct XlaStorm {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    insert_exe: xla::PjRtLoadedExecutable,
+    query_exe: xla::PjRtLoadedExecutable,
+    insert_info: ArtifactInfo,
+    query_info: ArtifactInfo,
+    /// Flattened hyperplanes `[R, P, D+2]` as an XLA literal, shared by
+    /// both entry points (kept resident across calls).
+    planes: xla::Literal,
+    calls: std::cell::Cell<u64>,
+}
+
+impl XlaStorm {
+    /// Load the artifact pair matching `(dim, rows, power)` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, dim: usize, rows: usize, power: u32, hashes: &[PairedRandomProjection]) -> Result<XlaStorm> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let (insert_info, query_info) = manifest
+            .find_pair(dim, rows, power)
+            .ok_or_else(|| anyhow!("no artifact pair for dim={dim} rows={rows} power={power} in {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let insert_exe = compile(&client, &insert_info.file)?;
+        let query_exe = compile(&client, &query_info.file)?;
+        let planes = planes_literal(hashes, dim, power)?;
+        Ok(XlaStorm {
+            client,
+            insert_exe,
+            query_exe,
+            insert_info: insert_info.clone(),
+            query_info: query_info.clone(),
+            planes,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Static batch size of the insert entry point.
+    pub fn batch_size(&self) -> usize {
+        self.insert_info.batch
+    }
+
+    /// Static query-vector count of the query entry point.
+    pub fn query_size(&self) -> usize {
+        self.query_info.queries
+    }
+
+    /// Number of executions so far (telemetry).
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    /// Run the insert kernel on up to `batch_size` augmented examples
+    /// (row-major `examples[i]` of length D). Returns the `[R, 2^p]` count
+    /// delta. Short batches are padded and masked out.
+    pub fn insert_counts(&self, examples: &[Vec<f64>]) -> Result<Vec<u32>> {
+        let b = self.insert_info.batch;
+        let d = self.insert_info.dim;
+        if examples.len() > b {
+            bail!("batch {} exceeds compiled size {b}", examples.len());
+        }
+        let mut z = vec![0f32; b * d];
+        let mut mask = vec![0f32; b];
+        for (i, ex) in examples.iter().enumerate() {
+            if ex.len() != d {
+                bail!("example dim {} != compiled dim {d}", ex.len());
+            }
+            for (j, &v) in ex.iter().enumerate() {
+                z[i * d + j] = v as f32;
+            }
+            mask[i] = 1.0;
+        }
+        let z_lit = xla::Literal::vec1(&z)
+            .reshape(&[b as i64, d as i64])
+            .map_err(|e| anyhow!("reshape z: {e:?}"))?;
+        let mask_lit = xla::Literal::vec1(&mask);
+        let out = self
+            .insert_exe
+            .execute::<xla::Literal>(&[z_lit, mask_lit, self.planes.clone()])
+            .map_err(|e| anyhow!("insert execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("insert fetch: {e:?}"))?;
+        self.calls.set(self.calls.get() + 1);
+        let flat = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("insert untuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("insert to_vec: {e:?}"))?;
+        Ok(flat.iter().map(|&v| v.round().max(0.0) as u32).collect())
+    }
+
+    /// Run the query kernel: estimate the normalized count at each of up
+    /// to `query_size` query vectors against the given counters. Returns
+    /// the paper-normalized surrogate risks (count / (R * n * SCALE)).
+    pub fn query_risks(&self, counts: &[u32], n: u64, queries: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let k = self.query_info.queries;
+        let d = self.query_info.dim;
+        let r = self.query_info.rows;
+        let buckets = self.query_info.buckets();
+        if counts.len() != r * buckets {
+            bail!("counts len {} != R*B = {}", counts.len(), r * buckets);
+        }
+        if queries.len() > k {
+            bail!("query count {} exceeds compiled size {k}", queries.len());
+        }
+        let counts_f: Vec<f32> = counts.iter().map(|&c| c as f32).collect();
+        let counts_lit = xla::Literal::vec1(&counts_f)
+            .reshape(&[r as i64, buckets as i64])
+            .map_err(|e| anyhow!("reshape counts: {e:?}"))?;
+        let mut q = vec![0f32; k * d];
+        for (i, qu) in queries.iter().enumerate() {
+            if qu.len() != d {
+                bail!("query dim {} != compiled dim {d}", qu.len());
+            }
+            for (j, &v) in qu.iter().enumerate() {
+                q[i * d + j] = v as f32;
+            }
+        }
+        let q_lit = xla::Literal::vec1(&q)
+            .reshape(&[k as i64, d as i64])
+            .map_err(|e| anyhow!("reshape queries: {e:?}"))?;
+        let n_lit = xla::Literal::vec1(&[n as f32]);
+        let out = self
+            .query_exe
+            .execute::<xla::Literal>(&[counts_lit, q_lit, self.planes.clone(), n_lit])
+            .map_err(|e| anyhow!("query execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("query fetch: {e:?}"))?;
+        self.calls.set(self.calls.get() + 1);
+        let flat = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("query untuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("query to_vec: {e:?}"))?;
+        Ok(flat[..queries.len()].iter().map(|&v| v as f64).collect())
+    }
+}
+
+/// Compile one HLO-text artifact.
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+}
+
+/// Pack the shared hash family into a `[R, P, D+2]` f32 literal. The
+/// augmented-space planes come straight from the rust sketch so both
+/// paths hash identically.
+fn planes_literal(hashes: &[PairedRandomProjection], dim: usize, power: u32) -> Result<xla::Literal> {
+    let r = hashes.len();
+    let p = power as usize;
+    let aug = dim + 2;
+    let mut flat = Vec::with_capacity(r * p * aug);
+    for h in hashes {
+        let planes = h.asym().srp().planes();
+        if planes.len() != p {
+            bail!("hash has {} planes, expected {p}", planes.len());
+        }
+        for plane in planes {
+            if plane.len() != aug {
+                bail!("plane has dim {}, expected {aug}", plane.len());
+            }
+            flat.extend(plane.iter().map(|&v| v as f32));
+        }
+    }
+    xla::Literal::vec1(&flat)
+        .reshape(&[r as i64, p as i64, aug as i64])
+        .map_err(|e| anyhow!("reshape planes: {e:?}"))
+}

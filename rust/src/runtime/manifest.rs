@@ -1,0 +1,213 @@
+//! The artifact manifest: `artifacts/manifest.toml`, written by
+//! `python/compile/aot.py` and read here. It records, per compiled
+//! executable, the entry-point kind and every static shape the rust side
+//! must respect when building input literals.
+
+use crate::config::toml::TomlDoc;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batch insert: `(z [B,D], mask [B], planes [R,P,D+2]) -> [R, 2^p]`.
+    Insert,
+    /// Risk query: `(counts [R,B'], queries [K,D], planes, n) -> [K]`.
+    Query,
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    /// Augmented example dimension D = d + 1.
+    pub dim: usize,
+    /// Sketch rows R.
+    pub rows: usize,
+    /// Hyperplanes per row p (buckets = 2^p).
+    pub power: u32,
+    /// Static batch size (insert) — callers pad + mask.
+    pub batch: usize,
+    /// Static query count (query) — callers pad.
+    pub queries: usize,
+}
+
+impl ArtifactInfo {
+    pub fn buckets(&self) -> usize {
+        1usize << self.power
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+/// Manifest errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("artifact {0}: missing key {1}")]
+    MissingKey(String, &'static str),
+    #[error("artifact {0}: bad kind {1:?}")]
+    BadKind(String, String),
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.toml`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.toml"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative artifact files.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, ManifestError> {
+        let doc = TomlDoc::parse(text).map_err(ManifestError::Parse)?;
+        // Group keys by section "artifact.<name>".
+        let mut sections: BTreeMap<String, BTreeMap<String, crate::config::toml::TomlValue>> =
+            BTreeMap::new();
+        for (section, key, value) in doc.entries() {
+            if let Some(name) = section.strip_prefix("artifact.") {
+                sections
+                    .entry(name.to_string())
+                    .or_default()
+                    .insert(key.clone(), value.clone());
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, keys) in sections {
+            let get_str = |k: &'static str| -> Result<String, ManifestError> {
+                keys.get(k)
+                    .map(|v| v.as_str().to_string())
+                    .filter(|s| !s.is_empty())
+                    .ok_or(ManifestError::MissingKey(name.clone(), k))
+            };
+            let get_usize = |k: &'static str| -> Result<usize, ManifestError> {
+                keys.get(k)
+                    .ok_or(ManifestError::MissingKey(name.clone(), k))?
+                    .as_usize()
+                    .map_err(ManifestError::Parse)
+            };
+            let kind = match get_str("kind")?.as_str() {
+                "insert" => ArtifactKind::Insert,
+                "query" => ArtifactKind::Query,
+                other => return Err(ManifestError::BadKind(name.clone(), other.to_string())),
+            };
+            let info = ArtifactInfo {
+                name: name.clone(),
+                file: dir.join(get_str("file")?),
+                kind,
+                dim: get_usize("dim")?,
+                rows: get_usize("rows")?,
+                power: get_usize("power")? as u32,
+                batch: get_usize("batch").unwrap_or(0),
+                queries: get_usize("queries").unwrap_or(0),
+            };
+            artifacts.insert(name, info);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactInfo> {
+        self.artifacts.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Find the insert/query pair compiled for a given (dim, rows, power)
+    /// configuration.
+    pub fn find_pair(&self, dim: usize, rows: usize, power: u32) -> Option<(&ArtifactInfo, &ArtifactInfo)> {
+        let insert = self.artifacts.values().find(|a| {
+            a.kind == ArtifactKind::Insert && a.dim == dim && a.rows == rows && a.power == power
+        })?;
+        let query = self.artifacts.values().find(|a| {
+            a.kind == ArtifactKind::Query && a.dim == dim && a.rows == rows && a.power == power
+        })?;
+        Some((insert, query))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[artifact.prp_insert_airfoil]
+file = "prp_insert_airfoil.hlo.txt"
+kind = "insert"
+dim = 10
+rows = 50
+power = 4
+batch = 256
+
+[artifact.storm_query_airfoil]
+file = "storm_query_airfoil.hlo.txt"
+kind = "query"
+dim = 10
+rows = 50
+power = 4
+queries = 16
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let ins = m.get("prp_insert_airfoil").unwrap();
+        assert_eq!(ins.kind, ArtifactKind::Insert);
+        assert_eq!(ins.dim, 10);
+        assert_eq!(ins.batch, 256);
+        assert_eq!(ins.buckets(), 16);
+        assert_eq!(ins.file, Path::new("/tmp/a/prp_insert_airfoil.hlo.txt"));
+    }
+
+    #[test]
+    fn find_pair_matches_config() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        let (i, q) = m.find_pair(10, 50, 4).unwrap();
+        assert_eq!(i.kind, ArtifactKind::Insert);
+        assert_eq!(q.kind, ArtifactKind::Query);
+        assert!(m.find_pair(11, 50, 4).is_none());
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        let bad = "[artifact.x]\nfile = \"x.hlo\"\nkind = \"insert\"\n";
+        assert!(matches!(
+            Manifest::parse(bad, Path::new(".")),
+            Err(ManifestError::MissingKey(..))
+        ));
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let bad = "[artifact.x]\nfile = \"x\"\nkind = \"wat\"\ndim = 1\nrows = 1\npower = 1\n";
+        assert!(matches!(
+            Manifest::parse(bad, Path::new(".")),
+            Err(ManifestError::BadKind(..))
+        ));
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = Manifest::parse("", Path::new(".")).unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! Python runs once, at build time (`make artifacts`); this module is the
+//! only thing that touches the resulting `artifacts/` directory. The
+//! interchange format is HLO **text** — the image's xla_extension 0.5.1
+//! rejects jax >= 0.5 serialized protos (64-bit instruction ids), while
+//! the text parser reassigns ids cleanly.
+//!
+//! Two entry points per compiled configuration:
+//!
+//! * `insert` — batch of augmented examples -> `[R, 2^p]` count histogram
+//!   (the Pallas PRP kernel: projection on the MXU, one-hot histogram);
+//! * `query`  — counts + K query vectors -> K surrogate-risk estimates.
+//!
+//! The *hyperplanes are runtime inputs*, not baked constants: the rust
+//! sketch and the XLA path share the exact same hash family, so their
+//! counters agree bit-for-bit (verified by `rust/tests/integration_runtime`).
+
+pub mod manifest;
+pub mod executor;
+
+pub use executor::XlaStorm;
+pub use manifest::{ArtifactInfo, ArtifactKind, Manifest};

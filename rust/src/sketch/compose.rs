@@ -1,0 +1,128 @@
+//! Theorem-1 closure operations over sketches: estimate weighted sums,
+//! differences, and (via hash composition at construction time) products
+//! of collision-probability losses using multiple sketches.
+//!
+//! Addition/subtraction is a *query-time* operation: build one sketch per
+//! constituent loss, estimate each, and combine the estimates linearly.
+//! Multiplication happens at *hash* time (see [`crate::lsh::compose`]) —
+//! a sketch built on the composed hash directly estimates the product.
+
+use super::storm::StormSketch;
+
+/// A weighted combination of STORM estimates:
+/// `L(q) = sum_j w_j * risk_j(q)` — the paper's f1 (addition/subtraction
+/// closure), exposed as a first-class estimator so optimizers can run on
+/// composite losses (e.g. loss + lambda * regularizer-sketch).
+pub struct CompositeRisk<'a> {
+    terms: Vec<(f64, &'a StormSketch)>,
+}
+
+impl<'a> CompositeRisk<'a> {
+    pub fn new() -> Self {
+        CompositeRisk { terms: Vec::new() }
+    }
+
+    /// Add a weighted term.
+    pub fn with(mut self, weight: f64, sketch: &'a StormSketch) -> Self {
+        if let Some((_, first)) = self.terms.first() {
+            assert_eq!(first.dim(), sketch.dim(), "composite terms must share dim");
+        }
+        self.terms.push((weight, sketch));
+        self
+    }
+
+    /// Number of terms.
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Estimate the combined risk at a (unit-ball) query.
+    pub fn estimate(&self, q: &[f64]) -> f64 {
+        self.terms
+            .iter()
+            .map(|(w, s)| w * s.estimate_risk(q))
+            .sum()
+    }
+
+    /// Estimate with automatic query rescaling.
+    pub fn estimate_scaled(&self, q: &[f64]) -> f64 {
+        self.terms
+            .iter()
+            .map(|(w, s)| w * s.estimate_risk_scaled(q))
+            .sum()
+    }
+}
+
+impl Default for CompositeRisk<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StormConfig;
+    use crate::sketch::Sketch;
+    use crate::testing::{assert_close, gen_ball_point};
+    use crate::util::rng::Xoshiro256;
+
+    fn sketch_of(data: &[Vec<f64>], seed: u64) -> StormSketch {
+        let cfg = StormConfig { rows: 600, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, 3, seed);
+        for z in data {
+            sk.insert(z);
+        }
+        sk
+    }
+
+    #[test]
+    fn linear_combination_of_estimates() {
+        let mut rng = Xoshiro256::new(1);
+        let d1: Vec<Vec<f64>> = (0..100).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+        let d2: Vec<Vec<f64>> = (0..100).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+        let s1 = sketch_of(&d1, 10);
+        let s2 = sketch_of(&d2, 11);
+        let q = gen_ball_point(&mut rng, 3, 0.8);
+        let c = CompositeRisk::new().with(1.0, &s1).with(-0.5, &s2);
+        assert_eq!(c.len(), 2);
+        assert_close(
+            c.estimate(&q),
+            s1.estimate_risk(&q) - 0.5 * s2.estimate_risk(&q),
+            1e-12,
+        );
+    }
+
+    #[test]
+    fn difference_of_identical_sketches_is_zero() {
+        let mut rng = Xoshiro256::new(2);
+        let d: Vec<Vec<f64>> = (0..50).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+        let s1 = sketch_of(&d, 20);
+        let s2 = sketch_of(&d, 20); // same seed + data => identical counters
+        let q = gen_ball_point(&mut rng, 3, 0.8);
+        let c = CompositeRisk::new().with(1.0, &s1).with(-1.0, &s2);
+        assert_close(c.estimate(&q), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn scaled_variant_finite_for_big_queries() {
+        let mut rng = Xoshiro256::new(3);
+        let d: Vec<Vec<f64>> = (0..50).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+        let s = sketch_of(&d, 30);
+        let c = CompositeRisk::new().with(2.0, &s);
+        assert!(c.estimate_scaled(&[5.0, -5.0, 5.0]).is_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_rejected() {
+        let cfg = StormConfig::default();
+        let s1 = StormSketch::new(cfg, 3, 1);
+        let s2 = StormSketch::new(cfg, 4, 1);
+        let _ = CompositeRisk::new().with(1.0, &s1).with(1.0, &s2);
+    }
+}

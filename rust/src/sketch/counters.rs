@@ -1,0 +1,165 @@
+//! The `R x B` integer counter array underlying every sketch.
+//!
+//! Counters are `u32` — the paper's "tiny array of integer counters" and
+//! the natural edge-device representation (4 bytes/cell; a 100 x 16 STORM
+//! sketch is 6.4 KB). Increments saturate rather than wrap so pathological
+//! streams degrade gracefully instead of corrupting estimates.
+
+/// Dense row-major counter grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CounterGrid {
+    rows: usize,
+    buckets: usize,
+    data: Vec<u32>,
+    saturating: bool,
+}
+
+impl CounterGrid {
+    pub fn new(rows: usize, buckets: usize, saturating: bool) -> Self {
+        assert!(rows > 0 && buckets > 0);
+        CounterGrid {
+            rows,
+            buckets,
+            data: vec![0; rows * buckets],
+            saturating,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn buckets(&self) -> usize {
+        self.buckets
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, bucket: usize) -> u32 {
+        debug_assert!(row < self.rows && bucket < self.buckets);
+        self.data[row * self.buckets + bucket]
+    }
+
+    #[inline]
+    pub fn increment(&mut self, row: usize, bucket: usize) {
+        debug_assert!(row < self.rows && bucket < self.buckets);
+        let cell = &mut self.data[row * self.buckets + bucket];
+        *cell = if self.saturating {
+            cell.saturating_add(1)
+        } else {
+            cell.wrapping_add(1)
+        };
+    }
+
+    /// Add a raw count delta (bulk path: the XLA insert kernel returns a
+    /// whole `[R, B]` histogram of a batch which is added in one pass).
+    pub fn add_counts(&mut self, delta: &[u32]) {
+        assert_eq!(delta.len(), self.data.len(), "delta shape mismatch");
+        for (c, d) in self.data.iter_mut().zip(delta) {
+            *c = if self.saturating {
+                c.saturating_add(*d)
+            } else {
+                c.wrapping_add(*d)
+            };
+        }
+    }
+
+    /// Merge another grid of identical shape (counter-wise addition —
+    /// the mergeable-summary operation).
+    pub fn merge_from(&mut self, other: &CounterGrid) {
+        assert_eq!(self.rows, other.rows, "merge: row mismatch");
+        assert_eq!(self.buckets, other.buckets, "merge: bucket mismatch");
+        for (c, o) in self.data.iter_mut().zip(&other.data) {
+            *c = if self.saturating {
+                c.saturating_add(*o)
+            } else {
+                c.wrapping_add(*o)
+            };
+        }
+    }
+
+    /// Row slice.
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.data[r * self.buckets..(r + 1) * self.buckets]
+    }
+
+    /// Raw buffer (serialization, XLA literal conversion).
+    pub fn data(&self) -> &[u32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [u32] {
+        &mut self.data
+    }
+
+    /// Counter memory in bytes.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Total of all counters (diagnostics / tests: equals inserts-per-row
+    /// x rows for single-increment sketches, 2x for PRP pairs).
+    pub fn total(&self) -> u64 {
+        self.data.iter().map(|&c| c as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn increments_accumulate() {
+        let mut g = CounterGrid::new(2, 4, true);
+        g.increment(0, 1);
+        g.increment(0, 1);
+        g.increment(1, 3);
+        assert_eq!(g.get(0, 1), 2);
+        assert_eq!(g.get(1, 3), 1);
+        assert_eq!(g.get(0, 0), 0);
+        assert_eq!(g.total(), 3);
+    }
+
+    #[test]
+    fn saturating_does_not_wrap() {
+        let mut g = CounterGrid::new(1, 1, true);
+        g.data_mut()[0] = u32::MAX;
+        g.increment(0, 0);
+        assert_eq!(g.get(0, 0), u32::MAX);
+        g.add_counts(&[5]);
+        assert_eq!(g.get(0, 0), u32::MAX);
+    }
+
+    #[test]
+    fn merge_is_elementwise_sum() {
+        let mut a = CounterGrid::new(2, 2, true);
+        let mut b = CounterGrid::new(2, 2, true);
+        a.increment(0, 0);
+        b.increment(0, 0);
+        b.increment(1, 1);
+        a.merge_from(&b);
+        assert_eq!(a.get(0, 0), 2);
+        assert_eq!(a.get(1, 1), 1);
+    }
+
+    #[test]
+    fn add_counts_bulk_path() {
+        let mut g = CounterGrid::new(1, 3, true);
+        g.add_counts(&[1, 2, 3]);
+        g.add_counts(&[1, 0, 1]);
+        assert_eq!(g.data(), &[2, 2, 4]);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let g = CounterGrid::new(100, 16, true);
+        assert_eq!(g.bytes(), 6400);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_shape_mismatch_panics() {
+        let mut a = CounterGrid::new(2, 2, true);
+        let b = CounterGrid::new(2, 3, true);
+        a.merge_from(&b);
+    }
+}

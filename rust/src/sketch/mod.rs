@@ -1,0 +1,45 @@
+//! Count sketches for risk estimation.
+//!
+//! * [`counters`] — the underlying `R x B` integer counter array with
+//!   saturating arithmetic and signed-delta merging;
+//! * [`race`] — the symmetric RACE sketch (Coleman & Shrivastava): KDE
+//!   estimates for any LSH family with a closed-form collision
+//!   probability;
+//! * [`storm`] — the paper's STORM sketch: asymmetric insert/query with
+//!   PRP pairing, estimating the regression surrogate loss (Thm 2) and the
+//!   max-margin classification loss (Thm 3);
+//! * [`privacy`] — differentially-private release (Laplace count noise);
+//! * [`serialize`] — the compact wire format devices ship over the
+//!   simulated network;
+//! * [`compose`] — sum/difference/product estimators over multiple
+//!   sketches (Theorem 1 closure).
+
+pub mod counters;
+pub mod race;
+pub mod storm;
+pub mod privacy;
+pub mod serialize;
+pub mod compose;
+
+/// Common behaviour of the count sketches in this crate.
+///
+/// All implementors are *mergeable summaries*: `merge` of two sketches
+/// built with the same configuration and seeds equals the sketch of the
+/// concatenated streams (exactly — counts are integers).
+pub trait Sketch {
+    /// Ingest one augmented example.
+    fn insert(&mut self, z: &[f64]);
+
+    /// Number of examples ingested (by this sketch plus everything merged
+    /// into it).
+    fn count(&self) -> u64;
+
+    /// Estimate the sketch's target functional at a query point.
+    fn query(&self, q: &[f64]) -> f64;
+
+    /// Merge another sketch built with identical configuration/seeds.
+    fn merge_from(&mut self, other: &Self);
+
+    /// Memory footprint of the counter array in bytes.
+    fn bytes(&self) -> usize;
+}

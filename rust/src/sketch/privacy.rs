@@ -1,0 +1,162 @@
+//! Differentially-private sketch release (paper §2.2, after Coleman &
+//! Shrivastava 2020).
+//!
+//! A STORM insert touches exactly `2 R` counters (2 per row), so the L1
+//! sensitivity of the counter array to one example is `2 R`. Adding
+//! Laplace(`2R / epsilon`) noise to every cell therefore releases the
+//! sketch with example-level epsilon-DP. Noise is added once, at release
+//! time, on a *copy* — the device keeps its exact counters for further
+//! streaming.
+
+use super::storm::StormSketch;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// A privately-released view of a STORM sketch: real-valued noisy counts.
+pub struct PrivateStormRelease {
+    /// Noisy counts, row-major `[R, B]`.
+    counts: Vec<f64>,
+    rows: usize,
+    buckets: usize,
+    count: u64,
+    /// The privacy budget this release satisfies.
+    pub epsilon: f64,
+    hashes_seed_dim: (u64, usize, crate::config::StormConfig),
+}
+
+impl PrivateStormRelease {
+    /// Release `sketch` with example-level `epsilon`-DP.
+    pub fn release(sketch: &StormSketch, epsilon: f64, noise_seed: u64) -> Self {
+        assert!(epsilon > 0.0, "epsilon must be positive");
+        let (grid, count) = sketch.parts();
+        let sensitivity = 2.0 * grid.rows() as f64;
+        let scale = sensitivity / epsilon;
+        let mut rng = Xoshiro256::new(noise_seed);
+        let counts: Vec<f64> = grid
+            .data()
+            .iter()
+            .map(|&c| c as f64 + rng.laplace(scale))
+            .collect();
+        PrivateStormRelease {
+            counts,
+            rows: grid.rows(),
+            buckets: grid.buckets(),
+            count,
+            epsilon,
+            hashes_seed_dim: (sketch.seed(), sketch.dim(), sketch.config()),
+        }
+    }
+
+    /// Query the noisy release exactly like the exact sketch (requires
+    /// reconstructing the hash family from the shared seed — releases are
+    /// paired with the family seed, which is public randomness in the
+    /// RACE/STORM privacy model).
+    pub fn estimate_risk(&self, theta_tilde: &[f64]) -> f64 {
+        let (seed, dim, cfg) = self.hashes_seed_dim;
+        assert_eq!(theta_tilde.len(), dim);
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for r in 0..self.rows {
+            let h = crate::lsh::prp::PairedRandomProjection::new(
+                dim,
+                cfg.power,
+                seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
+            );
+            let b = h.query_bucket(theta_tilde);
+            acc += self.counts[r * self.buckets + b];
+        }
+        acc / (self.rows as f64 * self.count as f64) / super::storm::SCALE
+    }
+
+    /// Noisy counter array (for transmission / inspection).
+    pub fn counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Gaussian projection noise for attribute-level (epsilon, delta)-DP LSH
+/// (Kenthapadi et al.): returns hyperplane perturbation std for the given
+/// budget and an L2 clip bound of 1 (inputs live in the unit ball).
+pub fn gaussian_projection_sigma(epsilon: f64, delta: f64) -> f64 {
+    assert!(epsilon > 0.0 && delta > 0.0 && delta < 1.0);
+    // Analytic gaussian mechanism bound: sigma >= sqrt(2 ln(1.25/delta)) / eps.
+    (2.0 * (1.25 / delta).ln()).sqrt() / epsilon
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StormConfig;
+    use crate::sketch::Sketch;
+    use crate::testing::{assert_close, gen_ball_point};
+    use crate::util::rng::Xoshiro256;
+
+    fn filled_sketch(rows: usize, seed: u64) -> (StormSketch, Vec<Vec<f64>>) {
+        let cfg = StormConfig { rows, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, 4, seed);
+        let mut rng = Xoshiro256::new(99);
+        let data: Vec<Vec<f64>> = (0..400).map(|_| gen_ball_point(&mut rng, 4, 0.9)).collect();
+        for z in &data {
+            sk.insert(z);
+        }
+        (sk, data)
+    }
+
+    #[test]
+    fn release_preserves_estimates_at_moderate_epsilon() {
+        let (sk, _) = filled_sketch(400, 5);
+        let rel = PrivateStormRelease::release(&sk, 5.0, 1);
+        let mut rng = Xoshiro256::new(7);
+        let q = gen_ball_point(&mut rng, 4, 0.8);
+        let exact = sk.estimate_risk(&q);
+        let noisy = rel.estimate_risk(&q);
+        assert_close(noisy, exact, 0.1 * exact.max(0.1));
+    }
+
+    #[test]
+    fn lower_epsilon_means_more_noise() {
+        let (sk, _) = filled_sketch(100, 6);
+        let tight = PrivateStormRelease::release(&sk, 0.1, 2);
+        let loose = PrivateStormRelease::release(&sk, 10.0, 2);
+        let dev = |rel: &PrivateStormRelease| -> f64 {
+            rel.counts()
+                .iter()
+                .zip(sk.parts().0.data())
+                .map(|(n, &c)| (n - c as f64).abs())
+                .sum::<f64>()
+                / rel.counts().len() as f64
+        };
+        assert!(dev(&tight) > 10.0 * dev(&loose));
+    }
+
+    #[test]
+    fn release_does_not_mutate_source() {
+        let (mut sk, _) = filled_sketch(50, 8);
+        let before = sk.grid().data().to_vec();
+        let _ = PrivateStormRelease::release(&sk, 1.0, 3);
+        assert_eq!(sk.grid().data(), &before[..]);
+        // Device keeps streaming afterwards.
+        sk.insert(&[0.1, 0.1, 0.1, 0.1]);
+        assert_eq!(sk.count(), 401);
+    }
+
+    #[test]
+    fn gaussian_sigma_decreases_with_epsilon() {
+        let s1 = gaussian_projection_sigma(0.5, 1e-5);
+        let s2 = gaussian_projection_sigma(2.0, 1e-5);
+        assert!(s1 > s2);
+        assert!(s2 > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_epsilon_rejected() {
+        let (sk, _) = filled_sketch(10, 9);
+        let _ = PrivateStormRelease::release(&sk, 0.0, 0);
+    }
+}

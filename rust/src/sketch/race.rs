@@ -1,0 +1,186 @@
+//! The symmetric RACE sketch (Repeated Arrays of Count Estimators;
+//! Luo & Shrivastava / Coleman & Shrivastava).
+//!
+//! R rows, each indexed by an independent LSH function. Inserting `x`
+//! increments one cell per row; querying `q` averages the counts at
+//! `[r, l_r(q)]`, which is an unbiased estimator of
+//! `sum_i k(q, x_i)` where `k` is the family's collision probability —
+//! the kernel density estimate STORM generalizes.
+
+use super::counters::CounterGrid;
+use super::Sketch;
+use crate::lsh::srp::SignedRandomProjection;
+use crate::lsh::LshFunction;
+
+/// RACE sketch over a generic boxed LSH family (one function per row).
+pub struct RaceSketch {
+    grid: CounterGrid,
+    hashes: Vec<Box<dyn LshFunction>>,
+    count: u64,
+    dim: usize,
+}
+
+impl RaceSketch {
+    /// Build from per-row hash functions (must share dim and range).
+    pub fn from_hashes(hashes: Vec<Box<dyn LshFunction>>, saturating: bool) -> Self {
+        assert!(!hashes.is_empty());
+        let dim = hashes[0].dim();
+        let range = hashes[0].range();
+        for h in &hashes {
+            assert_eq!(h.dim(), dim, "all rows must share input dim");
+            assert_eq!(h.range(), range, "all rows must share bucket range");
+        }
+        RaceSketch {
+            grid: CounterGrid::new(hashes.len(), range, saturating),
+            hashes,
+            count: 0,
+            dim,
+        }
+    }
+
+    /// Convenience: R rows of p-bit SRP, seeds derived from `seed`.
+    pub fn srp(rows: usize, dim: usize, p: u32, seed: u64) -> Self {
+        let hashes: Vec<Box<dyn LshFunction>> = (0..rows)
+            .map(|r| {
+                Box::new(SignedRandomProjection::new(
+                    dim,
+                    p,
+                    seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
+                )) as Box<dyn LshFunction>
+            })
+            .collect();
+        RaceSketch::from_hashes(hashes, true)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.grid.rows()
+    }
+
+    pub fn grid(&self) -> &CounterGrid {
+        &self.grid
+    }
+
+    /// Mean count at the query's buckets — the raw KDE-style estimator of
+    /// `sum_i k(q, x_i)` (not normalized by n).
+    pub fn query_sum(&self, q: &[f64]) -> f64 {
+        assert_eq!(q.len(), self.dim);
+        let mut acc = 0.0;
+        for (r, h) in self.hashes.iter().enumerate() {
+            acc += self.grid.get(r, h.hash(q)) as f64;
+        }
+        acc / self.hashes.len() as f64
+    }
+}
+
+impl Sketch for RaceSketch {
+    fn insert(&mut self, z: &[f64]) {
+        assert_eq!(z.len(), self.dim, "insert dim mismatch");
+        for (r, h) in self.hashes.iter().enumerate() {
+            let b = h.hash(z);
+            self.grid.increment(r, b);
+        }
+        self.count += 1;
+    }
+
+    fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Normalized estimate: `(1/n) sum_i k(q, x_i)`.
+    fn query(&self, q: &[f64]) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.query_sum(q) / self.count as f64
+    }
+
+    fn merge_from(&mut self, other: &Self) {
+        self.grid.merge_from(&other.grid);
+        self.count += other.count;
+    }
+
+    fn bytes(&self) -> usize {
+        self.grid.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::CollisionProbability;
+    use crate::testing::{assert_close, gen_ball_point};
+    use crate::util::rng::Xoshiro256;
+
+    fn mean_collision(q: &[f64], data: &[Vec<f64>], p: u32) -> f64 {
+        // Analytic target: mean over the dataset of the SRP collision prob.
+        let probe = SignedRandomProjection::new(q.len(), p, 0);
+        data.iter()
+            .map(|x| probe.collision_probability(q, x))
+            .sum::<f64>()
+            / data.len() as f64
+    }
+
+    #[test]
+    fn estimates_mean_collision_probability() {
+        let mut rng = Xoshiro256::new(5);
+        let dim = 4;
+        let data: Vec<Vec<f64>> = (0..200).map(|_| gen_ball_point(&mut rng, dim, 1.0)).collect();
+        let q = gen_ball_point(&mut rng, dim, 1.0);
+        let mut sk = RaceSketch::srp(800, dim, 2, 7);
+        for x in &data {
+            sk.insert(x);
+        }
+        let est = sk.query(&q);
+        let want = mean_collision(&q, &data, 2);
+        assert_close(est, want, 0.05);
+        assert_eq!(sk.count(), 200);
+    }
+
+    #[test]
+    fn merge_equals_union_sketch() {
+        let mut rng = Xoshiro256::new(9);
+        let dim = 3;
+        let d1: Vec<Vec<f64>> = (0..50).map(|_| gen_ball_point(&mut rng, dim, 1.0)).collect();
+        let d2: Vec<Vec<f64>> = (0..70).map(|_| gen_ball_point(&mut rng, dim, 1.0)).collect();
+        let mut s1 = RaceSketch::srp(20, dim, 3, 11);
+        let mut s2 = RaceSketch::srp(20, dim, 3, 11); // same seed => same hashes
+        let mut s_union = RaceSketch::srp(20, dim, 3, 11);
+        for x in &d1 {
+            s1.insert(x);
+            s_union.insert(x);
+        }
+        for x in &d2 {
+            s2.insert(x);
+            s_union.insert(x);
+        }
+        s1.merge_from(&s2);
+        assert_eq!(s1.grid().data(), s_union.grid().data());
+        assert_eq!(s1.count(), s_union.count());
+    }
+
+    #[test]
+    fn empty_sketch_queries_zero() {
+        let sk = RaceSketch::srp(10, 3, 2, 0);
+        assert_eq!(sk.query(&[0.1, 0.2, 0.3]), 0.0);
+    }
+
+    #[test]
+    fn per_row_total_equals_inserts() {
+        let mut sk = RaceSketch::srp(7, 2, 3, 1);
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..33 {
+            let x = gen_ball_point(&mut rng, 2, 1.0);
+            sk.insert(&x);
+        }
+        for r in 0..7 {
+            let row_total: u64 = sk.grid().row(r).iter().map(|&c| c as u64).sum();
+            assert_eq!(row_total, 33);
+        }
+    }
+
+    #[test]
+    fn bytes_matches_grid() {
+        let sk = RaceSketch::srp(10, 3, 4, 0);
+        assert_eq!(sk.bytes(), 10 * 16 * 4);
+    }
+}

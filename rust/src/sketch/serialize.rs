@@ -1,0 +1,193 @@
+//! Compact binary wire format for sketches — what edge devices actually
+//! transmit over the simulated network. Layout (little-endian):
+//!
+//! ```text
+//! magic  u32  = 0x53544F52 ("STOR")
+//! version u16 = 1
+//! power   u16
+//! rows    u32
+//! dim     u32
+//! seed    u64
+//! count   u64
+//! counts  rows * 2^power * u32
+//! crc     u32   (FNV-1a over everything above)
+//! ```
+//!
+//! The hash-family *seed* travels with the counts so a receiver can verify
+//! it merges compatible sketches; the hyperplanes themselves are
+//! regenerated deterministically and never shipped.
+
+use super::storm::StormSketch;
+use crate::config::StormConfig;
+use crate::sketch::Sketch;
+
+const MAGIC: u32 = 0x53544F52;
+const VERSION: u16 = 1;
+
+/// Serialization errors.
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error("buffer too short ({0} bytes)")]
+    Truncated(usize),
+    #[error("bad magic 0x{0:08x}")]
+    BadMagic(u32),
+    #[error("unsupported version {0}")]
+    BadVersion(u16),
+    #[error("checksum mismatch (got 0x{got:08x}, want 0x{want:08x})")]
+    BadChecksum { got: u32, want: u32 },
+    #[error("inconsistent header (rows={rows}, power={power})")]
+    BadHeader { rows: u32, power: u16 },
+}
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x01000193);
+    }
+    h
+}
+
+/// Encode a sketch into the wire format.
+pub fn encode(sketch: &StormSketch) -> Vec<u8> {
+    let (grid, count) = sketch.parts();
+    let cfg = sketch.config();
+    let mut out = Vec::with_capacity(32 + grid.bytes() + 4);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(cfg.power as u16).to_le_bytes());
+    out.extend_from_slice(&(cfg.rows as u32).to_le_bytes());
+    out.extend_from_slice(&(sketch.dim() as u32).to_le_bytes());
+    out.extend_from_slice(&sketch.seed().to_le_bytes());
+    out.extend_from_slice(&count.to_le_bytes());
+    for &c in grid.data() {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    let crc = fnv1a(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode a wire buffer back into a sketch (rebuilding the hash family
+/// from the embedded seed).
+pub fn decode(bytes: &[u8]) -> Result<StormSketch, WireError> {
+    const HEADER: usize = 4 + 2 + 2 + 4 + 4 + 8 + 8;
+    if bytes.len() < HEADER + 4 {
+        return Err(WireError::Truncated(bytes.len()));
+    }
+    let body = &bytes[..bytes.len() - 4];
+    let crc_got = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let crc_want = fnv1a(body);
+    if crc_got != crc_want {
+        return Err(WireError::BadChecksum { got: crc_got, want: crc_want });
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let power = u16::from_le_bytes(bytes[6..8].try_into().unwrap());
+    let rows = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let dim = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let seed = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let count = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    if power == 0 || power > 24 || rows == 0 {
+        return Err(WireError::BadHeader { rows, power });
+    }
+    let buckets = 1usize << power;
+    let expected = HEADER + rows as usize * buckets * 4 + 4;
+    if bytes.len() != expected {
+        return Err(WireError::Truncated(bytes.len()));
+    }
+    let cfg = StormConfig { rows: rows as usize, power: power as u32, saturating: true };
+    let mut sketch = StormSketch::new(cfg, dim as usize, seed);
+    {
+        let (grid, cnt) = sketch.parts_mut();
+        let data = grid.data_mut();
+        for (i, cell) in data.iter_mut().enumerate() {
+            let off = HEADER + i * 4;
+            *cell = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        }
+        *cnt = count;
+    }
+    Ok(sketch)
+}
+
+/// Wire size in bytes for a given configuration (network cost model).
+pub fn wire_bytes(cfg: &StormConfig) -> usize {
+    32 + cfg.rows * cfg.buckets() * 4 + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen_ball_point;
+    use crate::util::rng::Xoshiro256;
+
+    fn sample_sketch() -> StormSketch {
+        let cfg = StormConfig { rows: 20, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, 5, 77);
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..120 {
+            let z = gen_ball_point(&mut rng, 5, 0.9);
+            sk.insert(&z);
+        }
+        sk
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let sk = sample_sketch();
+        let bytes = encode(&sk);
+        assert_eq!(bytes.len(), wire_bytes(&sk.config()));
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back.grid().data(), sk.grid().data());
+        assert_eq!(back.count(), sk.count());
+        assert_eq!(back.seed(), sk.seed());
+        assert_eq!(back.dim(), sk.dim());
+        // Estimates identical (same family regenerated from seed).
+        let mut rng = Xoshiro256::new(4);
+        let q = gen_ball_point(&mut rng, 5, 0.8);
+        assert_eq!(back.estimate_risk(&q), sk.estimate_risk(&q));
+    }
+
+    #[test]
+    fn decoded_sketch_can_merge_with_source() {
+        let mut a = sample_sketch();
+        let b = decode(&encode(&a)).unwrap();
+        let count_before = a.count();
+        a.merge_from(&b);
+        assert_eq!(a.count(), count_before * 2);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = encode(&sample_sketch());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(matches!(decode(&bytes), Err(WireError::BadChecksum { .. })));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = encode(&sample_sketch());
+        assert!(matches!(decode(&bytes[..10]), Err(WireError::Truncated(_))));
+        // Cut counters but keep a valid-length tail: checksum fires first.
+        let cut = &bytes[..bytes.len() - 8];
+        assert!(decode(cut).is_err());
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut bytes = encode(&sample_sketch());
+        bytes[0] = 0;
+        // Fix checksum so the magic check is what fires.
+        let crc = super::fnv1a(&bytes[..bytes.len() - 4]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::BadMagic(_))));
+    }
+}

@@ -1,0 +1,414 @@
+//! The STORM sketch — the paper's central data structure.
+//!
+//! `R` rows of `B = 2^p` integer counters. Each row `r` owns an
+//! independent PRP hash (asymmetric inner-product LSH over the augmented
+//! example space `R^{d+1}` — see [`crate::lsh::prp`]).
+//!
+//! **Insert** (`z = [x, y]`): increment both `l_r(z)` and `l_r(-z)` in
+//! every row — two counter updates per row (Algorithm 1 / Figure 1).
+//!
+//! **Query** (`theta~ = [theta, -1]`, rescaled into the unit ball): read
+//! the count at `[r, l_r(theta~)]`, average over rows, divide by `n`. The
+//! expectation is `2 * (1/n) sum_i g(theta~, z_i)` — the paper's surrogate
+//! empirical risk up to the constant 2 (kept in [`StormSketch::SCALE`]).
+//!
+//! **Classification mode**: insert `[x * (-y)]` once per row (labels in
+//! {-1, +1}); the expected normalized count is the margin loss of
+//! Theorem 3 up to the `2^p` constant.
+
+use super::counters::CounterGrid;
+use super::Sketch;
+use crate::config::StormConfig;
+use crate::lsh::prp::PairedRandomProjection;
+use crate::util::mathx::norm2;
+
+/// Scale relating raw normalized counts to the paper's surrogate loss `g`:
+/// `E[query] = SCALE * mean_i g(theta~, z_i)`.
+pub const SCALE: f64 = 2.0;
+
+/// The STORM sketch for regression surrogate-loss estimation.
+pub struct StormSketch {
+    cfg: StormConfig,
+    grid: CounterGrid,
+    hashes: Vec<PairedRandomProjection>,
+    count: u64,
+    dim: usize,
+    seed: u64,
+}
+
+impl StormSketch {
+    /// `dim` is the *augmented* dimension `d + 1` ( features + label ).
+    pub fn new(cfg: StormConfig, dim: usize, seed: u64) -> Self {
+        assert!(dim >= 1);
+        let hashes: Vec<PairedRandomProjection> = (0..cfg.rows)
+            .map(|r| {
+                PairedRandomProjection::new(
+                    dim,
+                    cfg.power,
+                    seed.wrapping_mul(0x9E3779B97F4A7C15)
+                        .wrapping_add(r as u64),
+                )
+            })
+            .collect();
+        StormSketch {
+            grid: CounterGrid::new(cfg.rows, cfg.buckets(), cfg.saturating),
+            hashes,
+            count: 0,
+            dim,
+            cfg,
+            seed,
+        }
+    }
+
+    /// Insert a `(x, y)` example (regression mode): augments to `[x, y]`.
+    pub fn insert_example(&mut self, x: &[f64], y: f64) {
+        let mut z = Vec::with_capacity(x.len() + 1);
+        z.extend_from_slice(x);
+        z.push(y);
+        self.insert(&z);
+    }
+
+    /// Estimated surrogate empirical risk `mean_i g(theta~, z_i)` at a
+    /// query `theta~` already inside the unit ball.
+    pub fn estimate_risk(&self, theta_tilde: &[f64]) -> f64 {
+        self.query(theta_tilde) / SCALE
+    }
+
+    /// Query with automatic rescaling: `[theta, -1]` generally has norm
+    /// above 1; the asymmetric hash needs it inside the unit ball. Scaling
+    /// the query by a positive constant does not move the surrogate
+    /// minimizer (the loss is monotone in |<q, z>| and all candidates are
+    /// scaled alike within one optimization step).
+    pub fn estimate_risk_scaled(&self, theta_tilde: &[f64]) -> f64 {
+        let n = norm2(theta_tilde);
+        let radius = crate::data::scale::query_radius();
+        if n <= radius {
+            return self.estimate_risk(theta_tilde);
+        }
+        let scaled: Vec<f64> = theta_tilde.iter().map(|v| v * radius / n).collect();
+        self.estimate_risk(&scaled)
+    }
+
+    pub fn config(&self) -> StormConfig {
+        self.cfg
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn grid(&self) -> &CounterGrid {
+        &self.grid
+    }
+
+    /// Per-row hash functions (AOT compile path reads the hyperplanes).
+    pub fn hashes(&self) -> &[PairedRandomProjection] {
+        &self.hashes
+    }
+
+    /// Bulk-add a `[R, B]` histogram delta produced by the XLA insert
+    /// kernel for a batch of `batch_n` examples.
+    pub fn add_batch_counts(&mut self, delta: &[u32], batch_n: u64) {
+        self.grid.add_counts(delta);
+        self.count += batch_n;
+    }
+
+    /// Replace-free accessor used by the serializer.
+    pub(crate) fn parts(&self) -> (&CounterGrid, u64) {
+        (&self.grid, self.count)
+    }
+
+    pub(crate) fn parts_mut(&mut self) -> (&mut CounterGrid, &mut u64) {
+        (&mut self.grid, &mut self.count)
+    }
+}
+
+impl Sketch for StormSketch {
+    fn insert(&mut self, z: &[f64]) {
+        assert_eq!(z.len(), self.dim, "insert dim mismatch");
+        // Hot path: augment both PRP arms ONCE — the augmentation (norm +
+        // sqrt + allocation) is identical for every row, so hoisting it
+        // out of the row loop is a ~3x insert-throughput win (see
+        // EXPERIMENTS.md §Perf).
+        let aug_pos = crate::lsh::asym::augment(z, crate::lsh::asym::Side::Data);
+        let neg: Vec<f64> = z.iter().map(|v| -v).collect();
+        let aug_neg = crate::lsh::asym::augment(&neg, crate::lsh::asym::Side::Data);
+        for (r, h) in self.hashes.iter().enumerate() {
+            let (b1, b2) = h.insert_buckets_aug(&aug_pos, &aug_neg);
+            self.grid.increment(r, b1);
+            self.grid.increment(r, b2);
+        }
+        self.count += 1;
+    }
+
+    fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Raw normalized count estimate: `(1/n) * mean_r count[r, l_r(q)]`.
+    fn query(&self, q: &[f64]) -> f64 {
+        assert_eq!(q.len(), self.dim, "query dim mismatch");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let aug_q = crate::lsh::asym::augment(q, crate::lsh::asym::Side::Query);
+        let mut acc = 0.0;
+        for (r, h) in self.hashes.iter().enumerate() {
+            acc += self.grid.get(r, h.query_bucket_aug(&aug_q)) as f64;
+        }
+        acc / (self.hashes.len() as f64 * self.count as f64)
+    }
+
+    fn merge_from(&mut self, other: &Self) {
+        assert_eq!(self.cfg, other.cfg, "merge: config mismatch");
+        assert_eq!(self.seed, other.seed, "merge: seed (hash family) mismatch");
+        assert_eq!(self.dim, other.dim, "merge: dim mismatch");
+        self.grid.merge_from(&other.grid);
+        self.count += other.count;
+    }
+
+    fn bytes(&self) -> usize {
+        self.grid.bytes()
+    }
+}
+
+/// Classification-mode STORM sketch (Theorem 3): inserts `-y * x` with a
+/// *single* asymmetric hash per row (no pairing); the expected normalized
+/// count at query `theta` is `(1 - acos(-y <theta, x>)/pi)^p =
+//  g(theta, [x,y]) / 2^p`.
+pub struct StormClassifierSketch {
+    cfg: StormConfig,
+    grid: CounterGrid,
+    hashes: Vec<crate::lsh::asym::AsymmetricInnerProductHash>,
+    count: u64,
+    dim: usize,
+    seed: u64,
+}
+
+impl StormClassifierSketch {
+    /// `dim` is the raw feature dimension d (labels fold into the sign).
+    pub fn new(cfg: StormConfig, dim: usize, seed: u64) -> Self {
+        let hashes = (0..cfg.rows)
+            .map(|r| {
+                crate::lsh::asym::AsymmetricInnerProductHash::new(
+                    dim,
+                    cfg.power,
+                    seed.wrapping_mul(0x51afd6ed558ccd65).wrapping_add(r as u64),
+                )
+            })
+            .collect();
+        StormClassifierSketch {
+            grid: CounterGrid::new(cfg.rows, cfg.buckets(), cfg.saturating),
+            hashes,
+            count: 0,
+            dim,
+            cfg,
+            seed,
+        }
+    }
+
+    /// Insert a labelled example, `y` in {-1, +1}.
+    pub fn insert_labelled(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.dim);
+        assert!(y == 1.0 || y == -1.0, "labels must be +-1");
+        let v: Vec<f64> = x.iter().map(|xi| -y * xi).collect();
+        for (r, h) in self.hashes.iter().enumerate() {
+            let b = h.hash_side(&v, crate::lsh::asym::Side::Data);
+            self.grid.increment(r, b);
+        }
+        self.count += 1;
+    }
+
+    /// Estimated mean margin loss `mean_i g(theta, [x_i, y_i])` (with the
+    /// `2^p` constant of Theorem 3 restored).
+    pub fn estimate_risk(&self, theta: &[f64]) -> f64 {
+        assert_eq!(theta.len(), self.dim);
+        if self.count == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for (r, h) in self.hashes.iter().enumerate() {
+            acc += self.grid.get(r, h.hash_side(theta, crate::lsh::asym::Side::Query)) as f64;
+        }
+        let norm_count = acc / (self.hashes.len() as f64 * self.count as f64);
+        norm_count * (self.cfg.buckets() as f64)
+    }
+
+    /// Query with unit-ball rescaling (same argument as the regression
+    /// variant).
+    pub fn estimate_risk_scaled(&self, theta: &[f64]) -> f64 {
+        let n = norm2(theta);
+        let radius = crate::data::scale::query_radius();
+        if n <= radius {
+            return self.estimate_risk(theta);
+        }
+        let scaled: Vec<f64> = theta.iter().map(|v| v * radius / n).collect();
+        self.estimate_risk(&scaled)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.grid.bytes()
+    }
+
+    pub fn merge_from(&mut self, other: &Self) {
+        assert_eq!(self.cfg, other.cfg);
+        assert_eq!(self.seed, other.seed);
+        assert_eq!(self.dim, other.dim);
+        self.grid.merge_from(&other.grid);
+        self.count += other.count;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::prp_loss::prp_surrogate;
+    use crate::testing::{assert_close, gen_ball_point};
+    use crate::util::mathx::dot;
+    use crate::util::rng::Xoshiro256;
+
+    fn exact_surrogate(theta_tilde: &[f64], data: &[Vec<f64>], p: u32) -> f64 {
+        data.iter()
+            .map(|z| prp_surrogate(dot(theta_tilde, z), p))
+            .sum::<f64>()
+            / data.len() as f64
+    }
+
+    #[test]
+    fn estimates_surrogate_risk_unbiasedly() {
+        let mut rng = Xoshiro256::new(3);
+        let dim = 5;
+        let data: Vec<Vec<f64>> = (0..300)
+            .map(|_| gen_ball_point(&mut rng, dim, 0.9))
+            .collect();
+        let q = gen_ball_point(&mut rng, dim, 0.8);
+        let cfg = StormConfig { rows: 2000, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, dim, 17);
+        for z in &data {
+            sk.insert(z);
+        }
+        let est = sk.estimate_risk(&q);
+        let want = exact_surrogate(&q, &data, 4);
+        assert_close(est, want, 0.02);
+    }
+
+    #[test]
+    fn insert_example_augments() {
+        let cfg = StormConfig { rows: 3, power: 2, saturating: true };
+        let mut a = StormSketch::new(cfg, 3, 5);
+        let mut b = StormSketch::new(cfg, 3, 5);
+        a.insert_example(&[0.1, 0.2], 0.3);
+        b.insert(&[0.1, 0.2, 0.3]);
+        assert_eq!(a.grid().data(), b.grid().data());
+    }
+
+    #[test]
+    fn two_increments_per_row_per_insert() {
+        let cfg = StormConfig { rows: 6, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, 4, 2);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..25 {
+            let z = gen_ball_point(&mut rng, 4, 0.9);
+            sk.insert(&z);
+        }
+        for r in 0..6 {
+            let row_total: u64 = sk.grid().row(r).iter().map(|&c| c as u64).sum();
+            assert_eq!(row_total, 50, "row {r}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let cfg = StormConfig { rows: 15, power: 3, saturating: true };
+        let mut rng = Xoshiro256::new(4);
+        let d1: Vec<Vec<f64>> = (0..40).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+        let d2: Vec<Vec<f64>> = (0..60).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+        let mut s1 = StormSketch::new(cfg, 3, 9);
+        let mut s2 = StormSketch::new(cfg, 3, 9);
+        let mut su = StormSketch::new(cfg, 3, 9);
+        for z in &d1 {
+            s1.insert(z);
+            su.insert(z);
+        }
+        for z in &d2 {
+            s2.insert(z);
+            su.insert(z);
+        }
+        s1.merge_from(&s2);
+        assert_eq!(s1.grid().data(), su.grid().data());
+        assert_eq!(s1.count(), 100);
+        // And the estimates agree exactly.
+        let q = gen_ball_point(&mut rng, 3, 0.8);
+        assert_close(s1.estimate_risk(&q), su.estimate_risk(&q), 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_different_seeds_panics() {
+        let cfg = StormConfig::default();
+        let mut a = StormSketch::new(cfg, 3, 1);
+        let b = StormSketch::new(cfg, 3, 2);
+        a.merge_from(&b);
+    }
+
+    #[test]
+    fn risk_scaled_handles_large_theta() {
+        let cfg = StormConfig { rows: 50, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, 3, 8);
+        let mut rng = Xoshiro256::new(6);
+        for _ in 0..100 {
+            let z = gen_ball_point(&mut rng, 3, 0.9);
+            sk.insert(&z);
+        }
+        // Norm ~ 3.7 > 1: must not panic, must be finite.
+        let big = vec![2.0, 2.0, -2.0];
+        let r = sk.estimate_risk_scaled(&big);
+        assert!(r.is_finite() && r >= 0.0);
+    }
+
+    #[test]
+    fn classifier_sketch_estimates_margin_loss() {
+        let mut rng = Xoshiro256::new(12);
+        let dim = 3;
+        let p = 2u32;
+        let cfg = StormConfig { rows: 3000, power: p, saturating: true };
+        let mut sk = StormClassifierSketch::new(cfg, dim, 31);
+        let data: Vec<(Vec<f64>, f64)> = (0..200)
+            .map(|i| {
+                (
+                    gen_ball_point(&mut rng, dim, 0.7),
+                    if i % 2 == 0 { 1.0 } else { -1.0 },
+                )
+            })
+            .collect();
+        for (x, y) in &data {
+            sk.insert_labelled(x, *y);
+        }
+        let theta = gen_ball_point(&mut rng, dim, 0.8);
+        let est = sk.estimate_risk(&theta);
+        let want: f64 = data
+            .iter()
+            .map(|(x, y)| crate::loss::margin::margin_loss(dot(&theta, x) * y, p))
+            .sum::<f64>()
+            / data.len() as f64;
+        assert_close(est, want, 0.15 * want.max(0.5));
+    }
+
+    #[test]
+    fn classifier_rejects_bad_labels() {
+        let cfg = StormConfig::default();
+        let mut sk = StormClassifierSketch::new(cfg, 2, 0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sk.insert_labelled(&[0.1, 0.1], 0.5);
+        }));
+        assert!(result.is_err());
+    }
+}

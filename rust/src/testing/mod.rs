@@ -1,0 +1,99 @@
+//! Property-testing-lite: `proptest` is not in the offline vendor set, so
+//! invariant tests use this small seeded case-sweep framework. It provides
+//! deterministic generators over the crate's own RNG and a `cases` driver
+//! that reports the failing seed/case for reproduction.
+
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Run `n` generated cases. On panic the failing case index and derived
+/// seed are printed so the case can be replayed exactly.
+pub fn cases(n: usize, seed: u64, mut body: impl FnMut(&mut Xoshiro256, usize)) {
+    let mut root = Xoshiro256::new(seed);
+    for case in 0..n {
+        let mut rng = root.fork(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (root seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform f64 vector with entries in `[lo, hi)`.
+pub fn gen_vec(rng: &mut Xoshiro256, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| rng.uniform_range(lo, hi)).collect()
+}
+
+/// Point drawn uniformly in the ball of the given radius (rejection-free:
+/// gaussian direction + radius transform).
+pub fn gen_ball_point(rng: &mut Xoshiro256, dim: usize, radius: f64) -> Vec<f64> {
+    let dir = rng.sphere_vec(dim, 1.0);
+    let r = radius * rng.uniform().powf(1.0 / dim as f64);
+    dir.into_iter().map(|v| v * r).collect()
+}
+
+/// Random dimension in `[lo, hi]`.
+pub fn gen_dim(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Assert two floats agree to a tolerance, with a useful message.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    assert!(
+        (a - b).abs() <= tol,
+        "assert_close failed: {a} vs {b} (|diff|={} > tol={tol})",
+        (a - b).abs()
+    );
+}
+
+/// Assert two slices agree elementwise to a tolerance.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= tol,
+            "assert_allclose failed at index {i}: {} vs {} (tol={tol})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_run_deterministically() {
+        let mut log1 = Vec::new();
+        cases(5, 99, |rng, _| log1.push(rng.next_u64()));
+        let mut log2 = Vec::new();
+        cases(5, 99, |rng, _| log2.push(rng.next_u64()));
+        assert_eq!(log1, log2);
+    }
+
+    #[test]
+    fn ball_points_inside_radius() {
+        cases(50, 7, |rng, _| {
+            let dim = gen_dim(rng, 1, 20);
+            let p = gen_ball_point(rng, dim, 0.9);
+            let norm: f64 = p.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(norm <= 0.9 + 1e-9, "norm={norm}");
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fires() {
+        assert_close(1.0, 2.0, 0.5);
+    }
+
+    #[test]
+    fn allclose_passes_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-9, 2.0 - 1e-9], 1e-6);
+    }
+}

@@ -1,0 +1,274 @@
+//! Minimal, dependency-free command-line parsing.
+//!
+//! The offline vendor set has no `clap`, so the CLI is built on this small
+//! spec-driven parser: long flags (`--key value` / `--key=value`), boolean
+//! switches, positional arguments, per-command help text, and typed
+//! accessors with defaults.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Kind of an option.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    /// `--key <value>` — takes a value.
+    Value,
+    /// `--key` — boolean switch.
+    Switch,
+}
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub kind: ArgKind,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct ArgParser {
+    command: String,
+    about: String,
+    specs: Vec<ArgSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed result: values by flag name + leftover positionals.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+/// Error raised on malformed command lines.
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("could not parse --{flag} value {value:?} as {ty}")]
+    BadValue {
+        flag: String,
+        value: String,
+        ty: &'static str,
+    },
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl ArgParser {
+    pub fn new(command: &str, about: &str) -> Self {
+        ArgParser {
+            command: command.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare a `--key <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, kind: ArgKind::Value, default, help });
+        self
+    }
+
+    /// Declare a boolean `--flag` switch (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, kind: ArgKind::Switch, default: None, help });
+        self
+    }
+
+    /// Declare a positional argument (for help text only; extras are kept).
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render `--help` output.
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.command, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} [OPTIONS] {}", self.command,
+            self.positionals.iter().map(|(n, _)| format!("<{n}>")).collect::<Vec<_>>().join(" "));
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\nARGS:");
+            for (n, h) in &self.positionals {
+                let _ = writeln!(s, "  <{n:<14}> {h}");
+            }
+        }
+        let _ = writeln!(s, "\nOPTIONS:");
+        for spec in &self.specs {
+            let tail = match (spec.kind, spec.default) {
+                (ArgKind::Value, Some(d)) => format!("{} [default: {}]", spec.help, d),
+                _ => spec.help.to_string(),
+            };
+            let flag = match spec.kind {
+                ArgKind::Value => format!("--{} <v>", spec.name),
+                ArgKind::Switch => format!("--{}", spec.name),
+            };
+            let _ = writeln!(s, "  {flag:<22} {tail}");
+        }
+        let _ = writeln!(s, "  {:<22} print this help", "--help");
+        s
+    }
+
+    /// Parse a token stream (not including argv[0] / the subcommand name).
+    pub fn parse<I, S>(&self, args: I) -> Result<ParsedArgs, ArgError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = ParsedArgs::default();
+        for spec in &self.specs {
+            if let (ArgKind::Value, Some(d)) = (spec.kind, spec.default) {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+            if spec.kind == ArgKind::Switch {
+                out.switches.insert(spec.name.to_string(), false);
+            }
+        }
+        let mut it = args.into_iter().map(Into::into).peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(ArgError::HelpRequested);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| ArgError::Unknown(name.clone()))?;
+                match spec.kind {
+                    ArgKind::Switch => {
+                        out.switches.insert(name, true);
+                    }
+                    ArgKind::Value => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it.next().ok_or_else(|| ArgError::MissingValue(name.clone()))?,
+                        };
+                        out.values.insert(name, v);
+                    }
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl ParsedArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_string(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, ArgError> {
+        self.typed(name, "usize", |v| v.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, ArgError> {
+        self.typed(name, "u64", |v| v.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, ArgError> {
+        self.typed(name, "f64", |v| v.parse::<f64>().ok())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    fn typed<T>(
+        &self,
+        name: &str,
+        ty: &'static str,
+        parse: impl Fn(&str) -> Option<T>,
+    ) -> Result<T, ArgError> {
+        let raw = self.get(name).ok_or_else(|| ArgError::MissingValue(name.to_string()))?;
+        parse(raw).ok_or_else(|| ArgError::BadValue {
+            flag: name.to_string(),
+            value: raw.to_string(),
+            ty,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> ArgParser {
+        ArgParser::new("demo", "test parser")
+            .opt("rows", Some("50"), "sketch rows")
+            .opt("sigma", Some("0.5"), "sphere radius")
+            .opt("name", None, "dataset name")
+            .switch("verbose", "chatty output")
+            .positional("input", "input file")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parser().parse(Vec::<String>::new()).unwrap();
+        assert_eq!(p.get_usize("rows").unwrap(), 50);
+        assert_eq!(p.get_f64("sigma").unwrap(), 0.5);
+        assert!(!p.get_bool("verbose"));
+        assert!(p.get("name").is_none());
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = parser().parse(["--rows", "7", "--sigma=0.25"]).unwrap();
+        assert_eq!(p.get_usize("rows").unwrap(), 7);
+        assert_eq!(p.get_f64("sigma").unwrap(), 0.25);
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let p = parser().parse(["--verbose", "a.csv", "b.csv"]).unwrap();
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.positionals(), &["a.csv".to_string(), "b.csv".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(parser().parse(["--nope"]), Err(ArgError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(parser().parse(["--rows"]), Err(ArgError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(matches!(
+            parser().parse(["--rows", "xyz"]).unwrap().get_usize("rows"),
+            Err(ArgError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn help_requested() {
+        assert!(matches!(parser().parse(["--help"]), Err(ArgError::HelpRequested)));
+        let usage = parser().usage();
+        assert!(usage.contains("--rows"));
+        assert!(usage.contains("demo"));
+    }
+}

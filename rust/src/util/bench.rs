@@ -1,0 +1,175 @@
+//! Micro-benchmark framework (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets in `rust/benches/` are `harness = false` binaries
+//! that drive this module: per-benchmark warmup, adaptive iteration count
+//! targeting a fixed measurement window, and mean / stddev / p50 / p99 /
+//! throughput reporting on stdout in a stable, grep-friendly format.
+
+use crate::util::mathx::{mean, percentile, variance};
+use std::time::Instant;
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Seconds of warmup before measuring.
+    pub warmup_secs: f64,
+    /// Target seconds of measurement.
+    pub measure_secs: f64,
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Maximum number of timed samples.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_secs: 0.2,
+            measure_secs: 1.0,
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+/// Fast settings for CI / quick runs (`STORM_BENCH_FAST=1`).
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var("STORM_BENCH_FAST").is_ok() {
+        BenchConfig {
+            warmup_secs: 0.02,
+            measure_secs: 0.1,
+            min_samples: 3,
+            max_samples: 200,
+        }
+    } else {
+        BenchConfig::default()
+    }
+}
+
+/// Summary statistics for one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|n| n as f64 / self.mean_s)
+    }
+
+    /// Stable single-line report, e.g.
+    /// `bench storm_insert       mean=1.23ms p50=1.20ms p99=1.50ms n=812 thrpt=81300.0/s`
+    pub fn report(&self) -> String {
+        let base = format!(
+            "bench {:<36} mean={} p50={} p99={} sd={} n={}",
+            self.name,
+            crate::util::timer::human_duration(self.mean_s),
+            crate::util::timer::human_duration(self.p50_s),
+            crate::util::timer::human_duration(self.p99_s),
+            crate::util::timer::human_duration(self.std_s),
+            self.samples,
+        );
+        match self.throughput() {
+            Some(t) => format!("{base} thrpt={t:.1}/s"),
+            None => base,
+        }
+    }
+}
+
+/// Run one benchmark: `f` is invoked repeatedly and timed per call.
+pub fn bench<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    bench_with_items(name, cfg, None, &mut f)
+}
+
+/// Like [`bench`] but records `items` work units per call for throughput.
+pub fn bench_items<F: FnMut()>(name: &str, cfg: BenchConfig, items: u64, mut f: F) -> BenchResult {
+    bench_with_items(name, cfg, Some(items), &mut f)
+}
+
+fn bench_with_items(
+    name: &str,
+    cfg: BenchConfig,
+    items: Option<u64>,
+    f: &mut dyn FnMut(),
+) -> BenchResult {
+    // Warmup.
+    let warm_start = Instant::now();
+    while warm_start.elapsed().as_secs_f64() < cfg.warmup_secs {
+        f();
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let run_start = Instant::now();
+    while (samples.len() < cfg.min_samples
+        || run_start.elapsed().as_secs_f64() < cfg.measure_secs)
+        && samples.len() < cfg.max_samples
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        samples: samples.len(),
+        mean_s: mean(&samples),
+        std_s: variance(&samples).sqrt(),
+        p50_s: percentile(&samples, 50.0),
+        p99_s: percentile(&samples, 99.0),
+        items,
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Print a section header so bench output groups visibly per figure/table.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.01,
+            min_samples: 3,
+            max_samples: 50,
+        };
+        let r = bench("unit_test_noop", cfg, || {
+            black_box(1 + 1);
+        });
+        assert!(r.samples >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.report().contains("unit_test_noop"));
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let cfg = BenchConfig {
+            warmup_secs: 0.0,
+            measure_secs: 0.01,
+            min_samples: 3,
+            max_samples: 50,
+        };
+        let r = bench_items("unit_test_items", cfg, 100, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Scalar math helpers shared by the LSH collision-probability formulas,
+//! surrogate losses and metrics.
+
+/// Numerically-guarded arccos: clamps the argument into `[-1, 1]` before
+/// calling `acos`. The asymmetric inner-product hash guarantees
+/// `|<a, b>| <= 1` analytically, but floating-point dot products can
+/// overshoot by a few ulps which would yield NaN.
+#[inline]
+pub fn acos_clamped(t: f64) -> f64 {
+    t.clamp(-1.0, 1.0).acos()
+}
+
+/// SRP single-hyperplane collision probability for *angle*:
+/// `1 - acos(t)/pi` where `t` is the (possibly unnormalized) inner product
+/// fed through the asymmetric transform. This is the building block `f` in
+/// the paper's Theorem 2.
+#[inline]
+pub fn srp_collision(t: f64) -> f64 {
+    1.0 - acos_clamped(t) / std::f64::consts::PI
+}
+
+/// Derivative of [`srp_collision`] w.r.t. `t`: `1 / (pi * sqrt(1 - t^2))`.
+/// Guarded away from the endpoints.
+#[inline]
+pub fn srp_collision_deriv(t: f64) -> f64 {
+    let t = t.clamp(-1.0 + 1e-12, 1.0 - 1e-12);
+    1.0 / (std::f64::consts::PI * (1.0 - t * t).sqrt())
+}
+
+/// Error function via the Abramowitz–Stegun 7.1.26 rational approximation
+/// (|err| < 1.5e-7), enough for the gaussian-CDF uses in tests/metrics.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Dot product of equal-length slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `a += scale * b` in place.
+#[inline]
+pub fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        a[i] += scale * b[i];
+    }
+}
+
+/// Mean of a slice (0 for empty).
+#[inline]
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance of a slice (0 for len < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Percentile (nearest-rank) of an unsorted slice; `q` in `[0, 100]`.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Next power of two at or above `n` (n >= 1).
+#[inline]
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acos_clamped_handles_overshoot() {
+        assert!(acos_clamped(1.0 + 1e-12).is_finite());
+        assert!(acos_clamped(-1.0 - 1e-12).is_finite());
+        assert!((acos_clamped(0.0) - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn srp_collision_endpoints() {
+        assert!((srp_collision(1.0) - 1.0).abs() < 1e-12);
+        assert!(srp_collision(-1.0).abs() < 1e-12);
+        assert!((srp_collision(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn srp_collision_monotone_increasing() {
+        let mut prev = srp_collision(-1.0);
+        let mut t = -1.0 + 0.01;
+        while t <= 1.0 {
+            let cur = srp_collision(t);
+            assert!(cur >= prev);
+            prev = cur;
+            t += 0.01;
+        }
+    }
+
+    #[test]
+    fn srp_deriv_matches_finite_difference() {
+        for &t in &[-0.9, -0.5, 0.0, 0.3, 0.8] {
+            let h = 1e-6;
+            let fd = (srp_collision(t + h) - srp_collision(t - h)) / (2.0 * h);
+            let an = srp_collision_deriv(t);
+            assert!((fd - an).abs() < 1e-5, "t={t} fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn erf_known_values() {
+        // The A&S 7.1.26 coefficients sum to 1 - 1e-9, not exactly 1.
+        assert!(erf(0.0).abs() < 1e-8);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        for &x in &[0.1, 0.7, 1.5, 2.5] {
+            assert!((normal_cdf(x) + normal_cdf(-x) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dot_norm_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert!((dot(&a, &b) - 32.0).abs() < 1e-12);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        let mut c = [1.0, 1.0, 1.0];
+        axpy(&mut c, 2.0, &a);
+        assert_eq!(c, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let xs = [2.0, 4.0, 6.0];
+        assert!((mean(&xs) - 4.0).abs() < 1e-12);
+        assert!((variance(&xs) - 8.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundational utilities built from scratch for the offline environment:
+//! PRNGs, math helpers, CLI argument parsing, logging, timing and the
+//! micro-benchmark framework used by `rust/benches/`.
+
+pub mod rng;
+pub mod mathx;
+pub mod argparse;
+pub mod logging;
+pub mod timer;
+pub mod bench;

@@ -1,0 +1,122 @@
+//! CLI integration: drive the compiled `storm` binary end to end the way
+//! a user would, asserting exit codes and output shape.
+
+use std::process::Command;
+
+fn storm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_storm"))
+}
+
+#[test]
+fn help_and_usage() {
+    let out = storm().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("train") && text.contains("experiment"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = storm().arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn info_lists_datasets() {
+    let out = storm().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["airfoil", "autos", "parkinsons"] {
+        assert!(text.contains(name), "missing {name}");
+    }
+}
+
+#[test]
+fn experiment_list_and_cheap_run() {
+    let out = storm().args(["experiment", "--list"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fig4") && text.contains("table1"));
+
+    let out = storm().args(["experiment", "fig3b"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("# fig3b"));
+    // The p=4 peak must appear in the series (column format "4.000000e0").
+    assert!(text.contains("4.000000e0"));
+}
+
+#[test]
+fn experiment_unknown_id_fails() {
+    let out = storm().args(["experiment", "nope"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn sketch_subcommand_reports_compression() {
+    let out = storm()
+        .args(["sketch", "--dataset", "autos", "--rows", "50"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sketch R=50"));
+    assert!(text.contains("compression"));
+}
+
+#[test]
+fn train_small_run_with_checkpoint() {
+    let ckpt = std::env::temp_dir().join("storm_cli_ckpt.txt");
+    let _ = std::fs::remove_file(&ckpt);
+    let out = storm()
+        .args([
+            "train",
+            "--dataset",
+            "synth2d-reg",
+            "--rows",
+            "100",
+            "--iters",
+            "50",
+            "--devices",
+            "2",
+            "--checkpoint",
+            ckpt.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("storm-mse="));
+    // Checkpoint parses back.
+    let state = storm::coordinator::state::TrainingState::load(&ckpt).unwrap();
+    assert_eq!(state.theta.len(), 2);
+    assert_eq!(state.iter, 50);
+}
+
+#[test]
+fn train_rejects_bad_dataset_and_backend() {
+    let out = storm().args(["train", "--dataset", "nope"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let out = storm()
+        .args(["train", "--backend", "cuda"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+}
+
+#[test]
+fn config_files_parse() {
+    // The checked-in configs must stay loadable.
+    for f in ["configs/airfoil.toml", "configs/edge_fleet_xla.toml"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
+        let cfg = storm::config::RunConfig::from_toml_file(&path)
+            .unwrap_or_else(|e| panic!("{f}: {e}"));
+        assert_eq!(cfg.storm.rows, 1000);
+        assert_eq!(cfg.fleet.devices, 8);
+    }
+}

@@ -1,0 +1,222 @@
+//! Integration: the AOT-compiled XLA artifacts against the pure-rust
+//! scalar path. This is the cross-language parity suite — both backends
+//! share the same hyperplanes (runtime inputs), so their counters and
+//! risk estimates must agree bit-for-bit (counts) / to f32 rounding
+//! (risks).
+//!
+//! Requires `make artifacts`; every test skips with a notice if the
+//! artifact directory is missing so `cargo test` works standalone.
+
+use storm::config::StormConfig;
+use storm::coordinator::oracle::XlaRiskOracle;
+use storm::optim::RiskOracle;
+use storm::runtime::XlaStorm;
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+use storm::testing::gen_ball_point;
+use storm::util::rng::Xoshiro256;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.toml").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+/// Build a filled sketch in the synth2d configuration (D = 3, R = 100,
+/// p = 4 — matches the compiled `synth2d` artifact pair).
+fn filled_sketch(n: usize, seed: u64) -> (StormSketch, Vec<Vec<f64>>) {
+    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let mut sk = StormSketch::new(cfg, 3, seed);
+    let mut rng = Xoshiro256::new(seed ^ 0xDEAD);
+    let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
+    for z in &data {
+        sk.insert(z);
+    }
+    (sk, data)
+}
+
+fn load_exe(sk: &StormSketch) -> XlaStorm {
+    XlaStorm::load(ARTIFACTS, 3, 100, 4, sk.hashes()).expect("load synth2d artifacts")
+}
+
+#[test]
+fn insert_counts_match_rust_exactly() {
+    require_artifacts!();
+    let (sk, data) = filled_sketch(200, 11);
+    let exe = load_exe(&sk);
+    // Feed the same examples through the XLA insert kernel in batches.
+    let mut total = vec![0u64; sk.grid().data().len()];
+    for chunk in data.chunks(exe.batch_size()) {
+        let delta = exe.insert_counts(chunk).expect("insert execute");
+        for (t, d) in total.iter_mut().zip(&delta) {
+            *t += *d as u64;
+        }
+    }
+    let rust_counts: Vec<u64> = sk.grid().data().iter().map(|&c| c as u64).collect();
+    assert_eq!(total, rust_counts, "XLA and rust counters diverged");
+}
+
+#[test]
+fn short_batch_padding_contributes_nothing() {
+    require_artifacts!();
+    let (sk, _) = filled_sketch(1, 13);
+    let exe = load_exe(&sk);
+    let mut rng = Xoshiro256::new(5);
+    let z = gen_ball_point(&mut rng, 3, 0.8);
+    // Single example in a padded batch.
+    let delta = exe.insert_counts(std::slice::from_ref(&z)).unwrap();
+    let total: u64 = delta.iter().map(|&c| c as u64).sum();
+    // Exactly 2 increments per row, R = 100.
+    assert_eq!(total, 200);
+}
+
+#[test]
+fn empty_batch_is_all_zero() {
+    require_artifacts!();
+    let (sk, _) = filled_sketch(1, 17);
+    let exe = load_exe(&sk);
+    let delta = exe.insert_counts(&[]).unwrap();
+    assert!(delta.iter().all(|&c| c == 0));
+}
+
+#[test]
+fn query_risks_match_rust_estimates() {
+    require_artifacts!();
+    let (sk, _) = filled_sketch(300, 19);
+    let exe = load_exe(&sk);
+    let mut rng = Xoshiro256::new(7);
+    let queries: Vec<Vec<f64>> = (0..10).map(|_| gen_ball_point(&mut rng, 3, 0.85)).collect();
+    let got = exe
+        .query_risks(sk.grid().data(), sk.count(), &queries)
+        .expect("query execute");
+    for (q, g) in queries.iter().zip(&got) {
+        let want = sk.estimate_risk(q);
+        assert!(
+            (g - want).abs() < 1e-5,
+            "query mismatch: xla={g} rust={want} q={q:?}"
+        );
+    }
+}
+
+#[test]
+fn xla_oracle_agrees_with_sketch_oracle() {
+    require_artifacts!();
+    let (sk, _) = filled_sketch(400, 23);
+    let exe = load_exe(&sk);
+    let oracle = XlaRiskOracle::new(&exe, &sk);
+    let mut rng = Xoshiro256::new(9);
+    for _ in 0..5 {
+        // Out-of-ball theta~: both paths must rescale identically.
+        let mut tt = gen_ball_point(&mut rng, 2, 1.5);
+        tt.push(-1.0);
+        let want = sk.risk(&tt);
+        let got = oracle.risk(&tt);
+        assert!(
+            (got - want).abs() < 1e-5,
+            "oracle mismatch: xla={got} rust={want}"
+        );
+    }
+    assert!(oracle.last_error().is_none());
+    assert_eq!(oracle.evals(), 5);
+}
+
+#[test]
+fn batched_probes_use_one_execution() {
+    require_artifacts!();
+    let (sk, _) = filled_sketch(100, 29);
+    let exe = load_exe(&sk);
+    let oracle = XlaRiskOracle::new(&exe, &sk);
+    let mut rng = Xoshiro256::new(11);
+    let candidates: Vec<Vec<f64>> = (0..16)
+        .map(|_| {
+            let mut t = gen_ball_point(&mut rng, 2, 0.5);
+            t.push(-1.0);
+            t
+        })
+        .collect();
+    let before = oracle.executions();
+    let risks = oracle.risks(&candidates);
+    assert_eq!(risks.len(), 16);
+    // Compiled K = 16 — exactly one execution for 16 probes.
+    assert_eq!(oracle.executions() - before, 1);
+}
+
+#[test]
+fn fused_dfo_step_reduces_risk_on_average() {
+    require_artifacts!();
+    use storm::coordinator::oracle::fused_dfo_step;
+    let (sk, _) = filled_sketch(500, 31);
+    let exe = load_exe(&sk);
+    let oracle = XlaRiskOracle::new(&exe, &sk);
+    let mut theta_tilde = vec![0.0, 0.0, -1.0];
+    let mut rng = Xoshiro256::new(13);
+    let first = fused_dfo_step(&oracle, &mut theta_tilde, 8, 0.3, 0.6, &mut rng);
+    let mut last = first;
+    for _ in 0..60 {
+        last = fused_dfo_step(&oracle, &mut theta_tilde, 8, 0.3, 0.6, &mut rng);
+    }
+    assert!(last.is_finite());
+    assert_eq!(theta_tilde[2], -1.0);
+    // The trajectory must have moved.
+    assert!(theta_tilde[0].abs() + theta_tilde[1].abs() > 1e-6);
+}
+
+#[test]
+fn bulk_ingest_matches_scalar_path() {
+    require_artifacts!();
+    use storm::coordinator::ingest::xla_bulk_ingest;
+    use storm::data::dataset::Dataset;
+    use storm::data::stream::ReplayStream;
+    use storm::linalg::matrix::Matrix;
+    // A 2-feature dataset whose augmented dim D = 3 matches the synth2d
+    // artifact pair.
+    let mut rng = Xoshiro256::new(41);
+    let n = 700;
+    let x = Matrix::from_fn(n, 2, |r, c| {
+        let _ = (r, c);
+        0.0
+    });
+    let mut ds = Dataset::new("bulk", x, vec![0.0; n]);
+    for i in 0..n {
+        let p = gen_ball_point(&mut rng, 3, 0.9);
+        ds.x.row_mut(i).copy_from_slice(&p[..2]);
+        ds.y[i] = p[2];
+    }
+    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    // Scalar reference.
+    let mut scalar = StormSketch::new(cfg, 3, 47);
+    for i in 0..ds.len() {
+        scalar.insert(&ds.augmented(i));
+    }
+    // XLA bulk path.
+    let mut bulk = StormSketch::new(cfg, 3, 47);
+    let exe = XlaStorm::load(ARTIFACTS, 3, 100, 4, bulk.hashes()).unwrap();
+    let mut stream = ReplayStream::new(ds);
+    let report = xla_bulk_ingest(&mut stream, &exe, &mut bulk).unwrap();
+    assert_eq!(report.examples, n as u64);
+    assert_eq!(report.batches, (n as u64).div_ceil(exe.batch_size() as u64));
+    assert_eq!(bulk.count(), scalar.count());
+    assert_eq!(
+        bulk.grid().data(),
+        scalar.grid().data(),
+        "bulk-ingest counters diverged from scalar path"
+    );
+}
+
+#[test]
+fn wrong_config_is_a_clean_error() {
+    require_artifacts!();
+    let cfg = StormConfig { rows: 33, power: 4, saturating: true };
+    let sk = StormSketch::new(cfg, 3, 1);
+    let err = XlaStorm::load(ARTIFACTS, 3, 33, 4, sk.hashes());
+    assert!(err.is_err(), "rows=33 is not compiled; load must fail");
+}

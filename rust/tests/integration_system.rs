@@ -1,0 +1,131 @@
+//! System-level integration: the whole pure-rust stack composed end to
+//! end — datasets, scaling, fleet, sketch algebra, optimizers, baselines,
+//! checkpointing — without the XLA runtime (that path is covered by
+//! `integration_runtime.rs`).
+
+use storm::baselines::CompressedRegression;
+use storm::config::{FleetConfig, OptimizerConfig, RunConfig, StormConfig};
+use storm::coordinator::driver::{train, QueryBackend};
+use storm::coordinator::state::TrainingState;
+use storm::data::registry;
+use storm::data::scale::scale_to_unit_ball;
+use storm::edge::topology::Topology;
+use storm::linalg::solve::mse;
+use storm::sketch::serialize::{decode, encode};
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+
+fn base_cfg(dataset: &str) -> RunConfig {
+    RunConfig {
+        dataset: dataset.to_string(),
+        storm: StormConfig { rows: 200, power: 4, saturating: true },
+        optimizer: OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters: 250, seed: 3 },
+        fleet: FleetConfig {
+            devices: 4,
+            batch: 64,
+            channel_capacity: 8,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            seed: 2,
+        },
+        artifacts_dir: None,
+    }
+}
+
+#[test]
+fn full_pipeline_on_each_table1_dataset() {
+    for name in registry::TABLE1_NAMES {
+        let cfg = base_cfg(name);
+        let ds = registry::load(name, 3).unwrap();
+        let n = ds.len() as u64;
+        let report = train(&cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(report.examples, n, "{name}");
+        assert!(report.mse_storm.is_finite(), "{name}");
+        assert!(report.mse_ls <= report.mse_storm + 1e-12, "{name}: LS must be the floor");
+        assert!(report.network_bytes > 0, "{name}");
+        assert_eq!(report.theta.len(), registry::info(name).unwrap().d);
+    }
+}
+
+#[test]
+fn training_is_deterministic_given_seeds() {
+    let cfg = base_cfg("autos");
+    let a = train(&cfg, registry::load("autos", 3).unwrap(), Topology::Star, QueryBackend::Rust)
+        .unwrap();
+    let b = train(&cfg, registry::load("autos", 3).unwrap(), Topology::Star, QueryBackend::Rust)
+        .unwrap();
+    assert_eq!(a.theta, b.theta);
+    assert_eq!(a.mse_storm, b.mse_storm);
+}
+
+#[test]
+fn sketches_travel_through_wire_format_between_fleet_stages() {
+    // Simulate a device shipping to a foreign aggregator process: encode,
+    // decode, merge, train — the decoded sketch must train identically.
+    let mut ds = registry::load("airfoil", 5).unwrap();
+    scale_to_unit_ball(&mut ds, 0.9);
+    let cfg = StormConfig { rows: 150, power: 4, saturating: true };
+    let mut local = StormSketch::new(cfg, ds.dim() + 1, 11);
+    for i in 0..ds.len() {
+        local.insert(&ds.augmented(i));
+    }
+    let remote = decode(&encode(&local)).unwrap();
+    let ocfg = OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters: 150, seed: 1 };
+    let t_local = storm::optim::dfo::DfoOptimizer::new(ocfg, ds.dim()).run(&local, 150);
+    let t_remote = storm::optim::dfo::DfoOptimizer::new(ocfg, ds.dim()).run(&remote, 150);
+    assert_eq!(t_local, t_remote);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_driver() {
+    let cfg = base_cfg("autos");
+    let report = train(&cfg, registry::load("autos", 3).unwrap(), Topology::Star, QueryBackend::Rust)
+        .unwrap();
+    let state = TrainingState {
+        dataset: report.dataset.clone(),
+        iter: cfg.optimizer.iters,
+        theta: report.theta.clone(),
+        trace: report.trace.clone(),
+    };
+    let path = std::env::temp_dir().join("storm_integration_ckpt.txt");
+    state.save(&path).unwrap();
+    let back = TrainingState::load(&path).unwrap();
+    assert_eq!(back.theta, report.theta);
+    assert_eq!(back.trace.len(), report.trace.len());
+}
+
+#[test]
+fn baselines_and_storm_share_memory_accounting() {
+    // Figure-4 prerequisite: all methods quantize budgets consistently.
+    let mut ds = registry::load("airfoil", 7).unwrap();
+    scale_to_unit_ball(&mut ds, 0.9);
+    let budget = storm::baselines::sample_bytes(64, ds.dim());
+    for method in [
+        &storm::baselines::random_sampling::RandomSampling as &dyn CompressedRegression,
+        &storm::baselines::leverage::LeverageSampling,
+        &storm::baselines::cw::ClarksonWoodruff,
+    ] {
+        let (theta, bytes) = method.fit(&ds, budget, 1);
+        assert_eq!(theta.len(), ds.dim(), "{}", method.name());
+        assert!(bytes <= budget, "{} used {bytes} > {budget}", method.name());
+        assert!(mse(&ds.x, &ds.y, &theta).is_finite(), "{}", method.name());
+    }
+}
+
+#[test]
+fn fleet_with_slow_links_still_exact() {
+    // Latency + tight channels stress the backpressure path; counters
+    // must remain exactly mergeable.
+    let mut cfg = base_cfg("autos");
+    cfg.fleet.link_latency_us = 500;
+    cfg.fleet.channel_capacity = 1;
+    cfg.fleet.devices = 6;
+    let a = train(&cfg, registry::load("autos", 3).unwrap(), Topology::Chain, QueryBackend::Rust)
+        .unwrap();
+    let mut fast = base_cfg("autos");
+    fast.fleet.devices = 6;
+    let b = train(&fast, registry::load("autos", 3).unwrap(), Topology::Star, QueryBackend::Rust)
+        .unwrap();
+    // Identical merged counters => identical training outcome.
+    assert_eq!(a.theta, b.theta);
+}

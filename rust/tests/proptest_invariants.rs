@@ -1,0 +1,172 @@
+//! Property-based invariant tests over randomized configurations (the
+//! crate's seeded case-sweep framework stands in for proptest, which is
+//! not in the offline vendor set).
+
+use storm::config::StormConfig;
+use storm::lsh::asym::{augment, Side};
+use storm::lsh::prp::PairedRandomProjection;
+use storm::lsh::srp::SignedRandomProjection;
+use storm::lsh::LshFunction;
+use storm::sketch::serialize::{decode, encode};
+use storm::sketch::storm::StormSketch;
+use storm::sketch::Sketch;
+use storm::testing::{assert_close, cases, gen_ball_point, gen_dim};
+use storm::util::mathx::{dot, norm2};
+use storm::util::rng::Rng;
+
+#[test]
+fn prop_srp_hash_in_range_any_dim_and_power() {
+    cases(200, 101, |rng, case| {
+        let dim = gen_dim(rng, 1, 40);
+        let p = 1 + (case % 12) as u32;
+        let h = SignedRandomProjection::new(dim, p, case as u64);
+        let x: Vec<f64> = (0..dim).map(|_| rng.uniform_range(-5.0, 5.0)).collect();
+        assert!(h.hash(&x) < h.range());
+    });
+}
+
+#[test]
+fn prop_augmentation_unit_norm_and_ip_preserving() {
+    cases(200, 102, |rng, _| {
+        let dim = gen_dim(rng, 1, 30);
+        let a = gen_ball_point(rng, dim, 0.999);
+        let b = gen_ball_point(rng, dim, 0.999);
+        let aq = augment(&a, Side::Query);
+        let ab = augment(&b, Side::Data);
+        assert_close(norm2(&aq), 1.0, 1e-9);
+        assert_close(norm2(&ab), 1.0, 1e-9);
+        assert_close(dot(&aq, &ab), dot(&a, &b), 1e-9);
+    });
+}
+
+#[test]
+fn prop_sketch_row_mass_is_2n() {
+    // Invariant: every row's counters sum to exactly 2 * inserts.
+    cases(60, 103, |rng, case| {
+        let dim = gen_dim(rng, 1, 12);
+        let rows = 1 + (case % 20);
+        let p = 1 + (case % 6) as u32;
+        let cfg = StormConfig { rows, power: p, saturating: true };
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        let n = 1 + (rng.next_u64() % 60) as usize;
+        for _ in 0..n {
+            sk.insert(&gen_ball_point(rng, dim, 0.95));
+        }
+        for r in 0..rows {
+            let mass: u64 = sk.grid().row(r).iter().map(|&c| c as u64).sum();
+            assert_eq!(mass, 2 * n as u64);
+        }
+        assert_eq!(sk.count(), n as u64);
+    });
+}
+
+#[test]
+fn prop_merge_commutative_and_associative() {
+    cases(40, 104, |rng, case| {
+        let cfg = StormConfig { rows: 8, power: 3, saturating: true };
+        let dim = gen_dim(rng, 1, 8);
+        let seed = case as u64;
+        let mut mk = |rng: &mut storm::util::rng::Xoshiro256, n: usize| {
+            let mut s = StormSketch::new(cfg, dim, seed);
+            for _ in 0..n {
+                s.insert(&gen_ball_point(rng, dim, 0.9));
+            }
+            s
+        };
+        let a = mk(rng, 10);
+        let b = mk(rng, 15);
+        let c = mk(rng, 7);
+        // (a + b) + c == a + (b + c), and a + b == b + a.
+        let mut ab = StormSketch::new(cfg, dim, seed);
+        ab.merge_from(&a);
+        ab.merge_from(&b);
+        let mut ba = StormSketch::new(cfg, dim, seed);
+        ba.merge_from(&b);
+        ba.merge_from(&a);
+        assert_eq!(ab.grid().data(), ba.grid().data());
+        let mut abc1 = ab;
+        abc1.merge_from(&c);
+        let mut bc = StormSketch::new(cfg, dim, seed);
+        bc.merge_from(&b);
+        bc.merge_from(&c);
+        let mut abc2 = StormSketch::new(cfg, dim, seed);
+        abc2.merge_from(&a);
+        abc2.merge_from(&bc);
+        assert_eq!(abc1.grid().data(), abc2.grid().data());
+        assert_eq!(abc1.count(), 32);
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_any_config() {
+    cases(60, 105, |rng, case| {
+        let rows = 1 + (case % 30);
+        let p = 1 + (case % 8) as u32;
+        let dim = gen_dim(rng, 1, 16);
+        let cfg = StormConfig { rows, power: p, saturating: true };
+        let mut sk = StormSketch::new(cfg, dim, case as u64 ^ 0xABCD);
+        let n = (rng.next_u64() % 40) as usize;
+        for _ in 0..n {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let back = decode(&encode(&sk)).unwrap();
+        assert_eq!(back.grid().data(), sk.grid().data());
+        assert_eq!(back.count(), sk.count());
+        assert_eq!(back.dim(), sk.dim());
+    });
+}
+
+#[test]
+fn prop_query_estimate_bounded() {
+    // 0 <= raw query estimate <= 2 (both PRP arms can collide).
+    cases(60, 106, |rng, case| {
+        let dim = gen_dim(rng, 1, 10);
+        let cfg = StormConfig { rows: 20, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        for _ in 0..30 {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let q = gen_ball_point(rng, dim, 0.9);
+        let v = sk.query(&q);
+        assert!((0.0..=2.0 + 1e-12).contains(&v), "estimate {v} out of range");
+    });
+}
+
+#[test]
+fn prop_prp_insert_buckets_antipodal_structure() {
+    // The two insert buckets correspond to z and -z under the same hash;
+    // expected_count is symmetric g(t) = g(-t).
+    cases(100, 107, |rng, case| {
+        let dim = gen_dim(rng, 1, 10);
+        let h = PairedRandomProjection::new(dim, 4, case as u64);
+        let z = gen_ball_point(rng, dim, 0.9);
+        let (b1, b2) = h.insert_buckets(&z);
+        assert!(b1 < h.range() && b2 < h.range());
+        let q = gen_ball_point(rng, dim, 0.9);
+        let neg_q: Vec<f64> = q.iter().map(|v| -v).collect();
+        assert_close(h.expected_count(&q, &z), h.expected_count(&neg_q, &z), 1e-12);
+    });
+}
+
+#[test]
+fn prop_scaled_estimates_invariant_to_theta_magnitude_beyond_ball() {
+    // estimate_risk_scaled(c * theta~) is constant for c past the ball
+    // radius (pure direction dependence) — the optimizer relies on this.
+    cases(40, 108, |rng, case| {
+        let dim = gen_dim(rng, 2, 8);
+        let cfg = StormConfig { rows: 30, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        for _ in 0..50 {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let mut q = gen_ball_point(rng, dim, 1.0);
+        // Push far outside the ball.
+        for v in &mut q {
+            *v *= 5.0;
+        }
+        let r1 = sk.estimate_risk_scaled(&q);
+        let q2: Vec<f64> = q.iter().map(|v| v * 3.0).collect();
+        let r2 = sk.estimate_risk_scaled(&q2);
+        assert_close(r1, r2, 1e-12);
+    });
+}
