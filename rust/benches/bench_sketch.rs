@@ -1,26 +1,48 @@
-//! Sketch micro-benchmarks: insert throughput, query latency, merge and
-//! wire-format throughput — the L3 hot-path numbers for EXPERIMENTS.md
-//! §Perf. Run with `cargo bench --bench bench_sketch`; set
-//! `STORM_BENCH_FAST=1` for a quick pass.
+//! Sketch micro-benchmarks: insert throughput (fused hash-bank batch
+//! path vs the seed scalar path), query latency (scalar and batched),
+//! merge and wire-format throughput — the L3 hot-path numbers for
+//! EXPERIMENTS.md §Perf. Run with `cargo bench --bench bench_sketch`;
+//! set `STORM_BENCH_FAST=1` for a quick pass. Alongside the human
+//! output, results are written to `BENCH_sketch.json` (see
+//! `storm::util::bench::JsonReporter`) so the perf trajectory is tracked
+//! across PRs.
 
 use storm::config::StormConfig;
 use storm::sketch::serialize::{decode, encode};
 use storm::sketch::storm::StormSketch;
 use storm::sketch::Sketch;
 use storm::testing::gen_ball_point;
-use storm::util::bench::{bench_items, black_box, config_from_env, section};
+use storm::util::bench::{bench_items, black_box, config_from_env, section, JsonReporter};
 use storm::util::rng::Xoshiro256;
 
 fn main() {
     let cfg = config_from_env();
-    section("sketch: insert throughput (scalar rust path)");
+    let mut json = JsonReporter::new("sketch");
+
+    section("sketch: insert throughput (fused hash-bank batch path)");
     for (rows, power) in [(50usize, 4u32), (100, 4), (400, 4), (100, 8)] {
         let scfg = StormConfig { rows, power, saturating: true };
         let mut rng = Xoshiro256::new(1);
         let data: Vec<Vec<f64>> = (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();
         let mut sk = StormSketch::new(scfg, 22, 7);
-        bench_items(
+        json.record(bench_items(
             &format!("insert_1k_R{rows}_p{power}_d22"),
+            cfg,
+            data.len() as u64,
+            || {
+                sk.insert_batch(&data);
+            },
+        ));
+    }
+
+    section("sketch: insert throughput (seed scalar path, for comparison)");
+    for (rows, power) in [(100usize, 4u32)] {
+        let scfg = StormConfig { rows, power, saturating: true };
+        let mut rng = Xoshiro256::new(1);
+        let data: Vec<Vec<f64>> = (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();
+        let mut sk = StormSketch::new(scfg, 22, 7);
+        json.record(bench_items(
+            &format!("insert_scalar_1k_R{rows}_p{power}_d22"),
             cfg,
             data.len() as u64,
             || {
@@ -28,7 +50,7 @@ fn main() {
                     sk.insert(z);
                 }
             },
-        );
+        ));
     }
 
     section("sketch: query latency");
@@ -41,9 +63,23 @@ fn main() {
             sk.insert(&z);
         }
         let q = gen_ball_point(&mut rng, 22, 0.8);
-        bench_items(&format!("query_R{rows}_d22"), cfg, 1, || {
+        json.record(bench_items(&format!("query_R{rows}_d22"), cfg, 1, || {
             black_box(sk.estimate_risk(&q));
-        });
+        }));
+        // Batched candidate-set evaluation (the DFO per-iteration shape):
+        // one risk per candidate, fused bank kernel, scratch reuse.
+        let cands: Vec<Vec<f64>> =
+            (0..64).map(|_| gen_ball_point(&mut rng, 22, 0.8)).collect();
+        let mut out = Vec::new();
+        json.record(bench_items(
+            &format!("risk_batch_64_R{rows}_d22"),
+            cfg,
+            cands.len() as u64,
+            || {
+                sk.estimate_risk_batch(&cands, &mut out);
+                black_box(out.len());
+            },
+        ));
     }
 
     section("sketch: merge + wire format");
@@ -55,16 +91,21 @@ fn main() {
         a.insert(&gen_ball_point(&mut rng, 22, 0.9));
         b.insert(&gen_ball_point(&mut rng, 22, 0.9));
     }
-    bench_items("merge_R100", cfg, 1, || {
+    json.record(bench_items("merge_R100", cfg, 1, || {
         let mut c = a.grid().clone();
         c.merge_from(black_box(b.grid()));
         black_box(c.total());
-    });
+    }));
     let bytes = encode(&a);
-    bench_items("wire_encode_R100", cfg, bytes.len() as u64, || {
+    json.record(bench_items("wire_encode_R100", cfg, bytes.len() as u64, || {
         black_box(encode(&a));
-    });
-    bench_items("wire_decode_R100", cfg, bytes.len() as u64, || {
+    }));
+    json.record(bench_items("wire_decode_R100", cfg, bytes.len() as u64, || {
         black_box(decode(&bytes).unwrap());
-    });
+    }));
+
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_sketch.json: {e}"),
+    }
 }

@@ -101,6 +101,10 @@ pub fn train(
     let mut trace: Vec<(usize, f64)> = Vec::new();
     let theta = match backend {
         QueryBackend::Rust => {
+            // Each DFO iteration submits its whole candidate set (baseline
+            // + antithetic probes) through RiskOracle::risk_batch, which
+            // the sketch serves with the fused hash-bank query kernel —
+            // zero per-candidate allocation (EXPERIMENTS.md §Perf).
             let t = opt.run(&sketch, cfg.optimizer.iters);
             trace = opt.trace().iter().map(|t| (t.iter, t.risk)).collect();
             t
@@ -112,38 +116,17 @@ pub fn train(
                 .unwrap_or_else(|| "artifacts".to_string());
             let exe = XlaStorm::load(&dir, d + 1, cfg.storm.rows, cfg.storm.power, sketch.hashes())?;
             let oracle = crate::coordinator::oracle::XlaRiskOracle::new(&exe, &sketch);
-            // Fused loop: the baseline + all antithetic probes of one DFO
-            // iteration evaluate in a SINGLE PJRT execution (the compiled
-            // query entry point is K-wide) — ~9x fewer executions than
-            // driving the scalar oracle (EXPERIMENTS.md §Perf).
-            let iters = cfg.optimizer.iters;
-            let mut theta_tilde: Vec<f64> = init.clone();
-            theta_tilde.push(-1.0);
-            let mut rng = crate::util::rng::Xoshiro256::new(cfg.optimizer.seed);
-            let tail_start = iters.saturating_sub((iters / 3).max(1));
-            let mut tail_sum = vec![0.0; d];
-            let mut tail_n = 0u64;
-            for it in 0..iters {
-                let risk = crate::coordinator::oracle::fused_dfo_step(
-                    &oracle,
-                    &mut theta_tilde,
-                    cfg.optimizer.queries,
-                    cfg.optimizer.sigma,
-                    cfg.optimizer.step,
-                    &mut rng,
-                );
-                trace.push((it, risk));
-                if it >= tail_start {
-                    for (s, v) in tail_sum.iter_mut().zip(&theta_tilde[..d]) {
-                        *s += v;
-                    }
-                    tail_n += 1;
-                }
-            }
+            // Same optimizer loop as the rust backend: each iteration's
+            // candidate set goes through RiskOracle::risk_batch, which the
+            // XLA oracle maps onto the K-wide compiled query entry point —
+            // one PJRT execution per iteration, ~9x fewer than driving the
+            // scalar oracle at queries = 8 (EXPERIMENTS.md §Perf).
+            let t = opt.run(&oracle, cfg.optimizer.iters);
+            trace = opt.trace().iter().map(|t| (t.iter, t.risk)).collect();
             if let Some(err) = oracle.last_error() {
                 anyhow::bail!("XLA query path failed: {err}");
             }
-            tail_sum.iter().map(|s| s / tail_n.max(1) as f64).collect()
+            t
         }
     };
     let train_wall_secs = timer.elapsed_secs();

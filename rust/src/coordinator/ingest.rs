@@ -7,6 +7,11 @@
 //! AOT-compiled Pallas insert kernel, merging each `[R, 2^p]` histogram
 //! delta into the live sketch. Counters are bit-identical to scalar
 //! inserts (shared hyperplanes; asserted by `integration_runtime`).
+//!
+//! [`rust_bulk_ingest`] is the artifact-free sibling: same batching, but
+//! the batches go through the fused hash-bank kernel
+//! ([`StormSketch::insert_batch`]) instead of PJRT — the fast pure-rust
+//! leader ingest when no compiled artifacts are available.
 
 use super::batcher::Batcher;
 use crate::data::stream::StreamSource;
@@ -55,9 +60,80 @@ pub fn xla_bulk_ingest(
     Ok(report)
 }
 
+/// Drain `stream` into `sketch` through the fused pure-rust batch path:
+/// accumulate fixed-size batches with [`Batcher`], insert each via
+/// [`StormSketch::insert_batch`]. No compiled artifacts required, and the
+/// resulting counters are bit-identical to scalar inserts (the batch
+/// kernel's equivalence is property-tested in `proptest_invariants`).
+pub fn rust_bulk_ingest(
+    stream: &mut dyn StreamSource,
+    batch_size: usize,
+    sketch: &mut StormSketch,
+) -> IngestReport {
+    let timer = crate::util::timer::Timer::start();
+    let mut batcher = Batcher::new(batch_size, StormSketch::dim(sketch));
+    while let Some(example) = stream.next_example() {
+        if let Some(batch) = batcher.push(example) {
+            sketch.insert_batch(&batch);
+        }
+    }
+    if let Some(batch) = batcher.flush() {
+        sketch.insert_batch(&batch);
+    }
+    // The batcher already tracks what it emitted — no parallel tallies.
+    IngestReport {
+        examples: batcher.emitted_examples(),
+        batches: batcher.emitted_batches(),
+        executions: 0,
+        wall_secs: timer.elapsed_secs(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    // Exercised end-to-end (vs the scalar path, bit-for-bit) in
+    // The XLA path is exercised end-to-end (vs the scalar path,
+    // bit-for-bit) in
     // rust/tests/integration_runtime.rs::bulk_ingest_matches_scalar_path;
     // unit-level batching behaviour is covered in batcher.rs.
+    use super::*;
+    use crate::config::StormConfig;
+    use crate::data::dataset::Dataset;
+    use crate::data::stream::ReplayStream;
+    use crate::linalg::matrix::Matrix;
+    use crate::sketch::Sketch;
+
+    fn toy_dataset(n: usize) -> Dataset {
+        let x = Matrix::from_fn(n, 2, |r, c| ((r * 2 + c) % 7) as f64 * 0.1);
+        let y = (0..n).map(|i| (i % 4) as f64 * 0.05).collect();
+        Dataset::new("ingest", x, y)
+    }
+
+    #[test]
+    fn rust_bulk_ingest_matches_scalar_inserts_bitwise() {
+        let ds = toy_dataset(53);
+        let cfg = StormConfig { rows: 12, power: 3, saturating: true };
+        let mut bulk = crate::sketch::storm::StormSketch::new(cfg, 3, 77);
+        let mut stream = ReplayStream::new(ds.clone());
+        let report = rust_bulk_ingest(&mut stream, 8, &mut bulk);
+        assert_eq!(report.examples, 53);
+        assert_eq!(report.batches, 7); // ceil(53/8)
+        let mut scalar = crate::sketch::storm::StormSketch::new(cfg, 3, 77);
+        for i in 0..ds.len() {
+            scalar.insert(&ds.augmented(i));
+        }
+        assert_eq!(bulk.grid().data(), scalar.grid().data());
+        assert_eq!(bulk.count(), scalar.count());
+    }
+
+    #[test]
+    fn rust_bulk_ingest_empty_stream() {
+        let ds = toy_dataset(0);
+        let cfg = StormConfig::default();
+        let mut sk = crate::sketch::storm::StormSketch::new(cfg, 3, 1);
+        let mut stream = ReplayStream::new(ds);
+        let report = rust_bulk_ingest(&mut stream, 4, &mut sk);
+        assert_eq!(report.examples, 0);
+        assert_eq!(report.batches, 0);
+        assert_eq!(sk.count(), 0);
+    }
 }

@@ -97,6 +97,14 @@ impl RiskOracle for XlaRiskOracle<'_> {
     fn evals(&self) -> u64 {
         self.evals.get()
     }
+
+    /// Whole candidate sets map onto the K-wide compiled query entry
+    /// point — one PJRT execution per `query_size` chunk instead of one
+    /// per candidate.
+    fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.risks(candidates));
+    }
 }
 
 /// A fused DFO step that batches the baseline + k probes into a single

@@ -55,9 +55,9 @@ pub fn run_device(
         if batch.is_empty() {
             break;
         }
-        for z in &batch {
-            delta.insert(z);
-        }
+        // Fused batch sketching: one pass over the projection bank per
+        // batch, bit-identical counters to per-example inserts.
+        delta.insert_batch(&batch);
         report.examples += batch.len() as u64;
         report.batches += 1;
         batches_since_flush += 1;

@@ -1,0 +1,226 @@
+//! Fused hash-bank kernel: all `R` rows' SRP hyperplanes in one
+//! contiguous projection matrix, evaluated in a single pass per example.
+//!
+//! The seed scalar path stores each row's hyperplanes inside an
+//! independently-allocated [`PairedRandomProjection`] and hashes the two
+//! PRP arms separately: `2 * R * p` scattered `(d+2)`-wide dot products
+//! per insert. This module concatenates every plane into one row-major
+//! `[R * p, d + 2]` matrix and exploits the structure of the MIPS
+//! augmentation to serve **both** arms from one projection:
+//!
+//! * data arms:  `aug(+z) = [ z, 0, tail]`, `aug(-z) = [-z, 0, tail]`
+//!   with the *same* tail `sqrt(1 - ||z||^2)` (norms are sign-invariant);
+//! * plane `w = [w_head, w_q, w_d]` therefore projects as
+//!   `<w, aug(+z)> = s + t` and `<w, aug(-z)> = t - s` where
+//!   `s = <w_head, z>` is the head term and `t = w_d * tail` the tail
+//!   term — one head dot product instead of two, halving insert FLOPs.
+//!
+//! **Bit-equivalence.** The grids must stay bit-identical to the seed
+//! scalar path for a fixed seed (property-tested in
+//! `tests/proptest_invariants.rs`). This holds because [`dot`] is a plain
+//! sequential accumulate: the head term `s` reproduces the scalar
+//! partial sum exactly; IEEE-754 negation and addition are sign-symmetric
+//! so the negated arm's prefix is exactly `-s`; and the two terms the
+//! fused path skips (`w_q * 0.0` on the data side, `w_d * 0.0` on the
+//! query side) never change the numeric value of the accumulator, so
+//! every `>= 0.0` sign bit matches the scalar decision.
+//!
+//! The bank is a *derived* structure: it copies (never replaces) the
+//! per-row hashes, so `StormSketch::hashes()` / `srp()` stay intact and
+//! the Python AOT path keeps embedding identical hyperplanes.
+
+use crate::lsh::prp::PairedRandomProjection;
+use crate::util::mathx::dot;
+
+/// A contiguous bank of `R * p` SRP hyperplanes over the augmented space
+/// `R^{d+2}`, serving fused PRP insert/query hashing for a whole sketch.
+#[derive(Clone, Debug)]
+pub struct HashBank {
+    /// All hyperplanes, row-major `[R * p, d + 2]`: row `r`'s plane `j`
+    /// lives at flat index `r * p + j`.
+    planes: Vec<f64>,
+    rows: usize,
+    p: u32,
+    /// Raw (unaugmented) dimension `d`; each plane has `d + 2` coords.
+    dim: usize,
+}
+
+impl HashBank {
+    /// Build a bank by concatenating the hyperplanes of per-row PRP
+    /// hashes (the seed representation). The copy preserves the exact
+    /// coefficients, so fused and scalar hashing agree bit-for-bit.
+    pub fn from_rows(hashes: &[PairedRandomProjection]) -> Self {
+        assert!(!hashes.is_empty(), "hash bank needs at least one row");
+        let dim = hashes[0].dim();
+        let p = hashes[0].bits();
+        let aug = dim + 2;
+        let mut planes = Vec::with_capacity(hashes.len() * p as usize * aug);
+        for h in hashes {
+            assert_eq!(h.dim(), dim, "bank rows must share dim");
+            assert_eq!(h.bits(), p, "bank rows must share p");
+            let srp = h.asym().srp();
+            for j in 0..p as usize {
+                planes.extend_from_slice(srp.plane(j));
+            }
+        }
+        HashBank { planes, rows: hashes.len(), p, dim }
+    }
+
+    /// Number of sketch rows R.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Hyperplanes per row p.
+    pub fn bits(&self) -> u32 {
+        self.p
+    }
+
+    /// Raw (unaugmented) input dimension d.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Buckets per row, `2^p`.
+    pub fn range(&self) -> usize {
+        1usize << self.p
+    }
+
+    /// Bank memory in bytes (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.planes.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Plane `j` of row `r` as a `(d + 2)`-slice.
+    #[inline]
+    pub fn plane(&self, r: usize, j: usize) -> &[f64] {
+        let aug = self.dim + 2;
+        let idx = r * self.p as usize + j;
+        &self.planes[idx * aug..(idx + 1) * aug]
+    }
+
+    /// The MIPS tail coordinate `sqrt(1 - ||v||^2)` — the same magnitude
+    /// on both sides of the asymmetric pair (only its *position* in the
+    /// augmented vector differs). Computed exactly like
+    /// [`crate::lsh::asym::augment`], including its unit-ball assertion.
+    #[inline]
+    pub fn mips_tail(z: &[f64]) -> f64 {
+        let sq: f64 = z.iter().map(|x| x * x).sum();
+        assert!(
+            sq <= 1.0 + 1e-9,
+            "asymmetric LSH input must lie in the unit ball (||v||^2 = {sq})"
+        );
+        (1.0 - sq).max(0.0).sqrt()
+    }
+
+    /// Both PRP insert buckets of row `r` for data vector `z` with
+    /// precomputed `tail`, from a single pass over the row's planes.
+    /// Equals `hashes[r].insert_buckets(z)` bit-for-bit.
+    #[inline]
+    pub fn data_pair(&self, r: usize, z: &[f64], tail: f64) -> (usize, usize) {
+        debug_assert_eq!(z.len(), self.dim, "bank data dim mismatch");
+        let d = self.dim;
+        let mut pos = 0usize;
+        let mut neg = 0usize;
+        for j in 0..self.p as usize {
+            let w = self.plane(r, j);
+            let s = dot(&w[..d], z);
+            let t = w[d + 1] * tail;
+            // Tie-break sign(0) as 1, matching the scalar SRP.
+            if s + t >= 0.0 {
+                pos |= 1 << j;
+            }
+            if t - s >= 0.0 {
+                neg |= 1 << j;
+            }
+        }
+        (pos, neg)
+    }
+
+    /// Query bucket of row `r` for query vector `q` with precomputed
+    /// query-side tail. Equals `hashes[r].query_bucket(q)` bit-for-bit.
+    #[inline]
+    pub fn query_bucket(&self, r: usize, q: &[f64], tail: f64) -> usize {
+        debug_assert_eq!(q.len(), self.dim, "bank query dim mismatch");
+        let d = self.dim;
+        let mut h = 0usize;
+        for j in 0..self.p as usize {
+            let w = self.plane(r, j);
+            if dot(&w[..d], q) + w[d] * tail >= 0.0 {
+                h |= 1 << j;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{cases, gen_ball_point, gen_dim};
+
+    fn mk_rows(dim: usize, p: u32, rows: usize, seed: u64) -> Vec<PairedRandomProjection> {
+        (0..rows)
+            .map(|r| {
+                PairedRandomProjection::new(
+                    dim,
+                    p,
+                    seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn data_pair_matches_scalar_prp_bitwise() {
+        cases(60, 21, |rng, case| {
+            let dim = gen_dim(rng, 1, 12);
+            let p = 1 + (case % 8) as u32;
+            let hashes = mk_rows(dim, p, 5, case as u64);
+            let bank = HashBank::from_rows(&hashes);
+            let z = gen_ball_point(rng, dim, 0.95);
+            let tail = HashBank::mips_tail(&z);
+            for (r, h) in hashes.iter().enumerate() {
+                assert_eq!(bank.data_pair(r, &z, tail), h.insert_buckets(&z));
+            }
+        });
+    }
+
+    #[test]
+    fn query_bucket_matches_scalar_prp_bitwise() {
+        cases(60, 22, |rng, case| {
+            let dim = gen_dim(rng, 1, 12);
+            let p = 1 + (case % 8) as u32;
+            let hashes = mk_rows(dim, p, 4, case as u64 ^ 0xBEEF);
+            let bank = HashBank::from_rows(&hashes);
+            let q = gen_ball_point(rng, dim, 0.95);
+            let sq: f64 = q.iter().map(|x| x * x).sum();
+            let tail = (1.0 - sq).max(0.0).sqrt();
+            for (r, h) in hashes.iter().enumerate() {
+                assert_eq!(bank.query_bucket(r, &q, tail), h.query_bucket(&q));
+            }
+        });
+    }
+
+    #[test]
+    fn bank_shape_and_plane_access() {
+        let hashes = mk_rows(3, 4, 7, 11);
+        let bank = HashBank::from_rows(&hashes);
+        assert_eq!(bank.rows(), 7);
+        assert_eq!(bank.bits(), 4);
+        assert_eq!(bank.dim(), 3);
+        assert_eq!(bank.range(), 16);
+        assert_eq!(bank.bytes(), 7 * 4 * 5 * 8);
+        for (r, h) in hashes.iter().enumerate() {
+            for j in 0..4 {
+                assert_eq!(bank.plane(r, j), h.asym().srp().plane(j));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn mips_tail_rejects_outside_ball() {
+        HashBank::mips_tail(&[1.5, 0.0]);
+    }
+}

@@ -15,13 +15,17 @@
 //!   sketch for KDE-style estimates and in composition tests;
 //! * [`compose`] — injective composition of two LSH functions whose
 //!   collision probability is the *product* of the constituents
-//!   (Theorem 1's multiplication closure).
+//!   (Theorem 1's multiplication closure);
+//! * [`bank`] — the fused hash-bank kernel: all `R` rows' hyperplanes in
+//!   one contiguous `[R*p, d+2]` matrix, hashing both PRP arms from a
+//!   single shared-projection pass (the batch insert/query hot path).
 
 pub mod srp;
 pub mod asym;
 pub mod prp;
 pub mod pstable;
 pub mod compose;
+pub mod bank;
 
 /// A locality-sensitive hash function mapping vectors to bucket indices in
 /// `[0, range)`.

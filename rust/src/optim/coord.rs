@@ -54,6 +54,13 @@ pub fn coordinate_descent(oracle: &dyn RiskOracle, cfg: CoordConfig) -> CoordRes
     let mut evals = 0u64;
     let mut radius = cfg.radius;
     let phi = (5f64.sqrt() - 1.0) / 2.0; // 0.618...
+    // Persistent scratch for the paired bracket probes (the only two
+    // independent evaluations per coordinate — the section iterations
+    // are inherently sequential): both candidate vectors are allocated
+    // once and overwritten in place each coordinate, and batched oracles
+    // evaluate the pair in one fused pass.
+    let mut probe_buf: Vec<Vec<f64>> = vec![vec![0.0; d + 1]; 2];
+    let mut probe_risks: Vec<f64> = Vec::with_capacity(2);
     for _ in 0..cfg.sweeps {
         for j in 0..d {
             // Golden-section search on coordinate j in
@@ -61,6 +68,15 @@ pub fn coordinate_descent(oracle: &dyn RiskOracle, cfg: CoordConfig) -> CoordRes
             let center = theta_tilde[j];
             let mut lo = center - radius;
             let mut hi = center + radius;
+            let mut x1 = hi - phi * (hi - lo);
+            let mut x2 = lo + phi * (hi - lo);
+            for (slot, &v) in probe_buf.iter_mut().zip(&[x1, x2]) {
+                slot.copy_from_slice(&theta_tilde);
+                slot[j] = v;
+            }
+            oracle.risk_batch(&probe_buf, &mut probe_risks);
+            let (mut f1, mut f2) = (probe_risks[0], probe_risks[1]);
+            evals += 2;
             let mut eval_at = |v: f64, theta_tilde: &mut Vec<f64>| -> f64 {
                 let old = theta_tilde[j];
                 theta_tilde[j] = v;
@@ -68,11 +84,6 @@ pub fn coordinate_descent(oracle: &dyn RiskOracle, cfg: CoordConfig) -> CoordRes
                 theta_tilde[j] = old;
                 r
             };
-            let mut x1 = hi - phi * (hi - lo);
-            let mut x2 = lo + phi * (hi - lo);
-            let mut f1 = eval_at(x1, &mut theta_tilde);
-            let mut f2 = eval_at(x2, &mut theta_tilde);
-            evals += 2;
             for _ in 0..cfg.section_iters {
                 if f1 <= f2 {
                     hi = x2;

@@ -36,6 +36,14 @@ pub struct DfoOptimizer {
     theta_tilde: Vec<f64>,
     rng: Xoshiro256,
     trace: Vec<TracePoint>,
+    /// Per-step scratch, reused across iterations: the candidate buffers
+    /// (baseline + antithetic probes, overwritten in place each step) and
+    /// the risks returned by the oracle's batch entry point. The probe
+    /// directions are fresh allocations per step — they come straight
+    /// from the RNG's `sphere_vec`.
+    candidates: Vec<Vec<f64>>,
+    dirs: Vec<Vec<f64>>,
+    risks: Vec<f64>,
 }
 
 impl DfoOptimizer {
@@ -49,6 +57,9 @@ impl DfoOptimizer {
             cfg,
             theta_tilde,
             trace: Vec::new(),
+            candidates: Vec::new(),
+            dirs: Vec::new(),
+            risks: Vec::new(),
         }
     }
 
@@ -91,21 +102,39 @@ impl DfoOptimizer {
     /// budget.
     pub fn step(&mut self, oracle: &dyn RiskOracle) -> f64 {
         let dim = self.theta_tilde.len();
-        let base = oracle.risk(&self.theta_tilde);
         let pairs = (self.cfg.queries / 2).max(1);
-        let mut grad = vec![0.0; dim];
-        for _ in 0..pairs {
+        // Assemble the whole candidate set — [baseline, +u_1, -u_1, ...]
+        // — and evaluate it through ONE oracle.risk_batch call: the
+        // sketch backend runs its fused bank kernel with scratch reuse,
+        // the XLA backend fuses the set into a single PJRT execution.
+        // Evaluation order (and therefore every estimate) is identical
+        // to the seed's scalar loop.
+        let total = 1 + 2 * pairs;
+        if self.candidates.len() != total || self.candidates[0].len() != dim {
+            self.candidates = vec![vec![0.0; dim]; total];
+        }
+        self.candidates[0].copy_from_slice(&self.theta_tilde);
+        self.dirs.clear();
+        for k in 0..pairs {
             let mut u = self.rng.sphere_vec(dim, 1.0);
             // Keep probes on the constraint surface: the last coordinate is
             // not a free parameter (Algorithm 2 projects it back), so
             // sampling it only injects variance.
             u[dim - 1] = 0.0;
-            let mut plus = self.theta_tilde.clone();
-            axpy(&mut plus, self.cfg.sigma, &u);
-            let mut minus = self.theta_tilde.clone();
-            axpy(&mut minus, -self.cfg.sigma, &u);
-            let delta = 0.5 * (oracle.risk(&plus) - oracle.risk(&minus));
-            axpy(&mut grad, delta, &u);
+            let plus = &mut self.candidates[1 + 2 * k];
+            plus.copy_from_slice(&self.theta_tilde);
+            axpy(plus, self.cfg.sigma, &u);
+            let minus = &mut self.candidates[2 + 2 * k];
+            minus.copy_from_slice(&self.theta_tilde);
+            axpy(minus, -self.cfg.sigma, &u);
+            self.dirs.push(u);
+        }
+        oracle.risk_batch(&self.candidates, &mut self.risks);
+        let base = self.risks[0];
+        let mut grad = vec![0.0; dim];
+        for (j, u) in self.dirs.iter().enumerate() {
+            let delta = 0.5 * (self.risks[1 + 2 * j] - self.risks[2 + 2 * j]);
+            axpy(&mut grad, delta, u);
         }
         let scale = dim as f64 / (pairs as f64 * self.cfg.sigma);
         for g in &mut grad {

@@ -33,6 +33,16 @@ pub trait RiskOracle {
     fn evals(&self) -> u64 {
         0
     }
+
+    /// Batched risk evaluation: one estimate per candidate, in order,
+    /// written into `out` (cleared first). The default is a scalar loop;
+    /// backends with a fused batch path (the sketch's projection bank,
+    /// the XLA query executable) override it, so optimizers that submit
+    /// whole candidate sets get the batched hot path on every backend.
+    fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(candidates.iter().map(|q| self.risk(q)));
+    }
 }
 
 impl RiskOracle for StormSketch {
@@ -43,6 +53,13 @@ impl RiskOracle for StormSketch {
     fn dim(&self) -> usize {
         // Sketch dim is d + 1 (augmented).
         StormSketch::dim(self) - 1
+    }
+
+    /// Candidate sets go through the fused hash-bank query kernel:
+    /// scratch-buffer reuse, no per-candidate allocation, bit-identical
+    /// estimates to the scalar path.
+    fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        self.estimate_risk_batch(candidates, out);
     }
 }
 

@@ -40,6 +40,11 @@ pub fn spsa(oracle: &dyn RiskOracle, cfg: SpsaConfig) -> Vec<f64> {
     let tail_start = cfg.iters.saturating_sub((cfg.iters / 3).max(1));
     let mut tail_sum = vec![0.0; d];
     let mut tail_n = 0u64;
+    // The central-difference pair is the whole per-iteration candidate
+    // set — submit it through the oracle's batch entry point (fused on
+    // sketch/XLA backends). Buffers reused across iterations.
+    let mut candidates: Vec<Vec<f64>> = Vec::with_capacity(2);
+    let mut risks: Vec<f64> = Vec::with_capacity(2);
     for it in 0..cfg.iters {
         // Rademacher direction over the free coordinates.
         let mut delta = vec![0.0; dim];
@@ -50,7 +55,11 @@ pub fn spsa(oracle: &dyn RiskOracle, cfg: SpsaConfig) -> Vec<f64> {
         axpy(&mut plus, cfg.c, &delta);
         let mut minus = theta_tilde.clone();
         axpy(&mut minus, -cfg.c, &delta);
-        let g = (oracle.risk(&plus) - oracle.risk(&minus)) / (2.0 * cfg.c);
+        candidates.clear();
+        candidates.push(plus);
+        candidates.push(minus);
+        oracle.risk_batch(&candidates, &mut risks);
+        let g = (risks[0] - risks[1]) / (2.0 * cfg.c);
         // SPSA update: divide by the perturbation elementwise (delta_i =
         // +-1, so this is multiplication).
         for i in 0..d {

@@ -52,28 +52,36 @@ impl CounterGrid {
 
     /// Add a raw count delta (bulk path: the XLA insert kernel returns a
     /// whole `[R, B]` histogram of a batch which is added in one pass).
+    /// The saturation-policy branch is hoisted outside the loop so each
+    /// arm is a straight-line elementwise pass the compiler can
+    /// autovectorize (a per-element branch defeats that).
     pub fn add_counts(&mut self, delta: &[u32]) {
         assert_eq!(delta.len(), self.data.len(), "delta shape mismatch");
-        for (c, d) in self.data.iter_mut().zip(delta) {
-            *c = if self.saturating {
-                c.saturating_add(*d)
-            } else {
-                c.wrapping_add(*d)
-            };
+        if self.saturating {
+            for (c, d) in self.data.iter_mut().zip(delta) {
+                *c = c.saturating_add(*d);
+            }
+        } else {
+            for (c, d) in self.data.iter_mut().zip(delta) {
+                *c = c.wrapping_add(*d);
+            }
         }
     }
 
     /// Merge another grid of identical shape (counter-wise addition —
-    /// the mergeable-summary operation).
+    /// the mergeable-summary operation). Branch hoisted like
+    /// [`Self::add_counts`].
     pub fn merge_from(&mut self, other: &CounterGrid) {
         assert_eq!(self.rows, other.rows, "merge: row mismatch");
         assert_eq!(self.buckets, other.buckets, "merge: bucket mismatch");
-        for (c, o) in self.data.iter_mut().zip(&other.data) {
-            *c = if self.saturating {
-                c.saturating_add(*o)
-            } else {
-                c.wrapping_add(*o)
-            };
+        if self.saturating {
+            for (c, o) in self.data.iter_mut().zip(&other.data) {
+                *c = c.saturating_add(*o);
+            }
+        } else {
+            for (c, o) in self.data.iter_mut().zip(&other.data) {
+                *c = c.wrapping_add(*o);
+            }
         }
     }
 

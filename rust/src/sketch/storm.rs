@@ -19,6 +19,7 @@
 use super::counters::CounterGrid;
 use super::Sketch;
 use crate::config::StormConfig;
+use crate::lsh::bank::HashBank;
 use crate::lsh::prp::PairedRandomProjection;
 use crate::util::mathx::norm2;
 
@@ -31,6 +32,8 @@ pub struct StormSketch {
     cfg: StormConfig,
     grid: CounterGrid,
     hashes: Vec<PairedRandomProjection>,
+    /// Fused projection bank over the same hyperplanes (batch hot path).
+    bank: HashBank,
     count: u64,
     dim: usize,
     seed: u64,
@@ -50,9 +53,11 @@ impl StormSketch {
                 )
             })
             .collect();
+        let bank = HashBank::from_rows(&hashes);
         StormSketch {
             grid: CounterGrid::new(cfg.rows, cfg.buckets(), cfg.saturating),
             hashes,
+            bank,
             count: 0,
             dim,
             cfg,
@@ -110,6 +115,109 @@ impl StormSketch {
         &self.hashes
     }
 
+    /// The fused projection bank (same hyperplanes as [`Self::hashes`],
+    /// concatenated into one contiguous matrix).
+    pub fn bank(&self) -> &HashBank {
+        &self.bank
+    }
+
+    /// Fused batch insert: hash every example against the contiguous
+    /// projection bank with row-block tiling (a block of planes stays
+    /// cache-resident while the whole batch streams past) and both PRP
+    /// arms served by one shared projection per plane. Produces a counter
+    /// grid bit-identical to sequential [`Sketch::insert`] calls
+    /// (property-tested). Row chunks run on scoped threads when the
+    /// `R x batch` work grid is large enough to amortize spawning.
+    pub fn insert_batch(&mut self, batch: &[Vec<f64>]) {
+        let threads = auto_insert_threads(self.cfg.rows, batch.len());
+        self.insert_batch_with_threads(batch, threads);
+    }
+
+    /// [`Self::insert_batch`] with an explicit row-chunk thread count
+    /// (1 = fully sequential). Any thread count yields the same grid:
+    /// rows are partitioned disjointly, so there is no write contention
+    /// and no ordering effect.
+    pub fn insert_batch_with_threads(&mut self, batch: &[Vec<f64>], threads: usize) {
+        if batch.is_empty() {
+            return;
+        }
+        for z in batch {
+            assert_eq!(z.len(), self.dim, "insert dim mismatch");
+        }
+        // The MIPS tail is shared by both arms and by every row: compute
+        // it once per example for the whole batch.
+        let tails: Vec<f64> = batch.iter().map(|z| HashBank::mips_tail(z)).collect();
+        let rows = self.cfg.rows;
+        let buckets = self.cfg.buckets();
+        let saturating = self.cfg.saturating;
+        let bank = &self.bank;
+        let data = self.grid.data_mut();
+        let threads = threads.clamp(1, rows);
+        if threads == 1 {
+            accumulate_row_range(bank, 0, rows, batch, &tails, buckets, saturating, data);
+        } else {
+            let chunk_rows = (rows + threads - 1) / threads;
+            std::thread::scope(|scope| {
+                for (i, chunk) in data.chunks_mut(chunk_rows * buckets).enumerate() {
+                    let r0 = i * chunk_rows;
+                    let r1 = (r0 + chunk_rows).min(rows);
+                    let tails = &tails;
+                    scope.spawn(move || {
+                        accumulate_row_range(
+                            bank, r0, r1, batch, tails, buckets, saturating, chunk,
+                        );
+                    });
+                }
+            });
+        }
+        self.count += batch.len() as u64;
+    }
+
+    /// Fused batch risk estimation: estimates for every candidate in
+    /// `candidates` (each an augmented `theta~`, auto-rescaled into the
+    /// unit ball exactly like [`Self::estimate_risk_scaled`]) written
+    /// into `out` in order. A single scratch buffer is reused across
+    /// candidates — zero per-candidate allocation, versus two `Vec`
+    /// allocations per call on the scalar path. Results are bit-identical
+    /// to per-candidate `estimate_risk_scaled` (property-tested).
+    pub fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(candidates.len());
+        if candidates.is_empty() {
+            return;
+        }
+        let radius = crate::data::scale::query_radius();
+        let mut scaled = vec![0.0; self.dim];
+        for q in candidates {
+            assert_eq!(q.len(), self.dim, "query dim mismatch");
+            let n = norm2(q);
+            let est = if n <= radius {
+                self.fused_estimate(q)
+            } else {
+                for (s, v) in scaled.iter_mut().zip(q.iter()) {
+                    *s = v * radius / n;
+                }
+                self.fused_estimate(&scaled)
+            };
+            out.push(est);
+        }
+    }
+
+    /// Single fused risk readout for a query already inside the unit
+    /// ball: one bank pass, no augmented-vector allocation. Matches
+    /// `estimate_risk` bit-for-bit.
+    fn fused_estimate(&self, q: &[f64]) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let tail = HashBank::mips_tail(q);
+        let mut acc = 0.0;
+        for r in 0..self.cfg.rows {
+            acc += self.grid.get(r, self.bank.query_bucket(r, q, tail)) as f64;
+        }
+        acc / (self.cfg.rows as f64 * self.count as f64) / SCALE
+    }
+
     /// Bulk-add a `[R, B]` histogram delta produced by the XLA insert
     /// kernel for a batch of `batch_n` examples.
     pub fn add_batch_counts(&mut self, delta: &[u32], batch_n: u64) {
@@ -124,6 +232,64 @@ impl StormSketch {
 
     pub(crate) fn parts_mut(&mut self) -> (&mut CounterGrid, &mut u64) {
         (&mut self.grid, &mut self.count)
+    }
+}
+
+/// Rows per tile of the batch insert: `16 rows x p planes x (d+2)` f64
+/// coefficients (~12 KB at p=4, d=22) stays L1/L2-resident while the
+/// whole batch streams past, instead of re-reading all `R*p` planes per
+/// example.
+const INSERT_ROW_BLOCK: usize = 16;
+
+/// Row-chunk thread count heuristic: spawning only pays when the
+/// `R x batch` work grid is large; small sketches are bound on the
+/// counter array, not the projections.
+fn auto_insert_threads(rows: usize, batch: usize) -> usize {
+    if rows >= 256 && batch >= 64 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    } else {
+        1
+    }
+}
+
+#[inline]
+fn bump(cell: &mut u32, saturating: bool) {
+    *cell = if saturating {
+        cell.saturating_add(1)
+    } else {
+        cell.wrapping_add(1)
+    };
+}
+
+/// Accumulate the counts of `batch` for rows `[r0, r1)` into `grid_rows`
+/// (the row-major counter span of exactly those rows), tiled so each
+/// row block's planes stay cache-resident across the batch.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_row_range(
+    bank: &HashBank,
+    r0: usize,
+    r1: usize,
+    batch: &[Vec<f64>],
+    tails: &[f64],
+    buckets: usize,
+    saturating: bool,
+    grid_rows: &mut [u32],
+) {
+    let mut rb = r0;
+    while rb < r1 {
+        let re = (rb + INSERT_ROW_BLOCK).min(r1);
+        for (z, &tail) in batch.iter().zip(tails) {
+            for r in rb..re {
+                let (bp, bn) = bank.data_pair(r, z, tail);
+                let row_off = (r - r0) * buckets;
+                bump(&mut grid_rows[row_off + bp], saturating);
+                bump(&mut grid_rows[row_off + bn], saturating);
+            }
+        }
+        rb = re;
     }
 }
 
@@ -216,9 +382,12 @@ impl StormClassifierSketch {
         assert_eq!(x.len(), self.dim);
         assert!(y == 1.0 || y == -1.0, "labels must be +-1");
         let v: Vec<f64> = x.iter().map(|xi| -y * xi).collect();
+        // Hot path: the MIPS augmentation (norm + sqrt + allocation) is
+        // identical for every row — hoist it out of the row loop, like
+        // the regression sketch's insert.
+        let aug = crate::lsh::asym::augment(&v, crate::lsh::asym::Side::Data);
         for (r, h) in self.hashes.iter().enumerate() {
-            let b = h.hash_side(&v, crate::lsh::asym::Side::Data);
-            self.grid.increment(r, b);
+            self.grid.increment(r, h.hash_augmented(&aug));
         }
         self.count += 1;
     }
@@ -230,9 +399,10 @@ impl StormClassifierSketch {
         if self.count == 0 {
             return 0.0;
         }
+        let aug = crate::lsh::asym::augment(theta, crate::lsh::asym::Side::Query);
         let mut acc = 0.0;
         for (r, h) in self.hashes.iter().enumerate() {
-            acc += self.grid.get(r, h.hash_side(theta, crate::lsh::asym::Side::Query)) as f64;
+            acc += self.grid.get(r, h.hash_augmented(&aug)) as f64;
         }
         let norm_count = acc / (self.hashes.len() as f64 * self.count as f64);
         norm_count * (self.cfg.buckets() as f64)
@@ -308,6 +478,77 @@ mod tests {
         a.insert_example(&[0.1, 0.2], 0.3);
         b.insert(&[0.1, 0.2, 0.3]);
         assert_eq!(a.grid().data(), b.grid().data());
+    }
+
+    #[test]
+    fn insert_batch_matches_sequential_inserts_bitwise() {
+        let cfg = StormConfig { rows: 37, power: 4, saturating: true };
+        let mut rng = Xoshiro256::new(21);
+        let data: Vec<Vec<f64>> = (0..77).map(|_| gen_ball_point(&mut rng, 5, 0.95)).collect();
+        let mut scalar = StormSketch::new(cfg, 5, 13);
+        for z in &data {
+            scalar.insert(z);
+        }
+        let mut fused = StormSketch::new(cfg, 5, 13);
+        fused.insert_batch(&data);
+        assert_eq!(scalar.grid().data(), fused.grid().data());
+        assert_eq!(scalar.count(), fused.count());
+    }
+
+    #[test]
+    fn insert_batch_threaded_matches_sequential() {
+        let cfg = StormConfig { rows: 50, power: 3, saturating: true };
+        let mut rng = Xoshiro256::new(22);
+        let data: Vec<Vec<f64>> = (0..64).map(|_| gen_ball_point(&mut rng, 4, 0.9)).collect();
+        let mut seq = StormSketch::new(cfg, 4, 3);
+        seq.insert_batch_with_threads(&data, 1);
+        let mut par = StormSketch::new(cfg, 4, 3);
+        par.insert_batch_with_threads(&data, 3);
+        assert_eq!(seq.grid().data(), par.grid().data());
+        assert_eq!(seq.count(), par.count());
+    }
+
+    #[test]
+    fn insert_batch_empty_is_noop() {
+        let cfg = StormConfig::default();
+        let mut sk = StormSketch::new(cfg, 3, 1);
+        sk.insert_batch(&[]);
+        assert_eq!(sk.count(), 0);
+        assert_eq!(sk.grid().total(), 0);
+    }
+
+    #[test]
+    fn estimate_risk_batch_matches_scalar_bitwise() {
+        let cfg = StormConfig { rows: 40, power: 4, saturating: true };
+        let mut rng = Xoshiro256::new(23);
+        let mut sk = StormSketch::new(cfg, 4, 9);
+        for _ in 0..200 {
+            sk.insert(&gen_ball_point(&mut rng, 4, 0.9));
+        }
+        // Mix of in-ball candidates and far-outside ones (rescale path).
+        let mut cands: Vec<Vec<f64>> = (0..10).map(|_| gen_ball_point(&mut rng, 4, 0.8)).collect();
+        for _ in 0..10 {
+            let mut q = gen_ball_point(&mut rng, 4, 1.0);
+            for v in &mut q {
+                *v *= 6.0;
+            }
+            cands.push(q);
+        }
+        let mut out = Vec::new();
+        sk.estimate_risk_batch(&cands, &mut out);
+        assert_eq!(out.len(), cands.len());
+        for (q, got) in cands.iter().zip(&out) {
+            assert_eq!(*got, sk.estimate_risk_scaled(q), "q={q:?}");
+        }
+    }
+
+    #[test]
+    fn estimate_risk_batch_empty_sketch_is_zero() {
+        let cfg = StormConfig::default();
+        let sk = StormSketch::new(cfg, 3, 2);
+        let mut out = Vec::new();
+        sk.estimate_risk_batch(&[vec![0.2, 0.1, -1.0]], &mut out);
+        assert_eq!(out, vec![0.0]);
     }
 
     #[test]

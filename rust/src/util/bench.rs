@@ -139,6 +139,95 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Collects the results of one bench suite and emits a machine-readable
+/// `BENCH_<suite>.json` alongside the human stdout report, so the perf
+/// trajectory is tracked across PRs (EXPERIMENTS.md §Perf reads these).
+///
+/// Output is a JSON array of objects with `name`, `ns_per_item`,
+/// `items_per_sec` (both `null` when the bench has no item count), plus
+/// the raw timing stats. Written to `$STORM_BENCH_JSON_DIR` if set,
+/// otherwise the current directory.
+pub struct JsonReporter {
+    suite: String,
+    results: Vec<BenchResult>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonReporter {
+    pub fn new(suite: &str) -> Self {
+        JsonReporter { suite: suite.to_string(), results: Vec::new() }
+    }
+
+    /// Record one benchmark result (typically the return value of
+    /// [`bench`] / [`bench_items`]).
+    pub fn record(&mut self, result: BenchResult) {
+        self.results.push(result);
+    }
+
+    /// Render all recorded results as a JSON array.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let ns_per_item = match r.items {
+                Some(n) if n > 0 => json_num(r.mean_s * 1e9 / n as f64),
+                _ => "null".to_string(),
+            };
+            let items_per_sec = match r.throughput() {
+                Some(t) => json_num(t),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                concat!(
+                    "  {{\"name\": \"{}\", \"ns_per_item\": {}, ",
+                    "\"items_per_sec\": {}, \"mean_ns\": {}, ",
+                    "\"p50_ns\": {}, \"p99_ns\": {}, \"sd_ns\": {}, ",
+                    "\"samples\": {}, \"items\": {}}}"
+                ),
+                json_escape(&r.name),
+                ns_per_item,
+                items_per_sec,
+                json_num(r.mean_s * 1e9),
+                json_num(r.p50_s * 1e9),
+                json_num(r.p99_s * 1e9),
+                json_num(r.std_s * 1e9),
+                r.samples,
+                r.items.map_or("null".to_string(), |n| n.to_string()),
+            ));
+            out.push_str(if i + 1 < self.results.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// Write `BENCH_<suite>.json` and return the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("STORM_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.suite));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +246,45 @@ mod tests {
         assert!(r.samples >= 3);
         assert!(r.mean_s >= 0.0);
         assert!(r.report().contains("unit_test_noop"));
+    }
+
+    #[test]
+    fn json_reporter_renders_valid_shape() {
+        let mut rep = JsonReporter::new("unit");
+        rep.record(BenchResult {
+            name: "a_bench".to_string(),
+            samples: 5,
+            mean_s: 1e-6,
+            std_s: 1e-8,
+            p50_s: 1e-6,
+            p99_s: 2e-6,
+            items: Some(100),
+        });
+        rep.record(BenchResult {
+            name: "no_items".to_string(),
+            samples: 3,
+            mean_s: 2e-6,
+            std_s: 0.0,
+            p50_s: 2e-6,
+            p99_s: 2e-6,
+            items: None,
+        });
+        let json = rep.to_json();
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"name\": \"a_bench\""));
+        // 1e-6 s / 100 items = 10 ns/item.
+        assert!(json.contains("\"ns_per_item\": 10.000"));
+        assert!(json.contains("\"items_per_sec\": 100000000.000"));
+        assert!(json.contains("\"ns_per_item\": null"));
+        // Exactly one comma-separated boundary between the two objects.
+        assert_eq!(json.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("tab\there"), "tab\\u0009here");
     }
 
     #[test]

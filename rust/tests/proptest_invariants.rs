@@ -149,6 +149,112 @@ fn prop_prp_insert_buckets_antipodal_structure() {
 }
 
 #[test]
+fn prop_insert_batch_bit_identical_to_scalar_inserts() {
+    // The fused hash-bank batch path must reproduce the seed scalar
+    // path's counter grid EXACTLY (same seed => same buckets => same
+    // counts), across dims, row counts crossing the tile boundary, and
+    // powers.
+    cases(50, 109, |rng, case| {
+        let dim = gen_dim(rng, 1, 14);
+        let rows = 1 + (case % 41); // crosses the 16-row insert tile
+        let p = 1 + (case % 8) as u32;
+        let cfg = StormConfig { rows, power: p, saturating: true };
+        let n = 1 + (rng.next_u64() % 50) as usize;
+        let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(rng, dim, 0.95)).collect();
+        let mut scalar = StormSketch::new(cfg, dim, case as u64);
+        for z in &data {
+            scalar.insert(z);
+        }
+        let mut fused = StormSketch::new(cfg, dim, case as u64);
+        fused.insert_batch(&data);
+        assert_eq!(scalar.grid().data(), fused.grid().data(), "dim={dim} rows={rows} p={p}");
+        assert_eq!(scalar.count(), fused.count());
+    });
+}
+
+#[test]
+fn prop_insert_batch_split_and_thread_invariant() {
+    // Splitting a stream into arbitrary batches, and spreading rows over
+    // scoped threads, must not change the grid.
+    cases(30, 110, |rng, case| {
+        let dim = gen_dim(rng, 1, 8);
+        let cfg = StormConfig { rows: 24, power: 4, saturating: true };
+        let n = 20 + (rng.next_u64() % 40) as usize;
+        let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(rng, dim, 0.9)).collect();
+        let seed = case as u64 ^ 0x5EED;
+        let mut whole = StormSketch::new(cfg, dim, seed);
+        whole.insert_batch(&data);
+        let mut split = StormSketch::new(cfg, dim, seed);
+        let mut rest: &[Vec<f64>] = &data;
+        while !rest.is_empty() {
+            let take = (1 + (rng.next_u64() as usize % 9)).min(rest.len());
+            split.insert_batch(&rest[..take]);
+            rest = &rest[take..];
+        }
+        let mut threaded = StormSketch::new(cfg, dim, seed);
+        threaded.insert_batch_with_threads(&data, 1 + (case % 5));
+        assert_eq!(whole.grid().data(), split.grid().data());
+        assert_eq!(whole.grid().data(), threaded.grid().data());
+        assert_eq!(whole.count(), split.count());
+        assert_eq!(whole.count(), threaded.count());
+    });
+}
+
+#[test]
+fn prop_estimate_risk_batch_bit_identical_to_scalar() {
+    // The fused batch query path must match scalar estimate_risk_scaled
+    // exactly, for candidates inside the ball and far outside (rescale
+    // path).
+    cases(40, 111, |rng, case| {
+        let dim = gen_dim(rng, 1, 10);
+        let cfg = StormConfig { rows: 25, power: 4, saturating: true };
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        let n = (rng.next_u64() % 60) as usize; // sometimes empty
+        for _ in 0..n {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let mut cands: Vec<Vec<f64>> = Vec::new();
+        for i in 0..12 {
+            let mut q = gen_ball_point(rng, dim, 0.9);
+            if i % 3 == 0 {
+                for v in &mut q {
+                    *v *= 8.0; // force the unit-ball rescale branch
+                }
+            }
+            cands.push(q);
+        }
+        let mut out = Vec::new();
+        sk.estimate_risk_batch(&cands, &mut out);
+        assert_eq!(out.len(), cands.len());
+        for (q, got) in cands.iter().zip(&out) {
+            let want = sk.estimate_risk_scaled(q);
+            assert!(
+                got.to_bits() == want.to_bits(),
+                "fused {got} != scalar {want} (dim={dim} n={n})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_bank_pairs_match_per_row_hashes() {
+    // The bank's fused shared-projection hashing agrees bucket-for-bucket
+    // with the per-row PRP objects it was built from.
+    cases(60, 112, |rng, case| {
+        let dim = gen_dim(rng, 1, 12);
+        let p = 1 + (case % 8) as u32;
+        let cfg = StormConfig { rows: 9, power: p, saturating: true };
+        let sk = StormSketch::new(cfg, dim, case as u64);
+        let bank = sk.bank();
+        let z = gen_ball_point(rng, dim, 0.95);
+        let tail = storm::lsh::bank::HashBank::mips_tail(&z);
+        for (r, h) in sk.hashes().iter().enumerate() {
+            assert_eq!(bank.data_pair(r, &z, tail), h.insert_buckets(&z));
+        }
+    });
+}
+
+#[test]
 fn prop_scaled_estimates_invariant_to_theta_magnitude_beyond_ball() {
     // estimate_risk_scaled(c * theta~) is constant for c past the ball
     // radius (pure direction dependence) — the optimizer relies on this.
