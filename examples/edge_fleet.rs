@@ -52,6 +52,9 @@ fn main() {
             channel_capacity: 4,
             link_latency_us: 200,     // LTE-class RTT share
             link_bandwidth_bps: 1_000_000, // 1 MB/s uplink
+            // Online mode: 8 delta sync rounds; DFO trains between rounds
+            // against the leader's evolving sketch while devices stream.
+            sync_rounds: 8,
             seed: 17,
         },
         artifacts_dir: Some("artifacts".to_string()),
@@ -90,6 +93,15 @@ fn main() {
         report.raw_bytes as f64 / report.network_bytes.max(1) as f64
     );
     println!("training         : {:.2}s for {} DFO iters", report.train_wall_secs, cfg.optimizer.iters);
+    // The anytime curve: risk/bytes per sync round — the model improved
+    // while the fleet was still streaming.
+    println!("sync rounds (examples seen, net bytes, est. risk):");
+    for r in &report.rounds {
+        println!(
+            "  round {:>2}  examples {:>6}  bytes {:>8}  risk {:.5}",
+            r.round, r.examples, r.bytes, r.risk
+        );
+    }
     // Loss curve (subsampled).
     println!("loss trace (estimated surrogate risk):");
     let stride = (report.trace.len() / 10).max(1);

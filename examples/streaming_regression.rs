@@ -1,7 +1,14 @@
-//! Online streaming scenario: a long-running sensor stream feeds the
-//! sketch continuously; the model is re-trained periodically from the
-//! *same* sketch, which keeps absorbing data between retrainings. Shows
-//! the one-pass / anytime property: no example is ever stored.
+//! Online streaming scenario with delta synchronization: a long-running
+//! sensor (the "device") sketches continuously and, at every sync epoch,
+//! ships ONLY the counters that changed since the last epoch — an
+//! epoch-tagged v2 wire delta — to a "server" sketch that the model
+//! retrains from. Shows the one-pass / anytime property end to end: no
+//! example is ever stored and the model improves while data keeps
+//! arriving. The wire adapts to the round: a busy epoch (here, 10k
+//! examples) touches nearly every counter, so the encoder takes the
+//! dense fallback (~one v1 frame + 9 header bytes); a *quiet* epoch
+//! (the 2-example trickle at the end) goes sparse and costs bytes
+//! proportional to what actually changed.
 //!
 //! ```text
 //! cargo run --release --example streaming_regression
@@ -13,8 +20,18 @@ use storm::data::stream::{ResampleStream, StreamSource};
 use storm::data::synthetic;
 use storm::linalg::solve::{lstsq, mse, LstsqMethod};
 use storm::optim::dfo::DfoOptimizer;
+use storm::sketch::delta::SketchDelta;
+use storm::sketch::serialize::{decode_delta, encode_delta, wire_bytes};
 use storm::sketch::storm::StormSketch;
 use storm::sketch::Sketch;
+
+fn mode(delta: &SketchDelta) -> &'static str {
+    if delta.populated_fraction() <= 0.5 {
+        "sparse"
+    } else {
+        "dense"
+    }
+}
 
 fn main() {
     // The "sensor": resamples an airfoil-like distribution indefinitely.
@@ -25,45 +42,92 @@ fn main() {
     let mut stream = ResampleStream::new(base.clone(), 99, 60_000);
 
     let cfg = StormConfig { rows: 1000, power: 4, saturating: true };
-    let mut sketch = StormSketch::new(cfg, d + 1, 11);
+    // Device side: one long-lived sketch + the snapshot at the last sync.
+    let mut device = StormSketch::new(cfg, d + 1, 11);
+    let mut snap = device.snapshot();
+    // Server side: rebuilt purely from wire deltas.
+    let mut server = StormSketch::new(cfg, d + 1, 11);
 
-    println!("streaming 60k examples; retraining from the sketch every 10k:");
-    println!("{:>9} {:>12} {:>12} {:>10}", "examples", "storm_mse", "ls_mse", "param_err");
-    let mut seen = 0u64;
-    let retrain_every = 10_000;
+    println!("streaming 60k examples; syncing a delta + retraining every 10k:");
+    println!(
+        "{:>6} {:>9} {:>11} {:>7} {:>12} {:>12} {:>10}",
+        "epoch", "examples", "delta_bytes", "mode", "storm_mse", "ls_mse", "param_err"
+    );
+    let mut epoch = 0u64;
+    let mut wire_total = 0usize;
+    let sync_every = 10_000;
+    let mut buf = Vec::new();
     loop {
-        let batch = stream.next_batch(512);
-        if batch.is_empty() {
+        stream.next_batch_into(512, &mut buf);
+        if buf.is_empty() {
             break;
         }
-        for z in &batch {
-            sketch.insert(z);
-        }
-        let before = seen;
-        seen += batch.len() as u64;
-        if seen / retrain_every != before / retrain_every {
+        device.insert_batch(&buf);
+        if device.count() - snap.count() >= sync_every {
+            // Ship only what changed since the last sync.
+            let delta = device.delta_since(&snap, epoch);
+            let frame = encode_delta(&delta);
+            snap = device.snapshot();
+            wire_total += frame.len();
+            server.apply_delta(&decode_delta(&frame).expect("valid delta frame"));
+            // Retrain from the server's sketch alone (anytime model).
             let ocfg = OptimizerConfig {
                 queries: 8,
                 sigma: 0.3,
                 step: 0.6,
                 iters: 500,
-                seed: seen, // fresh DFO path each retrain
+                seed: epoch + 1, // fresh DFO path each retrain
             };
             let mut opt = DfoOptimizer::new(ocfg, d);
-            let theta = opt.run(&sketch, ocfg.iters);
+            let theta = opt.run(&server, ocfg.iters);
             println!(
-                "{:>9} {:>12.4e} {:>12.4e} {:>10.3}",
-                seen,
+                "{:>6} {:>9} {:>11} {:>7} {:>12.4e} {:>12.4e} {:>10.3}",
+                epoch,
+                server.count(),
+                frame.len(),
+                mode(&delta),
                 mse(&base.x, &base.y, &theta),
                 mse(&base.x, &base.y, &theta_ls),
                 storm::metrics::relative_param_error(&theta, &theta_ls),
             );
+            epoch += 1;
         }
     }
+    // Flush the tail so the server mirrors the device exactly
+    // (counter-bit-identical, rebuilt from wire frames alone).
+    let tail = device.delta_since(&snap, epoch);
+    if !tail.is_empty() {
+        let frame = encode_delta(&tail);
+        println!("  tail sync: {} examples, {} bytes ({})", tail.count, frame.len(), mode(&tail));
+        wire_total += frame.len();
+        server.apply_delta(&decode_delta(&frame).expect("valid delta frame"));
+        snap = device.snapshot();
+        epoch += 1;
+    }
+    // A QUIET epoch: the sensor trickles 2 examples before the timer
+    // fires. Only ~4 counters per row changed, so the delta goes sparse
+    // — a fraction of the dense frame a full-sketch sync would cost.
+    let mut trickle = ResampleStream::new(base.clone(), 123, 2);
+    trickle.next_batch_into(2, &mut buf);
+    device.insert_batch(&buf);
+    let quiet = device.delta_since(&snap, epoch);
+    let quiet_frame = encode_delta(&quiet);
     println!(
-        "final sketch: {} examples in {} bytes (raw would be {} bytes)",
-        sketch.count(),
-        sketch.bytes(),
-        sketch.count() as usize * (d + 1) * 8,
+        "  quiet sync: {} examples, {} bytes ({}) vs {} bytes for a dense v1 frame",
+        quiet.count,
+        quiet_frame.len(),
+        mode(&quiet),
+        wire_bytes(&cfg),
+    );
+    wire_total += quiet_frame.len();
+    server.apply_delta(&decode_delta(&quiet_frame).expect("valid delta frame"));
+    assert_eq!(server.count(), device.count());
+    assert_eq!(server.grid().data(), device.grid().data());
+    println!(
+        "device sketched {} examples; server mirrored them bit-exactly from {} delta bytes \
+         (raw data would have been {} bytes)",
+        device.count(),
+        wire_total,
+        device.count() as usize * (d + 1) * 8,
     );
 }

@@ -1,6 +1,10 @@
 //! Fleet benchmarks: end-to-end sketch aggregation throughput across
-//! device counts and topologies, plus the merge/backpressure profile —
-//! regenerates the mergeability experiment numbers.
+//! device counts, topologies and sync-round counts, plus the
+//! merge/backpressure profile — regenerates the mergeability experiment
+//! numbers and the communication-vs-rounds curve. Alongside the human
+//! output, results land in `BENCH_fleet.json` (see
+//! `storm::util::bench::JsonReporter`; EXPERIMENTS.md §Communication vs.
+//! rounds reads it).
 
 use storm::config::{FleetConfig, StormConfig};
 use storm::data::scale::scale_to_unit_ball;
@@ -9,10 +13,23 @@ use storm::data::synthetic;
 use storm::edge::fleet::run_fleet;
 use storm::edge::topology::Topology;
 use storm::experiments::{merge, Effort};
-use storm::util::bench::{bench_items, config_from_env, section};
+use storm::util::bench::{bench_items, config_from_env, section, JsonReporter};
+
+fn fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
+    FleetConfig {
+        devices,
+        batch: 64,
+        channel_capacity: 8,
+        link_latency_us: 0,
+        link_bandwidth_bps: 0,
+        sync_rounds,
+        seed: 0,
+    }
+}
 
 fn main() {
     let cfg = config_from_env();
+    let mut json = JsonReporter::new("fleet");
     let mut ds = synthetic::parkinsons(5);
     scale_to_unit_ball(&mut ds, 0.9);
     let storm_cfg = StormConfig { rows: 100, power: 4, saturating: true };
@@ -21,19 +38,23 @@ fn main() {
     for devices in [1usize, 2, 4, 8] {
         let n = ds.len() as u64;
         let dsc = ds.clone();
-        bench_items(&format!("fleet_star_{devices}dev_5800ex"), cfg, n, || {
-            let fleet = FleetConfig {
-                devices,
-                batch: 64,
-                channel_capacity: 8,
-                link_latency_us: 0,
-                link_bandwidth_bps: 0,
-                seed: 0,
-            };
-            let streams = partition_streams(&dsc, devices, None);
-            let r = run_fleet(fleet, storm_cfg, Topology::Star, dsc.dim() + 1, 3, streams);
-            assert_eq!(r.examples, n);
-        });
+        json.record(bench_items(
+            &format!("fleet_star_{devices}dev_5800ex"),
+            cfg,
+            n,
+            || {
+                let streams = partition_streams(&dsc, devices, None);
+                let r = run_fleet(
+                    fleet_cfg(devices, 1),
+                    storm_cfg,
+                    Topology::Star,
+                    dsc.dim() + 1,
+                    3,
+                    streams,
+                );
+                assert_eq!(r.examples, n);
+            },
+        ));
     }
 
     section("fleet: topology comparison (8 devices)");
@@ -44,21 +65,58 @@ fn main() {
     ] {
         let n = ds.len() as u64;
         let dsc = ds.clone();
-        bench_items(&format!("fleet_{name}_8dev"), cfg, n, || {
-            let fleet = FleetConfig {
-                devices: 8,
-                batch: 64,
-                channel_capacity: 8,
-                link_latency_us: 0,
-                link_bandwidth_bps: 0,
-                seed: 0,
-            };
+        json.record(bench_items(&format!("fleet_{name}_8dev"), cfg, n, || {
             let streams = partition_streams(&dsc, 8, None);
-            let r = run_fleet(fleet, storm_cfg, topo, dsc.dim() + 1, 3, streams);
+            let r = run_fleet(fleet_cfg(8, 1), storm_cfg, topo, dsc.dim() + 1, 3, streams);
             assert_eq!(r.examples, n);
-        });
+        }));
+    }
+
+    section("fleet: delta sync rounds (4 devices, star)");
+    for rounds in [1usize, 4, 16] {
+        let n = ds.len() as u64;
+        let dsc = ds.clone();
+        json.record(bench_items(
+            &format!("fleet_star_4dev_{rounds}rounds"),
+            cfg,
+            n,
+            || {
+                let streams = partition_streams(&dsc, 4, None);
+                let r = run_fleet(
+                    fleet_cfg(4, rounds),
+                    storm_cfg,
+                    Topology::Star,
+                    dsc.dim() + 1,
+                    3,
+                    streams,
+                );
+                assert_eq!(r.examples, n);
+                assert_eq!(r.rounds.len(), rounds);
+            },
+        ));
+        // Wire cost of the same workload at this round count (one run,
+        // deterministic): the communication-vs-rounds curve.
+        let streams = partition_streams(&ds, 4, None);
+        let r = run_fleet(
+            fleet_cfg(4, rounds),
+            storm_cfg,
+            Topology::Star,
+            ds.dim() + 1,
+            3,
+            streams,
+        );
+        json.record_scalar(&format!("fleet_net_bytes_4dev_{rounds}rounds"), r.network.bytes as f64);
+        json.record_scalar(
+            &format!("fleet_net_msgs_4dev_{rounds}rounds"),
+            r.network.messages as f64,
+        );
     }
 
     section("merge experiment table");
     merge::run(Effort::from_env(), 5).print();
+
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fleet.json: {e}"),
+    }
 }

@@ -8,7 +8,7 @@
 //! across PRs.
 
 use storm::config::StormConfig;
-use storm::sketch::serialize::{decode, encode};
+use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, wire_bytes};
 use storm::sketch::storm::StormSketch;
 use storm::sketch::Sketch;
 use storm::testing::gen_ball_point;
@@ -103,6 +103,68 @@ fn main() {
     json.record(bench_items("wire_decode_R100", cfg, bytes.len() as u64, || {
         black_box(decode(&bytes).unwrap());
     }));
+
+    section("sketch: delta wire format + merge (sync rounds)");
+    // A QUIET round: 2 fresh examples on a warm device touch at most
+    // 2 * 2 * R of the R * 16 cells (25%), so the encoder goes sparse —
+    // this is the regime where v2 beats shipping a dense frame. (At
+    // p = 4 every insert bumps 2 cells per row, so rounds past ~4
+    // examples populate > 50% of cells and take the dense fallback;
+    // that busy regime is measured separately below.)
+    let snap = a.snapshot();
+    for _ in 0..2 {
+        a.insert(&gen_ball_point(&mut rng, 22, 0.9));
+    }
+    let quiet = a.delta_since(&snap, 1);
+    assert!(quiet.populated_fraction() <= 0.5, "quiet round must be sparse");
+    let sparse = encode_delta(&quiet);
+    json.record_scalar("delta_wire_bytes_sparse_2ex_R100", sparse.len() as f64);
+    json.record_scalar(
+        "delta_populated_fraction_2ex_R100",
+        quiet.populated_fraction(),
+    );
+    // A BUSY round: 64 examples populate essentially every cell, so the
+    // encoder falls back to the dense v2 layout (~= v1 + 9 header bytes).
+    let snap = a.snapshot();
+    for _ in 0..64 {
+        a.insert(&gen_ball_point(&mut rng, 22, 0.9));
+    }
+    let busy = a.delta_since(&snap, 2);
+    let dense = encode_delta(&busy);
+    json.record_scalar("delta_wire_bytes_dense_64ex_R100", dense.len() as f64);
+    json.record_scalar("delta_wire_bytes_dense_v1_R100", wire_bytes(&scfg) as f64);
+    json.record(bench_items("delta_encode_sparse_R100", cfg, sparse.len() as u64, || {
+        black_box(encode_delta(&quiet));
+    }));
+    json.record(bench_items("delta_decode_sparse_R100", cfg, sparse.len() as u64, || {
+        black_box(decode_delta(&sparse).unwrap());
+    }));
+    json.record(bench_items("delta_encode_dense_R100", cfg, dense.len() as u64, || {
+        black_box(encode_delta(&busy));
+    }));
+    // Aggregator fold: merge a round's delta into an accumulator.
+    let other = busy.clone();
+    json.record(bench_items(
+        "delta_merge_R100",
+        cfg,
+        busy.counts.len() as u64,
+        || {
+            let mut acc = busy.clone();
+            acc.merge_from(&other);
+            black_box(acc.count);
+        },
+    ));
+    // Leader apply: fold a round's delta into the live sketch.
+    let mut leader = StormSketch::new(scfg, 22, 9);
+    json.record(bench_items(
+        "delta_apply_R100",
+        cfg,
+        busy.counts.len() as u64,
+        || {
+            leader.apply_delta(&busy);
+            black_box(leader.count());
+        },
+    ));
 
     match json.write() {
         Ok(path) => println!("\nwrote {}", path.display()),

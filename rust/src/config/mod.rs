@@ -73,6 +73,10 @@ pub struct FleetConfig {
     pub link_latency_us: u64,
     /// Simulated link bandwidth, bytes/second (0 = infinite).
     pub link_bandwidth_bps: u64,
+    /// Sync rounds: devices ship one epoch-tagged delta per round and the
+    /// coordinator trains between rounds. 1 = the one-shot pipeline
+    /// (sketch everything, then train once).
+    pub sync_rounds: usize,
     pub seed: u64,
 }
 
@@ -84,6 +88,7 @@ impl Default for FleetConfig {
             channel_capacity: 16,
             link_latency_us: 200,
             link_bandwidth_bps: 0,
+            sync_rounds: 1,
             seed: 0,
         }
     }
@@ -167,6 +172,9 @@ impl RunConfig {
                     cfg.fleet.link_bandwidth_bps =
                         value.as_usize().map_err(ConfigError::Parse)? as u64
                 }
+                ("fleet", "sync_rounds") => {
+                    cfg.fleet.sync_rounds = value.as_usize().map_err(ConfigError::Parse)?
+                }
                 ("fleet", "seed") => {
                     cfg.fleet.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
                 }
@@ -224,6 +232,7 @@ batch = 32
 channel_capacity = 4
 link_latency_us = 100
 link_bandwidth_bps = 1000000
+sync_rounds = 6
 seed = 7
 "#,
         )
@@ -233,6 +242,7 @@ seed = 7
         assert_eq!(cfg.optimizer.iters, 500);
         assert_eq!(cfg.fleet.devices, 8);
         assert_eq!(cfg.fleet.link_bandwidth_bps, 1_000_000);
+        assert_eq!(cfg.fleet.sync_rounds, 6);
         assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts"));
     }
 

@@ -33,6 +33,12 @@ pub fn validate(cfg: &RunConfig) -> Result<(), String> {
     if cfg.fleet.channel_capacity == 0 {
         return Err("fleet.channel_capacity must be >= 1".to_string());
     }
+    if cfg.fleet.sync_rounds == 0 {
+        return Err("fleet.sync_rounds must be >= 1".to_string());
+    }
+    if cfg.fleet.sync_rounds > 1_000_000 {
+        return Err("fleet.sync_rounds unreasonably large (> 1e6)".to_string());
+    }
     Ok(())
 }
 
@@ -89,6 +95,10 @@ mod tests {
 
         let mut c = base();
         c.fleet.channel_capacity = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.sync_rounds = 0;
         assert!(validate(&c).is_err());
     }
 }

@@ -15,6 +15,7 @@ pub struct Batcher {
     pending: Vec<Example>,
     emitted_batches: u64,
     emitted_examples: u64,
+    finished: bool,
 }
 
 impl Batcher {
@@ -26,11 +27,15 @@ impl Batcher {
             pending: Vec::with_capacity(capacity),
             emitted_batches: 0,
             emitted_examples: 0,
+            finished: false,
         }
     }
 
-    /// Offer one example; returns a full batch when ready.
+    /// Offer one example; returns a full batch when ready. Panics after
+    /// [`Self::finish`] — a finished batcher must not silently swallow
+    /// late examples.
     pub fn push(&mut self, example: Example) -> Option<Vec<Example>> {
+        assert!(!self.finished, "Batcher::push after finish()");
         assert_eq!(example.len(), self.dim, "batcher dim mismatch");
         self.pending.push(example);
         if self.pending.len() >= self.capacity {
@@ -40,13 +45,26 @@ impl Batcher {
         }
     }
 
-    /// Flush whatever is pending as a final (short) batch.
-    pub fn flush(&mut self) -> Option<Vec<Example>> {
+    /// End-of-stream contract: emit the final short batch — exactly once,
+    /// exactly the leftover examples (never padded here; the XLA insert
+    /// kernel masks its own padding so padded rows contribute zero
+    /// counts). Subsequent `finish` calls return `None`; subsequent
+    /// `push` calls panic.
+    pub fn finish(&mut self) -> Option<Vec<Example>> {
+        if self.finished {
+            return None;
+        }
+        self.finished = true;
         if self.pending.is_empty() {
             None
         } else {
             self.emit()
         }
+    }
+
+    /// Whether [`Self::finish`] has sealed this batcher.
+    pub fn is_finished(&self) -> bool {
+        self.finished
     }
 
     fn emit(&mut self) -> Option<Vec<Example>> {
@@ -89,14 +107,40 @@ mod tests {
     }
 
     #[test]
-    fn flush_emits_partial() {
+    fn finish_emits_final_short_batch_exactly_once() {
         let mut b = Batcher::new(4, 2);
         b.push(ex(1.0));
         b.push(ex(2.0));
-        let batch = b.flush().unwrap();
+        // The final short batch: exactly the leftovers, no padding rows.
+        let batch = b.finish().unwrap();
         assert_eq!(batch.len(), 2);
-        assert!(b.flush().is_none());
+        assert_eq!(batch, vec![ex(1.0), ex(2.0)]);
+        // Exactly once: a second finish is a no-op, counters are stable.
+        assert!(b.finish().is_none());
+        assert!(b.is_finished());
+        assert_eq!(b.emitted_batches(), 1);
         assert_eq!(b.emitted_examples(), 2);
+    }
+
+    #[test]
+    fn finish_on_batch_boundary_emits_nothing_extra() {
+        let mut b = Batcher::new(2, 2);
+        b.push(ex(1.0));
+        let full = b.push(ex(2.0)).unwrap();
+        assert_eq!(full.len(), 2);
+        // Stream ended exactly on a boundary: no phantom empty batch.
+        assert!(b.finish().is_none());
+        assert_eq!(b.emitted_batches(), 1);
+        assert_eq!(b.emitted_examples(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_after_finish_panics() {
+        let mut b = Batcher::new(2, 2);
+        b.push(ex(1.0));
+        b.finish();
+        b.push(ex(2.0));
     }
 
     #[test]

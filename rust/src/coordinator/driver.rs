@@ -2,16 +2,19 @@
 //! call into.
 //!
 //! Pipeline: load + unit-ball-scale the dataset -> partition streams over
-//! the fleet -> run the fleet (devices sketch locally, deltas merge up the
-//! topology) -> optionally warm-start via linear partition optimization ->
-//! derivative-free training against the merged sketch (pure-rust or XLA
-//! query backend) -> score against the exact least-squares reference.
+//! the fleet -> run `sync_rounds` rounds of delta synchronization
+//! (devices sketch between barriers and ship epoch-tagged sparse deltas)
+//! -> between rounds, DFO trains against the leader's *evolving* sketch
+//! (pure-rust or XLA query backend) — the anytime model improves while
+//! data is still streaming in -> score against the exact least-squares
+//! reference. With `sync_rounds = 1` this degenerates to the classic
+//! one-shot pipeline (sketch everything, then train once).
 
 use crate::config::RunConfig;
 use crate::data::dataset::Dataset;
 use crate::data::scale::scale_to_unit_ball_quantile;
 use crate::data::stream::partition_streams;
-use crate::edge::fleet::{run_fleet, FleetResult};
+use crate::edge::fleet::run_fleet_with;
 use crate::edge::topology::Topology;
 use crate::linalg::solve::{lstsq, mse, LstsqMethod};
 use crate::optim::dfo::DfoOptimizer;
@@ -27,6 +30,20 @@ pub enum QueryBackend {
     Rust,
     /// AOT-compiled XLA executable (batched probes per DFO step).
     Xla,
+}
+
+/// One sync round as the coordinator saw it: what the model knew, what it
+/// cost on the wire.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundPoint {
+    pub round: u64,
+    /// Estimated surrogate risk at the end of the round's training slice
+    /// (NaN if the round trained zero iterations).
+    pub risk: f64,
+    /// Cumulative examples in the leader sketch when the round closed.
+    pub examples: u64,
+    /// Fleet-wide network bytes attributed to the round.
+    pub bytes: u64,
 }
 
 /// Everything the driver measures.
@@ -50,15 +67,18 @@ pub struct TrainReport {
     pub network_bytes: u64,
     pub fleet_wall_secs: f64,
     pub train_wall_secs: f64,
-    /// DFO risk trace (iteration, estimated risk).
+    /// DFO risk trace (global iteration, estimated risk) across rounds.
     pub trace: Vec<(usize, f64)>,
+    /// Per-sync-round risk/bytes trace (the communication-vs-rounds
+    /// curve; see EXPERIMENTS.md §Communication vs. rounds).
+    pub rounds: Vec<RoundPoint>,
 }
 
 impl TrainReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B raw={}B net={}B",
+            "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B raw={}B net={}B rounds={}",
             self.dataset,
             self.mse_storm,
             self.mse_ls,
@@ -67,6 +87,7 @@ impl TrainReport {
             self.sketch_bytes,
             self.raw_bytes,
             self.network_bytes,
+            self.rounds.len().max(1),
         )
     }
 }
@@ -88,48 +109,111 @@ pub fn train(
     let d = ds.dim();
     let raw_bytes = ds.raw_bytes();
 
-    // 2. Fleet: devices sketch their shards, deltas merge to the leader.
+    // 2 + 3. Fleet rounds with interleaved training. The iteration budget
+    //    is split evenly across rounds, remainder to the *last* rounds so
+    //    the most-informed sketch states always get trained.
+    let rounds_n = cfg.fleet.sync_rounds.max(1);
+    let base_iters = cfg.optimizer.iters / rounds_n;
+    let extra = cfg.optimizer.iters % rounds_n;
     let family_seed = cfg.optimizer.seed ^ 0xA5A5_5A5A;
     let streams = partition_streams(&ds, cfg.fleet.devices, Some(cfg.fleet.seed));
-    let FleetResult { sketch, network, wall_secs: fleet_wall_secs, examples, .. } =
-        run_fleet(cfg.fleet, cfg.storm, topology, d + 1, family_seed, streams);
 
-    // 3. Warm start from the partition structure, then DFO.
     let timer = crate::util::timer::Timer::start();
-    let init = linear_partition_init(&sketch, LinOptConfig::default());
-    let mut opt = DfoOptimizer::new(cfg.optimizer, d).with_init(&init);
-    let mut trace: Vec<(usize, f64)> = Vec::new();
-    let theta = match backend {
-        QueryBackend::Rust => {
-            // Each DFO iteration submits its whole candidate set (baseline
-            // + antithetic probes) through RiskOracle::risk_batch, which
-            // the sketch serves with the fused hash-bank query kernel —
-            // zero per-candidate allocation (EXPERIMENTS.md §Perf).
-            let t = opt.run(&sketch, cfg.optimizer.iters);
-            trace = opt.trace().iter().map(|t| (t.iter, t.risk)).collect();
-            t
-        }
-        QueryBackend::Xla => {
-            let dir = cfg
-                .artifacts_dir
-                .clone()
-                .unwrap_or_else(|| "artifacts".to_string());
-            let exe = XlaStorm::load(&dir, d + 1, cfg.storm.rows, cfg.storm.power, sketch.hashes())?;
-            let oracle = crate::coordinator::oracle::XlaRiskOracle::new(&exe, &sketch);
-            // Same optimizer loop as the rust backend: each iteration's
-            // candidate set goes through RiskOracle::risk_batch, which the
-            // XLA oracle maps onto the K-wide compiled query entry point —
-            // one PJRT execution per iteration, ~9x fewer than driving the
-            // scalar oracle at queries = 8 (EXPERIMENTS.md §Perf).
-            let t = opt.run(&oracle, cfg.optimizer.iters);
-            trace = opt.trace().iter().map(|t| (t.iter, t.risk)).collect();
-            if let Some(err) = oracle.last_error() {
-                anyhow::bail!("XLA query path failed: {err}");
+    let mut opt: Option<DfoOptimizer> = None;
+    let mut theta_opt: Option<Vec<f64>> = None;
+    let mut round_risks: Vec<(u64, f64, u64)> = Vec::new();
+    let mut xla_exe: Option<XlaStorm> = None;
+    let mut xla_err: Option<anyhow::Error> = None;
+    let mut train_secs = 0.0f64;
+
+    let result = run_fleet_with(
+        cfg.fleet,
+        cfg.storm,
+        topology,
+        d + 1,
+        family_seed,
+        streams,
+        |round, sketch| {
+            let t = crate::util::timer::Timer::start();
+            let iters = base_iters + usize::from(round as usize >= rounds_n - extra);
+            'train: {
+                if iters == 0 || sketch.count() == 0 || xla_err.is_some() {
+                    break 'train;
+                }
+                // Warm start once, from the first non-empty sketch state.
+                let opt = opt.get_or_insert_with(|| {
+                    let init = linear_partition_init(sketch, LinOptConfig::default());
+                    DfoOptimizer::new(cfg.optimizer, d).with_init(&init)
+                });
+                let theta = match backend {
+                    QueryBackend::Rust => {
+                        // Each DFO iteration submits its whole candidate
+                        // set through RiskOracle::risk_batch — the fused
+                        // hash-bank query kernel, zero per-candidate
+                        // allocation (EXPERIMENTS.md §Perf).
+                        opt.run(sketch, iters)
+                    }
+                    QueryBackend::Xla => {
+                        if xla_exe.is_none() {
+                            let dir = cfg
+                                .artifacts_dir
+                                .clone()
+                                .unwrap_or_else(|| "artifacts".to_string());
+                            match XlaStorm::load(
+                                &dir,
+                                d + 1,
+                                cfg.storm.rows,
+                                cfg.storm.power,
+                                sketch.hashes(),
+                            ) {
+                                Ok(exe) => xla_exe = Some(exe),
+                                Err(e) => {
+                                    xla_err = Some(e);
+                                    break 'train;
+                                }
+                            }
+                        }
+                        let exe = xla_exe.as_ref().expect("loaded xla executable");
+                        // A fresh oracle per round snapshots the leader's
+                        // evolving counters; the optimizer state persists.
+                        let oracle = crate::coordinator::oracle::XlaRiskOracle::new(exe, sketch);
+                        let theta = opt.run(&oracle, iters);
+                        if let Some(err) = oracle.last_error() {
+                            xla_err = Some(anyhow::anyhow!("XLA query path failed: {err}"));
+                            break 'train;
+                        }
+                        theta
+                    }
+                };
+                theta_opt = Some(theta);
             }
-            t
-        }
-    };
-    let train_wall_secs = timer.elapsed_secs();
+            let risk = opt
+                .as_ref()
+                .and_then(|o| o.trace().last())
+                .map_or(f64::NAN, |p| p.risk);
+            round_risks.push((round, risk, sketch.count()));
+            train_secs += t.elapsed_secs();
+        },
+    );
+    if let Some(e) = xla_err {
+        return Err(e);
+    }
+    let fleet_wall_secs = timer.elapsed_secs() - train_secs;
+    let sketch = result.sketch;
+    let theta = theta_opt.unwrap_or_else(|| vec![0.0; d]);
+    let trace: Vec<(usize, f64)> = opt
+        .as_ref()
+        .map(|o| o.trace().iter().enumerate().map(|(i, p)| (i, p.risk)).collect())
+        .unwrap_or_default();
+    let rounds: Vec<RoundPoint> = round_risks
+        .into_iter()
+        .map(|(round, risk, examples)| RoundPoint {
+            round,
+            risk,
+            examples,
+            bytes: result.network.round_bytes(round),
+        })
+        .collect();
 
     // 4. Score against exact least squares on the same scaled data.
     let theta_ls = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
@@ -147,11 +231,12 @@ pub fn train(
         param_err,
         sketch_bytes: sketch.bytes(),
         raw_bytes,
-        examples,
-        network_bytes: network.bytes,
+        examples: result.examples,
+        network_bytes: result.network.bytes,
         fleet_wall_secs,
-        train_wall_secs,
+        train_wall_secs: train_secs,
         trace,
+        rounds,
     })
 }
 
@@ -178,6 +263,7 @@ mod tests {
                 channel_capacity: 8,
                 link_latency_us: 0,
                 link_bandwidth_bps: 0,
+                sync_rounds: 1,
                 seed: 1,
             },
             artifacts_dir: None,
@@ -209,6 +295,7 @@ mod tests {
         assert_eq!(report.examples, 600);
         assert!(report.network_bytes > 0);
         assert!(!report.trace.is_empty());
+        assert_eq!(report.rounds.len(), 1);
     }
 
     #[test]
@@ -219,6 +306,47 @@ mod tests {
         let a = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
         let b = train(&cfg, ds, Topology::Tree { fanout: 2 }, QueryBackend::Rust).unwrap();
         assert_eq!(a.theta, b.theta);
+    }
+
+    #[test]
+    fn round_based_training_is_online_and_topology_invariant() {
+        // With R sync rounds, training interleaves with ingestion; the
+        // per-round sketch states (and therefore the final model) are
+        // identical across aggregation topologies.
+        let ds = synthetic::synth2d_regression(300, 0.5, 0.1, 0.02, 4);
+        let mut cfg = quick_cfg();
+        cfg.fleet.sync_rounds = 4;
+        let a = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
+        let b = train(&cfg, ds.clone(), Topology::Tree { fanout: 2 }, QueryBackend::Rust).unwrap();
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(a.rounds.len(), 4);
+        // The anytime trace: examples grow monotonically to the dataset
+        // size, every trained round has a finite risk, and the full DFO
+        // budget was spent across the rounds.
+        let ex: Vec<u64> = a.rounds.iter().map(|r| r.examples).collect();
+        assert!(ex.windows(2).all(|w| w[0] <= w[1]), "{ex:?}");
+        assert_eq!(*ex.last().unwrap(), 300);
+        assert!(a.rounds.iter().all(|r| r.risk.is_finite()), "{:?}", a.rounds);
+        assert_eq!(a.trace.len(), cfg.optimizer.iters);
+        // Bytes are attributed per round and sum below the total (Done
+        // frames carry no epoch).
+        let round_bytes: u64 = a.rounds.iter().map(|r| r.bytes).sum();
+        assert!(round_bytes > 0 && round_bytes <= a.network_bytes);
+        // Determinism across repeat runs.
+        let c = train(&cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.theta, c.theta);
+    }
+
+    #[test]
+    fn single_round_matches_seed_one_shot_behaviour() {
+        // sync_rounds = 1 must reproduce the classic pipeline exactly:
+        // the whole iteration budget runs against the fully-merged sketch.
+        let ds = synthetic::synth2d_regression(200, 0.4, 0.0, 0.05, 6);
+        let cfg = quick_cfg();
+        let report = train(&cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(report.rounds.len(), 1);
+        assert_eq!(report.rounds[0].examples, 200);
+        assert_eq!(report.trace.len(), cfg.optimizer.iters);
     }
 
     #[test]
@@ -235,6 +363,6 @@ mod tests {
         let ds = synthetic::synth2d_regression(200, 0.4, 0.0, 0.05, 6);
         let report = train(&quick_cfg(), ds, Topology::Star, QueryBackend::Rust).unwrap();
         let s = report.summary();
-        assert!(s.contains("storm-mse=") && s.contains("sketch="));
+        assert!(s.contains("storm-mse=") && s.contains("sketch=") && s.contains("rounds="));
     }
 }

@@ -53,7 +53,10 @@ pub fn xla_bulk_ingest(
             submit(batch, &mut report)?;
         }
     }
-    if let Some(batch) = batcher.flush() {
+    // End-of-stream: finish() seals the batcher and emits the final short
+    // batch exactly once (the compiled kernel masks its padding rows, so
+    // the short batch contributes exactly its own counts).
+    if let Some(batch) = batcher.finish() {
         submit(batch, &mut report)?;
     }
     report.wall_secs = timer.elapsed_secs();
@@ -77,7 +80,7 @@ pub fn rust_bulk_ingest(
             sketch.insert_batch(&batch);
         }
     }
-    if let Some(batch) = batcher.flush() {
+    if let Some(batch) = batcher.finish() {
         sketch.insert_batch(&batch);
     }
     // The batcher already tracks what it emitted — no parallel tallies.
@@ -110,6 +113,10 @@ mod tests {
 
     #[test]
     fn rust_bulk_ingest_matches_scalar_inserts_bitwise() {
+        // 53 = 6 full batches of 8 + a final short batch of 5 through
+        // finish(): grid equality with the scalar path proves the short
+        // batch was emitted exactly once and contributed exactly its own
+        // counts — nothing from padding, nothing twice.
         let ds = toy_dataset(53);
         let cfg = StormConfig { rows: 12, power: 3, saturating: true };
         let mut bulk = crate::sketch::storm::StormSketch::new(cfg, 3, 77);

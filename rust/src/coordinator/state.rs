@@ -1,5 +1,6 @@
-//! Training-state checkpointing: theta, iteration, and the risk trace in
-//! a line-oriented text format (no serde), with atomic replace.
+//! Training-state checkpointing: theta, iteration, the per-iteration risk
+//! trace, and the per-sync-round risk/bytes trace in a line-oriented text
+//! format (no serde), with atomic replace.
 
 use std::io::Write;
 use std::path::Path;
@@ -11,6 +12,11 @@ pub struct TrainingState {
     pub iter: usize,
     pub theta: Vec<f64>,
     pub trace: Vec<(usize, f64)>,
+    /// Per-sync-round `(round, risk, network bytes)` — the
+    /// communication-vs-rounds curve of an online run. Empty for
+    /// checkpoints written by one-shot runs (and by older versions of
+    /// this format, which parse unchanged).
+    pub rounds: Vec<(u64, f64, u64)>,
 }
 
 /// Checkpoint errors.
@@ -24,7 +30,7 @@ pub enum StateError {
 
 impl TrainingState {
     /// Serialize as lines: `dataset <name>`, `iter <n>`, `theta v v v...`,
-    /// `trace i risk` per point.
+    /// `trace i risk` per point, `round r risk bytes` per sync round.
     pub fn to_text(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!("dataset {}\n", self.dataset));
@@ -37,6 +43,9 @@ impl TrainingState {
         for (i, r) in &self.trace {
             s.push_str(&format!("trace {i} {r:.17e}\n"));
         }
+        for (round, risk, bytes) in &self.rounds {
+            s.push_str(&format!("round {round} {risk:.17e} {bytes}\n"));
+        }
         s
     }
 
@@ -45,6 +54,7 @@ impl TrainingState {
         let mut iter = None;
         let mut theta = None;
         let mut trace = Vec::new();
+        let mut rounds = Vec::new();
         for line in text.lines() {
             let mut parts = line.split_whitespace();
             match parts.next() {
@@ -72,6 +82,21 @@ impl TrainingState {
                         .ok_or_else(|| StateError::Corrupt("bad trace risk".into()))?;
                     trace.push((i, r));
                 }
+                Some("round") => {
+                    let r = parts
+                        .next()
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .ok_or_else(|| StateError::Corrupt("bad round index".into()))?;
+                    let risk = parts
+                        .next()
+                        .and_then(|v| v.parse::<f64>().ok())
+                        .ok_or_else(|| StateError::Corrupt("bad round risk".into()))?;
+                    let bytes = parts
+                        .next()
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .ok_or_else(|| StateError::Corrupt("bad round bytes".into()))?;
+                    rounds.push((r, risk, bytes));
+                }
                 Some(other) => {
                     return Err(StateError::Corrupt(format!("unknown record {other:?}")))
                 }
@@ -83,6 +108,7 @@ impl TrainingState {
             iter: iter.ok_or_else(|| StateError::Corrupt("missing iter".into()))?,
             theta: theta.ok_or_else(|| StateError::Corrupt("missing theta".into()))?,
             trace,
+            rounds,
         })
     }
 
@@ -118,6 +144,7 @@ mod tests {
             iter: 42,
             theta: vec![0.1, -0.25, 3.5e-7],
             trace: vec![(0, 1.0), (1, 0.5)],
+            rounds: vec![(0, 0.9, 4096), (1, 0.4, 1024)],
         }
     }
 
@@ -145,5 +172,14 @@ mod tests {
         assert!(TrainingState::from_text("garbage here\n").is_err());
         assert!(TrainingState::from_text("dataset a\niter x\ntheta 1\n").is_err());
         assert!(TrainingState::from_text("dataset a\n").is_err());
+        assert!(TrainingState::from_text("dataset a\niter 1\ntheta 1\nround x 0.5 9\n").is_err());
+        assert!(TrainingState::from_text("dataset a\niter 1\ntheta 1\nround 0 0.5\n").is_err());
+    }
+
+    #[test]
+    fn legacy_checkpoints_without_rounds_still_parse() {
+        let s = TrainingState::from_text("dataset a\niter 3\ntheta 1 2\ntrace 0 0.5\n").unwrap();
+        assert!(s.rounds.is_empty());
+        assert_eq!(s.theta, vec![1.0, 2.0]);
     }
 }

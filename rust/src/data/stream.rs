@@ -17,21 +17,57 @@ pub trait StreamSource: Send {
     /// Next example, or `None` when exhausted.
     fn next_example(&mut self) -> Option<Example>;
 
-    /// Pull up to `n` examples into a batch.
+    /// Pull up to `n` examples into a batch, pre-sized from
+    /// [`Self::remaining_hint`] so a short tail batch never over-allocates.
     fn next_batch(&mut self, n: usize) -> Vec<Example> {
-        let mut out = Vec::with_capacity(n);
+        let mut out = Vec::new();
+        self.next_batch_into(n, &mut out);
+        out
+    }
+
+    /// Pull up to `n` examples into a caller-owned buffer (cleared first)
+    /// — the allocation-free ingest path: devices reuse one buffer for
+    /// every batch of a long-running stream.
+    fn next_batch_into(&mut self, n: usize, out: &mut Vec<Example>) {
+        out.clear();
+        let cap = self.remaining_hint().map_or(n, |r| n.min(r));
+        // reserve() is relative to len (0 after clear), so this ensures
+        // capacity >= cap up front and is a no-op on a warm buffer.
+        out.reserve(cap);
         for _ in 0..n {
             match self.next_example() {
                 Some(e) => out.push(e),
                 None => break,
             }
         }
-        out
     }
 
     /// Total examples this source will yield, if known.
     fn remaining_hint(&self) -> Option<usize> {
         None
+    }
+}
+
+/// Forward through boxes so `Box<dyn StreamSource>` satisfies
+/// `impl StreamSource` bounds WITHOUT falling back to the trait's default
+/// methods — in particular `remaining_hint` must reach the concrete
+/// stream (the default `None` would silently discard the length hints
+/// every stream in this module knows).
+impl<S: StreamSource + ?Sized> StreamSource for Box<S> {
+    fn next_example(&mut self) -> Option<Example> {
+        (**self).next_example()
+    }
+
+    fn next_batch(&mut self, n: usize) -> Vec<Example> {
+        (**self).next_batch(n)
+    }
+
+    fn next_batch_into(&mut self, n: usize, out: &mut Vec<Example>) {
+        (**self).next_batch_into(n, out)
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        (**self).remaining_hint()
     }
 }
 
@@ -126,7 +162,9 @@ impl StreamSource for ResampleStream {
 
 /// Partition a dataset into per-device streams (contiguous shards), the
 /// topology the paper's distributed setting implies: each device sees its
-/// own locally-collected slice of the global dataset.
+/// own locally-collected slice of the global dataset. The boxed streams
+/// keep reporting `remaining_hint` (each shard knows its length), which
+/// devices use to pre-size ingest buffers and split sync-round budgets.
 pub fn partition_streams(ds: &Dataset, devices: usize, shuffled_seed: Option<u64>) -> Vec<Box<dyn StreamSource>> {
     ds.shards(devices)
         .into_iter()
@@ -188,6 +226,50 @@ mod tests {
             count += 1;
         }
         assert_eq!(count, 100);
+    }
+
+    #[test]
+    fn partition_streams_preserve_remaining_hints() {
+        // The hint must survive the Box<dyn StreamSource> indirection —
+        // a forwarding gap here would silently return the default None.
+        let d = ds(10);
+        let mut streams = partition_streams(&d, 3, None);
+        let hints: Vec<usize> = streams.iter().map(|s| s.remaining_hint().unwrap()).collect();
+        assert_eq!(hints.iter().sum::<usize>(), 10);
+        assert!(hints.iter().all(|&h| h >= 3));
+        // And it ticks down as the stream drains.
+        streams[0].next_example().unwrap();
+        assert_eq!(streams[0].remaining_hint().unwrap(), hints[0] - 1);
+        // Shuffled partitions report hints too.
+        let shuffled = partition_streams(&d, 2, Some(9));
+        assert!(shuffled.iter().all(|s| s.remaining_hint().is_some()));
+    }
+
+    #[test]
+    fn next_batch_into_reuses_buffer_and_respects_hint() {
+        let mut s = ReplayStream::new(ds(5));
+        let mut buf = Vec::new();
+        s.next_batch_into(2, &mut buf);
+        assert_eq!(buf.len(), 2);
+        let cap = buf.capacity();
+        s.next_batch_into(2, &mut buf);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf.capacity(), cap, "no reallocation on reuse");
+        // Asking for more than remains pulls only the tail.
+        s.next_batch_into(10, &mut buf);
+        assert_eq!(buf.len(), 1);
+        s.next_batch_into(10, &mut buf);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn boxed_stream_forwards_all_methods() {
+        let mut b: Box<dyn StreamSource> = Box::new(ReplayStream::new(ds(4)));
+        assert_eq!(b.remaining_hint(), Some(4));
+        assert_eq!(b.next_batch(3).len(), 3);
+        assert_eq!(b.remaining_hint(), Some(1));
+        assert!(b.next_example().is_some());
+        assert_eq!(b.remaining_hint(), Some(0));
     }
 
     #[test]

@@ -1,17 +1,18 @@
-//! A simulated edge device: owns a local stream and a local STORM sketch,
-//! ingests in batches, and periodically flushes sketch *deltas* upstream.
+//! A simulated edge device: owns a local stream and a *long-lived* local
+//! STORM sketch, ingests between sync barriers, and at each sync round
+//! ships only the counters that changed since the last round (an
+//! epoch-tagged [`crate::sketch::delta::SketchDelta`] on wire format v2).
 //!
-//! Flushing deltas (the counts accumulated since the last flush) rather
-//! than cumulative sketches makes upstream aggregation idempotent-free
-//! simple addition and keeps every wire message the same size — the
-//! mergeable-summary property doing real work.
+//! Shipping deltas rather than cumulative sketches keeps upstream
+//! aggregation idempotent-free simple addition, and the sparse v2 wire
+//! encoding makes a quiet round cost bytes proportional to what actually
+//! changed — the mergeable-summary property doing real work, per round.
 
 use super::network::{Link, Message};
 use crate::config::StormConfig;
 use crate::data::stream::StreamSource;
-use crate::sketch::serialize::encode;
+use crate::sketch::serialize::encode_delta;
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 
 /// Device runtime parameters.
 #[derive(Clone, Copy, Debug)]
@@ -19,8 +20,13 @@ pub struct DeviceConfig {
     pub id: usize,
     /// Ingest batch size.
     pub batch: usize,
-    /// Flush the delta sketch upstream every `flush_batches` batches.
-    pub flush_batches: usize,
+    /// Number of sync rounds the fleet runs; the device emits (at most)
+    /// one delta per round and always one `EndRound` per round.
+    pub rounds: usize,
+    /// Per-round example budget when the stream cannot report its length
+    /// (`StreamSource::remaining_hint` returns `None`); hinted streams
+    /// split their remaining length evenly across rounds instead.
+    pub fallback_round_examples: usize,
     /// Sketch configuration (must match fleet-wide; merging enforces it).
     pub storm: StormConfig,
     /// Shared hash-family seed (fleet-wide).
@@ -35,54 +41,78 @@ pub struct DeviceReport {
     pub id: usize,
     pub examples: u64,
     pub batches: u64,
-    pub flushes: u64,
+    /// Sync rounds completed (always `cfg.rounds`, even past stream end —
+    /// quiet rounds still answer the barrier).
+    pub rounds: u64,
+    /// Non-empty deltas actually shipped upstream.
+    pub deltas: u64,
     pub ingest_secs: f64,
 }
 
-/// Run one device to stream exhaustion: sketch locally, flush deltas over
-/// the link, then send `Done`. This is the body of each fleet thread.
+/// Run one device through all sync rounds: sketch into the long-lived
+/// local sketch, emit one delta + `EndRound` per round, then `Done`.
+/// This is the body of each fleet thread.
 pub fn run_device(
     cfg: DeviceConfig,
     mut stream: Box<dyn StreamSource>,
     link: Link,
 ) -> DeviceReport {
-    let mut delta = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
+    let rounds = cfg.rounds.max(1);
+    let mut sketch = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
+    let mut snap = sketch.snapshot();
     let mut report = DeviceReport { id: cfg.id, ..Default::default() };
     let timer = crate::util::timer::Timer::start();
-    let mut batches_since_flush = 0usize;
-    loop {
-        let batch = stream.next_batch(cfg.batch);
-        if batch.is_empty() {
-            break;
-        }
-        // Fused batch sketching: one pass over the projection bank per
-        // batch, bit-identical counters to per-example inserts.
-        delta.insert_batch(&batch);
-        report.examples += batch.len() as u64;
-        report.batches += 1;
-        batches_since_flush += 1;
-        if batches_since_flush >= cfg.flush_batches && delta.count() > 0 {
-            if flush(&mut delta, &cfg, &link) {
-                report.flushes += 1;
+    // The stream's own length hint sizes both the per-round budget and
+    // the reusable batch buffer (no per-batch allocation).
+    let hint = stream.remaining_hint();
+    let budget = match hint {
+        Some(n) => n.div_ceil(rounds).max(1),
+        None => cfg.fallback_round_examples.max(1),
+    };
+    let mut buf: Vec<crate::data::stream::Example> =
+        Vec::with_capacity(cfg.batch.min(hint.unwrap_or(cfg.batch)).max(1));
+    let mut exhausted = false;
+    for epoch in 0..rounds as u64 {
+        // The final round drains the stream completely so a stale or
+        // missing hint never strands examples.
+        let last = epoch + 1 == rounds as u64;
+        let mut ingested = 0usize;
+        while !exhausted && (last || ingested < budget) {
+            let want = if last { cfg.batch } else { cfg.batch.min(budget - ingested) };
+            stream.next_batch_into(want, &mut buf);
+            if buf.is_empty() {
+                exhausted = true;
+                break;
             }
-            batches_since_flush = 0;
+            // Fused batch sketching: one pass over the projection bank per
+            // batch, bit-identical counters to per-example inserts.
+            sketch.insert_batch(&buf);
+            ingested += buf.len();
+            report.batches += 1;
         }
-    }
-    if delta.count() > 0 && flush(&mut delta, &cfg, &link) {
-        report.flushes += 1;
+        report.examples += ingested as u64;
+        let delta = sketch.delta_since(&snap, epoch);
+        if !delta.is_empty() {
+            // A dead link (aggregator gone) stops shipping but the device
+            // keeps sketching and counting.
+            if link
+                .send(Message::Delta { epoch, payload: encode_delta(&delta) })
+                .is_ok()
+            {
+                report.deltas += 1;
+            }
+            snap = sketch.snapshot();
+        }
+        report.rounds += 1;
+        let _ = link.send(Message::EndRound {
+            device_id: cfg.id,
+            epoch,
+            examples: ingested as u64,
+        });
     }
     report.ingest_secs = timer.elapsed_secs();
     let _ = link.send(Message::Done { device_id: cfg.id, examples: report.examples });
     report
-}
-
-/// Serialize + ship the delta, then reset it. Returns false if the link is
-/// down (aggregator gone) — the device stops flushing but keeps counting.
-fn flush(delta: &mut StormSketch, cfg: &DeviceConfig, link: &Link) -> bool {
-    let bytes = encode(delta);
-    let ok = link.send(Message::Delta(bytes)).is_ok();
-    *delta = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
-    ok
 }
 
 #[cfg(test)]
@@ -92,7 +122,8 @@ mod tests {
     use crate::data::stream::ReplayStream;
     use crate::edge::network::Link;
     use crate::linalg::matrix::Matrix;
-    use crate::sketch::serialize::decode;
+    use crate::sketch::serialize::decode_delta;
+    use crate::sketch::Sketch;
 
     fn toy_dataset(n: usize) -> Dataset {
         let x = Matrix::from_fn(n, 2, |r, c| ((r + c) % 5) as f64 * 0.1);
@@ -100,38 +131,54 @@ mod tests {
         Dataset::new("dev", x, y)
     }
 
-    fn dev_cfg(id: usize) -> DeviceConfig {
+    fn dev_cfg(id: usize, rounds: usize) -> DeviceConfig {
         DeviceConfig {
             id,
             batch: 8,
-            flush_batches: 2,
+            rounds,
+            fallback_round_examples: 16,
             storm: StormConfig { rows: 10, power: 3, saturating: true },
             family_seed: 42,
             dim: 3,
         }
     }
 
-    #[test]
-    fn device_sketches_whole_stream() {
-        let ds = toy_dataset(50);
-        let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(0), Box::new(ReplayStream::new(ds.clone())), link);
-        assert_eq!(report.examples, 50);
-        assert_eq!(report.batches, 7); // ceil(50/8)
-        // Reassemble: merged deltas equal a locally-built sketch.
-        let mut merged = StormSketch::new(dev_cfg(0).storm, 3, 42);
-        let mut done = false;
-        for msg in rx.iter() {
+    /// Reassemble every delta a device shipped into one sketch.
+    fn reassemble(msgs: &[Message]) -> (StormSketch, u64, Vec<u64>) {
+        let mut merged = StormSketch::new(dev_cfg(0, 1).storm, 3, 42);
+        let mut done_examples = 0;
+        let mut epochs = Vec::new();
+        for msg in msgs {
             match msg {
-                Message::Delta(b) => merged.merge_from(&decode(&b).unwrap()),
-                Message::Done { examples, .. } => {
-                    assert_eq!(examples, 50);
-                    done = true;
+                Message::Delta { epoch, payload } => {
+                    let d = decode_delta(payload).unwrap();
+                    assert_eq!(d.epoch, *epoch, "frame epoch must match message epoch");
+                    merged.apply_delta(&d);
+                    epochs.push(*epoch);
                 }
+                Message::Done { examples, .. } => done_examples = *examples,
+                Message::EndRound { .. } => {}
             }
         }
-        assert!(done);
-        let mut reference = StormSketch::new(dev_cfg(0).storm, 3, 42);
+        (merged, done_examples, epochs)
+    }
+
+    #[test]
+    fn device_sketches_whole_stream_across_rounds() {
+        let ds = toy_dataset(50);
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let report = run_device(dev_cfg(0, 4), Box::new(ReplayStream::new(ds.clone())), link);
+        assert_eq!(report.examples, 50);
+        assert_eq!(report.rounds, 4);
+        let msgs: Vec<Message> = rx.iter().collect();
+        let ends = msgs.iter().filter(|m| matches!(m, Message::EndRound { .. })).count();
+        assert_eq!(ends, 4, "one EndRound per round");
+        let (merged, done_examples, epochs) = reassemble(&msgs);
+        assert_eq!(done_examples, 50);
+        // Deltas tagged with consecutive epochs, applied in order equal a
+        // locally-built one-shot sketch.
+        assert!(epochs.windows(2).all(|w| w[0] < w[1]), "{epochs:?}");
+        let mut reference = StormSketch::new(dev_cfg(0, 1).storm, 3, 42);
         for i in 0..ds.len() {
             reference.insert(&ds.augmented(i));
         }
@@ -140,25 +187,73 @@ mod tests {
     }
 
     #[test]
-    fn flush_cadence_respected() {
-        let ds = toy_dataset(64); // 8 batches of 8 -> flush every 2 -> 4 flushes
+    fn hinted_stream_splits_examples_evenly_across_rounds() {
+        let ds = toy_dataset(64);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(1), Box::new(ReplayStream::new(ds)), link);
-        assert_eq!(report.flushes, 4);
-        let deltas = rx.iter().filter(|m| matches!(m, Message::Delta(_))).count();
-        assert_eq!(deltas, 4);
+        let report = run_device(dev_cfg(1, 4), Box::new(ReplayStream::new(ds)), link);
+        assert_eq!(report.examples, 64);
+        assert_eq!(report.deltas, 4);
+        // 64 hinted examples over 4 rounds -> 16 per round.
+        let per_round: Vec<u64> = rx
+            .iter()
+            .filter_map(|m| match m {
+                Message::EndRound { examples, .. } => Some(examples),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(per_round, vec![16, 16, 16, 16]);
+    }
+
+    /// Strips the length hint off a stream — the unknown-length regime
+    /// (an open-ended sensor), which is what forces the fallback budget
+    /// and the mid-run exhaustion path.
+    struct NoHint(ReplayStream);
+
+    impl crate::data::stream::StreamSource for NoHint {
+        fn next_example(&mut self) -> Option<crate::data::stream::Example> {
+            self.0.next_example()
+        }
     }
 
     #[test]
-    fn empty_stream_sends_only_done() {
+    fn exhausted_stream_still_answers_every_round() {
+        // Hintless stream of 10 examples, 5 rounds of fallback budget 3
+        // (batch 2): rounds 0..3 ingest 3+3+3+1, the stream dries up
+        // mid-round-3, and round 4 must still send EndRound with zero
+        // examples — quiet rounds answer the barrier.
+        let ds = toy_dataset(10);
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let mut cfg = dev_cfg(2, 5);
+        cfg.batch = 2;
+        cfg.fallback_round_examples = 3;
+        let report = run_device(cfg, Box::new(NoHint(ReplayStream::new(ds))), link);
+        assert_eq!(report.examples, 10);
+        assert_eq!(report.rounds, 5);
+        let ends: Vec<(u64, u64)> = rx
+            .iter()
+            .filter_map(|m| match m {
+                Message::EndRound { epoch, examples, .. } => Some((epoch, examples)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            ends,
+            vec![(0, 3), (1, 3), (2, 3), (3, 1), (4, 0)],
+            "fallback budget + mid-run exhaustion + quiet final round"
+        );
+    }
+
+    #[test]
+    fn empty_stream_sends_endrounds_and_done_only() {
         let ds = toy_dataset(0);
-        let (link, rx, _) = Link::new(8, 0, 0);
-        let report = run_device(dev_cfg(2), Box::new(ReplayStream::new(ds)), link);
+        let (link, rx, _) = Link::new(16, 0, 0);
+        let report = run_device(dev_cfg(3, 3), Box::new(ReplayStream::new(ds)), link);
         assert_eq!(report.examples, 0);
-        assert_eq!(report.flushes, 0);
+        assert_eq!(report.deltas, 0);
         let msgs: Vec<Message> = rx.iter().collect();
-        assert_eq!(msgs.len(), 1);
-        assert!(matches!(msgs[0], Message::Done { .. }));
+        assert_eq!(msgs.len(), 4); // 3 EndRound + Done
+        assert!(msgs.iter().all(|m| !matches!(m, Message::Delta { .. })));
+        assert!(matches!(msgs.last().unwrap(), Message::Done { .. }));
     }
 
     #[test]
@@ -166,8 +261,19 @@ mod tests {
         let ds = toy_dataset(30);
         let (link, rx, _) = Link::new(8, 0, 0);
         drop(rx);
-        let report = run_device(dev_cfg(3), Box::new(ReplayStream::new(ds)), link);
+        let report = run_device(dev_cfg(4, 3), Box::new(ReplayStream::new(ds)), link);
         assert_eq!(report.examples, 30);
-        assert_eq!(report.flushes, 0);
+        assert_eq!(report.deltas, 0);
+        assert_eq!(report.rounds, 3);
+    }
+
+    #[test]
+    fn single_round_device_ships_one_delta() {
+        let ds = toy_dataset(40);
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let report = run_device(dev_cfg(5, 1), Box::new(ReplayStream::new(ds)), link);
+        assert_eq!(report.deltas, 1);
+        let deltas = rx.iter().filter(|m| matches!(m, Message::Delta { .. })).count();
+        assert_eq!(deltas, 1);
     }
 }

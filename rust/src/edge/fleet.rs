@@ -1,17 +1,40 @@
 //! Fleet orchestration: spawn device threads, wire up the aggregation
-//! topology with simulated links, merge everything into the leader's
-//! sketch, and report transfer/energy statistics.
+//! topology with simulated links, and run `sync_rounds` rounds of delta
+//! synchronization. Each round, devices push the counters changed since
+//! the last barrier; aggregators fold the round's deltas in place and
+//! forward one merged delta upstream; the leader applies the round and
+//! hands its evolving sketch to the `on_round` callback — which is where
+//! the coordinator interleaves training (the anytime model).
+//!
+//! Because counter merging is associative and commutative, R rounds of
+//! delta merges produce a leader sketch bit-identical to the one-shot
+//! full-sketch merge (property-tested in `proptest_invariants.rs`);
+//! rounds change *when* information arrives and what it costs on the
+//! wire, never what the final counters are.
 
 use super::device::{run_device, DeviceConfig, DeviceReport};
 use super::network::{Link, LinkSnapshot, Message};
 use super::topology::{plan, Stage, Topology, LEADER};
 use crate::config::{FleetConfig, StormConfig};
 use crate::data::stream::StreamSource;
-use crate::sketch::serialize::{decode, encode};
+use crate::sketch::delta::SketchDelta;
+use crate::sketch::serialize::{decode_delta, encode_delta};
 use crate::sketch::storm::StormSketch;
 use crate::sketch::Sketch;
 use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;
+
+/// What one closed sync round looked like from the leader.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStat {
+    pub round: u64,
+    /// Examples merged into the leader during this round.
+    pub examples: u64,
+    /// Cumulative examples in the leader sketch after the round closed.
+    pub leader_count: u64,
+    /// Delta messages the leader folded this round.
+    pub deltas: u64,
+}
 
 /// Result of a fleet run.
 pub struct FleetResult {
@@ -19,11 +42,60 @@ pub struct FleetResult {
     /// fleet, and everything training needs.
     pub sketch: StormSketch,
     pub devices: Vec<DeviceReport>,
-    /// Aggregate link statistics across every hop.
+    /// Aggregate link statistics across every hop (with per-round
+    /// breakdown in `network.rounds`).
     pub network: LinkSnapshot,
     pub wall_secs: f64,
     /// Total examples ingested fleet-wide.
     pub examples: u64,
+    /// Per-round leader-side statistics, in round order.
+    pub rounds: Vec<RoundStat>,
+}
+
+/// Per-epoch accumulation at a merge point (aggregator or leader): the
+/// folded delta, the round's example tally, and how many children have
+/// closed the round.
+#[derive(Default)]
+struct RoundAccum {
+    delta: Option<SketchDelta>,
+    examples: u64,
+    ends: usize,
+    deltas: u64,
+}
+
+impl RoundAccum {
+    fn fold(&mut self, d: SketchDelta) {
+        self.deltas += 1;
+        match &mut self.delta {
+            Some(acc) => acc.merge_from(&d),
+            None => self.delta = Some(d),
+        }
+    }
+}
+
+/// Record one `EndRound` from a child, then advance the in-order barrier:
+/// close round `next` (and any directly following complete rounds) as
+/// soon as all `expect` children have ended it, handing each round's
+/// accumulator to `close`. Shared by the leader loop and the aggregator
+/// nodes — only the close action differs.
+fn end_round_and_drain(
+    pending: &mut BTreeMap<u64, RoundAccum>,
+    next: &mut u64,
+    expect: usize,
+    epoch: u64,
+    examples: u64,
+    mut close: impl FnMut(u64, RoundAccum),
+) {
+    let acc = pending.entry(epoch).or_default();
+    acc.examples += examples;
+    acc.ends += 1;
+    // A round closes when every direct child has ended it; FIFO links
+    // guarantee the round's deltas arrived first.
+    while pending.get(next).is_some_and(|a| a.ends == expect) {
+        let acc = pending.remove(next).expect("pending round");
+        close(*next, acc);
+        *next += 1;
+    }
 }
 
 /// Run a fleet over per-device streams. `dim` is the augmented example
@@ -36,8 +108,25 @@ pub fn run_fleet(
     family_seed: u64,
     streams: Vec<Box<dyn StreamSource>>,
 ) -> FleetResult {
+    run_fleet_with(fleet, storm, topology, dim, family_seed, streams, |_, _| {})
+}
+
+/// [`run_fleet`] with a per-round hook: `on_round(round, sketch)` runs on
+/// the caller's thread right after the leader closes a round, while the
+/// devices keep streaming the next round in the background — training
+/// interleaves with ingestion instead of waiting for the whole fleet.
+pub fn run_fleet_with(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+    mut on_round: impl FnMut(u64, &StormSketch),
+) -> FleetResult {
     assert_eq!(streams.len(), fleet.devices, "one stream per device");
     let n = fleet.devices;
+    let rounds = fleet.sync_rounds.max(1);
     let stages = plan(topology, n);
     let timer = crate::util::timer::Timer::start();
 
@@ -64,21 +153,22 @@ pub fn run_fleet(
     }
     drop(tx_for); // aggregator threads hold the remaining clones
 
-    // Device threads. Flush cadence adapts to the sketch size: a delta is
-    // shipped once the device has ingested several wire-messages' worth
-    // of raw bytes, so steady-state sketch traffic stays well below what
-    // shipping the raw data would cost (the whole point of sketches). A
-    // final flush at stream end bounds staleness.
+    // Device threads. Hinted streams split their length evenly over the
+    // rounds; hintless streams fall back to a budget sized so steady-state
+    // delta traffic stays well below shipping the raw bytes would cost
+    // (the whole point of sketches).
     const FLUSH_RAW_MULTIPLE: usize = 8;
     let wire = crate::sketch::serialize::wire_bytes(&storm);
-    let raw_bytes_per_batch = fleet.batch * dim * 8;
-    let flush_batches = (FLUSH_RAW_MULTIPLE * wire / raw_bytes_per_batch.max(1)).max(4);
+    let raw_bytes_per_example = (dim * 8).max(1);
+    let fallback_round_examples =
+        (FLUSH_RAW_MULTIPLE * wire / raw_bytes_per_example).max(4 * fleet.batch);
     let mut device_handles = Vec::new();
     for (id, stream) in streams.into_iter().enumerate() {
         let cfg = DeviceConfig {
             id,
             batch: fleet.batch,
-            flush_batches,
+            rounds,
+            fallback_round_examples,
             storm,
             family_seed,
             dim,
@@ -87,8 +177,9 @@ pub fn run_fleet(
         device_handles.push(std::thread::spawn(move || run_device(cfg, stream, link)));
     }
 
-    // Aggregator threads, in stage order. Each drains its receiver,
-    // merges deltas, and forwards ONE merged delta + Done upstream.
+    // Aggregator threads, in stage order. Each folds its children's
+    // deltas per epoch and forwards ONE merged delta + EndRound per round
+    // upstream, then cascades Done.
     let mut agg_handles = Vec::new();
     for stage in &stages {
         if stage.parent == LEADER {
@@ -96,29 +187,54 @@ pub fn run_fleet(
         }
         let rx = rx_for.remove(&stage.parent).expect("aggregator rx");
         let up = uplink.remove(&stage.parent).expect("aggregator uplink");
-        let expect_done = stage.children.len();
-        agg_handles.push(std::thread::spawn(move || {
-            run_aggregator(rx, up, expect_done, storm, dim, family_seed)
-        }));
+        let expect = stage.children.len();
+        let agg_id = stage.parent;
+        agg_handles.push(std::thread::spawn(move || run_aggregator(rx, up, agg_id, expect)));
     }
 
-    // Leader: drain the final stage.
+    // Leader: close rounds in epoch order, applying each round's folded
+    // delta and running the caller's hook at every barrier.
     let leader_stage: &Stage = stages.iter().find(|s| s.parent == LEADER).expect("leader stage");
     let leader_rx = rx_for.remove(&LEADER).expect("leader rx");
+    let expect = leader_stage.children.len();
     let mut sketch = StormSketch::new(storm, dim, family_seed);
+    let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
+    let mut round_stats: Vec<RoundStat> = Vec::new();
+    let mut next_round: u64 = 0;
     let mut done = 0usize;
     let mut examples = 0u64;
-    while done < leader_stage.children.len() {
+    while done < expect {
         match leader_rx.recv() {
-            Ok(Message::Delta(bytes)) => {
-                let delta = decode(&bytes).expect("valid wire delta");
-                sketch.merge_from(&delta);
+            Ok(Message::Delta { epoch, payload }) => {
+                let delta = decode_delta(&payload).expect("valid wire delta");
+                pending.entry(epoch).or_default().fold(delta);
+            }
+            Ok(Message::EndRound { epoch, examples: e, .. }) => {
+                end_round_and_drain(&mut pending, &mut next_round, expect, epoch, e, |round, acc| {
+                    if let Some(delta) = &acc.delta {
+                        sketch.apply_delta(delta);
+                    }
+                    round_stats.push(RoundStat {
+                        round,
+                        examples: acc.examples,
+                        leader_count: sketch.count(),
+                        deltas: acc.deltas,
+                    });
+                    on_round(round, &sketch);
+                });
             }
             Ok(Message::Done { examples: e, .. }) => {
                 done += 1;
                 examples += e;
             }
             Err(_) => break,
+        }
+    }
+    // Defensive: if links died mid-round, fold whatever arrived so the
+    // sketch loses as little as possible.
+    for (_, acc) in pending {
+        if let Some(delta) = &acc.delta {
+            sketch.apply_delta(delta);
         }
     }
 
@@ -139,29 +255,42 @@ pub fn run_fleet(
         network,
         wall_secs: timer.elapsed_secs(),
         examples,
+        rounds: round_stats,
     }
 }
 
-/// Aggregator node: merge every delta from children, forward the merged
-/// sketch once all children are done (cascading Done upstream with the
-/// summed example count).
-fn run_aggregator(
-    rx: Receiver<Message>,
-    up: Link,
-    expect_done: usize,
-    storm: StormConfig,
-    dim: usize,
-    family_seed: u64,
-) {
-    let mut acc = StormSketch::new(storm, dim, family_seed);
+/// Aggregator node: fold every child delta of an epoch in place, and once
+/// all children closed the epoch forward the single merged delta (plus
+/// the round barrier) upstream — cascading Done with the summed example
+/// count after the final round.
+fn run_aggregator(rx: Receiver<Message>, up: Link, agg_id: usize, expect: usize) {
+    let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
+    let mut next: u64 = 0;
     let mut done = 0usize;
     let mut examples = 0u64;
-    while done < expect_done {
+    while done < expect {
         match rx.recv() {
-            Ok(Message::Delta(bytes)) => {
-                if let Ok(delta) = decode(&bytes) {
-                    acc.merge_from(&delta);
+            Ok(Message::Delta { epoch, payload }) => {
+                if let Ok(delta) = decode_delta(&payload) {
+                    pending.entry(epoch).or_default().fold(delta);
                 }
+            }
+            Ok(Message::EndRound { epoch, examples: e, .. }) => {
+                end_round_and_drain(&mut pending, &mut next, expect, epoch, e, |round, acc| {
+                    if let Some(delta) = &acc.delta {
+                        if !delta.is_empty() {
+                            let _ = up.send(Message::Delta {
+                                epoch: round,
+                                payload: encode_delta(delta),
+                            });
+                        }
+                    }
+                    let _ = up.send(Message::EndRound {
+                        device_id: agg_id,
+                        epoch: round,
+                        examples: acc.examples,
+                    });
+                });
             }
             Ok(Message::Done { examples: e, .. }) => {
                 done += 1;
@@ -170,10 +299,7 @@ fn run_aggregator(
             Err(_) => break,
         }
     }
-    if acc.count() > 0 {
-        let _ = up.send(Message::Delta(encode(&acc)));
-    }
-    let _ = up.send(Message::Done { device_id: usize::MAX - 1, examples });
+    let _ = up.send(Message::Done { device_id: agg_id, examples });
 }
 
 #[cfg(test)]
@@ -182,13 +308,14 @@ mod tests {
     use crate::data::stream::partition_streams;
     use crate::data::synthetic;
 
-    fn small_fleet_cfg(devices: usize) -> FleetConfig {
+    fn small_fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
         FleetConfig {
             devices,
             batch: 16,
             channel_capacity: 4,
             link_latency_us: 0,
             link_bandwidth_bps: 0,
+            sync_rounds,
             seed: 0,
         }
     }
@@ -208,62 +335,115 @@ mod tests {
         (sk, ds.len() as u64)
     }
 
-    fn run_with(topology: Topology, devices: usize) -> FleetResult {
+    fn run_with(topology: Topology, devices: usize, rounds: usize) -> FleetResult {
         let ds = scaled_ds();
         let storm = StormConfig { rows: 12, power: 3, saturating: true };
         let streams = partition_streams(&ds, devices, None);
-        run_fleet(small_fleet_cfg(devices), storm, topology, ds.dim() + 1, 99, streams)
+        run_fleet(
+            small_fleet_cfg(devices, rounds),
+            storm,
+            topology,
+            ds.dim() + 1,
+            99,
+            streams,
+        )
     }
 
     #[test]
     fn star_fleet_equals_single_device_sketch() {
         let storm = StormConfig { rows: 12, power: 3, saturating: true };
         let (reference, n) = reference_sketch(storm, 99);
-        let result = run_with(Topology::Star, 4);
+        let result = run_with(Topology::Star, 4, 1);
         assert_eq!(result.examples, n);
         assert_eq!(result.sketch.count(), n);
         assert_eq!(result.sketch.grid().data(), reference.grid().data());
     }
 
     #[test]
-    fn tree_and_chain_agree_with_star() {
-        let star = run_with(Topology::Star, 6);
-        let tree = run_with(Topology::Tree { fanout: 2 }, 6);
-        let chain = run_with(Topology::Chain, 6);
-        assert_eq!(star.sketch.grid().data(), tree.sketch.grid().data());
-        assert_eq!(star.sketch.grid().data(), chain.sketch.grid().data());
-        assert_eq!(star.examples, tree.examples);
-        assert_eq!(star.examples, chain.examples);
+    fn multi_round_sync_is_bit_identical_to_one_shot() {
+        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let (reference, n) = reference_sketch(storm, 99);
+        for rounds in [2usize, 3, 5] {
+            let result = run_with(Topology::Star, 4, rounds);
+            assert_eq!(result.examples, n, "rounds={rounds}");
+            assert_eq!(result.sketch.grid().data(), reference.grid().data(), "rounds={rounds}");
+            assert_eq!(result.rounds.len(), rounds, "rounds={rounds}");
+            // Leader counts grow monotonically and end at n.
+            let counts: Vec<u64> = result.rounds.iter().map(|r| r.leader_count).collect();
+            assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+            assert_eq!(*counts.last().unwrap(), n);
+            let per_round: u64 = result.rounds.iter().map(|r| r.examples).sum();
+            assert_eq!(per_round, n);
+        }
     }
 
     #[test]
-    fn network_bytes_scale_with_flushes() {
-        let result = run_with(Topology::Star, 3);
-        assert!(result.network.messages >= 3); // at least one delta + dones
+    fn tree_and_chain_agree_with_star_across_rounds() {
+        for rounds in [1usize, 3] {
+            let star = run_with(Topology::Star, 6, rounds);
+            let tree = run_with(Topology::Tree { fanout: 2 }, 6, rounds);
+            let chain = run_with(Topology::Chain, 6, rounds);
+            assert_eq!(star.sketch.grid().data(), tree.sketch.grid().data());
+            assert_eq!(star.sketch.grid().data(), chain.sketch.grid().data());
+            assert_eq!(star.examples, tree.examples);
+            assert_eq!(star.examples, chain.examples);
+            // Per-round leader state is ALSO topology-invariant: the set
+            // of device increments in round r does not depend on how they
+            // were folded on the way up.
+            let lc = |r: &FleetResult| r.rounds.iter().map(|s| s.leader_count).collect::<Vec<_>>();
+            assert_eq!(lc(&star), lc(&tree));
+            assert_eq!(lc(&star), lc(&chain));
+        }
+    }
+
+    #[test]
+    fn on_round_sees_evolving_sketch_at_every_barrier() {
+        let ds = scaled_ds();
+        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let streams = partition_streams(&ds, 3, None);
+        let mut seen: Vec<(u64, u64)> = Vec::new();
+        let result = run_fleet_with(
+            small_fleet_cfg(3, 4),
+            storm,
+            Topology::Star,
+            ds.dim() + 1,
+            7,
+            streams,
+            |round, sketch| seen.push((round, sketch.count())),
+        );
+        assert_eq!(seen.len(), 4);
+        assert_eq!(seen.iter().map(|&(r, _)| r).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(seen.windows(2).all(|w| w[0].1 <= w[1].1), "{seen:?}");
+        assert_eq!(seen.last().unwrap().1, result.sketch.count());
+    }
+
+    #[test]
+    fn network_accounts_bytes_per_round() {
+        let result = run_with(Topology::Star, 3, 3);
         assert!(result.network.bytes > 0);
-        let per_msg = crate::sketch::serialize::wire_bytes(&StormConfig {
-            rows: 12,
-            power: 3,
-            saturating: true,
-        });
-        // Every delta message is exactly wire_bytes; total is a multiple
-        // plus 16-byte Done frames.
-        let deltas = (result.network.bytes
-            - 16 * result.devices.len() as u64) / per_msg as u64;
-        assert!(deltas >= 3, "deltas={deltas}");
+        assert_eq!(result.network.rounds.len(), 3);
+        // Every epoch-tagged byte lands in a round bucket; Done frames
+        // (16 bytes each, one per device on a star) do not.
+        let round_total: u64 = result.network.rounds.values().map(|t| t.bytes).sum();
+        assert_eq!(result.network.bytes, round_total + 16 * 3);
+        // Each round carries its barrier frames: 3 devices x 24 bytes.
+        for (epoch, t) in &result.network.rounds {
+            assert!(t.bytes >= 3 * 24, "round {epoch} too light: {t:?}");
+        }
     }
 
     #[test]
     fn device_reports_cover_dataset() {
-        let result = run_with(Topology::Star, 5);
+        let result = run_with(Topology::Star, 5, 2);
         let total: u64 = result.devices.iter().map(|d| d.examples).sum();
         assert_eq!(total, 300);
         assert!(result.devices.iter().all(|d| d.batches > 0));
+        assert!(result.devices.iter().all(|d| d.rounds == 2));
     }
 
     #[test]
     fn single_device_fleet_works() {
-        let result = run_with(Topology::Star, 1);
+        let result = run_with(Topology::Star, 1, 1);
         assert_eq!(result.examples, 300);
     }
 }

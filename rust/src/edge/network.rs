@@ -1,29 +1,54 @@
 //! Simulated network links: bounded channels (backpressure) with explicit
-//! latency/bandwidth cost models and transfer accounting.
+//! latency/bandwidth cost models and transfer accounting — total and
+//! broken down per sync round (epoch), which is what the communication-
+//! vs-rounds experiments read.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Messages devices send upstream.
+/// Messages devices and aggregators send upstream.
 #[derive(Debug)]
 pub enum Message {
-    /// A serialized sketch delta (wire format of `sketch::serialize`).
-    Delta(Vec<u8>),
-    /// Device finished its stream after ingesting `examples`.
+    /// A serialized sketch delta for one sync round (wire format v2 of
+    /// `sketch::serialize`, v1 accepted for backward compatibility).
+    Delta { epoch: u64, payload: Vec<u8> },
+    /// Sender finished sync round `epoch` after ingesting `examples`
+    /// within that round. One per round per child — the upstream barrier
+    /// counts these.
+    EndRound { device_id: usize, epoch: u64, examples: u64 },
+    /// Sender finished its stream for good after ingesting `examples`.
     Done { device_id: usize, examples: u64 },
 }
 
 impl Message {
     /// Bytes this message occupies on the wire (header-free model: deltas
-    /// dominate; Done is a 16-byte control frame).
+    /// dominate; EndRound is a 24-byte and Done a 16-byte control frame).
     pub fn wire_bytes(&self) -> usize {
         match self {
-            Message::Delta(b) => b.len(),
+            Message::Delta { payload, .. } => payload.len(),
+            Message::EndRound { .. } => 24,
             Message::Done { .. } => 16,
         }
     }
+
+    /// The sync round this message belongs to (None for stream-final
+    /// control frames).
+    pub fn epoch(&self) -> Option<u64> {
+        match self {
+            Message::Delta { epoch, .. } | Message::EndRound { epoch, .. } => Some(*epoch),
+            Message::Done { .. } => None,
+        }
+    }
+}
+
+/// Traffic attributed to one sync round on one link.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoundTraffic {
+    pub messages: u64,
+    pub bytes: u64,
 }
 
 /// Shared transfer statistics for one link.
@@ -35,6 +60,9 @@ pub struct LinkStats {
     pub blocked_ns: AtomicU64,
     /// Sends that found the channel full at first attempt.
     pub backpressure_events: AtomicU64,
+    /// Per-epoch traffic (epoch-tagged messages only; Done frames carry
+    /// no epoch and land in the totals alone).
+    rounds: Mutex<BTreeMap<u64, RoundTraffic>>,
 }
 
 impl LinkStats {
@@ -44,17 +72,20 @@ impl LinkStats {
             bytes: self.bytes.load(Ordering::Relaxed),
             blocked_ns: self.blocked_ns.load(Ordering::Relaxed),
             backpressure_events: self.backpressure_events.load(Ordering::Relaxed),
+            rounds: self.rounds.lock().expect("link stats lock").clone(),
         }
     }
 }
 
 /// Plain-data copy of link stats.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct LinkSnapshot {
     pub messages: u64,
     pub bytes: u64,
     pub blocked_ns: u64,
     pub backpressure_events: u64,
+    /// Traffic per sync round, keyed by epoch.
+    pub rounds: BTreeMap<u64, RoundTraffic>,
 }
 
 impl LinkSnapshot {
@@ -63,6 +94,16 @@ impl LinkSnapshot {
         self.bytes += other.bytes;
         self.blocked_ns += other.blocked_ns;
         self.backpressure_events += other.backpressure_events;
+        for (&epoch, t) in &other.rounds {
+            let e = self.rounds.entry(epoch).or_default();
+            e.messages += t.messages;
+            e.bytes += t.bytes;
+        }
+    }
+
+    /// Bytes attributed to one sync round across this snapshot.
+    pub fn round_bytes(&self, epoch: u64) -> u64 {
+        self.rounds.get(&epoch).map_or(0, |t| t.bytes)
     }
 }
 
@@ -102,6 +143,7 @@ impl Link {
     /// fleet config's `channel_capacity` controls.
     pub fn send(&self, msg: Message) -> Result<(), ()> {
         let bytes = msg.wire_bytes();
+        let epoch = msg.epoch();
         // Pay the wire cost.
         let mut cost = self.latency;
         if self.bandwidth_bps > 0 {
@@ -113,7 +155,7 @@ impl Link {
         // Try fast path, fall back to blocking and time the stall.
         let msg = match self.tx.try_send(msg) {
             Ok(()) => {
-                self.account(bytes);
+                self.account(bytes, epoch);
                 return Ok(());
             }
             Err(TrySendError::Full(m)) => {
@@ -130,14 +172,20 @@ impl Link {
             .blocked_ns
             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if result.is_ok() {
-            self.account(bytes);
+            self.account(bytes, epoch);
         }
         result
     }
 
-    fn account(&self, bytes: usize) {
+    fn account(&self, bytes: usize, epoch: Option<u64>) {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        if let Some(epoch) = epoch {
+            let mut rounds = self.stats.rounds.lock().expect("link stats lock");
+            let t = rounds.entry(epoch).or_default();
+            t.messages += 1;
+            t.bytes += bytes as u64;
+        }
     }
 
     pub fn stats(&self) -> Arc<LinkStats> {
@@ -160,10 +208,14 @@ impl Clone for Link {
 mod tests {
     use super::*;
 
+    fn delta(epoch: u64, len: usize) -> Message {
+        Message::Delta { epoch, payload: vec![0u8; len] }
+    }
+
     #[test]
     fn send_accounts_bytes_and_messages() {
         let (link, rx, stats) = Link::new(4, 0, 0);
-        link.send(Message::Delta(vec![0u8; 100])).unwrap();
+        link.send(delta(0, 100)).unwrap();
         link.send(Message::Done { device_id: 0, examples: 5 }).unwrap();
         let snap = stats.snapshot();
         assert_eq!(snap.messages, 2);
@@ -173,20 +225,52 @@ mod tests {
     }
 
     #[test]
+    fn per_round_accounting_splits_by_epoch() {
+        let (link, _rx, stats) = Link::new(8, 0, 0);
+        link.send(delta(0, 50)).unwrap();
+        link.send(Message::EndRound { device_id: 0, epoch: 0, examples: 9 }).unwrap();
+        link.send(delta(1, 30)).unwrap();
+        link.send(Message::EndRound { device_id: 0, epoch: 1, examples: 4 }).unwrap();
+        link.send(Message::Done { device_id: 0, examples: 13 }).unwrap();
+        let snap = stats.snapshot();
+        assert_eq!(snap.round_bytes(0), 74);
+        assert_eq!(snap.round_bytes(1), 54);
+        assert_eq!(snap.rounds[&0].messages, 2);
+        // Done is not attributed to any round; totals still include it.
+        let round_total: u64 = snap.rounds.values().map(|t| t.bytes).sum();
+        assert_eq!(snap.bytes, round_total + 16);
+    }
+
+    #[test]
+    fn snapshot_merge_merges_round_maps() {
+        let (a, _rxa, sa) = Link::new(4, 0, 0);
+        let (b, _rxb, sb) = Link::new(4, 0, 0);
+        a.send(delta(0, 10)).unwrap();
+        b.send(delta(0, 20)).unwrap();
+        b.send(delta(2, 5)).unwrap();
+        let mut merged = LinkSnapshot::default();
+        merged.merge(&sa.snapshot());
+        merged.merge(&sb.snapshot());
+        assert_eq!(merged.round_bytes(0), 30);
+        assert_eq!(merged.round_bytes(2), 5);
+        assert_eq!(merged.messages, 3);
+    }
+
+    #[test]
     fn disconnected_receiver_errors() {
         let (link, rx, _) = Link::new(1, 0, 0);
         drop(rx);
-        assert!(link.send(Message::Delta(vec![1])).is_err());
+        assert!(link.send(delta(0, 1)).is_err());
     }
 
     #[test]
     fn backpressure_blocks_until_drained() {
         let (link, rx, stats) = Link::new(1, 0, 0);
-        link.send(Message::Delta(vec![0u8; 10])).unwrap();
+        link.send(delta(0, 10)).unwrap();
         // Next send must block until the consumer drains; do it from a
         // thread and drain after a delay.
         let handle = std::thread::spawn(move || {
-            link.send(Message::Delta(vec![0u8; 10])).unwrap();
+            link.send(delta(0, 10)).unwrap();
         });
         std::thread::sleep(Duration::from_millis(20));
         let _ = rx.recv().unwrap();
@@ -201,7 +285,7 @@ mod tests {
     fn latency_model_delays_send() {
         let (link, _rx, _) = Link::new(8, 20_000, 0); // 20ms
         let t = std::time::Instant::now();
-        link.send(Message::Delta(vec![0u8; 1])).unwrap();
+        link.send(delta(0, 1)).unwrap();
         assert!(t.elapsed() >= Duration::from_millis(18));
     }
 
@@ -209,7 +293,7 @@ mod tests {
     fn bandwidth_model_scales_with_bytes() {
         let (link, _rx, _) = Link::new(8, 0, 1_000_000); // 1 MB/s
         let t = std::time::Instant::now();
-        link.send(Message::Delta(vec![0u8; 50_000])).unwrap(); // 50ms
+        link.send(delta(0, 50_000)).unwrap(); // 50ms
         assert!(t.elapsed() >= Duration::from_millis(45));
     }
 }

@@ -49,6 +49,7 @@ pub fn run(effort: Effort, seed: u64) -> Table {
                 channel_capacity: 4,
                 link_latency_us: 0,
                 link_bandwidth_bps: 0,
+                sync_rounds: 1,
                 seed,
             };
             let streams = partition_streams(&ds, devices, None);

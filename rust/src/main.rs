@@ -73,7 +73,8 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("rows", Some("100"), "sketch rows R")
         .opt("power", Some("4"), "hyperplanes per row p (buckets = 2^p)")
         .opt("devices", Some("4"), "simulated edge devices")
-        .opt("iters", Some("400"), "DFO iterations")
+        .opt("sync-rounds", Some("1"), "delta sync rounds (training interleaves between rounds)")
+        .opt("iters", Some("400"), "DFO iterations (split across sync rounds)")
         .opt("queries", Some("8"), "DFO probes per iteration")
         .opt("sigma", Some("0.3"), "DFO sphere radius")
         .opt("step", Some("0.6"), "DFO step size")
@@ -94,6 +95,8 @@ fn cmd_train(args: &[String]) -> i32 {
         cfg.storm.rows = parsed.get_usize("rows")?;
         cfg.storm.power = parsed.get_usize("power")? as u32;
         cfg.fleet.devices = parsed.get_usize("devices")?;
+        cfg.fleet.sync_rounds = parsed.get_usize("sync-rounds")?;
+        anyhow::ensure!(cfg.fleet.sync_rounds >= 1, "--sync-rounds must be >= 1");
         cfg.optimizer.iters = parsed.get_usize("iters")?;
         cfg.optimizer.queries = parsed.get_usize("queries")?;
         cfg.optimizer.sigma = parsed.get_f64("sigma")?;
@@ -116,19 +119,27 @@ fn cmd_train(args: &[String]) -> i32 {
         let report = train(&cfg, ds, topology, backend)?;
         println!("{}", report.summary());
         println!(
-            "fleet: {} examples over {} devices in {:.2}s; train: {:.2}s ({} iters)",
+            "fleet: {} examples over {} devices in {:.2}s; train: {:.2}s ({} iters over {} rounds)",
             report.examples,
             cfg.fleet.devices,
             report.fleet_wall_secs,
             report.train_wall_secs,
-            cfg.optimizer.iters
+            cfg.optimizer.iters,
+            cfg.fleet.sync_rounds,
         );
+        if cfg.fleet.sync_rounds > 1 {
+            println!("round  examples  net_bytes  est_risk");
+            for r in &report.rounds {
+                println!("{:>5}  {:>8}  {:>9}  {:.5}", r.round, r.examples, r.bytes, r.risk);
+            }
+        }
         if let Some(path) = parsed.get("checkpoint") {
             let state = storm::coordinator::state::TrainingState {
                 dataset: report.dataset.clone(),
                 iter: cfg.optimizer.iters,
                 theta: report.theta.clone(),
                 trace: report.trace.clone(),
+                rounds: report.rounds.iter().map(|r| (r.round, r.risk, r.bytes)).collect(),
             };
             state.save(path)?;
             println!("checkpoint written to {path}");

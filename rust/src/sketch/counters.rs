@@ -5,6 +5,15 @@
 //! sketch is 6.4 KB). Increments saturate rather than wrap so pathological
 //! streams degrade gracefully instead of corrupting estimates.
 
+/// A frozen copy of a grid's counters, taken at a sync barrier so the
+/// next round can ship only what changed ([`CounterGrid::delta_since`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GridSnapshot {
+    rows: usize,
+    buckets: usize,
+    data: Vec<u32>,
+}
+
 /// Dense row-major counter grid.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CounterGrid {
@@ -85,6 +94,40 @@ impl CounterGrid {
         }
     }
 
+    /// Capture the current counter values for later [`Self::delta_since`].
+    pub fn snapshot(&self) -> GridSnapshot {
+        GridSnapshot {
+            rows: self.rows,
+            buckets: self.buckets,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Counter increments accumulated since `snap` was taken, as a dense
+    /// row-major `R x B` buffer. Counters only grow (inserts and merges
+    /// add), so the elementwise difference is exact; if a saturating
+    /// counter hit `u32::MAX` in between, the clipped increments are lost
+    /// here exactly as they are lost in the grid itself (graceful
+    /// degradation, not corruption).
+    pub fn delta_since(&self, snap: &GridSnapshot) -> Vec<u32> {
+        assert_eq!(self.rows, snap.rows, "delta_since: row mismatch");
+        assert_eq!(self.buckets, snap.buckets, "delta_since: bucket mismatch");
+        self.data
+            .iter()
+            .zip(&snap.data)
+            .map(|(&cur, &old)| cur.wrapping_sub(old))
+            .collect()
+    }
+
+    /// Apply a dense delta produced by [`Self::delta_since`] (or decoded
+    /// from the wire — the v2 decoder materializes sparse runs into a
+    /// dense buffer before applying). Identical arithmetic to
+    /// [`Self::add_counts`]; the alias exists so the sync-round call
+    /// sites read as what they are.
+    pub fn apply_delta(&mut self, delta: &[u32]) {
+        self.add_counts(delta);
+    }
+
     /// Row slice.
     pub fn row(&self, r: usize) -> &[u32] {
         &self.data[r * self.buckets..(r + 1) * self.buckets]
@@ -161,6 +204,32 @@ mod tests {
     fn bytes_accounting() {
         let g = CounterGrid::new(100, 16, true);
         assert_eq!(g.bytes(), 6400);
+    }
+
+    #[test]
+    fn delta_since_tracks_only_new_increments() {
+        let mut g = CounterGrid::new(2, 3, true);
+        g.increment(0, 1);
+        g.increment(1, 2);
+        let snap = g.snapshot();
+        g.increment(0, 1);
+        g.increment(0, 0);
+        assert_eq!(g.delta_since(&snap), vec![1, 1, 0, 0, 0, 0]);
+        // Applying the delta onto a copy of the snapshot state reproduces
+        // the live grid.
+        let mut replica = CounterGrid::new(2, 3, true);
+        replica.increment(0, 1);
+        replica.increment(1, 2);
+        replica.apply_delta(&g.delta_since(&snap));
+        assert_eq!(replica.data(), g.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn delta_since_shape_mismatch_panics() {
+        let a = CounterGrid::new(2, 2, true);
+        let b = CounterGrid::new(2, 3, true);
+        a.delta_since(&b.snapshot());
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Epoch-tagged sketch deltas — the unit of fleet synchronization.
+//!
+//! A device keeps ONE long-lived cumulative sketch and a snapshot of the
+//! counters at the last sync barrier. At each sync round it emits a
+//! [`SketchDelta`]: only the counter increments accumulated since the
+//! snapshot, tagged with the round's epoch. Deltas are themselves
+//! mergeable summaries (elementwise addition), so aggregators fold the
+//! deltas of one epoch in place and forward a single merged delta
+//! upstream; the leader applies each epoch's merged delta and ends up
+//! with counters bit-identical to a one-shot merge of full sketches
+//! (property-tested in `rust/tests/proptest_invariants.rs`).
+//!
+//! The wire representation (sparse varint runs, dense fallback) lives in
+//! [`super::serialize`]; this module is the in-memory algebra.
+
+use super::storm::StormSketch;
+use crate::config::StormConfig;
+use crate::sketch::Sketch;
+
+/// Frozen device state at a sync barrier: counters + example count.
+#[derive(Clone, Debug)]
+pub struct SketchSnapshot {
+    pub(crate) grid: super::counters::GridSnapshot,
+    pub(crate) count: u64,
+}
+
+impl SketchSnapshot {
+    /// Examples the sketch had absorbed when the snapshot was taken.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Counter increments accumulated between two sync barriers, tagged with
+/// the sync round (`epoch`) they belong to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchDelta {
+    /// Sync round this delta belongs to.
+    pub epoch: u64,
+    /// Sketch geometry (must match fleet-wide; applying enforces it).
+    pub cfg: StormConfig,
+    /// Augmented example dimension (d + 1).
+    pub dim: usize,
+    /// Shared hash-family seed.
+    pub seed: u64,
+    /// Examples inserted within this delta.
+    pub count: u64,
+    /// Dense row-major `R x B` counter increments.
+    pub counts: Vec<u32>,
+}
+
+impl SketchDelta {
+    /// An all-zero delta for the given geometry (identity of the merge).
+    pub fn empty(epoch: u64, cfg: StormConfig, dim: usize, seed: u64) -> Self {
+        SketchDelta {
+            epoch,
+            cfg,
+            dim,
+            seed,
+            count: 0,
+            counts: vec![0; cfg.rows * cfg.buckets()],
+        }
+    }
+
+    /// True when the delta carries no examples (and hence no increments).
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Number of cells with a nonzero increment.
+    pub fn nonzero_cells(&self) -> usize {
+        self.counts.iter().filter(|&&c| c != 0).count()
+    }
+
+    /// Fraction of cells touched — the wire encoder goes sparse below
+    /// 50% (see `serialize::encode_delta`).
+    pub fn populated_fraction(&self) -> f64 {
+        if self.counts.is_empty() {
+            return 0.0;
+        }
+        self.nonzero_cells() as f64 / self.counts.len() as f64
+    }
+
+    /// Sparse `(row-major cell index, increment)` view, indices ascending.
+    pub fn sparse_cells(&self) -> Vec<(u32, u32)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0)
+            .map(|(i, &c)| (i as u32, c))
+            .collect()
+    }
+
+    /// Fold another delta of the same epoch and geometry into this one
+    /// (what aggregator nodes do per round). Uses the grid's saturation
+    /// policy so an aggregated delta behaves exactly like the counters it
+    /// will be applied to.
+    pub fn merge_from(&mut self, other: &SketchDelta) {
+        assert_eq!(self.epoch, other.epoch, "delta merge: epoch mismatch");
+        assert_eq!(self.cfg, other.cfg, "delta merge: config mismatch");
+        assert_eq!(self.seed, other.seed, "delta merge: seed mismatch");
+        assert_eq!(self.dim, other.dim, "delta merge: dim mismatch");
+        assert_eq!(self.counts.len(), other.counts.len(), "delta merge: shape mismatch");
+        if self.cfg.saturating {
+            for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+                *c = c.saturating_add(*o);
+            }
+        } else {
+            for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+                *c = c.wrapping_add(*o);
+            }
+        }
+        self.count += other.count;
+    }
+}
+
+impl StormSketch {
+    /// Freeze the current state for a later [`Self::delta_since`].
+    pub fn snapshot(&self) -> SketchSnapshot {
+        SketchSnapshot {
+            grid: self.grid().snapshot(),
+            count: self.count(),
+        }
+    }
+
+    /// The increments accumulated since `snap`, tagged with `epoch`.
+    pub fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta {
+        SketchDelta {
+            epoch,
+            cfg: self.config(),
+            dim: self.dim(),
+            seed: self.seed(),
+            count: self.count() - snap.count,
+            counts: self.grid().delta_since(&snap.grid),
+        }
+    }
+
+    /// Apply a delta (merge of a remote device's round increments).
+    /// Geometry, seed and dimension must match — the same compatibility
+    /// contract as [`Sketch::merge_from`].
+    pub fn apply_delta(&mut self, delta: &SketchDelta) {
+        assert_eq!(self.config(), delta.cfg, "apply_delta: config mismatch");
+        assert_eq!(self.seed(), delta.seed, "apply_delta: seed mismatch");
+        assert_eq!(self.dim(), delta.dim, "apply_delta: dim mismatch");
+        let (grid, count) = self.parts_mut();
+        grid.apply_delta(&delta.counts);
+        *count += delta.count;
+    }
+
+    /// Materialize a standalone sketch from a delta (used by the wire
+    /// decoder's backward-compatible full-sketch entry point).
+    pub fn from_delta(delta: &SketchDelta) -> StormSketch {
+        let mut sk = StormSketch::new(delta.cfg, delta.dim, delta.seed);
+        sk.apply_delta(delta);
+        sk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen_ball_point;
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg() -> StormConfig {
+        StormConfig { rows: 10, power: 3, saturating: true }
+    }
+
+    fn insert_n(sk: &mut StormSketch, rng: &mut Xoshiro256, n: usize) {
+        for _ in 0..n {
+            let z = gen_ball_point(rng, sk.dim(), 0.9);
+            sk.insert(&z);
+        }
+    }
+
+    #[test]
+    fn rounds_of_deltas_reassemble_the_full_sketch() {
+        let mut rng = Xoshiro256::new(5);
+        let mut device = StormSketch::new(cfg(), 4, 42);
+        let mut leader = StormSketch::new(cfg(), 4, 42);
+        let mut snap = device.snapshot();
+        for epoch in 0..4u64 {
+            insert_n(&mut device, &mut rng, 17);
+            let delta = device.delta_since(&snap, epoch);
+            assert_eq!(delta.count, 17);
+            leader.apply_delta(&delta);
+            snap = device.snapshot();
+        }
+        assert_eq!(leader.grid().data(), device.grid().data());
+        assert_eq!(leader.count(), device.count());
+    }
+
+    #[test]
+    fn aggregator_fold_equals_leader_applying_each() {
+        let mut rng = Xoshiro256::new(6);
+        let mut a = StormSketch::new(cfg(), 3, 9);
+        let mut b = StormSketch::new(cfg(), 3, 9);
+        insert_n(&mut a, &mut rng, 12);
+        insert_n(&mut b, &mut rng, 30);
+        let da = a.delta_since(&StormSketch::new(cfg(), 3, 9).snapshot(), 2);
+        let db = b.delta_since(&StormSketch::new(cfg(), 3, 9).snapshot(), 2);
+        // Path 1: leader applies both.
+        let mut leader1 = StormSketch::new(cfg(), 3, 9);
+        leader1.apply_delta(&da);
+        leader1.apply_delta(&db);
+        // Path 2: aggregator folds, leader applies the merged delta.
+        let mut folded = SketchDelta::empty(2, cfg(), 3, 9);
+        folded.merge_from(&da);
+        folded.merge_from(&db);
+        let mut leader2 = StormSketch::new(cfg(), 3, 9);
+        leader2.apply_delta(&folded);
+        assert_eq!(leader1.grid().data(), leader2.grid().data());
+        assert_eq!(leader1.count(), leader2.count());
+        assert_eq!(folded.count, 42);
+    }
+
+    #[test]
+    fn empty_delta_reports_empty_and_zero_population() {
+        let d = SketchDelta::empty(0, cfg(), 3, 1);
+        assert!(d.is_empty());
+        assert_eq!(d.nonzero_cells(), 0);
+        assert_eq!(d.populated_fraction(), 0.0);
+        assert!(d.sparse_cells().is_empty());
+    }
+
+    #[test]
+    fn sparse_cells_round_trip_dense() {
+        let mut rng = Xoshiro256::new(7);
+        let mut sk = StormSketch::new(cfg(), 3, 4);
+        insert_n(&mut sk, &mut rng, 3);
+        let delta = sk.delta_since(&StormSketch::new(cfg(), 3, 4).snapshot(), 1);
+        let mut dense = vec![0u32; delta.counts.len()];
+        for (i, c) in delta.sparse_cells() {
+            dense[i as usize] = c;
+        }
+        assert_eq!(dense, delta.counts);
+        // 3 inserts touch at most 2 cells per row out of 8 — sparse.
+        assert!(delta.populated_fraction() < 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn apply_delta_seed_mismatch_panics() {
+        let mut sk = StormSketch::new(cfg(), 3, 1);
+        let d = SketchDelta::empty(0, cfg(), 3, 2);
+        sk.apply_delta(&d);
+    }
+
+    #[test]
+    #[should_panic]
+    fn delta_merge_epoch_mismatch_panics() {
+        let mut a = SketchDelta::empty(0, cfg(), 3, 1);
+        let b = SketchDelta::empty(1, cfg(), 3, 1);
+        a.merge_from(&b);
+    }
+}

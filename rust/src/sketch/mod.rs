@@ -8,13 +8,16 @@
 //! * [`storm`] — the paper's STORM sketch: asymmetric insert/query with
 //!   PRP pairing, estimating the regression surrogate loss (Thm 2) and the
 //!   max-margin classification loss (Thm 3);
+//! * [`delta`] — epoch-tagged counter deltas, the unit of round-based
+//!   fleet synchronization (`SketchDelta`, `SketchSnapshot`);
 //! * [`privacy`] — differentially-private release (Laplace count noise);
 //! * [`serialize`] — the compact wire format devices ship over the
-//!   simulated network;
+//!   simulated network (dense v1 + sparse delta v2);
 //! * [`compose`] — sum/difference/product estimators over multiple
 //!   sketches (Theorem 1 closure).
 
 pub mod counters;
+pub mod delta;
 pub mod race;
 pub mod storm;
 pub mod privacy;

@@ -141,15 +141,23 @@ pub fn section(title: &str) {
 
 /// Collects the results of one bench suite and emits a machine-readable
 /// `BENCH_<suite>.json` alongside the human stdout report, so the perf
-/// trajectory is tracked across PRs (EXPERIMENTS.md §Perf reads these).
+/// trajectory is tracked across PRs (EXPERIMENTS.md §Perf and
+/// §Communication vs. rounds read these).
 ///
-/// Output is a JSON array of objects with `name`, `ns_per_item`,
-/// `items_per_sec` (both `null` when the bench has no item count), plus
-/// the raw timing stats. Written to `$STORM_BENCH_JSON_DIR` if set,
+/// Output is a JSON array of objects: timing entries carry `name`,
+/// `ns_per_item`, `items_per_sec` (both `null` when the bench has no item
+/// count) plus the raw timing stats; scalar entries (recorded with
+/// [`JsonReporter::record_scalar`] — e.g. wire bytes per round) carry
+/// `name` and `value`. Written to `$STORM_BENCH_JSON_DIR` if set,
 /// otherwise the current directory.
 pub struct JsonReporter {
     suite: String,
-    results: Vec<BenchResult>,
+    entries: Vec<Entry>,
+}
+
+enum Entry {
+    Bench(BenchResult),
+    Scalar { name: String, value: f64 },
 }
 
 fn json_escape(s: &str) -> String {
@@ -175,45 +183,63 @@ fn json_num(x: f64) -> String {
 
 impl JsonReporter {
     pub fn new(suite: &str) -> Self {
-        JsonReporter { suite: suite.to_string(), results: Vec::new() }
+        JsonReporter { suite: suite.to_string(), entries: Vec::new() }
     }
 
     /// Record one benchmark result (typically the return value of
     /// [`bench`] / [`bench_items`]).
     pub fn record(&mut self, result: BenchResult) {
-        self.results.push(result);
+        self.entries.push(Entry::Bench(result));
+    }
+
+    /// Record a free-form scalar metric alongside the timings — sizes,
+    /// ratios, byte counts (e.g. sparse-vs-dense wire bytes per round).
+    pub fn record_scalar(&mut self, name: &str, value: f64) {
+        println!("metric {name:<35} value={value:.3}");
+        self.entries.push(Entry::Scalar { name: name.to_string(), value });
     }
 
     /// Render all recorded results as a JSON array.
     pub fn to_json(&self) -> String {
         let mut out = String::from("[\n");
-        for (i, r) in self.results.iter().enumerate() {
-            let ns_per_item = match r.items {
-                Some(n) if n > 0 => json_num(r.mean_s * 1e9 / n as f64),
-                _ => "null".to_string(),
-            };
-            let items_per_sec = match r.throughput() {
-                Some(t) => json_num(t),
-                None => "null".to_string(),
-            };
-            out.push_str(&format!(
-                concat!(
-                    "  {{\"name\": \"{}\", \"ns_per_item\": {}, ",
-                    "\"items_per_sec\": {}, \"mean_ns\": {}, ",
-                    "\"p50_ns\": {}, \"p99_ns\": {}, \"sd_ns\": {}, ",
-                    "\"samples\": {}, \"items\": {}}}"
-                ),
-                json_escape(&r.name),
-                ns_per_item,
-                items_per_sec,
-                json_num(r.mean_s * 1e9),
-                json_num(r.p50_s * 1e9),
-                json_num(r.p99_s * 1e9),
-                json_num(r.std_s * 1e9),
-                r.samples,
-                r.items.map_or("null".to_string(), |n| n.to_string()),
-            ));
-            out.push_str(if i + 1 < self.results.len() { ",\n" } else { "\n" });
+        for (i, entry) in self.entries.iter().enumerate() {
+            match entry {
+                Entry::Bench(r) => {
+                    let ns_per_item = match r.items {
+                        Some(n) if n > 0 => json_num(r.mean_s * 1e9 / n as f64),
+                        _ => "null".to_string(),
+                    };
+                    let items_per_sec = match r.throughput() {
+                        Some(t) => json_num(t),
+                        None => "null".to_string(),
+                    };
+                    out.push_str(&format!(
+                        concat!(
+                            "  {{\"name\": \"{}\", \"ns_per_item\": {}, ",
+                            "\"items_per_sec\": {}, \"mean_ns\": {}, ",
+                            "\"p50_ns\": {}, \"p99_ns\": {}, \"sd_ns\": {}, ",
+                            "\"samples\": {}, \"items\": {}}}"
+                        ),
+                        json_escape(&r.name),
+                        ns_per_item,
+                        items_per_sec,
+                        json_num(r.mean_s * 1e9),
+                        json_num(r.p50_s * 1e9),
+                        json_num(r.p99_s * 1e9),
+                        json_num(r.std_s * 1e9),
+                        r.samples,
+                        r.items.map_or("null".to_string(), |n| n.to_string()),
+                    ));
+                }
+                Entry::Scalar { name, value } => {
+                    out.push_str(&format!(
+                        "  {{\"name\": \"{}\", \"value\": {}}}",
+                        json_escape(name),
+                        json_num(*value),
+                    ));
+                }
+            }
+            out.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
         }
         out.push_str("]\n");
         out
@@ -278,6 +304,25 @@ mod tests {
         assert!(json.contains("\"items_per_sec\": 100000000.000"));
         assert!(json.contains("\"ns_per_item\": null"));
         // Exactly one comma-separated boundary between the two objects.
+        assert_eq!(json.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn json_reporter_mixes_scalars_and_timings() {
+        let mut rep = JsonReporter::new("unit");
+        rep.record_scalar("wire_bytes_sparse", 512.0);
+        rep.record(BenchResult {
+            name: "timed".to_string(),
+            samples: 3,
+            mean_s: 1e-6,
+            std_s: 0.0,
+            p50_s: 1e-6,
+            p99_s: 1e-6,
+            items: None,
+        });
+        let json = rep.to_json();
+        assert!(json.contains("\"name\": \"wire_bytes_sparse\", \"value\": 512.000"));
+        assert!(json.contains("\"name\": \"timed\""));
         assert_eq!(json.matches("},\n").count(), 1);
     }
 

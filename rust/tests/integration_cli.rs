@@ -99,6 +99,36 @@ fn train_small_run_with_checkpoint() {
 }
 
 #[test]
+fn train_with_sync_rounds_prints_round_table() {
+    let out = storm()
+        .args([
+            "train",
+            "--dataset",
+            "synth2d-reg",
+            "--rows",
+            "100",
+            "--iters",
+            "40",
+            "--devices",
+            "2",
+            "--sync-rounds",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rounds=4"), "summary missing round count: {text}");
+    assert!(text.contains("round  examples  net_bytes  est_risk"), "{text}");
+    // One table line per round.
+    assert!(text.contains("    0  ") && text.contains("    3  "), "{text}");
+}
+
+#[test]
 fn train_rejects_bad_dataset_and_backend() {
     let out = storm().args(["train", "--dataset", "nope"]).output().unwrap();
     assert_eq!(out.status.code(), Some(1));

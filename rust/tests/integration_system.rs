@@ -26,6 +26,7 @@ fn base_cfg(dataset: &str) -> RunConfig {
             channel_capacity: 8,
             link_latency_us: 0,
             link_bandwidth_bps: 0,
+            sync_rounds: 1,
             seed: 2,
         },
         artifacts_dir: None,
@@ -86,6 +87,7 @@ fn checkpoint_roundtrip_through_driver() {
         iter: cfg.optimizer.iters,
         theta: report.theta.clone(),
         trace: report.trace.clone(),
+        rounds: report.rounds.iter().map(|r| (r.round, r.risk, r.bytes)).collect(),
     };
     let path = std::env::temp_dir().join("storm_integration_ckpt.txt");
     state.save(&path).unwrap();
@@ -114,18 +116,22 @@ fn baselines_and_storm_share_memory_accounting() {
 
 #[test]
 fn fleet_with_slow_links_still_exact() {
-    // Latency + tight channels stress the backpressure path; counters
-    // must remain exactly mergeable.
+    // Latency + tight channels stress the backpressure path — across
+    // multiple sync rounds; per-round counters must remain exactly
+    // mergeable so the trained models agree bit-for-bit.
     let mut cfg = base_cfg("autos");
     cfg.fleet.link_latency_us = 500;
     cfg.fleet.channel_capacity = 1;
     cfg.fleet.devices = 6;
+    cfg.fleet.sync_rounds = 3;
     let a = train(&cfg, registry::load("autos", 3).unwrap(), Topology::Chain, QueryBackend::Rust)
         .unwrap();
     let mut fast = base_cfg("autos");
     fast.fleet.devices = 6;
+    fast.fleet.sync_rounds = 3;
     let b = train(&fast, registry::load("autos", 3).unwrap(), Topology::Star, QueryBackend::Rust)
         .unwrap();
-    // Identical merged counters => identical training outcome.
+    // Identical per-round merged counters => identical training outcome.
     assert_eq!(a.theta, b.theta);
+    assert_eq!(a.rounds.len(), 3);
 }

@@ -2,12 +2,15 @@
 //! crate's seeded case-sweep framework stands in for proptest, which is
 //! not in the offline vendor set).
 
-use storm::config::StormConfig;
+use storm::config::{FleetConfig, StormConfig};
+use storm::data::stream::partition_streams;
+use storm::edge::fleet::run_fleet;
+use storm::edge::topology::Topology;
 use storm::lsh::asym::{augment, Side};
 use storm::lsh::prp::PairedRandomProjection;
 use storm::lsh::srp::SignedRandomProjection;
 use storm::lsh::LshFunction;
-use storm::sketch::serialize::{decode, encode};
+use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, wire_bytes};
 use storm::sketch::storm::StormSketch;
 use storm::sketch::Sketch;
 use storm::testing::{assert_close, cases, gen_ball_point, gen_dim};
@@ -114,6 +117,199 @@ fn prop_wire_roundtrip_any_config() {
         assert_eq!(back.count(), sk.count());
         assert_eq!(back.dim(), sk.dim());
     });
+}
+
+#[test]
+fn prop_delta_wire_roundtrip_any_config() {
+    // Snapshot mid-stream, ship the tail as an epoch-tagged v2 delta,
+    // decode, apply onto a replica of the snapshot state: the replica
+    // must equal the live sketch bit-for-bit. Exercises both the sparse
+    // and (for tiny dense grids) the fallback encoding.
+    cases(60, 113, |rng, case| {
+        let rows = 1 + (case % 25);
+        let p = 1 + (case % 6) as u32;
+        let dim = gen_dim(rng, 1, 12);
+        let cfg = StormConfig { rows, power: p, saturating: true };
+        let seed = case as u64 ^ 0xDE17A;
+        let mut sk = StormSketch::new(cfg, dim, seed);
+        let head = (rng.next_u64() % 30) as usize;
+        for _ in 0..head {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let snap = sk.snapshot();
+        // Replica of the snapshot-time state, to apply the delta onto.
+        let mut replica = StormSketch::new(cfg, dim, seed);
+        replica.merge_from(&sk);
+        let tail = (rng.next_u64() % 40) as usize;
+        for _ in 0..tail {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let epoch = rng.next_u64() % 1000;
+        let delta = sk.delta_since(&snap, epoch);
+        assert_eq!(delta.count, tail as u64);
+        let back = decode_delta(&encode_delta(&delta)).unwrap();
+        assert_eq!(back, delta, "rows={rows} p={p} dim={dim}");
+        replica.apply_delta(&back);
+        assert_eq!(replica.grid().data(), sk.grid().data());
+        assert_eq!(replica.count(), sk.count());
+    });
+}
+
+#[test]
+fn prop_sparse_delta_cheaper_than_dense_v1() {
+    // Acceptance: a sparse round's v2 frame must cost strictly fewer
+    // bytes than a dense v1 encode of the full sketch. A round touching
+    // few cells (few inserts into a roomy grid) is the sparse regime.
+    cases(40, 114, |rng, case| {
+        let rows = 8 + (case % 40);
+        let cfg = StormConfig { rows, power: 4, saturating: true };
+        let dim = gen_dim(rng, 1, 10);
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        let snap = sk.snapshot();
+        let n = 1 + (rng.next_u64() % 3) as usize;
+        for _ in 0..n {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let delta = sk.delta_since(&snap, 0);
+        assert!(delta.populated_fraction() <= 0.5, "not sparse: {}", delta.populated_fraction());
+        let sparse_len = encode_delta(&delta).len();
+        assert!(
+            sparse_len < wire_bytes(&cfg),
+            "sparse {} >= dense {} (rows={rows})",
+            sparse_len,
+            wire_bytes(&cfg)
+        );
+    });
+}
+
+#[test]
+fn prop_wire_corruption_errors_never_panic() {
+    // Satellite contract: random truncations and byte flips of BOTH wire
+    // versions always yield a WireError — no panic, no silent success.
+    cases(80, 115, |rng, case| {
+        let cfg = StormConfig { rows: 1 + (case % 12), power: 1 + (case % 5) as u32, saturating: true };
+        let dim = gen_dim(rng, 1, 8);
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        let snap = sk.snapshot();
+        for _ in 0..(rng.next_u64() % 25) {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let frames = [encode(&sk), encode_delta(&sk.delta_since(&snap, case as u64))];
+        for bytes in &frames {
+            // Random truncation (strictly shorter, including empty).
+            let cut = (rng.next_u64() % bytes.len() as u64) as usize;
+            assert!(decode_delta(&bytes[..cut]).is_err(), "truncation to {cut} accepted");
+            assert!(decode(&bytes[..cut]).is_err());
+            // Random single-byte flip: FNV-1a over the body is injective
+            // in any one byte, so every flip must trip the checksum (or a
+            // validation that fires before it).
+            let mut flipped = bytes.clone();
+            let at = (rng.next_u64() % flipped.len() as u64) as usize;
+            let bit = 1u8 << (rng.next_u64() % 8);
+            flipped[at] ^= bit;
+            assert!(decode_delta(&flipped).is_err(), "flip at {at} accepted");
+        }
+    });
+}
+
+#[test]
+fn prop_header_mutations_with_valid_crc_rejected() {
+    // Structural header lies must be caught by validation even when the
+    // attacker (or a memory error) recomputes a valid checksum.
+    fn fnv1a(bytes: &[u8]) -> u32 {
+        // Mirror of the (private) serializer checksum, for re-fixing.
+        let mut h: u32 = 0x811c9dc5;
+        for &b in bytes {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x01000193);
+        }
+        h
+    }
+    fn refix(bytes: &mut [u8]) {
+        let n = bytes.len();
+        let crc = fnv1a(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+    }
+    cases(40, 116, |rng, case| {
+        let cfg = StormConfig { rows: 2 + (case % 10), power: 1 + (case % 4) as u32, saturating: true };
+        let dim = gen_dim(rng, 1, 6);
+        let mut sk = StormSketch::new(cfg, dim, case as u64);
+        let snap = sk.snapshot();
+        for _ in 0..(1 + rng.next_u64() % 10) {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let frames = [encode(&sk), encode_delta(&sk.delta_since(&snap, 1))];
+        for bytes in &frames {
+            // (offset range, lie) tuples: magic, version, power, rows, and
+            // a payload-length lie (drop the last payload byte).
+            let mutations: [&dyn Fn(&mut Vec<u8>); 5] = [
+                &|b: &mut Vec<u8>| b[0] ^= 0xFF,                                  // magic
+                &|b: &mut Vec<u8>| b[4..6].copy_from_slice(&9u16.to_le_bytes()),  // version
+                &|b: &mut Vec<u8>| b[6..8].copy_from_slice(&0u16.to_le_bytes()),  // power 0
+                &|b: &mut Vec<u8>| b[8..12].copy_from_slice(&0u32.to_le_bytes()), // rows 0
+                &|b: &mut Vec<u8>| {
+                    let n = b.len();
+                    b.remove(n - 5); // shrink payload by one byte
+                },
+            ];
+            for (i, m) in mutations.iter().enumerate() {
+                let mut lying = bytes.clone();
+                m(&mut lying);
+                refix(&mut lying);
+                assert!(decode_delta(&lying).is_err(), "mutation {i} accepted");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_round_sync_bit_identical_to_oneshot() {
+    // THE tentpole invariant: for a fixed family seed, R rounds of delta
+    // synchronization produce a leader sketch bit-identical to the
+    // one-shot full merge — across device counts and topologies.
+    cases(8, 117, |rng, case| {
+        let n_examples = 60 + (rng.next_u64() % 120) as usize;
+        let devices = 1 + (case % 4);
+        let rounds = 1 + (case % 5);
+        let topo = if case % 2 == 0 { Topology::Star } else { Topology::Tree { fanout: 2 } };
+        let storm = StormConfig { rows: 6 + (case % 10), power: 3, saturating: true };
+        let mut ds = storm_ds(n_examples, case as u64);
+        storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        let family_seed = 0xF1EE7 ^ case as u64;
+        // One-shot reference: a single local sketch over the whole set.
+        let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
+        for i in 0..ds.len() {
+            reference.insert(&ds.augmented(i));
+        }
+        let fleet = FleetConfig {
+            devices,
+            batch: 16,
+            channel_capacity: 2,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            sync_rounds: rounds,
+            seed: 0,
+        };
+        let streams = partition_streams(&ds, devices, None);
+        let result = run_fleet(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
+        assert_eq!(
+            result.sketch.grid().data(),
+            reference.grid().data(),
+            "devices={devices} rounds={rounds} topo={topo:?}"
+        );
+        assert_eq!(result.sketch.count(), reference.count());
+        assert_eq!(result.rounds.len(), rounds);
+        assert_eq!(result.examples, n_examples as u64);
+    });
+}
+
+/// Small random regression dataset for the fleet property tests.
+fn storm_ds(n: usize, seed: u64) -> storm::data::dataset::Dataset {
+    let mut rng = storm::util::rng::Xoshiro256::new(seed ^ 0xD5);
+    let d = 3;
+    let x = storm::linalg::matrix::Matrix::from_fn(n, d, |_, _| rng.uniform_range(-1.0, 1.0));
+    let y: Vec<f64> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+    storm::data::dataset::Dataset::new("prop-fleet", x, y)
 }
 
 #[test]
