@@ -55,6 +55,10 @@ fn main() {
             // Online mode: 8 delta sync rounds; DFO trains between rounds
             // against the leader's evolving sketch while devices stream.
             sync_rounds: 8,
+            // Ideal network here; pass a faults seed (CLI --faults-seed)
+            // to rehearse the same run under seeded chaos.
+            min_quorum: 0,
+            faults_seed: None,
             seed: 17,
         },
         artifacts_dir: Some("artifacts".to_string()),

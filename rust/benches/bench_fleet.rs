@@ -10,7 +10,8 @@ use storm::config::{FleetConfig, StormConfig};
 use storm::data::scale::scale_to_unit_ball;
 use storm::data::stream::partition_streams;
 use storm::data::synthetic;
-use storm::edge::fleet::run_fleet;
+use storm::edge::faults::FaultPlan;
+use storm::edge::fleet::{run_fleet, run_fleet_chaos};
 use storm::edge::topology::Topology;
 use storm::experiments::{merge, Effort};
 use storm::util::bench::{bench_items, config_from_env, section, JsonReporter};
@@ -23,6 +24,8 @@ fn fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
         link_latency_us: 0,
         link_bandwidth_bps: 0,
         sync_rounds,
+        min_quorum: 0,
+        faults_seed: None,
         seed: 0,
     }
 }
@@ -109,6 +112,48 @@ fn main() {
         json.record_scalar(
             &format!("fleet_net_msgs_4dev_{rounds}rounds"),
             r.network.messages as f64,
+        );
+    }
+
+    section("fleet: catch-up overhead vs drop rate (4 devices, star, 8 rounds)");
+    // EXPERIMENTS.md §Resilience reads these scalars: at each controlled
+    // drop rate, how many catch-up (retransmit) bytes the protocol
+    // spends recovering the stream, as a fraction of total wire bytes.
+    // The merged counters are asserted bit-identical to the loss-free
+    // run — resilience costs bytes, never correctness.
+    let baseline = {
+        let streams = partition_streams(&ds, 4, None);
+        run_fleet(fleet_cfg(4, 8), storm_cfg, Topology::Star, ds.dim() + 1, 3, streams)
+    };
+    for drop_per_mille in [0u16, 50, 100, 200, 400] {
+        let plan = (drop_per_mille > 0).then(|| FaultPlan::drop_only(9, drop_per_mille));
+        let streams = partition_streams(&ds, 4, None);
+        let r = run_fleet_chaos(
+            fleet_cfg(4, 8),
+            storm_cfg,
+            Topology::Star,
+            ds.dim() + 1,
+            3,
+            streams,
+            plan,
+            |_, _| {},
+        );
+        assert_eq!(
+            r.sketch.grid().data(),
+            baseline.sketch.grid().data(),
+            "drop rate {drop_per_mille} per-mille changed the counters"
+        );
+        json.record_scalar(
+            &format!("fleet_chaos_net_bytes_drop{drop_per_mille}pm"),
+            r.network.bytes as f64,
+        );
+        json.record_scalar(
+            &format!("fleet_chaos_retransmit_bytes_drop{drop_per_mille}pm"),
+            r.network.retransmit_bytes() as f64,
+        );
+        json.record_scalar(
+            &format!("fleet_chaos_drops_drop{drop_per_mille}pm"),
+            r.faults.drops as f64,
         );
     }
 

@@ -77,6 +77,17 @@ pub struct FleetConfig {
     /// coordinator trains between rounds. 1 = the one-shot pipeline
     /// (sketch everything, then train once).
     pub sync_rounds: usize,
+    /// Barrier quorum: how many direct children a merge node waits for
+    /// before closing a round (clamped to the node's child count).
+    /// 0 = all children — the default, which preserves the ideal-network
+    /// behaviour bit-for-bit; smaller quorums let rounds close without
+    /// stragglers, whose deltas then fold late (still exactly once).
+    pub min_quorum: usize,
+    /// Seed for the deterministic fault-injection plan
+    /// (`edge::faults::FaultPlan::from_seed`): drops, duplicates,
+    /// delays/reorders, straggler rounds and one device crash/restart,
+    /// all replayable from this one value. None = ideal network.
+    pub faults_seed: Option<u64>,
     pub seed: u64,
 }
 
@@ -89,6 +100,8 @@ impl Default for FleetConfig {
             link_latency_us: 200,
             link_bandwidth_bps: 0,
             sync_rounds: 1,
+            min_quorum: 0,
+            faults_seed: None,
             seed: 0,
         }
     }
@@ -175,6 +188,13 @@ impl RunConfig {
                 ("fleet", "sync_rounds") => {
                     cfg.fleet.sync_rounds = value.as_usize().map_err(ConfigError::Parse)?
                 }
+                ("fleet", "min_quorum") => {
+                    cfg.fleet.min_quorum = value.as_usize().map_err(ConfigError::Parse)?
+                }
+                ("fleet", "faults_seed") => {
+                    cfg.fleet.faults_seed =
+                        Some(value.as_usize().map_err(ConfigError::Parse)? as u64)
+                }
                 ("fleet", "seed") => {
                     cfg.fleet.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
                 }
@@ -233,6 +253,8 @@ channel_capacity = 4
 link_latency_us = 100
 link_bandwidth_bps = 1000000
 sync_rounds = 6
+min_quorum = 5
+faults_seed = 1234
 seed = 7
 "#,
         )
@@ -243,7 +265,16 @@ seed = 7
         assert_eq!(cfg.fleet.devices, 8);
         assert_eq!(cfg.fleet.link_bandwidth_bps, 1_000_000);
         assert_eq!(cfg.fleet.sync_rounds, 6);
+        assert_eq!(cfg.fleet.min_quorum, 5);
+        assert_eq!(cfg.fleet.faults_seed, Some(1234));
         assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts"));
+    }
+
+    #[test]
+    fn fault_knobs_default_off() {
+        let cfg = RunConfig::from_toml_str("[fleet]\ndevices = 4\n").unwrap();
+        assert_eq!(cfg.fleet.min_quorum, 0, "default quorum is all children");
+        assert_eq!(cfg.fleet.faults_seed, None, "default network is ideal");
     }
 
     #[test]

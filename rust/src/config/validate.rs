@@ -39,6 +39,12 @@ pub fn validate(cfg: &RunConfig) -> Result<(), String> {
     if cfg.fleet.sync_rounds > 1_000_000 {
         return Err("fleet.sync_rounds unreasonably large (> 1e6)".to_string());
     }
+    if cfg.fleet.min_quorum > cfg.fleet.devices {
+        return Err(format!(
+            "fleet.min_quorum ({}) exceeds fleet.devices ({}); use 0 for \"all\"",
+            cfg.fleet.min_quorum, cfg.fleet.devices
+        ));
+    }
     Ok(())
 }
 
@@ -100,5 +106,18 @@ mod tests {
         let mut c = base();
         c.fleet.sync_rounds = 0;
         assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.min_quorum = c.fleet.devices + 1;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn quorum_within_fleet_is_valid() {
+        let mut c = base();
+        c.fleet.min_quorum = c.fleet.devices;
+        assert!(validate(&c).is_ok());
+        c.fleet.min_quorum = 1;
+        assert!(validate(&c).is_ok());
     }
 }

@@ -7,8 +7,23 @@
 //! aggregation idempotent-free simple addition, and the sparse v2 wire
 //! encoding makes a quiet round cost bytes proportional to what actually
 //! changed — the mergeable-summary property doing real work, per round.
+//!
+//! **Fault tolerance.** The device's recovery invariant is simple: the
+//! counter snapshot (`snap`) advances **only when a delta is confirmed
+//! delivered**. Anything that goes wrong — a dropped frame, a straggled
+//! round, a crash — leaves the snapshot behind, and the next cut delta
+//! automatically covers every epoch since (`delta_since` is cumulative):
+//! the multi-epoch catch-up frame of the protocol, accounted as
+//! retransmit bytes on the link. A crash/restart costs nothing extra
+//! because the sketch *is* the checkpoint (a few KB of counters); the
+//! device is silent for the downtime, then back-fills the missed
+//! barrier acks and ships one catch-up delta. The epilogue after the
+//! round loop guarantees the device never exits owing data or
+//! barriers, retrying the final delta until the link confirms it
+//! (bounded by the fault plan's drop-burst cap).
 
-use super::network::{Link, Message};
+use super::faults::{drain_due, ChaosLink, Delivery, FaultPlan};
+use super::network::Message;
 use crate::config::StormConfig;
 use crate::data::stream::StreamSource;
 use crate::sketch::serialize::encode_delta;
@@ -33,6 +48,12 @@ pub struct DeviceConfig {
     pub family_seed: u64,
     /// Augmented example dimension (d + 1).
     pub dim: usize,
+    /// Fault schedule (None = ideal network, the PR-2 path bit-for-bit).
+    pub plan: Option<FaultPlan>,
+    /// Crash window for THIS device: `(round, downtime)` — silent for
+    /// `downtime` rounds starting at `round` (resolved fleet-wide from
+    /// the plan's single crash/restart).
+    pub crash: Option<(u64, u64)>,
 }
 
 /// Summary the device thread returns.
@@ -41,23 +62,46 @@ pub struct DeviceReport {
     pub id: usize,
     pub examples: u64,
     pub batches: u64,
-    /// Sync rounds completed (always `cfg.rounds`, even past stream end —
-    /// quiet rounds still answer the barrier).
+    /// Sync rounds the device actively ran (quiet rounds past stream end
+    /// included; rounds spent down in a crash window are counted in
+    /// `crashed_rounds` instead — `rounds + crashed_rounds == cfg.rounds`,
+    /// and every round is still eventually acked upstream).
     pub rounds: u64,
-    /// Non-empty deltas actually shipped upstream.
+    /// Non-empty deltas actually shipped (confirmed delivered) upstream.
     pub deltas: u64,
+    /// Rounds spent down in the crash window.
+    pub crashed_rounds: u64,
+    /// Rounds whose barrier ack was deferred (straggler rounds).
+    pub straggled: u64,
+    /// Delivered delta frames that were catch-up traffic (covered more
+    /// than the round they were sent in, or were retries).
+    pub retransmits: u64,
     pub ingest_secs: f64,
 }
 
+/// Send every held barrier ack due at or before round `through`.
+fn flush_ends(
+    link: &ChaosLink,
+    device_id: usize,
+    held: &mut Vec<(u64, (u64, u64))>,
+    through: u64,
+) {
+    drain_due(held, through, |(epoch, examples)| {
+        let _ = link.send(Message::EndRound { device_id, epoch, examples });
+    });
+}
+
 /// Run one device through all sync rounds: sketch into the long-lived
-/// local sketch, emit one delta + `EndRound` per round, then `Done`.
-/// This is the body of each fleet thread.
+/// local sketch, emit one delta + `EndRound` per round (deferred or
+/// coalesced under faults), then `Done`. This is the body of each fleet
+/// thread.
 pub fn run_device(
     cfg: DeviceConfig,
     mut stream: Box<dyn StreamSource>,
-    link: Link,
+    link: ChaosLink,
 ) -> DeviceReport {
     let rounds = cfg.rounds.max(1);
+    let last_epoch = rounds as u64 - 1;
     let mut sketch = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
     let mut snap = sketch.snapshot();
     let mut report = DeviceReport { id: cfg.id, ..Default::default() };
@@ -72,10 +116,32 @@ pub fn run_device(
     let mut buf: Vec<crate::data::stream::Example> =
         Vec::with_capacity(cfg.batch.min(hint.unwrap_or(cfg.batch)).max(1));
     let mut exhausted = false;
+    // Fault-protocol state: barrier acks deferred by straggler rounds,
+    // barriers missed while crashed, and the first epoch whose
+    // increments have not been confirmed delivered (a delta covering
+    // more than its own round is catch-up traffic).
+    let mut held_ends: Vec<(u64, (u64, u64))> = Vec::new();
+    let mut missed: Vec<u64> = Vec::new();
+    let mut unshipped_from: u64 = 0;
     for epoch in 0..rounds as u64 {
+        if cfg.crash.is_some_and(|(at, down)| epoch >= at && epoch < at + down) {
+            // Down: no ingest, no sends. The sketch persists (it is the
+            // checkpoint); the stream backlog waits at the source.
+            missed.push(epoch);
+            report.crashed_rounds += 1;
+            continue;
+        }
+        // Reconnect: back-fill the barrier acks missed while down so
+        // full-quorum barriers can close.
+        for &e in &missed {
+            let _ = link.send(Message::EndRound { device_id: cfg.id, epoch: e, examples: 0 });
+        }
+        missed.clear();
+        // Release straggled acks that are due this round.
+        flush_ends(&link, cfg.id, &mut held_ends, epoch);
         // The final round drains the stream completely so a stale or
         // missing hint never strands examples.
-        let last = epoch + 1 == rounds as u64;
+        let last = epoch == last_epoch;
         let mut ingested = 0usize;
         while !exhausted && (last || ingested < budget) {
             let want = if last { cfg.batch } else { cfg.batch.min(budget - ingested) };
@@ -91,24 +157,90 @@ pub fn run_device(
             report.batches += 1;
         }
         report.examples += ingested as u64;
+        report.rounds += 1;
+        let straggle = cfg.plan.map_or(0, |p| p.straggle_rounds(cfg.id, epoch));
+        if straggle > 0 && !last {
+            // Straggler round: defer the barrier ack; the round's
+            // increments simply ride in the next cut delta (the
+            // snapshot stays behind — same recovery path as a drop).
+            held_ends.push((epoch + straggle, (epoch, ingested as u64)));
+            report.straggled += 1;
+            continue;
+        }
         let delta = sketch.delta_since(&snap, epoch);
         if !delta.is_empty() {
-            // A dead link (aggregator gone) stops shipping but the device
-            // keeps sketching and counting.
-            if link
-                .send(Message::Delta { epoch, payload: encode_delta(&delta) })
-                .is_ok()
-            {
-                report.deltas += 1;
+            let catchup = unshipped_from < epoch;
+            match link.send_class(
+                Message::Delta { from: cfg.id, epoch, payload: encode_delta(&delta) },
+                catchup,
+            ) {
+                Ok(Delivery::Delivered) => {
+                    snap = sketch.snapshot();
+                    unshipped_from = epoch + 1;
+                    report.deltas += 1;
+                    report.retransmits += u64::from(catchup);
+                }
+                // Dropped: snapshot stays behind; the increments ride
+                // in a later round's catch-up delta.
+                Ok(Delivery::Dropped) => {}
+                // A dead link (aggregator gone) stops shipping but the
+                // device keeps sketching and counting.
+                Err(()) => {}
             }
-            snap = sketch.snapshot();
+        } else {
+            unshipped_from = epoch + 1; // quiet round: nothing owed
         }
-        report.rounds += 1;
         let _ = link.send(Message::EndRound {
             device_id: cfg.id,
             epoch,
             examples: ingested as u64,
         });
+    }
+    // Recovery epilogue: a crash window that reached the end, straggled
+    // acks still held, or a dropped final delta all resolve here — the
+    // device never exits owing data or barriers.
+    for &e in &missed {
+        let _ = link.send(Message::EndRound { device_id: cfg.id, epoch: e, examples: 0 });
+    }
+    missed.clear();
+    flush_ends(&link, cfg.id, &mut held_ends, u64::MAX);
+    if !exhausted {
+        // The crash swallowed the draining round: this is a one-pass
+        // stream, so drain the backlog now or never.
+        loop {
+            stream.next_batch_into(cfg.batch, &mut buf);
+            if buf.is_empty() {
+                break;
+            }
+            sketch.insert_batch(&buf);
+            report.examples += buf.len() as u64;
+            report.batches += 1;
+        }
+    }
+    // Final-delta loop: retry until the link confirms delivery (the
+    // plan's drop-burst cap bounds this) or the receiver is gone. Any
+    // non-empty delta here means the in-loop path failed to deliver it
+    // (a drop, or a crash covering the final round) — recovery traffic
+    // by definition, so it is always retransmit-classed.
+    let retrying = unshipped_from <= last_epoch;
+    loop {
+        let delta = sketch.delta_since(&snap, last_epoch);
+        if delta.is_empty() {
+            break;
+        }
+        match link.send_class(
+            Message::Delta { from: cfg.id, epoch: last_epoch, payload: encode_delta(&delta) },
+            retrying,
+        ) {
+            Ok(Delivery::Delivered) => {
+                snap = sketch.snapshot();
+                report.deltas += 1;
+                report.retransmits += u64::from(retrying);
+                break;
+            }
+            Ok(Delivery::Dropped) => continue,
+            Err(()) => break,
+        }
     }
     report.ingest_secs = timer.elapsed_secs();
     let _ = link.send(Message::Done { device_id: cfg.id, examples: report.examples });
@@ -140,17 +272,28 @@ mod tests {
             storm: StormConfig { rows: 10, power: 3, saturating: true },
             family_seed: 42,
             dim: 3,
+            plan: None,
+            crash: None,
         }
     }
 
-    /// Reassemble every delta a device shipped into one sketch.
+    fn plain(link: Link) -> ChaosLink {
+        ChaosLink::passthrough(link)
+    }
+
+    /// Reassemble every delta a device shipped into one sketch,
+    /// deduplicating on `(from, epoch)` exactly as a merge node does.
     fn reassemble(msgs: &[Message]) -> (StormSketch, u64, Vec<u64>) {
         let mut merged = StormSketch::new(dev_cfg(0, 1).storm, 3, 42);
         let mut done_examples = 0;
         let mut epochs = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
         for msg in msgs {
             match msg {
-                Message::Delta { epoch, payload } => {
+                Message::Delta { from, epoch, payload } => {
+                    if !seen.insert((*from, *epoch)) {
+                        continue; // duplicate frame: exactly-once fold
+                    }
                     let d = decode_delta(payload).unwrap();
                     assert_eq!(d.epoch, *epoch, "frame epoch must match message epoch");
                     merged.apply_delta(&d);
@@ -163,11 +306,19 @@ mod tests {
         (merged, done_examples, epochs)
     }
 
+    fn reference_sketch(ds: &Dataset) -> StormSketch {
+        let mut reference = StormSketch::new(dev_cfg(0, 1).storm, 3, 42);
+        for i in 0..ds.len() {
+            reference.insert(&ds.augmented(i));
+        }
+        reference
+    }
+
     #[test]
     fn device_sketches_whole_stream_across_rounds() {
         let ds = toy_dataset(50);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(0, 4), Box::new(ReplayStream::new(ds.clone())), link);
+        let report = run_device(dev_cfg(0, 4), Box::new(ReplayStream::new(ds.clone())), plain(link));
         assert_eq!(report.examples, 50);
         assert_eq!(report.rounds, 4);
         let msgs: Vec<Message> = rx.iter().collect();
@@ -178,10 +329,7 @@ mod tests {
         // Deltas tagged with consecutive epochs, applied in order equal a
         // locally-built one-shot sketch.
         assert!(epochs.windows(2).all(|w| w[0] < w[1]), "{epochs:?}");
-        let mut reference = StormSketch::new(dev_cfg(0, 1).storm, 3, 42);
-        for i in 0..ds.len() {
-            reference.insert(&ds.augmented(i));
-        }
+        let reference = reference_sketch(&ds);
         assert_eq!(merged.grid().data(), reference.grid().data());
         assert_eq!(merged.count(), 50);
     }
@@ -190,7 +338,7 @@ mod tests {
     fn hinted_stream_splits_examples_evenly_across_rounds() {
         let ds = toy_dataset(64);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(1, 4), Box::new(ReplayStream::new(ds)), link);
+        let report = run_device(dev_cfg(1, 4), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.examples, 64);
         assert_eq!(report.deltas, 4);
         // 64 hinted examples over 4 rounds -> 16 per round.
@@ -226,7 +374,7 @@ mod tests {
         let mut cfg = dev_cfg(2, 5);
         cfg.batch = 2;
         cfg.fallback_round_examples = 3;
-        let report = run_device(cfg, Box::new(NoHint(ReplayStream::new(ds))), link);
+        let report = run_device(cfg, Box::new(NoHint(ReplayStream::new(ds))), plain(link));
         assert_eq!(report.examples, 10);
         assert_eq!(report.rounds, 5);
         let ends: Vec<(u64, u64)> = rx
@@ -247,7 +395,7 @@ mod tests {
     fn empty_stream_sends_endrounds_and_done_only() {
         let ds = toy_dataset(0);
         let (link, rx, _) = Link::new(16, 0, 0);
-        let report = run_device(dev_cfg(3, 3), Box::new(ReplayStream::new(ds)), link);
+        let report = run_device(dev_cfg(3, 3), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.examples, 0);
         assert_eq!(report.deltas, 0);
         let msgs: Vec<Message> = rx.iter().collect();
@@ -261,7 +409,7 @@ mod tests {
         let ds = toy_dataset(30);
         let (link, rx, _) = Link::new(8, 0, 0);
         drop(rx);
-        let report = run_device(dev_cfg(4, 3), Box::new(ReplayStream::new(ds)), link);
+        let report = run_device(dev_cfg(4, 3), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.examples, 30);
         assert_eq!(report.deltas, 0);
         assert_eq!(report.rounds, 3);
@@ -271,9 +419,112 @@ mod tests {
     fn single_round_device_ships_one_delta() {
         let ds = toy_dataset(40);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(5, 1), Box::new(ReplayStream::new(ds)), link);
+        let report = run_device(dev_cfg(5, 1), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.deltas, 1);
         let deltas = rx.iter().filter(|m| matches!(m, Message::Delta { .. })).count();
         assert_eq!(deltas, 1);
+    }
+
+    #[test]
+    fn dropped_deltas_ride_in_catchup_frames_and_lose_nothing() {
+        // Total loss: every delta is dropped until the burst cap forces
+        // one through. The reassembled sketch must still be complete,
+        // and the delivered catch-up frames must be retransmit-classed.
+        let ds = toy_dataset(48);
+        let (link, rx, stats) = Link::new(256, 0, 0);
+        let mut cfg = dev_cfg(6, 6);
+        cfg.plan = Some(FaultPlan::drop_only(1, 1000));
+        let chaos = ChaosLink::new(link, cfg.id as u64, cfg.plan);
+        let fault_stats = chaos.stats();
+        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
+        assert_eq!(report.examples, 48);
+        assert_eq!(report.rounds, 6);
+        let faults = fault_stats.snapshot();
+        assert!(faults.drops > 0, "plan must actually drop: {faults:?}");
+        let msgs: Vec<Message> = rx.iter().collect();
+        let (merged, done, _) = reassemble(&msgs);
+        assert_eq!(done, 48);
+        let reference = reference_sketch(&ds);
+        assert_eq!(merged.grid().data(), reference.grid().data());
+        assert_eq!(merged.count(), 48);
+        // Catch-up frames were delivered and accounted as retransmit
+        // bytes on the link.
+        assert!(report.retransmits > 0, "{report:?}");
+        assert!(stats.snapshot().retransmit_bytes() > 0);
+    }
+
+    #[test]
+    fn crashed_device_backfills_barriers_and_ships_everything() {
+        let ds = toy_dataset(60);
+        let (link, rx, _) = Link::new(256, 0, 0);
+        let mut cfg = dev_cfg(7, 6);
+        cfg.crash = Some((2, 2)); // silent for rounds 2 and 3
+        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
+        assert_eq!(report.crashed_rounds, 2);
+        assert_eq!(report.examples, 60, "backlog drained after restart");
+        let msgs: Vec<Message> = rx.iter().collect();
+        // Every round is eventually acked exactly once, crashed rounds
+        // with zero examples.
+        let mut acked: Vec<(u64, u64)> = msgs
+            .iter()
+            .filter_map(|m| match m {
+                Message::EndRound { epoch, examples, .. } => Some((*epoch, *examples)),
+                _ => None,
+            })
+            .collect();
+        acked.sort_unstable();
+        assert_eq!(acked.len(), 6);
+        assert_eq!(acked.iter().map(|&(e, _)| e).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(acked[2].1, 0);
+        assert_eq!(acked[3].1, 0);
+        let (merged, done, _) = reassemble(&msgs);
+        assert_eq!(done, 60);
+        assert_eq!(merged.grid().data(), reference_sketch(&ds).grid().data());
+    }
+
+    #[test]
+    fn crash_covering_final_round_drains_in_epilogue() {
+        let ds = toy_dataset(40);
+        let (link, rx, _) = Link::new(256, 0, 0);
+        let mut cfg = dev_cfg(8, 4);
+        cfg.crash = Some((2, 2)); // rounds 2 and 3 (the final round) down
+        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
+        assert_eq!(report.examples, 40);
+        let msgs: Vec<Message> = rx.iter().collect();
+        let (merged, done, _) = reassemble(&msgs);
+        assert_eq!(done, 40);
+        assert_eq!(merged.grid().data(), reference_sketch(&ds).grid().data());
+        assert_eq!(merged.count(), 40);
+    }
+
+    #[test]
+    fn straggler_rounds_defer_acks_but_preserve_the_sketch() {
+        let ds = toy_dataset(50);
+        let (link, rx, _) = Link::new(256, 0, 0);
+        let mut cfg = dev_cfg(9, 5);
+        // Every non-final round straggles; drops/dups/delays off so the
+        // effect is isolated.
+        cfg.plan = Some(FaultPlan {
+            straggle_per_mille: 1000,
+            max_straggle: 2,
+            ..FaultPlan::quiet(13)
+        });
+        let chaos = ChaosLink::new(link, cfg.id as u64, cfg.plan);
+        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
+        assert!(report.straggled > 0, "{report:?}");
+        assert_eq!(report.examples, 50);
+        let msgs: Vec<Message> = rx.iter().collect();
+        let mut acked: Vec<u64> = msgs
+            .iter()
+            .filter_map(|m| match m {
+                Message::EndRound { epoch, .. } => Some(*epoch),
+                _ => None,
+            })
+            .collect();
+        acked.sort_unstable();
+        assert_eq!(acked, vec![0, 1, 2, 3, 4], "every round acked exactly once");
+        let (merged, done, _) = reassemble(&msgs);
+        assert_eq!(done, 50);
+        assert_eq!(merged.grid().data(), reference_sketch(&ds).grid().data());
     }
 }

@@ -1,0 +1,569 @@
+//! Deterministic fault injection for the fleet sync protocol.
+//!
+//! A [`FaultPlan`] is a pure function of one `u64` seed: every per-link
+//! decision (drop / duplicate / delay-reorder of message `i` on link
+//! `l`), every per-device straggler round, and the one crash/restart
+//! window are derived by hashing `(seed, stream, index)` — no state, no
+//! wall clock — so a chaotic run's *schedule* is replayable from the
+//! seed alone. (Arrival interleaving across senders remains
+//! OS-scheduled; the protocol's property test asserts the final
+//! counters are invariant to exactly that.)
+//!
+//! [`ChaosLink`] wraps the PR-2 [`Link`] and applies the plan on the
+//! sender side:
+//!
+//! * **drop** — data (`Delta`) frames only; the frame is discarded and
+//!   the *sender is told* ([`Delivery::Dropped`]), modelling a timeout /
+//!   missing ack. The sender recovers by not advancing its counter
+//!   snapshot, so the lost increments ride in a later round's
+//!   multi-epoch catch-up delta (single-pass streams cannot be re-read;
+//!   the protocol, not the data layer, re-ships). A per-link
+//!   consecutive-drop cap (`max_drop_burst`) forces delivery after a
+//!   bounded burst — the structural "eventual delivery" guarantee that
+//!   bounds every retry loop.
+//! * **duplicate** — the frame is delivered twice. Receivers fold
+//!   exactly-once by deduplicating on `(from, epoch)`; senders never
+//!   reuse an epoch tag for two different payloads.
+//! * **delay / reorder** — the frame is held and released only after
+//!   `k` subsequent sends on the same link (k = 1 is an adjacent-pair
+//!   reorder), violating per-link FIFO deterministically. Held frames
+//!   are flushed before `Done` so nothing outlives the stream.
+//!
+//! Control frames (`EndRound`, `Done`) model a tiny reliable control
+//! channel: they can be delayed, duplicated and reordered but never
+//! dropped — dropping a 24-byte ack is cheap to prevent in practice
+//! (retry forever) and exempting them keeps the liveness argument
+//! local: every barrier eventually sees every child, so quorum
+//! (`[fleet] min_quorum`) is a latency knob, not a correctness crutch.
+
+use super::network::{Link, Message};
+use crate::util::rng::splitmix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// What the fault layer did with one message, from the sender's view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Delivery {
+    /// The message was (or will be, for held frames) delivered.
+    Delivered,
+    /// The message was discarded; the sender must re-ship the content.
+    Dropped,
+}
+
+/// Per-message fault decision on a link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFault {
+    Deliver,
+    Drop,
+    Duplicate,
+    /// Hold the message until `k` more messages have been sent on this
+    /// link (k = 1 swaps adjacent messages; larger k is a long delay).
+    Hold(u64),
+}
+
+/// Seeded, replayable fault schedule. All probabilities are per-mille
+/// (0 = never, 1000 = always); all decisions are pure functions of
+/// `(seed, stream, index)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(drop) per data frame.
+    pub drop_per_mille: u16,
+    /// P(duplicate) per frame.
+    pub dup_per_mille: u16,
+    /// P(hold) per frame; held for `1..=max_delay` subsequent sends.
+    pub delay_per_mille: u16,
+    pub max_delay: u8,
+    /// Consecutive data-frame drops per link before delivery is forced
+    /// (the eventual-delivery bound; must be >= 1 for drops to fire).
+    pub max_drop_burst: u8,
+    /// P(straggle) per device round; the round's delta + barrier are
+    /// deferred by `1..=max_straggle` rounds.
+    pub straggle_per_mille: u16,
+    pub max_straggle: u8,
+    /// P(the run contains one device crash/restart at all).
+    pub crash_per_mille: u16,
+    /// Crash downtime in rounds (silent: no ingest, no sends), at most
+    /// this many.
+    pub max_crash_downtime: u8,
+}
+
+const STREAM_LINK: u64 = 0x4C49_4E4B; // "LINK"
+const STREAM_STRAGGLE: u64 = 0x5354_5241; // "STRA"
+const STREAM_CRASH: u64 = 0x4352_4153; // "CRAS"
+
+impl FaultPlan {
+    /// A chaotic plan whose intensities are themselves derived from the
+    /// seed — one u64 names the entire fault schedule. Always includes
+    /// a crash/restart when the run has at least two rounds.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut s = seed ^ 0xC4A0_5FA0_0FA0_17ED;
+        let mut r = |lo: u16, span: u16| lo + (splitmix64(&mut s) % span as u64) as u16;
+        FaultPlan {
+            seed,
+            drop_per_mille: r(50, 250),
+            dup_per_mille: r(30, 200),
+            delay_per_mille: r(50, 250),
+            max_delay: 3,
+            max_drop_burst: 4,
+            straggle_per_mille: r(100, 300),
+            max_straggle: 2,
+            crash_per_mille: 1000,
+            max_crash_downtime: 2,
+        }
+    }
+
+    /// A plan that injects nothing (useful as an explicit control arm).
+    pub fn quiet(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            drop_per_mille: 0,
+            dup_per_mille: 0,
+            delay_per_mille: 0,
+            max_delay: 0,
+            max_drop_burst: 0,
+            straggle_per_mille: 0,
+            max_straggle: 0,
+            crash_per_mille: 0,
+            max_crash_downtime: 0,
+        }
+    }
+
+    /// Pure-loss plan at a controlled drop rate — the knob the
+    /// catch-up-overhead-vs-drop-rate experiment sweeps
+    /// (EXPERIMENTS.md §Resilience).
+    pub fn drop_only(seed: u64, drop_per_mille: u16) -> Self {
+        FaultPlan {
+            drop_per_mille,
+            max_drop_burst: 8,
+            ..FaultPlan::quiet(seed)
+        }
+    }
+
+    /// One hash evaluation shared by every decision: replayable,
+    /// stateless, decorrelated across streams and indices.
+    fn roll(&self, stream: u64, index: u64) -> u64 {
+        let mut s = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ stream.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ index.wrapping_mul(0x94D0_49BB_1331_11EB);
+        splitmix64(&mut s)
+    }
+
+    /// Decision for the `index`-th message sent on link `link`.
+    pub fn link_action(&self, link: u64, index: u64) -> LinkFault {
+        let r = self.roll(STREAM_LINK ^ link, index);
+        let pick = (r % 1000) as u32;
+        let d = self.drop_per_mille as u32;
+        let dd = d + self.dup_per_mille as u32;
+        let ddd = dd + self.delay_per_mille as u32;
+        if pick < d {
+            LinkFault::Drop
+        } else if pick < dd {
+            LinkFault::Duplicate
+        } else if pick < ddd && self.max_delay > 0 {
+            LinkFault::Hold(1 + (r >> 32) % self.max_delay as u64)
+        } else {
+            LinkFault::Deliver
+        }
+    }
+
+    /// How many rounds device `device` defers round `round` (0 = on
+    /// time).
+    pub fn straggle_rounds(&self, device: usize, round: u64) -> u64 {
+        if self.straggle_per_mille == 0 || self.max_straggle == 0 {
+            return 0;
+        }
+        let r = self.roll(STREAM_STRAGGLE ^ device as u64, round);
+        if (r % 1000) as u16 < self.straggle_per_mille {
+            1 + (r >> 32) % self.max_straggle as u64
+        } else {
+            0
+        }
+    }
+
+    /// The run's single crash/restart: `(device, round, downtime)` —
+    /// the device is silent (no ingest, no sends) for `downtime` rounds
+    /// starting at `round`, then restarts from its persisted sketch (a
+    /// few KB — checkpointing it is free) and catches up. One-shot runs
+    /// (`rounds < 2`) never crash.
+    pub fn crash_schedule(&self, devices: usize, rounds: u64) -> Option<(usize, u64, u64)> {
+        if self.crash_per_mille == 0 || self.max_crash_downtime == 0 || rounds < 2 || devices == 0 {
+            return None;
+        }
+        let gate = self.roll(STREAM_CRASH, 0);
+        if (gate % 1000) as u16 >= self.crash_per_mille {
+            return None;
+        }
+        let r = self.roll(STREAM_CRASH, 1);
+        let device = (r % devices as u64) as usize;
+        let round = (r >> 16) % rounds;
+        let downtime = 1 + (r >> 48) % self.max_crash_downtime as u64;
+        Some((device, round, downtime))
+    }
+}
+
+/// Counters of what the fault layer actually did on one link (shared
+/// with the fleet driver for the run report).
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub drops: AtomicU64,
+    pub duplicates: AtomicU64,
+    pub delayed: AtomicU64,
+    /// Drops suppressed by the `max_drop_burst` cap.
+    pub forced_deliveries: AtomicU64,
+}
+
+/// Plain-data copy of [`FaultStats`], mergeable across links.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    pub drops: u64,
+    pub duplicates: u64,
+    pub delayed: u64,
+    pub forced_deliveries: u64,
+}
+
+impl FaultStats {
+    pub fn snapshot(&self) -> FaultSummary {
+        FaultSummary {
+            drops: self.drops.load(Ordering::Relaxed),
+            duplicates: self.duplicates.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+            forced_deliveries: self.forced_deliveries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl FaultSummary {
+    pub fn merge(&mut self, other: &FaultSummary) {
+        self.drops += other.drops;
+        self.duplicates += other.duplicates;
+        self.delayed += other.delayed;
+        self.forced_deliveries += other.forced_deliveries;
+    }
+
+    /// Total injected fault events.
+    pub fn total(&self) -> u64 {
+        self.drops + self.duplicates + self.delayed
+    }
+}
+
+/// Drain every `(release_at, item)` entry due at or before `through`,
+/// in release order (ties keep insertion order — stable sort), handing
+/// each item to `send`. Shared by the link-level held-frame buffer and
+/// the device's deferred barrier acks so the two release paths cannot
+/// drift apart.
+pub fn drain_due<T>(held: &mut Vec<(u64, T)>, through: u64, mut send: impl FnMut(T)) {
+    if held.is_empty() {
+        return;
+    }
+    held.sort_by_key(|entry| entry.0);
+    let due = held.iter().take_while(|entry| entry.0 <= through).count();
+    for (_, item) in held.drain(..due) {
+        send(item);
+    }
+}
+
+#[derive(Default)]
+struct ChaosState {
+    /// Messages offered to this link so far (indexes the plan).
+    index: u64,
+    /// Current consecutive data-frame drop run.
+    drop_burst: u8,
+    /// Held frames: `(release_after_index, (message, retransmit_class))`.
+    held: Vec<(u64, (Message, bool))>,
+}
+
+/// A sender-side link that applies a [`FaultPlan`]. With no plan it is
+/// a transparent pass-through of [`Link`] — the default fleet path is
+/// bit-identical to PR-2. One `ChaosLink` per sending node; the link id
+/// is the node id, which keys the plan's per-link decision stream.
+pub struct ChaosLink {
+    inner: Link,
+    link_id: u64,
+    plan: Option<FaultPlan>,
+    state: Mutex<ChaosState>,
+    stats: Arc<FaultStats>,
+}
+
+impl ChaosLink {
+    pub fn new(inner: Link, link_id: u64, plan: Option<FaultPlan>) -> Self {
+        ChaosLink {
+            inner,
+            link_id,
+            plan,
+            state: Mutex::new(ChaosState::default()),
+            stats: Arc::new(FaultStats::default()),
+        }
+    }
+
+    /// A link that injects nothing (unit tests, single-node paths).
+    pub fn passthrough(inner: Link) -> Self {
+        ChaosLink::new(inner, 0, None)
+    }
+
+    pub fn stats(&self) -> Arc<FaultStats> {
+        self.stats.clone()
+    }
+
+    /// Send through the fault layer. `Ok(Delivered)` means the message
+    /// was queued (possibly twice, possibly late); `Ok(Dropped)` means
+    /// the plan discarded it and the sender must recover the content;
+    /// `Err` means the receiver is gone.
+    pub fn send(&self, msg: Message) -> Result<Delivery, ()> {
+        self.send_class(msg, false)
+    }
+
+    /// [`Self::send`] with the retransmit traffic class (see
+    /// [`Link::send_class`]).
+    pub fn send_class(&self, msg: Message, retransmit: bool) -> Result<Delivery, ()> {
+        let Some(plan) = self.plan else {
+            return self.inner.send_class(msg, retransmit).map(|()| Delivery::Delivered);
+        };
+        let mut st = self.state.lock().expect("chaos link state");
+        let i = st.index;
+        st.index += 1;
+        // Done terminates the stream: flush everything held, then pass
+        // it through untouched (never dropped, duplicated or delayed).
+        if matches!(msg, Message::Done { .. }) {
+            Self::flush_held(&self.inner, &mut st.held, u64::MAX);
+            return self.inner.send_class(msg, retransmit).map(|()| Delivery::Delivered);
+        }
+        let action = plan.link_action(self.link_id, i);
+        let droppable = matches!(msg, Message::Delta { .. });
+        let result = match action {
+            LinkFault::Drop if droppable && st.drop_burst < plan.max_drop_burst => {
+                st.drop_burst += 1;
+                self.stats.drops.fetch_add(1, Ordering::Relaxed);
+                Ok(Delivery::Dropped)
+            }
+            LinkFault::Drop if droppable => {
+                // Burst cap reached: force the delivery (eventual
+                // delivery is structural, not probabilistic).
+                st.drop_burst = 0;
+                self.stats.forced_deliveries.fetch_add(1, Ordering::Relaxed);
+                self.inner.send_class(msg, retransmit).map(|()| Delivery::Delivered)
+            }
+            LinkFault::Duplicate => {
+                if droppable {
+                    st.drop_burst = 0;
+                }
+                self.stats.duplicates.fetch_add(1, Ordering::Relaxed);
+                self.inner.send_class(msg.clone(), retransmit)?;
+                self.inner.send_class(msg, retransmit).map(|()| Delivery::Delivered)
+            }
+            LinkFault::Hold(k) => {
+                if droppable {
+                    st.drop_burst = 0;
+                }
+                self.stats.delayed.fetch_add(1, Ordering::Relaxed);
+                st.held.push((i + k, (msg, retransmit)));
+                Ok(Delivery::Delivered)
+            }
+            LinkFault::Drop | LinkFault::Deliver => {
+                if droppable {
+                    st.drop_burst = 0;
+                }
+                self.inner.send_class(msg, retransmit).map(|()| Delivery::Delivered)
+            }
+        };
+        // Release held frames whose delay has elapsed (in release
+        // order, ties in insertion order — stable sort).
+        Self::flush_held(&self.inner, &mut st.held, i);
+        result
+    }
+
+    /// Send every held frame due at or before `through` (dead-link
+    /// errors are ignored: the receiver side is gone, nothing to hold
+    /// for).
+    fn flush_held(inner: &Link, held: &mut Vec<(u64, (Message, bool))>, through: u64) {
+        drain_due(held, through, |(msg, retransmit)| {
+            let _ = inner.send_class(msg, retransmit);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::network::Link;
+
+    fn delta(from: usize, epoch: u64, len: usize) -> Message {
+        Message::Delta { from, epoch, payload: vec![0u8; len] }
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_the_seed() {
+        let a = FaultPlan::from_seed(42);
+        let b = FaultPlan::from_seed(42);
+        assert_eq!(a, b);
+        for link in 0..4u64 {
+            for i in 0..200u64 {
+                assert_eq!(a.link_action(link, i), b.link_action(link, i));
+            }
+        }
+        for dev in 0..4usize {
+            for r in 0..20u64 {
+                assert_eq!(a.straggle_rounds(dev, r), b.straggle_rounds(dev, r));
+            }
+        }
+        assert_eq!(a.crash_schedule(5, 8), b.crash_schedule(5, 8));
+        // Different seeds give different schedules somewhere.
+        let c = FaultPlan::from_seed(43);
+        let differs = (0..200u64).any(|i| a.link_action(0, i) != c.link_action(0, i));
+        assert!(differs);
+    }
+
+    #[test]
+    fn chaotic_plan_injects_every_fault_kind() {
+        let plan = FaultPlan::from_seed(7);
+        let mut kinds = [false; 4];
+        for i in 0..2000u64 {
+            match plan.link_action(1, i) {
+                LinkFault::Deliver => kinds[0] = true,
+                LinkFault::Drop => kinds[1] = true,
+                LinkFault::Duplicate => kinds[2] = true,
+                LinkFault::Hold(k) => {
+                    assert!(k >= 1 && k <= plan.max_delay as u64);
+                    kinds[3] = true;
+                }
+            }
+        }
+        assert_eq!(kinds, [true; 4], "all four actions must occur");
+        assert!(plan.crash_schedule(4, 6).is_some());
+        let (dev, round, down) = plan.crash_schedule(4, 6).unwrap();
+        assert!(dev < 4 && round < 6 && down >= 1);
+        assert!((0..4).any(|d| (0..20).any(|r| plan.straggle_rounds(d, r) > 0)));
+    }
+
+    #[test]
+    fn quiet_plan_and_no_plan_are_transparent() {
+        assert!(FaultPlan::quiet(9).crash_schedule(8, 8).is_none());
+        for i in 0..100 {
+            assert_eq!(FaultPlan::quiet(9).link_action(0, i), LinkFault::Deliver);
+        }
+        let (link, rx, _) = Link::new(16, 0, 0);
+        let chaos = ChaosLink::passthrough(link);
+        for e in 0..5u64 {
+            assert_eq!(chaos.send(delta(0, e, 10)).unwrap(), Delivery::Delivered);
+        }
+        chaos.send(Message::Done { device_id: 0, examples: 5 }).unwrap();
+        drop(chaos);
+        let msgs: Vec<Message> = rx.iter().collect();
+        assert_eq!(msgs.len(), 6);
+        let epochs: Vec<u64> = msgs.iter().filter_map(|m| m.epoch()).collect();
+        assert_eq!(epochs, vec![0, 1, 2, 3, 4], "passthrough preserves FIFO");
+    }
+
+    #[test]
+    fn drops_are_sender_visible_and_burst_capped() {
+        let plan = FaultPlan { drop_per_mille: 1000, max_drop_burst: 2, ..FaultPlan::quiet(3) };
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let chaos = ChaosLink::new(link, 5, Some(plan));
+        let mut outcomes = Vec::new();
+        for i in 0..9u64 {
+            outcomes.push(chaos.send(delta(5, i, 8)).unwrap());
+        }
+        // Always-drop plan with burst cap 2: every third frame forced.
+        assert_eq!(
+            outcomes,
+            vec![
+                Delivery::Dropped,
+                Delivery::Dropped,
+                Delivery::Delivered,
+                Delivery::Dropped,
+                Delivery::Dropped,
+                Delivery::Delivered,
+                Delivery::Dropped,
+                Delivery::Dropped,
+                Delivery::Delivered,
+            ]
+        );
+        let stats = chaos.stats().snapshot();
+        assert_eq!(stats.drops, 6);
+        assert_eq!(stats.forced_deliveries, 3);
+        drop(chaos);
+        assert_eq!(rx.iter().count(), 3);
+    }
+
+    #[test]
+    fn control_frames_are_never_dropped() {
+        let plan = FaultPlan { drop_per_mille: 1000, max_drop_burst: 255, ..FaultPlan::quiet(4) };
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let chaos = ChaosLink::new(link, 1, Some(plan));
+        for e in 0..6u64 {
+            let out = chaos
+                .send(Message::EndRound { device_id: 1, epoch: e, examples: 3 })
+                .unwrap();
+            assert_eq!(out, Delivery::Delivered);
+        }
+        drop(chaos);
+        assert_eq!(rx.iter().count(), 6);
+    }
+
+    #[test]
+    fn duplicates_deliver_two_copies() {
+        let plan = FaultPlan { dup_per_mille: 1000, ..FaultPlan::quiet(5) };
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let chaos = ChaosLink::new(link, 2, Some(plan));
+        assert_eq!(chaos.send(delta(2, 0, 12)).unwrap(), Delivery::Delivered);
+        assert_eq!(chaos.stats().snapshot().duplicates, 1);
+        drop(chaos);
+        let msgs: Vec<Message> = rx.iter().collect();
+        assert_eq!(msgs.len(), 2);
+        for m in &msgs {
+            assert!(matches!(m, Message::Delta { from: 2, epoch: 0, payload } if payload.len() == 12));
+        }
+    }
+
+    #[test]
+    fn held_frames_release_late_and_flush_on_done() {
+        let plan = FaultPlan { delay_per_mille: 1000, max_delay: 1, ..FaultPlan::quiet(6) };
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let chaos = ChaosLink::new(link, 3, Some(plan));
+        // Every frame is held one slot: frame i is released by frame
+        // i+1's send, producing a deterministic adjacent reorder; the
+        // last frame only escapes via the Done flush.
+        for e in 0..3u64 {
+            assert_eq!(chaos.send(delta(3, e, 4)).unwrap(), Delivery::Delivered);
+        }
+        chaos.send(Message::Done { device_id: 3, examples: 0 }).unwrap();
+        drop(chaos);
+        let msgs: Vec<Message> = rx.iter().collect();
+        assert_eq!(msgs.len(), 4);
+        assert!(matches!(msgs.last().unwrap(), Message::Done { .. }));
+        let epochs: Vec<u64> = msgs.iter().filter_map(|m| m.epoch()).collect();
+        assert_eq!(epochs, vec![0, 1, 2], "held frames keep relative order here");
+        assert_eq!(chaos.stats().snapshot().delayed, 3);
+    }
+
+    #[test]
+    fn eventual_delivery_no_data_frame_is_lost_forever() {
+        // Under an arbitrary chaotic plan, every frame the sender was
+        // told was Delivered must come out before Done, and the number
+        // of Dropped outcomes must match the drop stat.
+        for seed in 0..20u64 {
+            let plan = FaultPlan::from_seed(seed);
+            let (link, rx, _) = Link::new(1024, 0, 0);
+            let chaos = ChaosLink::new(link, 11, Some(plan));
+            let mut delivered = 0u64;
+            let mut dropped = 0u64;
+            for e in 0..200u64 {
+                match chaos.send(delta(11, e, 16)).unwrap() {
+                    Delivery::Delivered => delivered += 1,
+                    Delivery::Dropped => dropped += 1,
+                }
+            }
+            chaos.send(Message::Done { device_id: 11, examples: 0 }).unwrap();
+            let stats = chaos.stats().snapshot();
+            drop(chaos);
+            let msgs: Vec<Message> = rx.iter().collect();
+            let deltas = msgs.iter().filter(|m| matches!(m, Message::Delta { .. })).count() as u64;
+            assert!(matches!(msgs.last().unwrap(), Message::Done { .. }));
+            assert_eq!(stats.drops, dropped, "seed {seed}");
+            // Delivered + one extra copy per duplicate.
+            assert_eq!(deltas, delivered + stats.duplicates, "seed {seed}");
+        }
+    }
+}

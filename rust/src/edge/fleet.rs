@@ -11,24 +11,46 @@
 //! full-sketch merge (property-tested in `proptest_invariants.rs`);
 //! rounds change *when* information arrives and what it costs on the
 //! wire, never what the final counters are.
+//!
+//! **Fault-tolerant sync.** The same invariant holds under a chaotic
+//! network (`[fleet] faults_seed`, see [`super::faults`]): the protocol
+//! guarantees every device increment reaches the leader *exactly once*
+//! no matter how messily frames arrive.
+//!
+//! * **Exactly-once folds.** Every delta frame carries its sender id;
+//!   merge nodes deduplicate on `(from, epoch)`, so replayed frames are
+//!   no-ops. Senders never reuse an epoch tag for different payloads.
+//! * **Quorum barriers.** A round closes once `min_quorum` of a node's
+//!   direct children have acked it (`0` = all children, the default —
+//!   which preserves seed behaviour bit-for-bit). Stragglers stop
+//!   stalling the leader; their data arrives late and is still folded
+//!   exactly once.
+//! * **Catch-up.** Deltas that arrive after their round closed are
+//!   applied directly (leader) or pooled and re-shipped under a fresh
+//!   epoch tag (aggregators); deltas whose upstream send was dropped
+//!   join the same pool. At stream end every node flushes its pool,
+//!   retrying until the link confirms delivery — so the only way to
+//!   lose data is to lose the node itself.
 
 use super::device::{run_device, DeviceConfig, DeviceReport};
+use super::faults::{ChaosLink, Delivery, FaultPlan, FaultStats, FaultSummary};
 use super::network::{Link, LinkSnapshot, Message};
 use super::topology::{plan, Stage, Topology, LEADER};
 use crate::config::{FleetConfig, StormConfig};
 use crate::data::stream::StreamSource;
-use crate::sketch::delta::SketchDelta;
+use crate::sketch::delta::{pool_delta, SketchDelta};
 use crate::sketch::serialize::{decode_delta, encode_delta};
 use crate::sketch::storm::StormSketch;
 use crate::sketch::Sketch;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
 /// What one closed sync round looked like from the leader.
 #[derive(Clone, Copy, Debug)]
 pub struct RoundStat {
     pub round: u64,
-    /// Examples merged into the leader during this round.
+    /// Examples acked by the quorum that closed this round.
     pub examples: u64,
     /// Cumulative examples in the leader sketch after the round closed.
     pub leader_count: u64,
@@ -50,6 +72,9 @@ pub struct FleetResult {
     pub examples: u64,
     /// Per-round leader-side statistics, in round order.
     pub rounds: Vec<RoundStat>,
+    /// Fault events the chaos layer actually injected (all-zero on the
+    /// default ideal network).
+    pub faults: FaultSummary,
 }
 
 /// Per-epoch accumulation at a merge point (aggregator or leader): the
@@ -74,14 +99,15 @@ impl RoundAccum {
 }
 
 /// Record one `EndRound` from a child, then advance the in-order barrier:
-/// close round `next` (and any directly following complete rounds) as
-/// soon as all `expect` children have ended it, handing each round's
+/// close round `next` (and any directly following quorate rounds) as
+/// soon as `quorum` children have ended it, handing each round's
 /// accumulator to `close`. Shared by the leader loop and the aggregator
-/// nodes — only the close action differs.
+/// nodes — only the close action differs. Callers deduplicate acks and
+/// discard acks for already-closed rounds before calling.
 fn end_round_and_drain(
     pending: &mut BTreeMap<u64, RoundAccum>,
     next: &mut u64,
-    expect: usize,
+    quorum: usize,
     epoch: u64,
     examples: u64,
     mut close: impl FnMut(u64, RoundAccum),
@@ -89,12 +115,24 @@ fn end_round_and_drain(
     let acc = pending.entry(epoch).or_default();
     acc.examples += examples;
     acc.ends += 1;
-    // A round closes when every direct child has ended it; FIFO links
-    // guarantee the round's deltas arrived first.
-    while pending.get(next).is_some_and(|a| a.ends == expect) {
+    // A round closes when a quorum of direct children has ended it; with
+    // the default full quorum and FIFO links the round's deltas are
+    // guaranteed to have arrived first, and anything later is handled
+    // by the exactly-once catch-up path.
+    while pending.get(next).is_some_and(|a| a.ends >= quorum) {
         let acc = pending.remove(next).expect("pending round");
         close(*next, acc);
         *next += 1;
+    }
+}
+
+/// The per-node barrier quorum: `min_quorum = 0` (default) means all
+/// direct children, anything else is clamped to `1..=children`.
+fn quorum_of(min_quorum: usize, children: usize) -> usize {
+    if min_quorum == 0 {
+        children
+    } else {
+        min_quorum.clamp(1, children)
     }
 }
 
@@ -115,6 +153,7 @@ pub fn run_fleet(
 /// the caller's thread right after the leader closes a round, while the
 /// devices keep streaming the next round in the background — training
 /// interleaves with ingestion instead of waiting for the whole fleet.
+/// The fault plan, if any, comes from `fleet.faults_seed`.
 pub fn run_fleet_with(
     fleet: FleetConfig,
     storm: StormConfig,
@@ -122,6 +161,24 @@ pub fn run_fleet_with(
     dim: usize,
     family_seed: u64,
     streams: Vec<Box<dyn StreamSource>>,
+    on_round: impl FnMut(u64, &StormSketch),
+) -> FleetResult {
+    let plan = fleet.faults_seed.map(FaultPlan::from_seed);
+    run_fleet_chaos(fleet, storm, topology, dim, family_seed, streams, plan, on_round)
+}
+
+/// [`run_fleet_with`] under an explicit fault plan (tests and the
+/// resilience benchmarks construct controlled plans directly; `None` is
+/// the ideal network).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_chaos(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+    fault_plan: Option<FaultPlan>,
     mut on_round: impl FnMut(u64, &StormSketch),
 ) -> FleetResult {
     assert_eq!(streams.len(), fleet.devices, "one stream per device");
@@ -129,6 +186,8 @@ pub fn run_fleet_with(
     let rounds = fleet.sync_rounds.max(1);
     let stages = plan(topology, n);
     let timer = crate::util::timer::Timer::start();
+    let crash = fault_plan.and_then(|p| p.crash_schedule(n, rounds as u64));
+    let mut fault_stats: Vec<Arc<FaultStats>> = Vec::new();
 
     // One link per non-leaf node (aggregators + leader), keyed by parent.
     let mut rx_for: BTreeMap<usize, Receiver<Message>> = BTreeMap::new();
@@ -144,14 +203,17 @@ pub fn run_fleet_with(
         tx_for.insert(stage.parent, link);
         stats.push(st);
     }
-    // Map each child node to the link of its parent stage.
-    let mut uplink: BTreeMap<usize, Link> = BTreeMap::new();
+    // Map each child node to a fault-wrapped clone of its parent stage's
+    // link; the child's node id keys the plan's per-link decisions.
+    let mut uplink: BTreeMap<usize, ChaosLink> = BTreeMap::new();
     for stage in &stages {
         for &c in &stage.children {
-            uplink.insert(c, tx_for[&stage.parent].clone());
+            let chaos = ChaosLink::new(tx_for[&stage.parent].clone(), c as u64, fault_plan);
+            fault_stats.push(chaos.stats());
+            uplink.insert(c, chaos);
         }
     }
-    drop(tx_for); // aggregator threads hold the remaining clones
+    drop(tx_for); // aggregator/device ChaosLinks hold the remaining clones
 
     // Device threads. Hinted streams split their length evenly over the
     // rounds; hintless streams fall back to a budget sized so steady-state
@@ -172,14 +234,16 @@ pub fn run_fleet_with(
             storm,
             family_seed,
             dim,
+            plan: fault_plan,
+            crash: crash.and_then(|(dev, at, down)| (dev == id).then_some((at, down))),
         };
         let link = uplink.remove(&id).expect("device uplink");
         device_handles.push(std::thread::spawn(move || run_device(cfg, stream, link)));
     }
 
     // Aggregator threads, in stage order. Each folds its children's
-    // deltas per epoch and forwards ONE merged delta + EndRound per round
-    // upstream, then cascades Done.
+    // deltas per epoch exactly once and forwards ONE merged delta +
+    // EndRound per quorate round upstream, then cascades Done.
     let mut agg_handles = Vec::new();
     for stage in &stages {
         if stage.parent == LEADER {
@@ -188,29 +252,46 @@ pub fn run_fleet_with(
         let rx = rx_for.remove(&stage.parent).expect("aggregator rx");
         let up = uplink.remove(&stage.parent).expect("aggregator uplink");
         let expect = stage.children.len();
+        let quorum = quorum_of(fleet.min_quorum, expect);
         let agg_id = stage.parent;
-        agg_handles.push(std::thread::spawn(move || run_aggregator(rx, up, agg_id, expect)));
+        agg_handles
+            .push(std::thread::spawn(move || run_aggregator(rx, up, agg_id, expect, quorum)));
     }
 
     // Leader: close rounds in epoch order, applying each round's folded
-    // delta and running the caller's hook at every barrier.
+    // delta and running the caller's hook at every barrier. Late deltas
+    // (stragglers under a partial quorum, catch-up frames) merge the
+    // moment they arrive — counter addition is epoch-agnostic.
     let leader_stage: &Stage = stages.iter().find(|s| s.parent == LEADER).expect("leader stage");
     let leader_rx = rx_for.remove(&LEADER).expect("leader rx");
     let expect = leader_stage.children.len();
+    let quorum = quorum_of(fleet.min_quorum, expect);
     let mut sketch = StormSketch::new(storm, dim, family_seed);
     let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
     let mut round_stats: Vec<RoundStat> = Vec::new();
     let mut next_round: u64 = 0;
     let mut done = 0usize;
     let mut examples = 0u64;
+    let mut seen_delta: BTreeSet<(usize, u64)> = BTreeSet::new();
+    let mut seen_end: BTreeSet<(usize, u64)> = BTreeSet::new();
     while done < expect {
         match leader_rx.recv() {
-            Ok(Message::Delta { epoch, payload }) => {
+            Ok(Message::Delta { from, epoch, payload }) => {
+                if !seen_delta.insert((from, epoch)) {
+                    continue; // duplicate frame: exactly-once fold
+                }
                 let delta = decode_delta(&payload).expect("valid wire delta");
-                pending.entry(epoch).or_default().fold(delta);
+                if epoch < next_round {
+                    sketch.apply_delta(&delta); // late for a closed round
+                } else {
+                    pending.entry(epoch).or_default().fold(delta);
+                }
             }
-            Ok(Message::EndRound { epoch, examples: e, .. }) => {
-                end_round_and_drain(&mut pending, &mut next_round, expect, epoch, e, |round, acc| {
+            Ok(Message::EndRound { device_id, epoch, examples: e }) => {
+                if !seen_end.insert((device_id, epoch)) || epoch < next_round {
+                    continue; // duplicate or late ack for a closed round
+                }
+                end_round_and_drain(&mut pending, &mut next_round, quorum, epoch, e, |round, acc| {
                     if let Some(delta) = &acc.delta {
                         sketch.apply_delta(delta);
                     }
@@ -230,8 +311,9 @@ pub fn run_fleet_with(
             Err(_) => break,
         }
     }
-    // Defensive: if links died mid-round, fold whatever arrived so the
-    // sketch loses as little as possible.
+    // Fold whatever never made it into a closed round: rounds that never
+    // reached quorum, and catch-up frames tagged past the last round.
+    // Everything here was already deduplicated on arrival.
     for (_, acc) in pending {
         if let Some(delta) = &acc.delta {
             sketch.apply_delta(delta);
@@ -249,6 +331,10 @@ pub fn run_fleet_with(
     for s in &stats {
         network.merge(&s.snapshot());
     }
+    let mut faults = FaultSummary::default();
+    for s in &fault_stats {
+        faults.merge(&s.snapshot());
+    }
     FleetResult {
         sketch,
         devices,
@@ -256,33 +342,71 @@ pub fn run_fleet_with(
         wall_secs: timer.elapsed_secs(),
         examples,
         rounds: round_stats,
+        faults,
     }
 }
 
-/// Aggregator node: fold every child delta of an epoch in place, and once
-/// all children closed the epoch forward the single merged delta (plus
-/// the round barrier) upstream — cascading Done with the summed example
-/// count after the final round.
-fn run_aggregator(rx: Receiver<Message>, up: Link, agg_id: usize, expect: usize) {
+/// Aggregator node: fold every child delta of an epoch exactly once
+/// (deduplicating on `(from, epoch)`), and once a quorum of children
+/// closed the epoch forward the single merged delta (plus the round
+/// barrier) upstream — cascading Done with the summed example count
+/// after the final round. Late or drop-returned increments are pooled
+/// and re-shipped under a fresh epoch tag; the exit flush retries until
+/// the uplink confirms, so an aggregator never exits owing data.
+fn run_aggregator(rx: Receiver<Message>, up: ChaosLink, agg_id: usize, expect: usize, quorum: usize) {
     let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
     let mut next: u64 = 0;
     let mut done = 0usize;
     let mut examples = 0u64;
+    let mut seen_delta: BTreeSet<(usize, u64)> = BTreeSet::new();
+    let mut seen_end: BTreeSet<(usize, u64)> = BTreeSet::new();
+    // Increments owed upstream that missed their round: late arrivals
+    // after a quorum close, plus our own frames the fault layer dropped.
+    let mut unshipped: Option<SketchDelta> = None;
     while done < expect {
         match rx.recv() {
-            Ok(Message::Delta { epoch, payload }) => {
-                if let Ok(delta) = decode_delta(&payload) {
+            Ok(Message::Delta { from, epoch, payload }) => {
+                if !seen_delta.insert((from, epoch)) {
+                    continue; // duplicate frame: exactly-once fold
+                }
+                let Ok(delta) = decode_delta(&payload) else { continue };
+                if epoch < next {
+                    pool_delta(&mut unshipped, delta);
+                } else {
                     pending.entry(epoch).or_default().fold(delta);
                 }
             }
-            Ok(Message::EndRound { epoch, examples: e, .. }) => {
-                end_round_and_drain(&mut pending, &mut next, expect, epoch, e, |round, acc| {
-                    if let Some(delta) = &acc.delta {
+            Ok(Message::EndRound { device_id, epoch, examples: e }) => {
+                if !seen_end.insert((device_id, epoch)) || epoch < next {
+                    continue; // duplicate or late ack for a closed round
+                }
+                end_round_and_drain(&mut pending, &mut next, quorum, epoch, e, |round, acc| {
+                    let mut out = acc.delta;
+                    let mut catchup = false;
+                    if let Some(pooled) = unshipped.take() {
+                        catchup = true;
+                        match &mut out {
+                            Some(d) => d.absorb(&pooled),
+                            None => {
+                                let mut p = pooled;
+                                p.epoch = round; // fresh tag: this round is ours
+                                out = Some(p);
+                            }
+                        }
+                    }
+                    if let Some(delta) = out {
                         if !delta.is_empty() {
-                            let _ = up.send(Message::Delta {
+                            let msg = Message::Delta {
+                                from: agg_id,
                                 epoch: round,
-                                payload: encode_delta(delta),
-                            });
+                                payload: encode_delta(&delta),
+                            };
+                            match up.send_class(msg, catchup) {
+                                // Dropped: pool and re-ship under a
+                                // later (never-used) tag.
+                                Ok(Delivery::Dropped) => pool_delta(&mut unshipped, delta),
+                                Ok(Delivery::Delivered) | Err(()) => {}
+                            }
                         }
                     }
                     let _ = up.send(Message::EndRound {
@@ -297,6 +421,32 @@ fn run_aggregator(rx: Receiver<Message>, up: Link, agg_id: usize, expect: usize)
                 examples += e;
             }
             Err(_) => break,
+        }
+    }
+    // Exit flush: pool every never-closed round's accumulator, tag the
+    // pool with an epoch this node has never sent (round `next` never
+    // closed, so `max(next, pool.epoch)` is fresh), and retry until the
+    // link confirms — the fault plan's drop-burst cap bounds the loop.
+    let mut pool = unshipped.take();
+    for (_, acc) in pending {
+        if let Some(d) = acc.delta {
+            pool_delta(&mut pool, d);
+        }
+    }
+    if let Some(mut d) = pool {
+        if !d.is_empty() {
+            d.epoch = d.epoch.max(next);
+            loop {
+                let msg = Message::Delta {
+                    from: agg_id,
+                    epoch: d.epoch,
+                    payload: encode_delta(&d),
+                };
+                match up.send_class(msg, true) {
+                    Ok(Delivery::Delivered) | Err(()) => break,
+                    Ok(Delivery::Dropped) => continue,
+                }
+            }
         }
     }
     let _ = up.send(Message::Done { device_id: agg_id, examples });
@@ -316,6 +466,8 @@ mod tests {
             link_latency_us: 0,
             link_bandwidth_bps: 0,
             sync_rounds,
+            min_quorum: 0,
+            faults_seed: None,
             seed: 0,
         }
     }
@@ -357,6 +509,7 @@ mod tests {
         assert_eq!(result.examples, n);
         assert_eq!(result.sketch.count(), n);
         assert_eq!(result.sketch.grid().data(), reference.grid().data());
+        assert_eq!(result.faults, super::FaultSummary::default());
     }
 
     #[test]
@@ -430,6 +583,8 @@ mod tests {
         for (epoch, t) in &result.network.rounds {
             assert!(t.bytes >= 3 * 24, "round {epoch} too light: {t:?}");
         }
+        // Ideal network: no catch-up traffic at all.
+        assert_eq!(result.network.retransmit_bytes(), 0);
     }
 
     #[test]
@@ -445,5 +600,58 @@ mod tests {
     fn single_device_fleet_works() {
         let result = run_with(Topology::Star, 1, 1);
         assert_eq!(result.examples, 300);
+    }
+
+    #[test]
+    fn chaos_run_is_bit_identical_to_fault_free_reference() {
+        // One fixed chaotic schedule across all three topologies: the
+        // final counters must equal the fault-free one-shot merge, and
+        // faults must actually have been injected (non-vacuous chaos).
+        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let (reference, n) = reference_sketch(storm, 99);
+        let ds = scaled_ds();
+        for topo in [Topology::Star, Topology::Tree { fanout: 2 }, Topology::Chain] {
+            let mut cfg = small_fleet_cfg(5, 6);
+            cfg.faults_seed = Some(0xC4A0);
+            let streams = partition_streams(&ds, 5, None);
+            let result = run_fleet(cfg, storm, topo, ds.dim() + 1, 99, streams);
+            assert_eq!(result.examples, n, "{topo:?}");
+            assert_eq!(
+                result.sketch.grid().data(),
+                reference.grid().data(),
+                "{topo:?}: chaos changed the counters"
+            );
+            assert_eq!(result.sketch.count(), n, "{topo:?}");
+            assert_eq!(result.rounds.len(), 6, "{topo:?}: every round must close");
+            assert!(result.faults.total() > 0, "{topo:?}: chaos was vacuous");
+        }
+    }
+
+    #[test]
+    fn partial_quorum_closes_rounds_and_stays_exact() {
+        // min_quorum = 2 of 5 devices: rounds may close before
+        // stragglers report, but late deltas still fold exactly once.
+        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let (reference, n) = reference_sketch(storm, 99);
+        let ds = scaled_ds();
+        let mut cfg = small_fleet_cfg(5, 4);
+        cfg.min_quorum = 2;
+        cfg.faults_seed = Some(77);
+        let streams = partition_streams(&ds, 5, None);
+        let result = run_fleet(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams);
+        assert_eq!(result.examples, n);
+        assert_eq!(result.sketch.grid().data(), reference.grid().data());
+        assert_eq!(result.rounds.len(), 4);
+        // The leader count trace is still monotone.
+        let counts: Vec<u64> = result.rounds.iter().map(|r| r.leader_count).collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+    }
+
+    #[test]
+    fn quorum_of_clamps_sensibly() {
+        assert_eq!(quorum_of(0, 5), 5);
+        assert_eq!(quorum_of(3, 5), 3);
+        assert_eq!(quorum_of(9, 5), 5);
+        assert_eq!(quorum_of(1, 5), 1);
     }
 }

@@ -12,6 +12,7 @@
 //! shipping against raw-data shipping.
 
 pub mod device;
+pub mod faults;
 pub mod network;
 pub mod topology;
 pub mod fleet;

@@ -10,11 +10,15 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Messages devices and aggregators send upstream.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub enum Message {
     /// A serialized sketch delta for one sync round (wire format v2 of
     /// `sketch::serialize`, v1 accepted for backward compatibility).
-    Delta { epoch: u64, payload: Vec<u8> },
+    /// `from` identifies the sending node (device or aggregator id) so
+    /// receivers can deduplicate replayed frames: the exactly-once fold
+    /// key is `(from, epoch)` — a sender never reuses an epoch tag for
+    /// two different delta payloads (see `edge::faults` module docs).
+    Delta { from: usize, epoch: u64, payload: Vec<u8> },
     /// Sender finished sync round `epoch` after ingesting `examples`
     /// within that round. One per round per child — the upstream barrier
     /// counts these.
@@ -49,6 +53,11 @@ impl Message {
 pub struct RoundTraffic {
     pub messages: u64,
     pub bytes: u64,
+    /// Bytes of catch-up traffic within this round: delta frames that
+    /// carry increments from *earlier* epochs (retransmission after a
+    /// drop, a straggler's deferred round, or a crash-recovery
+    /// multi-epoch delta). Always `<= bytes` for the round.
+    pub retransmit_bytes: u64,
 }
 
 /// Shared transfer statistics for one link.
@@ -98,12 +107,23 @@ impl LinkSnapshot {
             let e = self.rounds.entry(epoch).or_default();
             e.messages += t.messages;
             e.bytes += t.bytes;
+            e.retransmit_bytes += t.retransmit_bytes;
         }
     }
 
     /// Bytes attributed to one sync round across this snapshot.
     pub fn round_bytes(&self, epoch: u64) -> u64 {
         self.rounds.get(&epoch).map_or(0, |t| t.bytes)
+    }
+
+    /// Catch-up (retransmission) bytes attributed to one sync round.
+    pub fn round_retransmit_bytes(&self, epoch: u64) -> u64 {
+        self.rounds.get(&epoch).map_or(0, |t| t.retransmit_bytes)
+    }
+
+    /// Total catch-up bytes across every round.
+    pub fn retransmit_bytes(&self) -> u64 {
+        self.rounds.values().map(|t| t.retransmit_bytes).sum()
     }
 }
 
@@ -142,6 +162,14 @@ impl Link {
     /// backed up (bounded channel) — that block *is* the backpressure the
     /// fleet config's `channel_capacity` controls.
     pub fn send(&self, msg: Message) -> Result<(), ()> {
+        self.send_class(msg, false)
+    }
+
+    /// [`Self::send`] with a traffic class: `retransmit = true` frames
+    /// are additionally accounted into the round's `retransmit_bytes`
+    /// (the fault-recovery catch-up traffic the resilience experiments
+    /// measure; see `RoundTraffic`).
+    pub fn send_class(&self, msg: Message, retransmit: bool) -> Result<(), ()> {
         let bytes = msg.wire_bytes();
         let epoch = msg.epoch();
         // Pay the wire cost.
@@ -155,7 +183,7 @@ impl Link {
         // Try fast path, fall back to blocking and time the stall.
         let msg = match self.tx.try_send(msg) {
             Ok(()) => {
-                self.account(bytes, epoch);
+                self.account(bytes, epoch, retransmit);
                 return Ok(());
             }
             Err(TrySendError::Full(m)) => {
@@ -172,12 +200,12 @@ impl Link {
             .blocked_ns
             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
         if result.is_ok() {
-            self.account(bytes, epoch);
+            self.account(bytes, epoch, retransmit);
         }
         result
     }
 
-    fn account(&self, bytes: usize, epoch: Option<u64>) {
+    fn account(&self, bytes: usize, epoch: Option<u64>, retransmit: bool) {
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         if let Some(epoch) = epoch {
@@ -185,6 +213,9 @@ impl Link {
             let t = rounds.entry(epoch).or_default();
             t.messages += 1;
             t.bytes += bytes as u64;
+            if retransmit {
+                t.retransmit_bytes += bytes as u64;
+            }
         }
     }
 
@@ -209,7 +240,7 @@ mod tests {
     use super::*;
 
     fn delta(epoch: u64, len: usize) -> Message {
-        Message::Delta { epoch, payload: vec![0u8; len] }
+        Message::Delta { from: 0, epoch, payload: vec![0u8; len] }
     }
 
     #[test]
@@ -239,6 +270,26 @@ mod tests {
         // Done is not attributed to any round; totals still include it.
         let round_total: u64 = snap.rounds.values().map(|t| t.bytes).sum();
         assert_eq!(snap.bytes, round_total + 16);
+    }
+
+    #[test]
+    fn retransmit_class_accounts_into_round_bucket() {
+        let (link, _rx, stats) = Link::new(8, 0, 0);
+        link.send(delta(0, 40)).unwrap();
+        link.send_class(delta(0, 25), true).unwrap();
+        link.send_class(delta(1, 30), true).unwrap();
+        let snap = stats.snapshot();
+        // Retransmit frames count in BOTH the round total and the
+        // retransmit bucket; plain frames only in the total.
+        assert_eq!(snap.round_bytes(0), 65);
+        assert_eq!(snap.round_retransmit_bytes(0), 25);
+        assert_eq!(snap.round_retransmit_bytes(1), 30);
+        assert_eq!(snap.retransmit_bytes(), 55);
+        // Merge propagates the retransmit bucket.
+        let mut merged = LinkSnapshot::default();
+        merged.merge(&snap);
+        merged.merge(&snap);
+        assert_eq!(merged.round_retransmit_bytes(0), 50);
     }
 
     #[test]

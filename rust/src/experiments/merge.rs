@@ -50,6 +50,8 @@ pub fn run(effort: Effort, seed: u64) -> Table {
                 link_latency_us: 0,
                 link_bandwidth_bps: 0,
                 sync_rounds: 1,
+                min_quorum: 0,
+                faults_seed: None,
                 seed,
             };
             let streams = partition_streams(&ds, devices, None);

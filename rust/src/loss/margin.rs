@@ -118,6 +118,30 @@ mod tests {
     }
 
     #[test]
+    fn deriv_gradcheck_across_powers_and_domain_boundary() {
+        // Central-difference check on a fixed grid across p in
+        // {2, 3, 4, 6}, including the ±1 boundary region where
+        // f'(-t) = 1/(pi sqrt(1 - t^2)) grows fast. The 2^p scaling
+        // makes absolute errors large at p = 6, so tolerance is
+        // relative to the analytic value.
+        let grid = [-0.999, -0.99, -0.9, -0.5, -0.1, 0.0, 0.1, 0.5, 0.9, 0.99, 0.999];
+        for p in [2u32, 3, 4, 6] {
+            for &t in &grid {
+                let h = 1e-7;
+                let fd = (margin_loss(t + h, p) - margin_loss(t - h, p)) / (2.0 * h);
+                let an = margin_loss_deriv(t, p);
+                assert!(an.is_finite(), "p={p} t={t}: non-finite derivative {an}");
+                assert!(an <= 0.0, "p={p} t={t}: margin loss must be non-increasing, got {an}");
+                let tol = 1e-5 * (1.0 + an.abs());
+                assert!(
+                    (an - fd).abs() <= tol,
+                    "p={p} t={t}: analytic {an} vs central-difference {fd} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn accuracy_counts_correct_side() {
         let xs = vec![vec![1.0, 0.0], vec![-1.0, 0.0], vec![0.5, 0.0]];
         let ys = vec![1.0, -1.0, -1.0];

@@ -144,6 +144,28 @@ mod tests {
     }
 
     #[test]
+    fn deriv_gradcheck_across_powers_and_domain_boundary() {
+        // Central-difference check on a fixed grid across p in
+        // {2, 3, 4, 6}, including points near the ±1 domain boundary
+        // where f'(t) = 1/(pi sqrt(1 - t^2)) grows fast — relative
+        // tolerance, and a step small enough to stay inside [-1, 1].
+        let grid = [-0.999, -0.99, -0.9, -0.5, -0.1, 0.0, 0.1, 0.5, 0.9, 0.99, 0.999];
+        for p in [2u32, 3, 4, 6] {
+            for &t in &grid {
+                let h = 1e-7;
+                let fd = (prp_surrogate(t + h, p) - prp_surrogate(t - h, p)) / (2.0 * h);
+                let an = prp_surrogate_deriv(t, p);
+                assert!(an.is_finite(), "p={p} t={t}: non-finite derivative {an}");
+                let tol = 1e-5 * (1.0 + an.abs());
+                assert!(
+                    (an - fd).abs() <= tol,
+                    "p={p} t={t}: analytic {an} vs central-difference {fd} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn p4_has_steepest_slope_near_optimum() {
         // Figure 3(b): at t = 0.1 the slope peaks at p = 4 among powers of 2.
         let slopes: Vec<(u32, f64)> = [1u32, 2, 4, 8, 16]

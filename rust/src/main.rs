@@ -74,6 +74,8 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("power", Some("4"), "hyperplanes per row p (buckets = 2^p)")
         .opt("devices", Some("4"), "simulated edge devices")
         .opt("sync-rounds", Some("1"), "delta sync rounds (training interleaves between rounds)")
+        .opt("min-quorum", Some("0"), "children a barrier waits for (0 = all; stragglers fold late)")
+        .opt("faults-seed", None, "seeded chaos schedule: drops/dups/reorders + straggler rounds + one crash")
         .opt("iters", Some("400"), "DFO iterations (split across sync rounds)")
         .opt("queries", Some("8"), "DFO probes per iteration")
         .opt("sigma", Some("0.3"), "DFO sphere radius")
@@ -97,6 +99,14 @@ fn cmd_train(args: &[String]) -> i32 {
         cfg.fleet.devices = parsed.get_usize("devices")?;
         cfg.fleet.sync_rounds = parsed.get_usize("sync-rounds")?;
         anyhow::ensure!(cfg.fleet.sync_rounds >= 1, "--sync-rounds must be >= 1");
+        cfg.fleet.min_quorum = parsed.get_usize("min-quorum")?;
+        anyhow::ensure!(
+            cfg.fleet.min_quorum <= cfg.fleet.devices,
+            "--min-quorum must be <= --devices (0 = all)"
+        );
+        if parsed.get("faults-seed").is_some() {
+            cfg.fleet.faults_seed = Some(parsed.get_u64("faults-seed")?);
+        }
         cfg.optimizer.iters = parsed.get_usize("iters")?;
         cfg.optimizer.queries = parsed.get_usize("queries")?;
         cfg.optimizer.sigma = parsed.get_f64("sigma")?;
@@ -127,10 +137,19 @@ fn cmd_train(args: &[String]) -> i32 {
             cfg.optimizer.iters,
             cfg.fleet.sync_rounds,
         );
+        if report.fault_events > 0 {
+            println!(
+                "chaos: {} fault events injected (seed {:?}); {} catch-up bytes recovered the stream",
+                report.fault_events, cfg.fleet.faults_seed, report.retransmit_bytes,
+            );
+        }
         if cfg.fleet.sync_rounds > 1 {
-            println!("round  examples  net_bytes  est_risk");
+            println!("round  examples  net_bytes  resend_bytes  est_risk");
             for r in &report.rounds {
-                println!("{:>5}  {:>8}  {:>9}  {:.5}", r.round, r.examples, r.bytes, r.risk);
+                println!(
+                    "{:>5}  {:>8}  {:>9}  {:>12}  {:.5}",
+                    r.round, r.examples, r.bytes, r.retransmit_bytes, r.risk
+                );
             }
         }
         if let Some(path) = parsed.get("checkpoint") {

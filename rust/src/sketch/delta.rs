@@ -97,10 +97,23 @@ impl SketchDelta {
     /// will be applied to.
     pub fn merge_from(&mut self, other: &SketchDelta) {
         assert_eq!(self.epoch, other.epoch, "delta merge: epoch mismatch");
+        self.absorb(other);
+    }
+
+    /// Fold a delta from *any* epoch into this one — the catch-up
+    /// coalescing operation of the fault-tolerant protocol: a node whose
+    /// upstream send was dropped pools the unshipped increments and
+    /// re-ships them under a later round's tag (counter merging is
+    /// epoch-agnostic addition; the epoch only names the round the bytes
+    /// are attributed to). The result keeps the *newer* of the two
+    /// epochs, so the re-shipped frame's `(from, epoch)` dedup key is
+    /// one the receiver has never folded.
+    pub fn absorb(&mut self, other: &SketchDelta) {
         assert_eq!(self.cfg, other.cfg, "delta merge: config mismatch");
         assert_eq!(self.seed, other.seed, "delta merge: seed mismatch");
         assert_eq!(self.dim, other.dim, "delta merge: dim mismatch");
         assert_eq!(self.counts.len(), other.counts.len(), "delta merge: shape mismatch");
+        self.epoch = self.epoch.max(other.epoch);
         if self.cfg.saturating {
             for (c, o) in self.counts.iter_mut().zip(&other.counts) {
                 *c = c.saturating_add(*o);
@@ -111,6 +124,15 @@ impl SketchDelta {
             }
         }
         self.count += other.count;
+    }
+}
+
+/// Pool `delta` into `slot` (the unshipped-data accumulator used by
+/// fault recovery): absorb across epochs, or occupy the empty slot.
+pub fn pool_delta(slot: &mut Option<SketchDelta>, delta: SketchDelta) {
+    match slot {
+        Some(acc) => acc.absorb(&delta),
+        None => *slot = Some(delta),
     }
 }
 
@@ -236,6 +258,33 @@ mod tests {
         assert_eq!(dense, delta.counts);
         // 3 inserts touch at most 2 cells per row out of 8 — sparse.
         assert!(delta.populated_fraction() < 0.5);
+    }
+
+    #[test]
+    fn absorb_coalesces_across_epochs_keeping_newest() {
+        let mut rng = Xoshiro256::new(8);
+        let mut sk = StormSketch::new(cfg(), 3, 4);
+        let base = sk.snapshot();
+        insert_n(&mut sk, &mut rng, 9);
+        let early = sk.delta_since(&base, 2);
+        let snap = sk.snapshot();
+        insert_n(&mut sk, &mut rng, 5);
+        let late = sk.delta_since(&snap, 6);
+        // Pooling the two partial deltas equals one delta over the whole
+        // range, tagged with the newest epoch.
+        let mut pooled: Option<SketchDelta> = None;
+        pool_delta(&mut pooled, early);
+        pool_delta(&mut pooled, late);
+        let pooled = pooled.unwrap();
+        let whole = sk.delta_since(&base, 6);
+        assert_eq!(pooled, whole);
+        assert_eq!(pooled.epoch, 6);
+        assert_eq!(pooled.count, 14);
+        // Absorbing an older epoch does not rewind the tag.
+        let mut newer = sk.delta_since(&snap, 9);
+        let older = SketchDelta::empty(1, cfg(), 3, 4);
+        newer.absorb(&older);
+        assert_eq!(newer.epoch, 9);
     }
 
     #[test]

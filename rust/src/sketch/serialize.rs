@@ -543,6 +543,94 @@ mod tests {
         assert!(matches!(decode_delta(&b), Err(WireError::BadPayload(_))));
     }
 
+    // ---- Golden byte fixtures -------------------------------------
+    //
+    // Checked-in encodings of hand-constructed frames for every wire
+    // layout: v1 dense full-sketch, v2 sparse delta, v2 dense-fallback
+    // delta. Any silent format drift — field order, width, varint
+    // scheme, flag values, checksum — fails these tests; bump the wire
+    // VERSION and add new fixtures instead of editing these.
+
+    const GOLDEN_V2_SPARSE_HEX: &str = "524f545302000200020000000300000088776655443322110500000000000000070000000000000001030103020104023fbdf029";
+    const GOLDEN_V2_DENSE_HEX: &str = "524f545302000200020000000200000001020304050607080b0000000000000009000000000000000001000000020000000300000004000000050000000600000000000000070000008f89afde";
+    const GOLDEN_V1_DENSE_HEX: &str = "524f5453010002000200000003000000887766554433221105000000000000000000000003000000000000000100000000000000000000000000000002000000b0a904dd";
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn unhex(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    /// 2 x 4 grid, 3 of 8 cells populated (37.5% -> sparse encoding).
+    fn golden_sparse_delta() -> SketchDelta {
+        SketchDelta {
+            epoch: 7,
+            cfg: StormConfig { rows: 2, power: 2, saturating: true },
+            dim: 3,
+            seed: 0x1122_3344_5566_7788,
+            count: 5,
+            counts: vec![0, 3, 0, 1, 0, 0, 0, 2],
+        }
+    }
+
+    /// 2 x 4 grid, 7 of 8 cells populated (87.5% -> dense fallback).
+    fn golden_dense_delta() -> SketchDelta {
+        SketchDelta {
+            epoch: 9,
+            cfg: StormConfig { rows: 2, power: 2, saturating: true },
+            dim: 2,
+            seed: 0x0807_0605_0403_0201,
+            count: 11,
+            counts: vec![1, 2, 3, 4, 5, 6, 0, 7],
+        }
+    }
+
+    #[test]
+    fn golden_v2_sparse_bytes_are_stable() {
+        let delta = golden_sparse_delta();
+        assert!(delta.populated_fraction() <= 0.5, "fixture must take the sparse path");
+        assert_eq!(
+            hex(&encode_delta(&delta)),
+            GOLDEN_V2_SPARSE_HEX,
+            "v2 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_V2_SPARSE_HEX)).unwrap(), delta);
+    }
+
+    #[test]
+    fn golden_v2_dense_bytes_are_stable() {
+        let delta = golden_dense_delta();
+        assert!(delta.populated_fraction() > 0.5, "fixture must take the dense fallback");
+        assert_eq!(
+            hex(&encode_delta(&delta)),
+            GOLDEN_V2_DENSE_HEX,
+            "v2 dense-fallback wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_V2_DENSE_HEX)).unwrap(), delta);
+    }
+
+    #[test]
+    fn golden_v1_bytes_are_stable() {
+        let sk = StormSketch::from_delta(&golden_sparse_delta());
+        assert_eq!(
+            hex(&encode(&sk)),
+            GOLDEN_V1_DENSE_HEX,
+            "v1 wire encoding drifted — bump the wire version instead"
+        );
+        // The v1 fixture still decodes on both entry points.
+        let back = decode(&unhex(GOLDEN_V1_DENSE_HEX)).unwrap();
+        assert_eq!(back.grid().data(), sk.grid().data());
+        assert_eq!(back.count(), 5);
+        let as_delta = decode_delta(&unhex(GOLDEN_V1_DENSE_HEX)).unwrap();
+        assert_eq!(as_delta.epoch, 0, "v1 reads as an epoch-0 dense delta");
+        assert_eq!(as_delta.counts, golden_sparse_delta().counts);
+    }
+
     #[test]
     fn varint_roundtrip_and_overflow() {
         let mut buf = Vec::new();

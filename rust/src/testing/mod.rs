@@ -2,23 +2,106 @@
 //! invariant tests use this small seeded case-sweep framework. It provides
 //! deterministic generators over the crate's own RNG and a `cases` driver
 //! that reports the failing seed/case for reproduction.
+//!
+//! Two environment knobs control every sweep (read per [`cases`] call):
+//!
+//! * `STORM_TEST_CASES=<m>` multiplies each property's case budget by
+//!   the integer `m` (the scheduled deep-property CI job runs with
+//!   `STORM_TEST_CASES=10`).
+//! * `STORM_TEST_REPLAY=<seed>:<case>` re-runs exactly one case: the
+//!   property whose root seed is `<seed>` executes only case `<case>`
+//!   (with its exact RNG stream); every other property runs zero cases.
+//!   A failing sweep prints the ready-to-paste value.
 
 use crate::util::rng::{Rng, Xoshiro256};
 
-/// Run `n` generated cases. On panic the failing case index and derived
-/// seed are printed so the case can be replayed exactly.
-pub fn cases(n: usize, seed: u64, mut body: impl FnMut(&mut Xoshiro256, usize)) {
+/// How a [`cases`] sweep should run, normally parsed from the
+/// environment (see the module docs); separated out so the parsing and
+/// selection logic is unit-testable without touching process state.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CaseOptions {
+    /// Multiplier on every property's case budget (None = 1).
+    pub multiplier: Option<usize>,
+    /// `(root_seed, case)` — run only this case of this property.
+    pub replay: Option<(u64, usize)>,
+}
+
+impl CaseOptions {
+    /// Parse from the raw env-var values. Malformed values panic loudly:
+    /// a typo'd knob silently running the defaults would defeat the deep
+    /// CI job.
+    pub fn parse(cases_var: Option<&str>, replay_var: Option<&str>) -> CaseOptions {
+        let multiplier = cases_var.map(|v| {
+            v.trim()
+                .parse::<usize>()
+                .unwrap_or_else(|_| panic!("STORM_TEST_CASES must be an integer multiplier, got {v:?}"))
+        });
+        let replay = replay_var.map(|v| {
+            let err = || panic!("STORM_TEST_REPLAY must be <seed>:<case>, got {v:?}");
+            let (seed, case) = v.trim().split_once(':').unwrap_or_else(err);
+            match (seed.parse::<u64>(), case.parse::<usize>()) {
+                (Ok(s), Ok(c)) => (s, c),
+                _ => err(),
+            }
+        });
+        CaseOptions { multiplier, replay }
+    }
+
+    /// Read `STORM_TEST_CASES` / `STORM_TEST_REPLAY` from the process
+    /// environment.
+    pub fn from_env() -> CaseOptions {
+        CaseOptions::parse(
+            std::env::var("STORM_TEST_CASES").ok().as_deref(),
+            std::env::var("STORM_TEST_REPLAY").ok().as_deref(),
+        )
+    }
+}
+
+/// Run `n` generated cases (scaled and filtered by the environment —
+/// see the module docs). On panic the failing case index and root seed
+/// are printed with a ready-to-paste `STORM_TEST_REPLAY` value so the
+/// case can be replayed exactly. Returns the number of cases executed
+/// (0 when a replay targets a different property).
+pub fn cases(n: usize, seed: u64, body: impl FnMut(&mut Xoshiro256, usize)) -> usize {
+    cases_with(CaseOptions::from_env(), n, seed, body)
+}
+
+/// [`cases`] with explicit options (the env-free core).
+pub fn cases_with(
+    opts: CaseOptions,
+    n: usize,
+    seed: u64,
+    mut body: impl FnMut(&mut Xoshiro256, usize),
+) -> usize {
+    let n = n * opts.multiplier.unwrap_or(1).max(1);
     let mut root = Xoshiro256::new(seed);
+    if let Some((replay_seed, replay_case)) = opts.replay {
+        if replay_seed != seed {
+            return 0; // replay targets another property: skip fast
+        }
+        // `fork` advances the root stream, so case k's generator depends
+        // on the k forks before it — replay must burn through them.
+        for case in 0..replay_case {
+            let _ = root.fork(case as u64);
+        }
+        let mut rng = root.fork(replay_case as u64);
+        body(&mut rng, replay_case);
+        return 1;
+    }
     for case in 0..n {
         let mut rng = root.fork(case as u64);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             body(&mut rng, case);
         }));
         if let Err(e) = result {
-            eprintln!("property failed at case {case} (root seed {seed})");
+            eprintln!(
+                "property failed at case {case} (root seed {seed}); \
+                 replay with STORM_TEST_REPLAY={seed}:{case}"
+            );
             std::panic::resume_unwind(e);
         }
     }
+    n
 }
 
 /// Uniform f64 vector with entries in `[lo, hi)`.
@@ -40,8 +123,18 @@ pub fn gen_dim(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
 }
 
 /// Assert two floats agree to a tolerance, with a useful message.
+/// Exactly equal values — including equal infinities — always pass; any
+/// other non-finite operand (NaN, or mismatched infinities) fails with
+/// an explicit non-finite message instead of a misleading `|diff|=NaN`.
 #[track_caller]
 pub fn assert_close(a: f64, b: f64, tol: f64) {
+    if a == b {
+        return; // covers equal infinities; NaN never compares equal
+    }
+    assert!(
+        a.is_finite() && b.is_finite(),
+        "assert_close failed: non-finite operand ({a} vs {b})"
+    );
     assert!(
         (a - b).abs() <= tol,
         "assert_close failed: {a} vs {b} (|diff|={} > tol={tol})",
@@ -49,11 +142,21 @@ pub fn assert_close(a: f64, b: f64, tol: f64) {
     );
 }
 
-/// Assert two slices agree elementwise to a tolerance.
+/// Assert two slices agree elementwise to a tolerance (same non-finite
+/// contract as [`assert_close`], with the failing index reported).
 #[track_caller]
 pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
     assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
     for i in 0..a.len() {
+        if a[i] == b[i] {
+            continue;
+        }
+        assert!(
+            a[i].is_finite() && b[i].is_finite(),
+            "assert_allclose failed at index {i}: non-finite operand ({} vs {})",
+            a[i],
+            b[i]
+        );
         assert!(
             (a[i] - b[i]).abs() <= tol,
             "assert_allclose failed at index {i}: {} vs {} (tol={tol})",
@@ -87,6 +190,67 @@ mod tests {
     }
 
     #[test]
+    fn multiplier_scales_the_sweep() {
+        let opts = CaseOptions { multiplier: Some(3), ..Default::default() };
+        let mut ran = 0usize;
+        let n = cases_with(opts, 4, 11, |_, _| ran += 1);
+        assert_eq!(n, 12);
+        assert_eq!(ran, 12);
+        // Multiplier 0 is treated as 1 (never silently run nothing).
+        let opts = CaseOptions { multiplier: Some(0), ..Default::default() };
+        assert_eq!(cases_with(opts, 4, 11, |_, _| {}), 4);
+    }
+
+    #[test]
+    fn replay_reruns_exactly_the_targeted_case_with_its_stream() {
+        // Record case 3's stream from a full sweep...
+        let mut full: Vec<(usize, u64)> = Vec::new();
+        cases_with(CaseOptions::default(), 6, 42, |rng, case| {
+            full.push((case, rng.next_u64()));
+        });
+        // ...then replay only case 3 and demand the identical draw.
+        let opts = CaseOptions { replay: Some((42, 3)), ..Default::default() };
+        let mut replayed: Vec<(usize, u64)> = Vec::new();
+        let n = cases_with(opts, 6, 42, |rng, case| {
+            replayed.push((case, rng.next_u64()));
+        });
+        assert_eq!(n, 1);
+        assert_eq!(replayed, vec![full[3]]);
+        // A replay for a different property's seed runs nothing.
+        let other = CaseOptions { replay: Some((43, 3)), ..Default::default() };
+        assert_eq!(cases_with(other, 6, 42, |_, _| panic!("must not run")), 0);
+    }
+
+    #[test]
+    fn case_options_parse_both_knobs() {
+        assert_eq!(CaseOptions::parse(None, None), CaseOptions::default());
+        assert_eq!(
+            CaseOptions::parse(Some("10"), None),
+            CaseOptions { multiplier: Some(10), replay: None }
+        );
+        assert_eq!(
+            CaseOptions::parse(None, Some("118:7")),
+            CaseOptions { multiplier: None, replay: Some((118, 7)) }
+        );
+        assert_eq!(
+            CaseOptions::parse(Some(" 2 "), Some(" 5:0 ")),
+            CaseOptions { multiplier: Some(2), replay: Some((5, 0)) }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "STORM_TEST_REPLAY")]
+    fn malformed_replay_panics_loudly() {
+        let _ = CaseOptions::parse(None, Some("notaseed"));
+    }
+
+    #[test]
+    #[should_panic(expected = "STORM_TEST_CASES")]
+    fn malformed_multiplier_panics_loudly() {
+        let _ = CaseOptions::parse(Some("ten"), None);
+    }
+
+    #[test]
     #[should_panic]
     fn assert_close_fires() {
         assert_close(1.0, 2.0, 0.5);
@@ -95,5 +259,30 @@ mod tests {
     #[test]
     fn allclose_passes_within_tol() {
         assert_allclose(&[1.0, 2.0], &[1.0 + 1e-9, 2.0 - 1e-9], 1e-6);
+    }
+
+    #[test]
+    fn equal_infinities_compare_close() {
+        assert_close(f64::INFINITY, f64::INFINITY, 0.0);
+        assert_close(f64::NEG_INFINITY, f64::NEG_INFINITY, 1e-9);
+        assert_allclose(&[f64::INFINITY, 1.0], &[f64::INFINITY, 1.0], 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn nan_fails_with_explicit_message() {
+        assert_close(f64::NAN, f64::NAN, 1e9);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn mismatched_infinities_fail_as_non_finite() {
+        assert_close(f64::INFINITY, f64::NEG_INFINITY, 1e9);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite operand")]
+    fn allclose_reports_nan_index() {
+        assert_allclose(&[1.0, f64::NAN], &[1.0, 2.0], 1e9);
     }
 }

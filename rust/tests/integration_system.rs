@@ -27,6 +27,8 @@ fn base_cfg(dataset: &str) -> RunConfig {
             link_latency_us: 0,
             link_bandwidth_bps: 0,
             sync_rounds: 1,
+            min_quorum: 0,
+            faults_seed: None,
             seed: 2,
         },
         artifacts_dir: None,
@@ -112,6 +114,34 @@ fn baselines_and_storm_share_memory_accounting() {
         assert!(bytes <= budget, "{} used {bytes} > {budget}", method.name());
         assert!(mse(&ds.x, &ds.y, &theta).is_finite(), "{}", method.name());
     }
+}
+
+#[test]
+fn chaotic_fleet_matches_ideal_fleet_counters_end_to_end() {
+    // Real registry dataset, full fleet stack: an ideal network and a
+    // seeded chaotic network (drops, duplicates, reordering, straggler
+    // rounds, one crash/restart, partial quorum) must produce identical
+    // leader counters — resilience costs bytes, never correctness.
+    let mut ds = registry::load("autos", 9).unwrap();
+    scale_to_unit_ball(&mut ds, 0.9);
+    let storm = StormConfig { rows: 120, power: 4, saturating: true };
+    let mk = |faults: Option<u64>, quorum: usize| {
+        let mut fleet = base_cfg("autos").fleet;
+        fleet.devices = 5;
+        fleet.sync_rounds = 4;
+        fleet.faults_seed = faults;
+        fleet.min_quorum = quorum;
+        let streams = storm::data::stream::partition_streams(&ds, 5, None);
+        storm::edge::fleet::run_fleet(fleet, storm, Topology::Star, ds.dim() + 1, 31, streams)
+    };
+    let ideal = mk(None, 0);
+    let chaotic = mk(Some(0xFEED), 2);
+    assert_eq!(ideal.sketch.grid().data(), chaotic.sketch.grid().data());
+    assert_eq!(ideal.sketch.count(), chaotic.sketch.count());
+    assert_eq!(ideal.examples, chaotic.examples);
+    assert_eq!(ideal.faults.total(), 0);
+    assert!(chaotic.faults.total() > 0, "chaos was vacuous");
+    assert_eq!(chaotic.rounds.len(), 4, "all rounds close under chaos");
 }
 
 #[test]

@@ -1,10 +1,17 @@
 //! Property-based invariant tests over randomized configurations (the
 //! crate's seeded case-sweep framework stands in for proptest, which is
 //! not in the offline vendor set).
+//!
+//! Every sweep here honours the framework's environment knobs
+//! (`storm::testing`): `STORM_TEST_CASES=<m>` multiplies each case
+//! budget (the scheduled deep CI job runs at 10x), and
+//! `STORM_TEST_REPLAY=<seed>:<case>` re-runs exactly one failing case
+//! with its exact RNG stream — the value is printed by any failure.
 
 use storm::config::{FleetConfig, StormConfig};
 use storm::data::stream::partition_streams;
-use storm::edge::fleet::run_fleet;
+use storm::edge::faults::FaultPlan;
+use storm::edge::fleet::{run_fleet, run_fleet_chaos};
 use storm::edge::topology::Topology;
 use storm::lsh::asym::{augment, Side};
 use storm::lsh::prp::PairedRandomProjection;
@@ -288,6 +295,8 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             link_latency_us: 0,
             link_bandwidth_bps: 0,
             sync_rounds: rounds,
+            min_quorum: 0,
+            faults_seed: None,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -300,7 +309,84 @@ fn prop_round_sync_bit_identical_to_oneshot() {
         assert_eq!(result.sketch.count(), reference.count());
         assert_eq!(result.rounds.len(), rounds);
         assert_eq!(result.examples, n_examples as u64);
+        // No faults configured: zero injected events, zero catch-up
+        // traffic — the PR-2 ideal-network behaviour, bit for bit.
+        assert_eq!(result.faults.total(), 0);
+        assert_eq!(result.network.retransmit_bytes(), 0);
     });
+}
+
+#[test]
+fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
+    // THE resilience invariant: for ANY seeded fault schedule with
+    // eventual delivery — drops (recovered as multi-epoch catch-up
+    // deltas), duplicates (deduplicated by `(from, epoch)`),
+    // reordering/delay, straggler rounds, and one device crash/restart —
+    // the final merged counters are bit-identical to the fault-free
+    // one-shot merge, across star/tree/chain topologies and barrier
+    // quorums. Replay a failing case with
+    // STORM_TEST_REPLAY=118:<case>; the fault schedule itself is a pure
+    // function of the printed faults_seed.
+    let mut injected_total = 0u64;
+    let ran = cases(9, 118, |rng, case| {
+        let n_examples = 80 + (rng.next_u64() % 140) as usize;
+        let devices = 2 + (case % 4);
+        let rounds = 2 + (case % 5);
+        let topo = match case % 3 {
+            0 => Topology::Star,
+            1 => Topology::Tree { fanout: 2 },
+            _ => Topology::Chain,
+        };
+        let storm = StormConfig { rows: 6 + (case % 8), power: 3, saturating: true };
+        let mut ds = storm_ds(n_examples, case as u64 ^ 0xFA);
+        storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        let family_seed = 0xFA17 ^ case as u64;
+        // One-shot fault-free reference: a single local sketch.
+        let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
+        for i in 0..ds.len() {
+            reference.insert(&ds.augmented(i));
+        }
+        let faults_seed = rng.next_u64();
+        let plan = FaultPlan::from_seed(faults_seed);
+        let fleet = FleetConfig {
+            devices,
+            batch: 16,
+            channel_capacity: 2,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            sync_rounds: rounds,
+            // Alternate full and partial barrier quorums.
+            min_quorum: if case % 2 == 0 { 0 } else { 1 + case % devices },
+            faults_seed: None,
+            seed: 0,
+        };
+        let streams = partition_streams(&ds, devices, None);
+        let result = run_fleet_chaos(
+            fleet,
+            storm,
+            topo,
+            ds.dim() + 1,
+            family_seed,
+            streams,
+            Some(plan),
+            |_, _| {},
+        );
+        let ctx = format!(
+            "faults_seed={faults_seed:#x} devices={devices} rounds={rounds} topo={topo:?}"
+        );
+        assert_eq!(result.sketch.grid().data(), reference.grid().data(), "{ctx}");
+        assert_eq!(result.sketch.count(), reference.count(), "{ctx}");
+        assert_eq!(result.examples, n_examples as u64, "{ctx}");
+        assert_eq!(result.rounds.len(), rounds, "every round closes: {ctx}");
+        // The leader's anytime trace stays monotone no matter how
+        // messily deltas arrive.
+        let counts: Vec<u64> = result.rounds.iter().map(|r| r.leader_count).collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?} ({ctx})");
+        injected_total += result.faults.total();
+    });
+    if ran > 0 {
+        assert!(injected_total > 0, "chaos sweep injected no faults at all — vacuous");
+    }
 }
 
 /// Small random regression dataset for the fleet property tests.
