@@ -21,7 +21,7 @@ fn main() {
     let xs: Vec<Vec<f64>> = (0..ds.len()).map(|i| ds.x.row(i).to_vec()).collect();
 
     // Paper setting for Figure 5: p = 1, R = 100.
-    let cfg = StormConfig { rows: 100, power: 1, saturating: true };
+    let cfg = StormConfig { rows: 100, power: 1, saturating: true, ..Default::default() };
     let mut sketch = StormClassifierSketch::new(cfg, 2, 29);
     for (x, y) in xs.iter().zip(&ds.y) {
         sketch.insert_labelled(x, *y);

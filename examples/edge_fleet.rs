@@ -44,7 +44,7 @@ fn main() {
         // dimension and the sketch-family bias scales as 1/sqrt(R), so a
         // generous row budget is what makes real-d training effective
         // (see EXPERIMENTS.md §SNR for the measured signal/bias numbers).
-        storm: StormConfig { rows: 1000, power: 4, saturating: true },
+        storm: StormConfig { rows: 1000, power: 4, saturating: true, ..Default::default() },
         optimizer: OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters: 600, seed: 1 },
         fleet: FleetConfig {
             devices: 8,
@@ -59,6 +59,7 @@ fn main() {
             // to rehearse the same run under seeded chaos.
             min_quorum: 0,
             faults_seed: None,
+            device_counter_width: None,
             seed: 17,
         },
         artifacts_dir: Some("artifacts".to_string()),

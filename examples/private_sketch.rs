@@ -23,7 +23,7 @@ fn main() {
     scale_to_unit_ball_quantile(&mut ds, storm::data::scale::DEFAULT_RADIUS, 0.9);
     let d = ds.dim();
     let theta_ls = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
-    let cfg = StormConfig { rows: 300, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 300, power: 4, saturating: true, ..Default::default() };
     let mut sketch = StormSketch::new(cfg, d + 1, 5);
     for i in 0..ds.len() {
         sketch.insert(&ds.augmented(i));

@@ -21,7 +21,7 @@ fn main() {
 
     // 3. One-pass sketching: every example updates 2 counters per row and
     //    is then forgotten. The sketch is the ONLY thing training sees.
-    let cfg = StormConfig { rows: 400, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 400, power: 4, saturating: true, ..Default::default() };
     let mut sketch = StormSketch::new(cfg, ds.dim() + 1, 7);
     for i in 0..ds.len() {
         sketch.insert(&ds.augmented(i));

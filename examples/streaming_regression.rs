@@ -41,7 +41,7 @@ fn main() {
     let d = base.dim();
     let mut stream = ResampleStream::new(base.clone(), 99, 60_000);
 
-    let cfg = StormConfig { rows: 1000, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 1000, power: 4, saturating: true, ..Default::default() };
     // Device side: one long-lived sketch + the snapshot at the last sync.
     let mut device = StormSketch::new(cfg, d + 1, 11);
     let mut snap = device.snapshot();
@@ -122,7 +122,7 @@ fn main() {
     wire_total += quiet_frame.len();
     server.apply_delta(&decode_delta(&quiet_frame).expect("valid delta frame"));
     assert_eq!(server.count(), device.count());
-    assert_eq!(server.grid().data(), device.grid().data());
+    assert_eq!(server.grid().counts_u32(), device.grid().counts_u32());
     println!(
         "device sketched {} examples; server mirrored them bit-exactly from {} delta bytes \
          (raw data would have been {} bytes)",

@@ -26,6 +26,7 @@ fn fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
         sync_rounds,
         min_quorum: 0,
         faults_seed: None,
+        device_counter_width: None,
         seed: 0,
     }
 }
@@ -35,7 +36,7 @@ fn main() {
     let mut json = JsonReporter::new("fleet");
     let mut ds = synthetic::parkinsons(5);
     scale_to_unit_ball(&mut ds, 0.9);
-    let storm_cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let storm_cfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
 
     section("fleet: ingest throughput vs devices (star)");
     for devices in [1usize, 2, 4, 8] {
@@ -139,8 +140,8 @@ fn main() {
             |_, _| {},
         );
         assert_eq!(
-            r.sketch.grid().data(),
-            baseline.sketch.grid().data(),
+            r.sketch.grid().counts_u32(),
+            baseline.sketch.grid().counts_u32(),
             "drop rate {drop_per_mille} per-mille changed the counters"
         );
         json.record_scalar(

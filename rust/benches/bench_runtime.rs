@@ -19,7 +19,7 @@ fn main() {
     }
     let cfg = config_from_env();
     // synth2d artifact config: D = 3, R = 100, p = 4.
-    let scfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let scfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(scfg, 3, 7);
     let mut rng = Xoshiro256::new(1);
     let data: Vec<Vec<f64>> = (0..4096).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();

@@ -7,8 +7,10 @@
 //! `storm::util::bench::JsonReporter`) so the perf trajectory is tracked
 //! across PRs.
 
-use storm::config::StormConfig;
-use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, wire_bytes};
+use storm::config::{CounterWidth, StormConfig};
+use storm::sketch::serialize::{
+    decode, decode_delta, delta_wire_bytes, encode, encode_delta, wire_bytes,
+};
 use storm::sketch::storm::StormSketch;
 use storm::sketch::Sketch;
 use storm::testing::gen_ball_point;
@@ -21,7 +23,7 @@ fn main() {
 
     section("sketch: insert throughput (fused hash-bank batch path)");
     for (rows, power) in [(50usize, 4u32), (100, 4), (400, 4), (100, 8)] {
-        let scfg = StormConfig { rows, power, saturating: true };
+        let scfg = StormConfig { rows, power, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(1);
         let data: Vec<Vec<f64>> = (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();
         let mut sk = StormSketch::new(scfg, 22, 7);
@@ -37,7 +39,7 @@ fn main() {
 
     section("sketch: insert throughput (seed scalar path, for comparison)");
     for (rows, power) in [(100usize, 4u32)] {
-        let scfg = StormConfig { rows, power, saturating: true };
+        let scfg = StormConfig { rows, power, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(1);
         let data: Vec<Vec<f64>> = (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();
         let mut sk = StormSketch::new(scfg, 22, 7);
@@ -55,7 +57,7 @@ fn main() {
 
     section("sketch: query latency");
     for rows in [50usize, 100, 400] {
-        let scfg = StormConfig { rows, power: 4, saturating: true };
+        let scfg = StormConfig { rows, power: 4, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(2);
         let mut sk = StormSketch::new(scfg, 22, 7);
         for _ in 0..2000 {
@@ -83,7 +85,7 @@ fn main() {
     }
 
     section("sketch: merge + wire format");
-    let scfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let scfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     let mut rng = Xoshiro256::new(3);
     let mut a = StormSketch::new(scfg, 22, 9);
     let mut b = StormSketch::new(scfg, 22, 9);
@@ -165,6 +167,44 @@ fn main() {
             black_box(leader.count());
         },
     ));
+
+    section("sketch: counter-width tiers (u8 / u16 / u32)");
+    // The width sweep: same geometry, same stream, three cell widths —
+    // memory and dense-wire bytes scale 1:2:4 while the hash work is
+    // identical, so insert/query throughput shows the pure effect of the
+    // narrower counter buffer (smaller working set vs the widening read).
+    for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
+        let scfg = StormConfig { rows: 100, power: 4, saturating: true, counter_width: width };
+        let mut rng = Xoshiro256::new(5);
+        let data: Vec<Vec<f64>> =
+            (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();
+        let mut sk = StormSketch::new(scfg, 22, 7);
+        json.record(bench_items(
+            &format!("sketch_width_{width}_insert_1k_R100"),
+            cfg,
+            data.len() as u64,
+            || {
+                sk.insert_batch(&data);
+            },
+        ));
+        let q = gen_ball_point(&mut rng, 22, 0.8);
+        json.record(bench_items(&format!("sketch_width_{width}_query_R100"), cfg, 1, || {
+            black_box(sk.estimate_risk(&q));
+        }));
+        json.record_scalar(&format!("sketch_width_{width}_bytes_R100"), sk.bytes() as f64);
+        json.record_scalar(
+            &format!("sketch_width_{width}_dense_delta_wire_bytes_R100"),
+            delta_wire_bytes(&scfg) as f64,
+        );
+        let snap = sk.snapshot();
+        for _ in 0..2 {
+            sk.insert(&gen_ball_point(&mut rng, 22, 0.9));
+        }
+        json.record_scalar(
+            &format!("sketch_width_{width}_sparse_delta_wire_bytes_2ex_R100"),
+            encode_delta(&sk.delta_since(&snap, 1)).len() as f64,
+        );
+    }
 
     match json.write() {
         Ok(path) => println!("\nwrote {}", path.display()),

@@ -8,6 +8,77 @@ pub mod validate;
 use crate::config::toml::TomlDoc;
 use std::path::Path;
 
+/// Storage width of one sketch counter cell. Sketch *memory* is the
+/// resource the paper trades against risk; an MCU-class device whose
+/// per-round counts never exceed a few hundred can run the whole sketch
+/// in `u8` cells at a quarter of the `u32` footprint, while upstream
+/// aggregators keep wide accumulators. Narrow counters saturate at their
+/// own maximum (graceful degradation, device-local); merges widen
+/// narrow-into-wide exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CounterWidth {
+    U8,
+    U16,
+    #[default]
+    U32,
+}
+
+impl CounterWidth {
+    /// Bytes per counter cell.
+    pub fn bytes(self) -> usize {
+        match self {
+            CounterWidth::U8 => 1,
+            CounterWidth::U16 => 2,
+            CounterWidth::U32 => 4,
+        }
+    }
+
+    /// Largest value a cell of this width can hold.
+    pub fn max_value(self) -> u32 {
+        match self {
+            CounterWidth::U8 => u8::MAX as u32,
+            CounterWidth::U16 => u16::MAX as u32,
+            CounterWidth::U32 => u32::MAX,
+        }
+    }
+
+    /// The narrowest width that can hold `v` without clipping.
+    pub fn fitting(v: u32) -> CounterWidth {
+        if v <= u8::MAX as u32 {
+            CounterWidth::U8
+        } else if v <= u16::MAX as u32 {
+            CounterWidth::U16
+        } else {
+            CounterWidth::U32
+        }
+    }
+
+    /// Config/CLI name (`u8` | `u16` | `u32`).
+    pub fn name(self) -> &'static str {
+        match self {
+            CounterWidth::U8 => "u8",
+            CounterWidth::U16 => "u16",
+            CounterWidth::U32 => "u32",
+        }
+    }
+
+    /// Parse a config/CLI name; `None` for anything but `u8`/`u16`/`u32`.
+    pub fn parse(s: &str) -> Option<CounterWidth> {
+        match s.trim() {
+            "u8" => Some(CounterWidth::U8),
+            "u16" => Some(CounterWidth::U16),
+            "u32" => Some(CounterWidth::U32),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CounterWidth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Sketch hyperparameters (Section 3 / 4.1 of the paper).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StormConfig {
@@ -16,13 +87,20 @@ pub struct StormConfig {
     /// Number of hyperplanes p per PRP hash; the row has `2^p` buckets.
     /// The paper finds p = 4 the sweet spot (Figure 3).
     pub power: u32,
-    /// Counter width policy: saturate instead of wrapping.
+    /// Counter overflow policy: saturate instead of wrapping.
     pub saturating: bool,
+    /// Counter cell width (`u32` default — the seed representation).
+    pub counter_width: CounterWidth,
 }
 
 impl Default for StormConfig {
     fn default() -> Self {
-        StormConfig { rows: 50, power: 4, saturating: true }
+        StormConfig {
+            rows: 50,
+            power: 4,
+            saturating: true,
+            counter_width: CounterWidth::U32,
+        }
     }
 }
 
@@ -32,10 +110,20 @@ impl StormConfig {
         1usize << self.power
     }
 
-    /// Sketch memory in bytes with `u32` counters (the paper's "tiny array
-    /// of integer counters"; reported on the Figure-4 memory axis).
+    /// Sketch memory in bytes at the configured counter width (the
+    /// paper's "tiny array of integer counters"; reported on the
+    /// Figure-4 memory axis).
     pub fn sketch_bytes(&self) -> usize {
-        self.rows * self.buckets() * std::mem::size_of::<u32>()
+        self.rows * self.buckets() * self.counter_width.bytes()
+    }
+
+    /// True when two sketches/deltas of these configs can be merged:
+    /// identical geometry and overflow policy. Counter *width* is allowed
+    /// to differ — merges widen narrow-into-wide exactly (and clip
+    /// wide-into-narrow at the destination's width, same as local
+    /// saturation).
+    pub fn merge_compatible(&self, other: &StormConfig) -> bool {
+        self.rows == other.rows && self.power == other.power && self.saturating == other.saturating
     }
 }
 
@@ -88,6 +176,12 @@ pub struct FleetConfig {
     /// delays/reorders, straggler rounds and one device crash/restart,
     /// all replayable from this one value. None = ideal network.
     pub faults_seed: Option<u64>,
+    /// Per-tier counter-width override for *device* sketches: devices run
+    /// at this width while aggregators and the leader keep the
+    /// `[storm] counter_width` accumulators. Merges widen narrow device
+    /// deltas into the wide upstream counters exactly (saturation, if
+    /// any, is device-local). None = devices use `[storm] counter_width`.
+    pub device_counter_width: Option<CounterWidth>,
     pub seed: u64,
 }
 
@@ -102,6 +196,7 @@ impl Default for FleetConfig {
             sync_rounds: 1,
             min_quorum: 0,
             faults_seed: None,
+            device_counter_width: None,
             seed: 0,
         }
     }
@@ -156,6 +251,14 @@ impl RunConfig {
                 ("storm", "saturating") => {
                     cfg.storm.saturating = value.as_bool().map_err(ConfigError::Parse)?
                 }
+                ("storm", "counter_width") => {
+                    cfg.storm.counter_width = CounterWidth::parse(value.as_str()).ok_or_else(|| {
+                        ConfigError::Parse(format!(
+                            "storm.counter_width must be u8|u16|u32, got {:?}",
+                            value.as_str()
+                        ))
+                    })?
+                }
                 ("optimizer", "queries") => {
                     cfg.optimizer.queries = value.as_usize().map_err(ConfigError::Parse)?
                 }
@@ -195,6 +298,15 @@ impl RunConfig {
                     cfg.fleet.faults_seed =
                         Some(value.as_usize().map_err(ConfigError::Parse)? as u64)
                 }
+                ("fleet", "device_counter_width") => {
+                    cfg.fleet.device_counter_width =
+                        Some(CounterWidth::parse(value.as_str()).ok_or_else(|| {
+                            ConfigError::Parse(format!(
+                                "fleet.device_counter_width must be u8|u16|u32, got {:?}",
+                                value.as_str()
+                            ))
+                        })?)
+                }
                 ("fleet", "seed") => {
                     cfg.fleet.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
                 }
@@ -223,9 +335,38 @@ mod tests {
     }
 
     #[test]
-    fn sketch_bytes_formula() {
-        let s = StormConfig { rows: 100, power: 4, saturating: true };
+    fn sketch_bytes_formula_is_width_true() {
+        let mut s = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
         assert_eq!(s.sketch_bytes(), 100 * 16 * 4);
+        s.counter_width = CounterWidth::U8;
+        assert_eq!(s.sketch_bytes(), 100 * 16);
+        s.counter_width = CounterWidth::U16;
+        assert_eq!(s.sketch_bytes(), 100 * 16 * 2);
+    }
+
+    #[test]
+    fn counter_width_parse_and_fit() {
+        assert_eq!(CounterWidth::parse("u8"), Some(CounterWidth::U8));
+        assert_eq!(CounterWidth::parse(" u16 "), Some(CounterWidth::U16));
+        assert_eq!(CounterWidth::parse("u32"), Some(CounterWidth::U32));
+        assert_eq!(CounterWidth::parse("u64"), None);
+        assert_eq!(CounterWidth::fitting(0), CounterWidth::U8);
+        assert_eq!(CounterWidth::fitting(255), CounterWidth::U8);
+        assert_eq!(CounterWidth::fitting(256), CounterWidth::U16);
+        assert_eq!(CounterWidth::fitting(65_536), CounterWidth::U32);
+        assert!(CounterWidth::U8 < CounterWidth::U16 && CounterWidth::U16 < CounterWidth::U32);
+        assert_eq!(CounterWidth::default(), CounterWidth::U32);
+        assert_eq!(CounterWidth::U8.to_string(), "u8");
+    }
+
+    #[test]
+    fn merge_compatible_ignores_width_only() {
+        let base = StormConfig::default();
+        let narrow = StormConfig { counter_width: CounterWidth::U8, ..base };
+        assert!(base.merge_compatible(&narrow));
+        assert!(!base.merge_compatible(&StormConfig { rows: base.rows + 1, ..base }));
+        assert!(!base.merge_compatible(&StormConfig { power: 3, ..base }));
+        assert!(!base.merge_compatible(&StormConfig { saturating: false, ..base }));
     }
 
     #[test]
@@ -238,6 +379,7 @@ artifacts_dir = "artifacts"
 [storm]
 rows = 100
 power = 4
+counter_width = "u16"
 
 [optimizer]
 queries = 8
@@ -255,12 +397,15 @@ link_bandwidth_bps = 1000000
 sync_rounds = 6
 min_quorum = 5
 faults_seed = 1234
+device_counter_width = "u8"
 seed = 7
 "#,
         )
         .unwrap();
         assert_eq!(cfg.dataset, "autos");
         assert_eq!(cfg.storm.rows, 100);
+        assert_eq!(cfg.storm.counter_width, CounterWidth::U16);
+        assert_eq!(cfg.fleet.device_counter_width, Some(CounterWidth::U8));
         assert_eq!(cfg.optimizer.iters, 500);
         assert_eq!(cfg.fleet.devices, 8);
         assert_eq!(cfg.fleet.link_bandwidth_bps, 1_000_000);
@@ -275,6 +420,14 @@ seed = 7
         let cfg = RunConfig::from_toml_str("[fleet]\ndevices = 4\n").unwrap();
         assert_eq!(cfg.fleet.min_quorum, 0, "default quorum is all children");
         assert_eq!(cfg.fleet.faults_seed, None, "default network is ideal");
+        assert_eq!(cfg.storm.counter_width, CounterWidth::U32, "default width is the seed u32");
+        assert_eq!(cfg.fleet.device_counter_width, None, "devices follow [storm] by default");
+    }
+
+    #[test]
+    fn bad_counter_width_rejected() {
+        assert!(RunConfig::from_toml_str("[storm]\ncounter_width = \"u64\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[fleet]\ndevice_counter_width = \"wide\"\n").is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! reference. With `sync_rounds = 1` this degenerates to the classic
 //! one-shot pipeline (sketch everything, then train once).
 
-use crate::config::RunConfig;
+use crate::config::{RunConfig, StormConfig};
 use crate::data::dataset::Dataset;
 use crate::data::scale::scale_to_unit_ball_quantile;
 use crate::data::stream::partition_streams;
@@ -64,7 +64,12 @@ pub struct TrainReport {
     pub mse_ls: f64,
     /// Relative parameter distance ||theta - theta_ls|| / ||theta_ls||.
     pub param_err: f64,
+    /// Leader (accumulator-tier) counter memory, width-true.
     pub sketch_bytes: usize,
+    /// Per-device counter memory, width-true: when
+    /// `[fleet] device_counter_width` narrows the device tier this is
+    /// smaller than `sketch_bytes` by the width ratio.
+    pub device_sketch_bytes: usize,
     pub raw_bytes: usize,
     pub examples: u64,
     pub network_bytes: u64,
@@ -90,13 +95,14 @@ impl TrainReport {
             String::new()
         };
         format!(
-            "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B raw={}B net={}B rounds={}{}",
+            "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}",
             self.dataset,
             self.mse_storm,
             self.mse_ls,
             self.mse_storm / self.mse_ls.max(1e-300),
             self.param_err,
             self.sketch_bytes,
+            self.device_sketch_bytes,
             self.raw_bytes,
             self.network_bytes,
             self.rounds.len().max(1),
@@ -244,6 +250,21 @@ pub fn train(
         mse_ls,
         param_err,
         sketch_bytes: sketch.bytes(),
+        device_sketch_bytes: result
+            .devices
+            .iter()
+            .map(|d| d.sketch_bytes)
+            .max()
+            .unwrap_or_else(|| {
+                StormConfig {
+                    counter_width: cfg
+                        .fleet
+                        .device_counter_width
+                        .unwrap_or(cfg.storm.counter_width),
+                    ..cfg.storm
+                }
+                .sketch_bytes()
+            }),
         raw_bytes,
         examples: result.examples,
         network_bytes: result.network.bytes,
@@ -265,7 +286,7 @@ mod tests {
     fn quick_cfg() -> RunConfig {
         RunConfig {
             dataset: "synth2d-reg".to_string(),
-            storm: StormConfig { rows: 400, power: 4, saturating: true },
+            storm: StormConfig { rows: 400, power: 4, saturating: true, ..Default::default() },
             optimizer: OptimizerConfig {
                 queries: 8,
                 sigma: 0.3,
@@ -282,6 +303,7 @@ mod tests {
                 sync_rounds: 1,
                 min_quorum: 0,
                 faults_seed: None,
+                device_counter_width: None,
                 seed: 1,
             },
             artifacts_dir: None,
@@ -413,5 +435,24 @@ mod tests {
         let report = train(&quick_cfg(), ds, Topology::Star, QueryBackend::Rust).unwrap();
         let s = report.summary();
         assert!(s.contains("storm-mse=") && s.contains("sketch=") && s.contains("rounds="));
+        assert!(s.contains("device-sketch="));
+        assert_eq!(report.device_sketch_bytes, report.sketch_bytes, "same tier width by default");
+    }
+
+    #[test]
+    fn narrow_device_tier_trains_identically_and_reports_width_true_bytes() {
+        // 200 examples over 3 devices never push a u8 device cell near
+        // saturation, so the narrow-tier run trains the *same* model as
+        // the all-u32 run while reporting a quarter of the device memory.
+        let ds = synthetic::synth2d_regression(200, 0.4, 0.0, 0.05, 6);
+        let cfg = quick_cfg();
+        let wide = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
+        let mut narrow_cfg = cfg;
+        narrow_cfg.fleet.device_counter_width = Some(crate::config::CounterWidth::U8);
+        let narrow = train(&narrow_cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(narrow.theta, wide.theta, "widening merge must not move the model");
+        assert_eq!(narrow.sketch_bytes, 400 * 16 * 4, "leader stays u32");
+        assert_eq!(narrow.device_sketch_bytes, 400 * 16, "u8 devices: 1 byte/cell");
+        assert_eq!(wide.device_sketch_bytes, wide.sketch_bytes);
     }
 }

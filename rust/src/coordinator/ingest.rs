@@ -118,7 +118,7 @@ mod tests {
         // batch was emitted exactly once and contributed exactly its own
         // counts — nothing from padding, nothing twice.
         let ds = toy_dataset(53);
-        let cfg = StormConfig { rows: 12, power: 3, saturating: true };
+        let cfg = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let mut bulk = crate::sketch::storm::StormSketch::new(cfg, 3, 77);
         let mut stream = ReplayStream::new(ds.clone());
         let report = rust_bulk_ingest(&mut stream, 8, &mut bulk);
@@ -128,7 +128,7 @@ mod tests {
         for i in 0..ds.len() {
             scalar.insert(&ds.augmented(i));
         }
-        assert_eq!(bulk.grid().data(), scalar.grid().data());
+        assert_eq!(bulk.grid().counts_u32(), scalar.grid().counts_u32());
         assert_eq!(bulk.count(), scalar.count());
     }
 

@@ -35,7 +35,7 @@ impl<'a> XlaRiskOracle<'a> {
     pub fn new(exe: &'a XlaStorm, sketch: &StormSketch) -> Self {
         XlaRiskOracle {
             exe,
-            counts: sketch.grid().data().to_vec(),
+            counts: sketch.grid().counts_u32(),
             n: sketch.count(),
             d: StormSketch::dim(sketch) - 1,
             evals: Cell::new(0),

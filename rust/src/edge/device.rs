@@ -76,6 +76,10 @@ pub struct DeviceReport {
     /// Delivered delta frames that were catch-up traffic (covered more
     /// than the round they were sent in, or were retries).
     pub retransmits: u64,
+    /// Width-true memory footprint of this device's counter array
+    /// (`R x B x counter_width.bytes()` — a u8 device pays a quarter of
+    /// the u32 footprint).
+    pub sketch_bytes: usize,
     pub ingest_secs: f64,
 }
 
@@ -242,6 +246,7 @@ pub fn run_device(
             Err(()) => break,
         }
     }
+    report.sketch_bytes = sketch.grid().bytes();
     report.ingest_secs = timer.elapsed_secs();
     let _ = link.send(Message::Done { device_id: cfg.id, examples: report.examples });
     report
@@ -269,7 +274,7 @@ mod tests {
             batch: 8,
             rounds,
             fallback_round_examples: 16,
-            storm: StormConfig { rows: 10, power: 3, saturating: true },
+            storm: StormConfig { rows: 10, power: 3, saturating: true, ..Default::default() },
             family_seed: 42,
             dim: 3,
             plan: None,
@@ -330,7 +335,7 @@ mod tests {
         // locally-built one-shot sketch.
         assert!(epochs.windows(2).all(|w| w[0] < w[1]), "{epochs:?}");
         let reference = reference_sketch(&ds);
-        assert_eq!(merged.grid().data(), reference.grid().data());
+        assert_eq!(merged.grid().counts_u32(), reference.grid().counts_u32());
         assert_eq!(merged.count(), 50);
     }
 
@@ -426,6 +431,37 @@ mod tests {
     }
 
     #[test]
+    fn narrow_width_device_ships_v3_deltas_that_widen_exactly() {
+        // A u8 device's rounds reassemble into a u32 merge node
+        // counter-for-counter equal to the u32 reference (no cell in
+        // this stream comes near 255, so widening is exact), at a
+        // quarter of the device-side memory.
+        let ds = toy_dataset(50);
+        let (link, rx, _) = Link::new(64, 0, 0);
+        let mut cfg = dev_cfg(0, 4);
+        cfg.storm.counter_width = crate::config::CounterWidth::U8;
+        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
+        assert_eq!(report.examples, 50);
+        assert_eq!(report.sketch_bytes, 10 * 8, "u8 cells: R x B x 1 byte");
+        let msgs: Vec<Message> = rx.iter().collect();
+        for m in &msgs {
+            if let Message::Delta { payload, .. } = m {
+                let d = decode_delta(payload).unwrap();
+                assert_eq!(d.width, crate::config::CounterWidth::U8);
+                assert_eq!(
+                    u16::from_le_bytes(payload[4..6].try_into().unwrap()),
+                    3,
+                    "narrow deltas ship the width-tagged v3 wire"
+                );
+            }
+        }
+        let (merged, done, _) = reassemble(&msgs);
+        assert_eq!(done, 50);
+        assert_eq!(merged.grid().counts_u32(), reference_sketch(&ds).grid().counts_u32());
+        assert_eq!(merged.grid().width(), crate::config::CounterWidth::U32);
+    }
+
+    #[test]
     fn dropped_deltas_ride_in_catchup_frames_and_lose_nothing() {
         // Total loss: every delta is dropped until the burst cap forces
         // one through. The reassembled sketch must still be complete,
@@ -445,7 +481,7 @@ mod tests {
         let (merged, done, _) = reassemble(&msgs);
         assert_eq!(done, 48);
         let reference = reference_sketch(&ds);
-        assert_eq!(merged.grid().data(), reference.grid().data());
+        assert_eq!(merged.grid().counts_u32(), reference.grid().counts_u32());
         assert_eq!(merged.count(), 48);
         // Catch-up frames were delivered and accounted as retransmit
         // bytes on the link.
@@ -479,7 +515,7 @@ mod tests {
         assert_eq!(acked[3].1, 0);
         let (merged, done, _) = reassemble(&msgs);
         assert_eq!(done, 60);
-        assert_eq!(merged.grid().data(), reference_sketch(&ds).grid().data());
+        assert_eq!(merged.grid().counts_u32(), reference_sketch(&ds).grid().counts_u32());
     }
 
     #[test]
@@ -493,7 +529,7 @@ mod tests {
         let msgs: Vec<Message> = rx.iter().collect();
         let (merged, done, _) = reassemble(&msgs);
         assert_eq!(done, 40);
-        assert_eq!(merged.grid().data(), reference_sketch(&ds).grid().data());
+        assert_eq!(merged.grid().counts_u32(), reference_sketch(&ds).grid().counts_u32());
         assert_eq!(merged.count(), 40);
     }
 
@@ -525,6 +561,6 @@ mod tests {
         assert_eq!(acked, vec![0, 1, 2, 3, 4], "every round acked exactly once");
         let (merged, done, _) = reassemble(&msgs);
         assert_eq!(done, 50);
-        assert_eq!(merged.grid().data(), reference_sketch(&ds).grid().data());
+        assert_eq!(merged.grid().counts_u32(), reference_sketch(&ds).grid().counts_u32());
     }
 }

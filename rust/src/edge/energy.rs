@@ -64,6 +64,15 @@ impl EnergyModel {
         }
         self.raw_energy(raw_bytes).total() / s
     }
+
+    /// Transmit energy for `flushes` dense delta frames of `cfg` at its
+    /// *native* counter width (width-true wire accounting — a `u8` tier
+    /// frame is ~a quarter of the `u32` frame, see
+    /// [`crate::sketch::serialize::delta_wire_bytes`]).
+    pub fn flush_tx_energy(&self, cfg: &crate::config::StormConfig, flushes: u64) -> f64 {
+        let frame = crate::sketch::serialize::delta_wire_bytes(cfg) as u64;
+        (flushes * frame) as f64 * self.tx_j_per_byte
+    }
 }
 
 #[cfg(test)]
@@ -87,6 +96,24 @@ mod tests {
         let raw_bytes = 10u64 * 22 * 8;
         let sketch_bytes = 6_400u64;
         assert!(m.savings_ratio(10, sketch_bytes, raw_bytes) < 1.0);
+    }
+
+    #[test]
+    fn flush_energy_is_width_true() {
+        use crate::config::{CounterWidth, StormConfig};
+        let m = EnergyModel::default();
+        let at = |w: CounterWidth| {
+            m.flush_tx_energy(
+                &StormConfig { rows: 100, power: 4, saturating: true, counter_width: w },
+                100,
+            )
+        };
+        // 1600 cells: the payload scales 1:2:4 with the width; only the
+        // fixed per-frame framing keeps the ratios from being exact.
+        assert!(at(CounterWidth::U8) < at(CounterWidth::U16));
+        assert!(at(CounterWidth::U16) < at(CounterWidth::U32));
+        let (u8_e, u32_e) = (at(CounterWidth::U8), at(CounterWidth::U32));
+        assert!(u8_e < 0.3 * u32_e, "u8 {u8_e} vs u32 {u32_e}");
     }
 
     #[test]

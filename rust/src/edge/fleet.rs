@@ -12,6 +12,15 @@
 //! rounds change *when* information arrives and what it costs on the
 //! wire, never what the final counters are.
 //!
+//! **Width tiers.** Device sketches may run at a narrower counter width
+//! than the upstream accumulators (`[fleet] device_counter_width`
+//! overriding `[storm] counter_width`): an MCU-class device holds `u8`
+//! cells, its round deltas ship width-tagged v3 frames, and every merge
+//! point folds them into wide counters *exactly* — widening merges are
+//! lossless, so as long as no device cell saturates locally the fleet
+//! result is counter-for-counter identical to an all-`u32` run
+//! (property-tested: `prop_widening_merge_exact_without_saturation`).
+//!
 //! **Fault-tolerant sync.** The same invariant holds under a chaotic
 //! network (`[fleet] faults_seed`, see [`super::faults`]): the protocol
 //! guarantees every device increment reaches the leader *exactly once*
@@ -184,6 +193,13 @@ pub fn run_fleet_chaos(
     assert_eq!(streams.len(), fleet.devices, "one stream per device");
     let n = fleet.devices;
     let rounds = fleet.sync_rounds.max(1);
+    // Per-tier widths: devices may sketch at a narrower counter width
+    // than the aggregation tier; the leader always accumulates at the
+    // `storm` width so narrow deltas widen exactly on merge.
+    let device_storm = StormConfig {
+        counter_width: fleet.device_counter_width.unwrap_or(storm.counter_width),
+        ..storm
+    };
     let stages = plan(topology, n);
     let timer = crate::util::timer::Timer::start();
     let crash = fault_plan.and_then(|p| p.crash_schedule(n, rounds as u64));
@@ -231,7 +247,7 @@ pub fn run_fleet_chaos(
             batch: fleet.batch,
             rounds,
             fallback_round_examples,
-            storm,
+            storm: device_storm,
             family_seed,
             dim,
             plan: fault_plan,
@@ -468,6 +484,7 @@ mod tests {
             sync_rounds,
             min_quorum: 0,
             faults_seed: None,
+            device_counter_width: None,
             seed: 0,
         }
     }
@@ -489,7 +506,7 @@ mod tests {
 
     fn run_with(topology: Topology, devices: usize, rounds: usize) -> FleetResult {
         let ds = scaled_ds();
-        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let streams = partition_streams(&ds, devices, None);
         run_fleet(
             small_fleet_cfg(devices, rounds),
@@ -503,23 +520,27 @@ mod tests {
 
     #[test]
     fn star_fleet_equals_single_device_sketch() {
-        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let (reference, n) = reference_sketch(storm, 99);
         let result = run_with(Topology::Star, 4, 1);
         assert_eq!(result.examples, n);
         assert_eq!(result.sketch.count(), n);
-        assert_eq!(result.sketch.grid().data(), reference.grid().data());
+        assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32());
         assert_eq!(result.faults, super::FaultSummary::default());
     }
 
     #[test]
     fn multi_round_sync_is_bit_identical_to_one_shot() {
-        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let (reference, n) = reference_sketch(storm, 99);
         for rounds in [2usize, 3, 5] {
             let result = run_with(Topology::Star, 4, rounds);
             assert_eq!(result.examples, n, "rounds={rounds}");
-            assert_eq!(result.sketch.grid().data(), reference.grid().data(), "rounds={rounds}");
+            assert_eq!(
+                result.sketch.grid().counts_u32(),
+                reference.grid().counts_u32(),
+                "rounds={rounds}"
+            );
             assert_eq!(result.rounds.len(), rounds, "rounds={rounds}");
             // Leader counts grow monotonically and end at n.
             let counts: Vec<u64> = result.rounds.iter().map(|r| r.leader_count).collect();
@@ -536,8 +557,8 @@ mod tests {
             let star = run_with(Topology::Star, 6, rounds);
             let tree = run_with(Topology::Tree { fanout: 2 }, 6, rounds);
             let chain = run_with(Topology::Chain, 6, rounds);
-            assert_eq!(star.sketch.grid().data(), tree.sketch.grid().data());
-            assert_eq!(star.sketch.grid().data(), chain.sketch.grid().data());
+            assert_eq!(star.sketch.grid().counts_u32(), tree.sketch.grid().counts_u32());
+            assert_eq!(star.sketch.grid().counts_u32(), chain.sketch.grid().counts_u32());
             assert_eq!(star.examples, tree.examples);
             assert_eq!(star.examples, chain.examples);
             // Per-round leader state is ALSO topology-invariant: the set
@@ -552,7 +573,7 @@ mod tests {
     #[test]
     fn on_round_sees_evolving_sketch_at_every_barrier() {
         let ds = scaled_ds();
-        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let streams = partition_streams(&ds, 3, None);
         let mut seen: Vec<(u64, u64)> = Vec::new();
         let result = run_fleet_with(
@@ -607,7 +628,7 @@ mod tests {
         // One fixed chaotic schedule across all three topologies: the
         // final counters must equal the fault-free one-shot merge, and
         // faults must actually have been injected (non-vacuous chaos).
-        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let (reference, n) = reference_sketch(storm, 99);
         let ds = scaled_ds();
         for topo in [Topology::Star, Topology::Tree { fanout: 2 }, Topology::Chain] {
@@ -617,8 +638,8 @@ mod tests {
             let result = run_fleet(cfg, storm, topo, ds.dim() + 1, 99, streams);
             assert_eq!(result.examples, n, "{topo:?}");
             assert_eq!(
-                result.sketch.grid().data(),
-                reference.grid().data(),
+                result.sketch.grid().counts_u32(),
+                reference.grid().counts_u32(),
                 "{topo:?}: chaos changed the counters"
             );
             assert_eq!(result.sketch.count(), n, "{topo:?}");
@@ -631,7 +652,7 @@ mod tests {
     fn partial_quorum_closes_rounds_and_stays_exact() {
         // min_quorum = 2 of 5 devices: rounds may close before
         // stragglers report, but late deltas still fold exactly once.
-        let storm = StormConfig { rows: 12, power: 3, saturating: true };
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
         let (reference, n) = reference_sketch(storm, 99);
         let ds = scaled_ds();
         let mut cfg = small_fleet_cfg(5, 4);
@@ -640,11 +661,39 @@ mod tests {
         let streams = partition_streams(&ds, 5, None);
         let result = run_fleet(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams);
         assert_eq!(result.examples, n);
-        assert_eq!(result.sketch.grid().data(), reference.grid().data());
+        assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32());
         assert_eq!(result.rounds.len(), 4);
         // The leader count trace is still monotone.
         let counts: Vec<u64> = result.rounds.iter().map(|r| r.leader_count).collect();
         assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+    }
+
+    #[test]
+    fn narrow_device_tier_matches_u32_fleet_exactly() {
+        // u8 devices + u32 leader: the widening merge reproduces the
+        // all-u32 fleet counter-for-counter (the 300-example dataset over
+        // 4 devices never pushes a device cell near 255), while each
+        // device holds a quarter of the counter memory.
+        use crate::config::CounterWidth;
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
+        let (reference, n) = reference_sketch(storm, 99);
+        let ds = scaled_ds();
+        for width in [CounterWidth::U8, CounterWidth::U16] {
+            let mut cfg = small_fleet_cfg(4, 3);
+            cfg.device_counter_width = Some(width);
+            let streams = partition_streams(&ds, 4, None);
+            let result = run_fleet(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams);
+            assert_eq!(result.examples, n, "{width:?}");
+            assert_eq!(result.sketch.grid().width(), CounterWidth::U32, "leader stays wide");
+            assert_eq!(
+                result.sketch.grid().counts_u32(),
+                reference.grid().counts_u32(),
+                "{width:?}: widening merge must be exact"
+            );
+            for d in &result.devices {
+                assert_eq!(d.sketch_bytes, 12 * 8 * width.bytes(), "{width:?}");
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::sketch::storm::StormSketch;
 use crate::sketch::Sketch;
 
 fn build_sketch(ds: &crate::data::dataset::Dataset, rows: usize, power: u32, seed: u64) -> StormSketch {
-    let cfg = StormConfig { rows, power, saturating: true };
+    let cfg = StormConfig { rows, power, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(cfg, ds.dim() + 1, seed);
     for i in 0..ds.len() {
         sk.insert(&ds.augmented(i));

@@ -1,28 +1,39 @@
 //! Energy experiment (Broader Impacts): transmit-energy comparison of
-//! shipping STORM sketches vs shipping raw examples, across stream sizes.
+//! shipping STORM sketches vs shipping raw examples, across stream sizes
+//! — at every counter width. Narrow tiers shrink the dense flush frame
+//! (width-true wire accounting via `serialize::delta_wire_bytes`), so a
+//! `u8` device pays ~a quarter of the `u32` transmit energy per busy
+//! flush on top of the raw-vs-sketch win.
 
-use crate::config::StormConfig;
+use crate::config::{CounterWidth, StormConfig};
 use crate::edge::energy::EnergyModel;
 use crate::metrics::export::Table;
-use crate::sketch::serialize::wire_bytes;
+use crate::sketch::serialize::delta_wire_bytes;
 
 pub fn run() -> Table {
     let model = EnergyModel::default();
-    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
     let d = 21usize; // parkinsons-like feature width
     let flush_every = 256u64; // examples per delta flush
     let mut table = Table::new(
-        "energy: raw-vs-sketch transmit energy (J) vs stream size",
-        &["examples", "raw_joules", "storm_joules", "savings_ratio"],
+        "energy: raw-vs-sketch transmit energy (J) vs stream size, per counter width",
+        &["examples", "width_bytes", "raw_joules", "storm_joules", "savings_ratio"],
     );
-    for exp in [3u32, 4, 5, 6, 7] {
-        let n = 10u64.pow(exp);
-        let raw_bytes = n * (d as u64 + 1) * 8;
-        let flushes = n.div_ceil(flush_every);
-        let sketch_bytes = flushes * wire_bytes(&cfg) as u64;
-        let raw = model.raw_energy(raw_bytes).total();
-        let storm = model.storm_energy(n, sketch_bytes).total();
-        table.push(vec![n as f64, raw, storm, raw / storm]);
+    for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
+        let cfg = StormConfig {
+            rows: 100,
+            power: 4,
+            saturating: true,
+            counter_width: width,
+        };
+        for exp in [3u32, 4, 5, 6, 7] {
+            let n = 10u64.pow(exp);
+            let raw_bytes = n * (d as u64 + 1) * 8;
+            let flushes = n.div_ceil(flush_every);
+            let sketch_bytes = flushes * delta_wire_bytes(&cfg) as u64;
+            let raw = model.raw_energy(raw_bytes).total();
+            let storm = model.storm_energy(n, sketch_bytes).total();
+            table.push(vec![n as f64, width.bytes() as f64, raw, storm, raw / storm]);
+        }
     }
     table
 }
@@ -30,13 +41,37 @@ pub fn run() -> Table {
 #[cfg(test)]
 mod tests {
     #[test]
-    fn savings_grow_with_stream_size() {
+    fn savings_grow_with_stream_size_at_every_width() {
         let t = super::run();
-        let ratios: Vec<f64> = t.rows.iter().map(|r| r[3]).collect();
-        assert!(ratios.windows(2).all(|w| w[1] >= w[0] * 0.99), "{ratios:?}");
-        assert!(
-            *ratios.last().unwrap() > 5.0,
-            "large streams should favor sketching: {ratios:?}"
-        );
+        for width_bytes in [1.0, 2.0, 4.0] {
+            let ratios: Vec<f64> = t
+                .rows
+                .iter()
+                .filter(|r| r[1] == width_bytes)
+                .map(|r| r[4])
+                .collect();
+            assert_eq!(ratios.len(), 5);
+            assert!(ratios.windows(2).all(|w| w[1] >= w[0] * 0.99), "{ratios:?}");
+            assert!(
+                *ratios.last().unwrap() > 5.0,
+                "large streams should favor sketching: {ratios:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn narrow_widths_cost_less_transmit_energy() {
+        // Same stream size, same flush cadence: the u8 tier's flush frame
+        // is ~a quarter of the u32 frame, so its total energy is lower.
+        let t = super::run();
+        let storm_at = |wb: f64| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[1] == wb && r[0] == 1e6)
+                .map(|r| r[3])
+                .unwrap()
+        };
+        assert!(storm_at(1.0) < storm_at(2.0));
+        assert!(storm_at(2.0) < storm_at(4.0));
     }
 }

@@ -27,7 +27,7 @@ pub fn run_fig3a(seed: u64) -> Table {
     // of t only, so a single example suffices and makes the sketch overlay
     // exact in expectation.)
     let dim = 2;
-    let cfg = StormConfig { rows: 500, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 500, power: 4, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(cfg, dim, seed);
     let z = vec![0.95, 0.0];
     sk.insert(&z);

@@ -36,7 +36,7 @@ fn storm_point(
 ) -> (f64, usize) {
     let buckets_bytes = 16 * 4; // p = 4, u32 counters
     let rows = (budget_bytes / buckets_bytes).max(4);
-    let cfg = StormConfig { rows, power: 4, saturating: true };
+    let cfg = StormConfig { rows, power: 4, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(cfg, ds.dim() + 1, seed);
     for i in 0..ds.len() {
         sk.insert(&ds.augmented(i));

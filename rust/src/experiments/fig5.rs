@@ -24,7 +24,7 @@ pub fn run_regression(effort: Effort, seed: u64) -> Table {
     };
     let mut ds = synthetic::synth2d_regression(1000, 0.8, 0.1, 0.05, seed);
     scale_to_unit_ball_quantile(&mut ds, 0.9, 0.9);
-    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(cfg, 3, seed ^ 0xF1F5);
     for i in 0..ds.len() {
         sk.insert(&ds.augmented(i));
@@ -71,7 +71,7 @@ pub fn run_classification(effort: Effort, seed: u64) -> Table {
     if max_norm > 0.0 {
         ds.x.scale(0.9 / max_norm);
     }
-    let cfg = StormConfig { rows: 100, power: 1, saturating: true };
+    let cfg = StormConfig { rows: 100, power: 1, saturating: true, ..Default::default() };
     let mut sk = StormClassifierSketch::new(cfg, 2, seed ^ 0xC1A5);
     let xs: Vec<Vec<f64>> = (0..ds.len()).map(|i| ds.x.row(i).to_vec()).collect();
     for (x, y) in xs.iter().zip(&ds.y) {

@@ -1,10 +1,16 @@
 //! Mergeability experiment: the §1/§6 claim that STORM is a mergeable
-//! summary. Sweeps fleet sizes and topologies, asserting the merged
-//! counters are *identical* to a single-device sketch while measuring the
-//! network traffic and stall profile each topology costs.
+//! summary. Sweeps fleet sizes, topologies and device counter widths,
+//! asserting the merged counters are *identical* to a single-device
+//! sketch while measuring the network traffic and stall profile each
+//! configuration costs. The width sweep exercises the widening-merge
+//! path: narrow (`u8`/`u16`) device tiers folding into `u32`
+//! accumulators, stream sizes capped so no device cell can saturate
+//! (`2 x examples-per-device <= width max`), which makes exactness a
+//! theorem rather than a coincidence.
 
 use super::Effort;
-use crate::config::{FleetConfig, StormConfig};
+use crate::config::{CounterWidth, FleetConfig, StormConfig};
+use crate::data::dataset::Dataset;
 use crate::data::scale::scale_to_unit_ball;
 use crate::data::stream::partition_streams;
 use crate::data::synthetic;
@@ -14,6 +20,16 @@ use crate::metrics::export::Table;
 use crate::sketch::storm::StormSketch;
 use crate::sketch::Sketch;
 
+const TOPOLOGIES: [Topology; 3] = [Topology::Star, Topology::Tree { fanout: 2 }, Topology::Chain];
+
+fn reference_for(ds: &Dataset, storm: StormConfig, family_seed: u64) -> StormSketch {
+    let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
+    for i in 0..ds.len() {
+        reference.insert(&ds.augmented(i));
+    }
+    reference
+}
+
 pub fn run(effort: Effort, seed: u64) -> Table {
     let device_sweep: &[usize] = match effort {
         Effort::Fast => &[1, 2, 4, 8],
@@ -21,52 +37,77 @@ pub fn run(effort: Effort, seed: u64) -> Table {
     };
     let mut ds = synthetic::parkinsons(seed);
     scale_to_unit_ball(&mut ds, 0.9);
-    let storm = StormConfig { rows: 100, power: 4, saturating: true };
+    let storm = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     let family_seed = seed ^ 0x4D45;
-
-    // Single-device reference.
-    let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
-    for i in 0..ds.len() {
-        reference.insert(&ds.augmented(i));
-    }
+    let reference = reference_for(&ds, storm, family_seed);
 
     let mut table = Table::new(
-        "merge: fleet sketch == single-device sketch (0/1), traffic per topology",
-        &["devices", "topology", "identical", "net_bytes", "messages", "stall_ms", "wall_ms"],
+        "merge: fleet sketch == single-device sketch (0/1), traffic per topology/width",
+        &[
+            "devices",
+            "topology",
+            "device_width_bytes",
+            "identical",
+            "net_bytes",
+            "messages",
+            "stall_ms",
+            "wall_ms",
+        ],
     );
+    let push_run = |ds: &Dataset,
+                    reference: &StormSketch,
+                    devices: usize,
+                    tid: usize,
+                    topo: Topology,
+                    width: Option<CounterWidth>,
+                    table: &mut Table| {
+        let fleet = FleetConfig {
+            devices,
+            batch: 64,
+            channel_capacity: 4,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            sync_rounds: 1,
+            min_quorum: 0,
+            faults_seed: None,
+            device_counter_width: width,
+            seed,
+        };
+        let streams = partition_streams(ds, devices, None);
+        let result = run_fleet(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
+        let identical = result.sketch.grid().counts_u32() == reference.grid().counts_u32()
+            && result.sketch.count() == reference.count();
+        table.push(vec![
+            devices as f64,
+            tid as f64,
+            width.unwrap_or(storm.counter_width).bytes() as f64,
+            f64::from(u8::from(identical)),
+            result.network.bytes as f64,
+            result.network.messages as f64,
+            result.network.blocked_ns as f64 / 1e6,
+            result.wall_secs * 1e3,
+        ]);
+    };
+
+    // Device-count sweep at the default (u32) width.
     for &devices in device_sweep {
-        for (tid, topo) in [
-            Topology::Star,
-            Topology::Tree { fanout: 2 },
-            Topology::Chain,
-        ]
-        .into_iter()
-        .enumerate()
-        {
-            let fleet = FleetConfig {
-                devices,
-                batch: 64,
-                channel_capacity: 4,
-                link_latency_us: 0,
-                link_bandwidth_bps: 0,
-                sync_rounds: 1,
-                min_quorum: 0,
-                faults_seed: None,
-                seed,
-            };
-            let streams = partition_streams(&ds, devices, None);
-            let result = run_fleet(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
-            let identical = result.sketch.grid().data() == reference.grid().data()
-                && result.sketch.count() == reference.count();
-            table.push(vec![
-                devices as f64,
-                tid as f64,
-                f64::from(u8::from(identical)),
-                result.network.bytes as f64,
-                result.network.messages as f64,
-                result.network.blocked_ns as f64 / 1e6,
-                result.wall_secs * 1e3,
-            ]);
+        for (tid, topo) in TOPOLOGIES.into_iter().enumerate() {
+            push_run(&ds, &reference, devices, tid, topo, None, &mut table);
+        }
+    }
+
+    // Width sweep: narrow device tiers vs the same u32 accumulator, the
+    // stream capped so a device cell provably cannot saturate (each
+    // insert adds 2 increments per row, so `examples-per-device <=
+    // width_max / 2` bounds every cell below the clip). The u32 leg is
+    // already covered by the device-count sweep above.
+    let devices = 4usize;
+    for width in [CounterWidth::U8, CounterWidth::U16] {
+        let cap = (width.max_value() as usize / 2).saturating_mul(devices).min(ds.len());
+        let sub = ds.subset(&(0..cap).collect::<Vec<_>>(), "merge-width");
+        let sub_reference = reference_for(&sub, storm, family_seed);
+        for (tid, topo) in TOPOLOGIES.into_iter().enumerate() {
+            push_run(&sub, &sub_reference, devices, tid, topo, Some(width), &mut table);
         }
     }
     table
@@ -78,10 +119,19 @@ mod tests {
     fn all_configurations_merge_exactly() {
         let t = super::run(super::Effort::Fast, 5);
         for row in &t.rows {
-            assert_eq!(row[2], 1.0, "devices={} topo={} not identical", row[0], row[1]);
+            assert_eq!(
+                row[3], 1.0,
+                "devices={} topo={} width={} not identical",
+                row[0], row[1], row[2]
+            );
         }
-        // More devices -> at least as much traffic in star topology.
-        let star_rows: Vec<&Vec<f64>> = t.rows.iter().filter(|r| r[1] == 0.0).collect();
-        assert!(star_rows.last().unwrap()[3] >= star_rows[0][3]);
+        // More devices -> at least as much traffic in star topology (the
+        // u32 device-count sweep: the first 12 rows).
+        let star_rows: Vec<&Vec<f64>> = t.rows.iter().take(12).filter(|r| r[1] == 0.0).collect();
+        assert!(star_rows.last().unwrap()[4] >= star_rows[0][4]);
+        // The width sweep actually ran at all three widths.
+        for wb in [1.0, 2.0, 4.0] {
+            assert!(t.rows.iter().any(|r| r[2] == wb), "missing width {wb}");
+        }
     }
 }

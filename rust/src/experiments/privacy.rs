@@ -23,7 +23,7 @@ pub fn run(effort: Effort, seed: u64) -> Table {
     let mut ds = synthetic::synth2d_regression(1000, 0.8, 0.1, 0.03, seed);
     scale_to_unit_ball_quantile(&mut ds, 0.9, 0.9);
     let d = ds.dim();
-    let cfg = StormConfig { rows: 200, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 200, power: 4, saturating: true, ..Default::default() };
 
     let mut table = Table::new(
         format!("privacy: epsilon vs training MSE (mean of {runs} runs; inf = exact sketch)"),

@@ -54,6 +54,11 @@ Run `storm <SUBCOMMAND> --help` for options.",
     );
 }
 
+fn parse_width(s: &str) -> anyhow::Result<storm::config::CounterWidth> {
+    storm::config::CounterWidth::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("counter width must be u8|u16|u32, got {s:?}"))
+}
+
 fn handle_help(parser: &ArgParser, err: ArgError) -> i32 {
     match err {
         ArgError::HelpRequested => {
@@ -72,6 +77,12 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("dataset", Some("airfoil"), "registry dataset name")
         .opt("rows", Some("100"), "sketch rows R")
         .opt("power", Some("4"), "hyperplanes per row p (buckets = 2^p)")
+        .opt("counter-width", Some("u32"), "counter cell width: u8 | u16 | u32")
+        .opt(
+            "device-counter-width",
+            None,
+            "narrower width for DEVICE sketches only (u8 | u16 | u32); merges widen exactly",
+        )
         .opt("devices", Some("4"), "simulated edge devices")
         .opt("sync-rounds", Some("1"), "delta sync rounds (training interleaves between rounds)")
         .opt("min-quorum", Some("0"), "children a barrier waits for (0 = all; stragglers fold late)")
@@ -96,6 +107,10 @@ fn cmd_train(args: &[String]) -> i32 {
         };
         cfg.storm.rows = parsed.get_usize("rows")?;
         cfg.storm.power = parsed.get_usize("power")? as u32;
+        cfg.storm.counter_width = parse_width(&parsed.get_string("counter-width"))?;
+        if let Some(w) = parsed.get("device-counter-width") {
+            cfg.fleet.device_counter_width = Some(parse_width(w)?);
+        }
         cfg.fleet.devices = parsed.get_usize("devices")?;
         cfg.fleet.sync_rounds = parsed.get_usize("sync-rounds")?;
         anyhow::ensure!(cfg.fleet.sync_rounds >= 1, "--sync-rounds must be >= 1");
@@ -136,6 +151,13 @@ fn cmd_train(args: &[String]) -> i32 {
             report.train_wall_secs,
             cfg.optimizer.iters,
             cfg.fleet.sync_rounds,
+        );
+        println!(
+            "memory: leader sketch {} B ({}), per-device sketch {} B ({})",
+            report.sketch_bytes,
+            cfg.storm.counter_width,
+            report.device_sketch_bytes,
+            cfg.fleet.device_counter_width.unwrap_or(cfg.storm.counter_width),
         );
         if report.fault_events > 0 {
             println!(
@@ -221,6 +243,7 @@ fn cmd_sketch(args: &[String]) -> i32 {
         .opt("dataset", Some("airfoil"), "registry dataset name")
         .opt("rows", Some("100"), "sketch rows R")
         .opt("power", Some("4"), "hyperplanes per row")
+        .opt("counter-width", Some("u32"), "counter cell width: u8 | u16 | u32")
         .opt("seed", Some("0"), "hash family seed");
     let parsed = match parser.parse(args.iter().cloned()) {
         Ok(p) => p,
@@ -236,6 +259,7 @@ fn cmd_sketch(args: &[String]) -> i32 {
             rows: parsed.get_usize("rows")?,
             power: parsed.get_usize("power")? as u32,
             saturating: true,
+            counter_width: parse_width(&parsed.get_string("counter-width"))?,
         };
         let mut sk = storm::sketch::storm::StormSketch::new(cfg, ds.dim() + 1, seed);
         let (_, secs) = storm::util::timer::time_it(|| {
@@ -244,18 +268,21 @@ fn cmd_sketch(args: &[String]) -> i32 {
             }
         });
         println!(
-            "dataset={name} n={} d={} | sketch R={} B={} -> {} bytes ({}x compression) | insert {:.1} ex/s",
+            "dataset={name} n={} d={} | sketch R={} B={} @{} -> {} bytes ({}x compression) | insert {:.1} ex/s",
             ds.len(),
             ds.dim(),
             cfg.rows,
             cfg.buckets(),
+            cfg.counter_width,
             sk.bytes(),
             ds.raw_bytes() / sk.bytes().max(1),
             ds.len() as f64 / secs.max(1e-12),
         );
         println!(
-            "wire bytes per delta flush: {}",
-            storm::sketch::serialize::wire_bytes(&cfg)
+            "wire bytes per delta flush: {} (dense ceiling at {}: {})",
+            storm::sketch::serialize::wire_bytes(&cfg),
+            cfg.counter_width,
+            storm::sketch::serialize::delta_wire_bytes(&cfg),
         );
         Ok(0)
     };

@@ -170,7 +170,7 @@ mod tests {
         let mut rng = Xoshiro256::new(3);
         let d = 3;
         let theta_star: Vec<f64> = (0..d).map(|_| rng.uniform_range(-0.4, 0.4)).collect();
-        let cfg = StormConfig { rows: 3000, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 3000, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, d + 1, 5);
         let mut examples = Vec::new();
         for _ in 0..2000 {

@@ -141,7 +141,7 @@ mod tests {
         let mut rng = Xoshiro256::new(seed);
         let d = 3;
         let theta_star = vec![0.3, -0.2, 0.25];
-        let cfg = StormConfig { rows: 150, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 150, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, d + 1, seed);
         for _ in 0..1500 {
             let x: Vec<f64> = (0..d).map(|_| rng.uniform_range(-0.4, 0.4)).collect();

@@ -123,7 +123,7 @@ mod tests {
         use crate::testing::gen_ball_point;
         use crate::util::rng::Xoshiro256;
         let mut rng = Xoshiro256::new(9);
-        let cfg = StormConfig { rows: 200, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 200, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 3, 4);
         for _ in 0..500 {
             sk.insert(&gen_ball_point(&mut rng, 3, 0.9));

@@ -72,7 +72,7 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn sketch_of(data: &[Vec<f64>], seed: u64) -> StormSketch {
-        let cfg = StormConfig { rows: 600, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 600, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 3, seed);
         for z in data {
             sk.insert(z);

@@ -1,35 +1,164 @@
 //! The `R x B` integer counter array underlying every sketch.
 //!
-//! Counters are `u32` — the paper's "tiny array of integer counters" and
-//! the natural edge-device representation (4 bytes/cell; a 100 x 16 STORM
-//! sketch is 6.4 KB). Increments saturate rather than wrap so pathological
-//! streams degrade gracefully instead of corrupting estimates.
+//! Counters are width-generic: a [`CounterGrid`] stores its cells as a
+//! dense `u8`, `u16` or `u32` buffer ([`CounterWidth`]), runtime-selected
+//! so an MCU-class device can hold a 100 x 16 STORM sketch in 1.6 KB of
+//! `u8` cells while an aggregator keeps exact `u32` accumulators (6.4 KB).
+//! The public surface stays monomorphic in `u32`: reads widen, writes
+//! clip at the grid's own width. Increments saturate (at the *native*
+//! width) rather than wrap so pathological streams degrade gracefully
+//! instead of corrupting estimates; cross-width merges widen
+//! narrow-into-wide exactly.
 
-/// A frozen copy of a grid's counters, taken at a sync barrier so the
-/// next round can ship only what changed ([`CounterGrid::delta_since`]).
+pub use crate::config::CounterWidth;
+
+/// One counter cell type. Everything the width-dispatched kernels need:
+/// widening reads, clipping writes, and the two overflow policies at the
+/// native width.
+pub(crate) trait CounterCell: Copy + Default + Eq + std::fmt::Debug + 'static {
+    const MAX_U32: u32;
+    fn to_u32(self) -> u32;
+    /// Truncating cast (mod `2^width`) — the wrapping-policy write.
+    fn from_u32_lossy(v: u32) -> Self;
+
+    /// `self + d` under the grid's overflow policy: clamp to the native
+    /// maximum when saturating, wrap mod `2^width` otherwise.
+    #[inline]
+    fn add_u32(self, d: u32, saturating: bool) -> Self {
+        if saturating {
+            Self::from_u32_lossy(self.to_u32().saturating_add(d).min(Self::MAX_U32))
+        } else {
+            Self::from_u32_lossy(self.to_u32().wrapping_add(d))
+        }
+    }
+}
+
+macro_rules! impl_counter_cell {
+    ($t:ty) => {
+        impl CounterCell for $t {
+            const MAX_U32: u32 = <$t>::MAX as u32;
+            #[inline]
+            fn to_u32(self) -> u32 {
+                self as u32
+            }
+            #[inline]
+            fn from_u32_lossy(v: u32) -> Self {
+                v as $t
+            }
+        }
+    };
+}
+
+impl_counter_cell!(u8);
+impl_counter_cell!(u16);
+impl_counter_cell!(u32);
+
+/// The width-tagged dense buffer behind a grid (and a snapshot). One
+/// enum, three vectors: call sites dispatch once and run a monomorphic
+/// kernel over the native representation — no per-cell boxing, no
+/// per-cell branching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum CounterStore {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+/// Dispatch a generic expression over the store's native cell type.
+/// `$d` binds the `Vec<_>` (by value/ref/mut depending on the matched
+/// binding mode at the call site).
+macro_rules! with_store {
+    ($store:expr, $d:ident => $body:expr) => {
+        match $store {
+            CounterStore::U8($d) => $body,
+            CounterStore::U16($d) => $body,
+            CounterStore::U32($d) => $body,
+        }
+    };
+}
+
+impl CounterStore {
+    fn zeros(width: CounterWidth, len: usize) -> CounterStore {
+        match width {
+            CounterWidth::U8 => CounterStore::U8(vec![0; len]),
+            CounterWidth::U16 => CounterStore::U16(vec![0; len]),
+            CounterWidth::U32 => CounterStore::U32(vec![0; len]),
+        }
+    }
+
+    fn width(&self) -> CounterWidth {
+        match self {
+            CounterStore::U8(_) => CounterWidth::U8,
+            CounterStore::U16(_) => CounterWidth::U16,
+            CounterStore::U32(_) => CounterWidth::U32,
+        }
+    }
+
+    fn len(&self) -> usize {
+        with_store!(self, d => d.len())
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> u32 {
+        with_store!(self, d => d[i].to_u32())
+    }
+
+    /// Widened copy of the whole buffer.
+    fn to_u32_vec(&self) -> Vec<u32> {
+        with_store!(self, d => d.iter().map(|c| c.to_u32()).collect())
+    }
+
+    fn total(&self) -> u64 {
+        with_store!(self, d => d.iter().map(|c| c.to_u32() as u64).sum())
+    }
+}
+
+/// `dst[i] += src[i]` under `dst`'s overflow policy, both at their own
+/// native widths (src is widened per element — exact).
+fn fold_into<D: CounterCell, S: CounterCell>(dst: &mut [D], src: &[S], saturating: bool) {
+    if saturating {
+        for (c, o) in dst.iter_mut().zip(src) {
+            *c = c.add_u32(o.to_u32(), true);
+        }
+    } else {
+        for (c, o) in dst.iter_mut().zip(src) {
+            *c = c.add_u32(o.to_u32(), false);
+        }
+    }
+}
+
+/// A frozen copy of a grid's counters (at the grid's native width),
+/// taken at a sync barrier so the next round can ship only what changed
+/// ([`CounterGrid::delta_since`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct GridSnapshot {
     rows: usize,
     buckets: usize,
-    data: Vec<u32>,
+    store: CounterStore,
 }
 
-/// Dense row-major counter grid.
+/// Dense row-major counter grid at a runtime-selected cell width.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CounterGrid {
     rows: usize,
     buckets: usize,
-    data: Vec<u32>,
+    store: CounterStore,
     saturating: bool,
 }
 
 impl CounterGrid {
+    /// `u32` grid — the seed representation and the wide-accumulator tier.
     pub fn new(rows: usize, buckets: usize, saturating: bool) -> Self {
+        Self::with_width(rows, buckets, saturating, CounterWidth::U32)
+    }
+
+    /// Grid with an explicit cell width.
+    pub fn with_width(rows: usize, buckets: usize, saturating: bool, width: CounterWidth) -> Self {
         assert!(rows > 0 && buckets > 0);
         CounterGrid {
             rows,
             buckets,
-            data: vec![0; rows * buckets],
+            store: CounterStore::zeros(width, rows * buckets),
             saturating,
         }
     }
@@ -42,116 +171,132 @@ impl CounterGrid {
         self.buckets
     }
 
+    /// Native cell width of this grid.
+    pub fn width(&self) -> CounterWidth {
+        self.store.width()
+    }
+
     #[inline]
     pub fn get(&self, row: usize, bucket: usize) -> u32 {
         debug_assert!(row < self.rows && bucket < self.buckets);
-        self.data[row * self.buckets + bucket]
+        self.store.get(row * self.buckets + bucket)
     }
 
     #[inline]
     pub fn increment(&mut self, row: usize, bucket: usize) {
         debug_assert!(row < self.rows && bucket < self.buckets);
-        let cell = &mut self.data[row * self.buckets + bucket];
-        *cell = if self.saturating {
-            cell.saturating_add(1)
-        } else {
-            cell.wrapping_add(1)
-        };
+        let i = row * self.buckets + bucket;
+        let saturating = self.saturating;
+        with_store!(&mut self.store, d => {
+            d[i] = d[i].add_u32(1, saturating);
+        });
     }
 
     /// Add a raw count delta (bulk path: the XLA insert kernel returns a
     /// whole `[R, B]` histogram of a batch which is added in one pass).
-    /// The saturation-policy branch is hoisted outside the loop so each
-    /// arm is a straight-line elementwise pass the compiler can
-    /// autovectorize (a per-element branch defeats that).
+    /// Values are clipped (saturating) or wrapped (non-saturating) at the
+    /// grid's *native* width. The saturation-policy branch is hoisted
+    /// outside the loop (inside [`fold_into`]) so each arm is a
+    /// straight-line elementwise pass the compiler can autovectorize.
     pub fn add_counts(&mut self, delta: &[u32]) {
-        assert_eq!(delta.len(), self.data.len(), "delta shape mismatch");
-        if self.saturating {
-            for (c, d) in self.data.iter_mut().zip(delta) {
-                *c = c.saturating_add(*d);
-            }
-        } else {
-            for (c, d) in self.data.iter_mut().zip(delta) {
-                *c = c.wrapping_add(*d);
-            }
-        }
+        assert_eq!(delta.len(), self.store.len(), "delta shape mismatch");
+        let saturating = self.saturating;
+        with_store!(&mut self.store, d => fold_into(d, delta, saturating));
     }
 
     /// Merge another grid of identical shape (counter-wise addition —
-    /// the mergeable-summary operation). Branch hoisted like
-    /// [`Self::add_counts`].
+    /// the mergeable-summary operation). Widths may differ: a narrow
+    /// grid folds into a wide one *exactly* (the widening merge of the
+    /// fleet aggregation path); a wide grid folding into a narrow one
+    /// clips at the destination width, exactly like local saturation.
     pub fn merge_from(&mut self, other: &CounterGrid) {
         assert_eq!(self.rows, other.rows, "merge: row mismatch");
         assert_eq!(self.buckets, other.buckets, "merge: bucket mismatch");
-        if self.saturating {
-            for (c, o) in self.data.iter_mut().zip(&other.data) {
-                *c = c.saturating_add(*o);
-            }
-        } else {
-            for (c, o) in self.data.iter_mut().zip(&other.data) {
-                *c = c.wrapping_add(*o);
-            }
-        }
+        let saturating = self.saturating;
+        with_store!(&mut self.store, dst => {
+            with_store!(&other.store, src => fold_into(dst, src, saturating));
+        });
     }
 
-    /// Capture the current counter values for later [`Self::delta_since`].
+    /// Capture the current counter values (at native width) for a later
+    /// [`Self::delta_since`].
     pub fn snapshot(&self) -> GridSnapshot {
         GridSnapshot {
             rows: self.rows,
             buckets: self.buckets,
-            data: self.data.clone(),
+            store: self.store.clone(),
         }
     }
 
     /// Counter increments accumulated since `snap` was taken, as a dense
-    /// row-major `R x B` buffer. Counters only grow (inserts and merges
-    /// add), so the elementwise difference is exact; if a saturating
-    /// counter hit `u32::MAX` in between, the clipped increments are lost
-    /// here exactly as they are lost in the grid itself (graceful
-    /// degradation, not corruption).
+    /// row-major `R x B` `u32` buffer (widening is exact — counters only
+    /// grow, so each native-width difference fits its own width). If a
+    /// saturating counter hit its native maximum in between, the clipped
+    /// increments are lost here exactly as they are lost in the grid
+    /// itself (graceful degradation, not corruption).
     pub fn delta_since(&self, snap: &GridSnapshot) -> Vec<u32> {
         assert_eq!(self.rows, snap.rows, "delta_since: row mismatch");
         assert_eq!(self.buckets, snap.buckets, "delta_since: bucket mismatch");
-        self.data
-            .iter()
-            .zip(&snap.data)
-            .map(|(&cur, &old)| cur.wrapping_sub(old))
-            .collect()
+        assert_eq!(self.width(), snap.store.width(), "delta_since: width mismatch");
+        match (&self.store, &snap.store) {
+            (CounterStore::U8(cur), CounterStore::U8(old)) => diff_u32(cur, old),
+            (CounterStore::U16(cur), CounterStore::U16(old)) => diff_u32(cur, old),
+            (CounterStore::U32(cur), CounterStore::U32(old)) => diff_u32(cur, old),
+            _ => unreachable!("width equality asserted above"),
+        }
     }
 
     /// Apply a dense delta produced by [`Self::delta_since`] (or decoded
-    /// from the wire — the v2 decoder materializes sparse runs into a
-    /// dense buffer before applying). Identical arithmetic to
+    /// from the wire — the decoder materializes sparse runs into a dense
+    /// buffer before applying). Identical arithmetic to
     /// [`Self::add_counts`]; the alias exists so the sync-round call
     /// sites read as what they are.
     pub fn apply_delta(&mut self, delta: &[u32]) {
         self.add_counts(delta);
     }
 
-    /// Row slice.
-    pub fn row(&self, r: usize) -> &[u32] {
-        &self.data[r * self.buckets..(r + 1) * self.buckets]
+    /// Row `r`'s counters, widened to `u32`.
+    pub fn row(&self, r: usize) -> Vec<u32> {
+        assert!(r < self.rows);
+        (r * self.buckets..(r + 1) * self.buckets)
+            .map(|i| self.store.get(i))
+            .collect()
     }
 
-    /// Raw buffer (serialization, XLA literal conversion).
-    pub fn data(&self) -> &[u32] {
-        &self.data
+    /// The whole buffer widened to `u32` (serialization, XLA literal
+    /// conversion, cross-width comparison). Allocates; hot kernels
+    /// dispatch on the native store instead (see `sketch::storm`).
+    pub fn counts_u32(&self) -> Vec<u32> {
+        self.store.to_u32_vec()
     }
 
-    pub fn data_mut(&mut self) -> &mut [u32] {
-        &mut self.data
+    /// Native store access for the width-dispatched batch kernels.
+    pub(crate) fn store_mut(&mut self) -> &mut CounterStore {
+        &mut self.store
     }
 
-    /// Counter memory in bytes.
+    /// Counter memory in bytes (width-true: `cells x width.bytes()`).
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<u32>()
+        self.store.len() * self.width().bytes()
     }
 
     /// Total of all counters (diagnostics / tests: equals inserts-per-row
     /// x rows for single-increment sketches, 2x for PRP pairs).
     pub fn total(&self) -> u64 {
-        self.data.iter().map(|&c| c as u64).sum()
+        self.store.total()
     }
+}
+
+/// Elementwise `cur - old` at the native width (mod `2^width`), widened
+/// to `u32`. The truncating cast after the u32 subtraction IS the
+/// native-width modular arithmetic: for a non-saturating narrow grid
+/// whose cell wrapped (250 -> 4 on u8), the delta is 10, not the
+/// 2^32-246 a plain u32 subtraction of widened values would produce.
+fn diff_u32<C: CounterCell>(cur: &[C], old: &[C]) -> Vec<u32> {
+    cur.iter()
+        .zip(old)
+        .map(|(&c, &o)| C::from_u32_lossy(c.to_u32().wrapping_sub(o.to_u32())).to_u32())
+        .collect()
 }
 
 #[cfg(test)]
@@ -168,16 +313,41 @@ mod tests {
         assert_eq!(g.get(1, 3), 1);
         assert_eq!(g.get(0, 0), 0);
         assert_eq!(g.total(), 3);
+        assert_eq!(g.width(), CounterWidth::U32);
     }
 
     #[test]
     fn saturating_does_not_wrap() {
         let mut g = CounterGrid::new(1, 1, true);
-        g.data_mut()[0] = u32::MAX;
+        g.add_counts(&[u32::MAX]);
         g.increment(0, 0);
         assert_eq!(g.get(0, 0), u32::MAX);
         g.add_counts(&[5]);
         assert_eq!(g.get(0, 0), u32::MAX);
+    }
+
+    #[test]
+    fn narrow_widths_saturate_at_their_own_max() {
+        for (width, max) in [(CounterWidth::U8, 255u32), (CounterWidth::U16, 65_535)] {
+            let mut g = CounterGrid::with_width(1, 2, true, width);
+            g.add_counts(&[max - 1, 3]);
+            g.increment(0, 0);
+            assert_eq!(g.get(0, 0), max);
+            g.increment(0, 0); // clipped, not wrapped
+            g.add_counts(&[1_000_000, 0]);
+            assert_eq!(g.get(0, 0), max, "{width:?}");
+            // Neighbour untouched by the saturation.
+            assert_eq!(g.get(0, 1), 3, "{width:?}");
+            assert_eq!(g.bytes(), 2 * width.bytes());
+        }
+    }
+
+    #[test]
+    fn non_saturating_narrow_wraps_mod_width() {
+        let mut g = CounterGrid::with_width(1, 1, false, CounterWidth::U8);
+        g.add_counts(&[250]);
+        g.add_counts(&[10]); // 260 mod 256
+        assert_eq!(g.get(0, 0), 4);
     }
 
     #[test]
@@ -193,35 +363,99 @@ mod tests {
     }
 
     #[test]
+    fn widening_merge_is_exact() {
+        // u8 and u16 grids fold into a u32 accumulator with no clipping.
+        let mut wide = CounterGrid::new(1, 3, true);
+        let mut narrow8 = CounterGrid::with_width(1, 3, true, CounterWidth::U8);
+        narrow8.add_counts(&[200, 0, 7]);
+        let mut narrow16 = CounterGrid::with_width(1, 3, true, CounterWidth::U16);
+        narrow16.add_counts(&[60_000, 2, 0]);
+        wide.merge_from(&narrow8);
+        wide.merge_from(&narrow16);
+        assert_eq!(wide.counts_u32(), vec![60_200, 2, 7]);
+        assert_eq!(wide.width(), CounterWidth::U32);
+    }
+
+    #[test]
+    fn narrowing_merge_clips_like_local_saturation() {
+        let mut narrow = CounterGrid::with_width(1, 2, true, CounterWidth::U8);
+        let mut wide = CounterGrid::new(1, 2, true);
+        wide.add_counts(&[300, 9]);
+        narrow.merge_from(&wide);
+        assert_eq!(narrow.counts_u32(), vec![255, 9]);
+    }
+
+    #[test]
     fn add_counts_bulk_path() {
         let mut g = CounterGrid::new(1, 3, true);
         g.add_counts(&[1, 2, 3]);
         g.add_counts(&[1, 0, 1]);
-        assert_eq!(g.data(), &[2, 2, 4]);
+        assert_eq!(g.counts_u32(), vec![2, 2, 4]);
     }
 
     #[test]
-    fn bytes_accounting() {
-        let g = CounterGrid::new(100, 16, true);
-        assert_eq!(g.bytes(), 6400);
+    fn bytes_accounting_is_width_true() {
+        assert_eq!(CounterGrid::new(100, 16, true).bytes(), 6400);
+        assert_eq!(
+            CounterGrid::with_width(100, 16, true, CounterWidth::U8).bytes(),
+            1600
+        );
+        assert_eq!(
+            CounterGrid::with_width(100, 16, true, CounterWidth::U16).bytes(),
+            3200
+        );
     }
 
     #[test]
     fn delta_since_tracks_only_new_increments() {
-        let mut g = CounterGrid::new(2, 3, true);
-        g.increment(0, 1);
-        g.increment(1, 2);
+        for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
+            let mut g = CounterGrid::with_width(2, 3, true, width);
+            g.increment(0, 1);
+            g.increment(1, 2);
+            let snap = g.snapshot();
+            g.increment(0, 1);
+            g.increment(0, 0);
+            assert_eq!(g.delta_since(&snap), vec![1, 1, 0, 0, 0, 0], "{width:?}");
+            // Applying the delta onto a copy of the snapshot state
+            // reproduces the live grid.
+            let mut replica = CounterGrid::with_width(2, 3, true, width);
+            replica.increment(0, 1);
+            replica.increment(1, 2);
+            replica.apply_delta(&g.delta_since(&snap));
+            assert_eq!(replica, g);
+        }
+    }
+
+    #[test]
+    fn non_saturating_narrow_delta_wraps_at_native_width() {
+        // A wrapped u8 cell (250 + 10 -> 4) must yield the mod-256 delta
+        // of 10 — not the near-u32::MAX value a widened subtraction
+        // would produce (which would overflow the delta's width tag and
+        // poison downstream merges).
+        let mut g = CounterGrid::with_width(1, 2, false, CounterWidth::U8);
+        g.add_counts(&[250, 1]);
         let snap = g.snapshot();
-        g.increment(0, 1);
-        g.increment(0, 0);
-        assert_eq!(g.delta_since(&snap), vec![1, 1, 0, 0, 0, 0]);
-        // Applying the delta onto a copy of the snapshot state reproduces
-        // the live grid.
-        let mut replica = CounterGrid::new(2, 3, true);
-        replica.increment(0, 1);
-        replica.increment(1, 2);
-        replica.apply_delta(&g.delta_since(&snap));
-        assert_eq!(replica.data(), g.data());
+        g.add_counts(&[10, 2]);
+        assert_eq!(g.get(0, 0), 4, "wrapped at 256");
+        assert_eq!(g.delta_since(&snap), vec![10, 2]);
+    }
+
+    #[test]
+    fn saturated_cell_freezes_its_delta_but_not_neighbours() {
+        let mut g = CounterGrid::with_width(1, 3, true, CounterWidth::U8);
+        g.add_counts(&[254, 1, 0]);
+        let snap = g.snapshot();
+        g.add_counts(&[10, 2, 3]); // cell 0 clips at 255
+        let delta = g.delta_since(&snap);
+        assert_eq!(delta, vec![1, 2, 3], "clipped increments are lost, neighbours exact");
+    }
+
+    #[test]
+    fn row_widens() {
+        let mut g = CounterGrid::with_width(2, 2, true, CounterWidth::U8);
+        g.increment(1, 0);
+        assert_eq!(g.row(0), vec![0, 0]);
+        assert_eq!(g.row(1), vec![1, 0]);
     }
 
     #[test]
@@ -229,6 +463,14 @@ mod tests {
     fn delta_since_shape_mismatch_panics() {
         let a = CounterGrid::new(2, 2, true);
         let b = CounterGrid::new(2, 3, true);
+        a.delta_since(&b.snapshot());
+    }
+
+    #[test]
+    #[should_panic]
+    fn delta_since_width_mismatch_panics() {
+        let a = CounterGrid::new(2, 2, true);
+        let b = CounterGrid::with_width(2, 2, true, CounterWidth::U8);
         a.delta_since(&b.snapshot());
     }
 

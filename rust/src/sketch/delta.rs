@@ -14,7 +14,7 @@
 //! [`super::serialize`]; this module is the in-memory algebra.
 
 use super::storm::StormSketch;
-use crate::config::StormConfig;
+use crate::config::{CounterWidth, StormConfig};
 use crate::sketch::Sketch;
 
 /// Frozen device state at a sync barrier: counters + example count.
@@ -33,11 +33,20 @@ impl SketchSnapshot {
 
 /// Counter increments accumulated between two sync barriers, tagged with
 /// the sync round (`epoch`) they belong to.
+///
+/// Increments are held as `u32` in memory regardless of the source
+/// grid's width — every value is guaranteed to fit `width` (deltas are
+/// exact differences of native-width counters), and `width` names the
+/// narrowest wire representation the delta can ship at. Folding deltas
+/// ([`Self::absorb`]) *widens* when sums outgrow the tag: a pool of u8
+/// device rounds whose total crosses 255 re-ships as u16 — narrow-to-wide
+/// aggregation is exact, saturation only ever happens device-local.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SketchDelta {
     /// Sync round this delta belongs to.
     pub epoch: u64,
-    /// Sketch geometry (must match fleet-wide; applying enforces it).
+    /// Sketch geometry (must be merge-compatible fleet-wide; applying
+    /// enforces it — see [`StormConfig::merge_compatible`]).
     pub cfg: StormConfig,
     /// Augmented example dimension (d + 1).
     pub dim: usize,
@@ -45,7 +54,9 @@ pub struct SketchDelta {
     pub seed: u64,
     /// Examples inserted within this delta.
     pub count: u64,
-    /// Dense row-major `R x B` counter increments.
+    /// Narrowest counter width holding every increment (wire width).
+    pub width: CounterWidth,
+    /// Dense row-major `R x B` counter increments (each `<= width.max_value()`).
     pub counts: Vec<u32>,
 }
 
@@ -58,6 +69,7 @@ impl SketchDelta {
             dim,
             seed,
             count: 0,
+            width: cfg.counter_width,
             counts: vec![0; cfg.rows * cfg.buckets()],
         }
     }
@@ -109,20 +121,29 @@ impl SketchDelta {
     /// epochs, so the re-shipped frame's `(from, epoch)` dedup key is
     /// one the receiver has never folded.
     pub fn absorb(&mut self, other: &SketchDelta) {
-        assert_eq!(self.cfg, other.cfg, "delta merge: config mismatch");
+        assert!(self.cfg.merge_compatible(&other.cfg), "delta merge: config mismatch");
         assert_eq!(self.seed, other.seed, "delta merge: seed mismatch");
         assert_eq!(self.dim, other.dim, "delta merge: dim mismatch");
         assert_eq!(self.counts.len(), other.counts.len(), "delta merge: shape mismatch");
         self.epoch = self.epoch.max(other.epoch);
+        let mut max_cell = 0u32;
         if self.cfg.saturating {
             for (c, o) in self.counts.iter_mut().zip(&other.counts) {
                 *c = c.saturating_add(*o);
+                max_cell = max_cell.max(*c);
             }
         } else {
             for (c, o) in self.counts.iter_mut().zip(&other.counts) {
                 *c = c.wrapping_add(*o);
+                max_cell = max_cell.max(*c);
             }
         }
+        // Widening fold: never narrower than either operand, and wide
+        // enough to carry every summed increment on the wire losslessly.
+        self.width = self
+            .width
+            .max(other.width)
+            .max(CounterWidth::fitting(max_cell));
         self.count += other.count;
     }
 }
@@ -146,6 +167,8 @@ impl StormSketch {
     }
 
     /// The increments accumulated since `snap`, tagged with `epoch`.
+    /// Shipped at the device grid's native width — exact, since each
+    /// increment is a difference of two native-width counter values.
     pub fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta {
         SketchDelta {
             epoch,
@@ -153,15 +176,21 @@ impl StormSketch {
             dim: self.dim(),
             seed: self.seed(),
             count: self.count() - snap.count,
+            width: self.config().counter_width,
             counts: self.grid().delta_since(&snap.grid),
         }
     }
 
     /// Apply a delta (merge of a remote device's round increments).
     /// Geometry, seed and dimension must match — the same compatibility
-    /// contract as [`Sketch::merge_from`].
+    /// contract as [`Sketch::merge_from`]; widths may differ (a narrow
+    /// device delta folds into a wide accumulator exactly — the widening
+    /// merge of the fleet protocol).
     pub fn apply_delta(&mut self, delta: &SketchDelta) {
-        assert_eq!(self.config(), delta.cfg, "apply_delta: config mismatch");
+        assert!(
+            self.config().merge_compatible(&delta.cfg),
+            "apply_delta: config mismatch"
+        );
         assert_eq!(self.seed(), delta.seed, "apply_delta: seed mismatch");
         assert_eq!(self.dim(), delta.dim, "apply_delta: dim mismatch");
         let (grid, count) = self.parts_mut();
@@ -185,7 +214,7 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn cfg() -> StormConfig {
-        StormConfig { rows: 10, power: 3, saturating: true }
+        StormConfig { rows: 10, power: 3, saturating: true, ..Default::default() }
     }
 
     fn insert_n(sk: &mut StormSketch, rng: &mut Xoshiro256, n: usize) {
@@ -208,7 +237,7 @@ mod tests {
             leader.apply_delta(&delta);
             snap = device.snapshot();
         }
-        assert_eq!(leader.grid().data(), device.grid().data());
+        assert_eq!(leader.grid().counts_u32(), device.grid().counts_u32());
         assert_eq!(leader.count(), device.count());
     }
 
@@ -231,7 +260,7 @@ mod tests {
         folded.merge_from(&db);
         let mut leader2 = StormSketch::new(cfg(), 3, 9);
         leader2.apply_delta(&folded);
-        assert_eq!(leader1.grid().data(), leader2.grid().data());
+        assert_eq!(leader1.grid().counts_u32(), leader2.grid().counts_u32());
         assert_eq!(leader1.count(), leader2.count());
         assert_eq!(folded.count, 42);
     }
@@ -285,6 +314,61 @@ mod tests {
         let older = SketchDelta::empty(1, cfg(), 3, 4);
         newer.absorb(&older);
         assert_eq!(newer.epoch, 9);
+    }
+
+    #[test]
+    fn absorb_widens_when_sums_outgrow_the_tag() {
+        // Two u8 device rounds whose pooled increments cross 255 re-ship
+        // as u16 — the width tag always holds every value losslessly.
+        let narrow_cfg = StormConfig {
+            counter_width: crate::config::CounterWidth::U8,
+            ..cfg()
+        };
+        let mut a = SketchDelta::empty(0, narrow_cfg, 3, 4);
+        a.counts[0] = 200;
+        a.count = 1;
+        let mut b = SketchDelta::empty(1, narrow_cfg, 3, 4);
+        b.counts[0] = 100;
+        b.count = 1;
+        assert_eq!(a.width, crate::config::CounterWidth::U8);
+        a.absorb(&b);
+        assert_eq!(a.counts[0], 300);
+        assert_eq!(a.width, crate::config::CounterWidth::U16);
+        // Width never narrows below an operand even when values are small.
+        let mut wide = SketchDelta::empty(2, cfg(), 3, 4);
+        wide.counts[1] = 1;
+        let mut tiny = SketchDelta::empty(3, narrow_cfg, 3, 4);
+        tiny.counts[1] = 1;
+        wide.absorb(&tiny);
+        assert_eq!(wide.width, crate::config::CounterWidth::U32);
+    }
+
+    #[test]
+    fn narrow_device_delta_folds_exactly_into_wide_leader() {
+        // The widening-merge contract at the delta level: a u8 device's
+        // rounds applied to a u32 leader reproduce the u32 run exactly.
+        let narrow_cfg = StormConfig {
+            counter_width: crate::config::CounterWidth::U8,
+            ..cfg()
+        };
+        let mut rng = Xoshiro256::new(17);
+        let mut device = StormSketch::new(narrow_cfg, 4, 42);
+        let mut wide_ref = StormSketch::new(cfg(), 4, 42);
+        let mut leader = StormSketch::new(cfg(), 4, 42);
+        let mut snap = device.snapshot();
+        for epoch in 0..3u64 {
+            for _ in 0..9 {
+                let z = gen_ball_point(&mut rng, 4, 0.9);
+                device.insert(&z);
+                wide_ref.insert(&z);
+            }
+            let delta = device.delta_since(&snap, epoch);
+            assert_eq!(delta.width, crate::config::CounterWidth::U8);
+            leader.apply_delta(&delta);
+            snap = device.snapshot();
+        }
+        assert_eq!(leader.grid().counts_u32(), wide_ref.grid().counts_u32());
+        assert_eq!(leader.count(), wide_ref.count());
     }
 
     #[test]

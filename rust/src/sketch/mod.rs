@@ -1,7 +1,9 @@
 //! Count sketches for risk estimation.
 //!
-//! * [`counters`] — the underlying `R x B` integer counter array with
-//!   saturating arithmetic and signed-delta merging;
+//! * [`counters`] — the underlying `R x B` integer counter array:
+//!   width-generic (`u8`/`u16`/`u32` cells, see
+//!   [`crate::config::CounterWidth`]) with native-width saturating
+//!   arithmetic and exact narrow-into-wide merging;
 //! * [`race`] — the symmetric RACE sketch (Coleman & Shrivastava): KDE
 //!   estimates for any LSH family with a closed-form collision
 //!   probability;

@@ -32,9 +32,9 @@ impl PrivateStormRelease {
         let scale = sensitivity / epsilon;
         let mut rng = Xoshiro256::new(noise_seed);
         let counts: Vec<f64> = grid
-            .data()
-            .iter()
-            .map(|&c| c as f64 + rng.laplace(scale))
+            .counts_u32()
+            .into_iter()
+            .map(|c| c as f64 + rng.laplace(scale))
             .collect();
         PrivateStormRelease {
             counts,
@@ -97,7 +97,7 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn filled_sketch(rows: usize, seed: u64) -> (StormSketch, Vec<Vec<f64>>) {
-        let cfg = StormConfig { rows, power: 4, saturating: true };
+        let cfg = StormConfig { rows, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 4, seed);
         let mut rng = Xoshiro256::new(99);
         let data: Vec<Vec<f64>> = (0..400).map(|_| gen_ball_point(&mut rng, 4, 0.9)).collect();
@@ -126,8 +126,8 @@ mod tests {
         let dev = |rel: &PrivateStormRelease| -> f64 {
             rel.counts()
                 .iter()
-                .zip(sk.parts().0.data())
-                .map(|(n, &c)| (n - c as f64).abs())
+                .zip(sk.parts().0.counts_u32())
+                .map(|(n, c)| (n - c as f64).abs())
                 .sum::<f64>()
                 / rel.counts().len() as f64
         };
@@ -137,9 +137,9 @@ mod tests {
     #[test]
     fn release_does_not_mutate_source() {
         let (mut sk, _) = filled_sketch(50, 8);
-        let before = sk.grid().data().to_vec();
+        let before = sk.grid().counts_u32();
         let _ = PrivateStormRelease::release(&sk, 1.0, 3);
-        assert_eq!(sk.grid().data(), &before[..]);
+        assert_eq!(sk.grid().counts_u32(), &before[..]);
         // Device keeps streaming afterwards.
         sk.insert(&[0.1, 0.1, 0.1, 0.1]);
         assert_eq!(sk.count(), 401);

@@ -7,7 +7,7 @@
 //! `sum_i k(q, x_i)` where `k` is the family's collision probability —
 //! the kernel density estimate STORM generalizes.
 
-use super::counters::CounterGrid;
+use super::counters::{CounterGrid, CounterWidth};
 use super::Sketch;
 use crate::lsh::srp::SignedRandomProjection;
 use crate::lsh::LshFunction;
@@ -21,8 +21,20 @@ pub struct RaceSketch {
 }
 
 impl RaceSketch {
-    /// Build from per-row hash functions (must share dim and range).
+    /// Build from per-row hash functions (must share dim and range),
+    /// with `u32` counters.
     pub fn from_hashes(hashes: Vec<Box<dyn LshFunction>>, saturating: bool) -> Self {
+        Self::from_hashes_with_width(hashes, saturating, CounterWidth::U32)
+    }
+
+    /// [`Self::from_hashes`] at an explicit counter width — the same
+    /// narrow-tier storage knob as the STORM sketch (KDE counts clip at
+    /// the native maximum; merges widen narrow-into-wide exactly).
+    pub fn from_hashes_with_width(
+        hashes: Vec<Box<dyn LshFunction>>,
+        saturating: bool,
+        width: CounterWidth,
+    ) -> Self {
         assert!(!hashes.is_empty());
         let dim = hashes[0].dim();
         let range = hashes[0].range();
@@ -31,15 +43,15 @@ impl RaceSketch {
             assert_eq!(h.range(), range, "all rows must share bucket range");
         }
         RaceSketch {
-            grid: CounterGrid::new(hashes.len(), range, saturating),
+            grid: CounterGrid::with_width(hashes.len(), range, saturating, width),
             hashes,
             count: 0,
             dim,
         }
     }
 
-    /// Convenience: R rows of p-bit SRP, seeds derived from `seed`.
-    pub fn srp(rows: usize, dim: usize, p: u32, seed: u64) -> Self {
+    /// Convenience: R rows of p-bit SRP at an explicit counter width.
+    pub fn srp_with_width(rows: usize, dim: usize, p: u32, seed: u64, width: CounterWidth) -> Self {
         let hashes: Vec<Box<dyn LshFunction>> = (0..rows)
             .map(|r| {
                 Box::new(SignedRandomProjection::new(
@@ -49,7 +61,12 @@ impl RaceSketch {
                 )) as Box<dyn LshFunction>
             })
             .collect();
-        RaceSketch::from_hashes(hashes, true)
+        RaceSketch::from_hashes_with_width(hashes, true, width)
+    }
+
+    /// Convenience: R rows of p-bit SRP, seeds derived from `seed`.
+    pub fn srp(rows: usize, dim: usize, p: u32, seed: u64) -> Self {
+        Self::srp_with_width(rows, dim, p, seed, CounterWidth::U32)
     }
 
     pub fn rows(&self) -> usize {
@@ -154,7 +171,7 @@ mod tests {
             s_union.insert(x);
         }
         s1.merge_from(&s2);
-        assert_eq!(s1.grid().data(), s_union.grid().data());
+        assert_eq!(s1.grid().counts_u32(), s_union.grid().counts_u32());
         assert_eq!(s1.count(), s_union.count());
     }
 
@@ -182,5 +199,27 @@ mod tests {
     fn bytes_matches_grid() {
         let sk = RaceSketch::srp(10, 3, 4, 0);
         assert_eq!(sk.bytes(), 10 * 16 * 4);
+    }
+
+    #[test]
+    fn narrow_width_race_matches_u32_and_quarters_memory() {
+        // Same seeds, same stream: u8 and u32 RACE sketches hold the
+        // same counts (33 inserts can't clip a u8 cell) at 1/4 the
+        // bytes, and the narrow sketch folds into the wide one exactly.
+        let mut narrow = RaceSketch::srp_with_width(7, 2, 3, 1, CounterWidth::U8);
+        let mut wide = RaceSketch::srp(7, 2, 3, 1);
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..33 {
+            let x = gen_ball_point(&mut rng, 2, 1.0);
+            narrow.insert(&x);
+            wide.insert(&x);
+        }
+        assert_eq!(narrow.grid().counts_u32(), wide.grid().counts_u32());
+        assert_eq!(narrow.grid().width(), CounterWidth::U8);
+        assert_eq!(narrow.bytes() * 4, wide.bytes());
+        wide.merge_from(&narrow);
+        assert_eq!(wide.count(), 66);
+        let doubled: Vec<u32> = narrow.grid().counts_u32().iter().map(|c| c * 2).collect();
+        assert_eq!(wide.grid().counts_u32(), doubled);
     }
 }

@@ -27,13 +27,32 @@
 //! crc     u32   (FNV-1a over everything above)
 //! ```
 //!
+//! **v3** (width-tagged delta — the narrow-counter tiers): same 32-byte
+//! header with `version = 3`, then
+//!
+//! ```text
+//! epoch   u64
+//! width   u8    (bytes per counter cell: 1 | 2 | 4)
+//! flags   u8    (0 = dense, 1 = sparse)
+//! payload
+//!   dense : rows * 2^power cells at the NATIVE width (1/2/4 bytes each)
+//!   sparse: varint ncells, then ncells x (varint gap, varint count)
+//! crc     u32   (FNV-1a over everything above)
+//! ```
+//!
 //! Sparse cells are LEB128 varint runs over ascending row-major indices:
 //! the first gap is the absolute index, each subsequent gap is the
 //! distance to the previous index (>= 1); counts are >= 1. The encoder
 //! goes sparse when at most half the cells changed and falls back to the
 //! dense layout otherwise, so a worst-case delta never costs more than
-//! ~the v1 counter block. Decoding accepts both versions everywhere
-//! (a v1 frame is read as an epoch-0 dense delta).
+//! ~the v1 counter block. Varint runs are width-agnostic; the v3 width
+//! byte makes the *dense* fallback cost its native `cells x width` bytes
+//! and lets the decoder bounds-check every run value against the
+//! declared width (a frame claiming `u8` cells cannot smuggle a count
+//! of 300). Decoding accepts all three versions everywhere: v1 is read
+//! as an epoch-0 dense `u32` delta, v2 as a `u32` delta — so [`encode_delta`]
+//! emits v2 for `u32` deltas (bit-identical to the pre-width wire) and
+//! v3 only for narrow widths.
 //!
 //! The hash-family *seed* travels with the counts so a receiver can verify
 //! it merges compatible sketches; the hyperplanes themselves are
@@ -41,11 +60,12 @@
 
 use super::delta::SketchDelta;
 use super::storm::StormSketch;
-use crate::config::StormConfig;
+use crate::config::{CounterWidth, StormConfig};
 
 const MAGIC: u32 = 0x53544F52;
 const VERSION_DENSE: u16 = 1;
 const VERSION_DELTA: u16 = 2;
+const VERSION_WIDTH: u16 = 3;
 
 const FLAG_DENSE: u8 = 0;
 const FLAG_SPARSE: u8 = 1;
@@ -54,6 +74,8 @@ const FLAG_SPARSE: u8 = 1;
 const HEADER: usize = 4 + 2 + 2 + 4 + 4 + 8 + 8;
 /// v2 extends the header with epoch (u64) + flags (u8).
 const HEADER_V2: usize = HEADER + 8 + 1;
+/// v3 extends the header with epoch (u64) + width (u8) + flags (u8).
+const HEADER_V3: usize = HEADER + 8 + 1 + 1;
 
 /// Hard ceiling on decoded cell counts: headers are CRC-protected but not
 /// trusted for allocation — a frame claiming more cells than any real
@@ -73,8 +95,23 @@ pub enum WireError {
     BadChecksum { got: u32, want: u32 },
     #[error("inconsistent header (rows={rows}, power={power})")]
     BadHeader { rows: u32, power: u16 },
+    #[error("bad counter width byte {0} (expected 1, 2 or 4)")]
+    BadWidth(u8),
     #[error("malformed payload: {0}")]
     BadPayload(&'static str),
+}
+
+fn width_to_byte(w: CounterWidth) -> u8 {
+    w.bytes() as u8
+}
+
+fn width_from_byte(b: u8) -> Result<CounterWidth, WireError> {
+    match b {
+        1 => Ok(CounterWidth::U8),
+        2 => Ok(CounterWidth::U16),
+        4 => Ok(CounterWidth::U32),
+        other => Err(WireError::BadWidth(other)),
+    }
 }
 
 fn fnv1a(bytes: &[u8]) -> u32 {
@@ -140,7 +177,7 @@ pub fn encode(sketch: &StormSketch) -> Vec<u8> {
     let cfg = sketch.config();
     let mut out = Vec::with_capacity(HEADER + grid.bytes() + 4);
     put_header(&mut out, VERSION_DENSE, &cfg, sketch.dim(), sketch.seed(), count);
-    for &c in grid.data() {
+    for c in grid.counts_u32() {
         out.extend_from_slice(&c.to_le_bytes());
     }
     let crc = fnv1a(&out);
@@ -148,19 +185,43 @@ pub fn encode(sketch: &StormSketch) -> Vec<u8> {
     out
 }
 
-/// Encode an epoch-tagged delta into the v2 wire format: sparse varint
-/// runs when at most half the cells changed, dense counters otherwise.
+/// Encode an epoch-tagged delta: sparse varint runs when at most half
+/// the cells changed, dense counters otherwise. `u32` deltas ship as v2
+/// frames — byte-identical to the pre-width wire format — and narrow
+/// (`u8`/`u16`) deltas as width-tagged v3 frames whose dense fallback
+/// costs only `cells x width` payload bytes.
 pub fn encode_delta(delta: &SketchDelta) -> Vec<u8> {
+    if delta.width == CounterWidth::U32 {
+        encode_delta_version(delta, VERSION_DELTA)
+    } else {
+        encode_delta_version(delta, VERSION_WIDTH)
+    }
+}
+
+/// Encode a delta as an explicit v3 frame regardless of width (the
+/// golden-fixture tests pin the v3 layout at every width with this).
+pub fn encode_delta_v3(delta: &SketchDelta) -> Vec<u8> {
+    encode_delta_version(delta, VERSION_WIDTH)
+}
+
+fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
+    let width = delta.width;
     let sparse = delta.populated_fraction() <= 0.5;
-    let mut out = Vec::with_capacity(HEADER_V2 + 4 + if sparse { 0 } else { delta.counts.len() * 4 });
-    put_header(&mut out, VERSION_DELTA, &delta.cfg, delta.dim, delta.seed, delta.count);
+    let header = if version == VERSION_WIDTH { HEADER_V3 } else { HEADER_V2 };
+    let mut out =
+        Vec::with_capacity(header + 4 + if sparse { 0 } else { delta.counts.len() * width.bytes() });
+    put_header(&mut out, version, &delta.cfg, delta.dim, delta.seed, delta.count);
     out.extend_from_slice(&delta.epoch.to_le_bytes());
+    if version == VERSION_WIDTH {
+        out.push(width_to_byte(width));
+    }
     if sparse {
         out.push(FLAG_SPARSE);
         let cells = delta.sparse_cells();
         put_varint(&mut out, cells.len() as u64);
         let mut prev: Option<u32> = None;
         for (idx, cnt) in cells {
+            debug_assert!(cnt <= width.max_value(), "delta value outgrew its width tag");
             let gap = match prev {
                 None => idx as u64,
                 Some(p) => (idx - p) as u64,
@@ -172,7 +233,15 @@ pub fn encode_delta(delta: &SketchDelta) -> Vec<u8> {
     } else {
         out.push(FLAG_DENSE);
         for &c in &delta.counts {
-            out.extend_from_slice(&c.to_le_bytes());
+            debug_assert!(c <= width.max_value(), "delta value outgrew its width tag");
+            match (version, width) {
+                (VERSION_WIDTH, CounterWidth::U8) => out.push(c as u8),
+                (VERSION_WIDTH, CounterWidth::U16) => {
+                    out.extend_from_slice(&(c as u16).to_le_bytes())
+                }
+                // v2 frames (and v3-at-u32) carry full u32 cells.
+                _ => out.extend_from_slice(&c.to_le_bytes()),
+            }
         }
     }
     let crc = fnv1a(&out);
@@ -180,10 +249,12 @@ pub fn encode_delta(delta: &SketchDelta) -> Vec<u8> {
     out
 }
 
-/// Decode a wire buffer into an epoch-tagged delta. Accepts v2 frames and,
-/// backward-compatibly, v1 full-sketch frames (read as an epoch-0 dense
-/// delta). Every length, index and count is validated — corrupt input
-/// yields a [`WireError`], never a panic.
+/// Decode a wire buffer into an epoch-tagged delta. Accepts width-tagged
+/// v3 frames, v2 frames (read as `u32`) and, backward-compatibly, v1
+/// full-sketch frames (read as an epoch-0 dense `u32` delta). Every
+/// length, index, count and width byte is validated — corrupt input
+/// yields a [`WireError`], never a panic; a sparse run value the
+/// declared width cannot hold is rejected, not clipped.
 pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
     if bytes.len() < HEADER + 4 {
         return Err(WireError::Truncated(bytes.len()));
@@ -199,7 +270,7 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
         return Err(WireError::BadMagic(magic));
     }
     let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
-    if version != VERSION_DENSE && version != VERSION_DELTA {
+    if version != VERSION_DENSE && version != VERSION_DELTA && version != VERSION_WIDTH {
         return Err(WireError::BadVersion(version));
     }
     let power = u16::from_le_bytes(bytes[6..8].try_into().unwrap());
@@ -215,26 +286,46 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
     if cells > MAX_CELLS {
         return Err(WireError::BadHeader { rows, power });
     }
-    let cfg = StormConfig { rows: rows as usize, power: power as u32, saturating: true };
-
-    let (epoch, flags, payload) = if version == VERSION_DENSE {
-        (0u64, FLAG_DENSE, &body[HEADER..])
-    } else {
-        if body.len() < HEADER_V2 {
-            return Err(WireError::Truncated(bytes.len()));
+    // v1/v2 frames predate the width byte: they are u32 by definition.
+    let (epoch, width, flags, payload) = match version {
+        VERSION_DENSE => (0u64, CounterWidth::U32, FLAG_DENSE, &body[HEADER..]),
+        VERSION_DELTA => {
+            if body.len() < HEADER_V2 {
+                return Err(WireError::Truncated(bytes.len()));
+            }
+            let epoch = u64::from_le_bytes(body[HEADER..HEADER + 8].try_into().unwrap());
+            (epoch, CounterWidth::U32, body[HEADER + 8], &body[HEADER_V2..])
         }
-        let epoch = u64::from_le_bytes(body[HEADER..HEADER + 8].try_into().unwrap());
-        (epoch, body[HEADER + 8], &body[HEADER_V2..])
+        _ => {
+            if body.len() < HEADER_V3 {
+                return Err(WireError::Truncated(bytes.len()));
+            }
+            let epoch = u64::from_le_bytes(body[HEADER..HEADER + 8].try_into().unwrap());
+            let width = width_from_byte(body[HEADER + 8])?;
+            (epoch, width, body[HEADER + 9], &body[HEADER_V3..])
+        }
+    };
+    let cfg = StormConfig {
+        rows: rows as usize,
+        power: power as u32,
+        saturating: true,
+        counter_width: width,
     };
 
     let counts = match flags {
         FLAG_DENSE => {
-            if payload.len() != cells * 4 {
+            let cell_bytes = if version == VERSION_WIDTH { width.bytes() } else { 4 };
+            if payload.len() != cells * cell_bytes {
                 return Err(WireError::Truncated(bytes.len()));
             }
             let mut counts = vec![0u32; cells];
             for (i, cell) in counts.iter_mut().enumerate() {
-                *cell = u32::from_le_bytes(payload[i * 4..i * 4 + 4].try_into().unwrap());
+                let at = i * cell_bytes;
+                *cell = match cell_bytes {
+                    1 => payload[at] as u32,
+                    2 => u16::from_le_bytes(payload[at..at + 2].try_into().unwrap()) as u32,
+                    _ => u32::from_le_bytes(payload[at..at + 4].try_into().unwrap()),
+                };
             }
             counts
         }
@@ -261,6 +352,11 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
                 if cnt == 0 || cnt > u32::MAX as u64 {
                     return Err(WireError::BadPayload("sparse count out of range"));
                 }
+                // Bounds-checked narrowing: a run value the declared
+                // width cannot hold is a lying frame, not a clip.
+                if cnt > width.max_value() as u64 {
+                    return Err(WireError::BadPayload("sparse count exceeds declared width"));
+                }
                 counts[idx as usize] = cnt as u32;
             }
             if pos != payload.len() {
@@ -277,21 +373,36 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
         dim: dim as usize,
         seed,
         count,
+        width,
         counts,
     })
 }
 
 /// Decode a wire buffer back into a full sketch (rebuilding the hash
-/// family from the embedded seed). Accepts v1 and v2 frames.
+/// family from the embedded seed). Accepts v1, v2 and v3 frames; a v3
+/// frame yields a sketch at the frame's native counter width.
 pub fn decode(bytes: &[u8]) -> Result<StormSketch, WireError> {
     let delta = decode_delta(bytes)?;
     Ok(StormSketch::from_delta(&delta))
 }
 
 /// Dense (v1) wire size in bytes for a given configuration — the
-/// network-cost ceiling a sparse v2 delta is measured against.
+/// network-cost ceiling a sparse v2 delta is measured against. v1 cells
+/// are always `u32`, whatever the in-memory width.
 pub fn wire_bytes(cfg: &StormConfig) -> usize {
     HEADER + cfg.rows * cfg.buckets() * 4 + 4
+}
+
+/// Worst-case (dense-fallback) delta frame size for a configuration at
+/// its native counter width: the per-round wire ceiling a narrow-tier
+/// device pays on a busy round. `u32` configs ship v2 frames, narrow
+/// configs v3 frames with native-width dense cells.
+pub fn delta_wire_bytes(cfg: &StormConfig) -> usize {
+    let cells = cfg.rows * cfg.buckets();
+    match cfg.counter_width {
+        CounterWidth::U32 => HEADER_V2 + cells * 4 + 4,
+        w => HEADER_V3 + cells * w.bytes() + 4,
+    }
 }
 
 #[cfg(test)]
@@ -302,7 +413,7 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn sample_sketch() -> StormSketch {
-        let cfg = StormConfig { rows: 20, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 20, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 5, 77);
         let mut rng = Xoshiro256::new(3);
         for _ in 0..120 {
@@ -314,7 +425,7 @@ mod tests {
 
     fn sparse_delta() -> SketchDelta {
         // 3 inserts into a 20 x 16 grid touch <= 120 of 320 cells.
-        let cfg = StormConfig { rows: 20, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 20, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 5, 77);
         let mut rng = Xoshiro256::new(9);
         let snap = sk.snapshot();
@@ -339,7 +450,7 @@ mod tests {
         let bytes = encode(&sk);
         assert_eq!(bytes.len(), wire_bytes(&sk.config()));
         let back = decode(&bytes).unwrap();
-        assert_eq!(back.grid().data(), sk.grid().data());
+        assert_eq!(back.grid().counts_u32(), sk.grid().counts_u32());
         assert_eq!(back.count(), sk.count());
         assert_eq!(back.seed(), sk.seed());
         assert_eq!(back.dim(), sk.dim());
@@ -372,7 +483,7 @@ mod tests {
     #[test]
     fn delta_roundtrip_dense_fallback() {
         // Saturate the grid: a tiny 1 x 2^1 sketch where every cell is hit.
-        let cfg = StormConfig { rows: 2, power: 1, saturating: true };
+        let cfg = StormConfig { rows: 2, power: 1, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 3, 5);
         let snap = sk.snapshot();
         let mut rng = Xoshiro256::new(11);
@@ -385,6 +496,96 @@ mod tests {
         assert_eq!(bytes[HEADER + 8], FLAG_DENSE);
         let back = decode_delta(&bytes).unwrap();
         assert_eq!(back, delta);
+    }
+
+    /// A narrow-width sketch's round delta (u8/u16 devices emit these).
+    fn narrow_delta(width: CounterWidth, inserts: usize) -> SketchDelta {
+        let cfg = StormConfig {
+            rows: 20,
+            power: 4,
+            saturating: true,
+            counter_width: width,
+        };
+        let mut sk = StormSketch::new(cfg, 5, 77);
+        let snap = sk.snapshot();
+        let mut rng = Xoshiro256::new(9);
+        for _ in 0..inserts {
+            sk.insert(&gen_ball_point(&mut rng, 5, 0.9));
+        }
+        sk.delta_since(&snap, 7)
+    }
+
+    #[test]
+    fn narrow_delta_roundtrips_as_v3_at_every_width() {
+        for width in [CounterWidth::U8, CounterWidth::U16] {
+            // Sparse regime.
+            let sparse = narrow_delta(width, 3);
+            assert!(sparse.populated_fraction() <= 0.5);
+            let bytes = encode_delta(&sparse);
+            assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 3, "{width:?}");
+            assert_eq!(bytes[HEADER + 8], width.bytes() as u8);
+            assert_eq!(bytes[HEADER + 9], FLAG_SPARSE);
+            assert_eq!(decode_delta(&bytes).unwrap(), sparse, "{width:?}");
+            // Dense regime: native-width cells on the wire.
+            let dense = narrow_delta(width, 80);
+            assert!(dense.populated_fraction() > 0.5);
+            let bytes = encode_delta(&dense);
+            assert_eq!(bytes[HEADER + 9], FLAG_DENSE);
+            assert_eq!(bytes.len(), delta_wire_bytes(&dense.cfg), "{width:?}");
+            assert_eq!(decode_delta(&bytes).unwrap(), dense, "{width:?}");
+        }
+    }
+
+    #[test]
+    fn dense_v3_narrow_frames_are_smaller_than_u32() {
+        let u8_bytes = encode_delta(&narrow_delta(CounterWidth::U8, 80)).len();
+        let u16_bytes = encode_delta(&narrow_delta(CounterWidth::U16, 80)).len();
+        let u32_bytes = encode_delta(&narrow_delta(CounterWidth::U32, 80)).len();
+        assert!(u8_bytes < u16_bytes && u16_bytes < u32_bytes, "{u8_bytes} {u16_bytes} {u32_bytes}");
+        // The narrow dense payload is cells x width plus fixed framing.
+        assert_eq!(u16_bytes - u8_bytes, 320);
+        assert_eq!(u32_bytes + HEADER_V3 - HEADER_V2, u16_bytes + 640);
+    }
+
+    #[test]
+    fn v2_decodes_as_u32_and_v3_u32_roundtrips() {
+        // Backward compat: u32 deltas still ship v2 (pre-width bytes);
+        // the explicit v3-at-u32 encoder round-trips too.
+        let delta = sparse_delta();
+        assert_eq!(delta.width, CounterWidth::U32);
+        let v2 = encode_delta(&delta);
+        assert_eq!(u16::from_le_bytes(v2[4..6].try_into().unwrap()), 2);
+        assert_eq!(decode_delta(&v2).unwrap().width, CounterWidth::U32);
+        let v3 = encode_delta_v3(&delta);
+        assert_eq!(u16::from_le_bytes(v3[4..6].try_into().unwrap()), 3);
+        assert_eq!(decode_delta(&v3).unwrap(), delta);
+    }
+
+    #[test]
+    fn sparse_count_exceeding_declared_width_rejected() {
+        // Bounds-checked narrowing: a frame declaring u8 cells cannot
+        // smuggle a run value of 300, even with a valid checksum.
+        let mut delta = narrow_delta(CounterWidth::U8, 3);
+        delta.counts[0] = 0; // keep the fixture sparse
+        let bytes = encode_delta(&delta);
+        let mut b = bytes.clone();
+        b.truncate(HEADER_V3);
+        put_varint(&mut b, 1);
+        put_varint(&mut b, 0); // index 0
+        put_varint(&mut b, 300); // > u8::MAX
+        b.extend_from_slice(&[0u8; 4]);
+        refix_crc(&mut b);
+        assert!(matches!(
+            decode_delta(&b),
+            Err(WireError::BadPayload("sparse count exceeds declared width"))
+        ));
+        // The same value under a u16 tag is fine.
+        let mut b16 = b.clone();
+        b16[HEADER + 8] = 2;
+        refix_crc(&mut b16);
+        let ok = decode_delta(&b16).unwrap();
+        assert_eq!(ok.counts[0], 300);
+        assert_eq!(ok.width, CounterWidth::U16);
     }
 
     #[test]
@@ -407,7 +608,7 @@ mod tests {
         let delta = decode_delta(&encode(&sk)).unwrap();
         assert_eq!(delta.epoch, 0);
         assert_eq!(delta.count, sk.count());
-        assert_eq!(delta.counts.as_slice(), sk.grid().data());
+        assert_eq!(delta.counts.as_slice(), sk.grid().counts_u32());
         assert_eq!(delta.seed, sk.seed());
     }
 
@@ -415,7 +616,7 @@ mod tests {
     fn v2_frames_decode_as_full_sketches() {
         let delta = sparse_delta();
         let sk = decode(&encode_delta(&delta)).unwrap();
-        assert_eq!(sk.grid().data(), delta.counts.as_slice());
+        assert_eq!(sk.grid().counts_u32(), delta.counts.as_slice());
         assert_eq!(sk.count(), delta.count);
         assert_eq!(sk.seed(), delta.seed);
     }
@@ -451,10 +652,30 @@ mod tests {
 
     #[test]
     fn bad_version_detected() {
+        // Version 3 is valid now (the width-tagged wire) — 9 is not.
         let mut bytes = encode(&sample_sketch());
-        bytes[4] = 3;
+        bytes[4] = 9;
         refix_crc(&mut bytes);
-        assert!(matches!(decode(&bytes), Err(WireError::BadVersion(3))));
+        assert!(matches!(decode(&bytes), Err(WireError::BadVersion(9))));
+    }
+
+    #[test]
+    fn bad_width_byte_detected() {
+        // A v3 frame whose width byte is not 1/2/4 is rejected before any
+        // payload is interpreted, even with a valid checksum.
+        let mut delta = sparse_delta();
+        delta.width = CounterWidth::U8;
+        delta.cfg.counter_width = CounterWidth::U8;
+        let mut bytes = encode_delta(&delta);
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 3);
+        for bad in [0u8, 3, 5, 8, 255] {
+            bytes[HEADER + 8] = bad;
+            refix_crc(&mut bytes);
+            assert!(
+                matches!(decode_delta(&bytes), Err(WireError::BadWidth(b)) if b == bad),
+                "width byte {bad} accepted"
+            );
+        }
     }
 
     #[test]
@@ -547,13 +768,20 @@ mod tests {
     //
     // Checked-in encodings of hand-constructed frames for every wire
     // layout: v1 dense full-sketch, v2 sparse delta, v2 dense-fallback
-    // delta. Any silent format drift — field order, width, varint
-    // scheme, flag values, checksum — fails these tests; bump the wire
-    // VERSION and add new fixtures instead of editing these.
+    // delta, and width-tagged v3 frames at all three counter widths.
+    // Any silent format drift — field order, width, varint scheme, flag
+    // values, checksum — fails these tests; bump the wire VERSION and
+    // add new fixtures instead of editing these.
 
     const GOLDEN_V2_SPARSE_HEX: &str = "524f545302000200020000000300000088776655443322110500000000000000070000000000000001030103020104023fbdf029";
     const GOLDEN_V2_DENSE_HEX: &str = "524f545302000200020000000200000001020304050607080b0000000000000009000000000000000001000000020000000300000004000000050000000600000000000000070000008f89afde";
     const GOLDEN_V1_DENSE_HEX: &str = "524f5453010002000200000003000000887766554433221105000000000000000000000003000000000000000100000000000000000000000000000002000000b0a904dd";
+    // v3: same logical deltas, width-tagged. u8 and u32 take the sparse
+    // path (runs are width-agnostic, only the width byte differs); the
+    // u16 fixture is dense-fallback with 2-byte little-endian cells.
+    const GOLDEN_V3_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000010103010302010402bfb4aeae";
+    const GOLDEN_V3_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b000000000000000900000000000000020001002c0103000400050006000000bc02d6e008ec";
+    const GOLDEN_V3_U32_SPARSE_HEX: &str = "524f54530300020002000000030000008877665544332211050000000000000007000000000000000401030103020104020cd7cc9e";
 
     fn hex(bytes: &[u8]) -> String {
         bytes.iter().map(|b| format!("{b:02x}")).collect()
@@ -568,12 +796,17 @@ mod tests {
 
     /// 2 x 4 grid, 3 of 8 cells populated (37.5% -> sparse encoding).
     fn golden_sparse_delta() -> SketchDelta {
+        golden_sparse_delta_at(CounterWidth::U32)
+    }
+
+    fn golden_sparse_delta_at(width: CounterWidth) -> SketchDelta {
         SketchDelta {
             epoch: 7,
-            cfg: StormConfig { rows: 2, power: 2, saturating: true },
+            cfg: StormConfig { rows: 2, power: 2, saturating: true, counter_width: width },
             dim: 3,
             seed: 0x1122_3344_5566_7788,
             count: 5,
+            width,
             counts: vec![0, 3, 0, 1, 0, 0, 0, 2],
         }
     }
@@ -582,11 +815,31 @@ mod tests {
     fn golden_dense_delta() -> SketchDelta {
         SketchDelta {
             epoch: 9,
-            cfg: StormConfig { rows: 2, power: 2, saturating: true },
+            cfg: StormConfig { rows: 2, power: 2, saturating: true, ..Default::default() },
             dim: 2,
             seed: 0x0807_0605_0403_0201,
             count: 11,
+            width: CounterWidth::U32,
             counts: vec![1, 2, 3, 4, 5, 6, 0, 7],
+        }
+    }
+
+    /// The u16 dense fixture carries values above 255 so the 2-byte
+    /// little-endian cell layout is actually exercised on the wire.
+    fn golden_dense_delta_u16() -> SketchDelta {
+        SketchDelta {
+            epoch: 9,
+            cfg: StormConfig {
+                rows: 2,
+                power: 2,
+                saturating: true,
+                counter_width: CounterWidth::U16,
+            },
+            dim: 2,
+            seed: 0x0807_0605_0403_0201,
+            count: 11,
+            width: CounterWidth::U16,
+            counts: vec![1, 300, 3, 4, 5, 6, 0, 700],
         }
     }
 
@@ -624,11 +877,44 @@ mod tests {
         );
         // The v1 fixture still decodes on both entry points.
         let back = decode(&unhex(GOLDEN_V1_DENSE_HEX)).unwrap();
-        assert_eq!(back.grid().data(), sk.grid().data());
+        assert_eq!(back.grid().counts_u32(), sk.grid().counts_u32());
         assert_eq!(back.count(), 5);
         let as_delta = decode_delta(&unhex(GOLDEN_V1_DENSE_HEX)).unwrap();
         assert_eq!(as_delta.epoch, 0, "v1 reads as an epoch-0 dense delta");
         assert_eq!(as_delta.counts, golden_sparse_delta().counts);
+    }
+
+    #[test]
+    fn golden_v3_bytes_are_stable_at_all_widths() {
+        // u8 sparse: same runs as the v2 sparse fixture, width byte 1.
+        let u8_delta = golden_sparse_delta_at(CounterWidth::U8);
+        assert!(u8_delta.populated_fraction() <= 0.5);
+        assert_eq!(
+            hex(&encode_delta(&u8_delta)),
+            GOLDEN_V3_U8_SPARSE_HEX,
+            "v3 u8 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_V3_U8_SPARSE_HEX)).unwrap(), u8_delta);
+
+        // u16 dense fallback: 2-byte LE cells, values past 255.
+        let u16_delta = golden_dense_delta_u16();
+        assert!(u16_delta.populated_fraction() > 0.5);
+        assert_eq!(
+            hex(&encode_delta(&u16_delta)),
+            GOLDEN_V3_U16_DENSE_HEX,
+            "v3 u16 dense wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_V3_U16_DENSE_HEX)).unwrap(), u16_delta);
+
+        // u32 sparse via the explicit v3 encoder (the implicit path ships
+        // v2 for u32 — pinned by the v2 fixture above).
+        let u32_delta = golden_sparse_delta();
+        assert_eq!(
+            hex(&encode_delta_v3(&u32_delta)),
+            GOLDEN_V3_U32_SPARSE_HEX,
+            "v3 u32 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_V3_U32_SPARSE_HEX)).unwrap(), u32_delta);
     }
 
     #[test]

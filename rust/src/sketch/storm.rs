@@ -16,7 +16,7 @@
 //! {-1, +1}); the expected normalized count is the margin loss of
 //! Theorem 3 up to the `2^p` constant.
 
-use super::counters::CounterGrid;
+use super::counters::{CounterCell, CounterGrid, CounterStore};
 use super::Sketch;
 use crate::config::StormConfig;
 use crate::lsh::bank::HashBank;
@@ -55,7 +55,12 @@ impl StormSketch {
             .collect();
         let bank = HashBank::from_rows(&hashes);
         StormSketch {
-            grid: CounterGrid::new(cfg.rows, cfg.buckets(), cfg.saturating),
+            grid: CounterGrid::with_width(
+                cfg.rows,
+                cfg.buckets(),
+                cfg.saturating,
+                cfg.counter_width,
+            ),
             hashes,
             bank,
             count: 0,
@@ -151,24 +156,20 @@ impl StormSketch {
         let buckets = self.cfg.buckets();
         let saturating = self.cfg.saturating;
         let bank = &self.bank;
-        let data = self.grid.data_mut();
         let threads = threads.clamp(1, rows);
-        if threads == 1 {
-            accumulate_row_range(bank, 0, rows, batch, &tails, buckets, saturating, data);
-        } else {
-            let chunk_rows = (rows + threads - 1) / threads;
-            std::thread::scope(|scope| {
-                for (i, chunk) in data.chunks_mut(chunk_rows * buckets).enumerate() {
-                    let r0 = i * chunk_rows;
-                    let r1 = (r0 + chunk_rows).min(rows);
-                    let tails = &tails;
-                    scope.spawn(move || {
-                        accumulate_row_range(
-                            bank, r0, r1, batch, tails, buckets, saturating, chunk,
-                        );
-                    });
-                }
-            });
+        // One width dispatch per batch, then a monomorphic kernel over
+        // the native cell type — the narrow tiers pay zero per-cell
+        // branching on the hot path.
+        match self.grid.store_mut() {
+            CounterStore::U8(d) => {
+                insert_batch_native(bank, rows, buckets, saturating, threads, batch, &tails, d)
+            }
+            CounterStore::U16(d) => {
+                insert_batch_native(bank, rows, buckets, saturating, threads, batch, &tails, d)
+            }
+            CounterStore::U32(d) => {
+                insert_batch_native(bank, rows, buckets, saturating, threads, batch, &tails, d)
+            }
         }
         self.count += batch.len() as u64;
     }
@@ -256,19 +257,44 @@ fn auto_insert_threads(rows: usize, batch: usize) -> usize {
 }
 
 #[inline]
-fn bump(cell: &mut u32, saturating: bool) {
-    *cell = if saturating {
-        cell.saturating_add(1)
+fn bump<C: CounterCell>(cell: &mut C, saturating: bool) {
+    *cell = cell.add_u32(1, saturating);
+}
+
+/// Sequential-or-threaded batch accumulation over the grid's native cell
+/// buffer (monomorphized per [`CounterCell`] width).
+#[allow(clippy::too_many_arguments)]
+fn insert_batch_native<C: CounterCell + Send>(
+    bank: &HashBank,
+    rows: usize,
+    buckets: usize,
+    saturating: bool,
+    threads: usize,
+    batch: &[Vec<f64>],
+    tails: &[f64],
+    data: &mut [C],
+) {
+    if threads == 1 {
+        accumulate_row_range(bank, 0, rows, batch, tails, buckets, saturating, data);
     } else {
-        cell.wrapping_add(1)
-    };
+        let chunk_rows = (rows + threads - 1) / threads;
+        std::thread::scope(|scope| {
+            for (i, chunk) in data.chunks_mut(chunk_rows * buckets).enumerate() {
+                let r0 = i * chunk_rows;
+                let r1 = (r0 + chunk_rows).min(rows);
+                scope.spawn(move || {
+                    accumulate_row_range(bank, r0, r1, batch, tails, buckets, saturating, chunk);
+                });
+            }
+        });
+    }
 }
 
 /// Accumulate the counts of `batch` for rows `[r0, r1)` into `grid_rows`
 /// (the row-major counter span of exactly those rows), tiled so each
 /// row block's planes stay cache-resident across the batch.
 #[allow(clippy::too_many_arguments)]
-fn accumulate_row_range(
+fn accumulate_row_range<C: CounterCell>(
     bank: &HashBank,
     r0: usize,
     r1: usize,
@@ -276,7 +302,7 @@ fn accumulate_row_range(
     tails: &[f64],
     buckets: usize,
     saturating: bool,
-    grid_rows: &mut [u32],
+    grid_rows: &mut [C],
 ) {
     let mut rb = r0;
     while rb < r1 {
@@ -330,7 +356,9 @@ impl Sketch for StormSketch {
     }
 
     fn merge_from(&mut self, other: &Self) {
-        assert_eq!(self.cfg, other.cfg, "merge: config mismatch");
+        // Widths may differ (narrow device sketches fold into wide
+        // accumulators exactly); geometry, policy, seed and dim may not.
+        assert!(self.cfg.merge_compatible(&other.cfg), "merge: config mismatch");
         assert_eq!(self.seed, other.seed, "merge: seed (hash family) mismatch");
         assert_eq!(self.dim, other.dim, "merge: dim mismatch");
         self.grid.merge_from(&other.grid);
@@ -368,7 +396,12 @@ impl StormClassifierSketch {
             })
             .collect();
         StormClassifierSketch {
-            grid: CounterGrid::new(cfg.rows, cfg.buckets(), cfg.saturating),
+            grid: CounterGrid::with_width(
+                cfg.rows,
+                cfg.buckets(),
+                cfg.saturating,
+                cfg.counter_width,
+            ),
             hashes,
             count: 0,
             dim,
@@ -429,7 +462,7 @@ impl StormClassifierSketch {
     }
 
     pub fn merge_from(&mut self, other: &Self) {
-        assert_eq!(self.cfg, other.cfg);
+        assert!(self.cfg.merge_compatible(&other.cfg));
         assert_eq!(self.seed, other.seed);
         assert_eq!(self.dim, other.dim);
         self.grid.merge_from(&other.grid);
@@ -460,7 +493,7 @@ mod tests {
             .map(|_| gen_ball_point(&mut rng, dim, 0.9))
             .collect();
         let q = gen_ball_point(&mut rng, dim, 0.8);
-        let cfg = StormConfig { rows: 2000, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 2000, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, dim, 17);
         for z in &data {
             sk.insert(z);
@@ -472,17 +505,17 @@ mod tests {
 
     #[test]
     fn insert_example_augments() {
-        let cfg = StormConfig { rows: 3, power: 2, saturating: true };
+        let cfg = StormConfig { rows: 3, power: 2, saturating: true, ..Default::default() };
         let mut a = StormSketch::new(cfg, 3, 5);
         let mut b = StormSketch::new(cfg, 3, 5);
         a.insert_example(&[0.1, 0.2], 0.3);
         b.insert(&[0.1, 0.2, 0.3]);
-        assert_eq!(a.grid().data(), b.grid().data());
+        assert_eq!(a.grid().counts_u32(), b.grid().counts_u32());
     }
 
     #[test]
     fn insert_batch_matches_sequential_inserts_bitwise() {
-        let cfg = StormConfig { rows: 37, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 37, power: 4, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(21);
         let data: Vec<Vec<f64>> = (0..77).map(|_| gen_ball_point(&mut rng, 5, 0.95)).collect();
         let mut scalar = StormSketch::new(cfg, 5, 13);
@@ -491,20 +524,55 @@ mod tests {
         }
         let mut fused = StormSketch::new(cfg, 5, 13);
         fused.insert_batch(&data);
-        assert_eq!(scalar.grid().data(), fused.grid().data());
+        assert_eq!(scalar.grid().counts_u32(), fused.grid().counts_u32());
         assert_eq!(scalar.count(), fused.count());
     }
 
     #[test]
+    fn insert_batch_matches_scalar_at_every_width() {
+        // The width-dispatched batch kernel must reproduce the scalar
+        // path exactly at u8 and u16 too (77 examples -> max cell 154,
+        // below even the u8 clip, so the counters are width-invariant).
+        use crate::config::CounterWidth;
+        for width in [CounterWidth::U8, CounterWidth::U16] {
+            let cfg = StormConfig {
+                rows: 37,
+                power: 4,
+                saturating: true,
+                counter_width: width,
+            };
+            let mut rng = Xoshiro256::new(21);
+            let data: Vec<Vec<f64>> = (0..77).map(|_| gen_ball_point(&mut rng, 5, 0.95)).collect();
+            let mut scalar = StormSketch::new(cfg, 5, 13);
+            for z in &data {
+                scalar.insert(z);
+            }
+            let mut fused = StormSketch::new(cfg, 5, 13);
+            fused.insert_batch(&data);
+            assert_eq!(scalar.grid().counts_u32(), fused.grid().counts_u32(), "{width:?}");
+            assert_eq!(fused.grid().width(), width);
+            assert_eq!(fused.bytes(), 37 * 16 * width.bytes(), "width-true memory");
+            // And the same counters as the u32 build (no saturation).
+            let mut wide = StormSketch::new(
+                StormConfig { counter_width: CounterWidth::U32, ..cfg },
+                5,
+                13,
+            );
+            wide.insert_batch(&data);
+            assert_eq!(wide.grid().counts_u32(), fused.grid().counts_u32(), "{width:?}");
+        }
+    }
+
+    #[test]
     fn insert_batch_threaded_matches_sequential() {
-        let cfg = StormConfig { rows: 50, power: 3, saturating: true };
+        let cfg = StormConfig { rows: 50, power: 3, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(22);
         let data: Vec<Vec<f64>> = (0..64).map(|_| gen_ball_point(&mut rng, 4, 0.9)).collect();
         let mut seq = StormSketch::new(cfg, 4, 3);
         seq.insert_batch_with_threads(&data, 1);
         let mut par = StormSketch::new(cfg, 4, 3);
         par.insert_batch_with_threads(&data, 3);
-        assert_eq!(seq.grid().data(), par.grid().data());
+        assert_eq!(seq.grid().counts_u32(), par.grid().counts_u32());
         assert_eq!(seq.count(), par.count());
     }
 
@@ -519,7 +587,7 @@ mod tests {
 
     #[test]
     fn estimate_risk_batch_matches_scalar_bitwise() {
-        let cfg = StormConfig { rows: 40, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 40, power: 4, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(23);
         let mut sk = StormSketch::new(cfg, 4, 9);
         for _ in 0..200 {
@@ -553,7 +621,7 @@ mod tests {
 
     #[test]
     fn two_increments_per_row_per_insert() {
-        let cfg = StormConfig { rows: 6, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 6, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 4, 2);
         let mut rng = Xoshiro256::new(1);
         for _ in 0..25 {
@@ -568,7 +636,7 @@ mod tests {
 
     #[test]
     fn merge_equals_union() {
-        let cfg = StormConfig { rows: 15, power: 3, saturating: true };
+        let cfg = StormConfig { rows: 15, power: 3, saturating: true, ..Default::default() };
         let mut rng = Xoshiro256::new(4);
         let d1: Vec<Vec<f64>> = (0..40).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
         let d2: Vec<Vec<f64>> = (0..60).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
@@ -584,7 +652,7 @@ mod tests {
             su.insert(z);
         }
         s1.merge_from(&s2);
-        assert_eq!(s1.grid().data(), su.grid().data());
+        assert_eq!(s1.grid().counts_u32(), su.grid().counts_u32());
         assert_eq!(s1.count(), 100);
         // And the estimates agree exactly.
         let q = gen_ball_point(&mut rng, 3, 0.8);
@@ -602,7 +670,7 @@ mod tests {
 
     #[test]
     fn risk_scaled_handles_large_theta() {
-        let cfg = StormConfig { rows: 50, power: 4, saturating: true };
+        let cfg = StormConfig { rows: 50, power: 4, saturating: true, ..Default::default() };
         let mut sk = StormSketch::new(cfg, 3, 8);
         let mut rng = Xoshiro256::new(6);
         for _ in 0..100 {
@@ -620,7 +688,7 @@ mod tests {
         let mut rng = Xoshiro256::new(12);
         let dim = 3;
         let p = 2u32;
-        let cfg = StormConfig { rows: 3000, power: p, saturating: true };
+        let cfg = StormConfig { rows: 3000, power: p, saturating: true, ..Default::default() };
         let mut sk = StormClassifierSketch::new(cfg, dim, 31);
         let data: Vec<(Vec<f64>, f64)> = (0..200)
             .map(|i| {

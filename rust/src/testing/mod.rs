@@ -104,6 +104,21 @@ pub fn cases_with(
     n
 }
 
+/// Counter width the invariant sweeps should build sketches at:
+/// `STORM_TEST_WIDTH=u8|u16|u32` (default `u32`). The CI matrix runs the
+/// suite once at `u8` so the narrow counter path stays exercised; the
+/// bit-exactness properties are saturation-robust at a *uniform* width
+/// (clipping commutes with merging for non-negative increments), so the
+/// same assertions hold at every width. A malformed value panics loudly
+/// — a typo'd knob silently running the default would defeat that CI leg.
+pub fn test_counter_width() -> crate::config::CounterWidth {
+    match std::env::var("STORM_TEST_WIDTH") {
+        Err(_) => crate::config::CounterWidth::U32,
+        Ok(v) => crate::config::CounterWidth::parse(&v)
+            .unwrap_or_else(|| panic!("STORM_TEST_WIDTH must be u8|u16|u32, got {v:?}")),
+    }
+}
+
 /// Uniform f64 vector with entries in `[lo, hi)`.
 pub fn gen_vec(rng: &mut Xoshiro256, len: usize, lo: f64, hi: f64) -> Vec<f64> {
     (0..len).map(|_| rng.uniform_range(lo, hi)).collect()

@@ -123,7 +123,8 @@ fn train_with_sync_rounds_prints_round_table() {
     );
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("rounds=4"), "summary missing round count: {text}");
-    assert!(text.contains("round  examples  net_bytes  est_risk"), "{text}");
+    assert!(text.contains("round  examples  net_bytes  resend_bytes  est_risk"), "{text}");
+    assert!(text.contains("memory: leader sketch"), "{text}");
     // One table line per round.
     assert!(text.contains("    0  ") && text.contains("    3  "), "{text}");
 }
@@ -134,6 +135,41 @@ fn train_rejects_bad_dataset_and_backend() {
     assert_eq!(out.status.code(), Some(1));
     let out = storm()
         .args(["train", "--backend", "cuda"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+}
+
+#[test]
+fn train_with_narrow_device_counter_width() {
+    let out = storm()
+        .args([
+            "train",
+            "--dataset",
+            "synth2d-reg",
+            "--rows",
+            "100",
+            "--iters",
+            "20",
+            "--devices",
+            "2",
+            "--device-counter-width",
+            "u8",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    // Leader at u32 (6400 B for 100 x 16), devices at u8 (1600 B).
+    assert!(text.contains("leader sketch 6400 B (u32), per-device sketch 1600 B (u8)"), "{text}");
+
+    // A bad width is rejected up front.
+    let out = storm()
+        .args(["train", "--counter-width", "u64"])
         .output()
         .unwrap();
     assert_eq!(out.status.code(), Some(1));

@@ -34,7 +34,7 @@ macro_rules! require_artifacts {
 /// Build a filled sketch in the synth2d configuration (D = 3, R = 100,
 /// p = 4 — matches the compiled `synth2d` artifact pair).
 fn filled_sketch(n: usize, seed: u64) -> (StormSketch, Vec<Vec<f64>>) {
-    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(cfg, 3, seed);
     let mut rng = Xoshiro256::new(seed ^ 0xDEAD);
     let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(&mut rng, 3, 0.9)).collect();
@@ -54,14 +54,14 @@ fn insert_counts_match_rust_exactly() {
     let (sk, data) = filled_sketch(200, 11);
     let exe = load_exe(&sk);
     // Feed the same examples through the XLA insert kernel in batches.
-    let mut total = vec![0u64; sk.grid().data().len()];
+    let mut total = vec![0u64; sk.grid().counts_u32().len()];
     for chunk in data.chunks(exe.batch_size()) {
         let delta = exe.insert_counts(chunk).expect("insert execute");
         for (t, d) in total.iter_mut().zip(&delta) {
             *t += *d as u64;
         }
     }
-    let rust_counts: Vec<u64> = sk.grid().data().iter().map(|&c| c as u64).collect();
+    let rust_counts: Vec<u64> = sk.grid().counts_u32().iter().map(|&c| c as u64).collect();
     assert_eq!(total, rust_counts, "XLA and rust counters diverged");
 }
 
@@ -96,7 +96,7 @@ fn query_risks_match_rust_estimates() {
     let mut rng = Xoshiro256::new(7);
     let queries: Vec<Vec<f64>> = (0..10).map(|_| gen_ball_point(&mut rng, 3, 0.85)).collect();
     let got = exe
-        .query_risks(sk.grid().data(), sk.count(), &queries)
+        .query_risks(&sk.grid().counts_u32(), sk.count(), &queries)
         .expect("query execute");
     for (q, g) in queries.iter().zip(&got) {
         let want = sk.estimate_risk(q);
@@ -191,7 +191,7 @@ fn bulk_ingest_matches_scalar_path() {
         ds.x.row_mut(i).copy_from_slice(&p[..2]);
         ds.y[i] = p[2];
     }
-    let cfg = StormConfig { rows: 100, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     // Scalar reference.
     let mut scalar = StormSketch::new(cfg, 3, 47);
     for i in 0..ds.len() {
@@ -206,8 +206,8 @@ fn bulk_ingest_matches_scalar_path() {
     assert_eq!(report.batches, (n as u64).div_ceil(exe.batch_size() as u64));
     assert_eq!(bulk.count(), scalar.count());
     assert_eq!(
-        bulk.grid().data(),
-        scalar.grid().data(),
+        bulk.grid().counts_u32(),
+        scalar.grid().counts_u32(),
         "bulk-ingest counters diverged from scalar path"
     );
 }
@@ -215,7 +215,7 @@ fn bulk_ingest_matches_scalar_path() {
 #[test]
 fn wrong_config_is_a_clean_error() {
     require_artifacts!();
-    let cfg = StormConfig { rows: 33, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 33, power: 4, saturating: true, ..Default::default() };
     let sk = StormSketch::new(cfg, 3, 1);
     let err = XlaStorm::load(ARTIFACTS, 3, 33, 4, sk.hashes());
     assert!(err.is_err(), "rows=33 is not compiled; load must fail");

@@ -18,7 +18,7 @@ use storm::sketch::Sketch;
 fn base_cfg(dataset: &str) -> RunConfig {
     RunConfig {
         dataset: dataset.to_string(),
-        storm: StormConfig { rows: 200, power: 4, saturating: true },
+        storm: StormConfig { rows: 200, power: 4, saturating: true, ..Default::default() },
         optimizer: OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters: 250, seed: 3 },
         fleet: FleetConfig {
             devices: 4,
@@ -29,6 +29,7 @@ fn base_cfg(dataset: &str) -> RunConfig {
             sync_rounds: 1,
             min_quorum: 0,
             faults_seed: None,
+            device_counter_width: None,
             seed: 2,
         },
         artifacts_dir: None,
@@ -67,7 +68,7 @@ fn sketches_travel_through_wire_format_between_fleet_stages() {
     // decode, merge, train — the decoded sketch must train identically.
     let mut ds = registry::load("airfoil", 5).unwrap();
     scale_to_unit_ball(&mut ds, 0.9);
-    let cfg = StormConfig { rows: 150, power: 4, saturating: true };
+    let cfg = StormConfig { rows: 150, power: 4, saturating: true, ..Default::default() };
     let mut local = StormSketch::new(cfg, ds.dim() + 1, 11);
     for i in 0..ds.len() {
         local.insert(&ds.augmented(i));
@@ -124,7 +125,7 @@ fn chaotic_fleet_matches_ideal_fleet_counters_end_to_end() {
     // leader counters — resilience costs bytes, never correctness.
     let mut ds = registry::load("autos", 9).unwrap();
     scale_to_unit_ball(&mut ds, 0.9);
-    let storm = StormConfig { rows: 120, power: 4, saturating: true };
+    let storm = StormConfig { rows: 120, power: 4, saturating: true, ..Default::default() };
     let mk = |faults: Option<u64>, quorum: usize| {
         let mut fleet = base_cfg("autos").fleet;
         fleet.devices = 5;
@@ -136,7 +137,7 @@ fn chaotic_fleet_matches_ideal_fleet_counters_end_to_end() {
     };
     let ideal = mk(None, 0);
     let chaotic = mk(Some(0xFEED), 2);
-    assert_eq!(ideal.sketch.grid().data(), chaotic.sketch.grid().data());
+    assert_eq!(ideal.sketch.grid().counts_u32(), chaotic.sketch.grid().counts_u32());
     assert_eq!(ideal.sketch.count(), chaotic.sketch.count());
     assert_eq!(ideal.examples, chaotic.examples);
     assert_eq!(ideal.faults.total(), 0);

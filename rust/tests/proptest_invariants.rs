@@ -8,7 +8,7 @@
 //! `STORM_TEST_REPLAY=<seed>:<case>` re-runs exactly one failing case
 //! with its exact RNG stream — the value is printed by any failure.
 
-use storm::config::{FleetConfig, StormConfig};
+use storm::config::{CounterWidth, FleetConfig, StormConfig};
 use storm::data::stream::partition_streams;
 use storm::edge::faults::FaultPlan;
 use storm::edge::fleet::{run_fleet, run_fleet_chaos};
@@ -17,10 +17,10 @@ use storm::lsh::asym::{augment, Side};
 use storm::lsh::prp::PairedRandomProjection;
 use storm::lsh::srp::SignedRandomProjection;
 use storm::lsh::LshFunction;
-use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, wire_bytes};
+use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, encode_delta_v3, wire_bytes};
 use storm::sketch::storm::StormSketch;
 use storm::sketch::Sketch;
-use storm::testing::{assert_close, cases, gen_ball_point, gen_dim};
+use storm::testing::{assert_close, cases, gen_ball_point, gen_dim, test_counter_width};
 use storm::util::mathx::{dot, norm2};
 use storm::util::rng::Rng;
 
@@ -56,7 +56,12 @@ fn prop_sketch_row_mass_is_2n() {
         let dim = gen_dim(rng, 1, 12);
         let rows = 1 + (case % 20);
         let p = 1 + (case % 6) as u32;
-        let cfg = StormConfig { rows, power: p, saturating: true };
+        let cfg = StormConfig {
+            rows,
+            power: p,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let n = 1 + (rng.next_u64() % 60) as usize;
         for _ in 0..n {
@@ -73,7 +78,12 @@ fn prop_sketch_row_mass_is_2n() {
 #[test]
 fn prop_merge_commutative_and_associative() {
     cases(40, 104, |rng, case| {
-        let cfg = StormConfig { rows: 8, power: 3, saturating: true };
+        let cfg = StormConfig {
+            rows: 8,
+            power: 3,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let dim = gen_dim(rng, 1, 8);
         let seed = case as u64;
         let mut mk = |rng: &mut storm::util::rng::Xoshiro256, n: usize| {
@@ -93,7 +103,7 @@ fn prop_merge_commutative_and_associative() {
         let mut ba = StormSketch::new(cfg, dim, seed);
         ba.merge_from(&b);
         ba.merge_from(&a);
-        assert_eq!(ab.grid().data(), ba.grid().data());
+        assert_eq!(ab.grid().counts_u32(), ba.grid().counts_u32());
         let mut abc1 = ab;
         abc1.merge_from(&c);
         let mut bc = StormSketch::new(cfg, dim, seed);
@@ -102,7 +112,7 @@ fn prop_merge_commutative_and_associative() {
         let mut abc2 = StormSketch::new(cfg, dim, seed);
         abc2.merge_from(&a);
         abc2.merge_from(&bc);
-        assert_eq!(abc1.grid().data(), abc2.grid().data());
+        assert_eq!(abc1.grid().counts_u32(), abc2.grid().counts_u32());
         assert_eq!(abc1.count(), 32);
     });
 }
@@ -113,14 +123,19 @@ fn prop_wire_roundtrip_any_config() {
         let rows = 1 + (case % 30);
         let p = 1 + (case % 8) as u32;
         let dim = gen_dim(rng, 1, 16);
-        let cfg = StormConfig { rows, power: p, saturating: true };
+        let cfg = StormConfig {
+            rows,
+            power: p,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut sk = StormSketch::new(cfg, dim, case as u64 ^ 0xABCD);
         let n = (rng.next_u64() % 40) as usize;
         for _ in 0..n {
             sk.insert(&gen_ball_point(rng, dim, 0.9));
         }
         let back = decode(&encode(&sk)).unwrap();
-        assert_eq!(back.grid().data(), sk.grid().data());
+        assert_eq!(back.grid().counts_u32(), sk.grid().counts_u32());
         assert_eq!(back.count(), sk.count());
         assert_eq!(back.dim(), sk.dim());
     });
@@ -136,7 +151,12 @@ fn prop_delta_wire_roundtrip_any_config() {
         let rows = 1 + (case % 25);
         let p = 1 + (case % 6) as u32;
         let dim = gen_dim(rng, 1, 12);
-        let cfg = StormConfig { rows, power: p, saturating: true };
+        let cfg = StormConfig {
+            rows,
+            power: p,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let seed = case as u64 ^ 0xDE17A;
         let mut sk = StormSketch::new(cfg, dim, seed);
         let head = (rng.next_u64() % 30) as usize;
@@ -157,7 +177,7 @@ fn prop_delta_wire_roundtrip_any_config() {
         let back = decode_delta(&encode_delta(&delta)).unwrap();
         assert_eq!(back, delta, "rows={rows} p={p} dim={dim}");
         replica.apply_delta(&back);
-        assert_eq!(replica.grid().data(), sk.grid().data());
+        assert_eq!(replica.grid().counts_u32(), sk.grid().counts_u32());
         assert_eq!(replica.count(), sk.count());
     });
 }
@@ -169,7 +189,12 @@ fn prop_sparse_delta_cheaper_than_dense_v1() {
     // few cells (few inserts into a roomy grid) is the sparse regime.
     cases(40, 114, |rng, case| {
         let rows = 8 + (case % 40);
-        let cfg = StormConfig { rows, power: 4, saturating: true };
+        let cfg = StormConfig {
+            rows,
+            power: 4,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let dim = gen_dim(rng, 1, 10);
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let snap = sk.snapshot();
@@ -191,17 +216,25 @@ fn prop_sparse_delta_cheaper_than_dense_v1() {
 
 #[test]
 fn prop_wire_corruption_errors_never_panic() {
-    // Satellite contract: random truncations and byte flips of BOTH wire
-    // versions always yield a WireError — no panic, no silent success.
+    // Satellite contract: random truncations and byte flips of ALL wire
+    // versions (v1 dense, v2 delta, width-tagged v3 deltas at every
+    // width) always yield a WireError — no panic, no silent success.
     cases(80, 115, |rng, case| {
-        let cfg = StormConfig { rows: 1 + (case % 12), power: 1 + (case % 5) as u32, saturating: true };
+        let width = [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32][case % 3];
+        let cfg = StormConfig {
+            rows: 1 + (case % 12),
+            power: 1 + (case % 5) as u32,
+            saturating: true,
+            counter_width: width,
+        };
         let dim = gen_dim(rng, 1, 8);
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let snap = sk.snapshot();
         for _ in 0..(rng.next_u64() % 25) {
             sk.insert(&gen_ball_point(rng, dim, 0.9));
         }
-        let frames = [encode(&sk), encode_delta(&sk.delta_since(&snap, case as u64))];
+        let delta = sk.delta_since(&snap, case as u64);
+        let frames = [encode(&sk), encode_delta(&delta), encode_delta_v3(&delta)];
         for bytes in &frames {
             // Random truncation (strictly shorter, including empty).
             let cut = (rng.next_u64() % bytes.len() as u64) as usize;
@@ -238,7 +271,12 @@ fn prop_header_mutations_with_valid_crc_rejected() {
         bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
     }
     cases(40, 116, |rng, case| {
-        let cfg = StormConfig { rows: 2 + (case % 10), power: 1 + (case % 4) as u32, saturating: true };
+        let cfg = StormConfig {
+            rows: 2 + (case % 10),
+            power: 1 + (case % 4) as u32,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let dim = gen_dim(rng, 1, 6);
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let snap = sk.snapshot();
@@ -279,7 +317,12 @@ fn prop_round_sync_bit_identical_to_oneshot() {
         let devices = 1 + (case % 4);
         let rounds = 1 + (case % 5);
         let topo = if case % 2 == 0 { Topology::Star } else { Topology::Tree { fanout: 2 } };
-        let storm = StormConfig { rows: 6 + (case % 10), power: 3, saturating: true };
+        let storm = StormConfig {
+            rows: 6 + (case % 10),
+            power: 3,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut ds = storm_ds(n_examples, case as u64);
         storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
         let family_seed = 0xF1EE7 ^ case as u64;
@@ -297,13 +340,14 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             sync_rounds: rounds,
             min_quorum: 0,
             faults_seed: None,
+            device_counter_width: None,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
         let result = run_fleet(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
         assert_eq!(
-            result.sketch.grid().data(),
-            reference.grid().data(),
+            result.sketch.grid().counts_u32(),
+            reference.grid().counts_u32(),
             "devices={devices} rounds={rounds} topo={topo:?}"
         );
         assert_eq!(result.sketch.count(), reference.count());
@@ -337,7 +381,12 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             1 => Topology::Tree { fanout: 2 },
             _ => Topology::Chain,
         };
-        let storm = StormConfig { rows: 6 + (case % 8), power: 3, saturating: true };
+        let storm = StormConfig {
+            rows: 6 + (case % 8),
+            power: 3,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut ds = storm_ds(n_examples, case as u64 ^ 0xFA);
         storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
         let family_seed = 0xFA17 ^ case as u64;
@@ -358,6 +407,7 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             // Alternate full and partial barrier quorums.
             min_quorum: if case % 2 == 0 { 0 } else { 1 + case % devices },
             faults_seed: None,
+            device_counter_width: None,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -374,7 +424,7 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
         let ctx = format!(
             "faults_seed={faults_seed:#x} devices={devices} rounds={rounds} topo={topo:?}"
         );
-        assert_eq!(result.sketch.grid().data(), reference.grid().data(), "{ctx}");
+        assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32(), "{ctx}");
         assert_eq!(result.sketch.count(), reference.count(), "{ctx}");
         assert_eq!(result.examples, n_examples as u64, "{ctx}");
         assert_eq!(result.rounds.len(), rounds, "every round closes: {ctx}");
@@ -387,6 +437,125 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
     if ran > 0 {
         assert!(injected_total > 0, "chaos sweep injected no faults at all — vacuous");
     }
+}
+
+#[test]
+fn prop_widening_merge_exact_without_saturation() {
+    // THE width invariant: for any stream where no device cell saturates,
+    // a fleet whose devices sketch at ANY width, folding into a leader at
+    // least as wide, produces counters equal — counter-for-counter — to
+    // the all-u32 merge, across star/tree/chain topologies, round counts
+    // and all width pairs. The stream is capped at 120 examples: each
+    // insert adds 2 increments per row, so no cell anywhere (device or
+    // leader) can reach even the u8 clip of 255 — exactness is forced by
+    // the hypothesis, not by luck.
+    let widths = [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32];
+    let pairs: Vec<(CounterWidth, CounterWidth)> = widths
+        .iter()
+        .flat_map(|&d| widths.iter().filter(move |&&l| l >= d).map(move |&l| (d, l)))
+        .collect();
+    cases(12, 119, |rng, case| {
+        let (device_w, leader_w) = pairs[case % pairs.len()];
+        let devices = 2 + (case % 3);
+        let rounds = 1 + (case % 3);
+        let topo = match case % 3 {
+            0 => Topology::Star,
+            1 => Topology::Tree { fanout: 2 },
+            _ => Topology::Chain,
+        };
+        let n_examples = 40 + (rng.next_u64() % 80) as usize; // <= 120
+        let storm_u32 = StormConfig {
+            rows: 6 + (case % 6),
+            power: 3,
+            saturating: true,
+            counter_width: CounterWidth::U32,
+        };
+        let mut ds = storm_ds(n_examples, case as u64 ^ 0x71D7);
+        storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        let family_seed = 0x71D7 ^ case as u64;
+        // All-u32 one-shot reference over the whole stream.
+        let mut reference = StormSketch::new(storm_u32, ds.dim() + 1, family_seed);
+        for i in 0..ds.len() {
+            reference.insert(&ds.augmented(i));
+        }
+        let fleet = FleetConfig {
+            devices,
+            batch: 16,
+            channel_capacity: 2,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            sync_rounds: rounds,
+            min_quorum: 0,
+            faults_seed: None,
+            device_counter_width: Some(device_w),
+            seed: 0,
+        };
+        let leader_storm = StormConfig { counter_width: leader_w, ..storm_u32 };
+        let streams = partition_streams(&ds, devices, None);
+        let result = run_fleet(fleet, leader_storm, topo, ds.dim() + 1, family_seed, streams);
+        let ctx = format!("device={device_w} leader={leader_w} devices={devices} topo={topo:?}");
+        assert_eq!(result.sketch.grid().width(), leader_w, "{ctx}");
+        assert_eq!(
+            result.sketch.grid().counts_u32(),
+            reference.grid().counts_u32(),
+            "widened fleet merge must equal the all-u32 merge: {ctx}"
+        );
+        assert_eq!(result.sketch.count(), reference.count(), "{ctx}");
+        // Hypothesis check: nothing came close to the u8 clip.
+        assert!(
+            reference.grid().counts_u32().iter().all(|&c| c < u8::MAX as u32),
+            "stream cap failed to prevent saturation: {ctx}"
+        );
+        // Per-device memory is width-true.
+        for d in &result.devices {
+            assert_eq!(
+                d.sketch_bytes,
+                storm_u32.rows * storm_u32.buckets() * device_w.bytes(),
+                "{ctx}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_u8_saturation_graceful() {
+    // Satellite: a u8 cell driven past 255 degrades gracefully — it
+    // clips at exactly `min(exact, 255)` (never wraps), neighbouring
+    // cells stay exact, and the snapshot/delta pipeline stays
+    // self-consistent (a replica fed only the deltas reproduces the
+    // saturated grid bit-for-bit).
+    use storm::sketch::counters::CounterGrid;
+    cases(40, 120, |rng, case| {
+        let buckets = 4 + (case % 8);
+        let cells = 2 * buckets;
+        let mut narrow = CounterGrid::with_width(2, buckets, true, CounterWidth::U8);
+        let mut wide = CounterGrid::new(2, buckets, true);
+        let mut replica = CounterGrid::with_width(2, buckets, true, CounterWidth::U8);
+        for _ in 0..4 {
+            let mut volley: Vec<u32> = (0..cells)
+                .map(|_| match rng.next_u64() % 4 {
+                    0 => 0,
+                    1 | 2 => (rng.next_u64() % 100) as u32,
+                    _ => 100 + (rng.next_u64() % 200) as u32,
+                })
+                .collect();
+            volley[0] = 200; // cell 0 provably saturates by volley two
+            let snap = narrow.snapshot();
+            narrow.add_counts(&volley);
+            wide.add_counts(&volley);
+            replica.apply_delta(&narrow.delta_since(&snap));
+        }
+        let exact = wide.counts_u32();
+        let clipped = narrow.counts_u32();
+        for (i, (&e, &c)) in exact.iter().zip(&clipped).enumerate() {
+            assert_eq!(c, e.min(u8::MAX as u32), "cell {i}: clip must be exact-min, not a wrap");
+        }
+        assert_eq!(clipped[0], 255, "saturation case was vacuous");
+        // Deltas never corrupt: the replica that saw only per-volley
+        // deltas equals the live saturated grid.
+        assert_eq!(replica.counts_u32(), clipped);
+        assert_eq!(replica, narrow);
+    });
 }
 
 /// Small random regression dataset for the fleet property tests.
@@ -403,7 +572,12 @@ fn prop_query_estimate_bounded() {
     // 0 <= raw query estimate <= 2 (both PRP arms can collide).
     cases(60, 106, |rng, case| {
         let dim = gen_dim(rng, 1, 10);
-        let cfg = StormConfig { rows: 20, power: 4, saturating: true };
+        let cfg = StormConfig {
+            rows: 20,
+            power: 4,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         for _ in 0..30 {
             sk.insert(&gen_ball_point(rng, dim, 0.9));
@@ -440,7 +614,12 @@ fn prop_insert_batch_bit_identical_to_scalar_inserts() {
         let dim = gen_dim(rng, 1, 14);
         let rows = 1 + (case % 41); // crosses the 16-row insert tile
         let p = 1 + (case % 8) as u32;
-        let cfg = StormConfig { rows, power: p, saturating: true };
+        let cfg = StormConfig {
+            rows,
+            power: p,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let n = 1 + (rng.next_u64() % 50) as usize;
         let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(rng, dim, 0.95)).collect();
         let mut scalar = StormSketch::new(cfg, dim, case as u64);
@@ -449,7 +628,11 @@ fn prop_insert_batch_bit_identical_to_scalar_inserts() {
         }
         let mut fused = StormSketch::new(cfg, dim, case as u64);
         fused.insert_batch(&data);
-        assert_eq!(scalar.grid().data(), fused.grid().data(), "dim={dim} rows={rows} p={p}");
+        assert_eq!(
+            scalar.grid().counts_u32(),
+            fused.grid().counts_u32(),
+            "dim={dim} rows={rows} p={p}"
+        );
         assert_eq!(scalar.count(), fused.count());
     });
 }
@@ -460,7 +643,12 @@ fn prop_insert_batch_split_and_thread_invariant() {
     // scoped threads, must not change the grid.
     cases(30, 110, |rng, case| {
         let dim = gen_dim(rng, 1, 8);
-        let cfg = StormConfig { rows: 24, power: 4, saturating: true };
+        let cfg = StormConfig {
+            rows: 24,
+            power: 4,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let n = 20 + (rng.next_u64() % 40) as usize;
         let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(rng, dim, 0.9)).collect();
         let seed = case as u64 ^ 0x5EED;
@@ -475,8 +663,8 @@ fn prop_insert_batch_split_and_thread_invariant() {
         }
         let mut threaded = StormSketch::new(cfg, dim, seed);
         threaded.insert_batch_with_threads(&data, 1 + (case % 5));
-        assert_eq!(whole.grid().data(), split.grid().data());
-        assert_eq!(whole.grid().data(), threaded.grid().data());
+        assert_eq!(whole.grid().counts_u32(), split.grid().counts_u32());
+        assert_eq!(whole.grid().counts_u32(), threaded.grid().counts_u32());
         assert_eq!(whole.count(), split.count());
         assert_eq!(whole.count(), threaded.count());
     });
@@ -489,7 +677,12 @@ fn prop_estimate_risk_batch_bit_identical_to_scalar() {
     // path).
     cases(40, 111, |rng, case| {
         let dim = gen_dim(rng, 1, 10);
-        let cfg = StormConfig { rows: 25, power: 4, saturating: true };
+        let cfg = StormConfig {
+            rows: 25,
+            power: 4,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let n = (rng.next_u64() % 60) as usize; // sometimes empty
         for _ in 0..n {
@@ -525,7 +718,12 @@ fn prop_bank_pairs_match_per_row_hashes() {
     cases(60, 112, |rng, case| {
         let dim = gen_dim(rng, 1, 12);
         let p = 1 + (case % 8) as u32;
-        let cfg = StormConfig { rows: 9, power: p, saturating: true };
+        let cfg = StormConfig {
+            rows: 9,
+            power: p,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let sk = StormSketch::new(cfg, dim, case as u64);
         let bank = sk.bank();
         let z = gen_ball_point(rng, dim, 0.95);
@@ -542,7 +740,12 @@ fn prop_scaled_estimates_invariant_to_theta_magnitude_beyond_ball() {
     // radius (pure direction dependence) — the optimizer relies on this.
     cases(40, 108, |rng, case| {
         let dim = gen_dim(rng, 2, 8);
-        let cfg = StormConfig { rows: 30, power: 4, saturating: true };
+        let cfg = StormConfig {
+            rows: 30,
+            power: 4,
+            saturating: true,
+            counter_width: test_counter_width(),
+        };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         for _ in 0..50 {
             sk.insert(&gen_ball_point(rng, dim, 0.9));
