@@ -15,7 +15,6 @@ use storm::optim::dfo::DfoOptimizer;
 use storm::optim::FnOracle;
 use storm::sketch::privacy::PrivateStormRelease;
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 use storm::util::mathx::norm2;
 
 fn main() {

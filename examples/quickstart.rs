@@ -11,7 +11,6 @@ use storm::data::synthetic;
 use storm::linalg::solve::{lstsq, mse, LstsqMethod};
 use storm::optim::dfo::DfoOptimizer;
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 
 fn main() {
     // 1. A dataset (Table-1 substitute: airfoil, 1400 x 9).

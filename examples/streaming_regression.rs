@@ -23,7 +23,6 @@ use storm::optim::dfo::DfoOptimizer;
 use storm::sketch::delta::SketchDelta;
 use storm::sketch::serialize::{decode_delta, encode_delta, wire_bytes};
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 
 fn mode(delta: &SketchDelta) -> &'static str {
     if delta.populated_fraction() <= 0.5 {

@@ -1,0 +1,140 @@
+"""Independent Python mirror of the rust wire encoder (sketch/serialize.rs).
+
+Used to cross-compute the golden byte fixtures checked into the rust test
+suite: the fixtures in ``rust/src/sketch/serialize.rs`` must equal what
+this mirror produces, so a drift in either implementation fails loudly.
+Run directly to print every fixture:
+
+    python3 python/tests/wire_mirror.py
+
+The mirror is deliberately dependency-free and structured like the wire
+spec, not like the rust code.
+"""
+
+import struct
+
+MAGIC = 0x53544F52
+FLAG_DENSE = 0
+FLAG_SPARSE = 1
+FLAG_TASK_CLASSIFICATION = 2
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0x811C9DC5
+    for b in data:
+        h ^= b
+        h = (h * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def varint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def header(version, power, rows, dim, seed, count) -> bytes:
+    return struct.pack("<IHHIIQQ", MAGIC, version, power, rows, dim, seed, count)
+
+
+def encode_v1(power, rows, dim, seed, count, counts) -> bytes:
+    body = header(1, power, rows, dim, seed, count)
+    body += b"".join(struct.pack("<I", c) for c in counts)
+    return body + struct.pack("<I", fnv1a(body))
+
+
+def encode_delta(
+    power,
+    rows,
+    dim,
+    seed,
+    count,
+    epoch,
+    counts,
+    width_bytes=4,
+    classification=False,
+) -> bytes:
+    """v2 (u32 regression) or v3 (narrow width and/or classification)."""
+    v3 = width_bytes != 4 or classification
+    body = header(3 if v3 else 2, power, rows, dim, seed, count)
+    body += struct.pack("<Q", epoch)
+    if v3:
+        body += bytes([width_bytes])
+    task_bit = FLAG_TASK_CLASSIFICATION if (classification and v3) else 0
+    nonzero = [(i, c) for i, c in enumerate(counts) if c != 0]
+    if len(nonzero) * 2 <= len(counts):  # populated fraction <= 50%
+        body += bytes([FLAG_SPARSE | task_bit])
+        body += varint(len(nonzero))
+        prev = None
+        for i, c in nonzero:
+            body += varint(i if prev is None else i - prev)
+            body += varint(c)
+            prev = i
+    else:
+        body += bytes([FLAG_DENSE | task_bit])
+        fmt = {1: "<B", 2: "<H", 4: "<I"}[width_bytes]
+        body += b"".join(struct.pack(fmt, c) for c in counts)
+    return body + struct.pack("<I", fnv1a(body))
+
+
+# The checked-in fixture shapes (see serialize.rs golden_* constructors).
+SPARSE = dict(
+    power=2, rows=2, dim=3, seed=0x1122334455667788, count=5, epoch=7,
+    counts=[0, 3, 0, 1, 0, 0, 0, 2],
+)
+DENSE = dict(
+    power=2, rows=2, dim=2, seed=0x0807060504030201, count=11, epoch=9,
+    counts=[1, 2, 3, 4, 5, 6, 0, 7],
+)
+DENSE_U16 = dict(
+    power=2, rows=2, dim=2, seed=0x0807060504030201, count=11, epoch=9,
+    counts=[1, 300, 3, 4, 5, 6, 0, 700],
+)
+
+
+def encode_v3_u32_regression(spec) -> bytes:
+    """The explicit v3-at-u32 regression frame (rust encode_delta_v3;
+    the implicit encoder ships u32 regression deltas as v2 instead)."""
+    body = header(3, spec["power"], spec["rows"], spec["dim"], spec["seed"], spec["count"])
+    body += struct.pack("<Q", spec["epoch"])
+    body += bytes([4])
+    nonzero = [(i, c) for i, c in enumerate(spec["counts"]) if c != 0]
+    assert len(nonzero) * 2 <= len(spec["counts"])
+    body += bytes([FLAG_SPARSE])
+    body += varint(len(nonzero))
+    prev = None
+    for i, c in nonzero:
+        body += varint(i if prev is None else i - prev)
+        body += varint(c)
+        prev = i
+    return body + struct.pack("<I", fnv1a(body))
+
+
+def fixtures():
+    """Every golden fixture checked into rust/src/sketch/serialize.rs,
+    keyed by its Rust constant name."""
+    s, d, d16 = SPARSE, DENSE, DENSE_U16
+    return {
+        "GOLDEN_V1_DENSE_HEX": encode_v1(
+            s["power"], s["rows"], s["dim"], s["seed"], s["count"], s["counts"]
+        ),
+        "GOLDEN_V2_SPARSE_HEX": encode_delta(**s),
+        "GOLDEN_V2_DENSE_HEX": encode_delta(**d),
+        "GOLDEN_V3_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1),
+        "GOLDEN_V3_U16_DENSE_HEX": encode_delta(**d16, width_bytes=2),
+        "GOLDEN_V3_U32_SPARSE_HEX": encode_v3_u32_regression(s),
+        # Classifier deltas: same logical grids, task bit set (always v3).
+        "GOLDEN_CLF_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1, classification=True),
+        "GOLDEN_CLF_U16_DENSE_HEX": encode_delta(**d16, width_bytes=2, classification=True),
+        "GOLDEN_CLF_U32_SPARSE_HEX": encode_delta(**s, width_bytes=4, classification=True),
+    }
+
+
+if __name__ == "__main__":
+    for name, data in fixtures().items():
+        print(f"{name} = {data.hex()}")

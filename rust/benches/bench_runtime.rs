@@ -6,7 +6,6 @@ use storm::config::StormConfig;
 use storm::coordinator::oracle::XlaRiskOracle;
 use storm::runtime::XlaStorm;
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 use storm::testing::gen_ball_point;
 use storm::util::bench::{bench_items, black_box, config_from_env, section};
 use storm::util::rng::Xoshiro256;

@@ -12,7 +12,6 @@ use storm::sketch::serialize::{
     decode, decode_delta, delta_wire_bytes, encode, encode_delta, wire_bytes,
 };
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 use storm::testing::gen_ball_point;
 use storm::util::bench::{bench_items, black_box, config_from_env, section, JsonReporter};
 use storm::util::rng::Xoshiro256;
@@ -174,7 +173,13 @@ fn main() {
     // identical, so insert/query throughput shows the pure effect of the
     // narrower counter buffer (smaller working set vs the widening read).
     for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
-        let scfg = StormConfig { rows: 100, power: 4, saturating: true, counter_width: width };
+        let scfg = StormConfig {
+            rows: 100,
+            power: 4,
+            saturating: true,
+            counter_width: width,
+            ..Default::default()
+        };
         let mut rng = Xoshiro256::new(5);
         let data: Vec<Vec<f64>> =
             (0..1024).map(|_| gen_ball_point(&mut rng, 22, 0.9)).collect();

@@ -79,6 +79,48 @@ impl std::fmt::Display for CounterWidth {
     }
 }
 
+/// The learning task a sketch model estimates risk for. The paper proves
+/// both ends: Theorem 2 (regression via the paired PRP surrogate) and
+/// Theorem 3 (max-margin classification via the single-arm margin hash).
+/// The whole pipeline — device, fleet, wire, driver — dispatches on this
+/// one knob (`[storm] task` / CLI `--task`); see
+/// [`crate::sketch::model::StormModel`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Least-squares regression over augmented `[x, y]` examples
+    /// (Theorem 2). The seed behaviour, and the default.
+    #[default]
+    Regression,
+    /// Max-margin binary classification over labelled `[x, y]` examples
+    /// with `y` in {-1, +1} (Theorem 3): labels fold into the hash sign.
+    Classification,
+}
+
+impl Task {
+    /// Config/CLI name (`regression` | `classification`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Regression => "regression",
+            Task::Classification => "classification",
+        }
+    }
+
+    /// Parse a config/CLI name; `None` for anything else.
+    pub fn parse(s: &str) -> Option<Task> {
+        match s.trim() {
+            "regression" => Some(Task::Regression),
+            "classification" => Some(Task::Classification),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Sketch hyperparameters (Section 3 / 4.1 of the paper).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StormConfig {
@@ -91,6 +133,10 @@ pub struct StormConfig {
     pub saturating: bool,
     /// Counter cell width (`u32` default — the seed representation).
     pub counter_width: CounterWidth,
+    /// Which risk the sketch estimates (regression is the seed default).
+    /// The concrete sketch constructors normalize this to their own task;
+    /// [`crate::sketch::model::StormModel`] dispatches on it.
+    pub task: Task,
 }
 
 impl Default for StormConfig {
@@ -100,6 +146,7 @@ impl Default for StormConfig {
             power: 4,
             saturating: true,
             counter_width: CounterWidth::U32,
+            task: Task::Regression,
         }
     }
 }
@@ -118,12 +165,16 @@ impl StormConfig {
     }
 
     /// True when two sketches/deltas of these configs can be merged:
-    /// identical geometry and overflow policy. Counter *width* is allowed
-    /// to differ — merges widen narrow-into-wide exactly (and clip
-    /// wide-into-narrow at the destination's width, same as local
-    /// saturation).
+    /// identical geometry, overflow policy and *task* (a classification
+    /// delta folded into a regression sketch would silently mix two
+    /// different hash families). Counter *width* is allowed to differ —
+    /// merges widen narrow-into-wide exactly (and clip wide-into-narrow
+    /// at the destination's width, same as local saturation).
     pub fn merge_compatible(&self, other: &StormConfig) -> bool {
-        self.rows == other.rows && self.power == other.power && self.saturating == other.saturating
+        self.rows == other.rows
+            && self.power == other.power
+            && self.saturating == other.saturating
+            && self.task == other.task
     }
 }
 
@@ -259,6 +310,14 @@ impl RunConfig {
                         ))
                     })?
                 }
+                ("storm", "task") => {
+                    cfg.storm.task = Task::parse(value.as_str()).ok_or_else(|| {
+                        ConfigError::Parse(format!(
+                            "storm.task must be regression|classification, got {:?}",
+                            value.as_str()
+                        ))
+                    })?
+                }
                 ("optimizer", "queries") => {
                     cfg.optimizer.queries = value.as_usize().map_err(ConfigError::Parse)?
                 }
@@ -367,6 +426,28 @@ mod tests {
         assert!(!base.merge_compatible(&StormConfig { rows: base.rows + 1, ..base }));
         assert!(!base.merge_compatible(&StormConfig { power: 3, ..base }));
         assert!(!base.merge_compatible(&StormConfig { saturating: false, ..base }));
+        assert!(
+            !base.merge_compatible(&StormConfig { task: Task::Classification, ..base }),
+            "cross-task merges must be rejected: the hash families differ"
+        );
+    }
+
+    #[test]
+    fn task_parse_display_and_default() {
+        assert_eq!(Task::parse("regression"), Some(Task::Regression));
+        assert_eq!(Task::parse(" classification "), Some(Task::Classification));
+        assert_eq!(Task::parse("clustering"), None);
+        assert_eq!(Task::default(), Task::Regression);
+        assert_eq!(Task::Classification.to_string(), "classification");
+    }
+
+    #[test]
+    fn task_key_parses_and_rejects_bad_values() {
+        let cfg = RunConfig::from_toml_str("[storm]\ntask = \"classification\"\n").unwrap();
+        assert_eq!(cfg.storm.task, Task::Classification);
+        let cfg = RunConfig::from_toml_str("[storm]\nrows = 10\n").unwrap();
+        assert_eq!(cfg.storm.task, Task::Regression, "seed default is regression");
+        assert!(RunConfig::from_toml_str("[storm]\ntask = \"ranking\"\n").is_err());
     }
 
     #[test]

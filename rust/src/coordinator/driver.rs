@@ -10,17 +10,19 @@
 //! reference. With `sync_rounds = 1` this degenerates to the classic
 //! one-shot pipeline (sketch everything, then train once).
 
-use crate::config::{RunConfig, StormConfig};
+use crate::config::{RunConfig, StormConfig, Task};
 use crate::data::dataset::Dataset;
-use crate::data::scale::scale_to_unit_ball_quantile;
+use crate::data::scale::{scale_features_to_unit_ball, scale_to_unit_ball_quantile};
 use crate::data::stream::partition_streams;
-use crate::edge::fleet::run_fleet_with;
+use crate::edge::fleet::run_fleet_model_with;
 use crate::edge::topology::Topology;
 use crate::linalg::solve::{lstsq, mse, LstsqMethod};
+use crate::loss::margin::{accuracy, exact_margin_risk};
 use crate::optim::dfo::DfoOptimizer;
 use crate::optim::linopt::{linear_partition_init, LinOptConfig};
 use crate::runtime::XlaStorm;
-use crate::sketch::Sketch;
+use crate::sketch::model::StormModel;
+use crate::sketch::RiskSketch;
 use anyhow::Result;
 
 /// Which backend evaluates sketch queries during training.
@@ -54,14 +56,20 @@ pub struct RoundPoint {
 pub struct TrainReport {
     pub dataset: String,
     pub backend: QueryBackend,
+    /// The learning task the run trained (`[storm] task`).
+    pub task: Task,
     /// Model trained from the sketch alone.
     pub theta: Vec<f64>,
-    /// Exact least-squares reference model on the same (scaled) data.
+    /// Exact reference model on the same (scaled) data: least squares for
+    /// regression, the ridge linear probe for classification.
     pub theta_ls: Vec<f64>,
-    /// Training MSE of the sketch model (scaled units).
+    /// Training loss of the sketch model (scaled units): MSE for
+    /// regression, exact margin risk for classification.
     pub mse_storm: f64,
-    /// Training MSE of the least-squares reference.
+    /// Training loss of the reference model (same loss as `mse_storm`).
     pub mse_ls: f64,
+    /// 0-1 training accuracy of the sketch model (classification only).
+    pub accuracy: Option<f64>,
     /// Relative parameter distance ||theta - theta_ls|| / ||theta_ls||.
     pub param_err: f64,
     /// Leader (accumulator-tier) counter memory, width-true.
@@ -87,44 +95,79 @@ pub struct TrainReport {
 }
 
 impl TrainReport {
-    /// One-line human summary.
+    /// One-line human summary. The regression format is unchanged from
+    /// the seed; classification swaps the loss names and adds accuracy.
     pub fn summary(&self) -> String {
         let chaos = if self.fault_events > 0 {
             format!(" faults={} retransmit={}B", self.fault_events, self.retransmit_bytes)
         } else {
             String::new()
         };
-        format!(
-            "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}",
-            self.dataset,
-            self.mse_storm,
-            self.mse_ls,
-            self.mse_storm / self.mse_ls.max(1e-300),
-            self.param_err,
-            self.sketch_bytes,
-            self.device_sketch_bytes,
-            self.raw_bytes,
-            self.network_bytes,
-            self.rounds.len().max(1),
-            chaos,
-        )
+        match self.task {
+            Task::Regression => format!(
+                "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}",
+                self.dataset,
+                self.mse_storm,
+                self.mse_ls,
+                self.mse_storm / self.mse_ls.max(1e-300),
+                self.param_err,
+                self.sketch_bytes,
+                self.device_sketch_bytes,
+                self.raw_bytes,
+                self.network_bytes,
+                self.rounds.len().max(1),
+                chaos,
+            ),
+            Task::Classification => format!(
+                "{}: margin-risk={:.4e} probe-risk={:.4e} acc={:.1}% sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}",
+                self.dataset,
+                self.mse_storm,
+                self.mse_ls,
+                self.accuracy.unwrap_or(0.0) * 100.0,
+                self.sketch_bytes,
+                self.device_sketch_bytes,
+                self.raw_bytes,
+                self.network_bytes,
+                self.rounds.len().max(1),
+                chaos,
+            ),
+        }
     }
 }
 
-/// Train STORM end-to-end on a dataset according to `cfg`.
+/// Train STORM end-to-end on a dataset according to `cfg` — for either
+/// task: `cfg.storm.task` selects the regression sketch or the margin
+/// classifier, and everything below (fleet rounds, deltas, DFO between
+/// barriers) is the same trait-driven pipeline over
+/// [`StormModel`].
 ///
 /// `topology` shapes the fleet aggregation; `backend` selects the query
 /// path. The XLA backend requires `cfg.artifacts_dir` with a compiled
-/// artifact pair matching `(d+1, rows, power)`.
+/// artifact pair matching `(d+1, rows, power)` and is regression-only.
 pub fn train(
     cfg: &RunConfig,
     mut ds: Dataset,
     topology: Topology,
     backend: QueryBackend,
 ) -> Result<TrainReport> {
-    // 1. Scale into the unit ball (asymmetric-LSH requirement). Quantile
-    //    scaling keeps typical norms informative — see data::scale docs.
-    scale_to_unit_ball_quantile(&mut ds, crate::data::scale::DEFAULT_RADIUS, 0.9);
+    let task = cfg.storm.task;
+    anyhow::ensure!(
+        !(task == Task::Classification && backend == QueryBackend::Xla),
+        "the XLA query backend supports task = regression only"
+    );
+    // 1. Scale into the unit ball (asymmetric-LSH requirement).
+    //    Regression scales the augmented [x, y] examples (quantile
+    //    scaling keeps typical norms informative — see data::scale
+    //    docs); classification scales features only, because ±1 labels
+    //    fold into the hash sign and must stay exact.
+    match task {
+        Task::Regression => {
+            scale_to_unit_ball_quantile(&mut ds, crate::data::scale::DEFAULT_RADIUS, 0.9);
+        }
+        Task::Classification => {
+            scale_features_to_unit_ball(&mut ds, crate::data::scale::DEFAULT_RADIUS);
+        }
+    }
     let d = ds.dim();
     let raw_bytes = ds.raw_bytes();
 
@@ -145,7 +188,7 @@ pub fn train(
     let mut xla_err: Option<anyhow::Error> = None;
     let mut train_secs = 0.0f64;
 
-    let result = run_fleet_with(
+    let result = run_fleet_model_with::<StormModel, _>(
         cfg.fleet,
         cfg.storm,
         topology,
@@ -160,19 +203,28 @@ pub fn train(
                     break 'train;
                 }
                 // Warm start once, from the first non-empty sketch state.
+                // The partition perceptron reads PRP hyperplanes, so it
+                // is regression-only; the classifier starts at zero.
                 let opt = opt.get_or_insert_with(|| {
-                    let init = linear_partition_init(sketch, LinOptConfig::default());
-                    DfoOptimizer::new(cfg.optimizer, d).with_init(&init)
+                    match sketch.as_regression() {
+                        Some(reg) => {
+                            let init = linear_partition_init(reg, LinOptConfig::default());
+                            DfoOptimizer::new(cfg.optimizer, d).with_init(&init)
+                        }
+                        None => DfoOptimizer::new(cfg.optimizer, d),
+                    }
                 });
                 let theta = match backend {
                     QueryBackend::Rust => {
                         // Each DFO iteration submits its whole candidate
                         // set through RiskOracle::risk_batch — the fused
-                        // hash-bank query kernel, zero per-candidate
-                        // allocation (EXPERIMENTS.md §Perf).
+                        // hash-bank query kernels of BOTH tasks, zero
+                        // per-candidate allocation (EXPERIMENTS.md §Perf).
                         opt.run(sketch, iters)
                     }
                     QueryBackend::Xla => {
+                        // Gated to regression at entry.
+                        let reg = sketch.as_regression().expect("xla backend is regression-only");
                         if xla_exe.is_none() {
                             let dir = cfg
                                 .artifacts_dir
@@ -183,7 +235,7 @@ pub fn train(
                                 d + 1,
                                 cfg.storm.rows,
                                 cfg.storm.power,
-                                sketch.hashes(),
+                                reg.hashes(),
                             ) {
                                 Ok(exe) => xla_exe = Some(exe),
                                 Err(e) => {
@@ -195,7 +247,7 @@ pub fn train(
                         let exe = xla_exe.as_ref().expect("loaded xla executable");
                         // A fresh oracle per round snapshots the leader's
                         // evolving counters; the optimizer state persists.
-                        let oracle = crate::coordinator::oracle::XlaRiskOracle::new(exe, sketch);
+                        let oracle = crate::coordinator::oracle::XlaRiskOracle::new(exe, reg);
                         let theta = opt.run(&oracle, iters);
                         if let Some(err) = oracle.last_error() {
                             xla_err = Some(anyhow::anyhow!("XLA query path failed: {err}"));
@@ -206,6 +258,8 @@ pub fn train(
                 };
                 theta_opt = Some(theta);
             }
+            // For classification this is the per-round *margin-loss*
+            // risk estimate — the anytime trace of Theorem 3 training.
             let risk = opt
                 .as_ref()
                 .and_then(|o| o.trace().last())
@@ -235,19 +289,48 @@ pub fn train(
         })
         .collect();
 
-    // 4. Score against exact least squares on the same scaled data.
-    let theta_ls = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
-    let mse_storm = mse(&ds.x, &ds.y, &theta);
-    let mse_ls = mse(&ds.x, &ds.y, &theta_ls);
-    let param_err = crate::metrics::relative_param_error(&theta, &theta_ls);
+    // 4. Score against an exact reference on the same scaled data:
+    //    least squares + MSE for regression; for classification, the
+    //    ridge linear probe and the exact margin risk of Theorem 3 (the
+    //    loss the sketch actually estimates), plus 0-1 accuracy.
+    let (theta_ls, mse_storm, mse_ls, param_err, acc) = match task {
+        Task::Regression => {
+            let theta_ls = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
+            let mse_storm = mse(&ds.x, &ds.y, &theta);
+            let mse_ls = mse(&ds.x, &ds.y, &theta_ls);
+            let param_err = crate::metrics::relative_param_error(&theta, &theta_ls);
+            (theta_ls, mse_storm, mse_ls, param_err, None)
+        }
+        Task::Classification => {
+            let xs: Vec<Vec<f64>> = (0..ds.len()).map(|i| ds.x.row(i).to_vec()).collect();
+            let p = cfg.storm.power;
+            let theta_ls = lstsq(&ds.x, &ds.y, 1e-6, LstsqMethod::NormalEquations);
+            let risk_storm =
+                if xs.is_empty() { 0.0 } else { exact_margin_risk(&theta, &xs, &ds.y, p) };
+            let risk_probe =
+                if xs.is_empty() { 0.0 } else { exact_margin_risk(&theta_ls, &xs, &ds.y, p) };
+            // Only the hyperplane *direction* is identified — compare
+            // unit-normalized parameters.
+            let unit = |t: &[f64]| {
+                let n = crate::util::mathx::norm2(t);
+                if n > 0.0 { t.iter().map(|v| v / n).collect() } else { t.to_vec() }
+            };
+            let param_err =
+                crate::metrics::relative_param_error(&unit(&theta), &unit(&theta_ls));
+            let acc = if xs.is_empty() { 0.0 } else { accuracy(&theta, &xs, &ds.y) };
+            (theta_ls, risk_storm, risk_probe, param_err, Some(acc))
+        }
+    };
 
     Ok(TrainReport {
         dataset: ds.name.clone(),
         backend,
+        task,
         theta,
         theta_ls,
         mse_storm,
         mse_ls,
+        accuracy: acc,
         param_err,
         sketch_bytes: sketch.bytes(),
         device_sketch_bytes: result
@@ -437,6 +520,74 @@ mod tests {
         assert!(s.contains("storm-mse=") && s.contains("sketch=") && s.contains("rounds="));
         assert!(s.contains("device-sketch="));
         assert_eq!(report.device_sketch_bytes, report.sketch_bytes, "same tier width by default");
+    }
+
+    fn quick_clf_cfg() -> RunConfig {
+        let mut cfg = quick_cfg();
+        cfg.dataset = "synth2d-clf".to_string();
+        cfg.storm.task = Task::Classification;
+        // Margin-risk estimates are noisier per row than the paired PRP
+        // surrogate; more rows + the convex p = 2 margin loss keep the
+        // DFO landscape informative.
+        cfg.storm.rows = 600;
+        cfg.storm.power = 2;
+        cfg.optimizer.iters = 400;
+        cfg
+    }
+
+    #[test]
+    fn classification_trains_end_to_end_through_the_fleet() {
+        let ds = synthetic::synth2d_classification(1500, 0.8, 0.2, 13);
+        let report = train(&quick_clf_cfg(), ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(report.task, Task::Classification);
+        assert_eq!(report.examples, 1500);
+        let acc = report.accuracy.expect("classification reports accuracy");
+        // Well-separated blobs: the sketch-trained hyperplane must
+        // clearly classify (the zero model scores 0, chance is ~0.5).
+        assert!(acc > 0.7, "accuracy {acc}");
+        // The exact margin risk of the trained model beats the
+        // uninformative zero direction (whose risk is exactly 1.0).
+        assert!(report.mse_storm < 0.9, "margin risk {}", report.mse_storm);
+        assert!(report.summary().contains("margin-risk=") && report.summary().contains("acc="));
+        assert!(!report.trace.is_empty());
+        assert!(report.network_bytes > 0);
+    }
+
+    #[test]
+    fn classification_trains_under_faults_with_identical_final_counters() {
+        // End-to-end acceptance: a chaotic classification fleet completes,
+        // learns, and (determinism) reproduces itself run-to-run.
+        let ds = synthetic::synth2d_classification(1500, 0.8, 0.2, 13);
+        let mut cfg = quick_clf_cfg();
+        cfg.fleet.sync_rounds = 4;
+        cfg.fleet.devices = 4;
+        cfg.fleet.faults_seed = Some(0xC1A5);
+        let a = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.examples, 1500);
+        assert_eq!(a.rounds.len(), 4, "every round must close under faults");
+        assert!(a.fault_events > 0, "chaos was vacuous");
+        // Per-round margin-loss risks are recorded for trained rounds.
+        assert!(a.rounds.iter().any(|r| r.risk.is_finite()), "{:?}", a.rounds);
+        let b = train(&cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.theta, b.theta, "chaotic training is deterministic per seed");
+    }
+
+    #[test]
+    fn classification_topologies_produce_identical_models() {
+        let ds = synthetic::synth2d_classification(600, 0.8, 0.2, 5);
+        let mut cfg = quick_clf_cfg();
+        cfg.optimizer.iters = 60;
+        let a = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
+        let b = train(&cfg, ds, Topology::Chain, QueryBackend::Rust).unwrap();
+        assert_eq!(a.theta, b.theta);
+    }
+
+    #[test]
+    fn classification_rejects_the_xla_backend() {
+        let ds = synthetic::synth2d_classification(100, 0.8, 0.2, 5);
+        let err = train(&quick_clf_cfg(), ds, Topology::Star, QueryBackend::Xla);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("regression only"));
     }
 
     #[test]

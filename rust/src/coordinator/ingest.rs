@@ -103,7 +103,6 @@ mod tests {
     use crate::data::dataset::Dataset;
     use crate::data::stream::ReplayStream;
     use crate::linalg::matrix::Matrix;
-    use crate::sketch::Sketch;
 
     fn toy_dataset(n: usize) -> Dataset {
         let x = Matrix::from_fn(n, 2, |r, c| ((r * 2 + c) % 7) as f64 * 0.1);

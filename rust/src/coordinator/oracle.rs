@@ -4,12 +4,11 @@
 //! oracle routes every risk evaluation through the AOT query executable —
 //! and because the executable evaluates K query vectors per call, the DFO
 //! optimizer's per-iteration probes are batched into a *single* PJRT
-//! execution via [`BatchedRiskOracle`].
+//! execution via [`XlaRiskOracle::risks`].
 
 use crate::optim::RiskOracle;
 use crate::runtime::XlaStorm;
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 use crate::util::mathx::norm2;
 use std::cell::{Cell, RefCell};
 

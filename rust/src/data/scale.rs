@@ -91,6 +91,26 @@ pub fn scale_to_unit_ball_quantile(ds: &mut Dataset, radius: f64, quantile: f64)
     s
 }
 
+/// Scale only the *features* into the unit ball, leaving labels
+/// untouched — the classification-task scaler. The margin hash folds the
+/// ±1 label into the hash *sign* (`-y * x`), so the hashed vector's norm
+/// is `||x||` and labels must stay exactly ±1; scaling them (as the
+/// regression scalers do) would corrupt the task. Returns the applied
+/// factor.
+pub fn scale_features_to_unit_ball(ds: &mut Dataset, radius: f64) -> f64 {
+    assert!((0.0..1.0).contains(&radius) && radius > 0.0);
+    let max_norm = (0..ds.len())
+        .map(|i| ds.x.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+        .fold(0.0f64, f64::max);
+    if max_norm == 0.0 {
+        return 1.0;
+    }
+    let s = radius / max_norm;
+    ds.x.scale(s);
+    ds.scale_factor *= s;
+    s
+}
+
 /// Maximum augmented-example norm (diagnostic + test helper).
 pub fn max_augmented_norm(ds: &Dataset) -> f64 {
     (0..ds.len())
@@ -115,6 +135,19 @@ mod tests {
     fn ds() -> Dataset {
         let x = Matrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
         Dataset::new("s", x, vec![4.0, 3.0])
+    }
+
+    #[test]
+    fn feature_scaler_leaves_labels_exact() {
+        let x = Matrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        let mut d = Dataset::new("clf", x, vec![1.0, -1.0]);
+        let s = scale_features_to_unit_ball(&mut d, 0.9);
+        assert!((s - 0.225).abs() < 1e-12, "max feature norm 4 -> 0.9");
+        assert_eq!(d.y, vec![1.0, -1.0], "labels must stay exactly ±1");
+        let max_feat = (0..d.len())
+            .map(|i| d.x.row(i).iter().map(|v| v * v).sum::<f64>().sqrt())
+            .fold(0.0f64, f64::max);
+        assert!((max_feat - 0.9).abs() < 1e-12);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use super::network::Message;
 use crate::config::StormConfig;
 use crate::data::stream::StreamSource;
 use crate::sketch::serialize::encode_delta;
-use crate::sketch::storm::StormSketch;
+use crate::sketch::RiskSketch;
 
 /// Device runtime parameters.
 #[derive(Clone, Copy, Debug)]
@@ -42,11 +42,12 @@ pub struct DeviceConfig {
     /// (`StreamSource::remaining_hint` returns `None`); hinted streams
     /// split their remaining length evenly across rounds instead.
     pub fallback_round_examples: usize,
-    /// Sketch configuration (must match fleet-wide; merging enforces it).
+    /// Sketch configuration — including the learning *task* — (must
+    /// match fleet-wide; merging enforces it).
     pub storm: StormConfig,
     /// Shared hash-family seed (fleet-wide).
     pub family_seed: u64,
-    /// Augmented example dimension (d + 1).
+    /// Streamed example dimension (d + 1): `[x, y]` for both tasks.
     pub dim: usize,
     /// Fault schedule (None = ideal network, the PR-2 path bit-for-bit).
     pub plan: Option<FaultPlan>,
@@ -96,17 +97,19 @@ fn flush_ends(
 }
 
 /// Run one device through all sync rounds: sketch into the long-lived
-/// local sketch, emit one delta + `EndRound` per round (deferred or
+/// local model, emit one delta + `EndRound` per round (deferred or
 /// coalesced under faults), then `Done`. This is the body of each fleet
-/// thread.
-pub fn run_device(
+/// thread — generic over the sketch model, so regression and
+/// classification devices run the identical protocol (same deltas, same
+/// barriers, same recovery paths).
+pub fn run_device<M: RiskSketch>(
     cfg: DeviceConfig,
     mut stream: Box<dyn StreamSource>,
     link: ChaosLink,
 ) -> DeviceReport {
     let rounds = cfg.rounds.max(1);
     let last_epoch = rounds as u64 - 1;
-    let mut sketch = StormSketch::new(cfg.storm, cfg.dim, cfg.family_seed);
+    let mut sketch = M::build(cfg.storm, cfg.dim, cfg.family_seed);
     let mut snap = sketch.snapshot();
     let mut report = DeviceReport { id: cfg.id, ..Default::default() };
     let timer = crate::util::timer::Timer::start();
@@ -259,8 +262,9 @@ mod tests {
     use crate::data::stream::ReplayStream;
     use crate::edge::network::Link;
     use crate::linalg::matrix::Matrix;
+    use crate::sketch::model::StormModel;
     use crate::sketch::serialize::decode_delta;
-    use crate::sketch::Sketch;
+    use crate::sketch::storm::StormSketch;
 
     fn toy_dataset(n: usize) -> Dataset {
         let x = Matrix::from_fn(n, 2, |r, c| ((r + c) % 5) as f64 * 0.1);
@@ -323,7 +327,11 @@ mod tests {
     fn device_sketches_whole_stream_across_rounds() {
         let ds = toy_dataset(50);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(0, 4), Box::new(ReplayStream::new(ds.clone())), plain(link));
+        let report = run_device::<StormSketch>(
+            dev_cfg(0, 4),
+            Box::new(ReplayStream::new(ds.clone())),
+            plain(link),
+        );
         assert_eq!(report.examples, 50);
         assert_eq!(report.rounds, 4);
         let msgs: Vec<Message> = rx.iter().collect();
@@ -343,7 +351,8 @@ mod tests {
     fn hinted_stream_splits_examples_evenly_across_rounds() {
         let ds = toy_dataset(64);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(1, 4), Box::new(ReplayStream::new(ds)), plain(link));
+        let report =
+            run_device::<StormSketch>(dev_cfg(1, 4), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.examples, 64);
         assert_eq!(report.deltas, 4);
         // 64 hinted examples over 4 rounds -> 16 per round.
@@ -379,7 +388,8 @@ mod tests {
         let mut cfg = dev_cfg(2, 5);
         cfg.batch = 2;
         cfg.fallback_round_examples = 3;
-        let report = run_device(cfg, Box::new(NoHint(ReplayStream::new(ds))), plain(link));
+        let report =
+            run_device::<StormSketch>(cfg, Box::new(NoHint(ReplayStream::new(ds))), plain(link));
         assert_eq!(report.examples, 10);
         assert_eq!(report.rounds, 5);
         let ends: Vec<(u64, u64)> = rx
@@ -400,7 +410,8 @@ mod tests {
     fn empty_stream_sends_endrounds_and_done_only() {
         let ds = toy_dataset(0);
         let (link, rx, _) = Link::new(16, 0, 0);
-        let report = run_device(dev_cfg(3, 3), Box::new(ReplayStream::new(ds)), plain(link));
+        let report =
+            run_device::<StormSketch>(dev_cfg(3, 3), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.examples, 0);
         assert_eq!(report.deltas, 0);
         let msgs: Vec<Message> = rx.iter().collect();
@@ -414,7 +425,8 @@ mod tests {
         let ds = toy_dataset(30);
         let (link, rx, _) = Link::new(8, 0, 0);
         drop(rx);
-        let report = run_device(dev_cfg(4, 3), Box::new(ReplayStream::new(ds)), plain(link));
+        let report =
+            run_device::<StormSketch>(dev_cfg(4, 3), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.examples, 30);
         assert_eq!(report.deltas, 0);
         assert_eq!(report.rounds, 3);
@@ -424,7 +436,8 @@ mod tests {
     fn single_round_device_ships_one_delta() {
         let ds = toy_dataset(40);
         let (link, rx, _) = Link::new(64, 0, 0);
-        let report = run_device(dev_cfg(5, 1), Box::new(ReplayStream::new(ds)), plain(link));
+        let report =
+            run_device::<StormSketch>(dev_cfg(5, 1), Box::new(ReplayStream::new(ds)), plain(link));
         assert_eq!(report.deltas, 1);
         let deltas = rx.iter().filter(|m| matches!(m, Message::Delta { .. })).count();
         assert_eq!(deltas, 1);
@@ -440,7 +453,8 @@ mod tests {
         let (link, rx, _) = Link::new(64, 0, 0);
         let mut cfg = dev_cfg(0, 4);
         cfg.storm.counter_width = crate::config::CounterWidth::U8;
-        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
+        let report =
+            run_device::<StormSketch>(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
         assert_eq!(report.examples, 50);
         assert_eq!(report.sketch_bytes, 10 * 8, "u8 cells: R x B x 1 byte");
         let msgs: Vec<Message> = rx.iter().collect();
@@ -472,7 +486,8 @@ mod tests {
         cfg.plan = Some(FaultPlan::drop_only(1, 1000));
         let chaos = ChaosLink::new(link, cfg.id as u64, cfg.plan);
         let fault_stats = chaos.stats();
-        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
+        let report =
+            run_device::<StormSketch>(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
         assert_eq!(report.examples, 48);
         assert_eq!(report.rounds, 6);
         let faults = fault_stats.snapshot();
@@ -495,7 +510,8 @@ mod tests {
         let (link, rx, _) = Link::new(256, 0, 0);
         let mut cfg = dev_cfg(7, 6);
         cfg.crash = Some((2, 2)); // silent for rounds 2 and 3
-        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
+        let report =
+            run_device::<StormSketch>(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
         assert_eq!(report.crashed_rounds, 2);
         assert_eq!(report.examples, 60, "backlog drained after restart");
         let msgs: Vec<Message> = rx.iter().collect();
@@ -524,7 +540,8 @@ mod tests {
         let (link, rx, _) = Link::new(256, 0, 0);
         let mut cfg = dev_cfg(8, 4);
         cfg.crash = Some((2, 2)); // rounds 2 and 3 (the final round) down
-        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
+        let report =
+            run_device::<StormSketch>(cfg, Box::new(ReplayStream::new(ds.clone())), plain(link));
         assert_eq!(report.examples, 40);
         let msgs: Vec<Message> = rx.iter().collect();
         let (merged, done, _) = reassemble(&msgs);
@@ -546,7 +563,8 @@ mod tests {
             ..FaultPlan::quiet(13)
         });
         let chaos = ChaosLink::new(link, cfg.id as u64, cfg.plan);
-        let report = run_device(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
+        let report =
+            run_device::<StormSketch>(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
         assert!(report.straggled > 0, "{report:?}");
         assert_eq!(report.examples, 50);
         let msgs: Vec<Message> = rx.iter().collect();
@@ -562,5 +580,54 @@ mod tests {
         let (merged, done, _) = reassemble(&msgs);
         assert_eq!(done, 50);
         assert_eq!(merged.grid().counts_u32(), reference_sketch(&ds).grid().counts_u32());
+    }
+
+    /// Labelled toy dataset: same features, ±1 labels.
+    fn toy_labelled_dataset(n: usize) -> Dataset {
+        let x = Matrix::from_fn(n, 2, |r, c| ((r + c) % 5) as f64 * 0.1);
+        let y = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new("dev-clf", x, y)
+    }
+
+    #[test]
+    fn classification_device_ships_task_tagged_deltas_that_reassemble() {
+        // A classifier device runs the identical round protocol — under
+        // drops — and its task-tagged deltas reassemble into a classifier
+        // model equal to a one-shot local build.
+        use crate::config::Task;
+        let ds = toy_labelled_dataset(48);
+        let (link, rx, _) = Link::new(256, 0, 0);
+        let mut cfg = dev_cfg(10, 5);
+        cfg.storm.task = Task::Classification;
+        cfg.plan = Some(FaultPlan::drop_only(1, 1000));
+        let chaos = ChaosLink::new(link, cfg.id as u64, cfg.plan);
+        let report = run_device::<StormModel>(cfg, Box::new(ReplayStream::new(ds.clone())), chaos);
+        assert_eq!(report.examples, 48);
+        assert_eq!(report.rounds, 5);
+        let msgs: Vec<Message> = rx.iter().collect();
+        let mut merged = StormModel::new(cfg.storm, 3, 42);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut done = 0;
+        for msg in &msgs {
+            match msg {
+                Message::Delta { from, epoch, payload } => {
+                    if !seen.insert((*from, *epoch)) {
+                        continue;
+                    }
+                    let d = decode_delta(payload).unwrap();
+                    assert_eq!(d.cfg.task, Task::Classification, "task bit must ride the wire");
+                    merged.apply_delta(&d);
+                }
+                Message::Done { examples, .. } => done = *examples,
+                Message::EndRound { .. } => {}
+            }
+        }
+        assert_eq!(done, 48);
+        let mut reference = StormModel::new(cfg.storm, 3, 42);
+        for i in 0..ds.len() {
+            reference.insert(&ds.augmented(i));
+        }
+        assert_eq!(merged.grid().counts_u32(), reference.grid().counts_u32());
+        assert_eq!(merged.count(), 48);
     }
 }

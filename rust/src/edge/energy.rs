@@ -104,7 +104,13 @@ mod tests {
         let m = EnergyModel::default();
         let at = |w: CounterWidth| {
             m.flush_tx_energy(
-                &StormConfig { rows: 100, power: 4, saturating: true, counter_width: w },
+                &StormConfig {
+                    rows: 100,
+                    power: 4,
+                    saturating: true,
+                    counter_width: w,
+                    ..Default::default()
+                },
                 100,
             )
         };

@@ -6,6 +6,14 @@
 //! hands its evolving sketch to the `on_round` callback — which is where
 //! the coordinator interleaves training (the anytime model).
 //!
+//! **Task-generic.** The whole pipeline is generic over
+//! [`crate::sketch::RiskSketch`] (`run_fleet_model*`): a regression
+//! fleet and a classification fleet run the *same* protocol — deltas,
+//! barriers, quorums, fault recovery — because everything above the
+//! model is counter algebra. The aggregator tier never even constructs a
+//! model; it folds task-tagged deltas. The `run_fleet*` wrappers keep
+//! the seed's regression-typed signatures.
+//!
 //! Because counter merging is associative and commutative, R rounds of
 //! delta merges produce a leader sketch bit-identical to the one-shot
 //! full-sketch merge (property-tested in `proptest_invariants.rs`);
@@ -50,7 +58,7 @@ use crate::data::stream::StreamSource;
 use crate::sketch::delta::{pool_delta, SketchDelta};
 use crate::sketch::serialize::{decode_delta, encode_delta};
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
+use crate::sketch::RiskSketch;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -67,11 +75,12 @@ pub struct RoundStat {
     pub deltas: u64,
 }
 
-/// Result of a fleet run.
-pub struct FleetResult {
-    /// The leader's merged sketch — the only artifact that leaves the
+/// Result of a fleet run, generic over the sketch model (defaults to the
+/// regression sketch, the seed behaviour).
+pub struct FleetResult<M = StormSketch> {
+    /// The leader's merged model — the only artifact that leaves the
     /// fleet, and everything training needs.
-    pub sketch: StormSketch,
+    pub sketch: M,
     pub devices: Vec<DeviceReport>,
     /// Aggregate link statistics across every hop (with per-round
     /// breakdown in `network.rounds`).
@@ -145,8 +154,11 @@ fn quorum_of(min_quorum: usize, children: usize) -> usize {
     }
 }
 
-/// Run a fleet over per-device streams. `dim` is the augmented example
-/// dimension (d + 1); `family_seed` fixes the shared hash family.
+/// Run a regression fleet over per-device streams. `dim` is the
+/// augmented example dimension (d + 1); `family_seed` fixes the shared
+/// hash family. Thin wrapper over [`run_fleet_model`] at the seed's
+/// regression type — the task-generic entry points are the `*_model`
+/// family.
 pub fn run_fleet(
     fleet: FleetConfig,
     storm: StormConfig,
@@ -155,7 +167,7 @@ pub fn run_fleet(
     family_seed: u64,
     streams: Vec<Box<dyn StreamSource>>,
 ) -> FleetResult {
-    run_fleet_with(fleet, storm, topology, dim, family_seed, streams, |_, _| {})
+    run_fleet_model::<StormSketch>(fleet, storm, topology, dim, family_seed, streams)
 }
 
 /// [`run_fleet`] with a per-round hook: `on_round(round, sketch)` runs on
@@ -172,8 +184,9 @@ pub fn run_fleet_with(
     streams: Vec<Box<dyn StreamSource>>,
     on_round: impl FnMut(u64, &StormSketch),
 ) -> FleetResult {
-    let plan = fleet.faults_seed.map(FaultPlan::from_seed);
-    run_fleet_chaos(fleet, storm, topology, dim, family_seed, streams, plan, on_round)
+    run_fleet_model_with::<StormSketch, _>(
+        fleet, storm, topology, dim, family_seed, streams, on_round,
+    )
 }
 
 /// [`run_fleet_with`] under an explicit fault plan (tests and the
@@ -188,8 +201,56 @@ pub fn run_fleet_chaos(
     family_seed: u64,
     streams: Vec<Box<dyn StreamSource>>,
     fault_plan: Option<FaultPlan>,
-    mut on_round: impl FnMut(u64, &StormSketch),
+    on_round: impl FnMut(u64, &StormSketch),
 ) -> FleetResult {
+    run_fleet_model_chaos::<StormSketch, _>(
+        fleet, storm, topology, dim, family_seed, streams, fault_plan, on_round,
+    )
+}
+
+/// Task-generic fleet: run any [`RiskSketch`] model — the regression
+/// sketch, the margin classifier, or the runtime-dispatched
+/// [`crate::sketch::model::StormModel`] — through the identical round
+/// protocol. `dim` is the streamed example dimension (d + 1) for every
+/// task.
+pub fn run_fleet_model<M: RiskSketch + 'static>(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+) -> FleetResult<M> {
+    run_fleet_model_with::<M, _>(fleet, storm, topology, dim, family_seed, streams, |_, _| {})
+}
+
+/// [`run_fleet_model`] with a per-round hook (see [`run_fleet_with`]).
+pub fn run_fleet_model_with<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+    on_round: F,
+) -> FleetResult<M> {
+    let plan = fleet.faults_seed.map(FaultPlan::from_seed);
+    run_fleet_model_chaos::<M, F>(fleet, storm, topology, dim, family_seed, streams, plan, on_round)
+}
+
+/// [`run_fleet_model_with`] under an explicit fault plan — the generic
+/// core every other fleet entry point delegates to.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_model_chaos<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+    fault_plan: Option<FaultPlan>,
+    mut on_round: F,
+) -> FleetResult<M> {
     assert_eq!(streams.len(), fleet.devices, "one stream per device");
     let n = fleet.devices;
     let rounds = fleet.sync_rounds.max(1);
@@ -254,7 +315,7 @@ pub fn run_fleet_chaos(
             crash: crash.and_then(|(dev, at, down)| (dev == id).then_some((at, down))),
         };
         let link = uplink.remove(&id).expect("device uplink");
-        device_handles.push(std::thread::spawn(move || run_device(cfg, stream, link)));
+        device_handles.push(std::thread::spawn(move || run_device::<M>(cfg, stream, link)));
     }
 
     // Aggregator threads, in stage order. Each folds its children's
@@ -282,7 +343,7 @@ pub fn run_fleet_chaos(
     let leader_rx = rx_for.remove(&LEADER).expect("leader rx");
     let expect = leader_stage.children.len();
     let quorum = quorum_of(fleet.min_quorum, expect);
-    let mut sketch = StormSketch::new(storm, dim, family_seed);
+    let mut sketch = M::build(storm, dim, family_seed);
     let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
     let mut round_stats: Vec<RoundStat> = Vec::new();
     let mut next_round: u64 = 0;
@@ -702,5 +763,124 @@ mod tests {
         assert_eq!(quorum_of(3, 5), 3);
         assert_eq!(quorum_of(9, 5), 5);
         assert_eq!(quorum_of(1, 5), 1);
+    }
+
+    use crate::config::Task;
+    use crate::sketch::model::StormModel;
+
+    fn labelled_ds(n: usize) -> crate::data::dataset::Dataset {
+        let mut ds = synthetic::synth2d_classification(n, 0.8, 0.25, 11);
+        crate::data::scale::scale_features_to_unit_ball(&mut ds, 0.9);
+        ds
+    }
+
+    fn classifier_reference(
+        storm: StormConfig,
+        ds: &crate::data::dataset::Dataset,
+        seed: u64,
+    ) -> StormModel {
+        let mut m = StormModel::new(storm, ds.dim() + 1, seed);
+        for i in 0..ds.len() {
+            m.insert(&ds.augmented(i));
+        }
+        m
+    }
+
+    #[test]
+    fn classification_fleet_equals_one_shot_across_topologies_and_rounds() {
+        // The classifier merge-equals-concatenation invariant through the
+        // real fleet: any topology, any round count, counters equal a
+        // single local classifier over the whole labelled stream.
+        let storm = StormConfig {
+            rows: 12,
+            power: 3,
+            saturating: true,
+            task: Task::Classification,
+            ..Default::default()
+        };
+        let ds = labelled_ds(240);
+        let reference = classifier_reference(storm, &ds, 99);
+        for topo in [Topology::Star, Topology::Tree { fanout: 2 }, Topology::Chain] {
+            for rounds in [1usize, 3] {
+                let streams = partition_streams(&ds, 4, None);
+                let result = run_fleet_model::<StormModel>(
+                    small_fleet_cfg(4, rounds),
+                    storm,
+                    topo,
+                    ds.dim() + 1,
+                    99,
+                    streams,
+                );
+                assert!(result.sketch.as_classifier().is_some(), "{topo:?}");
+                assert_eq!(
+                    result.sketch.grid().counts_u32(),
+                    reference.grid().counts_u32(),
+                    "{topo:?} rounds={rounds}"
+                );
+                assert_eq!(result.sketch.count(), 240, "{topo:?} rounds={rounds}");
+                assert_eq!(result.examples, 240);
+            }
+        }
+    }
+
+    #[test]
+    fn classification_chaos_run_is_bit_identical_to_fault_free_oneshot() {
+        // The PR-3 headline invariant now holds for the classifier too:
+        // a chaotic schedule (drops/dups/reorders/stragglers/crash) ends
+        // with counters bit-identical to the fault-free one-shot merge.
+        let storm = StormConfig {
+            rows: 12,
+            power: 3,
+            saturating: true,
+            task: Task::Classification,
+            ..Default::default()
+        };
+        let ds = labelled_ds(240);
+        let reference = classifier_reference(storm, &ds, 99);
+        let mut cfg = small_fleet_cfg(5, 6);
+        cfg.faults_seed = Some(0xC1A5_C4A0);
+        let plan = cfg.faults_seed.map(FaultPlan::from_seed);
+        let streams = partition_streams(&ds, 5, None);
+        let result = run_fleet_model_chaos::<StormModel, _>(
+            cfg,
+            storm,
+            Topology::Tree { fanout: 2 },
+            ds.dim() + 1,
+            99,
+            streams,
+            plan,
+            |_, _| {},
+        );
+        assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32());
+        assert_eq!(result.sketch.count(), 240);
+        assert_eq!(result.rounds.len(), 6, "every round must close");
+        assert!(result.faults.total() > 0, "chaos was vacuous");
+    }
+
+    #[test]
+    fn narrow_classification_devices_widen_exactly() {
+        // u8 classifier devices + u32 leader: widening merges stay exact
+        // for the margin-hash counters too (one increment per row per
+        // example keeps every cell far below 255 here).
+        use crate::config::CounterWidth;
+        let storm = StormConfig {
+            rows: 12,
+            power: 3,
+            saturating: true,
+            task: Task::Classification,
+            ..Default::default()
+        };
+        let ds = labelled_ds(240);
+        let reference = classifier_reference(storm, &ds, 99);
+        let mut cfg = small_fleet_cfg(4, 3);
+        cfg.device_counter_width = Some(CounterWidth::U8);
+        let streams = partition_streams(&ds, 4, None);
+        let result =
+            run_fleet_model::<StormModel>(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams);
+        assert_eq!(result.sketch.grid().width(), CounterWidth::U32, "leader stays wide");
+        assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32());
+        for d in &result.devices {
+            assert_eq!(d.sketch_bytes, 12 * 8, "u8 classifier devices: 1 byte/cell");
+        }
     }
 }

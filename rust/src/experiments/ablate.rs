@@ -17,7 +17,6 @@ use crate::metrics::export::Table;
 use crate::optim::dfo::DfoOptimizer;
 use crate::optim::spsa::{spsa, SpsaConfig};
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 
 fn build_sketch(ds: &crate::data::dataset::Dataset, rows: usize, power: u32, seed: u64) -> StormSketch {
     let cfg = StormConfig { rows, power, saturating: true, ..Default::default() };

@@ -24,6 +24,7 @@ pub fn run() -> Table {
             power: 4,
             saturating: true,
             counter_width: width,
+            ..Default::default()
         };
         for exp in [3u32, 4, 5, 6, 7] {
             let n = 10u64.pow(exp);

@@ -6,7 +6,6 @@ use crate::config::StormConfig;
 use crate::loss::prp_loss::{prp_slope_at, prp_surrogate};
 use crate::metrics::export::Table;
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 
 pub const POWERS: &[u32] = &[1, 2, 4, 8, 16];
 

@@ -22,7 +22,6 @@ use crate::linalg::solve::mse;
 use crate::metrics::export::Table;
 use crate::optim::dfo::DfoOptimizer;
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 
 /// Sample-count multipliers of d defining the memory sweep.
 const SWEEP: &[f64] = &[0.25, 0.5, 1.0, 2.0, 4.0, 16.0, 64.0];

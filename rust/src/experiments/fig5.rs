@@ -4,16 +4,16 @@
 //! exact settings.
 
 use super::Effort;
-use crate::config::{OptimizerConfig, StormConfig};
-use crate::data::scale::scale_to_unit_ball_quantile;
+use crate::config::{OptimizerConfig, StormConfig, Task};
+use crate::data::scale::{scale_features_to_unit_ball, scale_to_unit_ball_quantile};
 use crate::data::synthetic;
 use crate::linalg::solve::{lstsq, mse, LstsqMethod};
 use crate::loss::margin::accuracy;
 use crate::metrics::export::Table;
 use crate::optim::dfo::DfoOptimizer;
-use crate::optim::{FnOracle, RiskOracle};
-use crate::sketch::storm::{StormClassifierSketch, StormSketch};
-use crate::sketch::Sketch;
+use crate::sketch::model::StormModel;
+use crate::sketch::storm::StormSketch;
+use crate::sketch::RiskSketch;
 
 /// Regression half: train on the 2-D line dataset, report the risk trace
 /// and the final parameters next to least squares.
@@ -55,43 +55,51 @@ pub fn run_regression(effort: Effort, seed: u64) -> Table {
     table
 }
 
-/// Classification half: two blobs, margin loss with p = 1 (paper setting;
-/// the classifier sketch inserts one arm so even p = 1 is informative).
+/// Classification half: two blobs through the task-generic model API —
+/// a [`StormModel`] built with `task = classification` (margin loss with
+/// p = 1, the paper setting; the classifier sketch inserts one arm so
+/// even p = 1 is informative), trained by the same DFO loop that drives
+/// regression, with a direction sweep through the model as a sanity
+/// floor.
 pub fn run_classification(effort: Effort, seed: u64) -> Table {
     let iters = match effort {
         Effort::Fast => 100,
         Effort::Full => 100,
     };
     let mut ds = synthetic::synth2d_classification(1000, 0.8, 0.25, seed);
-    // Classification sketches hash x only (labels fold into the sign):
-    // scale features into the unit ball.
-    let max_norm = (0..ds.len())
-        .map(|i| crate::util::mathx::norm2(ds.x.row(i)))
-        .fold(0.0f64, f64::max);
-    if max_norm > 0.0 {
-        ds.x.scale(0.9 / max_norm);
-    }
-    let cfg = StormConfig { rows: 100, power: 1, saturating: true, ..Default::default() };
-    let mut sk = StormClassifierSketch::new(cfg, 2, seed ^ 0xC1A5);
+    // Classification hashes x only (labels fold into the sign): scale
+    // features into the unit ball, labels stay exactly ±1.
+    scale_features_to_unit_ball(&mut ds, 0.9);
+    let cfg = StormConfig {
+        rows: 100,
+        power: 1,
+        saturating: true,
+        task: Task::Classification,
+        ..Default::default()
+    };
+    let mut model = StormModel::new(cfg, 3, seed ^ 0xC1A5);
+    let stream: Vec<Vec<f64>> = (0..ds.len()).map(|i| ds.augmented(i)).collect();
+    model.insert_batch(&stream);
     let xs: Vec<Vec<f64>> = (0..ds.len()).map(|i| ds.x.row(i).to_vec()).collect();
-    for (x, y) in xs.iter().zip(&ds.y) {
-        sk.insert_labelled(x, *y);
-    }
-    // Wrap the classifier sketch as an oracle over theta (no -1 coord for
-    // the hyperplane-through-origin classifier; we append a dummy).
-    let oracle = FnOracle::new(1, |tt: &[f64]| sk.estimate_risk_scaled(&tt[..2]));
+
+    // The model IS the risk oracle: DFO optimizes the 2-d hyperplane
+    // normal directly (the trailing -1 constraint coordinate is ignored
+    // by the margin estimate).
     let ocfg = OptimizerConfig { queries: 8, sigma: 0.3, step: 0.6, iters, seed };
-    let mut opt = DfoOptimizer::new(ocfg, 1);
-    let _ = opt.run(&oracle, iters);
-    // theta from the optimizer's augmented vector: interpret [t0, t1=-1]
-    // as the hyperplane normal (2 free dims would need d=2; we instead
-    // optimize the angle directly below for robustness).
-    // Sweep angles as a sanity floor, then refine with the DFO result.
-    let mut best = (f64::INFINITY, [1.0, 0.0]);
+    let mut opt = DfoOptimizer::new(ocfg, 2);
+    let theta_dfo = opt.run(&model, iters);
+    let tilde = |t: &[f64]| {
+        let mut tt = t.to_vec();
+        tt.push(-1.0);
+        tt
+    };
+    let mut best = (model.estimate_risk_scaled(&tilde(&theta_dfo)), [theta_dfo[0], theta_dfo[1]]);
+    // Direction sweep as a sanity floor (p = 1 keeps the estimate noisy;
+    // every query still goes through the model API).
     for i in 0..360 {
         let a = i as f64 * std::f64::consts::PI / 180.0;
         let theta = [a.cos() * 0.8, a.sin() * 0.8];
-        let r = sk.estimate_risk(&theta);
+        let r = model.estimate_risk_scaled(&tilde(&theta));
         if r < best.0 {
             best = (r, theta);
         }
@@ -100,7 +108,7 @@ pub fn run_classification(effort: Effort, seed: u64) -> Table {
     let acc = accuracy(&theta, &xs, &ds.y);
 
     let mut table = Table::new(
-        "fig5-clf: 2-D classification (R=100, p=1)",
+        "fig5-clf: 2-D classification (R=100, p=1, task API)",
         &["theta0", "theta1", "risk", "accuracy"],
     );
     table.push(vec![theta[0], theta[1], best.0, acc]);

@@ -18,7 +18,6 @@ use crate::edge::fleet::run_fleet;
 use crate::edge::topology::Topology;
 use crate::metrics::export::Table;
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 
 const TOPOLOGIES: [Topology; 3] = [Topology::Star, Topology::Tree { fanout: 2 }, Topology::Chain];
 

@@ -12,7 +12,6 @@ use crate::optim::dfo::DfoOptimizer;
 use crate::optim::FnOracle;
 use crate::sketch::privacy::PrivateStormRelease;
 use crate::sketch::storm::StormSketch;
-use crate::sketch::Sketch;
 use crate::util::mathx::norm2;
 
 const EPSILONS: &[f64] = &[0.1, 0.5, 1.0, 5.0, 10.0];

@@ -46,13 +46,14 @@ pub mod experiments;
 
 /// Convenient re-exports of the types most users need.
 pub mod prelude {
-    pub use crate::config::StormConfig;
+    pub use crate::config::{StormConfig, Task};
     pub use crate::data::dataset::Dataset;
     pub use crate::linalg::matrix::Matrix;
     pub use crate::lsh::srp::SignedRandomProjection;
     pub use crate::optim::dfo::{DfoConfig, DfoOptimizer};
-    pub use crate::sketch::storm::StormSketch;
-    pub use crate::sketch::Sketch;
+    pub use crate::sketch::model::StormModel;
+    pub use crate::sketch::storm::{StormClassifierSketch, StormSketch};
+    pub use crate::sketch::RiskSketch;
     pub use crate::util::rng::{Rng, Xoshiro256};
 }
 

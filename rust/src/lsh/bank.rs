@@ -29,6 +29,7 @@
 //! per-row hashes, so `StormSketch::hashes()` / `srp()` stay intact and
 //! the Python AOT path keeps embedding identical hyperplanes.
 
+use crate::lsh::asym::AsymmetricInnerProductHash;
 use crate::lsh::prp::PairedRandomProjection;
 use crate::util::mathx::dot;
 
@@ -61,6 +62,28 @@ impl HashBank {
             let srp = h.asym().srp();
             for j in 0..p as usize {
                 planes.extend_from_slice(srp.plane(j));
+            }
+        }
+        HashBank { planes, rows: hashes.len(), p, dim }
+    }
+
+    /// Build a bank from per-row *single-arm* asymmetric hashes — the
+    /// classifier sketch's hash family (Theorem 3 inserts one arm, no PRP
+    /// pairing). Same contiguous `[R * p, d + 2]` layout and the same
+    /// exact-coefficient copy, so [`Self::data_bucket`] /
+    /// [`Self::query_bucket`] agree bit-for-bit with the per-row scalar
+    /// hashes.
+    pub fn from_asym_rows(hashes: &[AsymmetricInnerProductHash]) -> Self {
+        assert!(!hashes.is_empty(), "hash bank needs at least one row");
+        let dim = hashes[0].dim();
+        let p = hashes[0].bits();
+        let aug = dim + 2;
+        let mut planes = Vec::with_capacity(hashes.len() * p as usize * aug);
+        for h in hashes {
+            assert_eq!(h.dim(), dim, "bank rows must share dim");
+            assert_eq!(h.bits(), p, "bank rows must share p");
+            for j in 0..p as usize {
+                planes.extend_from_slice(h.srp().plane(j));
             }
         }
         HashBank { planes, rows: hashes.len(), p, dim }
@@ -135,6 +158,25 @@ impl HashBank {
             }
         }
         (pos, neg)
+    }
+
+    /// Single-arm data bucket of row `r` for data vector `z` with
+    /// precomputed tail — the positive arm of [`Self::data_pair`], which
+    /// is all the classifier sketch inserts (Theorem 3, no PRP pairing).
+    /// Equals `asym.hash_side(z, Side::Data)` bit-for-bit: the skipped
+    /// query-slot term `w[d] * 0.0` never changes the accumulator value.
+    #[inline]
+    pub fn data_bucket(&self, r: usize, z: &[f64], tail: f64) -> usize {
+        debug_assert_eq!(z.len(), self.dim, "bank data dim mismatch");
+        let d = self.dim;
+        let mut h = 0usize;
+        for j in 0..self.p as usize {
+            let w = self.plane(r, j);
+            if dot(&w[..d], z) + w[d + 1] * tail >= 0.0 {
+                h |= 1 << j;
+            }
+        }
+        h
     }
 
     /// Query bucket of row `r` for query vector `q` with precomputed
@@ -222,5 +264,49 @@ mod tests {
     #[should_panic]
     fn mips_tail_rejects_outside_ball() {
         HashBank::mips_tail(&[1.5, 0.0]);
+    }
+
+    fn mk_asym_rows(dim: usize, p: u32, rows: usize, seed: u64) -> Vec<AsymmetricInnerProductHash> {
+        (0..rows)
+            .map(|r| {
+                AsymmetricInnerProductHash::new(
+                    dim,
+                    p,
+                    seed.wrapping_mul(0x51afd6ed558ccd65).wrapping_add(r as u64),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn asym_bank_data_bucket_matches_scalar_hash_bitwise() {
+        use crate::lsh::asym::Side;
+        cases(60, 23, |rng, case| {
+            let dim = gen_dim(rng, 1, 12);
+            let p = 1 + (case % 8) as u32;
+            let hashes = mk_asym_rows(dim, p, 5, case as u64);
+            let bank = HashBank::from_asym_rows(&hashes);
+            let z = gen_ball_point(rng, dim, 0.95);
+            let tail = HashBank::mips_tail(&z);
+            for (r, h) in hashes.iter().enumerate() {
+                assert_eq!(bank.data_bucket(r, &z, tail), h.hash_side(&z, Side::Data));
+            }
+        });
+    }
+
+    #[test]
+    fn asym_bank_query_bucket_matches_scalar_hash_bitwise() {
+        use crate::lsh::asym::Side;
+        cases(60, 24, |rng, case| {
+            let dim = gen_dim(rng, 1, 12);
+            let p = 1 + (case % 8) as u32;
+            let hashes = mk_asym_rows(dim, p, 4, case as u64 ^ 0xC1A5);
+            let bank = HashBank::from_asym_rows(&hashes);
+            let q = gen_ball_point(rng, dim, 0.95);
+            let tail = HashBank::mips_tail(&q);
+            for (r, h) in hashes.iter().enumerate() {
+                assert_eq!(bank.query_bucket(r, &q, tail), h.hash_side(&q, Side::Query));
+            }
+        });
     }
 }

@@ -12,7 +12,6 @@ use storm::coordinator::driver::{train, QueryBackend};
 use storm::data::registry;
 use storm::edge::topology::Topology;
 use storm::experiments::{self, Effort};
-use storm::sketch::Sketch;
 use storm::util::argparse::{ArgError, ArgParser};
 
 fn main() {
@@ -75,6 +74,7 @@ fn handle_help(parser: &ArgParser, err: ArgError) -> i32 {
 fn cmd_train(args: &[String]) -> i32 {
     let parser = ArgParser::new("storm train", "end-to-end edge training")
         .opt("dataset", Some("airfoil"), "registry dataset name")
+        .opt("task", Some("regression"), "learning task: regression | classification")
         .opt("rows", Some("100"), "sketch rows R")
         .opt("power", Some("4"), "hyperplanes per row p (buckets = 2^p)")
         .opt("counter-width", Some("u32"), "counter cell width: u8 | u16 | u32")
@@ -107,6 +107,10 @@ fn cmd_train(args: &[String]) -> i32 {
         };
         cfg.storm.rows = parsed.get_usize("rows")?;
         cfg.storm.power = parsed.get_usize("power")? as u32;
+        let task_name = parsed.get_string("task");
+        cfg.storm.task = storm::config::Task::parse(&task_name).ok_or_else(|| {
+            anyhow::anyhow!("--task must be regression|classification, got {task_name:?}")
+        })?;
         cfg.storm.counter_width = parse_width(&parsed.get_string("counter-width"))?;
         if let Some(w) = parsed.get("device-counter-width") {
             cfg.fleet.device_counter_width = Some(parse_width(w)?);
@@ -143,6 +147,13 @@ fn cmd_train(args: &[String]) -> i32 {
             .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.dataset))?;
         let report = train(&cfg, ds, topology, backend)?;
         println!("{}", report.summary());
+        if let Some(acc) = report.accuracy {
+            println!(
+                "classification: training accuracy {:.1}% (margin power p = {})",
+                acc * 100.0,
+                cfg.storm.power,
+            );
+        }
         println!(
             "fleet: {} examples over {} devices in {:.2}s; train: {:.2}s ({} iters over {} rounds)",
             report.examples,
@@ -260,6 +271,7 @@ fn cmd_sketch(args: &[String]) -> i32 {
             power: parsed.get_usize("power")? as u32,
             saturating: true,
             counter_width: parse_width(&parsed.get_string("counter-width"))?,
+            ..Default::default()
         };
         let mut sk = storm::sketch::storm::StormSketch::new(cfg, ds.dim() + 1, seed);
         let (_, secs) = storm::util::timer::time_it(|| {

@@ -165,7 +165,6 @@ mod tests {
         // surrogate, not just the noisy sketch estimate it optimizes.
         use crate::config::StormConfig;
         use crate::sketch::storm::StormSketch;
-        use crate::sketch::Sketch;
         use crate::util::rng::{Rng, Xoshiro256};
         let mut rng = Xoshiro256::new(3);
         let d = 3;

@@ -134,7 +134,6 @@ mod tests {
     use crate::config::StormConfig;
     use crate::optim::dfo::{DfoConfig, DfoOptimizer};
     use crate::optim::RiskOracle;
-    use crate::sketch::Sketch;
     use crate::util::rng::{Rng, Xoshiro256};
 
     fn planted_sketch(seed: u64) -> (StormSketch, Vec<f64>) {

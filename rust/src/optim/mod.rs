@@ -17,7 +17,9 @@ pub mod sgd;
 pub mod linopt;
 pub mod schedule;
 
-use crate::sketch::storm::StormSketch;
+use crate::sketch::model::StormModel;
+use crate::sketch::storm::{StormClassifierSketch, StormSketch};
+use crate::sketch::RiskSketch;
 
 /// Black-box access to an empirical-risk estimate at `theta~ = [theta, -1]`.
 pub trait RiskOracle {
@@ -60,6 +62,43 @@ impl RiskOracle for StormSketch {
     /// estimates to the scalar path.
     fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
         self.estimate_risk_batch(candidates, out);
+    }
+}
+
+/// The classifier sketch is a first-class risk oracle (Theorem 3's margin
+/// loss): the same DFO / coordinate-descent / SPSA loops that train
+/// regression models drive it, over `theta~ = [theta, -1]` whose trailing
+/// constraint coordinate the margin estimate simply ignores (the
+/// classifier's hyperplane passes through the origin).
+impl RiskOracle for StormClassifierSketch {
+    fn risk(&self, theta_tilde: &[f64]) -> f64 {
+        RiskSketch::estimate_risk_scaled(self, theta_tilde)
+    }
+
+    fn dim(&self) -> usize {
+        self.feature_dim()
+    }
+
+    /// Candidate sets go through the fused single-arm bank query kernel
+    /// with scratch reuse — bit-identical to scalar estimates.
+    fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        RiskSketch::estimate_risk_batch(self, candidates, out);
+    }
+}
+
+/// Task-generic oracle: whatever task a [`StormModel`] was built for, the
+/// optimizers see one uniform risk surface.
+impl RiskOracle for StormModel {
+    fn risk(&self, theta_tilde: &[f64]) -> f64 {
+        RiskSketch::estimate_risk_scaled(self, theta_tilde)
+    }
+
+    fn dim(&self) -> usize {
+        self.example_dim() - 1
+    }
+
+    fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        RiskSketch::estimate_risk_batch(self, candidates, out);
     }
 }
 

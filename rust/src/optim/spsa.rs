@@ -119,7 +119,6 @@ mod tests {
     fn works_against_a_sketch() {
         use crate::config::StormConfig;
         use crate::sketch::storm::StormSketch;
-        use crate::sketch::Sketch;
         use crate::testing::gen_ball_point;
         use crate::util::rng::Xoshiro256;
         let mut rng = Xoshiro256::new(9);

@@ -67,7 +67,6 @@ impl Default for CompositeRisk<'_> {
 mod tests {
     use super::*;
     use crate::config::StormConfig;
-    use crate::sketch::Sketch;
     use crate::testing::{assert_close, gen_ball_point};
     use crate::util::rng::Xoshiro256;
 

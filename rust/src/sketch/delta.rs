@@ -13,9 +13,8 @@
 //! The wire representation (sparse varint runs, dense fallback) lives in
 //! [`super::serialize`]; this module is the in-memory algebra.
 
-use super::storm::StormSketch;
-use crate::config::{CounterWidth, StormConfig};
-use crate::sketch::Sketch;
+use super::storm::{StormClassifierSketch, StormSketch};
+use crate::config::{CounterWidth, StormConfig, Task};
 
 /// Frozen device state at a sync barrier: counters + example count.
 #[derive(Clone, Debug)]
@@ -183,7 +182,7 @@ impl StormSketch {
 
     /// Apply a delta (merge of a remote device's round increments).
     /// Geometry, seed and dimension must match — the same compatibility
-    /// contract as [`Sketch::merge_from`]; widths may differ (a narrow
+    /// contract as [`StormSketch::merge_from`]; widths may differ (a narrow
     /// device delta folds into a wide accumulator exactly — the widening
     /// merge of the fleet protocol).
     pub fn apply_delta(&mut self, delta: &SketchDelta) {
@@ -199,11 +198,59 @@ impl StormSketch {
     }
 
     /// Materialize a standalone sketch from a delta (used by the wire
-    /// decoder's backward-compatible full-sketch entry point).
+    /// decoder's backward-compatible full-sketch entry point). Panics on
+    /// a classification-tagged delta — those reassemble into
+    /// [`StormClassifierSketch`] (via [`crate::sketch::model::StormModel`]).
     pub fn from_delta(delta: &SketchDelta) -> StormSketch {
+        assert_eq!(delta.cfg.task, Task::Regression, "from_delta: classification frame");
         let mut sk = StormSketch::new(delta.cfg, delta.dim, delta.seed);
         sk.apply_delta(delta);
         sk
+    }
+}
+
+/// The classifier sketch rides the same snapshot/delta algebra — this is
+/// what lets labelled streams flow through the round-based fleet protocol
+/// (and its fault-tolerant catch-up paths) unchanged.
+impl StormClassifierSketch {
+    /// Freeze the current state for a later [`Self::delta_since`].
+    pub fn snapshot(&self) -> SketchSnapshot {
+        SketchSnapshot {
+            grid: self.grid().snapshot(),
+            count: self.count(),
+        }
+    }
+
+    /// The increments accumulated since `snap`, tagged with `epoch` and
+    /// the classification task (the wire encoder stamps the task bit so
+    /// a receiver can never fold these into a regression sketch). `dim`
+    /// is the streamed example dimension `d + 1`, matching the
+    /// regression convention.
+    pub fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta {
+        SketchDelta {
+            epoch,
+            cfg: self.config(),
+            dim: self.feature_dim() + 1,
+            seed: self.seed(),
+            count: self.count() - snap.count,
+            width: self.config().counter_width,
+            counts: self.grid().delta_since(&snap.grid),
+        }
+    }
+
+    /// Apply a delta (merge of a remote device's round increments).
+    /// Geometry, task, seed and dimension must match; widths may differ
+    /// (narrow device deltas widen exactly).
+    pub fn apply_delta(&mut self, delta: &SketchDelta) {
+        assert!(
+            self.config().merge_compatible(&delta.cfg),
+            "apply_delta: config mismatch"
+        );
+        assert_eq!(self.seed(), delta.seed, "apply_delta: seed mismatch");
+        assert_eq!(self.feature_dim() + 1, delta.dim, "apply_delta: dim mismatch");
+        let (grid, count) = self.parts_mut();
+        grid.apply_delta(&delta.counts);
+        *count += delta.count;
     }
 }
 

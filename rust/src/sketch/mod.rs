@@ -7,44 +7,31 @@
 //! * [`race`] — the symmetric RACE sketch (Coleman & Shrivastava): KDE
 //!   estimates for any LSH family with a closed-form collision
 //!   probability;
-//! * [`storm`] — the paper's STORM sketch: asymmetric insert/query with
-//!   PRP pairing, estimating the regression surrogate loss (Thm 2) and the
-//!   max-margin classification loss (Thm 3);
+//! * [`storm`] — the paper's STORM sketches: the paired-PRP regression
+//!   sketch estimating the surrogate loss (Thm 2) and the single-arm
+//!   classifier sketch estimating the max-margin loss (Thm 3), both on
+//!   the fused hash-bank batch kernels;
+//! * [`model`] — the task-generic model layer: the [`RiskSketch`] trait
+//!   (the unified insert/estimate/batch/snapshot/delta/merge surface the
+//!   whole device → fleet → driver pipeline is written against) and
+//!   [`model::StormModel`], the constructor dispatching on
+//!   `[storm] task = "regression" | "classification"`;
 //! * [`delta`] — epoch-tagged counter deltas, the unit of round-based
 //!   fleet synchronization (`SketchDelta`, `SketchSnapshot`);
 //! * [`privacy`] — differentially-private release (Laplace count noise);
 //! * [`serialize`] — the compact wire format devices ship over the
-//!   simulated network (dense v1 + sparse delta v2);
+//!   simulated network (dense v1, sparse delta v2, width- and
+//!   task-tagged v3);
 //! * [`compose`] — sum/difference/product estimators over multiple
 //!   sketches (Theorem 1 closure).
 
 pub mod counters;
 pub mod delta;
+pub mod model;
 pub mod race;
 pub mod storm;
 pub mod privacy;
 pub mod serialize;
 pub mod compose;
 
-/// Common behaviour of the count sketches in this crate.
-///
-/// All implementors are *mergeable summaries*: `merge` of two sketches
-/// built with the same configuration and seeds equals the sketch of the
-/// concatenated streams (exactly — counts are integers).
-pub trait Sketch {
-    /// Ingest one augmented example.
-    fn insert(&mut self, z: &[f64]);
-
-    /// Number of examples ingested (by this sketch plus everything merged
-    /// into it).
-    fn count(&self) -> u64;
-
-    /// Estimate the sketch's target functional at a query point.
-    fn query(&self, q: &[f64]) -> f64;
-
-    /// Merge another sketch built with identical configuration/seeds.
-    fn merge_from(&mut self, other: &Self);
-
-    /// Memory footprint of the counter array in bytes.
-    fn bytes(&self) -> usize;
-}
+pub use model::RiskSketch;

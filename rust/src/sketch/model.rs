@@ -1,0 +1,527 @@
+//! The task-generic sketch model layer.
+//!
+//! The paper's point is *end-to-end* ERM on the edge for both regression
+//! (Theorem 2) and max-margin classification (Theorem 3); compressive
+//! statistical learning frames the same idea as one sketch API serving
+//! many learning tasks. This module is that API:
+//!
+//! * [`RiskSketch`] — the unified insert / estimate / batch / snapshot /
+//!   delta / merge surface every sketch model exposes. The whole
+//!   device → fleet → driver pipeline is written against this trait, so
+//!   adding a task means implementing it once — no per-type plumbing.
+//! * [`StormModel`] — the concrete task dispatcher: construct from a
+//!   [`StormConfig`] whose `task` field (config key `[storm] task`, CLI
+//!   `--task`) selects the paired-PRP regression sketch or the
+//!   single-arm margin classifier.
+//!
+//! **Conventions.** Streams carry *examples* `z = [x, y]` of length
+//! `example_dim = d + 1` for both tasks (regression hashes the full
+//! augmented vector; classification folds the ±1 label into the hash
+//! sign). Risk queries take the *augmented parameter* `theta~ =
+//! [theta, -1]`, also length `d + 1`; the classifier reads only the
+//! leading `d` coordinates (its hyperplane passes through the origin).
+//! This keeps one optimizer loop ([`crate::optim::RiskOracle`]) driving
+//! every task and backend.
+
+use super::counters::CounterGrid;
+use super::delta::{SketchDelta, SketchSnapshot};
+use super::storm::{StormClassifierSketch, StormSketch};
+use crate::config::{StormConfig, Task};
+use crate::util::mathx::norm2;
+
+/// Common behaviour of the trainable count-sketch models in this crate
+/// (supersedes the old `Sketch` trait, which the pipeline ignored).
+///
+/// All implementors are *mergeable summaries*: `merge_from` of two models
+/// built with the same configuration and seeds equals the model of the
+/// concatenated streams (exactly — counts are integers), and the
+/// epoch-tagged delta algebra ([`SketchDelta`]) factors any merge into
+/// per-round increments, which is what the fleet protocol ships.
+pub trait RiskSketch: Send + Sized {
+    /// Construct a model for `cfg.task`. `example_dim` is the streamed
+    /// example length `d + 1` ( features + label ); `seed` fixes the
+    /// shared hash family fleet-wide.
+    fn build(cfg: StormConfig, example_dim: usize, seed: u64) -> Self;
+
+    /// The sketch configuration (with `task` normalized to this model's
+    /// actual task).
+    fn config(&self) -> StormConfig;
+
+    /// The learning task this model estimates risk for.
+    fn task(&self) -> Task {
+        self.config().task
+    }
+
+    /// Shared hash-family seed.
+    fn seed(&self) -> u64;
+
+    /// Streamed example length `d + 1`.
+    fn example_dim(&self) -> usize;
+
+    /// Examples ingested (including everything merged in).
+    fn count(&self) -> u64;
+
+    /// The underlying counter grid.
+    fn grid(&self) -> &CounterGrid;
+
+    /// Counter memory in bytes, width-true.
+    fn bytes(&self) -> usize {
+        self.grid().bytes()
+    }
+
+    /// Ingest one example `z = [x, y]` (length [`Self::example_dim`]).
+    fn insert(&mut self, z: &[f64]);
+
+    /// Fused batch ingest — bit-identical counters to sequential
+    /// [`Self::insert`] calls (property-tested per implementor).
+    fn insert_batch(&mut self, batch: &[Vec<f64>]);
+
+    /// Estimated task risk at the augmented parameter `theta~ =
+    /// [theta, -1]` (length [`Self::example_dim`]), rescaled into the
+    /// unit ball as needed.
+    fn estimate_risk_scaled(&self, theta_tilde: &[f64]) -> f64;
+
+    /// Batched risk estimation: one estimate per candidate, in order,
+    /// written into `out` (cleared first); bit-identical to per-candidate
+    /// [`Self::estimate_risk_scaled`], with scratch reuse instead of
+    /// per-candidate allocation.
+    fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>);
+
+    /// Freeze the current counters for a later [`Self::delta_since`].
+    fn snapshot(&self) -> SketchSnapshot;
+
+    /// The increments accumulated since `snap`, tagged with `epoch`.
+    fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta;
+
+    /// Apply a remote delta (geometry, task, seed and dim must match;
+    /// widths may differ — narrow deltas widen exactly).
+    fn apply_delta(&mut self, delta: &SketchDelta);
+
+    /// Merge another model built with identical configuration/seeds.
+    fn merge_from(&mut self, other: &Self);
+
+    /// Downcast to the regression sketch when this model is one (the
+    /// regression-only paths — linear partition warm starts, the XLA
+    /// query backend — gate on this).
+    fn as_regression(&self) -> Option<&StormSketch> {
+        None
+    }
+}
+
+impl RiskSketch for StormSketch {
+    fn build(cfg: StormConfig, example_dim: usize, seed: u64) -> Self {
+        assert_ne!(
+            cfg.task,
+            Task::Classification,
+            "regression-typed pipeline given a classification config — use StormModel"
+        );
+        StormSketch::new(cfg, example_dim, seed)
+    }
+
+    fn config(&self) -> StormConfig {
+        StormSketch::config(self)
+    }
+
+    fn seed(&self) -> u64 {
+        StormSketch::seed(self)
+    }
+
+    fn example_dim(&self) -> usize {
+        StormSketch::dim(self)
+    }
+
+    fn count(&self) -> u64 {
+        StormSketch::count(self)
+    }
+
+    fn grid(&self) -> &CounterGrid {
+        StormSketch::grid(self)
+    }
+
+    fn insert(&mut self, z: &[f64]) {
+        StormSketch::insert(self, z)
+    }
+
+    fn insert_batch(&mut self, batch: &[Vec<f64>]) {
+        StormSketch::insert_batch(self, batch)
+    }
+
+    fn estimate_risk_scaled(&self, theta_tilde: &[f64]) -> f64 {
+        StormSketch::estimate_risk_scaled(self, theta_tilde)
+    }
+
+    fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        StormSketch::estimate_risk_batch(self, candidates, out)
+    }
+
+    fn snapshot(&self) -> SketchSnapshot {
+        StormSketch::snapshot(self)
+    }
+
+    fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta {
+        StormSketch::delta_since(self, snap, epoch)
+    }
+
+    fn apply_delta(&mut self, delta: &SketchDelta) {
+        StormSketch::apply_delta(self, delta)
+    }
+
+    fn merge_from(&mut self, other: &Self) {
+        StormSketch::merge_from(self, other)
+    }
+
+    fn as_regression(&self) -> Option<&StormSketch> {
+        Some(self)
+    }
+}
+
+impl RiskSketch for StormClassifierSketch {
+    fn build(cfg: StormConfig, example_dim: usize, seed: u64) -> Self {
+        assert!(example_dim >= 2, "classification needs at least one feature plus the label");
+        StormClassifierSketch::new(cfg, example_dim - 1, seed)
+    }
+
+    fn config(&self) -> StormConfig {
+        StormClassifierSketch::config(self)
+    }
+
+    fn seed(&self) -> u64 {
+        StormClassifierSketch::seed(self)
+    }
+
+    fn example_dim(&self) -> usize {
+        self.feature_dim() + 1
+    }
+
+    fn count(&self) -> u64 {
+        StormClassifierSketch::count(self)
+    }
+
+    fn grid(&self) -> &CounterGrid {
+        StormClassifierSketch::grid(self)
+    }
+
+    fn insert(&mut self, z: &[f64]) {
+        let d = self.feature_dim();
+        assert_eq!(z.len(), d + 1, "insert dim mismatch (examples are [x, y])");
+        self.insert_labelled(&z[..d], z[d]);
+    }
+
+    fn insert_batch(&mut self, batch: &[Vec<f64>]) {
+        StormClassifierSketch::insert_batch(self, batch)
+    }
+
+    fn estimate_risk_scaled(&self, theta_tilde: &[f64]) -> f64 {
+        let d = self.feature_dim();
+        assert_eq!(theta_tilde.len(), d + 1, "query dim mismatch");
+        StormClassifierSketch::estimate_risk_scaled(self, &theta_tilde[..d])
+    }
+
+    fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(candidates.len());
+        if candidates.is_empty() {
+            return;
+        }
+        let d = self.feature_dim();
+        let radius = crate::data::scale::query_radius();
+        // One scratch buffer across candidates — zero per-candidate
+        // allocation, results bit-identical to scalar
+        // `estimate_risk_scaled` (property-tested).
+        let mut scaled = vec![0.0; d];
+        for q in candidates {
+            assert_eq!(q.len(), d + 1, "query dim mismatch");
+            let theta = &q[..d];
+            let n = norm2(theta);
+            let est = if n <= radius {
+                self.fused_estimate(theta)
+            } else {
+                for (s, v) in scaled.iter_mut().zip(theta) {
+                    *s = v * radius / n;
+                }
+                self.fused_estimate(&scaled)
+            };
+            out.push(est);
+        }
+    }
+
+    fn snapshot(&self) -> SketchSnapshot {
+        StormClassifierSketch::snapshot(self)
+    }
+
+    fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta {
+        StormClassifierSketch::delta_since(self, snap, epoch)
+    }
+
+    fn apply_delta(&mut self, delta: &SketchDelta) {
+        StormClassifierSketch::apply_delta(self, delta)
+    }
+
+    fn merge_from(&mut self, other: &Self) {
+        StormClassifierSketch::merge_from(self, other)
+    }
+}
+
+/// The task dispatcher: one constructor for every learning task the
+/// sketch family supports, selected by [`StormConfig::task`]. This is
+/// what the driver (and anything else that reads a run config) should
+/// instantiate; the concrete types remain available for task-specific
+/// code and tests.
+pub enum StormModel {
+    Regression(StormSketch),
+    Classification(StormClassifierSketch),
+}
+
+impl StormModel {
+    /// Dispatch a constructor call on `cfg.task`.
+    pub fn new(cfg: StormConfig, example_dim: usize, seed: u64) -> StormModel {
+        match cfg.task {
+            Task::Regression => StormModel::Regression(StormSketch::new(cfg, example_dim, seed)),
+            Task::Classification => {
+                assert!(
+                    example_dim >= 2,
+                    "classification needs at least one feature plus the label"
+                );
+                StormModel::Classification(StormClassifierSketch::new(cfg, example_dim - 1, seed))
+            }
+        }
+    }
+
+    /// The classifier variant, when this model is one.
+    pub fn as_classifier(&self) -> Option<&StormClassifierSketch> {
+        match self {
+            StormModel::Classification(c) => Some(c),
+            StormModel::Regression(_) => None,
+        }
+    }
+}
+
+macro_rules! dispatch {
+    ($self:expr, $m:pat => $body:expr) => {
+        match $self {
+            StormModel::Regression($m) => $body,
+            StormModel::Classification($m) => $body,
+        }
+    };
+}
+
+impl RiskSketch for StormModel {
+    fn build(cfg: StormConfig, example_dim: usize, seed: u64) -> Self {
+        StormModel::new(cfg, example_dim, seed)
+    }
+
+    fn config(&self) -> StormConfig {
+        dispatch!(self, m => m.config())
+    }
+
+    fn seed(&self) -> u64 {
+        dispatch!(self, m => RiskSketch::seed(m))
+    }
+
+    fn example_dim(&self) -> usize {
+        dispatch!(self, m => m.example_dim())
+    }
+
+    fn count(&self) -> u64 {
+        dispatch!(self, m => m.count())
+    }
+
+    fn grid(&self) -> &CounterGrid {
+        dispatch!(self, m => m.grid())
+    }
+
+    fn insert(&mut self, z: &[f64]) {
+        dispatch!(self, m => RiskSketch::insert(m, z))
+    }
+
+    fn insert_batch(&mut self, batch: &[Vec<f64>]) {
+        dispatch!(self, m => RiskSketch::insert_batch(m, batch))
+    }
+
+    fn estimate_risk_scaled(&self, theta_tilde: &[f64]) -> f64 {
+        dispatch!(self, m => RiskSketch::estimate_risk_scaled(m, theta_tilde))
+    }
+
+    fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        dispatch!(self, m => RiskSketch::estimate_risk_batch(m, candidates, out))
+    }
+
+    fn snapshot(&self) -> SketchSnapshot {
+        dispatch!(self, m => RiskSketch::snapshot(m))
+    }
+
+    fn delta_since(&self, snap: &SketchSnapshot, epoch: u64) -> SketchDelta {
+        dispatch!(self, m => RiskSketch::delta_since(m, snap, epoch))
+    }
+
+    fn apply_delta(&mut self, delta: &SketchDelta) {
+        dispatch!(self, m => RiskSketch::apply_delta(m, delta))
+    }
+
+    fn merge_from(&mut self, other: &Self) {
+        match (self, other) {
+            (StormModel::Regression(a), StormModel::Regression(b)) => a.merge_from(b),
+            (StormModel::Classification(a), StormModel::Classification(b)) => a.merge_from(b),
+            _ => panic!("merge: task mismatch"),
+        }
+    }
+
+    fn as_regression(&self) -> Option<&StormSketch> {
+        match self {
+            StormModel::Regression(r) => Some(r),
+            StormModel::Classification(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen_ball_point;
+    use crate::util::rng::Xoshiro256;
+
+    fn labelled_stream(rng: &mut Xoshiro256, n: usize, d: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| {
+                let mut z = gen_ball_point(rng, d, 0.9);
+                z.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+                z
+            })
+            .collect()
+    }
+
+    #[test]
+    fn model_dispatches_on_task() {
+        let reg = StormModel::new(StormConfig::default(), 4, 1);
+        assert!(reg.as_regression().is_some());
+        assert!(reg.as_classifier().is_none());
+        assert_eq!(reg.task(), Task::Regression);
+        assert_eq!(reg.example_dim(), 4);
+
+        let cfg = StormConfig { task: Task::Classification, ..Default::default() };
+        let clf = StormModel::new(cfg, 4, 1);
+        assert!(clf.as_regression().is_none());
+        assert!(clf.as_classifier().is_some());
+        assert_eq!(clf.task(), Task::Classification);
+        assert_eq!(clf.example_dim(), 4, "example dim is uniform across tasks");
+        assert_eq!(clf.as_classifier().unwrap().feature_dim(), 3);
+    }
+
+    #[test]
+    fn classification_model_inserts_match_the_concrete_classifier() {
+        let cfg = StormConfig {
+            rows: 12,
+            power: 3,
+            saturating: true,
+            task: Task::Classification,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(3);
+        let stream = labelled_stream(&mut rng, 50, 3);
+        let mut model = StormModel::new(cfg, 4, 7);
+        model.insert_batch(&stream);
+        let mut concrete = StormClassifierSketch::new(cfg, 3, 7);
+        for z in &stream {
+            concrete.insert_labelled(&z[..3], z[3]);
+        }
+        assert_eq!(model.grid().counts_u32(), concrete.grid().counts_u32());
+        assert_eq!(model.count(), 50);
+        // Scalar trait inserts agree with the batch path.
+        let mut scalar = StormModel::new(cfg, 4, 7);
+        for z in &stream {
+            scalar.insert(z);
+        }
+        assert_eq!(scalar.grid().counts_u32(), model.grid().counts_u32());
+    }
+
+    #[test]
+    fn classifier_risk_batch_matches_scalar_bitwise() {
+        let cfg = StormConfig {
+            rows: 40,
+            power: 2,
+            saturating: true,
+            task: Task::Classification,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(5);
+        let stream = labelled_stream(&mut rng, 200, 4);
+        let mut model = StormModel::new(cfg, 5, 9);
+        model.insert_batch(&stream);
+        // Mix of in-ball candidates and far-outside ones (rescale path);
+        // candidates are augmented [theta, -1].
+        let mut cands: Vec<Vec<f64>> = Vec::new();
+        for i in 0..16 {
+            let mut t = gen_ball_point(&mut rng, 4, 0.8);
+            if i % 3 == 0 {
+                for v in &mut t {
+                    *v *= 7.0;
+                }
+            }
+            t.push(-1.0);
+            cands.push(t);
+        }
+        let mut out = Vec::new();
+        model.estimate_risk_batch(&cands, &mut out);
+        assert_eq!(out.len(), cands.len());
+        for (q, got) in cands.iter().zip(&out) {
+            let want = model.estimate_risk_scaled(q);
+            assert!(got.to_bits() == want.to_bits(), "fused {got} != scalar {want}");
+        }
+        // Empty model estimates are zero.
+        let empty = StormModel::new(cfg, 5, 9);
+        let mut out = Vec::new();
+        empty.estimate_risk_batch(&cands[..1], &mut out);
+        assert_eq!(out, vec![0.0]);
+    }
+
+    #[test]
+    fn model_rounds_of_deltas_reassemble_the_classifier() {
+        // The classifier rides the same snapshot/delta algebra as the
+        // regression sketch: per-epoch deltas applied at a leader equal
+        // the device's cumulative grid.
+        let cfg = StormConfig {
+            rows: 10,
+            power: 3,
+            saturating: true,
+            task: Task::Classification,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(6);
+        let mut device = StormModel::new(cfg, 4, 42);
+        let mut leader = StormModel::new(cfg, 4, 42);
+        let mut snap = device.snapshot();
+        for epoch in 0..4u64 {
+            device.insert_batch(&labelled_stream(&mut rng, 17, 3));
+            let delta = device.delta_since(&snap, epoch);
+            assert_eq!(delta.count, 17);
+            assert_eq!(delta.cfg.task, Task::Classification);
+            leader.apply_delta(&delta);
+            snap = device.snapshot();
+        }
+        assert_eq!(leader.grid().counts_u32(), device.grid().counts_u32());
+        assert_eq!(leader.count(), device.count());
+    }
+
+    #[test]
+    #[should_panic(expected = "task mismatch")]
+    fn cross_task_merge_panics() {
+        let mut reg = StormModel::new(StormConfig::default(), 4, 1);
+        let clf = StormModel::new(
+            StormConfig { task: Task::Classification, ..Default::default() },
+            4,
+            1,
+        );
+        reg.merge_from(&clf);
+    }
+
+    #[test]
+    #[should_panic]
+    fn classification_delta_rejected_by_regression_sketch() {
+        let cfg = StormConfig { task: Task::Classification, ..Default::default() };
+        let clf = StormModel::new(cfg, 4, 1);
+        let snap = clf.snapshot();
+        let delta = clf.delta_since(&snap, 0);
+        let mut reg = StormSketch::new(StormConfig::default(), 4, 1);
+        reg.apply_delta(&delta);
+    }
+}

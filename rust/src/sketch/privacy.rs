@@ -92,7 +92,6 @@ pub fn gaussian_projection_sigma(epsilon: f64, delta: f64) -> f64 {
 mod tests {
     use super::*;
     use crate::config::StormConfig;
-    use crate::sketch::Sketch;
     use crate::testing::{assert_close, gen_ball_point};
     use crate::util::rng::Xoshiro256;
 

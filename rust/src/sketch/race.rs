@@ -8,7 +8,6 @@
 //! the kernel density estimate STORM generalizes.
 
 use super::counters::{CounterGrid, CounterWidth};
-use super::Sketch;
 use crate::lsh::srp::SignedRandomProjection;
 use crate::lsh::LshFunction;
 
@@ -89,8 +88,12 @@ impl RaceSketch {
     }
 }
 
-impl Sketch for RaceSketch {
-    fn insert(&mut self, z: &[f64]) {
+/// The mergeable-summary surface (previously the `Sketch` trait; now
+/// inherent — see [`crate::sketch::RiskSketch`] for the task-generic
+/// model surface the pipeline uses).
+impl RaceSketch {
+    /// Ingest one example.
+    pub fn insert(&mut self, z: &[f64]) {
         assert_eq!(z.len(), self.dim, "insert dim mismatch");
         for (r, h) in self.hashes.iter().enumerate() {
             let b = h.hash(z);
@@ -99,24 +102,27 @@ impl Sketch for RaceSketch {
         self.count += 1;
     }
 
-    fn count(&self) -> u64 {
+    /// Examples ingested (including everything merged in).
+    pub fn count(&self) -> u64 {
         self.count
     }
 
     /// Normalized estimate: `(1/n) sum_i k(q, x_i)`.
-    fn query(&self, q: &[f64]) -> f64 {
+    pub fn query(&self, q: &[f64]) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
         self.query_sum(q) / self.count as f64
     }
 
-    fn merge_from(&mut self, other: &Self) {
+    /// Merge another sketch built with identical hashes.
+    pub fn merge_from(&mut self, other: &Self) {
         self.grid.merge_from(&other.grid);
         self.count += other.count;
     }
 
-    fn bytes(&self) -> usize {
+    /// Counter memory in bytes (width-true).
+    pub fn bytes(&self) -> usize {
         self.grid.bytes()
     }
 }

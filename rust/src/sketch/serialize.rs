@@ -27,13 +27,16 @@
 //! crc     u32   (FNV-1a over everything above)
 //! ```
 //!
-//! **v3** (width-tagged delta — the narrow-counter tiers): same 32-byte
-//! header with `version = 3`, then
+//! **v3** (width- and task-tagged delta — the narrow-counter tiers and
+//! every classification frame): same 32-byte header with `version = 3`,
+//! then
 //!
 //! ```text
 //! epoch   u64
 //! width   u8    (bytes per counter cell: 1 | 2 | 4)
-//! flags   u8    (0 = dense, 1 = sparse)
+//! flags   u8    (bit 0: 0 = dense, 1 = sparse; bit 1: task — 0 =
+//!                regression, 1 = classification; other bits reserved,
+//!                rejected)
 //! payload
 //!   dense : rows * 2^power cells at the NATIVE width (1/2/4 bytes each)
 //!   sparse: varint ncells, then ncells x (varint gap, varint count)
@@ -51,8 +54,14 @@
 //! declared width (a frame claiming `u8` cells cannot smuggle a count
 //! of 300). Decoding accepts all three versions everywhere: v1 is read
 //! as an epoch-0 dense `u32` delta, v2 as a `u32` delta — so [`encode_delta`]
-//! emits v2 for `u32` deltas (bit-identical to the pre-width wire) and
-//! v3 only for narrow widths.
+//! emits v2 for `u32` *regression* deltas (bit-identical to the
+//! pre-width wire) and v3 for narrow widths and for every
+//! *classification* delta (the task bit lives in the v3 flags byte, so
+//! regression payloads at any width stay byte-identical to the
+//! pre-task wire and the existing golden fixtures hold). A receiver can
+//! therefore never fold a classification delta into a regression sketch:
+//! the decoded config carries the task and the merge-compatibility check
+//! rejects the mix.
 //!
 //! The hash-family *seed* travels with the counts so a receiver can verify
 //! it merges compatible sketches; the hyperplanes themselves are
@@ -60,7 +69,7 @@
 
 use super::delta::SketchDelta;
 use super::storm::StormSketch;
-use crate::config::{CounterWidth, StormConfig};
+use crate::config::{CounterWidth, StormConfig, Task};
 
 const MAGIC: u32 = 0x53544F52;
 const VERSION_DENSE: u16 = 1;
@@ -69,6 +78,10 @@ const VERSION_WIDTH: u16 = 3;
 
 const FLAG_DENSE: u8 = 0;
 const FLAG_SPARSE: u8 = 1;
+/// Bit 1 of the v3 flags byte: the frame carries classification (margin
+/// hash) increments. Clear = regression, which keeps every pre-task
+/// regression frame byte-identical.
+const FLAG_TASK_CLASSIFICATION: u8 = 2;
 
 /// Shared header: magic + version + power + rows + dim + seed + count.
 const HEADER: usize = 4 + 2 + 2 + 4 + 4 + 8 + 8;
@@ -186,12 +199,14 @@ pub fn encode(sketch: &StormSketch) -> Vec<u8> {
 }
 
 /// Encode an epoch-tagged delta: sparse varint runs when at most half
-/// the cells changed, dense counters otherwise. `u32` deltas ship as v2
-/// frames — byte-identical to the pre-width wire format — and narrow
-/// (`u8`/`u16`) deltas as width-tagged v3 frames whose dense fallback
-/// costs only `cells x width` payload bytes.
+/// the cells changed, dense counters otherwise. `u32` *regression*
+/// deltas ship as v2 frames — byte-identical to the pre-width wire
+/// format — narrow (`u8`/`u16`) deltas as width-tagged v3 frames whose
+/// dense fallback costs only `cells x width` payload bytes, and every
+/// *classification* delta as a v3 frame with the task bit set (only v3
+/// has a place for it; regression bytes are untouched).
 pub fn encode_delta(delta: &SketchDelta) -> Vec<u8> {
-    if delta.width == CounterWidth::U32 {
+    if delta.width == CounterWidth::U32 && delta.cfg.task == Task::Regression {
         encode_delta_version(delta, VERSION_DELTA)
     } else {
         encode_delta_version(delta, VERSION_WIDTH)
@@ -207,6 +222,17 @@ pub fn encode_delta_v3(delta: &SketchDelta) -> Vec<u8> {
 fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
     let width = delta.width;
     let sparse = delta.populated_fraction() <= 0.5;
+    // Only the v3 flags byte has a task bit; pre-task versions can carry
+    // regression frames only.
+    debug_assert!(
+        version == VERSION_WIDTH || delta.cfg.task == Task::Regression,
+        "classification deltas must ship on the v3 wire"
+    );
+    let task_bit = if delta.cfg.task == Task::Classification && version == VERSION_WIDTH {
+        FLAG_TASK_CLASSIFICATION
+    } else {
+        0
+    };
     let header = if version == VERSION_WIDTH { HEADER_V3 } else { HEADER_V2 };
     let mut out =
         Vec::with_capacity(header + 4 + if sparse { 0 } else { delta.counts.len() * width.bytes() });
@@ -216,7 +242,7 @@ fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
         out.push(width_to_byte(width));
     }
     if sparse {
-        out.push(FLAG_SPARSE);
+        out.push(FLAG_SPARSE | task_bit);
         let cells = delta.sparse_cells();
         put_varint(&mut out, cells.len() as u64);
         let mut prev: Option<u32> = None;
@@ -231,7 +257,7 @@ fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
             prev = Some(idx);
         }
     } else {
-        out.push(FLAG_DENSE);
+        out.push(FLAG_DENSE | task_bit);
         for &c in &delta.counts {
             debug_assert!(c <= width.max_value(), "delta value outgrew its width tag");
             match (version, width) {
@@ -305,14 +331,28 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
             (epoch, width, body[HEADER + 9], &body[HEADER_V3..])
         }
     };
+    // Bit 1 of the flags byte tags the task; only v3 frames have it
+    // (regression stays byte-identical on every pre-task layout). Any
+    // reserved bit — or a task bit on a pre-task version — is a lying
+    // frame, not a silent default.
+    let task = if flags & FLAG_TASK_CLASSIFICATION != 0 {
+        if version != VERSION_WIDTH {
+            return Err(WireError::BadPayload("task bit requires the v3 wire"));
+        }
+        Task::Classification
+    } else {
+        Task::Regression
+    };
+    let mode = flags & !FLAG_TASK_CLASSIFICATION;
     let cfg = StormConfig {
         rows: rows as usize,
         power: power as u32,
         saturating: true,
         counter_width: width,
+        task,
     };
 
-    let counts = match flags {
+    let counts = match mode {
         FLAG_DENSE => {
             let cell_bytes = if version == VERSION_WIDTH { width.bytes() } else { 4 };
             if payload.len() != cells * cell_bytes {
@@ -378,11 +418,16 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
     })
 }
 
-/// Decode a wire buffer back into a full sketch (rebuilding the hash
-/// family from the embedded seed). Accepts v1, v2 and v3 frames; a v3
-/// frame yields a sketch at the frame's native counter width.
+/// Decode a wire buffer back into a full *regression* sketch (rebuilding
+/// the hash family from the embedded seed). Accepts v1, v2 and v3
+/// frames; a v3 frame yields a sketch at the frame's native counter
+/// width. Classification frames are rejected here — reassemble those
+/// through [`decode_delta`] + [`crate::sketch::model::StormModel`].
 pub fn decode(bytes: &[u8]) -> Result<StormSketch, WireError> {
     let delta = decode_delta(bytes)?;
+    if delta.cfg.task != Task::Regression {
+        return Err(WireError::BadPayload("classification frame on full-sketch decode"));
+    }
     Ok(StormSketch::from_delta(&delta))
 }
 
@@ -395,20 +440,21 @@ pub fn wire_bytes(cfg: &StormConfig) -> usize {
 
 /// Worst-case (dense-fallback) delta frame size for a configuration at
 /// its native counter width: the per-round wire ceiling a narrow-tier
-/// device pays on a busy round. `u32` configs ship v2 frames, narrow
-/// configs v3 frames with native-width dense cells.
+/// device pays on a busy round. `u32` regression configs ship v2 frames;
+/// narrow widths and every classification config ship v3 frames with
+/// native-width dense cells.
 pub fn delta_wire_bytes(cfg: &StormConfig) -> usize {
     let cells = cfg.rows * cfg.buckets();
-    match cfg.counter_width {
-        CounterWidth::U32 => HEADER_V2 + cells * 4 + 4,
-        w => HEADER_V3 + cells * w.bytes() + 4,
+    match (cfg.counter_width, cfg.task) {
+        (CounterWidth::U32, Task::Regression) => HEADER_V2 + cells * 4 + 4,
+        (w, _) => HEADER_V3 + cells * w.bytes() + 4,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sketch::Sketch;
+    use crate::sketch::storm::StormClassifierSketch;
     use crate::testing::gen_ball_point;
     use crate::util::rng::Xoshiro256;
 
@@ -505,6 +551,7 @@ mod tests {
             power: 4,
             saturating: true,
             counter_width: width,
+            ..Default::default()
         };
         let mut sk = StormSketch::new(cfg, 5, 77);
         let snap = sk.snapshot();
@@ -782,6 +829,15 @@ mod tests {
     const GOLDEN_V3_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000010103010302010402bfb4aeae";
     const GOLDEN_V3_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b000000000000000900000000000000020001002c0103000400050006000000bc02d6e008ec";
     const GOLDEN_V3_U32_SPARSE_HEX: &str = "524f54530300020002000000030000008877665544332211050000000000000007000000000000000401030103020104020cd7cc9e";
+    // Classifier deltas (task bit set in the v3 flags byte): the same
+    // logical grids as the fixtures above, at all three widths. The only
+    // byte-level differences from the regression v3 frames are the flags
+    // byte and the CRC — cross-computed with the Python encoder mirror
+    // (python/tests/wire_mirror.py), which reproduces every fixture in
+    // this file byte-for-byte.
+    const GOLDEN_CLF_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000010303010302010402b93c9fe8";
+    const GOLDEN_CLF_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b000000000000000900000000000000020201002c0103000400050006000000bc02ac7097d0";
+    const GOLDEN_CLF_U32_SPARSE_HEX: &str = "524f54530300020002000000030000008877665544332211050000000000000007000000000000000403030103020104029a81c144";
 
     fn hex(bytes: &[u8]) -> String {
         bytes.iter().map(|b| format!("{b:02x}")).collect()
@@ -802,7 +858,13 @@ mod tests {
     fn golden_sparse_delta_at(width: CounterWidth) -> SketchDelta {
         SketchDelta {
             epoch: 7,
-            cfg: StormConfig { rows: 2, power: 2, saturating: true, counter_width: width },
+            cfg: StormConfig {
+                rows: 2,
+                power: 2,
+                saturating: true,
+                counter_width: width,
+                ..Default::default()
+            },
             dim: 3,
             seed: 0x1122_3344_5566_7788,
             count: 5,
@@ -834,6 +896,7 @@ mod tests {
                 power: 2,
                 saturating: true,
                 counter_width: CounterWidth::U16,
+                ..Default::default()
             },
             dim: 2,
             seed: 0x0807_0605_0403_0201,
@@ -915,6 +978,112 @@ mod tests {
             "v3 u32 sparse wire encoding drifted — bump the wire version instead"
         );
         assert_eq!(decode_delta(&unhex(GOLDEN_V3_U32_SPARSE_HEX)).unwrap(), u32_delta);
+    }
+
+    /// The golden fixtures with the task switched to classification.
+    fn golden_clf_delta_at(width: CounterWidth) -> SketchDelta {
+        let mut d = golden_sparse_delta_at(width);
+        d.cfg.task = Task::Classification;
+        d
+    }
+
+    #[test]
+    fn golden_classifier_bytes_are_stable_at_all_widths() {
+        // u8 sparse, task bit set.
+        let u8_delta = golden_clf_delta_at(CounterWidth::U8);
+        assert_eq!(
+            hex(&encode_delta(&u8_delta)),
+            GOLDEN_CLF_U8_SPARSE_HEX,
+            "classifier u8 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_CLF_U8_SPARSE_HEX)).unwrap(), u8_delta);
+
+        // u16 dense fallback, task bit set.
+        let mut u16_delta = golden_dense_delta_u16();
+        u16_delta.cfg.task = Task::Classification;
+        assert_eq!(
+            hex(&encode_delta(&u16_delta)),
+            GOLDEN_CLF_U16_DENSE_HEX,
+            "classifier u16 dense wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_CLF_U16_DENSE_HEX)).unwrap(), u16_delta);
+
+        // u32: classification always ships v3 (only v3 carries the task
+        // bit), unlike regression u32 which stays on the pre-width v2.
+        let u32_delta = golden_clf_delta_at(CounterWidth::U32);
+        let bytes = encode_delta(&u32_delta);
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 3);
+        assert_eq!(
+            hex(&bytes),
+            GOLDEN_CLF_U32_SPARSE_HEX,
+            "classifier u32 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_CLF_U32_SPARSE_HEX)).unwrap(), u32_delta);
+
+        // Task bit round-trips: decoded config carries Classification.
+        assert_eq!(
+            decode_delta(&bytes).unwrap().cfg.task,
+            Task::Classification
+        );
+    }
+
+    #[test]
+    fn classifier_delta_roundtrips_from_a_live_sketch() {
+        let cfg = StormConfig { rows: 20, power: 3, saturating: true, ..Default::default() };
+        let mut sk = StormClassifierSketch::new(cfg, 4, 77);
+        let snap = sk.snapshot();
+        let mut rng = Xoshiro256::new(12);
+        for i in 0..30 {
+            let x = gen_ball_point(&mut rng, 4, 0.9);
+            sk.insert_labelled(&x, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let delta = sk.delta_since(&snap, 5);
+        assert_eq!(delta.cfg.task, Task::Classification);
+        let bytes = encode_delta(&delta);
+        let back = decode_delta(&bytes).unwrap();
+        assert_eq!(back, delta);
+        // Applying the decoded delta onto a fresh classifier reproduces
+        // the live grid.
+        let mut replica = StormClassifierSketch::new(cfg, 4, 77);
+        replica.apply_delta(&back);
+        assert_eq!(replica.grid().counts_u32(), sk.grid().counts_u32());
+        assert_eq!(replica.count(), 30);
+        // The full-sketch regression decoder refuses classification
+        // frames rather than rebuilding the wrong hash family.
+        assert!(matches!(decode(&bytes), Err(WireError::BadPayload(_))));
+    }
+
+    #[test]
+    fn task_bit_on_pre_task_versions_rejected() {
+        // A v2 frame whose flags byte smuggles the task bit is a lying
+        // frame even with a valid checksum: only v3 carries the tag.
+        let mut bytes = encode_delta(&sparse_delta());
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 2);
+        bytes[HEADER + 8] |= 2;
+        refix_crc(&mut bytes);
+        assert!(matches!(
+            decode_delta(&bytes),
+            Err(WireError::BadPayload("task bit requires the v3 wire"))
+        ));
+    }
+
+    #[test]
+    fn regression_frames_stay_byte_identical_with_the_task_field() {
+        // The acceptance bar for the task tag: adding it must not move a
+        // single regression byte at any width. The pre-task golden
+        // fixtures above pin the exact bytes; here we state the
+        // mechanism directly — u32 regression still ships version 2, and
+        // no regression frame ever sets the task bit.
+        let delta = sparse_delta();
+        assert_eq!(delta.cfg.task, Task::Regression);
+        let v2 = encode_delta(&delta);
+        assert_eq!(u16::from_le_bytes(v2[4..6].try_into().unwrap()), 2);
+        assert_eq!(v2[HEADER + 8] & 2, 0, "v2 flags carry no task bit");
+        for width in [CounterWidth::U8, CounterWidth::U16] {
+            let d = golden_sparse_delta_at(width);
+            let flags = encode_delta(&d)[HEADER + 9];
+            assert_eq!(flags & 2, 0, "{width:?}: regression frames never set the task bit");
+        }
     }
 
     #[test]

@@ -17,8 +17,7 @@
 //! Theorem 3 up to the `2^p` constant.
 
 use super::counters::{CounterCell, CounterGrid, CounterStore};
-use super::Sketch;
-use crate::config::StormConfig;
+use crate::config::{StormConfig, Task};
 use crate::lsh::bank::HashBank;
 use crate::lsh::prp::PairedRandomProjection;
 use crate::util::mathx::norm2;
@@ -41,8 +40,11 @@ pub struct StormSketch {
 
 impl StormSketch {
     /// `dim` is the *augmented* dimension `d + 1` ( features + label ).
-    pub fn new(cfg: StormConfig, dim: usize, seed: u64) -> Self {
+    pub fn new(mut cfg: StormConfig, dim: usize, seed: u64) -> Self {
         assert!(dim >= 1);
+        // The concrete type IS the task: normalize so deltas and wire
+        // frames from this sketch always carry the regression tag.
+        cfg.task = Task::Regression;
         let hashes: Vec<PairedRandomProjection> = (0..cfg.rows)
             .map(|r| {
                 PairedRandomProjection::new(
@@ -130,7 +132,7 @@ impl StormSketch {
     /// projection bank with row-block tiling (a block of planes stays
     /// cache-resident while the whole batch streams past) and both PRP
     /// arms served by one shared projection per plane. Produces a counter
-    /// grid bit-identical to sequential [`Sketch::insert`] calls
+    /// grid bit-identical to sequential [`Self::insert`] calls
     /// (property-tested). Row chunks run on scoped threads when the
     /// `R x batch` work grid is large enough to amortize spawning.
     pub fn insert_batch(&mut self, batch: &[Vec<f64>]) {
@@ -319,8 +321,12 @@ fn accumulate_row_range<C: CounterCell>(
     }
 }
 
-impl Sketch for StormSketch {
-    fn insert(&mut self, z: &[f64]) {
+/// The mergeable-summary surface (previously the `Sketch` trait; now
+/// inherent — the task-generic pipeline goes through
+/// [`crate::sketch::RiskSketch`] instead).
+impl StormSketch {
+    /// Ingest one augmented example `z = [x, y]`.
+    pub fn insert(&mut self, z: &[f64]) {
         assert_eq!(z.len(), self.dim, "insert dim mismatch");
         // Hot path: augment both PRP arms ONCE — the augmentation (norm +
         // sqrt + allocation) is identical for every row, so hoisting it
@@ -337,12 +343,14 @@ impl Sketch for StormSketch {
         self.count += 1;
     }
 
-    fn count(&self) -> u64 {
+    /// Number of examples ingested (by this sketch plus everything merged
+    /// into it).
+    pub fn count(&self) -> u64 {
         self.count
     }
 
     /// Raw normalized count estimate: `(1/n) * mean_r count[r, l_r(q)]`.
-    fn query(&self, q: &[f64]) -> f64 {
+    pub fn query(&self, q: &[f64]) -> f64 {
         assert_eq!(q.len(), self.dim, "query dim mismatch");
         if self.count == 0 {
             return 0.0;
@@ -355,9 +363,11 @@ impl Sketch for StormSketch {
         acc / (self.hashes.len() as f64 * self.count as f64)
     }
 
-    fn merge_from(&mut self, other: &Self) {
-        // Widths may differ (narrow device sketches fold into wide
-        // accumulators exactly); geometry, policy, seed and dim may not.
+    /// Merge another sketch built with identical configuration/seeds.
+    /// Widths may differ (narrow device sketches fold into wide
+    /// accumulators exactly); geometry, policy, task, seed and dim may
+    /// not.
+    pub fn merge_from(&mut self, other: &Self) {
         assert!(self.cfg.merge_compatible(&other.cfg), "merge: config mismatch");
         assert_eq!(self.seed, other.seed, "merge: seed (hash family) mismatch");
         assert_eq!(self.dim, other.dim, "merge: dim mismatch");
@@ -365,7 +375,8 @@ impl Sketch for StormSketch {
         self.count += other.count;
     }
 
-    fn bytes(&self) -> usize {
+    /// Memory footprint of the counter array in bytes (width-true).
+    pub fn bytes(&self) -> usize {
         self.grid.bytes()
     }
 }
@@ -374,19 +385,39 @@ impl Sketch for StormSketch {
 /// *single* asymmetric hash per row (no pairing); the expected normalized
 /// count at query `theta` is `(1 - acos(-y <theta, x>)/pi)^p =
 //  g(theta, [x,y]) / 2^p`.
+///
+/// Full pipeline parity with [`StormSketch`]: fused hash-bank batch
+/// insert/query kernels (width-monomorphized, row-tiled, optionally
+/// row-chunk threaded), epoch-tagged snapshot/delta support (see
+/// [`super::delta`]), and the task-tagged v3 wire encoding — so a fleet
+/// of devices can train a classifier end-to-end over labelled streams.
 pub struct StormClassifierSketch {
     cfg: StormConfig,
     grid: CounterGrid,
     hashes: Vec<crate::lsh::asym::AsymmetricInnerProductHash>,
+    /// Fused projection bank over the same hyperplanes (batch hot path).
+    bank: HashBank,
     count: u64,
+    /// Raw feature dimension d (labels fold into the hash sign).
     dim: usize,
     seed: u64,
+    /// Scratch for the sign-folded example of a single insert — reused
+    /// across calls instead of a fresh `Vec` per insert (hot path).
+    fold: Vec<f64>,
+    /// Flat `[n, d]` scratch of sign-folded examples for batch inserts.
+    batch_folds: Vec<f64>,
+    /// Per-example MIPS tails for batch inserts.
+    batch_tails: Vec<f64>,
 }
 
 impl StormClassifierSketch {
     /// `dim` is the raw feature dimension d (labels fold into the sign).
-    pub fn new(cfg: StormConfig, dim: usize, seed: u64) -> Self {
-        let hashes = (0..cfg.rows)
+    pub fn new(mut cfg: StormConfig, dim: usize, seed: u64) -> Self {
+        assert!(dim >= 1);
+        // The concrete type IS the task: normalize so deltas and wire
+        // frames from this sketch always carry the classification tag.
+        cfg.task = Task::Classification;
+        let hashes: Vec<crate::lsh::asym::AsymmetricInnerProductHash> = (0..cfg.rows)
             .map(|r| {
                 crate::lsh::asym::AsymmetricInnerProductHash::new(
                     dim,
@@ -395,6 +426,7 @@ impl StormClassifierSketch {
                 )
             })
             .collect();
+        let bank = HashBank::from_asym_rows(&hashes);
         StormClassifierSketch {
             grid: CounterGrid::with_width(
                 cfg.rows,
@@ -403,41 +435,127 @@ impl StormClassifierSketch {
                 cfg.counter_width,
             ),
             hashes,
+            bank,
             count: 0,
             dim,
             cfg,
             seed,
+            fold: vec![0.0; dim],
+            batch_folds: Vec::new(),
+            batch_tails: Vec::new(),
         }
     }
 
-    /// Insert a labelled example, `y` in {-1, +1}.
+    /// Insert a labelled example, `y` in {-1, +1}. The sign fold is
+    /// written into a long-lived scratch buffer (no per-insert
+    /// allocation) and the hash goes through the same fused-bank kernel
+    /// path as [`Self::insert_batch`] — bit-identical counters either
+    /// way (property-tested).
     pub fn insert_labelled(&mut self, x: &[f64], y: f64) {
         assert_eq!(x.len(), self.dim);
         assert!(y == 1.0 || y == -1.0, "labels must be +-1");
-        let v: Vec<f64> = x.iter().map(|xi| -y * xi).collect();
-        // Hot path: the MIPS augmentation (norm + sqrt + allocation) is
-        // identical for every row — hoist it out of the row loop, like
-        // the regression sketch's insert.
-        let aug = crate::lsh::asym::augment(&v, crate::lsh::asym::Side::Data);
-        for (r, h) in self.hashes.iter().enumerate() {
-            self.grid.increment(r, h.hash_augmented(&aug));
+        for (f, xi) in self.fold.iter_mut().zip(x) {
+            *f = -y * xi;
+        }
+        let tail = HashBank::mips_tail(&self.fold);
+        let rows = self.cfg.rows;
+        let buckets = self.cfg.buckets();
+        let saturating = self.cfg.saturating;
+        let d = self.dim;
+        let bank = &self.bank;
+        let folds = &self.fold;
+        match self.grid.store_mut() {
+            CounterStore::U8(data) => classifier_accumulate_row_range(
+                bank, 0, rows, folds, d, &[tail], buckets, saturating, data,
+            ),
+            CounterStore::U16(data) => classifier_accumulate_row_range(
+                bank, 0, rows, folds, d, &[tail], buckets, saturating, data,
+            ),
+            CounterStore::U32(data) => classifier_accumulate_row_range(
+                bank, 0, rows, folds, d, &[tail], buckets, saturating, data,
+            ),
         }
         self.count += 1;
     }
 
+    /// Fused batch insert of labelled examples `z = [x, y]` (the stream
+    /// layout the fleet ships): fold every label into its sign and hash
+    /// the whole batch against the contiguous projection bank with
+    /// row-block tiling. Counters are bit-identical to sequential
+    /// [`Self::insert_labelled`] calls (property-tested); row chunks run
+    /// on scoped threads when the work grid is large enough.
+    pub fn insert_batch(&mut self, batch: &[Vec<f64>]) {
+        let threads = auto_insert_threads(self.cfg.rows, batch.len());
+        self.insert_batch_with_threads(batch, threads);
+    }
+
+    /// [`Self::insert_batch`] with an explicit row-chunk thread count
+    /// (1 = fully sequential; any count yields the same grid).
+    pub fn insert_batch_with_threads(&mut self, batch: &[Vec<f64>], threads: usize) {
+        if batch.is_empty() {
+            return;
+        }
+        let d = self.dim;
+        for z in batch {
+            assert_eq!(z.len(), d + 1, "insert dim mismatch (examples are [x, y])");
+            let y = z[d];
+            assert!(y == 1.0 || y == -1.0, "labels must be +-1");
+        }
+        // Sign folds + shared MIPS tails once per example, into reusable
+        // scratch buffers (zero steady-state allocation).
+        self.batch_folds.clear();
+        self.batch_folds.reserve(batch.len() * d);
+        self.batch_tails.clear();
+        self.batch_tails.reserve(batch.len());
+        for z in batch {
+            let y = z[d];
+            self.batch_folds.extend(z[..d].iter().map(|xi| -y * xi));
+        }
+        for i in 0..batch.len() {
+            self.batch_tails
+                .push(HashBank::mips_tail(&self.batch_folds[i * d..(i + 1) * d]));
+        }
+        let rows = self.cfg.rows;
+        let buckets = self.cfg.buckets();
+        let saturating = self.cfg.saturating;
+        let threads = threads.clamp(1, rows);
+        let bank = &self.bank;
+        let folds = &self.batch_folds;
+        let tails = &self.batch_tails;
+        match self.grid.store_mut() {
+            CounterStore::U8(data) => classifier_insert_batch_native(
+                bank, rows, buckets, saturating, threads, folds, d, tails, data,
+            ),
+            CounterStore::U16(data) => classifier_insert_batch_native(
+                bank, rows, buckets, saturating, threads, folds, d, tails, data,
+            ),
+            CounterStore::U32(data) => classifier_insert_batch_native(
+                bank, rows, buckets, saturating, threads, folds, d, tails, data,
+            ),
+        }
+        self.count += batch.len() as u64;
+    }
+
     /// Estimated mean margin loss `mean_i g(theta, [x_i, y_i])` (with the
-    /// `2^p` constant of Theorem 3 restored).
+    /// `2^p` constant of Theorem 3 restored), via one fused bank pass.
     pub fn estimate_risk(&self, theta: &[f64]) -> f64 {
         assert_eq!(theta.len(), self.dim);
+        self.fused_estimate(theta)
+    }
+
+    /// Single fused margin-risk readout for a `theta` already inside the
+    /// unit ball: one bank pass, no augmented-vector allocation. Matches
+    /// the scalar per-row hash path bit-for-bit (property-tested).
+    pub(crate) fn fused_estimate(&self, theta: &[f64]) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let aug = crate::lsh::asym::augment(theta, crate::lsh::asym::Side::Query);
+        let tail = HashBank::mips_tail(theta);
         let mut acc = 0.0;
-        for (r, h) in self.hashes.iter().enumerate() {
-            acc += self.grid.get(r, h.hash_augmented(&aug)) as f64;
+        for r in 0..self.cfg.rows {
+            acc += self.grid.get(r, self.bank.query_bucket(r, theta, tail)) as f64;
         }
-        let norm_count = acc / (self.hashes.len() as f64 * self.count as f64);
+        let norm_count = acc / (self.cfg.rows as f64 * self.count as f64);
         norm_count * (self.cfg.buckets() as f64)
     }
 
@@ -461,12 +579,103 @@ impl StormClassifierSketch {
         self.grid.bytes()
     }
 
+    pub fn config(&self) -> StormConfig {
+        self.cfg
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Raw feature dimension d (streamed examples are `[x, y]`, length
+    /// `d + 1`).
+    pub fn feature_dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn grid(&self) -> &CounterGrid {
+        &self.grid
+    }
+
+    /// Per-row hash functions (tests verify the fused bank against them).
+    pub fn hashes(&self) -> &[crate::lsh::asym::AsymmetricInnerProductHash] {
+        &self.hashes
+    }
+
     pub fn merge_from(&mut self, other: &Self) {
-        assert!(self.cfg.merge_compatible(&other.cfg));
-        assert_eq!(self.seed, other.seed);
-        assert_eq!(self.dim, other.dim);
+        assert!(self.cfg.merge_compatible(&other.cfg), "merge: config mismatch");
+        assert_eq!(self.seed, other.seed, "merge: seed (hash family) mismatch");
+        assert_eq!(self.dim, other.dim, "merge: dim mismatch");
         self.grid.merge_from(&other.grid);
         self.count += other.count;
+    }
+
+    /// Grid + count accessors for the delta/serialize plumbing.
+    pub(crate) fn parts_mut(&mut self) -> (&mut CounterGrid, &mut u64) {
+        (&mut self.grid, &mut self.count)
+    }
+}
+
+/// Sequential-or-threaded single-arm batch accumulation over the grid's
+/// native cell buffer (the classifier sibling of
+/// [`insert_batch_native`]; one increment per row per example).
+#[allow(clippy::too_many_arguments)]
+fn classifier_insert_batch_native<C: CounterCell + Send>(
+    bank: &HashBank,
+    rows: usize,
+    buckets: usize,
+    saturating: bool,
+    threads: usize,
+    folds: &[f64],
+    d: usize,
+    tails: &[f64],
+    data: &mut [C],
+) {
+    if threads == 1 {
+        classifier_accumulate_row_range(bank, 0, rows, folds, d, tails, buckets, saturating, data);
+    } else {
+        let chunk_rows = (rows + threads - 1) / threads;
+        std::thread::scope(|scope| {
+            for (i, chunk) in data.chunks_mut(chunk_rows * buckets).enumerate() {
+                let r0 = i * chunk_rows;
+                let r1 = (r0 + chunk_rows).min(rows);
+                scope.spawn(move || {
+                    classifier_accumulate_row_range(
+                        bank, r0, r1, folds, d, tails, buckets, saturating, chunk,
+                    );
+                });
+            }
+        });
+    }
+}
+
+/// Accumulate the single-arm counts of a sign-folded batch for rows
+/// `[r0, r1)` into `grid_rows`, tiled like the regression kernel so each
+/// row block's planes stay cache-resident across the batch. `folds` is
+/// the flat `[n, d]` buffer of `-y * x` vectors.
+#[allow(clippy::too_many_arguments)]
+fn classifier_accumulate_row_range<C: CounterCell>(
+    bank: &HashBank,
+    r0: usize,
+    r1: usize,
+    folds: &[f64],
+    d: usize,
+    tails: &[f64],
+    buckets: usize,
+    saturating: bool,
+    grid_rows: &mut [C],
+) {
+    let mut rb = r0;
+    while rb < r1 {
+        let re = (rb + INSERT_ROW_BLOCK).min(r1);
+        for (i, &tail) in tails.iter().enumerate() {
+            let v = &folds[i * d..(i + 1) * d];
+            for r in rb..re {
+                let b = bank.data_bucket(r, v, tail);
+                bump(&mut grid_rows[(r - r0) * buckets + b], saturating);
+            }
+        }
+        rb = re;
     }
 }
 
@@ -540,6 +749,7 @@ mod tests {
                 power: 4,
                 saturating: true,
                 counter_width: width,
+                ..Default::default()
             };
             let mut rng = Xoshiro256::new(21);
             let data: Vec<Vec<f64>> = (0..77).map(|_| gen_ball_point(&mut rng, 5, 0.95)).collect();
@@ -719,5 +929,146 @@ mod tests {
             sk.insert_labelled(&[0.1, 0.1], 0.5);
         }));
         assert!(result.is_err());
+    }
+
+    /// Labelled ball points with exact ±1 labels.
+    fn gen_labelled(rng: &mut Xoshiro256, n: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+        (0..n)
+            .map(|i| (gen_ball_point(rng, d, 0.9), if i % 2 == 0 { 1.0 } else { -1.0 }))
+            .collect()
+    }
+
+    #[test]
+    fn classifier_fused_insert_matches_scalar_hash_path_bitwise() {
+        // The bank-kernel insert must reproduce the per-row augmented
+        // scalar hashes exactly: rebuild the grid by hand from
+        // `hashes()` and compare counter-for-counter.
+        let cfg = StormConfig { rows: 23, power: 3, saturating: true, ..Default::default() };
+        let mut rng = Xoshiro256::new(31);
+        let data = gen_labelled(&mut rng, 60, 4);
+        let mut sk = StormClassifierSketch::new(cfg, 4, 7);
+        let mut reference = crate::sketch::counters::CounterGrid::new(23, 8, true);
+        for (x, y) in &data {
+            sk.insert_labelled(x, *y);
+            let v: Vec<f64> = x.iter().map(|xi| -y * xi).collect();
+            let aug = crate::lsh::asym::augment(&v, crate::lsh::asym::Side::Data);
+            for (r, h) in sk.hashes().iter().enumerate() {
+                reference.increment(r, h.hash_augmented(&aug));
+            }
+        }
+        assert_eq!(sk.grid().counts_u32(), reference.counts_u32());
+        assert_eq!(sk.count(), 60);
+    }
+
+    #[test]
+    fn classifier_insert_batch_matches_sequential_inserts_bitwise() {
+        let cfg = StormConfig { rows: 37, power: 4, saturating: true, ..Default::default() };
+        let mut rng = Xoshiro256::new(33);
+        let data = gen_labelled(&mut rng, 77, 5);
+        let mut scalar = StormClassifierSketch::new(cfg, 5, 13);
+        for (x, y) in &data {
+            scalar.insert_labelled(x, *y);
+        }
+        // Batch path consumes [x, y] examples (the stream layout).
+        let batch: Vec<Vec<f64>> = data
+            .iter()
+            .map(|(x, y)| {
+                let mut z = x.clone();
+                z.push(*y);
+                z
+            })
+            .collect();
+        let mut fused = StormClassifierSketch::new(cfg, 5, 13);
+        fused.insert_batch(&batch);
+        assert_eq!(scalar.grid().counts_u32(), fused.grid().counts_u32());
+        assert_eq!(scalar.count(), fused.count());
+        // And batch splits / thread counts don't change the grid.
+        let mut split = StormClassifierSketch::new(cfg, 5, 13);
+        split.insert_batch(&batch[..30]);
+        split.insert_batch(&batch[30..]);
+        assert_eq!(split.grid().counts_u32(), fused.grid().counts_u32());
+        let mut threaded = StormClassifierSketch::new(cfg, 5, 13);
+        threaded.insert_batch_with_threads(&batch, 3);
+        assert_eq!(threaded.grid().counts_u32(), fused.grid().counts_u32());
+    }
+
+    #[test]
+    fn classifier_insert_batch_matches_scalar_at_every_width() {
+        use crate::config::CounterWidth;
+        for width in [CounterWidth::U8, CounterWidth::U16] {
+            let cfg = StormConfig {
+                rows: 19,
+                power: 3,
+                saturating: true,
+                counter_width: width,
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256::new(34);
+            let data = gen_labelled(&mut rng, 50, 3);
+            let mut scalar = StormClassifierSketch::new(cfg, 3, 5);
+            for (x, y) in &data {
+                scalar.insert_labelled(x, *y);
+            }
+            let batch: Vec<Vec<f64>> = data
+                .iter()
+                .map(|(x, y)| {
+                    let mut z = x.clone();
+                    z.push(*y);
+                    z
+                })
+                .collect();
+            let mut fused = StormClassifierSketch::new(cfg, 3, 5);
+            fused.insert_batch(&batch);
+            assert_eq!(scalar.grid().counts_u32(), fused.grid().counts_u32(), "{width:?}");
+            assert_eq!(fused.grid().width(), width);
+            assert_eq!(fused.bytes(), 19 * 8 * width.bytes(), "width-true memory");
+        }
+    }
+
+    #[test]
+    fn classifier_merge_equals_concatenation() {
+        let cfg = StormConfig { rows: 15, power: 2, saturating: true, ..Default::default() };
+        let mut rng = Xoshiro256::new(35);
+        let d1 = gen_labelled(&mut rng, 40, 3);
+        let d2 = gen_labelled(&mut rng, 60, 3);
+        let mut s1 = StormClassifierSketch::new(cfg, 3, 9);
+        let mut s2 = StormClassifierSketch::new(cfg, 3, 9);
+        let mut su = StormClassifierSketch::new(cfg, 3, 9);
+        for (x, y) in &d1 {
+            s1.insert_labelled(x, *y);
+            su.insert_labelled(x, *y);
+        }
+        for (x, y) in &d2 {
+            s2.insert_labelled(x, *y);
+            su.insert_labelled(x, *y);
+        }
+        s1.merge_from(&s2);
+        assert_eq!(s1.grid().counts_u32(), su.grid().counts_u32());
+        assert_eq!(s1.count(), 100);
+        let theta = gen_ball_point(&mut rng, 3, 0.7);
+        assert_eq!(s1.estimate_risk(&theta), su.estimate_risk(&theta));
+    }
+
+    #[test]
+    #[should_panic]
+    fn classifier_merge_different_seeds_panics() {
+        let cfg = StormConfig::default();
+        let mut a = StormClassifierSketch::new(cfg, 3, 1);
+        let b = StormClassifierSketch::new(cfg, 3, 2);
+        a.merge_from(&b);
+    }
+
+    #[test]
+    fn classifier_task_is_normalized_by_the_constructor() {
+        // Building a classifier from a default (regression-tagged) config
+        // must still stamp its deltas and wire frames as classification.
+        let sk = StormClassifierSketch::new(StormConfig::default(), 2, 1);
+        assert_eq!(sk.config().task, crate::config::Task::Classification);
+        let rk = StormSketch::new(
+            StormConfig { task: crate::config::Task::Classification, ..Default::default() },
+            3,
+            1,
+        );
+        assert_eq!(rk.config().task, crate::config::Task::Regression);
     }
 }

@@ -119,6 +119,21 @@ pub fn test_counter_width() -> crate::config::CounterWidth {
     }
 }
 
+/// Learning task the task-generic invariant sweeps should build models
+/// at: `STORM_TEST_TASK=regression|classification` (default `regression`,
+/// the seed behaviour). The CI matrix runs the suite once at
+/// `classification` so the classifier rides every fleet/chaos/width
+/// invariant, not just the tests that name it explicitly. Malformed
+/// values panic loudly — a typo'd knob silently running the default
+/// would defeat that CI leg.
+pub fn test_task() -> crate::config::Task {
+    match std::env::var("STORM_TEST_TASK") {
+        Err(_) => crate::config::Task::Regression,
+        Ok(v) => crate::config::Task::parse(&v)
+            .unwrap_or_else(|| panic!("STORM_TEST_TASK must be regression|classification, got {v:?}")),
+    }
+}
+
 /// Uniform f64 vector with entries in `[lo, hi)`.
 pub fn gen_vec(rng: &mut Xoshiro256, len: usize, lo: f64, hi: f64) -> Vec<f64> {
     (0..len).map(|_| rng.uniform_range(lo, hi)).collect()

@@ -184,5 +184,77 @@ fn config_files_parse() {
             .unwrap_or_else(|e| panic!("{f}: {e}"));
         assert_eq!(cfg.storm.rows, 1000);
         assert_eq!(cfg.fleet.devices, 8);
+        assert_eq!(cfg.storm.task, storm::config::Task::Regression, "{f}: seed task default");
     }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs/classification_fleet.toml");
+    let cfg = storm::config::RunConfig::from_toml_file(&path).expect("classification config");
+    assert_eq!(cfg.storm.task, storm::config::Task::Classification);
+    assert_eq!(cfg.dataset, "synth2d-clf");
+    assert_eq!(cfg.storm.rows, 600);
+    assert_eq!(cfg.fleet.sync_rounds, 3);
+}
+
+#[test]
+fn train_classification_end_to_end_with_faults() {
+    // The acceptance path: `storm train --task classification` over a
+    // labelled synthetic stream, through the fleet, with faults
+    // injected — must complete, report margin risk + accuracy, and
+    // account the chaos.
+    let out = storm()
+        .args([
+            "train",
+            "--task",
+            "classification",
+            "--dataset",
+            "synth2d-clf",
+            "--rows",
+            "200",
+            "--power",
+            "2",
+            "--iters",
+            "60",
+            "--devices",
+            "3",
+            "--sync-rounds",
+            "3",
+            "--faults-seed",
+            "7",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("margin-risk="), "{text}");
+    assert!(text.contains("acc="), "{text}");
+    assert!(text.contains("classification: training accuracy"), "{text}");
+    assert!(text.contains("chaos:"), "faults must be injected and reported: {text}");
+    assert!(text.contains("round  examples  net_bytes  resend_bytes  est_risk"), "{text}");
+}
+
+#[test]
+fn train_rejects_bad_task_and_xla_classification() {
+    let out = storm()
+        .args(["train", "--task", "ranking"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let out = storm()
+        .args([
+            "train",
+            "--task",
+            "classification",
+            "--dataset",
+            "synth2d-clf",
+            "--backend",
+            "xla",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("regression only"));
 }

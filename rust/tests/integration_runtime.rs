@@ -12,7 +12,6 @@ use storm::coordinator::oracle::XlaRiskOracle;
 use storm::optim::RiskOracle;
 use storm::runtime::XlaStorm;
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 use storm::testing::gen_ball_point;
 use storm::util::rng::Xoshiro256;
 

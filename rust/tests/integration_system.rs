@@ -13,7 +13,6 @@ use storm::edge::topology::Topology;
 use storm::linalg::solve::mse;
 use storm::sketch::serialize::{decode, encode};
 use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
 
 fn base_cfg(dataset: &str) -> RunConfig {
     RunConfig {

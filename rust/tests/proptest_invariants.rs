@@ -8,19 +8,20 @@
 //! `STORM_TEST_REPLAY=<seed>:<case>` re-runs exactly one failing case
 //! with its exact RNG stream — the value is printed by any failure.
 
-use storm::config::{CounterWidth, FleetConfig, StormConfig};
+use storm::config::{CounterWidth, FleetConfig, StormConfig, Task};
 use storm::data::stream::partition_streams;
 use storm::edge::faults::FaultPlan;
-use storm::edge::fleet::{run_fleet, run_fleet_chaos};
+use storm::edge::fleet::{run_fleet_model, run_fleet_model_chaos};
 use storm::edge::topology::Topology;
 use storm::lsh::asym::{augment, Side};
 use storm::lsh::prp::PairedRandomProjection;
 use storm::lsh::srp::SignedRandomProjection;
 use storm::lsh::LshFunction;
 use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, encode_delta_v3, wire_bytes};
-use storm::sketch::storm::StormSketch;
-use storm::sketch::Sketch;
-use storm::testing::{assert_close, cases, gen_ball_point, gen_dim, test_counter_width};
+use storm::sketch::model::StormModel;
+use storm::sketch::storm::{StormClassifierSketch, StormSketch};
+use storm::sketch::RiskSketch;
+use storm::testing::{assert_close, cases, gen_ball_point, gen_dim, test_counter_width, test_task};
 use storm::util::mathx::{dot, norm2};
 use storm::util::rng::Rng;
 
@@ -61,6 +62,7 @@ fn prop_sketch_row_mass_is_2n() {
             power: p,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let n = 1 + (rng.next_u64() % 60) as usize;
@@ -83,6 +85,7 @@ fn prop_merge_commutative_and_associative() {
             power: 3,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let dim = gen_dim(rng, 1, 8);
         let seed = case as u64;
@@ -128,6 +131,7 @@ fn prop_wire_roundtrip_any_config() {
             power: p,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let mut sk = StormSketch::new(cfg, dim, case as u64 ^ 0xABCD);
         let n = (rng.next_u64() % 40) as usize;
@@ -156,6 +160,7 @@ fn prop_delta_wire_roundtrip_any_config() {
             power: p,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let seed = case as u64 ^ 0xDE17A;
         let mut sk = StormSketch::new(cfg, dim, seed);
@@ -194,6 +199,7 @@ fn prop_sparse_delta_cheaper_than_dense_v1() {
             power: 4,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let dim = gen_dim(rng, 1, 10);
         let mut sk = StormSketch::new(cfg, dim, case as u64);
@@ -226,6 +232,7 @@ fn prop_wire_corruption_errors_never_panic() {
             power: 1 + (case % 5) as u32,
             saturating: true,
             counter_width: width,
+            ..Default::default()
         };
         let dim = gen_dim(rng, 1, 8);
         let mut sk = StormSketch::new(cfg, dim, case as u64);
@@ -276,6 +283,7 @@ fn prop_header_mutations_with_valid_crc_rejected() {
             power: 1 + (case % 4) as u32,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let dim = gen_dim(rng, 1, 6);
         let mut sk = StormSketch::new(cfg, dim, case as u64);
@@ -310,8 +318,11 @@ fn prop_header_mutations_with_valid_crc_rejected() {
 #[test]
 fn prop_round_sync_bit_identical_to_oneshot() {
     // THE tentpole invariant: for a fixed family seed, R rounds of delta
-    // synchronization produce a leader sketch bit-identical to the
-    // one-shot full merge — across device counts and topologies.
+    // synchronization produce a leader model bit-identical to the
+    // one-shot full merge — across device counts and topologies, for
+    // whichever task STORM_TEST_TASK selects (the CI matrix runs the
+    // sweep once per task).
+    let task = test_task();
     cases(8, 117, |rng, case| {
         let n_examples = 60 + (rng.next_u64() % 120) as usize;
         let devices = 1 + (case % 4);
@@ -322,15 +333,12 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             power: 3,
             saturating: true,
             counter_width: test_counter_width(),
+            task,
         };
-        let mut ds = storm_ds(n_examples, case as u64);
-        storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        let ds = task_ds(n_examples, case as u64, task);
         let family_seed = 0xF1EE7 ^ case as u64;
-        // One-shot reference: a single local sketch over the whole set.
-        let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
-        for i in 0..ds.len() {
-            reference.insert(&ds.augmented(i));
-        }
+        // One-shot reference: a single local model over the whole set.
+        let reference = reference_model(storm, &ds, family_seed);
         let fleet = FleetConfig {
             devices,
             batch: 16,
@@ -344,11 +352,13 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
-        let result = run_fleet(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
+        let result =
+            run_fleet_model::<StormModel>(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
+        assert_eq!(result.sketch.task(), task);
         assert_eq!(
             result.sketch.grid().counts_u32(),
             reference.grid().counts_u32(),
-            "devices={devices} rounds={rounds} topo={topo:?}"
+            "devices={devices} rounds={rounds} topo={topo:?} task={task}"
         );
         assert_eq!(result.sketch.count(), reference.count());
         assert_eq!(result.rounds.len(), rounds);
@@ -371,6 +381,7 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
     // quorums. Replay a failing case with
     // STORM_TEST_REPLAY=118:<case>; the fault schedule itself is a pure
     // function of the printed faults_seed.
+    let task = test_task();
     let mut injected_total = 0u64;
     let ran = cases(9, 118, |rng, case| {
         let n_examples = 80 + (rng.next_u64() % 140) as usize;
@@ -386,15 +397,12 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             power: 3,
             saturating: true,
             counter_width: test_counter_width(),
+            task,
         };
-        let mut ds = storm_ds(n_examples, case as u64 ^ 0xFA);
-        storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        let ds = task_ds(n_examples, case as u64 ^ 0xFA, task);
         let family_seed = 0xFA17 ^ case as u64;
-        // One-shot fault-free reference: a single local sketch.
-        let mut reference = StormSketch::new(storm, ds.dim() + 1, family_seed);
-        for i in 0..ds.len() {
-            reference.insert(&ds.augmented(i));
-        }
+        // One-shot fault-free reference: a single local model.
+        let reference = reference_model(storm, &ds, family_seed);
         let faults_seed = rng.next_u64();
         let plan = FaultPlan::from_seed(faults_seed);
         let fleet = FleetConfig {
@@ -411,7 +419,7 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
-        let result = run_fleet_chaos(
+        let result = run_fleet_model_chaos::<StormModel, _>(
             fleet,
             storm,
             topo,
@@ -422,7 +430,7 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             |_, _| {},
         );
         let ctx = format!(
-            "faults_seed={faults_seed:#x} devices={devices} rounds={rounds} topo={topo:?}"
+            "faults_seed={faults_seed:#x} devices={devices} rounds={rounds} topo={topo:?} task={task}"
         );
         assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32(), "{ctx}");
         assert_eq!(result.sketch.count(), reference.count(), "{ctx}");
@@ -464,20 +472,18 @@ fn prop_widening_merge_exact_without_saturation() {
             _ => Topology::Chain,
         };
         let n_examples = 40 + (rng.next_u64() % 80) as usize; // <= 120
+        let task = test_task();
         let storm_u32 = StormConfig {
             rows: 6 + (case % 6),
             power: 3,
             saturating: true,
             counter_width: CounterWidth::U32,
+            task,
         };
-        let mut ds = storm_ds(n_examples, case as u64 ^ 0x71D7);
-        storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        let ds = task_ds(n_examples, case as u64 ^ 0x71D7, task);
         let family_seed = 0x71D7 ^ case as u64;
         // All-u32 one-shot reference over the whole stream.
-        let mut reference = StormSketch::new(storm_u32, ds.dim() + 1, family_seed);
-        for i in 0..ds.len() {
-            reference.insert(&ds.augmented(i));
-        }
+        let reference = reference_model(storm_u32, &ds, family_seed);
         let fleet = FleetConfig {
             devices,
             batch: 16,
@@ -492,8 +498,11 @@ fn prop_widening_merge_exact_without_saturation() {
         };
         let leader_storm = StormConfig { counter_width: leader_w, ..storm_u32 };
         let streams = partition_streams(&ds, devices, None);
-        let result = run_fleet(fleet, leader_storm, topo, ds.dim() + 1, family_seed, streams);
-        let ctx = format!("device={device_w} leader={leader_w} devices={devices} topo={topo:?}");
+        let result = run_fleet_model::<StormModel>(
+            fleet, leader_storm, topo, ds.dim() + 1, family_seed, streams,
+        );
+        let ctx =
+            format!("device={device_w} leader={leader_w} devices={devices} topo={topo:?} task={task}");
         assert_eq!(result.sketch.grid().width(), leader_w, "{ctx}");
         assert_eq!(
             result.sketch.grid().counts_u32(),
@@ -567,6 +576,158 @@ fn storm_ds(n: usize, seed: u64) -> storm::data::dataset::Dataset {
     storm::data::dataset::Dataset::new("prop-fleet", x, y)
 }
 
+/// Task-appropriate dataset for the fleet property sweeps: regression
+/// gets the unit-ball-scaled random stream; classification scales
+/// features only and plants exact ±1 labels (the margin hash folds them
+/// into the sign, so they must stay exact).
+fn task_ds(n: usize, seed: u64, task: Task) -> storm::data::dataset::Dataset {
+    let mut ds = storm_ds(n, seed);
+    match task {
+        Task::Regression => {
+            storm::data::scale::scale_to_unit_ball(&mut ds, 0.9);
+        }
+        Task::Classification => {
+            storm::data::scale::scale_features_to_unit_ball(&mut ds, 0.9);
+            for (i, y) in ds.y.iter_mut().enumerate() {
+                *y = if i % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+    }
+    ds
+}
+
+/// One-shot local model over the whole dataset (the fleet reference).
+fn reference_model(
+    storm: StormConfig,
+    ds: &storm::data::dataset::Dataset,
+    family_seed: u64,
+) -> StormModel {
+    let mut reference = StormModel::new(storm, ds.dim() + 1, family_seed);
+    for i in 0..ds.len() {
+        reference.insert(&ds.augmented(i));
+    }
+    reference
+}
+
+#[test]
+fn prop_classifier_merge_equals_concatenation_all_widths_and_topologies() {
+    // Classifier parity satellite: merge-equals-concatenation for the
+    // margin-hash sketch at every counter width, both directly
+    // (merge_from of split streams) and through the real fleet across
+    // star/tree/chain.
+    let widths = [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32];
+    cases(9, 121, |rng, case| {
+        let width = widths[case % widths.len()];
+        let topo = match case % 3 {
+            0 => Topology::Star,
+            1 => Topology::Tree { fanout: 2 },
+            _ => Topology::Chain,
+        };
+        let devices = 2 + (case % 3);
+        let rounds = 1 + (case % 3);
+        let n_examples = 40 + (rng.next_u64() % 80) as usize; // u8-safe: 1 inc/row/example
+        let storm = StormConfig {
+            rows: 5 + (case % 7),
+            power: 2,
+            saturating: true,
+            counter_width: width,
+            task: Task::Classification,
+        };
+        let ds = task_ds(n_examples, case as u64 ^ 0xC1F, Task::Classification);
+        let family_seed = 0xC1F0 ^ case as u64;
+        let reference = reference_model(storm, &ds, family_seed);
+
+        // Direct merge: split the stream at a random point.
+        let cut = 1 + (rng.next_u64() as usize % (n_examples - 1));
+        let mut a = StormClassifierSketch::new(storm, ds.dim(), family_seed);
+        let mut b = StormClassifierSketch::new(storm, ds.dim(), family_seed);
+        for i in 0..ds.len() {
+            let z = ds.augmented(i);
+            if i < cut {
+                a.insert_labelled(&z[..ds.dim()], z[ds.dim()]);
+            } else {
+                b.insert_labelled(&z[..ds.dim()], z[ds.dim()]);
+            }
+        }
+        a.merge_from(&b);
+        assert_eq!(
+            a.grid().counts_u32(),
+            reference.grid().counts_u32(),
+            "direct merge: width={width} cut={cut}"
+        );
+        assert_eq!(a.count(), n_examples as u64);
+
+        // Fleet merge: same invariant through devices + aggregators.
+        let fleet = FleetConfig {
+            devices,
+            batch: 16,
+            channel_capacity: 2,
+            link_latency_us: 0,
+            link_bandwidth_bps: 0,
+            sync_rounds: rounds,
+            min_quorum: 0,
+            faults_seed: None,
+            device_counter_width: None,
+            seed: 0,
+        };
+        let streams = partition_streams(&ds, devices, None);
+        let result =
+            run_fleet_model::<StormModel>(fleet, storm, topo, ds.dim() + 1, family_seed, streams);
+        assert_eq!(
+            result.sketch.grid().counts_u32(),
+            reference.grid().counts_u32(),
+            "fleet merge: width={width} topo={topo:?} rounds={rounds}"
+        );
+        assert_eq!(result.sketch.count(), n_examples as u64);
+        // Row mass sanity: the single-arm hash adds exactly ONE count
+        // per row per example (vs two for the paired regression hash).
+        for r in 0..storm.rows {
+            let mass: u64 = result.sketch.grid().row(r).iter().map(|&c| c as u64).sum();
+            assert_eq!(mass, n_examples as u64, "row {r}");
+        }
+    });
+}
+
+#[test]
+fn prop_classifier_delta_wire_roundtrip_any_config() {
+    // Task-tagged v3 frames round-trip for any geometry/width, and a
+    // replica fed only the decoded delta reproduces the live classifier.
+    cases(40, 122, |rng, case| {
+        let widths = [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32];
+        let cfg = StormConfig {
+            rows: 1 + (case % 20),
+            power: 1 + (case % 5) as u32,
+            saturating: true,
+            counter_width: widths[case % widths.len()],
+            task: Task::Classification,
+        };
+        let d = gen_dim(rng, 1, 8);
+        let seed = case as u64 ^ 0xC1FD;
+        let mut sk = StormClassifierSketch::new(cfg, d, seed);
+        let head = (rng.next_u64() % 20) as usize;
+        for i in 0..head {
+            let x = gen_ball_point(rng, d, 0.9);
+            sk.insert_labelled(&x, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let snap = sk.snapshot();
+        let mut replica = StormClassifierSketch::new(cfg, d, seed);
+        replica.merge_from(&sk);
+        let tail = (rng.next_u64() % 30) as usize;
+        for i in 0..tail {
+            let x = gen_ball_point(rng, d, 0.9);
+            sk.insert_labelled(&x, if i % 2 == 0 { 1.0 } else { -1.0 });
+        }
+        let delta = sk.delta_since(&snap, rng.next_u64() % 1000);
+        assert_eq!(delta.count, tail as u64);
+        assert_eq!(delta.cfg.task, Task::Classification);
+        let back = decode_delta(&encode_delta(&delta)).unwrap();
+        assert_eq!(back, delta);
+        replica.apply_delta(&back);
+        assert_eq!(replica.grid().counts_u32(), sk.grid().counts_u32());
+        assert_eq!(replica.count(), sk.count());
+    });
+}
+
 #[test]
 fn prop_query_estimate_bounded() {
     // 0 <= raw query estimate <= 2 (both PRP arms can collide).
@@ -577,6 +738,7 @@ fn prop_query_estimate_bounded() {
             power: 4,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         for _ in 0..30 {
@@ -619,6 +781,7 @@ fn prop_insert_batch_bit_identical_to_scalar_inserts() {
             power: p,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let n = 1 + (rng.next_u64() % 50) as usize;
         let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(rng, dim, 0.95)).collect();
@@ -648,6 +811,7 @@ fn prop_insert_batch_split_and_thread_invariant() {
             power: 4,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let n = 20 + (rng.next_u64() % 40) as usize;
         let data: Vec<Vec<f64>> = (0..n).map(|_| gen_ball_point(rng, dim, 0.9)).collect();
@@ -682,6 +846,7 @@ fn prop_estimate_risk_batch_bit_identical_to_scalar() {
             power: 4,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         let n = (rng.next_u64() % 60) as usize; // sometimes empty
@@ -723,6 +888,7 @@ fn prop_bank_pairs_match_per_row_hashes() {
             power: p,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let sk = StormSketch::new(cfg, dim, case as u64);
         let bank = sk.bank();
@@ -745,6 +911,7 @@ fn prop_scaled_estimates_invariant_to_theta_magnitude_beyond_ball() {
             power: 4,
             saturating: true,
             counter_width: test_counter_width(),
+            ..Default::default()
         };
         let mut sk = StormSketch::new(cfg, dim, case as u64);
         for _ in 0..50 {
