@@ -58,17 +58,28 @@ def encode_delta(
     counts,
     width_bytes=4,
     classification=False,
+    family=0,
+    density_permille=None,
 ) -> bytes:
-    """v2 (u32 regression) or v3 (narrow width and/or classification)."""
-    v3 = width_bytes != 4 or classification
+    """v2 (u32 dense-family regression) or v3 (narrow width,
+    classification, and/or a structured hash family).
+
+    ``family`` is the 2-bit code in flags bits 2-3 (0 = dense, 1 = sparse
+    Rademacher, 2 = Hadamard); the sparse family appends its density
+    per-mille as a little-endian u16 right after the flags byte.
+    """
+    v3 = width_bytes != 4 or classification or family != 0
     body = header(3 if v3 else 2, power, rows, dim, seed, count)
     body += struct.pack("<Q", epoch)
     if v3:
         body += bytes([width_bytes])
-    task_bit = FLAG_TASK_CLASSIFICATION if (classification and v3) else 0
+    tag_bits = 0
+    if v3:
+        tag_bits = (FLAG_TASK_CLASSIFICATION if classification else 0) | (family << 2)
+    density = struct.pack("<H", density_permille) if (v3 and family == 1) else b""
     nonzero = [(i, c) for i, c in enumerate(counts) if c != 0]
     if len(nonzero) * 2 <= len(counts):  # populated fraction <= 50%
-        body += bytes([FLAG_SPARSE | task_bit])
+        body += bytes([FLAG_SPARSE | tag_bits]) + density
         body += varint(len(nonzero))
         prev = None
         for i, c in nonzero:
@@ -76,7 +87,7 @@ def encode_delta(
             body += varint(c)
             prev = i
     else:
-        body += bytes([FLAG_DENSE | task_bit])
+        body += bytes([FLAG_DENSE | tag_bits]) + density
         fmt = {1: "<B", 2: "<H", 4: "<I"}[width_bytes]
         body += b"".join(struct.pack(fmt, c) for c in counts)
     return body + struct.pack("<I", fnv1a(body))
@@ -132,6 +143,15 @@ def fixtures():
         "GOLDEN_CLF_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1, classification=True),
         "GOLDEN_CLF_U16_DENSE_HEX": encode_delta(**d16, width_bytes=2, classification=True),
         "GOLDEN_CLF_U32_SPARSE_HEX": encode_delta(**s, width_bytes=4, classification=True),
+        # Structured hash families: family bits 2-3 set (always v3); the
+        # sparse family carries its density per-mille after the flags.
+        "GOLDEN_SPARSE_FAM_U32_SPARSE_HEX": encode_delta(
+            **s, family=1, density_permille=250
+        ),
+        "GOLDEN_HADAMARD_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1, family=2),
+        "GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX": encode_delta(
+            **d16, width_bytes=2, classification=True, family=1, density_permille=100
+        ),
     }
 
 

@@ -8,6 +8,8 @@
 //! across PRs.
 
 use storm::config::{CounterWidth, StormConfig};
+use storm::lsh::bank::HashBank;
+use storm::lsh::prp::PairedRandomProjection;
 use storm::sketch::serialize::{
     decode, decode_delta, delta_wire_bytes, encode, encode_delta, wire_bytes,
 };
@@ -52,6 +54,74 @@ fn main() {
                 }
             },
         ));
+    }
+
+    section("lsh bank: projection-kernel throughput (items = row-hashes)");
+    // The kernel matrix of the hash hot path: the same 100-row bank at
+    // d = 64, p = 8, hashed by (a) the scalar oracle, (b) the
+    // runtime-dispatched SIMD kernel, and the two structured families.
+    // Per item = one row's pair of PRP buckets, so items/sec compares
+    // projection engines directly, independent of counter traffic.
+    {
+        let (rows, d, p) = (100usize, 64usize, 8u32);
+        let prp_rows: Vec<PairedRandomProjection> = (0..rows)
+            .map(|r| PairedRandomProjection::new(d, p, 0x9E37 + r as u64))
+            .collect();
+        let dense_bank = HashBank::from_rows(&prp_rows);
+        println!("  dense kernel: {}", dense_bank.kernel_name());
+        let seeds: Vec<u64> = (0..rows)
+            .map(|r| 7u64.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64))
+            .collect();
+        let sparse_bank = HashBank::sparse_from_seeds(d, p, &seeds, 100);
+        let hadamard_bank = HashBank::hadamard_from_seeds(d, p, &seeds);
+        let mut rng = Xoshiro256::new(8);
+        let batch: Vec<Vec<f64>> = (0..256).map(|_| gen_ball_point(&mut rng, d, 0.9)).collect();
+        let tails: Vec<f64> = batch.iter().map(|z| HashBank::mips_tail(z)).collect();
+        let n_hashes = (rows * batch.len()) as u64;
+        let sweep = |bank: &HashBank, scalar: bool| {
+            let mut acc = 0usize;
+            for (z, &t) in batch.iter().zip(&tails) {
+                for r in 0..rows {
+                    let (a, b) = if scalar {
+                        bank.data_pair_scalar(r, z, t)
+                    } else {
+                        bank.data_pair(r, z, t)
+                    };
+                    acc ^= a ^ b;
+                }
+            }
+            black_box(acc);
+        };
+        json.record(bench_items("bank_scalar_pair_R100_d64_p8", cfg, n_hashes, || {
+            sweep(&dense_bank, true);
+        }));
+        json.record(bench_items("bank_simd_pair_R100_d64_p8", cfg, n_hashes, || {
+            sweep(&dense_bank, false);
+        }));
+        json.record(bench_items("bank_sparse_pair_R100_d64_p8", cfg, n_hashes, || {
+            sweep(&sparse_bank, false);
+        }));
+        json.record(bench_items("bank_hadamard_pair_R100_d64_p8", cfg, n_hashes, || {
+            sweep(&hadamard_bank, false);
+        }));
+        // Query side (single bucket per row) for the dense kernels only —
+        // the structured families share their data-side code path.
+        let q = gen_ball_point(&mut rng, d, 0.8);
+        let qt = HashBank::mips_tail(&q);
+        json.record(bench_items("bank_scalar_query_R100_d64_p8", cfg, rows as u64, || {
+            let mut acc = 0usize;
+            for r in 0..rows {
+                acc ^= dense_bank.query_bucket_scalar(r, &q, qt);
+            }
+            black_box(acc);
+        }));
+        json.record(bench_items("bank_simd_query_R100_d64_p8", cfg, rows as u64, || {
+            let mut acc = 0usize;
+            for r in 0..rows {
+                acc ^= dense_bank.query_bucket(r, &q, qt);
+            }
+            black_box(acc);
+        }));
     }
 
     section("sketch: query latency");

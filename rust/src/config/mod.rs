@@ -121,6 +121,88 @@ impl std::fmt::Display for Task {
     }
 }
 
+/// Default nonzero fraction for [`HashFamily::Sparse`], in per-mille
+/// (100 = 10% of augmented coordinates per hyperplane — Achlioptas-style
+/// sparse projections stay within the SRP concentration regime well
+/// below this).
+pub const DEFAULT_SPARSE_DENSITY_PERMILLE: u16 = 100;
+
+/// The hyperplane family the sketch's LSH rows draw from — the
+/// projection-cost knob of the hash hot path. All three families feed
+/// the same fused sign-fold ([`crate::lsh::bank::HashBank`]); they trade
+/// per-example FLOPs against the Gaussian family's tightest collision
+/// guarantees:
+///
+/// * `dense` — iid Gaussian hyperplanes (the seed family; `O(d)` mults
+///   per plane). The default; the only family the wire goldens and the
+///   XLA backend embed.
+/// * `sparse` — sparse Rademacher hyperplanes: each augmented coordinate
+///   enters a plane with probability `density` and sign ±1, so a
+///   projection is a few *adds* per nonzero.
+/// * `hadamard` — fast-Hadamard SRP (`HD₁HD₂HD₃`-style): three sign
+///   diagonals interleaved with Walsh–Hadamard transforms give `p`
+///   pseudo-Gaussian projections in `O(m log m)` per row over the
+///   padded power-of-two dimension `m`.
+///
+/// Merging sketches of different families is meaningless (the bucket
+/// index spaces differ), so [`StormConfig::merge_compatible`] requires
+/// equality, density included.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum HashFamily {
+    /// Dense iid Gaussian hyperplanes (seed behaviour, wire-pinned).
+    #[default]
+    Dense,
+    /// Sparse Rademacher hyperplanes at `density_permille / 1000`
+    /// expected nonzeros per coordinate (each plane keeps at least one).
+    Sparse {
+        /// Expected nonzero fraction per hyperplane, in per-mille
+        /// (valid range 1..=1000; see `config::validate`).
+        density_permille: u16,
+    },
+    /// Fast-Hadamard structured SRP over the padded power-of-two dim.
+    Hadamard,
+}
+
+impl HashFamily {
+    /// Config/CLI name (`dense` | `sparse` | `hadamard`).
+    pub fn name(self) -> &'static str {
+        match self {
+            HashFamily::Dense => "dense",
+            HashFamily::Sparse { .. } => "sparse",
+            HashFamily::Hadamard => "hadamard",
+        }
+    }
+
+    /// Parse a config/CLI name; `None` for anything else. `sparse`
+    /// parses at the default density
+    /// ([`DEFAULT_SPARSE_DENSITY_PERMILLE`]); override it with the
+    /// `sparse_density` key / `--sparse-density` flag.
+    pub fn parse(s: &str) -> Option<HashFamily> {
+        match s.trim() {
+            "dense" => Some(HashFamily::Dense),
+            "sparse" => Some(HashFamily::Sparse {
+                density_permille: DEFAULT_SPARSE_DENSITY_PERMILLE,
+            }),
+            "hadamard" => Some(HashFamily::Hadamard),
+            _ => None,
+        }
+    }
+
+    /// Sparse nonzero fraction as a float (`None` for other families).
+    pub fn sparse_density(self) -> Option<f64> {
+        match self {
+            HashFamily::Sparse { density_permille } => Some(density_permille as f64 / 1000.0),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HashFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Sketch hyperparameters (Section 3 / 4.1 of the paper).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StormConfig {
@@ -137,6 +219,10 @@ pub struct StormConfig {
     /// The concrete sketch constructors normalize this to their own task;
     /// [`crate::sketch::model::StormModel`] dispatches on it.
     pub task: Task,
+    /// Hyperplane family for the LSH rows (`dense` default — the seed
+    /// Gaussian family; `sparse` / `hadamard` are the structured
+    /// low-FLOP families). Fleet-wide invariant like `task`.
+    pub hash_family: HashFamily,
 }
 
 impl Default for StormConfig {
@@ -147,6 +233,7 @@ impl Default for StormConfig {
             saturating: true,
             counter_width: CounterWidth::U32,
             task: Task::Regression,
+            hash_family: HashFamily::Dense,
         }
     }
 }
@@ -165,16 +252,20 @@ impl StormConfig {
     }
 
     /// True when two sketches/deltas of these configs can be merged:
-    /// identical geometry, overflow policy and *task* (a classification
+    /// identical geometry, overflow policy, *task* (a classification
     /// delta folded into a regression sketch would silently mix two
-    /// different hash families). Counter *width* is allowed to differ —
-    /// merges widen narrow-into-wide exactly (and clip wide-into-narrow
-    /// at the destination's width, same as local saturation).
+    /// different hash constructions) and *hyperplane family* (dense /
+    /// sparse / Hadamard rows index incompatible bucket spaces even at
+    /// the same seed; sparse density counts too). Counter *width* is
+    /// allowed to differ — merges widen narrow-into-wide exactly (and
+    /// clip wide-into-narrow at the destination's width, same as local
+    /// saturation).
     pub fn merge_compatible(&self, other: &StormConfig) -> bool {
         self.rows == other.rows
             && self.power == other.power
             && self.saturating == other.saturating
             && self.task == other.task
+            && self.hash_family == other.hash_family
     }
 }
 
@@ -291,6 +382,9 @@ impl RunConfig {
             dataset: "airfoil".to_string(),
             ..Default::default()
         };
+        // `sparse_density` may appear before or after `hash_family` in the
+        // file; hold it until both keys have been seen.
+        let mut pending_sparse_density: Option<f64> = None;
         for (section, key, value) in doc.entries() {
             match (section.as_str(), key.as_str()) {
                 ("", "dataset") => cfg.dataset = value.as_str().to_string(),
@@ -317,6 +411,18 @@ impl RunConfig {
                             value.as_str()
                         ))
                     })?
+                }
+                ("storm", "hash_family") => {
+                    cfg.storm.hash_family =
+                        HashFamily::parse(value.as_str()).ok_or_else(|| {
+                            ConfigError::Parse(format!(
+                                "storm.hash_family must be dense|sparse|hadamard, got {:?}",
+                                value.as_str()
+                            ))
+                        })?
+                }
+                ("storm", "sparse_density") => {
+                    pending_sparse_density = Some(value.as_f64().map_err(ConfigError::Parse)?)
                 }
                 ("optimizer", "queries") => {
                     cfg.optimizer.queries = value.as_usize().map_err(ConfigError::Parse)?
@@ -371,6 +477,24 @@ impl RunConfig {
                 }
                 (s, k) => {
                     return Err(ConfigError::Parse(format!("unknown config key [{s}] {k}")));
+                }
+            }
+        }
+        if let Some(density) = pending_sparse_density {
+            match cfg.storm.hash_family {
+                HashFamily::Sparse { .. } => {
+                    // Out-of-range values survive the conversion so
+                    // `validate` can report them against (0, 1].
+                    let permille = (density * 1000.0).round().clamp(0.0, u16::MAX as f64);
+                    cfg.storm.hash_family =
+                        HashFamily::Sparse { density_permille: permille as u16 };
+                }
+                other => {
+                    return Err(ConfigError::Parse(format!(
+                        "storm.sparse_density only applies to hash_family = \"sparse\" \
+                         (got hash_family = {:?})",
+                        other.name()
+                    )));
                 }
             }
         }
@@ -430,6 +554,97 @@ mod tests {
             !base.merge_compatible(&StormConfig { task: Task::Classification, ..base }),
             "cross-task merges must be rejected: the hash families differ"
         );
+        assert!(
+            !base.merge_compatible(&StormConfig {
+                hash_family: HashFamily::Sparse { density_permille: 100 },
+                ..base
+            }),
+            "cross-hash-family merges must be rejected: incompatible bucket spaces"
+        );
+        assert!(
+            !base.merge_compatible(&StormConfig { hash_family: HashFamily::Hadamard, ..base }),
+        );
+        let sparse_a = StormConfig {
+            hash_family: HashFamily::Sparse { density_permille: 100 },
+            ..base
+        };
+        let sparse_b = StormConfig {
+            hash_family: HashFamily::Sparse { density_permille: 200 },
+            ..base
+        };
+        assert!(
+            !sparse_a.merge_compatible(&sparse_b),
+            "same family at different densities draws different planes"
+        );
+        assert!(sparse_a.merge_compatible(&sparse_a));
+    }
+
+    #[test]
+    fn hash_family_parse_display_and_default() {
+        assert_eq!(HashFamily::parse("dense"), Some(HashFamily::Dense));
+        assert_eq!(
+            HashFamily::parse(" sparse "),
+            Some(HashFamily::Sparse { density_permille: DEFAULT_SPARSE_DENSITY_PERMILLE })
+        );
+        assert_eq!(HashFamily::parse("hadamard"), Some(HashFamily::Hadamard));
+        assert_eq!(HashFamily::parse("fourier"), None);
+        assert_eq!(HashFamily::default(), HashFamily::Dense);
+        assert_eq!(HashFamily::Sparse { density_permille: 50 }.to_string(), "sparse");
+        assert_eq!(HashFamily::Sparse { density_permille: 250 }.sparse_density(), Some(0.25));
+        assert_eq!(HashFamily::Dense.sparse_density(), None);
+    }
+
+    #[test]
+    fn hash_family_key_parses_and_rejects_bad_values() {
+        let cfg = RunConfig::from_toml_str("[storm]\nhash_family = \"hadamard\"\n").unwrap();
+        assert_eq!(cfg.storm.hash_family, HashFamily::Hadamard);
+        let cfg = RunConfig::from_toml_str("[storm]\nrows = 10\n").unwrap();
+        assert_eq!(cfg.storm.hash_family, HashFamily::Dense, "seed default is dense");
+        assert!(RunConfig::from_toml_str("[storm]\nhash_family = \"circulant\"\n").is_err());
+    }
+
+    #[test]
+    fn sparse_density_key_applies_in_either_order() {
+        let cfg = RunConfig::from_toml_str(
+            "[storm]\nhash_family = \"sparse\"\nsparse_density = 0.25\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.storm.hash_family, HashFamily::Sparse { density_permille: 250 });
+        let cfg = RunConfig::from_toml_str(
+            "[storm]\nsparse_density = 0.05\nhash_family = \"sparse\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.storm.hash_family, HashFamily::Sparse { density_permille: 50 });
+        // Without an explicit density the default applies.
+        let cfg = RunConfig::from_toml_str("[storm]\nhash_family = \"sparse\"\n").unwrap();
+        assert_eq!(
+            cfg.storm.hash_family,
+            HashFamily::Sparse { density_permille: DEFAULT_SPARSE_DENSITY_PERMILLE }
+        );
+    }
+
+    #[test]
+    fn sparse_density_rejected_without_sparse_family() {
+        assert!(RunConfig::from_toml_str("[storm]\nsparse_density = 0.1\n").is_err());
+        assert!(RunConfig::from_toml_str(
+            "[storm]\nhash_family = \"hadamard\"\nsparse_density = 0.1\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sparse_density_out_of_range_rejected() {
+        for bad in ["0.0", "-0.5", "1.5", "2000.0"] {
+            let text =
+                format!("[storm]\nhash_family = \"sparse\"\nsparse_density = {bad}\n");
+            assert!(RunConfig::from_toml_str(&text).is_err(), "density {bad} accepted");
+        }
+        // 1.0 (every coordinate) is the inclusive upper edge.
+        let cfg = RunConfig::from_toml_str(
+            "[storm]\nhash_family = \"sparse\"\nsparse_density = 1.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.storm.hash_family, HashFamily::Sparse { density_permille: 1000 });
     }
 
     #[test]

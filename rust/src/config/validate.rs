@@ -2,7 +2,7 @@
 //! meaningless experiments (zero rows, p outside the hashable range, empty
 //! fleets, and so on).
 
-use super::RunConfig;
+use super::{HashFamily, RunConfig};
 
 /// Validate a full run configuration; returns a human-readable error.
 pub fn validate(cfg: &RunConfig) -> Result<(), String> {
@@ -14,6 +14,24 @@ pub fn validate(cfg: &RunConfig) -> Result<(), String> {
     }
     if cfg.storm.power == 0 || cfg.storm.power > 24 {
         return Err("storm.power must be in 1..=24 (buckets = 2^power)".to_string());
+    }
+    if let HashFamily::Sparse { density_permille } = cfg.storm.hash_family {
+        if density_permille == 0 || density_permille > 1000 {
+            return Err(format!(
+                "storm.sparse_density must be in (0, 1] — the expected nonzero fraction \
+                 per hyperplane (got {}); use 0.1 for the default 10% density, or \
+                 hash_family = \"dense\" if you want every coordinate",
+                density_permille as f64 / 1000.0
+            ));
+        }
+    }
+    if cfg.storm.hash_family != HashFamily::Dense && cfg.artifacts_dir.is_some() {
+        return Err(format!(
+            "artifacts_dir (the AOT XLA backend) embeds dense Gaussian hyperplanes and \
+             cannot serve hash_family = \"{}\"; drop artifacts_dir to use the pure-rust \
+             path, or set hash_family = \"dense\"",
+            cfg.storm.hash_family
+        ));
     }
     if cfg.optimizer.queries == 0 {
         return Err("optimizer.queries must be >= 1".to_string());
@@ -110,6 +128,52 @@ mod tests {
         let mut c = base();
         c.fleet.min_quorum = c.fleet.devices + 1;
         assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.storm.hash_family = HashFamily::Sparse { density_permille: 0 };
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.storm.hash_family = HashFamily::Sparse { density_permille: 1001 };
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn sparse_density_errors_are_actionable() {
+        let mut c = base();
+        c.storm.hash_family = HashFamily::Sparse { density_permille: 1500 };
+        let msg = validate(&c).unwrap_err();
+        assert!(msg.contains("(0, 1]"), "error must name the valid range: {msg}");
+        assert!(msg.contains("1.5"), "error must echo the offending value: {msg}");
+    }
+
+    #[test]
+    fn sparse_density_edges_are_valid() {
+        let mut c = base();
+        c.storm.hash_family = HashFamily::Sparse { density_permille: 1 };
+        assert!(validate(&c).is_ok());
+        c.storm.hash_family = HashFamily::Sparse { density_permille: 1000 };
+        assert!(validate(&c).is_ok());
+    }
+
+    #[test]
+    fn structured_families_reject_the_xla_backend() {
+        // The AOT artifacts embed dense Gaussian planes; a structured
+        // family would silently hash into a different bucket space.
+        for family in
+            [HashFamily::Sparse { density_permille: 100 }, HashFamily::Hadamard]
+        {
+            let mut c = base();
+            c.storm.hash_family = family;
+            assert!(validate(&c).is_ok(), "pure-rust path must accept {family}");
+            c.artifacts_dir = Some("artifacts".to_string());
+            let msg = validate(&c).unwrap_err();
+            assert!(msg.contains("artifacts_dir"), "{msg}");
+            assert!(msg.contains(family.name()), "{msg}");
+        }
+        let mut c = base();
+        c.artifacts_dir = Some("artifacts".to_string());
+        assert!(validate(&c).is_ok(), "dense + XLA stays valid");
     }
 
     #[test]

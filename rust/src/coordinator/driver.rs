@@ -155,6 +155,13 @@ pub fn train(
         !(task == Task::Classification && backend == QueryBackend::Xla),
         "the XLA query backend supports task = regression only"
     );
+    anyhow::ensure!(
+        cfg.storm.hash_family == crate::config::HashFamily::Dense
+            || backend != QueryBackend::Xla,
+        "the XLA query backend embeds dense Gaussian hyperplanes; hash_family = \"{}\" \
+         requires the rust backend",
+        cfg.storm.hash_family
+    );
     // 1. Scale into the unit ball (asymmetric-LSH requirement).
     //    Regression scales the augmented [x, y] examples (quantile
     //    scaling keeps typical norms informative — see data::scale

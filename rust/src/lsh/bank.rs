@@ -1,10 +1,11 @@
-//! Fused hash-bank kernel: all `R` rows' SRP hyperplanes in one
-//! contiguous projection matrix, evaluated in a single pass per example.
+//! Fused hash-bank kernel: all `R` rows' hyperplanes behind one
+//! family-dispatched projection engine, evaluated in a single pass per
+//! example.
 //!
 //! The seed scalar path stores each row's hyperplanes inside an
 //! independently-allocated [`PairedRandomProjection`] and hashes the two
 //! PRP arms separately: `2 * R * p` scattered `(d+2)`-wide dot products
-//! per insert. This module concatenates every plane into one row-major
+//! per insert. The bank concatenates every plane into one row-major
 //! `[R * p, d + 2]` matrix and exploits the structure of the MIPS
 //! augmentation to serve **both** arms from one projection:
 //!
@@ -15,8 +16,31 @@
 //!   `s = <w_head, z>` is the head term and `t = w_d * tail` the tail
 //!   term — one head dot product instead of two, halving insert FLOPs.
 //!
-//! **Bit-equivalence.** The grids must stay bit-identical to the seed
-//! scalar path for a fixed seed (property-tested in
+//! **SIMD.** For the dense family the bank additionally keeps a
+//! *transposed* per-row copy of the planes (`t[i * p + j] = w_j[i]`,
+//! coordinate-major) and evaluates all `p` projections of a row through
+//! the runtime-dispatched kernels in [`crate::lsh::simd`] — lane `j`
+//! owns plane `j`, so vectorization re-associates across independent
+//! sums, never within one, and the SIMD path stays **bit-identical** to
+//! the scalar oracle (see the `simd` module docs for the full argument;
+//! the equivalence proptests pin it at every width, both tasks, and up
+//! to the config-validated maxima of `p`).
+//!
+//! **Structured families.** [`Self::sparse_from_seeds`] /
+//! [`Self::hadamard_from_seeds`] build the bank from
+//! [`crate::lsh::structured`] families instead of dense Gaussian planes.
+//! Their hashing semantics are *defined* by the bank's decomposed
+//! evaluation: plane `j`'s projection of an augmented vector is
+//! `head_term + w_q * aug[d] + w_d * aug[d+1]`, with the head term
+//! evaluated by the family (signed adds for sparse, one shared
+//! `O(m log m)` transform per row for fast-Hadamard) and the two tail
+//! coefficients peeled out at construction. Both arms still come from
+//! one head evaluation, and the antipodal identity `pos(-z) = neg(z)`
+//! holds bitwise because IEEE-754 negation distributes exactly over
+//! every add/sub in the head evaluation.
+//!
+//! **Bit-equivalence (dense).** The grids must stay bit-identical to the
+//! seed scalar path for a fixed seed (property-tested in
 //! `tests/proptest_invariants.rs`). This holds because [`dot`] is a plain
 //! sequential accumulate: the head term `s` reproduces the scalar
 //! partial sum exactly; IEEE-754 negation and addition are sign-symmetric
@@ -25,21 +49,69 @@
 //! query side) never change the numeric value of the accumulator, so
 //! every `>= 0.0` sign bit matches the scalar decision.
 //!
-//! The bank is a *derived* structure: it copies (never replaces) the
-//! per-row hashes, so `StormSketch::hashes()` / `srp()` stay intact and
-//! the Python AOT path keeps embedding identical hyperplanes.
+//! The dense bank is a *derived* structure: it copies (never replaces)
+//! the per-row hashes, so `StormSketch::hashes()` / `srp()` stay intact
+//! and the Python AOT path keeps embedding identical hyperplanes.
+
+use std::cell::RefCell;
 
 use crate::lsh::asym::AsymmetricInnerProductHash;
 use crate::lsh::prp::PairedRandomProjection;
+use crate::lsh::simd::{self, Kernel};
+use crate::lsh::structured::{FastHadamardPlanes, SparseRademacherPlanes};
 use crate::util::mathx::dot;
 
-/// A contiguous bank of `R * p` SRP hyperplanes over the augmented space
+thread_local! {
+    /// Reused fast-Hadamard transform buffer (per thread so the bank
+    /// stays `Sync` for the parallel batch-insert path).
+    static HADAMARD_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// One sketch row of the sparse family, split into head runs and the two
+/// augmented tail coefficients.
+#[derive(Clone, Debug)]
+struct SparseBankRow {
+    /// Plane `j`'s head nonzeros live at `offsets[j]..offsets[j+1]`.
+    offsets: Vec<u32>,
+    idx: Vec<u32>,
+    sign: Vec<f64>,
+    /// Coefficient at augmented slot `d` (query tail), per plane.
+    c_q: Vec<f64>,
+    /// Coefficient at augmented slot `d + 1` (data tail), per plane.
+    c_d: Vec<f64>,
+}
+
+/// One sketch row of the fast-Hadamard family: the transform plus the
+/// two augmented-slot columns of its effective projection matrix.
+#[derive(Clone, Debug)]
+struct HadamardBankRow {
+    planes: FastHadamardPlanes,
+    col_q: Vec<f64>,
+    col_d: Vec<f64>,
+}
+
+/// Family-specific storage behind the bank's uniform hashing API.
+#[derive(Clone, Debug)]
+enum BankKind {
+    Dense {
+        /// All hyperplanes, row-major `[R * p, d + 2]`: row `r`'s plane
+        /// `j` lives at flat index `r * p + j`.
+        planes: Vec<f64>,
+        /// Per-row transposed copy for the SIMD kernels:
+        /// `transposed[r * (d+2) * p + i * p + j] = planes[(r*p+j)*(d+2) + i]`.
+        transposed: Vec<f64>,
+        /// Projection kernel resolved once at construction.
+        kernel: Kernel,
+    },
+    Sparse { bank_rows: Vec<SparseBankRow> },
+    Hadamard { bank_rows: Vec<HadamardBankRow> },
+}
+
+/// A contiguous bank of `R * p` hyperplanes over the augmented space
 /// `R^{d+2}`, serving fused PRP insert/query hashing for a whole sketch.
 #[derive(Clone, Debug)]
 pub struct HashBank {
-    /// All hyperplanes, row-major `[R * p, d + 2]`: row `r`'s plane `j`
-    /// lives at flat index `r * p + j`.
-    planes: Vec<f64>,
+    kind: BankKind,
     rows: usize,
     p: u32,
     /// Raw (unaugmented) dimension `d`; each plane has `d + 2` coords.
@@ -47,7 +119,24 @@ pub struct HashBank {
 }
 
 impl HashBank {
-    /// Build a bank by concatenating the hyperplanes of per-row PRP
+    fn dense(planes: Vec<f64>, rows: usize, p: u32, dim: usize) -> Self {
+        let aug = dim + 2;
+        let pu = p as usize;
+        debug_assert_eq!(planes.len(), rows * pu * aug);
+        let mut transposed = vec![0.0; planes.len()];
+        for r in 0..rows {
+            let base = r * pu * aug;
+            for j in 0..pu {
+                for i in 0..aug {
+                    transposed[base + i * pu + j] = planes[base + j * aug + i];
+                }
+            }
+        }
+        let kernel = simd::kernel();
+        HashBank { kind: BankKind::Dense { planes, transposed, kernel }, rows, p, dim }
+    }
+
+    /// Build a dense bank by concatenating the hyperplanes of per-row PRP
     /// hashes (the seed representation). The copy preserves the exact
     /// coefficients, so fused and scalar hashing agree bit-for-bit.
     pub fn from_rows(hashes: &[PairedRandomProjection]) -> Self {
@@ -64,12 +153,12 @@ impl HashBank {
                 planes.extend_from_slice(srp.plane(j));
             }
         }
-        HashBank { planes, rows: hashes.len(), p, dim }
+        HashBank::dense(planes, hashes.len(), p, dim)
     }
 
-    /// Build a bank from per-row *single-arm* asymmetric hashes — the
-    /// classifier sketch's hash family (Theorem 3 inserts one arm, no PRP
-    /// pairing). Same contiguous `[R * p, d + 2]` layout and the same
+    /// Build a dense bank from per-row *single-arm* asymmetric hashes —
+    /// the classifier sketch's hash family (Theorem 3 inserts one arm, no
+    /// PRP pairing). Same contiguous `[R * p, d + 2]` layout and the same
     /// exact-coefficient copy, so [`Self::data_bucket`] /
     /// [`Self::query_bucket`] agree bit-for-bit with the per-row scalar
     /// hashes.
@@ -86,7 +175,61 @@ impl HashBank {
                 planes.extend_from_slice(h.srp().plane(j));
             }
         }
-        HashBank { planes, rows: hashes.len(), p, dim }
+        HashBank::dense(planes, hashes.len(), p, dim)
+    }
+
+    /// Build a sparse-Rademacher bank: one
+    /// [`SparseRademacherPlanes`] draw per row seed, over the augmented
+    /// `d + 2` coordinates, split into head runs + tail coefficients.
+    pub fn sparse_from_seeds(dim: usize, p: u32, seeds: &[u64], density_permille: u16) -> Self {
+        assert!(!seeds.is_empty(), "hash bank needs at least one row");
+        let n = dim + 2;
+        let bank_rows = seeds
+            .iter()
+            .map(|&seed| {
+                let sp = SparseRademacherPlanes::new(n, p, seed, density_permille);
+                let pu = p as usize;
+                let mut offsets = vec![0u32];
+                let mut idx = Vec::new();
+                let mut sign = Vec::new();
+                let mut c_q = vec![0.0; pu];
+                let mut c_d = vec![0.0; pu];
+                for j in 0..pu {
+                    for (i, s) in sp.nonzeros(j) {
+                        if i < dim {
+                            idx.push(i as u32);
+                            sign.push(s);
+                        } else if i == dim {
+                            c_q[j] = s;
+                        } else {
+                            c_d[j] = s;
+                        }
+                    }
+                    offsets.push(idx.len() as u32);
+                }
+                SparseBankRow { offsets, idx, sign, c_q, c_d }
+            })
+            .collect();
+        HashBank { kind: BankKind::Sparse { bank_rows }, rows: seeds.len(), p, dim }
+    }
+
+    /// Build a fast-Hadamard bank: one [`FastHadamardPlanes`] draw per
+    /// row seed over the augmented `d + 2` coordinates, with the two
+    /// augmented-slot columns peeled out so the per-example pass only
+    /// transforms the head.
+    pub fn hadamard_from_seeds(dim: usize, p: u32, seeds: &[u64]) -> Self {
+        assert!(!seeds.is_empty(), "hash bank needs at least one row");
+        let n = dim + 2;
+        let bank_rows = seeds
+            .iter()
+            .map(|&seed| {
+                let planes = FastHadamardPlanes::new(n, p, seed);
+                let col_q = planes.basis_column(dim);
+                let col_d = planes.basis_column(dim + 1);
+                HadamardBankRow { planes, col_q, col_d }
+            })
+            .collect();
+        HashBank { kind: BankKind::Hadamard { bank_rows }, rows: seeds.len(), p, dim }
     }
 
     /// Number of sketch rows R.
@@ -109,17 +252,57 @@ impl HashBank {
         1usize << self.p
     }
 
-    /// Bank memory in bytes (diagnostics).
-    pub fn bytes(&self) -> usize {
-        self.planes.len() * std::mem::size_of::<f64>()
+    /// Hash-family name (`dense` | `sparse` | `hadamard`), diagnostics.
+    pub fn family(&self) -> &'static str {
+        match &self.kind {
+            BankKind::Dense { .. } => "dense",
+            BankKind::Sparse { .. } => "sparse",
+            BankKind::Hadamard { .. } => "hadamard",
+        }
     }
 
-    /// Plane `j` of row `r` as a `(d + 2)`-slice.
+    /// Projection kernel name the dense family resolved to (`scalar` for
+    /// structured families, whose evaluation is not plane-parallel).
+    pub fn kernel_name(&self) -> &'static str {
+        match &self.kind {
+            BankKind::Dense { kernel, .. } => kernel.name(),
+            _ => "scalar",
+        }
+    }
+
+    /// Bank memory in bytes (diagnostics).
+    pub fn bytes(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let u = std::mem::size_of::<u32>();
+        match &self.kind {
+            BankKind::Dense { planes, transposed, .. } => (planes.len() + transposed.len()) * f,
+            BankKind::Sparse { bank_rows } => bank_rows
+                .iter()
+                .map(|row| {
+                    (row.offsets.len() + row.idx.len()) * u
+                        + (row.sign.len() + row.c_q.len() + row.c_d.len()) * f
+                })
+                .sum(),
+            BankKind::Hadamard { bank_rows } => bank_rows
+                .iter()
+                .map(|row| {
+                    (3 * row.planes.padded_len() + row.col_q.len() + row.col_d.len()) * f
+                        + self.p as usize * std::mem::size_of::<usize>()
+                })
+                .sum(),
+        }
+    }
+
+    /// Plane `j` of row `r` as a `(d + 2)`-slice. Dense family only —
+    /// structured families have no materialized planes.
     #[inline]
     pub fn plane(&self, r: usize, j: usize) -> &[f64] {
+        let BankKind::Dense { planes, .. } = &self.kind else {
+            panic!("plane access requires the dense family (bank is {})", self.family())
+        };
         let aug = self.dim + 2;
         let idx = r * self.p as usize + j;
-        &self.planes[idx * aug..(idx + 1) * aug]
+        &planes[idx * aug..(idx + 1) * aug]
     }
 
     /// The MIPS tail coordinate `sqrt(1 - ||v||^2)` — the same magnitude
@@ -136,11 +319,139 @@ impl HashBank {
         (1.0 - sq).max(0.0).sqrt()
     }
 
+    #[inline]
+    fn trow<'a>(transposed: &'a [f64], r: usize, aug: usize, pu: usize) -> &'a [f64] {
+        &transposed[r * aug * pu..(r + 1) * aug * pu]
+    }
+
     /// Both PRP insert buckets of row `r` for data vector `z` with
     /// precomputed `tail`, from a single pass over the row's planes.
-    /// Equals `hashes[r].insert_buckets(z)` bit-for-bit.
+    /// Dense: equals `hashes[r].insert_buckets(z)` bit-for-bit (SIMD or
+    /// scalar — the kernels are bit-identical).
     #[inline]
     pub fn data_pair(&self, r: usize, z: &[f64], tail: f64) -> (usize, usize) {
+        debug_assert_eq!(z.len(), self.dim, "bank data dim mismatch");
+        let pu = self.p as usize;
+        match &self.kind {
+            BankKind::Dense { transposed, kernel, .. } => {
+                let trow = Self::trow(transposed, r, self.dim + 2, pu);
+                simd::data_pair_t(*kernel, trow, pu, z, tail)
+            }
+            BankKind::Sparse { bank_rows } => {
+                let row = &bank_rows[r];
+                let mut pos = 0usize;
+                let mut neg = 0usize;
+                for j in 0..pu {
+                    let lo = row.offsets[j] as usize;
+                    let hi = row.offsets[j + 1] as usize;
+                    let mut s = 0.0;
+                    for k in lo..hi {
+                        s += row.sign[k] * z[row.idx[k] as usize];
+                    }
+                    let t = row.c_d[j] * tail;
+                    // Tie-break sign(0) as 1, matching the scalar SRP.
+                    if s + t >= 0.0 {
+                        pos |= 1 << j;
+                    }
+                    if t - s >= 0.0 {
+                        neg |= 1 << j;
+                    }
+                }
+                (pos, neg)
+            }
+            BankKind::Hadamard { bank_rows } => {
+                let row = &bank_rows[r];
+                HADAMARD_SCRATCH.with(|c| {
+                    let out = &mut *c.borrow_mut();
+                    row.planes.transform(z, out);
+                    let mut pos = 0usize;
+                    let mut neg = 0usize;
+                    for j in 0..pu {
+                        let s = out[row.planes.selected_index(j)];
+                        let t = row.col_d[j] * tail;
+                        if s + t >= 0.0 {
+                            pos |= 1 << j;
+                        }
+                        if t - s >= 0.0 {
+                            neg |= 1 << j;
+                        }
+                    }
+                    (pos, neg)
+                })
+            }
+        }
+    }
+
+    /// Single-arm data bucket of row `r` for data vector `z` with
+    /// precomputed tail — the positive arm of [`Self::data_pair`], which
+    /// is all the classifier sketch inserts (Theorem 3, no PRP pairing).
+    /// Dense: equals `asym.hash_side(z, Side::Data)` bit-for-bit — the
+    /// skipped query-slot term `w[d] * 0.0` never changes the
+    /// accumulator value.
+    #[inline]
+    pub fn data_bucket(&self, r: usize, z: &[f64], tail: f64) -> usize {
+        debug_assert_eq!(z.len(), self.dim, "bank data dim mismatch");
+        self.side_bucket(r, z, tail, false)
+    }
+
+    /// Query bucket of row `r` for query vector `q` with precomputed
+    /// query-side tail. Dense: equals `hashes[r].query_bucket(q)`
+    /// bit-for-bit.
+    #[inline]
+    pub fn query_bucket(&self, r: usize, q: &[f64], tail: f64) -> usize {
+        debug_assert_eq!(q.len(), self.dim, "bank query dim mismatch");
+        self.side_bucket(r, q, tail, true)
+    }
+
+    #[inline]
+    fn side_bucket(&self, r: usize, v: &[f64], tail: f64, query_side: bool) -> usize {
+        let pu = self.p as usize;
+        match &self.kind {
+            BankKind::Dense { transposed, kernel, .. } => {
+                let trow = Self::trow(transposed, r, self.dim + 2, pu);
+                let tail_row = if query_side { self.dim } else { self.dim + 1 };
+                simd::side_bucket_t(*kernel, trow, pu, v, tail, tail_row)
+            }
+            BankKind::Sparse { bank_rows } => {
+                let row = &bank_rows[r];
+                let tail_c = if query_side { &row.c_q } else { &row.c_d };
+                let mut h = 0usize;
+                for j in 0..pu {
+                    let lo = row.offsets[j] as usize;
+                    let hi = row.offsets[j + 1] as usize;
+                    let mut s = 0.0;
+                    for k in lo..hi {
+                        s += row.sign[k] * v[row.idx[k] as usize];
+                    }
+                    if s + tail_c[j] * tail >= 0.0 {
+                        h |= 1 << j;
+                    }
+                }
+                h
+            }
+            BankKind::Hadamard { bank_rows } => {
+                let row = &bank_rows[r];
+                let tail_c = if query_side { &row.col_q } else { &row.col_d };
+                HADAMARD_SCRATCH.with(|c| {
+                    let out = &mut *c.borrow_mut();
+                    row.planes.transform(v, out);
+                    let mut h = 0usize;
+                    for j in 0..pu {
+                        if out[row.planes.selected_index(j)] + tail_c[j] * tail >= 0.0 {
+                            h |= 1 << j;
+                        }
+                    }
+                    h
+                })
+            }
+        }
+    }
+
+    /// Scalar-oracle version of [`Self::data_pair`]: the original
+    /// plain-`dot` loop over the row-major planes, kept verbatim as the
+    /// reference the SIMD kernels are property-tested against (and as the
+    /// `bank_scalar_*` bench baseline). Dense family only.
+    pub fn data_pair_scalar(&self, r: usize, z: &[f64], tail: f64) -> (usize, usize) {
         debug_assert_eq!(z.len(), self.dim, "bank data dim mismatch");
         let d = self.dim;
         let mut pos = 0usize;
@@ -160,13 +471,8 @@ impl HashBank {
         (pos, neg)
     }
 
-    /// Single-arm data bucket of row `r` for data vector `z` with
-    /// precomputed tail — the positive arm of [`Self::data_pair`], which
-    /// is all the classifier sketch inserts (Theorem 3, no PRP pairing).
-    /// Equals `asym.hash_side(z, Side::Data)` bit-for-bit: the skipped
-    /// query-slot term `w[d] * 0.0` never changes the accumulator value.
-    #[inline]
-    pub fn data_bucket(&self, r: usize, z: &[f64], tail: f64) -> usize {
+    /// Scalar-oracle version of [`Self::data_bucket`]. Dense family only.
+    pub fn data_bucket_scalar(&self, r: usize, z: &[f64], tail: f64) -> usize {
         debug_assert_eq!(z.len(), self.dim, "bank data dim mismatch");
         let d = self.dim;
         let mut h = 0usize;
@@ -179,10 +485,8 @@ impl HashBank {
         h
     }
 
-    /// Query bucket of row `r` for query vector `q` with precomputed
-    /// query-side tail. Equals `hashes[r].query_bucket(q)` bit-for-bit.
-    #[inline]
-    pub fn query_bucket(&self, r: usize, q: &[f64], tail: f64) -> usize {
+    /// Scalar-oracle version of [`Self::query_bucket`]. Dense family only.
+    pub fn query_bucket_scalar(&self, r: usize, q: &[f64], tail: f64) -> usize {
         debug_assert_eq!(q.len(), self.dim, "bank query dim mismatch");
         let d = self.dim;
         let mut h = 0usize;
@@ -199,6 +503,7 @@ impl HashBank {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lsh::LshFunction;
     use crate::testing::{cases, gen_ball_point, gen_dim};
 
     fn mk_rows(dim: usize, p: u32, rows: usize, seed: u64) -> Vec<PairedRandomProjection> {
@@ -210,6 +515,12 @@ mod tests {
                     seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
                 )
             })
+            .collect()
+    }
+
+    fn row_seeds(rows: usize, seed: u64) -> Vec<u64> {
+        (0..rows as u64)
+            .map(|r| seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r))
             .collect()
     }
 
@@ -245,6 +556,32 @@ mod tests {
     }
 
     #[test]
+    fn simd_path_matches_scalar_oracle_at_p_max_and_large_d() {
+        // Bank-only sweep at the config-validated maximum p = 24 and d in
+        // the hundreds: pins the SIMD main loop *and* remainder lanes
+        // against the verbatim scalar oracle without allocating grids.
+        cases(20, 26, |rng, case| {
+            let dim = 100 + (case * 37) % 300;
+            // Descend from p = 24 so the maximum is pinned at any case budget.
+            let p = 24 - (case % 24) as u32;
+            let hashes = mk_rows(dim, p, 3, case as u64 ^ 0x51D);
+            let bank = HashBank::from_rows(&hashes);
+            let z = gen_ball_point(rng, dim, 0.95);
+            let tail = HashBank::mips_tail(&z);
+            for r in 0..bank.rows() {
+                assert_eq!(
+                    bank.data_pair(r, &z, tail),
+                    bank.data_pair_scalar(r, &z, tail),
+                    "kernel {} diverged (dim={dim} p={p} row={r})",
+                    bank.kernel_name()
+                );
+                assert_eq!(bank.data_bucket(r, &z, tail), bank.data_bucket_scalar(r, &z, tail));
+                assert_eq!(bank.query_bucket(r, &z, tail), bank.query_bucket_scalar(r, &z, tail));
+            }
+        });
+    }
+
+    #[test]
     fn bank_shape_and_plane_access() {
         let hashes = mk_rows(3, 4, 7, 11);
         let bank = HashBank::from_rows(&hashes);
@@ -252,7 +589,9 @@ mod tests {
         assert_eq!(bank.bits(), 4);
         assert_eq!(bank.dim(), 3);
         assert_eq!(bank.range(), 16);
-        assert_eq!(bank.bytes(), 7 * 4 * 5 * 8);
+        assert_eq!(bank.family(), "dense");
+        // Row-major planes + the transposed SIMD copy.
+        assert_eq!(bank.bytes(), 2 * 7 * 4 * 5 * 8);
         for (r, h) in hashes.iter().enumerate() {
             for j in 0..4 {
                 assert_eq!(bank.plane(r, j), h.asym().srp().plane(j));
@@ -308,5 +647,130 @@ mod tests {
                 assert_eq!(bank.query_bucket(r, &q, tail), h.hash_side(&q, Side::Query));
             }
         });
+    }
+
+    #[test]
+    fn sparse_bank_matches_augmented_lsh_oracle() {
+        // The sparse family's semantics decompose into head + tail
+        // terms; the whole-vector LshFunction oracle accumulates the
+        // zero query-slot term in between, which never flips a `>= 0`
+        // decision — so buckets agree exactly.
+        cases(40, 27, |rng, case| {
+            let dim = gen_dim(rng, 1, 20);
+            let p = 1 + (case % 8) as u32;
+            let seeds = row_seeds(4, case as u64 ^ 0x5AA5);
+            let bank = HashBank::sparse_from_seeds(dim, p, &seeds, 300);
+            assert_eq!(bank.family(), "sparse");
+            let z = gen_ball_point(rng, dim, 0.95);
+            let tail = HashBank::mips_tail(&z);
+            for (r, &seed) in seeds.iter().enumerate() {
+                let oracle = SparseRademacherPlanes::new(dim + 2, p, seed, 300);
+                let mut aug_data: Vec<f64> = z.clone();
+                aug_data.push(0.0);
+                aug_data.push(tail);
+                let mut aug_neg: Vec<f64> = z.iter().map(|v| -v).collect();
+                aug_neg.push(0.0);
+                aug_neg.push(tail);
+                let mut aug_query: Vec<f64> = z.clone();
+                aug_query.push(tail);
+                aug_query.push(0.0);
+                let (pos, neg) = bank.data_pair(r, &z, tail);
+                assert_eq!(pos, oracle.hash(&aug_data));
+                assert_eq!(neg, oracle.hash(&aug_neg));
+                assert_eq!(bank.data_bucket(r, &z, tail), pos);
+                assert_eq!(bank.query_bucket(r, &z, tail), oracle.hash(&aug_query));
+            }
+        });
+    }
+
+    #[test]
+    fn structured_banks_hash_antipodal_arms_consistently() {
+        // pos(-z) must equal neg(z) bitwise for every family: IEEE-754
+        // negation distributes exactly over the head evaluation.
+        cases(30, 28, |rng, case| {
+            let dim = gen_dim(rng, 3, 40);
+            let p = (1 + (case % 8) as u32).min(crate::util::mathx::next_pow2(dim + 2) as u32);
+            let seeds = row_seeds(3, case as u64 ^ 0x7E57);
+            let banks = [
+                HashBank::sparse_from_seeds(dim, p, &seeds, 250),
+                HashBank::hadamard_from_seeds(dim, p, &seeds),
+            ];
+            let z = gen_ball_point(rng, dim, 0.95);
+            let neg_z: Vec<f64> = z.iter().map(|v| -v).collect();
+            let tail = HashBank::mips_tail(&z);
+            for bank in &banks {
+                for r in 0..bank.rows() {
+                    let (pos, neg) = bank.data_pair(r, &z, tail);
+                    let (pos2, neg2) = bank.data_pair(r, &neg_z, tail);
+                    assert_eq!(pos2, neg, "family {}", bank.family());
+                    assert_eq!(neg2, pos, "family {}", bank.family());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hadamard_bank_matches_explicit_projection() {
+        // Cross-check the decomposed head-transform + tail-column path
+        // against an explicit matrix-vector product built from basis
+        // columns (closeness, not bit-identity: butterfly order differs).
+        let dim = 6;
+        let p = 5u32;
+        let seeds = row_seeds(2, 99);
+        let bank = HashBank::hadamard_from_seeds(dim, p, &seeds);
+        assert_eq!(bank.family(), "hadamard");
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        let z = gen_ball_point(&mut rng, dim, 0.9);
+        let tail = HashBank::mips_tail(&z);
+        for (r, &seed) in seeds.iter().enumerate() {
+            let planes = FastHadamardPlanes::new(dim + 2, p, seed);
+            let cols: Vec<Vec<f64>> = (0..dim + 2).map(|c| planes.basis_column(c)).collect();
+            let mut expect_pos = 0usize;
+            let mut expect_query = 0usize;
+            for j in 0..p as usize {
+                let head: f64 = (0..dim).map(|c| cols[c][j] * z[c]).sum();
+                if head + cols[dim + 1][j] * tail >= 0.0 {
+                    expect_pos |= 1 << j;
+                }
+                if head + cols[dim][j] * tail >= 0.0 {
+                    expect_query |= 1 << j;
+                }
+            }
+            // Projections are well away from zero with prob. 1, so the
+            // closeness of the two evaluation orders implies equal signs.
+            assert_eq!(bank.data_pair(r, &z, tail).0, expect_pos);
+            assert_eq!(bank.query_bucket(r, &z, tail), expect_query);
+        }
+    }
+
+    #[test]
+    fn structured_bank_shapes_and_determinism() {
+        let seeds = row_seeds(5, 13);
+        let sp = HashBank::sparse_from_seeds(4, 6, &seeds, 200);
+        let hd = HashBank::hadamard_from_seeds(4, 6, &seeds);
+        for bank in [&sp, &hd] {
+            assert_eq!(bank.rows(), 5);
+            assert_eq!(bank.bits(), 6);
+            assert_eq!(bank.dim(), 4);
+            assert_eq!(bank.range(), 64);
+            assert!(bank.bytes() > 0);
+        }
+        // Same seeds → same buckets (fleet merge compatibility rests on
+        // this).
+        let sp2 = HashBank::sparse_from_seeds(4, 6, &seeds, 200);
+        let hd2 = HashBank::hadamard_from_seeds(4, 6, &seeds);
+        let z = [0.1, -0.2, 0.3, 0.05];
+        let tail = HashBank::mips_tail(&z);
+        for r in 0..5 {
+            assert_eq!(sp.data_pair(r, &z, tail), sp2.data_pair(r, &z, tail));
+            assert_eq!(hd.data_pair(r, &z, tail), hd2.data_pair(r, &z, tail));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dense family")]
+    fn structured_bank_rejects_plane_access() {
+        let bank = HashBank::sparse_from_seeds(3, 4, &[1, 2], 500);
+        let _ = bank.plane(0, 0);
     }
 }

@@ -16,9 +16,26 @@
 //! * [`compose`] — injective composition of two LSH functions whose
 //!   collision probability is the *product* of the constituents
 //!   (Theorem 1's multiplication closure);
-//! * [`bank`] — the fused hash-bank kernel: all `R` rows' hyperplanes in
-//!   one contiguous `[R*p, d+2]` matrix, hashing both PRP arms from a
-//!   single shared-projection pass (the batch insert/query hot path).
+//! * [`bank`] — the fused hash-bank kernel: all `R` rows' hyperplanes
+//!   behind one family-dispatched engine, hashing both PRP arms from a
+//!   single shared-projection pass (the batch insert/query hot path);
+//! * [`simd`] — runtime-dispatched AVX2/SSE2/NEON projection kernels for
+//!   the dense bank, vectorized across planes so they stay bit-identical
+//!   to the scalar oracle;
+//! * [`structured`] — structured hyperplane families (sparse Rademacher
+//!   and fast-Hadamard SRP) that cut dense O(d)-per-plane projection cost
+//!   to a few adds per nonzero / one O(d log d) transform per row.
+//!
+//! **Hash families.** The sketch selects its hyperplane family through
+//! `[storm] hash_family` (`dense` default — the paper's Gaussian SRP,
+//! wire-golden-pinned; `sparse` — Achlioptas/Li-style sparse Rademacher;
+//! `hadamard` — subsampled randomized Hadamard). All families draw from
+//! the same per-row seed streams, so two sketches agree bucket-for-bucket
+//! iff they share `(seed, hash_family)` — which is why
+//! `StormConfig::merge_compatible` requires equal families, exactly like
+//! equal tasks. The bank ([`bank::HashBank`]) is the single dispatch
+//! point: constructors pick the family, and `data_pair` / `data_bucket` /
+//! `query_bucket` serve every family behind one API.
 
 pub mod srp;
 pub mod asym;
@@ -26,6 +43,8 @@ pub mod prp;
 pub mod pstable;
 pub mod compose;
 pub mod bank;
+pub mod simd;
+pub mod structured;
 
 /// A locality-sensitive hash function mapping vectors to bucket indices in
 /// `[0, range)`.

@@ -1,0 +1,442 @@
+//! Runtime-dispatched SIMD kernels for the fused hash bank's projection
+//! + sign-fold hot path.
+//!
+//! The bank evaluates, per sketch row, `p` hyperplane projections of the
+//! same example followed by a `>= 0` sign fold into a `p`-bit bucket.
+//! These kernels vectorize **across planes**: lane `j` of a SIMD vector
+//! owns plane `j`'s accumulator, the coordinate loop walks `i = 0..d`
+//! sequentially broadcasting `z[i]`, and each lane performs exactly the
+//! scalar sequence `acc += w_j[i] * z[i]` (separate multiply and add —
+//! no FMA contraction, which would round once instead of twice).
+//!
+//! **Bit-identity contract.** Every per-plane sum reproduces the scalar
+//! accumulation order term-for-term, so the SIMD path is bit-identical
+//! to the scalar oracle, not merely close:
+//!
+//! * lane arithmetic (`mul`/`add`/`sub` on f64 lanes) is the same
+//!   IEEE-754 operation as the scalar `*`/`+`/`-`;
+//! * the accumulation *order* over `i` is identical per plane because
+//!   lanes never mix coordinates — vectorization re-associates across
+//!   planes (independent sums), never within one;
+//! * the sign fold uses ordered greater-equal compares
+//!   (`_CMP_GE_OQ` / `cmpge` / `vcgeq_f64`), matching the scalar
+//!   `>= 0.0` decision on every input including `-0.0` (true) and NaN
+//!   (false);
+//! * movemask maps lane `j` to bit `j`, matching the scalar
+//!   `bucket |= 1 << j` fold.
+//!
+//! The kernels read a **transposed** per-row plane layout
+//! `t[i * p + j] = w_j[i]` (coordinate-major) so the per-coordinate load
+//! of 2/4 adjacent planes is one unaligned vector load. Remainder lanes
+//! (`p % lane_width`) fall through to a scalar loop over the same
+//! transposed array.
+//!
+//! Kernel selection happens once per process ([`kernel`]): AVX2 when the
+//! CPU reports it, else SSE2 (the x86-64 baseline); NEON on aarch64 (the
+//! baseline there); scalar elsewhere. Set `STORM_SIMD=off` (or
+//! `scalar`) to force the scalar fallback — the CI `simd-off` leg runs
+//! the whole suite this way to pin the fallback against the oracle.
+
+use std::sync::OnceLock;
+
+/// Which projection kernel the process resolved to (one of these per
+/// process; see [`kernel`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar loop over the transposed layout (always
+    /// available; forced by `STORM_SIMD=off|scalar`).
+    Scalar,
+    /// SSE2, 2 f64 lanes (the x86-64 baseline — no runtime detection
+    /// needed).
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    /// AVX2, 4 f64 lanes (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON, 2 f64 lanes (the aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Kernel {
+    /// Diagnostic name (`scalar` | `sse2` | `avx2` | `neon`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse2 => "sse2",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+fn detect() -> Kernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+        Kernel::Sse2
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Kernel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Kernel::Scalar
+    }
+}
+
+static KERNEL: OnceLock<Kernel> = OnceLock::new();
+
+/// The process-wide kernel, resolved once: honours `STORM_SIMD`
+/// (`off`/`scalar` force the scalar path, `auto`/`on` re-enable
+/// detection, anything else panics loudly rather than silently running
+/// the wrong kernel), then falls back to CPU feature detection.
+pub fn kernel() -> Kernel {
+    *KERNEL.get_or_init(|| match std::env::var("STORM_SIMD") {
+        Err(_) => detect(),
+        Ok(v) => match v.trim() {
+            "off" | "scalar" => Kernel::Scalar,
+            "" | "auto" | "on" => detect(),
+            other => panic!("STORM_SIMD must be off|scalar|auto|on, got {other:?}"),
+        },
+    })
+}
+
+/// Scalar reference over the transposed layout, from plane `start` to
+/// `p` — both the `Kernel::Scalar` body and the remainder-lane handler
+/// for the vector kernels.
+#[inline]
+fn data_pair_tail_scalar(
+    trow: &[f64],
+    p: usize,
+    z: &[f64],
+    tail: f64,
+    start: usize,
+) -> (usize, usize) {
+    let d = z.len();
+    let mut pos = 0usize;
+    let mut neg = 0usize;
+    for j in start..p {
+        let mut s = 0.0;
+        for (i, &zi) in z.iter().enumerate() {
+            s += trow[i * p + j] * zi;
+        }
+        let t = trow[(d + 1) * p + j] * tail;
+        if s + t >= 0.0 {
+            pos |= 1 << j;
+        }
+        if t - s >= 0.0 {
+            neg |= 1 << j;
+        }
+    }
+    (pos, neg)
+}
+
+/// Scalar single-side fold (tail coefficient row `tail_row`: `d` for the
+/// query side, `d + 1` for the data side), planes `start..p`.
+#[inline]
+fn side_bucket_tail_scalar(
+    trow: &[f64],
+    p: usize,
+    v: &[f64],
+    tail: f64,
+    tail_row: usize,
+    start: usize,
+) -> usize {
+    let mut h = 0usize;
+    for j in start..p {
+        let mut s = 0.0;
+        for (i, &vi) in v.iter().enumerate() {
+            s += trow[i * p + j] * vi;
+        }
+        if s + trow[tail_row * p + j] * tail >= 0.0 {
+            h |= 1 << j;
+        }
+    }
+    h
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn data_pair_avx2(trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
+        let d = z.len();
+        let base = trow.as_ptr();
+        let zero = _mm256_setzero_pd();
+        let tailv = _mm256_set1_pd(tail);
+        let mut pos = 0usize;
+        let mut neg = 0usize;
+        let mut j = 0usize;
+        while j + 4 <= p {
+            let mut acc = zero;
+            for (i, &zi) in z.iter().enumerate() {
+                let w = _mm256_loadu_pd(base.add(i * p + j));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(w, _mm256_set1_pd(zi)));
+            }
+            let t = _mm256_mul_pd(_mm256_loadu_pd(base.add((d + 1) * p + j)), tailv);
+            let pm = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_add_pd(acc, t), zero));
+            let nm = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_sub_pd(t, acc), zero));
+            pos |= (pm as usize) << j;
+            neg |= (nm as usize) << j;
+            j += 4;
+        }
+        let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
+        (pos | rp, neg | rn)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn side_bucket_avx2(
+        trow: &[f64],
+        p: usize,
+        v: &[f64],
+        tail: f64,
+        tail_row: usize,
+    ) -> usize {
+        let base = trow.as_ptr();
+        let zero = _mm256_setzero_pd();
+        let tailv = _mm256_set1_pd(tail);
+        let mut h = 0usize;
+        let mut j = 0usize;
+        while j + 4 <= p {
+            let mut acc = zero;
+            for (i, &vi) in v.iter().enumerate() {
+                let w = _mm256_loadu_pd(base.add(i * p + j));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(w, _mm256_set1_pd(vi)));
+            }
+            let t = _mm256_mul_pd(_mm256_loadu_pd(base.add(tail_row * p + j)), tailv);
+            let m = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_add_pd(acc, t), zero));
+            h |= (m as usize) << j;
+            j += 4;
+        }
+        h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn data_pair_sse2(trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
+        let d = z.len();
+        let base = trow.as_ptr();
+        let zero = _mm_setzero_pd();
+        let tailv = _mm_set1_pd(tail);
+        let mut pos = 0usize;
+        let mut neg = 0usize;
+        let mut j = 0usize;
+        while j + 2 <= p {
+            let mut acc = zero;
+            for (i, &zi) in z.iter().enumerate() {
+                let w = _mm_loadu_pd(base.add(i * p + j));
+                acc = _mm_add_pd(acc, _mm_mul_pd(w, _mm_set1_pd(zi)));
+            }
+            let t = _mm_mul_pd(_mm_loadu_pd(base.add((d + 1) * p + j)), tailv);
+            let pm = _mm_movemask_pd(_mm_cmpge_pd(_mm_add_pd(acc, t), zero));
+            let nm = _mm_movemask_pd(_mm_cmpge_pd(_mm_sub_pd(t, acc), zero));
+            pos |= (pm as usize) << j;
+            neg |= (nm as usize) << j;
+            j += 2;
+        }
+        let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
+        (pos | rp, neg | rn)
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn side_bucket_sse2(
+        trow: &[f64],
+        p: usize,
+        v: &[f64],
+        tail: f64,
+        tail_row: usize,
+    ) -> usize {
+        let base = trow.as_ptr();
+        let zero = _mm_setzero_pd();
+        let tailv = _mm_set1_pd(tail);
+        let mut h = 0usize;
+        let mut j = 0usize;
+        while j + 2 <= p {
+            let mut acc = zero;
+            for (i, &vi) in v.iter().enumerate() {
+                let w = _mm_loadu_pd(base.add(i * p + j));
+                acc = _mm_add_pd(acc, _mm_mul_pd(w, _mm_set1_pd(vi)));
+            }
+            let t = _mm_mul_pd(_mm_loadu_pd(base.add(tail_row * p + j)), tailv);
+            let m = _mm_movemask_pd(_mm_cmpge_pd(_mm_add_pd(acc, t), zero));
+            h |= (m as usize) << j;
+            j += 2;
+        }
+        h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    #[inline]
+    unsafe fn ge_zero_mask(v: float64x2_t) -> usize {
+        let m = vcgeq_f64(v, vdupq_n_f64(0.0));
+        ((vgetq_lane_u64::<0>(m) & 1) | ((vgetq_lane_u64::<1>(m) & 1) << 1)) as usize
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn data_pair_neon(trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
+        let d = z.len();
+        let base = trow.as_ptr();
+        let mut pos = 0usize;
+        let mut neg = 0usize;
+        let mut j = 0usize;
+        while j + 2 <= p {
+            let mut acc = vdupq_n_f64(0.0);
+            for (i, &zi) in z.iter().enumerate() {
+                let w = vld1q_f64(base.add(i * p + j));
+                acc = vaddq_f64(acc, vmulq_n_f64(w, zi));
+            }
+            let t = vmulq_n_f64(vld1q_f64(base.add((d + 1) * p + j)), tail);
+            pos |= ge_zero_mask(vaddq_f64(acc, t)) << j;
+            neg |= ge_zero_mask(vsubq_f64(t, acc)) << j;
+            j += 2;
+        }
+        let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
+        (pos | rp, neg | rn)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn side_bucket_neon(
+        trow: &[f64],
+        p: usize,
+        v: &[f64],
+        tail: f64,
+        tail_row: usize,
+    ) -> usize {
+        let base = trow.as_ptr();
+        let mut h = 0usize;
+        let mut j = 0usize;
+        while j + 2 <= p {
+            let mut acc = vdupq_n_f64(0.0);
+            for (i, &vi) in v.iter().enumerate() {
+                let w = vld1q_f64(base.add(i * p + j));
+                acc = vaddq_f64(acc, vmulq_n_f64(w, vi));
+            }
+            let t = vmulq_n_f64(vld1q_f64(base.add(tail_row * p + j)), tail);
+            h |= ge_zero_mask(vaddq_f64(acc, t)) << j;
+            j += 2;
+        }
+        h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
+    }
+}
+
+/// Both PRP data buckets (`sign(s + t)`, `sign(t - s)` folds) for one
+/// sketch row from its transposed plane block `trow`
+/// (`trow[i * p + j] = w_j[i]`, length `(z.len() + 2) * p`), with the
+/// precomputed MIPS `tail`. Dispatches on `k`; every kernel is
+/// bit-identical to the scalar path (module docs).
+#[inline]
+pub fn data_pair_t(k: Kernel, trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
+    debug_assert_eq!(trow.len(), (z.len() + 2) * p);
+    match k {
+        Kernel::Scalar => data_pair_tail_scalar(trow, p, z, tail, 0),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => unsafe { x86::data_pair_sse2(trow, p, z, tail) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::data_pair_avx2(trow, p, z, tail) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { arm::data_pair_neon(trow, p, z, tail) },
+    }
+}
+
+/// One-side bucket (`sign(s + t)` fold) for one sketch row: `tail_row`
+/// selects the augmented slot carrying the tail coefficient —
+/// `v.len() + 1` for the data side, `v.len()` for the query side.
+#[inline]
+pub fn side_bucket_t(
+    k: Kernel,
+    trow: &[f64],
+    p: usize,
+    v: &[f64],
+    tail: f64,
+    tail_row: usize,
+) -> usize {
+    debug_assert_eq!(trow.len(), (v.len() + 2) * p);
+    debug_assert!(tail_row == v.len() || tail_row == v.len() + 1);
+    match k {
+        Kernel::Scalar => side_bucket_tail_scalar(trow, p, v, tail, tail_row, 0),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => unsafe { x86::side_bucket_sse2(trow, p, v, tail, tail_row) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::side_bucket_avx2(trow, p, v, tail, tail_row) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { arm::side_bucket_neon(trow, p, v, tail, tail_row) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{cases, gen_ball_point, gen_dim};
+    use crate::util::rng::Rng;
+
+    /// Random transposed plane block for `p` planes over `d + 2` coords.
+    fn gen_trow(rng: &mut crate::util::rng::Xoshiro256, d: usize, p: usize) -> Vec<f64> {
+        (0..(d + 2) * p).map(|_| rng.gaussian()).collect()
+    }
+
+    #[test]
+    fn detected_kernel_matches_scalar_bitwise_all_remainders() {
+        // Sweep p across 1..=24 so the vector main loop AND every
+        // remainder-lane count (p mod 2, p mod 4) are exercised, at
+        // small and SIMD-friendly-large dims.
+        let k = kernel();
+        cases(40, 25, |rng, case| {
+            let d = if case % 2 == 0 { gen_dim(rng, 1, 12) } else { 64 + (case % 200) };
+            let p = 1 + (case % 24);
+            let trow = gen_trow(rng, d, p);
+            let z = gen_ball_point(rng, d, 0.95);
+            let tail = rng.uniform();
+            assert_eq!(
+                data_pair_t(k, &trow, p, &z, tail),
+                data_pair_t(Kernel::Scalar, &trow, p, &z, tail),
+                "kernel {} diverged from scalar (d={d} p={p})",
+                k.name()
+            );
+            for tail_row in [d, d + 1] {
+                assert_eq!(
+                    side_bucket_t(k, &trow, p, &z, tail, tail_row),
+                    side_bucket_t(Kernel::Scalar, &trow, p, &z, tail, tail_row),
+                    "kernel {} side fold diverged (d={d} p={p} tail_row={tail_row})",
+                    k.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn scalar_fold_tie_breaks_zero_as_one() {
+        // A plane whose projection is exactly 0.0 must set its bit
+        // (sign(0) = 1), and -0.0 compares >= 0.0 too.
+        let p = 3;
+        let d = 1;
+        // Planes: w_0 = [0, 0, 0] (s + t = 0.0), w_1 = [-1, 0, 0] with
+        // z = [0.0] (s = -0.0), w_2 = [1, 0, -1] (t negative).
+        let mut trow = vec![0.0; (d + 2) * p];
+        trow[0 * p + 1] = -1.0;
+        trow[0 * p + 2] = 1.0;
+        trow[(d + 1) * p + 2] = -1.0;
+        let z = [0.0];
+        let (pos, neg) = data_pair_t(Kernel::Scalar, &trow, p, &z, 1.0);
+        assert_eq!(pos & 1, 1, "exact zero must hash as positive");
+        assert_eq!(pos & 2, 2, "-0.0 head must still compare >= 0");
+        assert_eq!(pos & 4, 0, "negative tail term must clear the bit");
+        assert_eq!(neg & 1, 1);
+    }
+
+    #[test]
+    fn kernel_name_is_stable() {
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert!(!kernel().name().is_empty());
+    }
+}

@@ -1,0 +1,466 @@
+//! Structured hyperplane families: cheap substitutes for dense Gaussian
+//! projections in the sketch hot path.
+//!
+//! Dense SRP pays O(d) multiply-adds per plane. Two classical structured
+//! families cut that cost while preserving the angular-LSH behaviour the
+//! STORM estimators rest on:
+//!
+//! * [`SparseRademacherPlanes`] — each plane keeps only an expected
+//!   `density` fraction of coordinates, each with a ±1 sign (Achlioptas /
+//!   Li-style very sparse random projections). A projection is a few
+//!   signed adds per nonzero; storage is index/sign runs instead of a
+//!   dense matrix.
+//! * [`FastHadamardPlanes`] — the HD₁HD₂HD₃ subsampled randomized
+//!   Hadamard transform: three rounds of (random ±1 diagonal, then
+//!   fast Walsh–Hadamard transform) over the next-power-of-two padding
+//!   of the input, with `p` distinct output coordinates per row selected
+//!   as the plane projections. One O(m log m) transform serves all `p`
+//!   planes of a row at once.
+//!
+//! Both families are generated from the same per-row seed streams as the
+//! dense planes, so fleet-wide merge compatibility reduces to equal
+//! `(seed, hash_family)` exactly as for dense. The fused bank
+//! (`lsh/bank.rs`) consumes these families in decomposed form — head
+//! nonzeros plus the two augmented tail coefficients — which *defines*
+//! the family's hashing semantics; the [`LshFunction`] impls here hash
+//! whole (already augmented) vectors and are used by the generic RACE
+//! sketch and as test oracles.
+
+use super::LshFunction;
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// Draw a ±1 sign from the stream (one raw bit).
+#[inline]
+fn rademacher(rng: &mut Xoshiro256) -> f64 {
+    if rng.next_u64() & 1 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// `p` sparse Rademacher hyperplanes over `n`-dimensional inputs, stored
+/// as per-plane index/sign runs in ascending coordinate order.
+#[derive(Clone, Debug)]
+pub struct SparseRademacherPlanes {
+    n: usize,
+    p: u32,
+    /// CSR-style run boundaries: plane `j`'s nonzeros live at
+    /// `offsets[j]..offsets[j + 1]` in `idx`/`sign`.
+    offsets: Vec<u32>,
+    idx: Vec<u32>,
+    sign: Vec<f64>,
+}
+
+impl SparseRademacherPlanes {
+    /// Generate `p` planes over `n` coordinates from `seed`, keeping each
+    /// coordinate with probability `density_permille / 1000`. Every plane
+    /// is forced to have at least one nonzero so it stays a genuine
+    /// hyperplane (an all-zero plane would hash everything to 1).
+    pub fn new(n: usize, p: u32, seed: u64, density_permille: u16) -> Self {
+        assert!(n >= 1, "sparse planes need dim >= 1");
+        assert!((1..=24).contains(&p), "p must be in 1..=24, got {p}");
+        assert!(
+            (1..=1000).contains(&density_permille),
+            "sparse density must be in (0, 1] (permille 1..=1000), got {density_permille}"
+        );
+        let density = density_permille as f64 / 1000.0;
+        let mut rng = Xoshiro256::new(seed);
+        let mut offsets = Vec::with_capacity(p as usize + 1);
+        offsets.push(0u32);
+        let mut idx: Vec<u32> = Vec::new();
+        let mut sign: Vec<f64> = Vec::new();
+        for _ in 0..p {
+            let start = idx.len();
+            for i in 0..n {
+                if rng.uniform() < density {
+                    idx.push(i as u32);
+                    sign.push(rademacher(&mut rng));
+                }
+            }
+            if idx.len() == start {
+                idx.push(rng.below(n as u64) as u32);
+                sign.push(rademacher(&mut rng));
+            }
+            offsets.push(idx.len() as u32);
+        }
+        SparseRademacherPlanes { n, p, offsets, idx, sign }
+    }
+
+    /// Number of planes.
+    pub fn planes(&self) -> u32 {
+        self.p
+    }
+
+    /// Total nonzeros across all planes.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Plane `j`'s nonzeros as `(coordinate, sign)` pairs in ascending
+    /// coordinate order (the canonical accumulation order).
+    pub fn nonzeros(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.offsets[j] as usize;
+        let hi = self.offsets[j + 1] as usize;
+        self.idx[lo..hi]
+            .iter()
+            .zip(&self.sign[lo..hi])
+            .map(|(&i, &s)| (i as usize, s))
+    }
+
+    /// Project `x` onto plane `j`: signed sum over the plane's nonzeros,
+    /// accumulated in ascending coordinate order.
+    pub fn project(&self, j: usize, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.n);
+        let mut s = 0.0;
+        for (i, sg) in self.nonzeros(j) {
+            s += sg * x[i];
+        }
+        s
+    }
+}
+
+impl LshFunction for SparseRademacherPlanes {
+    fn hash(&self, x: &[f64]) -> usize {
+        assert_eq!(x.len(), self.n, "dimension mismatch");
+        let mut h = 0usize;
+        for j in 0..self.p as usize {
+            if self.project(j, x) >= 0.0 {
+                h |= 1 << j;
+            }
+        }
+        h
+    }
+
+    fn range(&self) -> usize {
+        1 << self.p
+    }
+
+    fn dim(&self) -> usize {
+        self.n
+    }
+}
+
+/// In-place unnormalized fast Walsh–Hadamard transform; `v.len()` must be
+/// a power of two.
+pub fn fwht(v: &mut [f64]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for k in i..i + h {
+                let a = v[k];
+                let b = v[k + h];
+                v[k] = a + b;
+                v[k + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+}
+
+/// `p` fast-Hadamard SRP planes over `n`-dimensional inputs: inputs are
+/// zero-padded to `m = next_pow2(n)`, pushed through
+/// `H·D₃·H·D₂·H·D₁` (three sign-diagonal + FWHT rounds), and plane `j`
+/// reads output coordinate `sel[j]`.
+#[derive(Clone, Debug)]
+pub struct FastHadamardPlanes {
+    n: usize,
+    m: usize,
+    p: u32,
+    d1: Vec<f64>,
+    d2: Vec<f64>,
+    d3: Vec<f64>,
+    sel: Vec<usize>,
+}
+
+impl FastHadamardPlanes {
+    /// Generate from `seed`. Requires `p <= next_pow2(n)` — with fewer
+    /// padded coordinates than planes the `p` selected outputs could not
+    /// be distinct.
+    pub fn new(n: usize, p: u32, seed: u64) -> Self {
+        assert!(n >= 1, "hadamard planes need dim >= 1");
+        assert!((1..=24).contains(&p), "p must be in 1..=24, got {p}");
+        let m = crate::util::mathx::next_pow2(n);
+        assert!(
+            (p as usize) <= m,
+            "hadamard family needs p <= next_pow2(dim) distinct output rows; \
+             got p = {p}, next_pow2({n}) = {m} — lower storm.power or use \
+             hash_family = \"dense\"|\"sparse\""
+        );
+        let mut rng = Xoshiro256::new(seed);
+        let sign_vec = |rng: &mut Xoshiro256| (0..m).map(|_| rademacher(rng)).collect::<Vec<f64>>();
+        let d1 = sign_vec(&mut rng);
+        let d2 = sign_vec(&mut rng);
+        let d3 = sign_vec(&mut rng);
+        let sel = rng.sample_indices(m, p as usize);
+        FastHadamardPlanes { n, m, p, d1, d2, d3, sel }
+    }
+
+    /// Number of planes.
+    pub fn planes(&self) -> u32 {
+        self.p
+    }
+
+    /// Padded transform length (`next_pow2(dim)`).
+    pub fn padded_len(&self) -> usize {
+        self.m
+    }
+
+    /// Output coordinate plane `j` reads.
+    pub fn selected_index(&self, j: usize) -> usize {
+        self.sel[j]
+    }
+
+    /// Full transform of `x` (zero-padded to `m`) into `out` — `out` is
+    /// cleared and resized, so a reused buffer never reallocates after
+    /// warmup. `x` may be shorter than `dim`; missing trailing
+    /// coordinates are treated as zero (the bank exploits this to
+    /// transform bare heads of augmented vectors).
+    pub fn transform(&self, x: &[f64], out: &mut Vec<f64>) {
+        assert!(x.len() <= self.n, "input longer than family dim");
+        out.clear();
+        out.extend_from_slice(x);
+        out.resize(self.m, 0.0);
+        for (v, s) in out.iter_mut().zip(&self.d1) {
+            *v *= s;
+        }
+        fwht(out);
+        for (v, s) in out.iter_mut().zip(&self.d2) {
+            *v *= s;
+        }
+        fwht(out);
+        for (v, s) in out.iter_mut().zip(&self.d3) {
+            *v *= s;
+        }
+        fwht(out);
+    }
+
+    /// Column of the effective projection matrix restricted to the
+    /// selected rows: `T(e_coord)[sel[j]]` for `j = 0..p`. The bank uses
+    /// this to peel the two augmented tail slots out of the transform so
+    /// the per-example pass only transforms the head.
+    pub fn basis_column(&self, coord: usize) -> Vec<f64> {
+        assert!(coord < self.n);
+        let mut basis = vec![0.0; self.n];
+        basis[coord] = 1.0;
+        let mut out = Vec::new();
+        self.transform(&basis, &mut out);
+        self.sel.iter().map(|&s| out[s]).collect()
+    }
+}
+
+impl LshFunction for FastHadamardPlanes {
+    fn hash(&self, x: &[f64]) -> usize {
+        assert_eq!(x.len(), self.n, "dimension mismatch");
+        let mut out = Vec::new();
+        self.transform(x, &mut out);
+        let mut h = 0usize;
+        for j in 0..self.p as usize {
+            if out[self.sel[j]] >= 0.0 {
+                h |= 1 << j;
+            }
+        }
+        h
+    }
+
+    fn range(&self) -> usize {
+        1 << self.p
+    }
+
+    fn dim(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, cases, gen_ball_point, gen_dim};
+
+    #[test]
+    fn sparse_planes_respect_density_and_min_nonzero() {
+        let n = 200;
+        let p = 8;
+        let sp = SparseRademacherPlanes::new(n, p, 42, 100);
+        for j in 0..p as usize {
+            let nnz = sp.nonzeros(j).count();
+            assert!(nnz >= 1, "plane {j} must have at least one nonzero");
+            // 10% of 200 = 20 expected; allow a wide deterministic band.
+            assert!(nnz <= 60, "plane {j} far denser than requested: {nnz}");
+            let mut prev = None;
+            for (i, s) in sp.nonzeros(j) {
+                assert!(i < n);
+                assert!(s == 1.0 || s == -1.0);
+                if let Some(pv) = prev {
+                    assert!(i > pv, "indices must be strictly ascending");
+                }
+                prev = Some(i);
+            }
+        }
+        // Degenerate density still yields hyperplanes.
+        let tiny = SparseRademacherPlanes::new(3, 4, 7, 1);
+        for j in 0..4 {
+            assert!(tiny.nonzeros(j).count() >= 1);
+        }
+    }
+
+    #[test]
+    fn sparse_projection_matches_dense_equivalent() {
+        cases(30, 31, |rng, case| {
+            let n = gen_dim(rng, 2, 40);
+            let p = 1 + (case % 8) as u32;
+            let sp = SparseRademacherPlanes::new(n, p, 1000 + case as u64, 300);
+            let x = gen_ball_point(rng, n, 1.0);
+            for j in 0..p as usize {
+                // Densify the plane and dot it the slow way.
+                let mut w = vec![0.0; n];
+                for (i, s) in sp.nonzeros(j) {
+                    w[i] = s;
+                }
+                let dense: f64 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+                assert_close(sp.project(j, &x), dense, 1e-12);
+            }
+            // hash() folds the same signs.
+            let mut h = 0usize;
+            for j in 0..p as usize {
+                if sp.project(j, &x) >= 0.0 {
+                    h |= 1 << j;
+                }
+            }
+            assert_eq!(sp.hash(&x), h);
+        });
+    }
+
+    #[test]
+    fn sparse_is_deterministic_and_seed_sensitive() {
+        let a = SparseRademacherPlanes::new(50, 6, 9, 150);
+        let b = SparseRademacherPlanes::new(50, 6, 9, 150);
+        let c = SparseRademacherPlanes::new(50, 6, 10, 150);
+        let x: Vec<f64> = (0..50).map(|i| ((i * 7 + 3) % 11) as f64 - 5.0).collect();
+        assert_eq!(a.hash(&x), b.hash(&x));
+        let mut diff = false;
+        for j in 0..6 {
+            if a.nonzeros(j).collect::<Vec<_>>() != c.nonzeros(j).collect::<Vec<_>>() {
+                diff = true;
+            }
+        }
+        assert!(diff, "different seeds should draw different planes");
+    }
+
+    #[test]
+    fn fwht_matches_naive_hadamard() {
+        // H_2 ⊗ H_2 on length 4: H[i][j] = (-1)^{popcount(i & j)}.
+        let x = [1.0, -2.0, 3.0, 0.5];
+        let mut v = x.to_vec();
+        fwht(&mut v);
+        for (i, &got) in v.iter().enumerate() {
+            let want: f64 = x
+                .iter()
+                .enumerate()
+                .map(|(j, &xj)| {
+                    let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+                    sign * xj
+                })
+                .sum();
+            assert_close(got, want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn fwht_is_self_inverse_up_to_scale() {
+        let mut v: Vec<f64> = (0..16).map(|i| (i as f64 - 7.5) * 0.3).collect();
+        let orig = v.clone();
+        fwht(&mut v);
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert_close(*a, b * 16.0, 1e-9);
+        }
+    }
+
+    #[test]
+    fn hadamard_transform_is_linear_and_antipodal() {
+        cases(20, 32, |rng, case| {
+            let n = gen_dim(rng, 3, 33);
+            let p = (1 + case % 4).min(crate::util::mathx::next_pow2(n)) as u32;
+            let hp = FastHadamardPlanes::new(n, p, 77 + case as u64);
+            let x = gen_ball_point(rng, n, 1.0);
+            let neg: Vec<f64> = x.iter().map(|v| -v).collect();
+            let mut tx = Vec::new();
+            let mut tn = Vec::new();
+            hp.transform(&x, &mut tx);
+            hp.transform(&neg, &mut tn);
+            // Negation commutes with the transform *bitwise*: every step
+            // is multiplication and add/sub of f64, and IEEE-754 negation
+            // distributes exactly over both.
+            for (a, b) in tx.iter().zip(&tn) {
+                assert_eq!(a.to_bits(), (-b).to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn hadamard_matches_explicit_matrix() {
+        // Reconstruct the effective matrix column-by-column and check a
+        // full transform against the matrix-vector product.
+        let n = 6;
+        let p = 4;
+        let hp = FastHadamardPlanes::new(n, p, 5);
+        let cols: Vec<Vec<f64>> = (0..n).map(|c| hp.basis_column(c)).collect();
+        let x = [0.3, -1.2, 0.7, 2.0, -0.4, 0.05];
+        let mut out = Vec::new();
+        hp.transform(&x, &mut out);
+        for j in 0..p as usize {
+            let want: f64 = (0..n).map(|c| cols[c][j] * x[c]).sum();
+            assert_close(out[hp.selected_index(j)], want, 1e-9);
+        }
+    }
+
+    #[test]
+    fn hadamard_selected_rows_are_distinct() {
+        let hp = FastHadamardPlanes::new(10, 8, 3);
+        let mut sel: Vec<usize> = (0..8).map(|j| hp.selected_index(j)).collect();
+        sel.sort_unstable();
+        sel.dedup();
+        assert_eq!(sel.len(), 8);
+        assert!(sel.iter().all(|&s| s < hp.padded_len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "p <= next_pow2(dim)")]
+    fn hadamard_rejects_more_planes_than_padded_rows() {
+        FastHadamardPlanes::new(3, 8, 1);
+    }
+
+    #[test]
+    fn structured_families_balance_hash_bits() {
+        // Sanity: over random inputs each plane's sign should be roughly
+        // balanced — a catastrophically broken family collapses to one
+        // bucket.
+        let n = 64;
+        let p = 6u32;
+        let sp = SparseRademacherPlanes::new(n, p, 21, 200);
+        let hp = FastHadamardPlanes::new(n, p, 22);
+        let mut rng = crate::util::rng::Xoshiro256::new(99);
+        let mut sp_ones = vec![0usize; p as usize];
+        let mut hp_ones = vec![0usize; p as usize];
+        let trials = 400;
+        for _ in 0..trials {
+            let x = crate::util::rng::Rng::gaussian_vec(&mut rng, n);
+            let (hs, hh) = (sp.hash(&x), hp.hash(&x));
+            for j in 0..p as usize {
+                sp_ones[j] += (hs >> j) & 1;
+                hp_ones[j] += (hh >> j) & 1;
+            }
+        }
+        for j in 0..p as usize {
+            let fs = sp_ones[j] as f64 / trials as f64;
+            let fh = hp_ones[j] as f64 / trials as f64;
+            assert!((0.2..=0.8).contains(&fs), "sparse plane {j} unbalanced: {fs}");
+            assert!((0.2..=0.8).contains(&fh), "hadamard plane {j} unbalanced: {fh}");
+        }
+    }
+}

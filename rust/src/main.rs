@@ -58,6 +58,33 @@ fn parse_width(s: &str) -> anyhow::Result<storm::config::CounterWidth> {
         .ok_or_else(|| anyhow::anyhow!("counter width must be u8|u16|u32, got {s:?}"))
 }
 
+/// Resolve `--hash-family` (+ optional `--sparse-density`) into a
+/// [`storm::config::HashFamily`], with the same per-mille conversion and
+/// bounds the TOML loader applies.
+fn parse_hash_family(
+    family: &str,
+    density: Option<f64>,
+) -> anyhow::Result<storm::config::HashFamily> {
+    use storm::config::HashFamily;
+    let mut fam = HashFamily::parse(family).ok_or_else(|| {
+        anyhow::anyhow!("--hash-family must be dense|sparse|hadamard, got {family:?}")
+    })?;
+    if let Some(d) = density {
+        anyhow::ensure!(
+            matches!(fam, HashFamily::Sparse { .. }),
+            "--sparse-density only applies to --hash-family sparse (got {family:?})"
+        );
+        anyhow::ensure!(
+            d > 0.0 && d <= 1.0,
+            "--sparse-density must be a fraction in (0, 1], got {d}"
+        );
+        fam = HashFamily::Sparse {
+            density_permille: (d * 1000.0).round().clamp(1.0, 1000.0) as u16,
+        };
+    }
+    Ok(fam)
+}
+
 fn handle_help(parser: &ArgParser, err: ArgError) -> i32 {
     match err {
         ArgError::HelpRequested => {
@@ -82,6 +109,16 @@ fn cmd_train(args: &[String]) -> i32 {
             "device-counter-width",
             None,
             "narrower width for DEVICE sketches only (u8 | u16 | u32); merges widen exactly",
+        )
+        .opt(
+            "hash-family",
+            Some("dense"),
+            "hyperplane family: dense | sparse | hadamard (structured = cheaper projections)",
+        )
+        .opt(
+            "sparse-density",
+            None,
+            "nonzero fraction in (0, 1] for --hash-family sparse (default 0.1)",
         )
         .opt("devices", Some("4"), "simulated edge devices")
         .opt("sync-rounds", Some("1"), "delta sync rounds (training interleaves between rounds)")
@@ -115,6 +152,11 @@ fn cmd_train(args: &[String]) -> i32 {
         if let Some(w) = parsed.get("device-counter-width") {
             cfg.fleet.device_counter_width = Some(parse_width(w)?);
         }
+        let density = match parsed.get("sparse-density") {
+            Some(_) => Some(parsed.get_f64("sparse-density")?),
+            None => None,
+        };
+        cfg.storm.hash_family = parse_hash_family(&parsed.get_string("hash-family"), density)?;
         cfg.fleet.devices = parsed.get_usize("devices")?;
         cfg.fleet.sync_rounds = parsed.get_usize("sync-rounds")?;
         anyhow::ensure!(cfg.fleet.sync_rounds >= 1, "--sync-rounds must be >= 1");
@@ -131,7 +173,14 @@ fn cmd_train(args: &[String]) -> i32 {
         cfg.optimizer.sigma = parsed.get_f64("sigma")?;
         cfg.optimizer.step = parsed.get_f64("step")?;
         cfg.optimizer.seed = parsed.get_u64("seed")?;
-        cfg.artifacts_dir = Some(parsed.get_string("artifacts"));
+        // The artifacts dir only feeds the XLA backend, which embeds dense
+        // Gaussian hyperplanes; structured families never use it, and
+        // leaving it set would trip validate()'s family/artifacts check.
+        cfg.artifacts_dir = if cfg.storm.hash_family == storm::config::HashFamily::Dense {
+            Some(parsed.get_string("artifacts"))
+        } else {
+            None
+        };
         let topology = match parsed.get_string("topology").as_str() {
             "star" => Topology::Star,
             "tree" => Topology::Tree { fanout: 2 },
@@ -255,6 +304,8 @@ fn cmd_sketch(args: &[String]) -> i32 {
         .opt("rows", Some("100"), "sketch rows R")
         .opt("power", Some("4"), "hyperplanes per row")
         .opt("counter-width", Some("u32"), "counter cell width: u8 | u16 | u32")
+        .opt("hash-family", Some("dense"), "hyperplane family: dense | sparse | hadamard")
+        .opt("sparse-density", None, "nonzero fraction in (0, 1] for --hash-family sparse (default 0.1)")
         .opt("seed", Some("0"), "hash family seed");
     let parsed = match parser.parse(args.iter().cloned()) {
         Ok(p) => p,
@@ -266,11 +317,16 @@ fn cmd_sketch(args: &[String]) -> i32 {
         let mut ds = registry::load(&name, seed)
             .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?}"))?;
         storm::data::scale::scale_to_unit_ball(&mut ds, storm::data::scale::DEFAULT_RADIUS);
+        let density = match parsed.get("sparse-density") {
+            Some(_) => Some(parsed.get_f64("sparse-density")?),
+            None => None,
+        };
         let cfg = StormConfig {
             rows: parsed.get_usize("rows")?,
             power: parsed.get_usize("power")? as u32,
             saturating: true,
             counter_width: parse_width(&parsed.get_string("counter-width"))?,
+            hash_family: parse_hash_family(&parsed.get_string("hash-family"), density)?,
             ..Default::default()
         };
         let mut sk = storm::sketch::storm::StormSketch::new(cfg, ds.dim() + 1, seed);
@@ -280,12 +336,13 @@ fn cmd_sketch(args: &[String]) -> i32 {
             }
         });
         println!(
-            "dataset={name} n={} d={} | sketch R={} B={} @{} -> {} bytes ({}x compression) | insert {:.1} ex/s",
+            "dataset={name} n={} d={} | sketch R={} B={} @{} {} -> {} bytes ({}x compression) | insert {:.1} ex/s",
             ds.len(),
             ds.dim(),
             cfg.rows,
             cfg.buckets(),
             cfg.counter_width,
+            cfg.hash_family,
             sk.bytes(),
             ds.raw_bytes() / sk.bytes().max(1),
             ds.len() as f64 / secs.max(1e-12),

@@ -419,6 +419,21 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "config mismatch")]
+    fn apply_delta_cross_family_panics() {
+        // A structured-family delta can never fold into a dense sketch:
+        // the buckets were computed under different hyperplanes, so the
+        // merge-compatibility gate (which compares hash families) fires.
+        let mut sk = StormSketch::new(cfg(), 3, 1);
+        let other = StormConfig {
+            hash_family: crate::config::HashFamily::Sparse { density_permille: 100 },
+            ..cfg()
+        };
+        let d = SketchDelta::empty(0, other, 3, 1);
+        sk.apply_delta(&d);
+    }
+
+    #[test]
     #[should_panic]
     fn apply_delta_seed_mismatch_panics() {
         let mut sk = StormSketch::new(cfg(), 3, 1);

@@ -22,6 +22,11 @@
 //! leading `d` coordinates (its hyperplane passes through the origin).
 //! This keeps one optimizer loop ([`crate::optim::RiskOracle`]) driving
 //! every task and backend.
+//!
+//! Both tasks hash through the family-dispatched
+//! [`crate::lsh::bank::HashBank`], so `[storm] hash_family`
+//! (dense / sparse / hadamard — see [`crate::lsh`]) and the SIMD dense
+//! kernels apply uniformly here; no task-specific plumbing.
 
 use super::counters::CounterGrid;
 use super::delta::{SketchDelta, SketchSnapshot};

@@ -68,6 +68,38 @@ impl RaceSketch {
         Self::srp_with_width(rows, dim, p, seed, CounterWidth::U32)
     }
 
+    /// Convenience: R rows of p-bit *sparse Rademacher* planes (see
+    /// [`crate::lsh::structured`]) — same per-row seed stream as
+    /// [`Self::srp`], projection cost a few adds per nonzero.
+    pub fn sparse(rows: usize, dim: usize, p: u32, seed: u64, density_permille: u16) -> Self {
+        let hashes: Vec<Box<dyn LshFunction>> = (0..rows)
+            .map(|r| {
+                Box::new(crate::lsh::structured::SparseRademacherPlanes::new(
+                    dim,
+                    p,
+                    seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
+                    density_permille,
+                )) as Box<dyn LshFunction>
+            })
+            .collect();
+        RaceSketch::from_hashes(hashes, true)
+    }
+
+    /// Convenience: R rows of p-bit *fast-Hadamard* SRP (see
+    /// [`crate::lsh::structured`]) — one O(d log d) transform per row.
+    pub fn hadamard(rows: usize, dim: usize, p: u32, seed: u64) -> Self {
+        let hashes: Vec<Box<dyn LshFunction>> = (0..rows)
+            .map(|r| {
+                Box::new(crate::lsh::structured::FastHadamardPlanes::new(
+                    dim,
+                    p,
+                    seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
+                )) as Box<dyn LshFunction>
+            })
+            .collect();
+        RaceSketch::from_hashes(hashes, true)
+    }
+
     pub fn rows(&self) -> usize {
         self.grid.rows()
     }
@@ -205,6 +237,37 @@ mod tests {
     fn bytes_matches_grid() {
         let sk = RaceSketch::srp(10, 3, 4, 0);
         assert_eq!(sk.bytes(), 10 * 16 * 4);
+    }
+
+    #[test]
+    fn structured_race_sketches_merge_and_estimate() {
+        // The generic boxed-LSH surface carries the structured families
+        // too: same-seed sketches merge exactly, and the KDE estimate
+        // stays a sane probability-like value.
+        let mut rng = Xoshiro256::new(14);
+        let dim = 8;
+        let data: Vec<Vec<f64>> = (0..80).map(|_| gen_ball_point(&mut rng, dim, 1.0)).collect();
+        let q = gen_ball_point(&mut rng, dim, 1.0);
+        for mk in [
+            (|| RaceSketch::sparse(30, 8, 3, 5, 300)) as fn() -> RaceSketch,
+            || RaceSketch::hadamard(30, 8, 3, 5),
+        ] {
+            let mut a = mk();
+            let mut b = mk();
+            let mut u = mk();
+            for x in &data[..40] {
+                a.insert(x);
+                u.insert(x);
+            }
+            for x in &data[40..] {
+                b.insert(x);
+                u.insert(x);
+            }
+            a.merge_from(&b);
+            assert_eq!(a.grid().counts_u32(), u.grid().counts_u32());
+            let est = u.query(&q);
+            assert!((0.0..=1.0).contains(&est), "est={est}");
+        }
     }
 
     #[test]

@@ -34,9 +34,13 @@
 //! ```text
 //! epoch   u64
 //! width   u8    (bytes per counter cell: 1 | 2 | 4)
-//! flags   u8    (bit 0: 0 = dense, 1 = sparse; bit 1: task — 0 =
-//!                regression, 1 = classification; other bits reserved,
-//!                rejected)
+//! flags   u8    (bit 0: 0 = dense payload, 1 = sparse payload;
+//!                bit 1: task — 0 = regression, 1 = classification;
+//!                bits 2-3: hash family — 0 = dense Gaussian, 1 = sparse
+//!                Rademacher, 2 = fast-Hadamard, 3 rejected;
+//!                other bits reserved, rejected)
+//! density u16   (sparse *hash family* only: nonzero density per-mille,
+//!                1..=1000 — absent for every other family)
 //! payload
 //!   dense : rows * 2^power cells at the NATIVE width (1/2/4 bytes each)
 //!   sparse: varint ncells, then ncells x (varint gap, varint count)
@@ -66,10 +70,19 @@
 //! The hash-family *seed* travels with the counts so a receiver can verify
 //! it merges compatible sketches; the hyperplanes themselves are
 //! regenerated deterministically and never shipped.
+//!
+//! The hash *family* ([`crate::config::HashFamily`]) travels in bits 2–3
+//! of the v3 flags byte, with the sparse family's density per-mille as a
+//! trailing `u16` — two sketches only merge when `(seed, family)` agree,
+//! so the wire must carry both. Only v3 has room for the tag: any
+//! non-dense family forces a v3 frame (like classification does), while
+//! dense frames leave the bits zero — every pre-family fixture in this
+//! file stays byte-identical. Family bits on a v1/v2 frame, family code
+//! 3, and an out-of-range density are all lying frames and rejected.
 
 use super::delta::SketchDelta;
 use super::storm::StormSketch;
-use crate::config::{CounterWidth, StormConfig, Task};
+use crate::config::{CounterWidth, HashFamily, StormConfig, Task};
 
 const MAGIC: u32 = 0x53544F52;
 const VERSION_DENSE: u16 = 1;
@@ -82,6 +95,20 @@ const FLAG_SPARSE: u8 = 1;
 /// hash) increments. Clear = regression, which keeps every pre-task
 /// regression frame byte-identical.
 const FLAG_TASK_CLASSIFICATION: u8 = 2;
+/// Bits 2–3 of the v3 flags byte: the hash family the counters were
+/// accumulated under (0 = dense, 1 = sparse Rademacher, 2 = Hadamard;
+/// 3 rejected). Zero for dense keeps every pre-family frame
+/// byte-identical.
+const FAMILY_SHIFT: u8 = 2;
+const FAMILY_MASK: u8 = 0b11 << FAMILY_SHIFT;
+
+fn family_to_code(f: HashFamily) -> u8 {
+    match f {
+        HashFamily::Dense => 0,
+        HashFamily::Sparse { .. } => 1,
+        HashFamily::Hadamard => 2,
+    }
+}
 
 /// Shared header: magic + version + power + rows + dim + seed + count.
 const HEADER: usize = 4 + 2 + 2 + 4 + 4 + 8 + 8;
@@ -184,10 +211,19 @@ fn put_header(out: &mut Vec<u8>, version: u16, cfg: &StormConfig, dim: usize, se
     out.extend_from_slice(&count.to_le_bytes());
 }
 
-/// Encode a full sketch into the dense v1 wire format.
+/// Encode a full sketch into the dense v1 wire format. v1 predates the
+/// family tag and is dense-family-only (panics otherwise) — structured
+/// sketches ship as v3 deltas ([`encode_delta`] of a from-empty delta
+/// carries the full state).
 pub fn encode(sketch: &StormSketch) -> Vec<u8> {
     let (grid, count) = sketch.parts();
     let cfg = sketch.config();
+    assert_eq!(
+        cfg.hash_family,
+        HashFamily::Dense,
+        "the v1 full-sketch wire has no hash-family tag; ship {} sketches as v3 deltas",
+        cfg.hash_family
+    );
     let mut out = Vec::with_capacity(HEADER + grid.bytes() + 4);
     put_header(&mut out, VERSION_DENSE, &cfg, sketch.dim(), sketch.seed(), count);
     for c in grid.counts_u32() {
@@ -200,13 +236,18 @@ pub fn encode(sketch: &StormSketch) -> Vec<u8> {
 
 /// Encode an epoch-tagged delta: sparse varint runs when at most half
 /// the cells changed, dense counters otherwise. `u32` *regression*
-/// deltas ship as v2 frames — byte-identical to the pre-width wire
-/// format — narrow (`u8`/`u16`) deltas as width-tagged v3 frames whose
-/// dense fallback costs only `cells x width` payload bytes, and every
-/// *classification* delta as a v3 frame with the task bit set (only v3
-/// has a place for it; regression bytes are untouched).
+/// deltas under the *dense* hash family ship as v2 frames —
+/// byte-identical to the pre-width wire format — narrow (`u8`/`u16`)
+/// deltas as width-tagged v3 frames whose dense fallback costs only
+/// `cells x width` payload bytes, and every *classification* or
+/// *structured-family* delta as a v3 frame with the task/family bits
+/// set (only v3 has a place for them; dense regression bytes are
+/// untouched).
 pub fn encode_delta(delta: &SketchDelta) -> Vec<u8> {
-    if delta.width == CounterWidth::U32 && delta.cfg.task == Task::Regression {
+    if delta.width == CounterWidth::U32
+        && delta.cfg.task == Task::Regression
+        && delta.cfg.hash_family == HashFamily::Dense
+    {
         encode_delta_version(delta, VERSION_DELTA)
     } else {
         encode_delta_version(delta, VERSION_WIDTH)
@@ -222,16 +263,27 @@ pub fn encode_delta_v3(delta: &SketchDelta) -> Vec<u8> {
 fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
     let width = delta.width;
     let sparse = delta.populated_fraction() <= 0.5;
-    // Only the v3 flags byte has a task bit; pre-task versions can carry
-    // regression frames only.
+    // Only the v3 flags byte has task/family bits; pre-tag versions can
+    // carry dense-family regression frames only.
     debug_assert!(
-        version == VERSION_WIDTH || delta.cfg.task == Task::Regression,
-        "classification deltas must ship on the v3 wire"
+        version == VERSION_WIDTH
+            || (delta.cfg.task == Task::Regression && delta.cfg.hash_family == HashFamily::Dense),
+        "classification and structured-family deltas must ship on the v3 wire"
     );
-    let task_bit = if delta.cfg.task == Task::Classification && version == VERSION_WIDTH {
-        FLAG_TASK_CLASSIFICATION
+    let tag_bits = if version == VERSION_WIDTH {
+        let task_bit =
+            if delta.cfg.task == Task::Classification { FLAG_TASK_CLASSIFICATION } else { 0 };
+        task_bit | (family_to_code(delta.cfg.hash_family) << FAMILY_SHIFT)
     } else {
         0
+    };
+    // The sparse hash family carries its density per-mille right after
+    // the flags byte (merge compatibility depends on it).
+    let density_field = match delta.cfg.hash_family {
+        HashFamily::Sparse { density_permille } if version == VERSION_WIDTH => {
+            Some(density_permille)
+        }
+        _ => None,
     };
     let header = if version == VERSION_WIDTH { HEADER_V3 } else { HEADER_V2 };
     let mut out =
@@ -242,7 +294,10 @@ fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
         out.push(width_to_byte(width));
     }
     if sparse {
-        out.push(FLAG_SPARSE | task_bit);
+        out.push(FLAG_SPARSE | tag_bits);
+        if let Some(d) = density_field {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
         let cells = delta.sparse_cells();
         put_varint(&mut out, cells.len() as u64);
         let mut prev: Option<u32> = None;
@@ -257,7 +312,10 @@ fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
             prev = Some(idx);
         }
     } else {
-        out.push(FLAG_DENSE | task_bit);
+        out.push(FLAG_DENSE | tag_bits);
+        if let Some(d) = density_field {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
         for &c in &delta.counts {
             debug_assert!(c <= width.max_value(), "delta value outgrew its width tag");
             match (version, width) {
@@ -343,13 +401,37 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
     } else {
         Task::Regression
     };
-    let mode = flags & !FLAG_TASK_CLASSIFICATION;
+    // Bits 2–3 tag the hash family — extracted BEFORE the payload-mode
+    // mask so a family code never masquerades as payload flags. The
+    // sparse family's density per-mille rides as a u16 right after the
+    // flags byte; everything about it is validated like the header.
+    let family_code = (flags & FAMILY_MASK) >> FAMILY_SHIFT;
+    if family_code != 0 && version != VERSION_WIDTH {
+        return Err(WireError::BadPayload("hash-family bits require the v3 wire"));
+    }
+    let (family, payload) = match family_code {
+        0 => (HashFamily::Dense, payload),
+        1 => {
+            if payload.len() < 2 {
+                return Err(WireError::Truncated(bytes.len()));
+            }
+            let density = u16::from_le_bytes(payload[..2].try_into().unwrap());
+            if density == 0 || density > 1000 {
+                return Err(WireError::BadPayload("sparse-family density out of range"));
+            }
+            (HashFamily::Sparse { density_permille: density }, &payload[2..])
+        }
+        2 => (HashFamily::Hadamard, payload),
+        _ => return Err(WireError::BadPayload("unknown hash-family code")),
+    };
+    let mode = flags & !(FLAG_TASK_CLASSIFICATION | FAMILY_MASK);
     let cfg = StormConfig {
         rows: rows as usize,
         power: power as u32,
         saturating: true,
         counter_width: width,
         task,
+        hash_family: family,
     };
 
     let counts = match mode {
@@ -440,14 +522,18 @@ pub fn wire_bytes(cfg: &StormConfig) -> usize {
 
 /// Worst-case (dense-fallback) delta frame size for a configuration at
 /// its native counter width: the per-round wire ceiling a narrow-tier
-/// device pays on a busy round. `u32` regression configs ship v2 frames;
-/// narrow widths and every classification config ship v3 frames with
-/// native-width dense cells.
+/// device pays on a busy round. `u32` dense-family regression configs
+/// ship v2 frames; narrow widths, classification, and structured-family
+/// configs ship v3 frames with native-width dense cells (plus the
+/// 2-byte density field for the sparse family).
 pub fn delta_wire_bytes(cfg: &StormConfig) -> usize {
     let cells = cfg.rows * cfg.buckets();
-    match (cfg.counter_width, cfg.task) {
-        (CounterWidth::U32, Task::Regression) => HEADER_V2 + cells * 4 + 4,
-        (w, _) => HEADER_V3 + cells * w.bytes() + 4,
+    match (cfg.counter_width, cfg.task, cfg.hash_family) {
+        (CounterWidth::U32, Task::Regression, HashFamily::Dense) => HEADER_V2 + cells * 4 + 4,
+        (w, _, f) => {
+            let density = if matches!(f, HashFamily::Sparse { .. }) { 2 } else { 0 };
+            HEADER_V3 + density + cells * w.bytes() + 4
+        }
     }
 }
 
@@ -838,6 +924,13 @@ mod tests {
     const GOLDEN_CLF_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000010303010302010402b93c9fe8";
     const GOLDEN_CLF_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b000000000000000900000000000000020201002c0103000400050006000000bc02ac7097d0";
     const GOLDEN_CLF_U32_SPARSE_HEX: &str = "524f54530300020002000000030000008877665544332211050000000000000007000000000000000403030103020104029a81c144";
+    // Structured hash families (flags bits 2-3 set; always v3). The
+    // sparse family's frames carry the density per-mille as a u16 right
+    // after the flags byte; Hadamard frames add no extra field. Cross-
+    // computed with python/tests/wire_mirror.py like every fixture here.
+    const GOLDEN_SPARSE_FAM_U32_SPARSE_HEX: &str = "524f54530300020002000000030000008877665544332211050000000000000007000000000000000405fa000301030201040282e7e877";
+    const GOLDEN_HADAMARD_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000010903010302010402c7adb999";
+    const GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b0000000000000009000000000000000206640001002c0103000400050006000000bc02f4740a9e";
 
     fn hex(bytes: &[u8]) -> String {
         bytes.iter().map(|b| format!("{b:02x}")).collect()
@@ -1025,6 +1118,167 @@ mod tests {
             decode_delta(&bytes).unwrap().cfg.task,
             Task::Classification
         );
+    }
+
+    /// The sparse-payload golden fixture under a structured hash family.
+    fn golden_family_delta(width: CounterWidth, family: HashFamily) -> SketchDelta {
+        let mut d = golden_sparse_delta_at(width);
+        d.cfg.hash_family = family;
+        d
+    }
+
+    #[test]
+    fn golden_structured_family_bytes_are_stable() {
+        // Sparse Rademacher family at u32: forced onto v3 (u32 regression
+        // would otherwise ship v2) with density 250 on the wire.
+        let sp =
+            golden_family_delta(CounterWidth::U32, HashFamily::Sparse { density_permille: 250 });
+        let bytes = encode_delta(&sp);
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 3);
+        assert_eq!(
+            hex(&bytes),
+            GOLDEN_SPARSE_FAM_U32_SPARSE_HEX,
+            "sparse-family wire encoding drifted — bump the wire version instead"
+        );
+        let back = decode_delta(&unhex(GOLDEN_SPARSE_FAM_U32_SPARSE_HEX)).unwrap();
+        assert_eq!(back, sp);
+        assert_eq!(back.cfg.hash_family, HashFamily::Sparse { density_permille: 250 });
+
+        // Hadamard family at u8: family code 2, no density field.
+        let had = golden_family_delta(CounterWidth::U8, HashFamily::Hadamard);
+        assert_eq!(
+            hex(&encode_delta(&had)),
+            GOLDEN_HADAMARD_U8_SPARSE_HEX,
+            "Hadamard-family wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_HADAMARD_U8_SPARSE_HEX)).unwrap(), had);
+
+        // Sparse family + classification + dense fallback at u16: every
+        // v3 tag at once (width byte, task bit, family bits, density).
+        let mut clf = golden_dense_delta_u16();
+        clf.cfg.task = Task::Classification;
+        clf.cfg.hash_family = HashFamily::Sparse { density_permille: 100 };
+        assert_eq!(
+            hex(&encode_delta(&clf)),
+            GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX,
+            "sparse-family classifier wire encoding drifted — bump the wire version instead"
+        );
+        let back = decode_delta(&unhex(GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX)).unwrap();
+        assert_eq!(back, clf);
+        assert_eq!(back.cfg.task, Task::Classification);
+        // The dense-fallback frame size includes the density field.
+        assert_eq!(encode_delta(&clf).len(), delta_wire_bytes(&clf.cfg));
+    }
+
+    #[test]
+    fn structured_family_deltas_roundtrip_from_live_sketches() {
+        // A from-empty delta carries the full structured sketch state:
+        // encode -> decode -> from_delta must rebuild a sketch whose
+        // estimates are bit-identical (same seed, same family, same
+        // counters). This is the wire path structured fleets use in
+        // place of the dense-only v1 full-sketch frame.
+        for family in [
+            HashFamily::Sparse { density_permille: 300 },
+            HashFamily::Hadamard,
+        ] {
+            let cfg = StormConfig {
+                rows: 20,
+                power: 4,
+                saturating: true,
+                hash_family: family,
+                ..Default::default()
+            };
+            let mut sk = StormSketch::new(cfg, 5, 77);
+            let snap = StormSketch::new(cfg, 5, 77).snapshot();
+            let mut rng = Xoshiro256::new(3);
+            for _ in 0..40 {
+                sk.insert(&gen_ball_point(&mut rng, 5, 0.9));
+            }
+            let delta = sk.delta_since(&snap, 4);
+            let bytes = encode_delta(&delta);
+            assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 3, "{family}");
+            let back = decode_delta(&bytes).unwrap();
+            assert_eq!(back, delta, "{family}");
+            assert_eq!(back.cfg.hash_family, family);
+            let rebuilt = decode(&bytes).unwrap();
+            assert_eq!(rebuilt.grid().counts_u32(), sk.grid().counts_u32(), "{family}");
+            let q = gen_ball_point(&mut rng, 5, 0.8);
+            assert_eq!(rebuilt.estimate_risk(&q), sk.estimate_risk(&q), "{family}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "hash-family tag")]
+    fn v1_encode_of_a_structured_sketch_panics() {
+        let cfg = StormConfig {
+            rows: 4,
+            power: 2,
+            saturating: true,
+            hash_family: HashFamily::Hadamard,
+            ..Default::default()
+        };
+        let sk = StormSketch::new(cfg, 3, 1);
+        let _ = encode(&sk);
+    }
+
+    #[test]
+    fn family_bits_on_pre_family_versions_rejected() {
+        // A v2 frame whose flags byte smuggles family bits is a lying
+        // frame even with a valid checksum: only v3 carries the tag.
+        let base = encode_delta(&sparse_delta());
+        assert_eq!(u16::from_le_bytes(base[4..6].try_into().unwrap()), 2);
+        for code in [1u8, 2] {
+            let mut bytes = base.clone();
+            bytes[HEADER + 8] |= code << 2;
+            refix_crc(&mut bytes);
+            assert!(
+                matches!(
+                    decode_delta(&bytes),
+                    Err(WireError::BadPayload("hash-family bits require the v3 wire"))
+                ),
+                "family code {code} accepted on v2"
+            );
+        }
+    }
+
+    #[test]
+    fn reserved_family_code_rejected() {
+        // Family code 3 is unassigned: reject, don't guess.
+        let mut bytes = encode_delta(&narrow_delta(CounterWidth::U8, 3));
+        bytes[HEADER + 9] |= 3 << 2;
+        refix_crc(&mut bytes);
+        assert!(matches!(
+            decode_delta(&bytes),
+            Err(WireError::BadPayload("unknown hash-family code"))
+        ));
+    }
+
+    #[test]
+    fn out_of_range_sparse_family_density_rejected() {
+        // Density 0 and > 1000 per-mille are meaningless (validate.rs
+        // enforces (0, 1] at config load); the decoder holds the same
+        // line against hand-crafted frames.
+        let good =
+            golden_family_delta(CounterWidth::U32, HashFamily::Sparse { density_permille: 250 });
+        let base = encode_delta(&good);
+        for bad in [0u16, 1001, u16::MAX] {
+            let mut bytes = base.clone();
+            bytes[HEADER_V3..HEADER_V3 + 2].copy_from_slice(&bad.to_le_bytes());
+            refix_crc(&mut bytes);
+            assert!(
+                matches!(
+                    decode_delta(&bytes),
+                    Err(WireError::BadPayload("sparse-family density out of range"))
+                ),
+                "density {bad} accepted"
+            );
+        }
+        // A sparse-family frame cut off inside the density field is
+        // truncation, not a panic.
+        let mut short = base[..HEADER_V3 + 1].to_vec();
+        short.extend_from_slice(&[0u8; 4]);
+        refix_crc(&mut short);
+        assert!(decode_delta(&short).is_err());
     }
 
     #[test]

@@ -17,10 +17,37 @@
 //! Theorem 3 up to the `2^p` constant.
 
 use super::counters::{CounterCell, CounterGrid, CounterStore};
-use crate::config::{StormConfig, Task};
+use crate::config::{HashFamily, StormConfig, Task};
 use crate::lsh::bank::HashBank;
 use crate::lsh::prp::PairedRandomProjection;
 use crate::util::mathx::norm2;
+
+/// Per-row seed stream for the regression PRP rows (and every structured
+/// family riding the same stream): row `r` of a sketch seeded `s` draws
+/// from `s * GOLDEN + r`.
+const REGRESSION_ROW_SEED_MULT: u64 = 0x9E3779B97F4A7C15;
+
+/// Per-row seed stream multiplier for the classifier's single-arm rows.
+const CLASSIFIER_ROW_SEED_MULT: u64 = 0x51afd6ed558ccd65;
+
+/// The per-row seeds a sketch's hash rows draw from.
+fn row_seeds(seed: u64, mult: u64, rows: usize) -> Vec<u64> {
+    (0..rows as u64).map(|r| seed.wrapping_mul(mult).wrapping_add(r)).collect()
+}
+
+/// Build the family-dispatched bank for a sketch. Dense banks are
+/// derived from the per-row hashes elsewhere (so the scalar oracle and
+/// AOT paths keep their exact planes); this constructor serves the
+/// structured families, which exist *only* in bank form.
+fn structured_bank(family: HashFamily, dim: usize, p: u32, seeds: &[u64]) -> HashBank {
+    match family {
+        HashFamily::Dense => unreachable!("dense banks are built from per-row hashes"),
+        HashFamily::Sparse { density_permille } => {
+            HashBank::sparse_from_seeds(dim, p, seeds, density_permille)
+        }
+        HashFamily::Hadamard => HashBank::hadamard_from_seeds(dim, p, seeds),
+    }
+}
 
 /// Scale relating raw normalized counts to the paper's surrogate loss `g`:
 /// `E[query] = SCALE * mean_i g(theta~, z_i)`.
@@ -30,12 +57,18 @@ pub const SCALE: f64 = 2.0;
 pub struct StormSketch {
     cfg: StormConfig,
     grid: CounterGrid,
+    /// Per-row scalar hashes. Dense family only — structured families
+    /// exist purely in bank form, so this is empty for them.
     hashes: Vec<PairedRandomProjection>,
-    /// Fused projection bank over the same hyperplanes (batch hot path).
+    /// Fused projection bank (batch hot path; for dense, the exact same
+    /// hyperplanes as `hashes`).
     bank: HashBank,
     count: u64,
     dim: usize,
     seed: u64,
+    /// Per-example MIPS tails scratch for batch inserts (reused across
+    /// batches — zero steady-state allocation).
+    batch_tails: Vec<f64>,
 }
 
 impl StormSketch {
@@ -45,17 +78,24 @@ impl StormSketch {
         // The concrete type IS the task: normalize so deltas and wire
         // frames from this sketch always carry the regression tag.
         cfg.task = Task::Regression;
-        let hashes: Vec<PairedRandomProjection> = (0..cfg.rows)
-            .map(|r| {
-                PairedRandomProjection::new(
-                    dim,
-                    cfg.power,
-                    seed.wrapping_mul(0x9E3779B97F4A7C15)
-                        .wrapping_add(r as u64),
-                )
-            })
-            .collect();
-        let bank = HashBank::from_rows(&hashes);
+        let hashes: Vec<PairedRandomProjection> = match cfg.hash_family {
+            HashFamily::Dense => (0..cfg.rows)
+                .map(|r| {
+                    PairedRandomProjection::new(
+                        dim,
+                        cfg.power,
+                        seed.wrapping_mul(REGRESSION_ROW_SEED_MULT).wrapping_add(r as u64),
+                    )
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        let bank = if cfg.hash_family == HashFamily::Dense {
+            HashBank::from_rows(&hashes)
+        } else {
+            let seeds = row_seeds(seed, REGRESSION_ROW_SEED_MULT, cfg.rows);
+            structured_bank(cfg.hash_family, dim, cfg.power, &seeds)
+        };
         StormSketch {
             grid: CounterGrid::with_width(
                 cfg.rows,
@@ -69,6 +109,7 @@ impl StormSketch {
             dim,
             cfg,
             seed,
+            batch_tails: Vec::new(),
         }
     }
 
@@ -117,13 +158,15 @@ impl StormSketch {
         &self.grid
     }
 
-    /// Per-row hash functions (AOT compile path reads the hyperplanes).
+    /// Per-row hash functions (AOT compile path reads the hyperplanes;
+    /// the equivalence proptests use them as the scalar oracle). Empty
+    /// for structured hash families, which exist only in bank form.
     pub fn hashes(&self) -> &[PairedRandomProjection] {
         &self.hashes
     }
 
-    /// The fused projection bank (same hyperplanes as [`Self::hashes`],
-    /// concatenated into one contiguous matrix).
+    /// The fused projection bank (for dense, the same hyperplanes as
+    /// [`Self::hashes`], concatenated into one contiguous matrix).
     pub fn bank(&self) -> &HashBank {
         &self.bank
     }
@@ -152,8 +195,12 @@ impl StormSketch {
             assert_eq!(z.len(), self.dim, "insert dim mismatch");
         }
         // The MIPS tail is shared by both arms and by every row: compute
-        // it once per example for the whole batch.
-        let tails: Vec<f64> = batch.iter().map(|z| HashBank::mips_tail(z)).collect();
+        // it once per example for the whole batch, into a scratch buffer
+        // reused across batches (taken out of `self` so the grid can be
+        // borrowed mutably below).
+        let mut tails = std::mem::take(&mut self.batch_tails);
+        tails.clear();
+        tails.extend(batch.iter().map(|z| HashBank::mips_tail(z)));
         let rows = self.cfg.rows;
         let buckets = self.cfg.buckets();
         let saturating = self.cfg.saturating;
@@ -173,6 +220,7 @@ impl StormSketch {
                 insert_batch_native(bank, rows, buckets, saturating, threads, batch, &tails, d)
             }
         }
+        self.batch_tails = tails;
         self.count += batch.len() as u64;
     }
 
@@ -207,18 +255,10 @@ impl StormSketch {
     }
 
     /// Single fused risk readout for a query already inside the unit
-    /// ball: one bank pass, no augmented-vector allocation. Matches
-    /// `estimate_risk` bit-for-bit.
+    /// ball. [`Self::query`] itself is the fused bank pass now, so this
+    /// is just the SCALE-normalized readout.
     fn fused_estimate(&self, q: &[f64]) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let tail = HashBank::mips_tail(q);
-        let mut acc = 0.0;
-        for r in 0..self.cfg.rows {
-            acc += self.grid.get(r, self.bank.query_bucket(r, q, tail)) as f64;
-        }
-        acc / (self.cfg.rows as f64 * self.count as f64) / SCALE
+        self.query(q) / SCALE
     }
 
     /// Bulk-add a `[R, B]` histogram delta produced by the XLA insert
@@ -328,10 +368,22 @@ impl StormSketch {
     /// Ingest one augmented example `z = [x, y]`.
     pub fn insert(&mut self, z: &[f64]) {
         assert_eq!(z.len(), self.dim, "insert dim mismatch");
-        // Hot path: augment both PRP arms ONCE — the augmentation (norm +
-        // sqrt + allocation) is identical for every row, so hoisting it
-        // out of the row loop is a ~3x insert-throughput win (see
-        // EXPERIMENTS.md §Perf).
+        if self.hashes.is_empty() {
+            // Structured families exist only in bank form.
+            let tail = HashBank::mips_tail(z);
+            for r in 0..self.cfg.rows {
+                let (bp, bn) = self.bank.data_pair(r, z, tail);
+                self.grid.increment(r, bp);
+                self.grid.increment(r, bn);
+            }
+            self.count += 1;
+            return;
+        }
+        // Dense scalar path, kept as the oracle the fused bank kernels
+        // are property-tested against. Hot path: augment both PRP arms
+        // ONCE — the augmentation (norm + sqrt + allocation) is identical
+        // for every row, so hoisting it out of the row loop is a ~3x
+        // insert-throughput win (see EXPERIMENTS.md §Perf).
         let aug_pos = crate::lsh::asym::augment(z, crate::lsh::asym::Side::Data);
         let neg: Vec<f64> = z.iter().map(|v| -v).collect();
         let aug_neg = crate::lsh::asym::augment(&neg, crate::lsh::asym::Side::Data);
@@ -349,9 +401,35 @@ impl StormSketch {
         self.count
     }
 
-    /// Raw normalized count estimate: `(1/n) * mean_r count[r, l_r(q)]`.
+    /// Raw normalized count estimate: `(1/n) * mean_r count[r, l_r(q)]`,
+    /// via one fused bank pass — no augmented-vector allocation. Matches
+    /// [`Self::query_scalar`] bit-for-bit on the dense family
+    /// (property-tested: the bank kernels are bit-identical to the scalar
+    /// hashes and the row accumulation order is unchanged).
     pub fn query(&self, q: &[f64]) -> f64 {
         assert_eq!(q.len(), self.dim, "query dim mismatch");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let tail = HashBank::mips_tail(q);
+        let mut acc = 0.0;
+        for r in 0..self.cfg.rows {
+            acc += self.grid.get(r, self.bank.query_bucket(r, q, tail)) as f64;
+        }
+        acc / (self.cfg.rows as f64 * self.count as f64)
+    }
+
+    /// Scalar-oracle version of [`Self::query`]: per-row augmented
+    /// hashing through [`Self::hashes`], kept verbatim from the seed
+    /// path for the equivalence proptests. Dense family only (structured
+    /// families have no per-row scalar hashes).
+    pub fn query_scalar(&self, q: &[f64]) -> f64 {
+        assert_eq!(q.len(), self.dim, "query dim mismatch");
+        assert!(
+            !self.hashes.is_empty(),
+            "query_scalar is the dense-family oracle (family is {})",
+            self.bank.family()
+        );
         if self.count == 0 {
             return 0.0;
         }
@@ -417,16 +495,24 @@ impl StormClassifierSketch {
         // The concrete type IS the task: normalize so deltas and wire
         // frames from this sketch always carry the classification tag.
         cfg.task = Task::Classification;
-        let hashes: Vec<crate::lsh::asym::AsymmetricInnerProductHash> = (0..cfg.rows)
-            .map(|r| {
-                crate::lsh::asym::AsymmetricInnerProductHash::new(
-                    dim,
-                    cfg.power,
-                    seed.wrapping_mul(0x51afd6ed558ccd65).wrapping_add(r as u64),
-                )
-            })
-            .collect();
-        let bank = HashBank::from_asym_rows(&hashes);
+        let hashes: Vec<crate::lsh::asym::AsymmetricInnerProductHash> = match cfg.hash_family {
+            HashFamily::Dense => (0..cfg.rows)
+                .map(|r| {
+                    crate::lsh::asym::AsymmetricInnerProductHash::new(
+                        dim,
+                        cfg.power,
+                        seed.wrapping_mul(CLASSIFIER_ROW_SEED_MULT).wrapping_add(r as u64),
+                    )
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        let bank = if cfg.hash_family == HashFamily::Dense {
+            HashBank::from_asym_rows(&hashes)
+        } else {
+            let seeds = row_seeds(seed, CLASSIFIER_ROW_SEED_MULT, cfg.rows);
+            structured_bank(cfg.hash_family, dim, cfg.power, &seeds)
+        };
         StormClassifierSketch {
             grid: CounterGrid::with_width(
                 cfg.rows,
@@ -597,7 +683,9 @@ impl StormClassifierSketch {
         &self.grid
     }
 
-    /// Per-row hash functions (tests verify the fused bank against them).
+    /// Per-row hash functions (tests verify the fused bank against
+    /// them). Empty for structured hash families, which exist only in
+    /// bank form.
     pub fn hashes(&self) -> &[crate::lsh::asym::AsymmetricInnerProductHash] {
         &self.hashes
     }
@@ -1056,6 +1144,109 @@ mod tests {
         let mut a = StormClassifierSketch::new(cfg, 3, 1);
         let b = StormClassifierSketch::new(cfg, 3, 2);
         a.merge_from(&b);
+    }
+
+    #[test]
+    fn query_matches_scalar_oracle_bitwise() {
+        // The production query is one fused (possibly SIMD) bank pass;
+        // the per-row augmented scalar path stays behind as the oracle.
+        let cfg = StormConfig { rows: 40, power: 4, saturating: true, ..Default::default() };
+        let mut rng = Xoshiro256::new(41);
+        let mut sk = StormSketch::new(cfg, 4, 9);
+        for _ in 0..150 {
+            sk.insert(&gen_ball_point(&mut rng, 4, 0.9));
+        }
+        for _ in 0..20 {
+            let q = gen_ball_point(&mut rng, 4, 0.9);
+            assert_eq!(sk.query(&q), sk.query_scalar(&q));
+        }
+    }
+
+    #[test]
+    fn structured_families_run_the_full_regression_pipeline() {
+        use crate::config::HashFamily;
+        for family in [HashFamily::Sparse { density_permille: 300 }, HashFamily::Hadamard] {
+            let cfg = StormConfig {
+                rows: 25,
+                power: 3,
+                saturating: true,
+                hash_family: family,
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256::new(43);
+            let data: Vec<Vec<f64>> = (0..60).map(|_| gen_ball_point(&mut rng, 5, 0.9)).collect();
+            let mut seq = StormSketch::new(cfg, 5, 7);
+            for z in &data {
+                seq.insert(z);
+            }
+            assert!(seq.hashes().is_empty(), "structured families exist only in bank form");
+            let mut batched = StormSketch::new(cfg, 5, 7);
+            batched.insert_batch(&data);
+            assert_eq!(seq.grid().counts_u32(), batched.grid().counts_u32(), "{family}");
+            for r in 0..25 {
+                let row_total: u64 = seq.grid().row(r).iter().map(|&c| c as u64).sum();
+                assert_eq!(row_total, 120, "two increments per row per insert");
+            }
+            let q = gen_ball_point(&mut rng, 5, 0.8);
+            let est = seq.query(&q);
+            assert!(est.is_finite() && (0.0..=2.0).contains(&est), "{family}: est={est}");
+            assert_eq!(seq.query(&q), batched.query(&q));
+            let mut merged = StormSketch::new(cfg, 5, 7);
+            merged.merge_from(&seq);
+            assert_eq!(merged.count(), 60);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "config mismatch")]
+    fn merge_across_hash_families_panics() {
+        use crate::config::HashFamily;
+        let mut a = StormSketch::new(StormConfig::default(), 3, 1);
+        let b = StormSketch::new(
+            StormConfig {
+                hash_family: HashFamily::Sparse { density_permille: 100 },
+                ..Default::default()
+            },
+            3,
+            1,
+        );
+        a.merge_from(&b);
+    }
+
+    #[test]
+    fn structured_classifier_insert_paths_agree() {
+        use crate::config::HashFamily;
+        for family in [HashFamily::Sparse { density_permille: 300 }, HashFamily::Hadamard] {
+            let cfg = StormConfig {
+                rows: 19,
+                power: 3,
+                saturating: true,
+                hash_family: family,
+                ..Default::default()
+            };
+            let mut rng = Xoshiro256::new(44);
+            let data = gen_labelled(&mut rng, 50, 4);
+            let mut scalar = StormClassifierSketch::new(cfg, 4, 5);
+            for (x, y) in &data {
+                scalar.insert_labelled(x, *y);
+            }
+            assert!(scalar.hashes().is_empty());
+            let batch: Vec<Vec<f64>> = data
+                .iter()
+                .map(|(x, y)| {
+                    let mut z = x.clone();
+                    z.push(*y);
+                    z
+                })
+                .collect();
+            let mut fused = StormClassifierSketch::new(cfg, 4, 5);
+            fused.insert_batch(&batch);
+            assert_eq!(scalar.grid().counts_u32(), fused.grid().counts_u32(), "{family}");
+            let theta = gen_ball_point(&mut rng, 4, 0.7);
+            let est = scalar.estimate_risk(&theta);
+            assert!(est.is_finite() && est >= 0.0);
+            assert_eq!(est, fused.estimate_risk(&theta));
+        }
     }
 
     #[test]

@@ -134,6 +134,22 @@ pub fn test_task() -> crate::config::Task {
     }
 }
 
+/// Hyperplane family the family-generic invariant sweeps should build
+/// sketches at: `STORM_TEST_HASH_FAMILY=dense|sparse|hadamard` (default
+/// `dense`, the seed behaviour — sparse runs at the default density). The
+/// CI matrix runs the suite once at `sparse` so the structured-projection
+/// path rides every fleet/merge/wire invariant. Malformed values panic
+/// loudly — a typo'd knob silently running the default would defeat that
+/// CI leg.
+pub fn test_hash_family() -> crate::config::HashFamily {
+    match std::env::var("STORM_TEST_HASH_FAMILY") {
+        Err(_) => crate::config::HashFamily::Dense,
+        Ok(v) => crate::config::HashFamily::parse(&v).unwrap_or_else(|| {
+            panic!("STORM_TEST_HASH_FAMILY must be dense|sparse|hadamard, got {v:?}")
+        }),
+    }
+}
+
 /// Uniform f64 vector with entries in `[lo, hi)`.
 pub fn gen_vec(rng: &mut Xoshiro256, len: usize, lo: f64, hi: f64) -> Vec<f64> {
     (0..len).map(|_| rng.uniform_range(lo, hi)).collect()

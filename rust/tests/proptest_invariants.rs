@@ -8,7 +8,7 @@
 //! `STORM_TEST_REPLAY=<seed>:<case>` re-runs exactly one failing case
 //! with its exact RNG stream — the value is printed by any failure.
 
-use storm::config::{CounterWidth, FleetConfig, StormConfig, Task};
+use storm::config::{CounterWidth, FleetConfig, HashFamily, StormConfig, Task};
 use storm::data::stream::partition_streams;
 use storm::edge::faults::FaultPlan;
 use storm::edge::fleet::{run_fleet_model, run_fleet_model_chaos};
@@ -17,11 +17,15 @@ use storm::lsh::asym::{augment, Side};
 use storm::lsh::prp::PairedRandomProjection;
 use storm::lsh::srp::SignedRandomProjection;
 use storm::lsh::LshFunction;
-use storm::sketch::serialize::{decode, decode_delta, encode, encode_delta, encode_delta_v3, wire_bytes};
 use storm::sketch::model::StormModel;
+use storm::sketch::serialize::{
+    decode, decode_delta, encode, encode_delta, encode_delta_v3, wire_bytes,
+};
 use storm::sketch::storm::{StormClassifierSketch, StormSketch};
 use storm::sketch::RiskSketch;
-use storm::testing::{assert_close, cases, gen_ball_point, gen_dim, test_counter_width, test_task};
+use storm::testing::{
+    assert_close, cases, gen_ball_point, gen_dim, test_counter_width, test_hash_family, test_task,
+};
 use storm::util::mathx::{dot, norm2};
 use storm::util::rng::Rng;
 
@@ -334,6 +338,7 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             saturating: true,
             counter_width: test_counter_width(),
             task,
+            hash_family: test_hash_family(),
         };
         let ds = task_ds(n_examples, case as u64, task);
         let family_seed = 0xF1EE7 ^ case as u64;
@@ -398,6 +403,7 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             saturating: true,
             counter_width: test_counter_width(),
             task,
+            hash_family: test_hash_family(),
         };
         let ds = task_ds(n_examples, case as u64 ^ 0xFA, task);
         let family_seed = 0xFA17 ^ case as u64;
@@ -479,6 +485,7 @@ fn prop_widening_merge_exact_without_saturation() {
             saturating: true,
             counter_width: CounterWidth::U32,
             task,
+            hash_family: test_hash_family(),
         };
         let ds = task_ds(n_examples, case as u64 ^ 0x71D7, task);
         let family_seed = 0x71D7 ^ case as u64;
@@ -632,6 +639,7 @@ fn prop_classifier_merge_equals_concatenation_all_widths_and_topologies() {
             saturating: true,
             counter_width: width,
             task: Task::Classification,
+            hash_family: test_hash_family(),
         };
         let ds = task_ds(n_examples, case as u64 ^ 0xC1F, Task::Classification);
         let family_seed = 0xC1F0 ^ case as u64;
@@ -694,14 +702,18 @@ fn prop_classifier_delta_wire_roundtrip_any_config() {
     // replica fed only the decoded delta reproduces the live classifier.
     cases(40, 122, |rng, case| {
         let widths = [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32];
+        let d = gen_dim(rng, 1, 8);
+        // The Hadamard family needs p <= next_pow2(d + 2); clamping keeps
+        // this sweep valid under STORM_TEST_HASH_FAMILY=hadamard.
+        let max_p = (d + 2).next_power_of_two() as u32;
         let cfg = StormConfig {
             rows: 1 + (case % 20),
-            power: 1 + (case % 5) as u32,
+            power: (1 + (case % 5) as u32).min(max_p),
             saturating: true,
             counter_width: widths[case % widths.len()],
             task: Task::Classification,
+            hash_family: test_hash_family(),
         };
-        let d = gen_dim(rng, 1, 8);
         let seed = case as u64 ^ 0xC1FD;
         let mut sk = StormClassifierSketch::new(cfg, d, seed);
         let head = (rng.next_u64() % 20) as usize;
@@ -725,6 +737,105 @@ fn prop_classifier_delta_wire_roundtrip_any_config() {
         replica.apply_delta(&back);
         assert_eq!(replica.grid().counts_u32(), sk.grid().counts_u32());
         assert_eq!(replica.count(), sk.count());
+    });
+}
+
+#[test]
+fn prop_structured_family_delta_wire_roundtrip() {
+    // Structured-family deltas ship as v3 frames carrying the family (and
+    // the sparse family's density per-mille) on the wire. For any
+    // geometry, width and density: round-trip is exact, the decoded
+    // config names the family, and a replica fed only the decoded delta
+    // reproduces the live structured sketch bit-for-bit.
+    cases(30, 123, |rng, case| {
+        let family = if case % 2 == 0 {
+            HashFamily::Sparse { density_permille: 1 + (case as u16 % 1000) }
+        } else {
+            HashFamily::Hadamard
+        };
+        let dim = gen_dim(rng, 1, 10);
+        // Hadamard selects p distinct coordinates of the padded
+        // transform: p <= next_pow2(dim + 2).
+        let max_p = (dim + 2).next_power_of_two() as u32;
+        let cfg = StormConfig {
+            rows: 1 + (case % 16),
+            power: (1 + (case % 6) as u32).min(max_p),
+            saturating: true,
+            counter_width: test_counter_width(),
+            hash_family: family,
+            ..Default::default()
+        };
+        let seed = case as u64 ^ 0xFA417;
+        let mut sk = StormSketch::new(cfg, dim, seed);
+        let head = (rng.next_u64() % 20) as usize;
+        for _ in 0..head {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let snap = sk.snapshot();
+        let mut replica = StormSketch::new(cfg, dim, seed);
+        replica.merge_from(&sk);
+        let tail = (rng.next_u64() % 30) as usize;
+        for _ in 0..tail {
+            sk.insert(&gen_ball_point(rng, dim, 0.9));
+        }
+        let delta = sk.delta_since(&snap, case as u64);
+        let bytes = encode_delta(&delta);
+        assert_eq!(
+            u16::from_le_bytes(bytes[4..6].try_into().unwrap()),
+            3,
+            "structured families always ship v3 ({family})"
+        );
+        let back = decode_delta(&bytes).unwrap();
+        assert_eq!(back, delta, "{family}");
+        assert_eq!(back.cfg.hash_family, family);
+        replica.apply_delta(&back);
+        assert_eq!(replica.grid().counts_u32(), sk.grid().counts_u32(), "{family}");
+        assert_eq!(replica.count(), sk.count());
+    });
+}
+
+#[test]
+fn prop_hash_family_is_a_merge_barrier_on_the_wire() {
+    // Deltas from every pair of DISTINCT families decode as
+    // merge-incompatible — the family tag survives the wire and gates
+    // apply_delta (the panic itself is unit-tested in sketch::delta).
+    cases(20, 124, |rng, case| {
+        let families = [
+            HashFamily::Dense,
+            HashFamily::Sparse { density_permille: 1 + (case as u16 % 1000) },
+            HashFamily::Hadamard,
+        ];
+        let dim = gen_dim(rng, 1, 8);
+        let max_p = (dim + 2).next_power_of_two() as u32;
+        let base = StormConfig {
+            rows: 1 + (case % 10),
+            power: (1 + (case % 4) as u32).min(max_p),
+            saturating: true,
+            counter_width: test_counter_width(),
+            ..Default::default()
+        };
+        let seed = case as u64;
+        let mut decoded = Vec::new();
+        for &family in &families {
+            let cfg = StormConfig { hash_family: family, ..base };
+            let mut sk = StormSketch::new(cfg, dim, seed);
+            let snap = sk.snapshot();
+            for _ in 0..(1 + rng.next_u64() % 10) {
+                sk.insert(&gen_ball_point(rng, dim, 0.9));
+            }
+            decoded.push(decode_delta(&encode_delta(&sk.delta_since(&snap, 1))).unwrap());
+        }
+        for (i, a) in decoded.iter().enumerate() {
+            for (j, b) in decoded.iter().enumerate() {
+                assert_eq!(
+                    a.cfg.merge_compatible(&b.cfg),
+                    i == j,
+                    "families {} vs {}",
+                    a.cfg.hash_family,
+                    b.cfg.hash_family
+                );
+            }
+        }
     });
 }
 
