@@ -60,6 +60,9 @@ fn main() {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: None,
+            // Worker-pool executor: 0 = one worker per hardware core.
+            workers: 0,
+            fan_in: 2,
             seed: 17,
         },
         artifacts_dir: Some("artifacts".to_string()),

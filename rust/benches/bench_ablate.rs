@@ -2,9 +2,16 @@
 //! iterate selection, scaling, hash power) — see experiments::ablate.
 
 use storm::experiments::{ablate, Effort};
-use storm::util::bench::section;
+use storm::util::bench::{section, JsonReporter};
 
 fn main() {
     section("ablate: design choices (variant ids in experiments::ablate)");
     ablate::run(Effort::from_env(), 0).print();
+
+    let mut json = JsonReporter::new("ablate");
+    json.record_peak_rss();
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_ablate.json: {e}"),
+    }
 }

@@ -3,9 +3,10 @@
 
 use storm::experiments::fig3;
 use storm::loss::prp_loss::prp_surrogate;
-use storm::util::bench::{bench_items, black_box, config_from_env, section};
+use storm::util::bench::{bench_items, black_box, config_from_env, section, JsonReporter};
 
 fn main() {
+    let mut json = JsonReporter::new("fig3");
     section("fig3a: surrogate loss vs t (closed form + sketch overlay)");
     fig3::run_fig3a(0).print();
 
@@ -16,10 +17,16 @@ fn main() {
     let cfg = config_from_env();
     let ts: Vec<f64> = (0..1000).map(|i| -0.99 + 1.98 * i as f64 / 999.0).collect();
     for p in [2u32, 4, 16] {
-        bench_items(&format!("prp_surrogate_1k_p{p}"), cfg, ts.len() as u64, || {
+        json.record(bench_items(&format!("prp_surrogate_1k_p{p}"), cfg, ts.len() as u64, || {
             for &t in &ts {
                 black_box(prp_surrogate(t, p));
             }
-        });
+        }));
+    }
+
+    json.record_peak_rss();
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig3.json: {e}"),
     }
 }

@@ -4,7 +4,7 @@
 //! for the paper protocol (10 runs per point).
 
 use storm::experiments::{fig4, Effort};
-use storm::util::bench::section;
+use storm::util::bench::{section, JsonReporter};
 use storm::util::timer::Timer;
 
 fn main() {
@@ -16,4 +16,12 @@ fn main() {
         println!();
     }
     println!("# fig4 total wall: {:.1}s", t.elapsed_secs());
+
+    let mut json = JsonReporter::new("fig4");
+    json.record_scalar("fig4_wall_secs", t.elapsed_secs());
+    json.record_peak_rss();
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig4.json: {e}"),
+    }
 }

@@ -3,7 +3,7 @@
 //! iterations — the paper's settings).
 
 use storm::experiments::{fig5, Effort};
-use storm::util::bench::section;
+use storm::util::bench::{section, JsonReporter};
 
 fn main() {
     let effort = Effort::from_env();
@@ -11,5 +11,12 @@ fn main() {
     for table in fig5::run(effort, 0) {
         table.print();
         println!();
+    }
+
+    let mut json = JsonReporter::new("fig5");
+    json.record_peak_rss();
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig5.json: {e}"),
     }
 }

@@ -1,9 +1,16 @@
 //! Figure 6 regeneration: STORM's margin loss vs classical losses.
 
 use storm::experiments::fig6;
-use storm::util::bench::section;
+use storm::util::bench::{section, JsonReporter};
 
 fn main() {
     section("fig6: classification losses");
     fig6::run().print();
+
+    let mut json = JsonReporter::new("fig6");
+    json.record_peak_rss();
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_fig6.json: {e}"),
+    }
 }

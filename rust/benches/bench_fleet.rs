@@ -6,15 +6,15 @@
 //! `storm::util::bench::JsonReporter`; EXPERIMENTS.md §Communication vs.
 //! rounds reads it).
 
-use storm::config::{FleetConfig, StormConfig};
+use storm::config::{CounterWidth, FleetConfig, StormConfig};
 use storm::data::scale::scale_to_unit_ball;
-use storm::data::stream::partition_streams;
+use storm::data::stream::{partition_streams, Example, StreamSource};
 use storm::data::synthetic;
 use storm::edge::faults::FaultPlan;
 use storm::edge::fleet::{run_fleet, run_fleet_chaos};
 use storm::edge::topology::Topology;
 use storm::experiments::{merge, Effort};
-use storm::util::bench::{bench_items, config_from_env, section, JsonReporter};
+use storm::util::bench::{bench_items, config_from_env, peak_rss_bytes, section, JsonReporter};
 
 fn fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
     FleetConfig {
@@ -27,7 +27,53 @@ fn fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
         min_quorum: 0,
         faults_seed: None,
         device_counter_width: None,
+        workers: 0,
+        fan_in: 2,
         seed: 0,
+    }
+}
+
+/// Cheap procedural per-device stream for the scale sweep: a handful of
+/// examples drawn from a splitmix64 generator, so a million devices cost
+/// a few machine words of stream state each instead of a million dataset
+/// shards.
+struct SynthStream {
+    left: usize,
+    state: u64,
+    dim: usize,
+}
+
+impl SynthStream {
+    fn new(device: u64, dim: usize, n: usize) -> SynthStream {
+        SynthStream {
+            left: n,
+            state: device.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xD1B5_4A32_D192_ED03),
+            dim,
+        }
+    }
+
+    /// splitmix64 step mapped to [-0.5, 0.5).
+    fn next_f64(&mut self) -> f64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+    }
+}
+
+impl StreamSource for SynthStream {
+    fn next_example(&mut self) -> Option<Example> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        Some((0..self.dim).map(|_| self.next_f64()).collect())
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        Some(self.left)
     }
 }
 
@@ -158,9 +204,45 @@ fn main() {
         );
     }
 
+    section("fleet: scale sweep (worker-pool executor, arena device state)");
+    // The EXPERIMENTS.md §Scale sweep table reads these scalars. Each
+    // tier is one deterministic run of the pooled executor — u8 device
+    // counters, 4 examples/device, 2 sync rounds — on a star and on a
+    // fan-in-capped deep tree. The 100k and 1M tiers are skipped under
+    // STORM_BENCH_FAST (CI runs the 10k tier only).
+    let fast = std::env::var("STORM_BENCH_FAST").is_ok();
+    let tiers: &[usize] = if fast { &[10_000] } else { &[10_000, 100_000, 1_000_000] };
+    let scale_storm = StormConfig { rows: 8, power: 3, saturating: true, ..Default::default() };
+    let (dim, per_device, rounds) = (4usize, 4usize, 2usize);
+    for &devices in tiers {
+        for (tname, topo) in
+            [("star", Topology::Star), ("deep16", Topology::Deep { max_fan_in: 16 })]
+        {
+            let mut scfg = fleet_cfg(devices, rounds);
+            scfg.batch = 4;
+            scfg.device_counter_width = Some(CounterWidth::U8);
+            let streams: Vec<Box<dyn StreamSource>> = (0..devices)
+                .map(|d| {
+                    Box::new(SynthStream::new(d as u64, dim, per_device)) as Box<dyn StreamSource>
+                })
+                .collect();
+            let r = run_fleet(scfg, scale_storm, topo, dim, 11, streams);
+            assert_eq!(r.examples, (per_device * devices) as u64);
+            assert_eq!(r.rounds.len(), rounds);
+            let label = format!("fleet_scale_{tname}_{devices}dev");
+            json.record_scalar(&format!("{label}_rounds_per_sec"), rounds as f64 / r.wall_secs);
+            json.record_scalar(
+                &format!("{label}_bytes_per_round"),
+                r.network.bytes as f64 / rounds as f64,
+            );
+            json.record_scalar(&format!("{label}_peak_rss_bytes"), peak_rss_bytes() as f64);
+        }
+    }
+
     section("merge experiment table");
     merge::run(Effort::from_env(), 5).print();
 
+    json.record_peak_rss();
     match json.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write BENCH_fleet.json: {e}"),

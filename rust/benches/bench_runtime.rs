@@ -7,7 +7,7 @@ use storm::coordinator::oracle::XlaRiskOracle;
 use storm::runtime::XlaStorm;
 use storm::sketch::storm::StormSketch;
 use storm::testing::gen_ball_point;
-use storm::util::bench::{bench_items, black_box, config_from_env, section};
+use storm::util::bench::{bench_items, black_box, config_from_env, section, JsonReporter};
 use storm::util::rng::Xoshiro256;
 
 fn main() {
@@ -17,6 +17,7 @@ fn main() {
         return;
     }
     let cfg = config_from_env();
+    let mut json = JsonReporter::new("runtime");
     // synth2d artifact config: D = 3, R = 100, p = 4.
     let scfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
     let mut sk = StormSketch::new(scfg, 3, 7);
@@ -29,16 +30,16 @@ fn main() {
 
     section("insert: scalar rust vs XLA batched (batch=256)");
     let mut scratch = StormSketch::new(scfg, 3, 7);
-    bench_items("insert_rust_scalar_4096", cfg, data.len() as u64, || {
+    json.record(bench_items("insert_rust_scalar_4096", cfg, data.len() as u64, || {
         for z in &data {
             scratch.insert(z);
         }
-    });
-    bench_items("insert_xla_batched_4096", cfg, data.len() as u64, || {
+    }));
+    json.record(bench_items("insert_xla_batched_4096", cfg, data.len() as u64, || {
         for chunk in data.chunks(exe.batch_size()) {
             black_box(exe.insert_counts(chunk).unwrap());
         }
-    });
+    }));
 
     section("query: scalar rust vs XLA batched (16 probes)");
     let queries: Vec<Vec<f64>> = (0..16)
@@ -48,22 +49,28 @@ fn main() {
             q
         })
         .collect();
-    bench_items("query_rust_scalar_x16", cfg, 16, || {
+    json.record(bench_items("query_rust_scalar_x16", cfg, 16, || {
         for q in &queries {
             black_box(sk.estimate_risk_scaled(q));
         }
-    });
+    }));
     let oracle = XlaRiskOracle::new(&exe, &sk);
-    bench_items("query_xla_batched_x16", cfg, 16, || {
+    json.record(bench_items("query_xla_batched_x16", cfg, 16, || {
         black_box(oracle.risks(&queries));
-    });
+    }));
 
     section("fused DFO step (1 XLA execution per iteration)");
     let mut theta = vec![0.0, 0.0, -1.0];
     let mut rng2 = Xoshiro256::new(9);
-    bench_items("dfo_step_fused", cfg, 1, || {
+    json.record(bench_items("dfo_step_fused", cfg, 1, || {
         black_box(storm::coordinator::oracle::fused_dfo_step(
             &oracle, &mut theta, 8, 0.3, 0.6, &mut rng2,
         ));
-    });
+    }));
+
+    json.record_peak_rss();
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write BENCH_runtime.json: {e}"),
+    }
 }

@@ -281,6 +281,7 @@ fn main() {
         );
     }
 
+    json.record_peak_rss();
     match json.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("\nfailed to write BENCH_sketch.json: {e}"),

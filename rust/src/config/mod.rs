@@ -324,6 +324,15 @@ pub struct FleetConfig {
     /// deltas into the wide upstream counters exactly (saturation, if
     /// any, is device-local). None = devices use `[storm] counter_width`.
     pub device_counter_width: Option<CounterWidth>,
+    /// Worker threads for the arena fleet executor. 0 = auto
+    /// (`std::thread::available_parallelism`). The executor schedules
+    /// every device and aggregator state machine cooperatively across
+    /// this pool, so the knob bounds OS threads — not fleet size — and
+    /// results are bit-identical at every worker count.
+    pub workers: usize,
+    /// Maximum children per aggregation node for `tree` / `deep`
+    /// topologies (must be >= 2). Star and chain ignore it.
+    pub fan_in: usize,
     pub seed: u64,
 }
 
@@ -339,6 +348,8 @@ impl Default for FleetConfig {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: None,
+            workers: 0,
+            fan_in: 2,
             seed: 0,
         }
     }
@@ -471,6 +482,12 @@ impl RunConfig {
                                 value.as_str()
                             ))
                         })?)
+                }
+                ("fleet", "workers") => {
+                    cfg.fleet.workers = value.as_usize().map_err(ConfigError::Parse)?
+                }
+                ("fleet", "fan_in") => {
+                    cfg.fleet.fan_in = value.as_usize().map_err(ConfigError::Parse)?
                 }
                 ("fleet", "seed") => {
                     cfg.fleet.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
@@ -694,6 +711,8 @@ sync_rounds = 6
 min_quorum = 5
 faults_seed = 1234
 device_counter_width = "u8"
+workers = 4
+fan_in = 8
 seed = 7
 "#,
         )
@@ -708,6 +727,8 @@ seed = 7
         assert_eq!(cfg.fleet.sync_rounds, 6);
         assert_eq!(cfg.fleet.min_quorum, 5);
         assert_eq!(cfg.fleet.faults_seed, Some(1234));
+        assert_eq!(cfg.fleet.workers, 4);
+        assert_eq!(cfg.fleet.fan_in, 8);
         assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts"));
     }
 
@@ -718,6 +739,8 @@ seed = 7
         assert_eq!(cfg.fleet.faults_seed, None, "default network is ideal");
         assert_eq!(cfg.storm.counter_width, CounterWidth::U32, "default width is the seed u32");
         assert_eq!(cfg.fleet.device_counter_width, None, "devices follow [storm] by default");
+        assert_eq!(cfg.fleet.workers, 0, "default worker count is auto");
+        assert_eq!(cfg.fleet.fan_in, 2, "default fan-in matches the seed tree fanout");
     }
 
     #[test]

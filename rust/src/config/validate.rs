@@ -63,6 +63,22 @@ pub fn validate(cfg: &RunConfig) -> Result<(), String> {
             cfg.fleet.min_quorum, cfg.fleet.devices
         ));
     }
+    // workers = 0 is the documented "auto" spelling (resolve to
+    // available_parallelism at run time), so every non-absurd value is
+    // legal; the cap only catches typos like workers = 80000.
+    if cfg.fleet.workers > 4096 {
+        return Err(format!(
+            "fleet.workers ({}) unreasonably large (> 4096); use 0 for auto",
+            cfg.fleet.workers
+        ));
+    }
+    if cfg.fleet.fan_in < 2 {
+        return Err(format!(
+            "fleet.fan_in must be >= 2 (got {}): an aggregation node with fewer than \
+             two children cannot reduce anything",
+            cfg.fleet.fan_in
+        ));
+    }
     Ok(())
 }
 
@@ -136,6 +152,46 @@ mod tests {
         let mut c = base();
         c.storm.hash_family = HashFamily::Sparse { density_permille: 1001 };
         assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.workers = 5000;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.fan_in = 1;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.fan_in = 0;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn workers_zero_means_auto_and_is_valid() {
+        let mut c = base();
+        c.fleet.workers = 0;
+        assert!(validate(&c).is_ok(), "0 is the documented auto spelling");
+        c.fleet.workers = 1;
+        assert!(validate(&c).is_ok());
+        c.fleet.workers = 4096;
+        assert!(validate(&c).is_ok(), "the cap itself is inclusive");
+    }
+
+    #[test]
+    fn workers_and_fan_in_toml_spellings() {
+        // The TOML front-end routes through the same validator, so the
+        // file spelling and the programmatic (CLI-built) config must
+        // agree on what is rejected.
+        let cfg = RunConfig::from_toml_str("[fleet]\nworkers = 0\nfan_in = 2\n").unwrap();
+        assert_eq!(cfg.fleet.workers, 0);
+        assert_eq!(cfg.fleet.fan_in, 2);
+        let cfg = RunConfig::from_toml_str("[fleet]\nworkers = 8\nfan_in = 16\n").unwrap();
+        assert_eq!(cfg.fleet.workers, 8);
+        assert_eq!(cfg.fleet.fan_in, 16);
+        let err = RunConfig::from_toml_str("[fleet]\nfan_in = 1\n").unwrap_err();
+        assert!(err.to_string().contains("fan_in"), "{err}");
+        let err = RunConfig::from_toml_str("[fleet]\nworkers = 99999\n").unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
     }
 
     #[test]

@@ -394,6 +394,8 @@ mod tests {
                 min_quorum: 0,
                 faults_seed: None,
                 device_counter_width: None,
+                workers: 0,
+                fan_in: 2,
                 seed: 1,
             },
             artifacts_dir: None,

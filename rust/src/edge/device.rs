@@ -26,6 +26,7 @@ use super::faults::{drain_due, ChaosLink, Delivery, FaultPlan};
 use super::network::Message;
 use crate::config::StormConfig;
 use crate::data::stream::StreamSource;
+use crate::sketch::delta::SketchSnapshot;
 use crate::sketch::serialize::encode_delta;
 use crate::sketch::RiskSketch;
 
@@ -96,96 +97,126 @@ fn flush_ends(
     });
 }
 
-/// Run one device through all sync rounds: sketch into the long-lived
-/// local model, emit one delta + `EndRound` per round (deferred or
-/// coalesced under faults), then `Done`. This is the body of each fleet
-/// thread — generic over the sketch model, so regression and
-/// classification devices run the identical protocol (same deltas, same
-/// barriers, same recovery paths).
-pub fn run_device<M: RiskSketch>(
+/// The device protocol as a small resumable state machine: everything
+/// `run_device` used to keep on its thread's stack, minus the sketch,
+/// snapshot, stream and batch buffer — those are passed into each call
+/// so the arena executor can page per-device counters through one
+/// scratch model per worker while the threaded wrapper keeps them
+/// local. Driving `step_round` for every epoch and then `finish` is
+/// *the* protocol; both schedulers share this one implementation.
+pub(crate) struct DeviceMachine {
     cfg: DeviceConfig,
-    mut stream: Box<dyn StreamSource>,
-    link: ChaosLink,
-) -> DeviceReport {
-    let rounds = cfg.rounds.max(1);
-    let last_epoch = rounds as u64 - 1;
-    let mut sketch = M::build(cfg.storm, cfg.dim, cfg.family_seed);
-    let mut snap = sketch.snapshot();
-    let mut report = DeviceReport { id: cfg.id, ..Default::default() };
-    let timer = crate::util::timer::Timer::start();
-    // The stream's own length hint sizes both the per-round budget and
-    // the reusable batch buffer (no per-batch allocation).
-    let hint = stream.remaining_hint();
-    let budget = match hint {
-        Some(n) => n.div_ceil(rounds).max(1),
-        None => cfg.fallback_round_examples.max(1),
-    };
-    let mut buf: Vec<crate::data::stream::Example> =
-        Vec::with_capacity(cfg.batch.min(hint.unwrap_or(cfg.batch)).max(1));
-    let mut exhausted = false;
-    // Fault-protocol state: barrier acks deferred by straggler rounds,
-    // barriers missed while crashed, and the first epoch whose
-    // increments have not been confirmed delivered (a delta covering
-    // more than its own round is catch-up traffic).
-    let mut held_ends: Vec<(u64, (u64, u64))> = Vec::new();
-    let mut missed: Vec<u64> = Vec::new();
-    let mut unshipped_from: u64 = 0;
-    for epoch in 0..rounds as u64 {
+    /// Per-round example budget (from the stream hint or the fallback).
+    budget: usize,
+    buf_capacity: usize,
+    exhausted: bool,
+    /// Barrier acks deferred by straggler rounds.
+    held_ends: Vec<(u64, (u64, u64))>,
+    /// Barriers missed while crashed.
+    missed: Vec<u64>,
+    /// First epoch whose increments have not been confirmed delivered
+    /// (a delta covering more than its own round is catch-up traffic).
+    unshipped_from: u64,
+    report: DeviceReport,
+}
+
+impl DeviceMachine {
+    /// `hint` is the stream's length hint, which sizes both the
+    /// per-round budget and the reusable batch buffer.
+    pub(crate) fn new(cfg: DeviceConfig, hint: Option<usize>) -> Self {
+        let rounds = cfg.rounds.max(1);
+        let budget = match hint {
+            Some(n) => n.div_ceil(rounds).max(1),
+            None => cfg.fallback_round_examples.max(1),
+        };
+        DeviceMachine {
+            cfg,
+            budget,
+            buf_capacity: cfg.batch.min(hint.unwrap_or(cfg.batch)).max(1),
+            exhausted: false,
+            held_ends: Vec::new(),
+            missed: Vec::new(),
+            unshipped_from: 0,
+            report: DeviceReport { id: cfg.id, ..Default::default() },
+        }
+    }
+
+    /// Capacity for the reusable batch buffer (no per-batch allocation).
+    pub(crate) fn buf_capacity(&self) -> usize {
+        self.buf_capacity
+    }
+
+    fn last_epoch(&self) -> u64 {
+        self.cfg.rounds.max(1) as u64 - 1
+    }
+
+    /// Run one sync round: ingest up to the round budget, cut and ship
+    /// the delta, ack the barrier (deferred or coalesced under faults).
+    pub(crate) fn step_round<M: RiskSketch>(
+        &mut self,
+        epoch: u64,
+        sketch: &mut M,
+        snap: &mut SketchSnapshot,
+        stream: &mut dyn StreamSource,
+        buf: &mut Vec<crate::data::stream::Example>,
+        link: &ChaosLink,
+    ) {
+        let cfg = self.cfg;
         if cfg.crash.is_some_and(|(at, down)| epoch >= at && epoch < at + down) {
             // Down: no ingest, no sends. The sketch persists (it is the
             // checkpoint); the stream backlog waits at the source.
-            missed.push(epoch);
-            report.crashed_rounds += 1;
-            continue;
+            self.missed.push(epoch);
+            self.report.crashed_rounds += 1;
+            return;
         }
         // Reconnect: back-fill the barrier acks missed while down so
         // full-quorum barriers can close.
-        for &e in &missed {
+        for &e in &self.missed {
             let _ = link.send(Message::EndRound { device_id: cfg.id, epoch: e, examples: 0 });
         }
-        missed.clear();
+        self.missed.clear();
         // Release straggled acks that are due this round.
-        flush_ends(&link, cfg.id, &mut held_ends, epoch);
+        flush_ends(link, cfg.id, &mut self.held_ends, epoch);
         // The final round drains the stream completely so a stale or
         // missing hint never strands examples.
-        let last = epoch == last_epoch;
+        let last = epoch == self.last_epoch();
         let mut ingested = 0usize;
-        while !exhausted && (last || ingested < budget) {
-            let want = if last { cfg.batch } else { cfg.batch.min(budget - ingested) };
-            stream.next_batch_into(want, &mut buf);
+        while !self.exhausted && (last || ingested < self.budget) {
+            let want = if last { cfg.batch } else { cfg.batch.min(self.budget - ingested) };
+            stream.next_batch_into(want, buf);
             if buf.is_empty() {
-                exhausted = true;
+                self.exhausted = true;
                 break;
             }
             // Fused batch sketching: one pass over the projection bank per
             // batch, bit-identical counters to per-example inserts.
-            sketch.insert_batch(&buf);
+            sketch.insert_batch(buf);
             ingested += buf.len();
-            report.batches += 1;
+            self.report.batches += 1;
         }
-        report.examples += ingested as u64;
-        report.rounds += 1;
+        self.report.examples += ingested as u64;
+        self.report.rounds += 1;
         let straggle = cfg.plan.map_or(0, |p| p.straggle_rounds(cfg.id, epoch));
         if straggle > 0 && !last {
             // Straggler round: defer the barrier ack; the round's
             // increments simply ride in the next cut delta (the
             // snapshot stays behind — same recovery path as a drop).
-            held_ends.push((epoch + straggle, (epoch, ingested as u64)));
-            report.straggled += 1;
-            continue;
+            self.held_ends.push((epoch + straggle, (epoch, ingested as u64)));
+            self.report.straggled += 1;
+            return;
         }
-        let delta = sketch.delta_since(&snap, epoch);
+        let delta = sketch.delta_since(snap, epoch);
         if !delta.is_empty() {
-            let catchup = unshipped_from < epoch;
+            let catchup = self.unshipped_from < epoch;
             match link.send_class(
-                Message::Delta { from: cfg.id, epoch, payload: encode_delta(&delta) },
+                Message::Delta { from: cfg.id, epoch, payload: encode_delta(&delta).into() },
                 catchup,
             ) {
                 Ok(Delivery::Delivered) => {
-                    snap = sketch.snapshot();
-                    unshipped_from = epoch + 1;
-                    report.deltas += 1;
-                    report.retransmits += u64::from(catchup);
+                    *snap = sketch.snapshot();
+                    self.unshipped_from = epoch + 1;
+                    self.report.deltas += 1;
+                    self.report.retransmits += u64::from(catchup);
                 }
                 // Dropped: snapshot stays behind; the increments ride
                 // in a later round's catch-up delta.
@@ -195,7 +226,7 @@ pub fn run_device<M: RiskSketch>(
                 Err(()) => {}
             }
         } else {
-            unshipped_from = epoch + 1; // quiet round: nothing owed
+            self.unshipped_from = epoch + 1; // quiet round: nothing owed
         }
         let _ = link.send(Message::EndRound {
             device_id: cfg.id,
@@ -203,55 +234,99 @@ pub fn run_device<M: RiskSketch>(
             examples: ingested as u64,
         });
     }
-    // Recovery epilogue: a crash window that reached the end, straggled
-    // acks still held, or a dropped final delta all resolve here — the
-    // device never exits owing data or barriers.
-    for &e in &missed {
-        let _ = link.send(Message::EndRound { device_id: cfg.id, epoch: e, examples: 0 });
-    }
-    missed.clear();
-    flush_ends(&link, cfg.id, &mut held_ends, u64::MAX);
-    if !exhausted {
-        // The crash swallowed the draining round: this is a one-pass
-        // stream, so drain the backlog now or never.
+
+    /// Recovery epilogue after the last round: a crash window that
+    /// reached the end, straggled acks still held, or a dropped final
+    /// delta all resolve here — the device never exits owing data or
+    /// barriers. Sends `Done` and returns the device's report.
+    pub(crate) fn finish<M: RiskSketch>(
+        &mut self,
+        sketch: &mut M,
+        snap: &mut SketchSnapshot,
+        stream: &mut dyn StreamSource,
+        buf: &mut Vec<crate::data::stream::Example>,
+        link: &ChaosLink,
+    ) -> DeviceReport {
+        let cfg = self.cfg;
+        let last_epoch = self.last_epoch();
+        for &e in &self.missed {
+            let _ = link.send(Message::EndRound { device_id: cfg.id, epoch: e, examples: 0 });
+        }
+        self.missed.clear();
+        flush_ends(link, cfg.id, &mut self.held_ends, u64::MAX);
+        if !self.exhausted {
+            // The crash swallowed the draining round: this is a one-pass
+            // stream, so drain the backlog now or never.
+            loop {
+                stream.next_batch_into(cfg.batch, buf);
+                if buf.is_empty() {
+                    break;
+                }
+                sketch.insert_batch(buf);
+                self.report.examples += buf.len() as u64;
+                self.report.batches += 1;
+            }
+        }
+        // Final-delta loop: retry until the link confirms delivery (the
+        // plan's drop-burst cap bounds this) or the receiver is gone. Any
+        // non-empty delta here means the in-loop path failed to deliver it
+        // (a drop, or a crash covering the final round) — recovery traffic
+        // by definition, so it is always retransmit-classed.
+        let retrying = self.unshipped_from <= last_epoch;
         loop {
-            stream.next_batch_into(cfg.batch, &mut buf);
-            if buf.is_empty() {
+            let delta = sketch.delta_since(snap, last_epoch);
+            if delta.is_empty() {
                 break;
             }
-            sketch.insert_batch(&buf);
-            report.examples += buf.len() as u64;
-            report.batches += 1;
-        }
-    }
-    // Final-delta loop: retry until the link confirms delivery (the
-    // plan's drop-burst cap bounds this) or the receiver is gone. Any
-    // non-empty delta here means the in-loop path failed to deliver it
-    // (a drop, or a crash covering the final round) — recovery traffic
-    // by definition, so it is always retransmit-classed.
-    let retrying = unshipped_from <= last_epoch;
-    loop {
-        let delta = sketch.delta_since(&snap, last_epoch);
-        if delta.is_empty() {
-            break;
-        }
-        match link.send_class(
-            Message::Delta { from: cfg.id, epoch: last_epoch, payload: encode_delta(&delta) },
-            retrying,
-        ) {
-            Ok(Delivery::Delivered) => {
-                snap = sketch.snapshot();
-                report.deltas += 1;
-                report.retransmits += u64::from(retrying);
-                break;
+            match link.send_class(
+                Message::Delta {
+                    from: cfg.id,
+                    epoch: last_epoch,
+                    payload: encode_delta(&delta).into(),
+                },
+                retrying,
+            ) {
+                Ok(Delivery::Delivered) => {
+                    *snap = sketch.snapshot();
+                    self.report.deltas += 1;
+                    self.report.retransmits += u64::from(retrying);
+                    break;
+                }
+                Ok(Delivery::Dropped) => continue,
+                Err(()) => break,
             }
-            Ok(Delivery::Dropped) => continue,
-            Err(()) => break,
         }
+        self.report.sketch_bytes = sketch.grid().bytes();
+        let _ = link.send(Message::Done { device_id: cfg.id, examples: self.report.examples });
+        self.report
     }
-    report.sketch_bytes = sketch.grid().bytes();
+}
+
+/// Run one device through all sync rounds: sketch into the long-lived
+/// local model, emit one delta + `EndRound` per round (deferred or
+/// coalesced under faults), then `Done`. This is the body of each fleet
+/// thread — a thin loop over [`DeviceMachine`], generic over the sketch
+/// model, so regression and classification devices run the identical
+/// protocol (same deltas, same barriers, same recovery paths), and the
+/// arena executor drives the very same machine.
+pub fn run_device<M: RiskSketch>(
+    cfg: DeviceConfig,
+    mut stream: Box<dyn StreamSource>,
+    link: ChaosLink,
+) -> DeviceReport {
+    let rounds = cfg.rounds.max(1);
+    let mut sketch = M::build(cfg.storm, cfg.dim, cfg.family_seed);
+    let mut snap = sketch.snapshot();
+    let timer = crate::util::timer::Timer::start();
+    let hint = stream.remaining_hint();
+    let mut machine = DeviceMachine::new(cfg, hint);
+    let mut buf: Vec<crate::data::stream::Example> =
+        Vec::with_capacity(machine.buf_capacity());
+    for epoch in 0..rounds as u64 {
+        machine.step_round(epoch, &mut sketch, &mut snap, stream.as_mut(), &mut buf, &link);
+    }
+    let mut report = machine.finish(&mut sketch, &mut snap, stream.as_mut(), &mut buf, &link);
     report.ingest_secs = timer.elapsed_secs();
-    let _ = link.send(Message::Done { device_id: cfg.id, examples: report.examples });
     report
 }
 

@@ -1,0 +1,382 @@
+//! The worker-pool fleet executor: million-device rounds on a bounded
+//! thread pool with arena device state.
+//!
+//! The thread-per-node scheduler (`run_fleet_model_threaded`) costs an
+//! OS thread — stack, scheduler state, wakeups — per device, which caps
+//! a simulated fleet in the low tens of thousands. This executor keeps
+//! the *protocol* (the same `DeviceMachine` / `AggMachine` /
+//! `LeaderMachine` state machines) and replaces the *scheduler*:
+//!
+//! * **Arena device state.** Every device's counters live in two
+//!   contiguous byte arenas at the device counter width — the
+//!   cumulative grid and the last-confirmed snapshot — plus flat `u64`
+//!   count vectors. Both grids are mandatory: under saturating narrow
+//!   widths a round delta is `cumulative - snapshot` at native width,
+//!   which a fresh-zeroed grid cannot reproduce. Per device that is
+//!   `2 x rows x buckets x width.bytes() + O(1)` — sketch bytes, not
+//!   thread stacks.
+//! * **Scratch-model paging.** Each worker owns one real sketch (the
+//!   hash bank — the expensive, seed-deterministic part — is identical
+//!   for every device) and pages device counters in and out of the
+//!   arena around each protocol step (`RiskSketch::load_state` /
+//!   `store_state`).
+//! * **Deterministic cooperative rounds.** Each epoch runs one device
+//!   phase — devices sharded contiguously across the pool, each worker
+//!   stepping its slice in id order — then one propagation pass that
+//!   drains every child's outbox in stage order into its parent's
+//!   machine. Messages travel per-child queue links
+//!   ([`Link::queue`]), so per-link FIFO order is exactly the
+//!   thread-per-node order and the cross-child interleaving is *one
+//!   fixed legal schedule* instead of an OS-dependent one. Counter
+//!   merges commute and folds deduplicate on `(from, epoch)`, so the
+//!   final counters are bit-identical to the threaded path at every
+//!   worker count — that is a tested invariant, not an aspiration.
+//! * **Sharded leader folds.** The leader's per-round fold is split
+//!   across the pool by counter range (`absorb_all_sharded`), which is
+//!   bit-identical because per-cell addition is associative and
+//!   commutative.
+//!
+//! The leader (and the caller's `on_round` hook) runs on the calling
+//! thread, between phases — exactly where the coordinator interleaves
+//! training.
+
+use super::device::{DeviceConfig, DeviceMachine, DeviceReport};
+use super::faults::{ChaosLink, FaultPlan, FaultStats};
+use super::fleet::{
+    fallback_round_examples, quorum_of, AggMachine, FleetResult, LeaderMachine,
+};
+use super::network::{Link, LinkSnapshot, LinkStats, Message, Outbox};
+use super::topology::{plan, Stage, Topology, LEADER};
+use crate::config::{CounterWidth, FleetConfig, StormConfig};
+use crate::data::stream::StreamSource;
+use crate::sketch::counters::GridSnapshot;
+use crate::sketch::delta::SketchSnapshot;
+use crate::sketch::RiskSketch;
+use std::sync::Arc;
+
+/// Resolve `[fleet] workers`: 0 means auto (the machine's available
+/// parallelism), anything else is taken literally.
+pub(crate) fn resolve_workers(cfg_workers: usize) -> usize {
+    if cfg_workers == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        cfg_workers
+    }
+}
+
+/// What a device phase does with each device this pass.
+#[derive(Clone, Copy)]
+enum Phase {
+    /// Run one sync round at this epoch.
+    Step(u64),
+    /// Run the recovery epilogue and emit the device report.
+    Finish,
+}
+
+/// Step every device in one contiguous chunk, paging counters through
+/// the worker's scratch sketch. Devices run in id order within the
+/// chunk, so a fixed chunking gives a fixed per-link message order.
+#[allow(clippy::too_many_arguments)]
+fn run_chunk<M: RiskSketch>(
+    phase: Phase,
+    sb: usize,
+    (rows, buckets, width): (usize, usize, CounterWidth),
+    machines: &mut [DeviceMachine],
+    streams: &mut [Box<dyn StreamSource>],
+    links: &[ChaosLink],
+    cum: &mut [u8],
+    snapb: &mut [u8],
+    counts: &mut [u64],
+    snap_counts: &mut [u64],
+    reports: &mut [DeviceReport],
+    sk: &mut M,
+) {
+    let cap = machines.first().map_or(0, |m| m.buf_capacity());
+    let mut buf: Vec<crate::data::stream::Example> = Vec::with_capacity(cap);
+    for i in 0..machines.len() {
+        let span = i * sb..(i + 1) * sb;
+        sk.load_state(&cum[span.clone()], counts[i]);
+        let mut snap = SketchSnapshot {
+            grid: GridSnapshot::from_native(rows, buckets, width, &snapb[span.clone()]),
+            count: snap_counts[i],
+        };
+        match phase {
+            Phase::Step(epoch) => machines[i].step_round(
+                epoch,
+                sk,
+                &mut snap,
+                streams[i].as_mut(),
+                &mut buf,
+                &links[i],
+            ),
+            Phase::Finish => {
+                reports[i] =
+                    machines[i].finish(sk, &mut snap, streams[i].as_mut(), &mut buf, &links[i]);
+            }
+        }
+        sk.store_state(&mut cum[span.clone()]);
+        counts[i] = sk.count();
+        snap.grid.store_native(&mut snapb[span]);
+        snap_counts[i] = snap.count;
+    }
+}
+
+/// One parallel device phase: shard the fleet contiguously across the
+/// pool and run every shard's chunk concurrently. Shards touch disjoint
+/// arena slices, machines, streams and links, so this is plain
+/// `chunks_mut` sharing — no locks on the hot path.
+#[allow(clippy::too_many_arguments)]
+fn device_phase<M: RiskSketch>(
+    phase: Phase,
+    workers: usize,
+    sb: usize,
+    geometry: (usize, usize, CounterWidth),
+    machines: &mut [DeviceMachine],
+    streams: &mut [Box<dyn StreamSource>],
+    links: &mut [ChaosLink],
+    cum: &mut [u8],
+    snapb: &mut [u8],
+    counts: &mut [u64],
+    snap_counts: &mut [u64],
+    reports: &mut [DeviceReport],
+    scratch: &mut [M],
+) {
+    let n = machines.len();
+    if n == 0 {
+        return;
+    }
+    let chunk = n.div_ceil(workers.max(1));
+    std::thread::scope(|s| {
+        let iter = machines
+            .chunks_mut(chunk)
+            .zip(streams.chunks_mut(chunk))
+            .zip(links.chunks_mut(chunk))
+            .zip(cum.chunks_mut(chunk * sb))
+            .zip(snapb.chunks_mut(chunk * sb))
+            .zip(counts.chunks_mut(chunk))
+            .zip(snap_counts.chunks_mut(chunk))
+            .zip(reports.chunks_mut(chunk))
+            .zip(scratch.iter_mut());
+        for ((((((((ms, sts), lks), cumc), snapc), cts), scts), reps), sk) in iter {
+            s.spawn(move || {
+                run_chunk(phase, sb, geometry, ms, sts, lks, cumc, snapc, cts, scts, reps, sk);
+            });
+        }
+    });
+}
+
+/// One propagation pass: drain every child's outbox, in stage order and
+/// child order, into the parent's machine. Stage order is topological
+/// (children stages precede their parents), so a round's deltas flow
+/// leaf-to-leader within a single pass. With `finish_aggs` the pass is
+/// the shutdown cascade: after an aggregator's children are drained it
+/// must be done (every child Done arrived), so it exit-flushes and
+/// cascades Done — which the next stage in the same pass then drains.
+fn propagate<M: RiskSketch>(
+    stages: &[Stage],
+    outboxes: &[Option<Outbox>],
+    aggs: &mut [Option<AggMachine>],
+    agg_uplinks: &[Option<ChaosLink>],
+    leader: &mut LeaderMachine<M>,
+    on_round: &mut impl FnMut(u64, &M),
+    finish_aggs: bool,
+) {
+    for stage in stages {
+        let is_leader = stage.parent == LEADER;
+        for &c in &stage.children {
+            let msgs: Vec<Message> = {
+                let mut q =
+                    outboxes[c].as_ref().expect("child outbox").lock().expect("outbox lock");
+                std::mem::take(&mut *q)
+            };
+            if is_leader {
+                for m in msgs {
+                    leader.on_message(m, on_round);
+                }
+            } else {
+                let agg = aggs[stage.parent].as_mut().expect("aggregator machine");
+                let up = agg_uplinks[stage.parent].as_ref().expect("aggregator uplink");
+                for m in msgs {
+                    agg.on_message(m, up);
+                }
+            }
+        }
+        if finish_aggs && !is_leader {
+            let agg = aggs[stage.parent].as_mut().expect("aggregator machine");
+            let up = agg_uplinks[stage.parent].as_ref().expect("aggregator uplink");
+            debug_assert!(agg.is_done(), "every child finished before the final pass");
+            agg.finish(up);
+        }
+    }
+}
+
+/// Run a fleet on the worker-pool arena executor — the default scheduler
+/// behind `run_fleet_model_chaos`. Same protocol, same results, roughly
+/// sketch-bytes of state per device instead of an OS thread.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_fleet_pooled<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+    fault_plan: Option<FaultPlan>,
+    mut on_round: F,
+) -> FleetResult<M> {
+    assert_eq!(streams.len(), fleet.devices, "one stream per device");
+    let mut streams = streams;
+    let n = fleet.devices;
+    let rounds = fleet.sync_rounds.max(1);
+    let workers = resolve_workers(fleet.workers).min(n.max(1));
+    // Per-tier widths, exactly as the threaded path resolves them.
+    let device_storm = StormConfig {
+        counter_width: fleet.device_counter_width.unwrap_or(storm.counter_width),
+        ..storm
+    };
+    let stages = plan(topology, n);
+    let timer = crate::util::timer::Timer::start();
+    let crash = fault_plan.and_then(|p| p.crash_schedule(n, rounds as u64));
+    // One stats block for every fault-wrapped link: at a million devices
+    // a per-link block is a million allocations merged at exit for the
+    // same four totals.
+    let fault_stats = Arc::new(FaultStats::default());
+
+    // One scratch sketch per worker; the hash bank inside is identical
+    // for every device (same config, same seed), which is what makes
+    // arena paging sound.
+    let mut scratch: Vec<M> =
+        (0..workers).map(|_| M::build(device_storm, dim, family_seed)).collect();
+    let sb = scratch[0].grid().bytes();
+    let geometry =
+        (scratch[0].grid().rows(), scratch[0].grid().buckets(), scratch[0].grid().width());
+
+    // Per-child queue links: each child (device or aggregator) sends
+    // into its own outbox, drained by its parent in deterministic child
+    // order. Byte accounting aggregates per stage, mirroring the
+    // threaded path's one-link-per-stage stats.
+    let max_node = stages
+        .iter()
+        .flat_map(|s| {
+            s.children.iter().copied().chain((s.parent != LEADER).then_some(s.parent))
+        })
+        .max()
+        .unwrap_or(0);
+    let mut stage_stats: Vec<Arc<LinkStats>> = Vec::with_capacity(stages.len());
+    let mut outboxes: Vec<Option<Outbox>> = (0..=max_node).map(|_| None).collect();
+    let mut chaos_links: Vec<Option<ChaosLink>> = (0..=max_node).map(|_| None).collect();
+    for stage in &stages {
+        let st = Arc::new(LinkStats::default());
+        stage_stats.push(st.clone());
+        for &c in &stage.children {
+            let (link, outbox) =
+                Link::queue(fleet.link_latency_us, fleet.link_bandwidth_bps, st.clone());
+            let chaos = ChaosLink::with_stats(link, c as u64, fault_plan, fault_stats.clone());
+            outboxes[c] = Some(outbox);
+            chaos_links[c] = Some(chaos);
+        }
+    }
+    // Devices own the first n links; aggregator uplinks stay put.
+    let mut dev_links: Vec<ChaosLink> =
+        (0..n).map(|i| chaos_links[i].take().expect("device uplink")).collect();
+
+    // Arena device state + one machine per device.
+    let fallback = fallback_round_examples(&storm, dim, fleet.batch);
+    let mut machines: Vec<DeviceMachine> = Vec::with_capacity(n);
+    for (id, stream) in streams.iter_mut().enumerate() {
+        let cfg = DeviceConfig {
+            id,
+            batch: fleet.batch,
+            rounds,
+            fallback_round_examples: fallback,
+            storm: device_storm,
+            family_seed,
+            dim,
+            plan: fault_plan,
+            crash: crash.and_then(|(dev, at, down)| (dev == id).then_some((at, down))),
+        };
+        machines.push(DeviceMachine::new(cfg, stream.remaining_hint()));
+    }
+    let mut cum = vec![0u8; n * sb];
+    let mut snapb = vec![0u8; n * sb];
+    let mut counts = vec![0u64; n];
+    let mut snap_counts = vec![0u64; n];
+    let mut reports = vec![DeviceReport::default(); n];
+
+    // Merge-tier machines.
+    let mut aggs: Vec<Option<AggMachine>> = (0..=max_node).map(|_| None).collect();
+    for stage in &stages {
+        if stage.parent == LEADER {
+            continue;
+        }
+        let quorum = quorum_of(fleet.min_quorum, stage.children.len());
+        aggs[stage.parent] =
+            Some(AggMachine::new(stage.parent, &stage.children, quorum, rounds as u64));
+    }
+    let leader_stage = stages.iter().find(|s| s.parent == LEADER).expect("leader stage");
+    let quorum = quorum_of(fleet.min_quorum, leader_stage.children.len());
+    let mut leader = LeaderMachine::new(
+        M::build(storm, dim, family_seed),
+        &leader_stage.children,
+        quorum,
+        rounds as u64,
+        workers,
+    );
+
+    // The cooperative round loop: device phase, then one leaf-to-leader
+    // propagation pass. Round barriers close inside the pass, on this
+    // thread — which is where `on_round` interleaves training.
+    for epoch in 0..rounds as u64 {
+        device_phase(
+            Phase::Step(epoch),
+            workers,
+            sb,
+            geometry,
+            &mut machines,
+            &mut streams,
+            &mut dev_links,
+            &mut cum,
+            &mut snapb,
+            &mut counts,
+            &mut snap_counts,
+            &mut reports,
+            &mut scratch,
+        );
+        propagate(&stages, &outboxes, &mut aggs, &chaos_links, &mut leader, &mut on_round, false);
+    }
+    // Shutdown: device recovery epilogues (final deltas, back-filled
+    // barriers, Done), then one finishing pass that exit-flushes each
+    // aggregator and cascades Done up to the leader.
+    device_phase(
+        Phase::Finish,
+        workers,
+        sb,
+        geometry,
+        &mut machines,
+        &mut streams,
+        &mut dev_links,
+        &mut cum,
+        &mut snapb,
+        &mut counts,
+        &mut snap_counts,
+        &mut reports,
+        &mut scratch,
+    );
+    propagate(&stages, &outboxes, &mut aggs, &chaos_links, &mut leader, &mut on_round, true);
+    debug_assert!(leader.is_done(), "every node cascaded Done");
+    let (sketch, round_stats, examples) = leader.finish();
+
+    let mut network = LinkSnapshot::default();
+    for s in &stage_stats {
+        network.merge(&s.snapshot());
+    }
+    FleetResult {
+        sketch,
+        devices: reports,
+        network,
+        wall_secs: timer.elapsed_secs(),
+        examples,
+        rounds: round_stats,
+        faults: fault_stats.snapshot(),
+    }
+}

@@ -289,12 +289,24 @@ pub struct ChaosLink {
 
 impl ChaosLink {
     pub fn new(inner: Link, link_id: u64, plan: Option<FaultPlan>) -> Self {
+        Self::with_stats(inner, link_id, plan, Arc::new(FaultStats::default()))
+    }
+
+    /// Like [`Self::new`] but accounting into a shared [`FaultStats`].
+    /// The arena executor gives every link of a 1M-device fleet one
+    /// stats block instead of a million allocations to merge.
+    pub fn with_stats(
+        inner: Link,
+        link_id: u64,
+        plan: Option<FaultPlan>,
+        stats: Arc<FaultStats>,
+    ) -> Self {
         ChaosLink {
             inner,
             link_id,
             plan,
             state: Mutex::new(ChaosState::default()),
-            stats: Arc::new(FaultStats::default()),
+            stats,
         }
     }
 
@@ -390,7 +402,7 @@ mod tests {
     use crate::edge::network::Link;
 
     fn delta(from: usize, epoch: u64, len: usize) -> Message {
-        Message::Delta { from, epoch, payload: vec![0u8; len] }
+        Message::Delta { from, epoch, payload: vec![0u8; len].into() }
     }
 
     #[test]

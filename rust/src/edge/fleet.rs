@@ -1,10 +1,25 @@
-//! Fleet orchestration: spawn device threads, wire up the aggregation
-//! topology with simulated links, and run `sync_rounds` rounds of delta
-//! synchronization. Each round, devices push the counters changed since
-//! the last barrier; aggregators fold the round's deltas in place and
-//! forward one merged delta upstream; the leader applies the round and
-//! hands its evolving sketch to the `on_round` callback — which is where
-//! the coordinator interleaves training (the anytime model).
+//! Fleet orchestration: wire up the aggregation topology with simulated
+//! links and run `sync_rounds` rounds of delta synchronization. Each
+//! round, devices push the counters changed since the last barrier;
+//! aggregators fold the round's deltas in place and forward one merged
+//! delta upstream; the leader applies the round and hands its evolving
+//! sketch to the `on_round` callback — which is where the coordinator
+//! interleaves training (the anytime model).
+//!
+//! **Two schedulers, one protocol.** The protocol logic lives in
+//! resumable state machines (`DeviceMachine`, `AggMachine`,
+//! `LeaderMachine`) that two schedulers drive:
+//!
+//! * the **worker-pool executor** ([`super::executor`], the default):
+//!   device state lives in a contiguous arena, a bounded pool of
+//!   `[fleet] workers` threads steps devices in deterministic rounds,
+//!   and messages flow through per-node outboxes drained in stage
+//!   order. A million-device fleet costs roughly its sketch bytes, not
+//!   a million OS threads.
+//! * the **thread-per-node reference** ([`run_fleet_model_threaded`]):
+//!   one OS thread per device and aggregator, bounded channels for
+//!   backpressure. Kept as the oracle the executor is equivalence-
+//!   tested against.
 //!
 //! **Task-generic.** The whole pipeline is generic over
 //! [`crate::sketch::RiskSketch`] (`run_fleet_model*`): a regression
@@ -55,7 +70,7 @@ use super::network::{Link, LinkSnapshot, Message};
 use super::topology::{plan, Stage, Topology, LEADER};
 use crate::config::{FleetConfig, StormConfig};
 use crate::data::stream::StreamSource;
-use crate::sketch::delta::{pool_delta, SketchDelta};
+use crate::sketch::delta::{absorb_all_sharded, pool_delta, SketchDelta};
 use crate::sketch::serialize::{decode_delta, encode_delta};
 use crate::sketch::storm::StormSketch;
 use crate::sketch::RiskSketch;
@@ -97,14 +112,24 @@ pub struct FleetResult<M = StormSketch> {
 
 /// Per-epoch accumulation at a merge point (aggregator or leader): the
 /// folded delta, the round's example tally, and how many children have
-/// closed the round.
+/// closed the round. The leader additionally buffers incoming deltas
+/// (`fold_batched`) so its round fold can be sharded across the worker
+/// pool by counter-cell range.
 #[derive(Default)]
 struct RoundAccum {
     delta: Option<SketchDelta>,
+    /// Deltas awaiting the next sharded flush (leader path only;
+    /// aggregator fan-in is bounded, so aggregators fold on arrival).
+    batch: Vec<SketchDelta>,
     examples: u64,
     ends: usize,
     deltas: u64,
 }
+
+/// Leader fold batch: enough deltas per flush to amortize the scoped
+/// fan-out, few enough that the buffered frames stay a small bounded
+/// multiple of one sketch.
+const LEADER_FOLD_BATCH: usize = 64;
 
 impl RoundAccum {
     fn fold(&mut self, d: SketchDelta) {
@@ -113,6 +138,79 @@ impl RoundAccum {
             Some(acc) => acc.merge_from(&d),
             None => self.delta = Some(d),
         }
+    }
+
+    /// Buffer `d` for the next sharded flush, flushing when the batch
+    /// fills. With `workers = 1` this degenerates to the sequential
+    /// arrival-order chain `fold` performs.
+    fn fold_batched(&mut self, d: SketchDelta, workers: usize) {
+        self.deltas += 1;
+        self.batch.push(d);
+        if self.batch.len() >= LEADER_FOLD_BATCH {
+            self.flush(workers);
+        }
+    }
+
+    /// Fold the buffered batch into the accumulator, sharded across
+    /// `workers` by cell range — per-cell bit-identical to the
+    /// sequential chain (see [`absorb_all_sharded`]).
+    fn flush(&mut self, workers: usize) {
+        if self.batch.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.batch);
+        match &mut self.delta {
+            Some(acc) => absorb_all_sharded(acc, &batch, workers),
+            None => {
+                let mut it = batch.into_iter();
+                let mut acc = it.next().expect("non-empty batch");
+                let rest: Vec<SketchDelta> = it.collect();
+                absorb_all_sharded(&mut acc, &rest, workers);
+                self.delta = Some(acc);
+            }
+        }
+    }
+}
+
+/// Exactly-once `(from, epoch)` filter for one merge node. For the known
+/// child set and the run's bounded epoch range this is a dense bitset —
+/// at a million-device star the `BTreeSet<(usize, u64)>` it replaces
+/// costs hundreds of MB and a logarithmic probe per frame — with a
+/// `BTreeSet` fallback for out-of-range senders or epochs (which the
+/// protocol never produces, but correctness must not depend on that).
+struct Dedup {
+    /// Sorted direct-child node ids; a child's rank is its bit row.
+    children: Vec<usize>,
+    /// Bits per child: the protocol never tags an epoch past the round
+    /// count (the exit flush uses `max(pool epoch, next)`, both bounded
+    /// by `rounds`), +2 slack for the inclusive bound.
+    bits_per: usize,
+    bits: Vec<u64>,
+    overflow: BTreeSet<(usize, u64)>,
+}
+
+impl Dedup {
+    fn new(children: &[usize], rounds: u64) -> Dedup {
+        let mut children = children.to_vec();
+        children.sort_unstable();
+        let bits_per = rounds as usize + 2;
+        let words = (children.len() * bits_per).div_ceil(64);
+        Dedup { children, bits_per, bits: vec![0; words], overflow: BTreeSet::new() }
+    }
+
+    /// True exactly the first time `(from, epoch)` is seen.
+    fn insert(&mut self, from: usize, epoch: u64) -> bool {
+        if let Ok(slot) = self.children.binary_search(&from) {
+            if (epoch as usize) < self.bits_per {
+                let idx = slot * self.bits_per + epoch as usize;
+                let mask = 1u64 << (idx % 64);
+                let word = &mut self.bits[idx / 64];
+                let fresh = *word & mask == 0;
+                *word |= mask;
+                return fresh;
+            }
+        }
+        self.overflow.insert((from, epoch))
     }
 }
 
@@ -146,12 +244,22 @@ fn end_round_and_drain(
 
 /// The per-node barrier quorum: `min_quorum = 0` (default) means all
 /// direct children, anything else is clamped to `1..=children`.
-fn quorum_of(min_quorum: usize, children: usize) -> usize {
+pub(crate) fn quorum_of(min_quorum: usize, children: usize) -> usize {
     if min_quorum == 0 {
         children
     } else {
         min_quorum.clamp(1, children)
     }
+}
+
+/// Per-round ingestion budget for streams that cannot report their
+/// length: sized so steady-state delta traffic stays well below what
+/// shipping the raw bytes would cost (the whole point of sketches).
+pub(crate) fn fallback_round_examples(storm: &StormConfig, dim: usize, batch: usize) -> usize {
+    const FLUSH_RAW_MULTIPLE: usize = 8;
+    let wire = crate::sketch::serialize::wire_bytes(storm);
+    let raw_bytes_per_example = (dim * 8).max(1);
+    (FLUSH_RAW_MULTIPLE * wire / raw_bytes_per_example).max(4 * batch)
 }
 
 /// Run a regression fleet over per-device streams. `dim` is the
@@ -239,9 +347,35 @@ pub fn run_fleet_model_with<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
 }
 
 /// [`run_fleet_model_with`] under an explicit fault plan — the generic
-/// core every other fleet entry point delegates to.
+/// entry every other fleet entry point delegates to. Runs on the
+/// worker-pool arena executor ([`super::executor`]); `fleet.workers`
+/// sizes the pool (0 = auto). The schedule never changes the result:
+/// counters are bit-identical at every worker count, and to the
+/// [`run_fleet_model_threaded`] reference.
 #[allow(clippy::too_many_arguments)]
 pub fn run_fleet_model_chaos<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
+    fleet: FleetConfig,
+    storm: StormConfig,
+    topology: Topology,
+    dim: usize,
+    family_seed: u64,
+    streams: Vec<Box<dyn StreamSource>>,
+    fault_plan: Option<FaultPlan>,
+    on_round: F,
+) -> FleetResult<M> {
+    super::executor::run_fleet_pooled::<M, F>(
+        fleet, storm, topology, dim, family_seed, streams, fault_plan, on_round,
+    )
+}
+
+/// The thread-per-node reference scheduler: one OS thread per device and
+/// aggregator, bounded channels for backpressure. This was the only
+/// scheduler before the arena executor; it is kept public as the oracle
+/// for worker-count determinism tests (the executor must be bit-identical
+/// to it at any pool size) and for A/B benchmarks. It does not scale past
+/// tens of thousands of devices — use [`run_fleet_model_chaos`] for that.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_model_threaded<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
     fleet: FleetConfig,
     storm: StormConfig,
     topology: Topology,
@@ -293,14 +427,8 @@ pub fn run_fleet_model_chaos<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
     drop(tx_for); // aggregator/device ChaosLinks hold the remaining clones
 
     // Device threads. Hinted streams split their length evenly over the
-    // rounds; hintless streams fall back to a budget sized so steady-state
-    // delta traffic stays well below shipping the raw bytes would cost
-    // (the whole point of sketches).
-    const FLUSH_RAW_MULTIPLE: usize = 8;
-    let wire = crate::sketch::serialize::wire_bytes(&storm);
-    let raw_bytes_per_example = (dim * 8).max(1);
-    let fallback_round_examples =
-        (FLUSH_RAW_MULTIPLE * wire / raw_bytes_per_example).max(4 * fleet.batch);
+    // rounds; hintless streams fall back to the shared budget.
+    let fallback_round_examples = fallback_round_examples(&storm, dim, fleet.batch);
     let mut device_handles = Vec::new();
     for (id, stream) in streams.into_iter().enumerate() {
         let cfg = DeviceConfig {
@@ -328,11 +456,13 @@ pub fn run_fleet_model_chaos<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
         }
         let rx = rx_for.remove(&stage.parent).expect("aggregator rx");
         let up = uplink.remove(&stage.parent).expect("aggregator uplink");
-        let expect = stage.children.len();
-        let quorum = quorum_of(fleet.min_quorum, expect);
+        let quorum = quorum_of(fleet.min_quorum, stage.children.len());
         let agg_id = stage.parent;
-        agg_handles
-            .push(std::thread::spawn(move || run_aggregator(rx, up, agg_id, expect, quorum)));
+        let children = stage.children.clone();
+        let total_rounds = rounds as u64;
+        agg_handles.push(std::thread::spawn(move || {
+            run_aggregator(rx, up, agg_id, &children, quorum, total_rounds)
+        }));
     }
 
     // Leader: close rounds in epoch order, applying each round's folded
@@ -341,61 +471,21 @@ pub fn run_fleet_model_chaos<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
     // moment they arrive — counter addition is epoch-agnostic.
     let leader_stage: &Stage = stages.iter().find(|s| s.parent == LEADER).expect("leader stage");
     let leader_rx = rx_for.remove(&LEADER).expect("leader rx");
-    let expect = leader_stage.children.len();
-    let quorum = quorum_of(fleet.min_quorum, expect);
-    let mut sketch = M::build(storm, dim, family_seed);
-    let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
-    let mut round_stats: Vec<RoundStat> = Vec::new();
-    let mut next_round: u64 = 0;
-    let mut done = 0usize;
-    let mut examples = 0u64;
-    let mut seen_delta: BTreeSet<(usize, u64)> = BTreeSet::new();
-    let mut seen_end: BTreeSet<(usize, u64)> = BTreeSet::new();
-    while done < expect {
+    let quorum = quorum_of(fleet.min_quorum, leader_stage.children.len());
+    let mut leader = LeaderMachine::new(
+        M::build(storm, dim, family_seed),
+        &leader_stage.children,
+        quorum,
+        rounds as u64,
+        1, // sequential folds: this is the reference schedule
+    );
+    while !leader.is_done() {
         match leader_rx.recv() {
-            Ok(Message::Delta { from, epoch, payload }) => {
-                if !seen_delta.insert((from, epoch)) {
-                    continue; // duplicate frame: exactly-once fold
-                }
-                let delta = decode_delta(&payload).expect("valid wire delta");
-                if epoch < next_round {
-                    sketch.apply_delta(&delta); // late for a closed round
-                } else {
-                    pending.entry(epoch).or_default().fold(delta);
-                }
-            }
-            Ok(Message::EndRound { device_id, epoch, examples: e }) => {
-                if !seen_end.insert((device_id, epoch)) || epoch < next_round {
-                    continue; // duplicate or late ack for a closed round
-                }
-                end_round_and_drain(&mut pending, &mut next_round, quorum, epoch, e, |round, acc| {
-                    if let Some(delta) = &acc.delta {
-                        sketch.apply_delta(delta);
-                    }
-                    round_stats.push(RoundStat {
-                        round,
-                        examples: acc.examples,
-                        leader_count: sketch.count(),
-                        deltas: acc.deltas,
-                    });
-                    on_round(round, &sketch);
-                });
-            }
-            Ok(Message::Done { examples: e, .. }) => {
-                done += 1;
-                examples += e;
-            }
+            Ok(msg) => leader.on_message(msg, &mut on_round),
             Err(_) => break,
         }
     }
-    // Fold whatever never made it into a closed round: rounds that never
-    // reached quorum, and catch-up frames tagged past the last round.
-    // Everything here was already deduplicated on arrival.
-    for (_, acc) in pending {
-        if let Some(delta) = &acc.delta {
-            sketch.apply_delta(delta);
-        }
-    }
+    let (sketch, round_stats, examples) = leader.finish();
 
     let devices: Vec<DeviceReport> = device_handles
         .into_iter()
@@ -423,41 +513,75 @@ pub fn run_fleet_model_chaos<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
     }
 }
 
-/// Aggregator node: fold every child delta of an epoch exactly once
-/// (deduplicating on `(from, epoch)`), and once a quorum of children
-/// closed the epoch forward the single merged delta (plus the round
-/// barrier) upstream — cascading Done with the summed example count
-/// after the final round. Late or drop-returned increments are pooled
-/// and re-shipped under a fresh epoch tag; the exit flush retries until
-/// the uplink confirms, so an aggregator never exits owing data.
-fn run_aggregator(rx: Receiver<Message>, up: ChaosLink, agg_id: usize, expect: usize, quorum: usize) {
-    let mut pending: BTreeMap<u64, RoundAccum> = BTreeMap::new();
-    let mut next: u64 = 0;
-    let mut done = 0usize;
-    let mut examples = 0u64;
-    let mut seen_delta: BTreeSet<(usize, u64)> = BTreeSet::new();
-    let mut seen_end: BTreeSet<(usize, u64)> = BTreeSet::new();
-    // Increments owed upstream that missed their round: late arrivals
-    // after a quorum close, plus our own frames the fault layer dropped.
-    let mut unshipped: Option<SketchDelta> = None;
-    while done < expect {
-        match rx.recv() {
-            Ok(Message::Delta { from, epoch, payload }) => {
-                if !seen_delta.insert((from, epoch)) {
-                    continue; // duplicate frame: exactly-once fold
+/// Aggregator protocol as a resumable state machine: fold every child
+/// delta of an epoch exactly once (deduplicating on `(from, epoch)`),
+/// and once a quorum of children closed the epoch forward the single
+/// merged delta (plus the round barrier) upstream — cascading Done with
+/// the summed example count after the final round. Late or drop-returned
+/// increments are pooled and re-shipped under a fresh epoch tag; the
+/// exit flush retries until the uplink confirms, so an aggregator never
+/// exits owing data.
+///
+/// [`run_aggregator`] drives one machine from a blocking channel (the
+/// thread-per-node path); the arena executor drives many by draining
+/// child outboxes in stage order. The machine is schedule-agnostic:
+/// any per-link-FIFO delivery order yields the same final counters.
+pub(crate) struct AggMachine {
+    agg_id: usize,
+    expect: usize,
+    quorum: usize,
+    pending: BTreeMap<u64, RoundAccum>,
+    next: u64,
+    done: usize,
+    examples: u64,
+    seen_delta: Dedup,
+    seen_end: Dedup,
+    /// Increments owed upstream that missed their round: late arrivals
+    /// after a quorum close, plus our own frames the fault layer dropped.
+    unshipped: Option<SketchDelta>,
+}
+
+impl AggMachine {
+    pub(crate) fn new(agg_id: usize, children: &[usize], quorum: usize, rounds: u64) -> AggMachine {
+        AggMachine {
+            agg_id,
+            expect: children.len(),
+            quorum,
+            pending: BTreeMap::new(),
+            next: 0,
+            done: 0,
+            examples: 0,
+            seen_delta: Dedup::new(children, rounds),
+            seen_end: Dedup::new(children, rounds),
+            unshipped: None,
+        }
+    }
+
+    /// Every direct child has cascaded Done.
+    pub(crate) fn is_done(&self) -> bool {
+        self.done >= self.expect
+    }
+
+    pub(crate) fn on_message(&mut self, msg: Message, up: &ChaosLink) {
+        match msg {
+            Message::Delta { from, epoch, payload } => {
+                if !self.seen_delta.insert(from, epoch) {
+                    return; // duplicate frame: exactly-once fold
                 }
-                let Ok(delta) = decode_delta(&payload) else { continue };
-                if epoch < next {
-                    pool_delta(&mut unshipped, delta);
+                let Ok(delta) = decode_delta(&payload) else { return };
+                if epoch < self.next {
+                    pool_delta(&mut self.unshipped, delta);
                 } else {
-                    pending.entry(epoch).or_default().fold(delta);
+                    self.pending.entry(epoch).or_default().fold(delta);
                 }
             }
-            Ok(Message::EndRound { device_id, epoch, examples: e }) => {
-                if !seen_end.insert((device_id, epoch)) || epoch < next {
-                    continue; // duplicate or late ack for a closed round
+            Message::EndRound { device_id, epoch, examples: e } => {
+                if !self.seen_end.insert(device_id, epoch) || epoch < self.next {
+                    return; // duplicate or late ack for a closed round
                 }
-                end_round_and_drain(&mut pending, &mut next, quorum, epoch, e, |round, acc| {
+                let agg_id = self.agg_id;
+                let unshipped = &mut self.unshipped;
+                end_round_and_drain(&mut self.pending, &mut self.next, self.quorum, epoch, e, |round, acc| {
                     let mut out = acc.delta;
                     let mut catchup = false;
                     if let Some(pooled) = unshipped.take() {
@@ -476,12 +600,12 @@ fn run_aggregator(rx: Receiver<Message>, up: ChaosLink, agg_id: usize, expect: u
                             let msg = Message::Delta {
                                 from: agg_id,
                                 epoch: round,
-                                payload: encode_delta(&delta),
+                                payload: encode_delta(&delta).into(),
                             };
                             match up.send_class(msg, catchup) {
                                 // Dropped: pool and re-ship under a
                                 // later (never-used) tag.
-                                Ok(Delivery::Dropped) => pool_delta(&mut unshipped, delta),
+                                Ok(Delivery::Dropped) => pool_delta(unshipped, delta),
                                 Ok(Delivery::Delivered) | Err(()) => {}
                             }
                         }
@@ -493,40 +617,180 @@ fn run_aggregator(rx: Receiver<Message>, up: ChaosLink, agg_id: usize, expect: u
                     });
                 });
             }
-            Ok(Message::Done { examples: e, .. }) => {
-                done += 1;
-                examples += e;
+            Message::Done { examples: e, .. } => {
+                self.done += 1;
+                self.examples += e;
             }
-            Err(_) => break,
         }
     }
-    // Exit flush: pool every never-closed round's accumulator, tag the
-    // pool with an epoch this node has never sent (round `next` never
-    // closed, so `max(next, pool.epoch)` is fresh), and retry until the
-    // link confirms — the fault plan's drop-burst cap bounds the loop.
-    let mut pool = unshipped.take();
-    for (_, acc) in pending {
-        if let Some(d) = acc.delta {
-            pool_delta(&mut pool, d);
+
+    /// Exit flush: pool every never-closed round's accumulator, tag the
+    /// pool with an epoch this node has never sent (round `next` never
+    /// closed, so `max(next, pool.epoch)` is fresh), and retry until the
+    /// link confirms — the fault plan's drop-burst cap bounds the loop.
+    /// Ends by cascading Done upstream. Call exactly once, after the
+    /// last child message.
+    pub(crate) fn finish(&mut self, up: &ChaosLink) {
+        let mut pool = self.unshipped.take();
+        for (_, acc) in std::mem::take(&mut self.pending) {
+            if let Some(d) = acc.delta {
+                pool_delta(&mut pool, d);
+            }
         }
-    }
-    if let Some(mut d) = pool {
-        if !d.is_empty() {
-            d.epoch = d.epoch.max(next);
-            loop {
-                let msg = Message::Delta {
-                    from: agg_id,
-                    epoch: d.epoch,
-                    payload: encode_delta(&d),
-                };
-                match up.send_class(msg, true) {
-                    Ok(Delivery::Delivered) | Err(()) => break,
-                    Ok(Delivery::Dropped) => continue,
+        if let Some(mut d) = pool {
+            if !d.is_empty() {
+                d.epoch = d.epoch.max(self.next);
+                loop {
+                    let msg = Message::Delta {
+                        from: self.agg_id,
+                        epoch: d.epoch,
+                        payload: encode_delta(&d).into(),
+                    };
+                    match up.send_class(msg, true) {
+                        Ok(Delivery::Delivered) | Err(()) => break,
+                        Ok(Delivery::Dropped) => continue,
+                    }
                 }
             }
         }
+        let _ = up.send(Message::Done { device_id: self.agg_id, examples: self.examples });
     }
-    let _ = up.send(Message::Done { device_id: agg_id, examples });
+}
+
+/// Drive one [`AggMachine`] from a blocking channel (thread-per-node
+/// reference path).
+fn run_aggregator(
+    rx: Receiver<Message>,
+    up: ChaosLink,
+    agg_id: usize,
+    children: &[usize],
+    quorum: usize,
+    rounds: u64,
+) {
+    let mut m = AggMachine::new(agg_id, children, quorum, rounds);
+    while !m.is_done() {
+        match rx.recv() {
+            Ok(msg) => m.on_message(msg, &up),
+            Err(_) => break,
+        }
+    }
+    m.finish(&up);
+}
+
+/// Leader protocol as a resumable state machine: close rounds in epoch
+/// order, applying each round's folded delta and running the caller's
+/// hook at every barrier. Late deltas (stragglers under a partial
+/// quorum, catch-up frames) merge the moment they arrive — counter
+/// addition is epoch-agnostic.
+///
+/// `fold_workers` shards the round fold across that many threads by
+/// counter range; because counter merges commute per cell the result is
+/// bit-identical at every shard count (the thread-per-node reference
+/// passes 1).
+pub(crate) struct LeaderMachine<M> {
+    expect: usize,
+    quorum: usize,
+    fold_workers: usize,
+    sketch: M,
+    pending: BTreeMap<u64, RoundAccum>,
+    round_stats: Vec<RoundStat>,
+    next_round: u64,
+    done: usize,
+    examples: u64,
+    seen_delta: Dedup,
+    seen_end: Dedup,
+}
+
+impl<M: RiskSketch> LeaderMachine<M> {
+    pub(crate) fn new(
+        sketch: M,
+        children: &[usize],
+        quorum: usize,
+        rounds: u64,
+        fold_workers: usize,
+    ) -> LeaderMachine<M> {
+        LeaderMachine {
+            expect: children.len(),
+            quorum,
+            fold_workers: fold_workers.max(1),
+            sketch,
+            pending: BTreeMap::new(),
+            round_stats: Vec::new(),
+            next_round: 0,
+            done: 0,
+            examples: 0,
+            seen_delta: Dedup::new(children, rounds),
+            seen_end: Dedup::new(children, rounds),
+        }
+    }
+
+    /// Every direct child has cascaded Done.
+    pub(crate) fn is_done(&self) -> bool {
+        self.done >= self.expect
+    }
+
+    pub(crate) fn on_message(&mut self, msg: Message, on_round: &mut impl FnMut(u64, &M)) {
+        match msg {
+            Message::Delta { from, epoch, payload } => {
+                if !self.seen_delta.insert(from, epoch) {
+                    return; // duplicate frame: exactly-once fold
+                }
+                let delta = decode_delta(&payload).expect("valid wire delta");
+                if epoch < self.next_round {
+                    self.sketch.apply_delta(&delta); // late for a closed round
+                } else {
+                    self.pending.entry(epoch).or_default().fold_batched(delta, self.fold_workers);
+                }
+            }
+            Message::EndRound { device_id, epoch, examples: e } => {
+                if !self.seen_end.insert(device_id, epoch) || epoch < self.next_round {
+                    return; // duplicate or late ack for a closed round
+                }
+                let sketch = &mut self.sketch;
+                let round_stats = &mut self.round_stats;
+                let fold_workers = self.fold_workers;
+                end_round_and_drain(
+                    &mut self.pending,
+                    &mut self.next_round,
+                    self.quorum,
+                    epoch,
+                    e,
+                    |round, mut acc| {
+                        acc.flush(fold_workers);
+                        if let Some(delta) = &acc.delta {
+                            sketch.apply_delta(delta);
+                        }
+                        round_stats.push(RoundStat {
+                            round,
+                            examples: acc.examples,
+                            leader_count: sketch.count(),
+                            deltas: acc.deltas,
+                        });
+                        on_round(round, sketch);
+                    },
+                );
+            }
+            Message::Done { examples: e, .. } => {
+                self.done += 1;
+                self.examples += e;
+            }
+        }
+    }
+
+    /// Fold whatever never made it into a closed round: rounds that
+    /// never reached quorum, and catch-up frames tagged past the last
+    /// round. Everything here was already deduplicated on arrival.
+    /// Returns the final sketch, the per-round stats, and the fleet-wide
+    /// example tally from the Done cascade.
+    pub(crate) fn finish(mut self) -> (M, Vec<RoundStat>, u64) {
+        for (_, mut acc) in std::mem::take(&mut self.pending) {
+            acc.flush(self.fold_workers);
+            if let Some(delta) = &acc.delta {
+                self.sketch.apply_delta(delta);
+            }
+        }
+        (self.sketch, self.round_stats, self.examples)
+    }
 }
 
 #[cfg(test)]
@@ -546,6 +810,8 @@ mod tests {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: None,
+            workers: 0,
+            fan_in: 2,
             seed: 0,
         }
     }
@@ -763,6 +1029,171 @@ mod tests {
         assert_eq!(quorum_of(3, 5), 3);
         assert_eq!(quorum_of(9, 5), 5);
         assert_eq!(quorum_of(1, 5), 1);
+    }
+
+    #[test]
+    fn dedup_is_exactly_once_with_overflow_fallback() {
+        let mut d = Dedup::new(&[3, 7, 100], 4);
+        assert!(d.insert(7, 0));
+        assert!(!d.insert(7, 0), "bitset path deduplicates");
+        assert!(d.insert(7, 1));
+        assert!(d.insert(3, 0));
+        // Out-of-range epoch and unknown sender take the fallback set.
+        assert!(d.insert(7, 99));
+        assert!(!d.insert(7, 99));
+        assert!(d.insert(42, 0));
+        assert!(!d.insert(42, 0));
+    }
+
+    /// The executor must produce the same result as the thread-per-node
+    /// reference — not just statistically, bit for bit — at every pool
+    /// size, on the same seeds. This is the contract that lets
+    /// `run_fleet_model_chaos` route everything through the arena
+    /// executor by default.
+    #[test]
+    fn executor_matches_threaded_reference_at_every_worker_count() {
+        use crate::config::CounterWidth;
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
+        let ds = scaled_ds();
+        for topo in [Topology::Star, Topology::Deep { max_fan_in: 3 }, Topology::Chain] {
+            for width in [None, Some(CounterWidth::U8), Some(CounterWidth::U16)] {
+                let mut cfg = small_fleet_cfg(6, 3);
+                cfg.device_counter_width = width;
+                cfg.faults_seed = Some(0xBEEF);
+                let plan = cfg.faults_seed.map(FaultPlan::from_seed);
+                let streams = partition_streams(&ds, 6, None);
+                let reference = run_fleet_model_threaded::<StormSketch, _>(
+                    cfg,
+                    storm,
+                    topo,
+                    ds.dim() + 1,
+                    99,
+                    streams,
+                    plan,
+                    |_, _| {},
+                );
+                for workers in [1usize, 2, 8] {
+                    let mut c = cfg;
+                    c.workers = workers;
+                    let streams = partition_streams(&ds, 6, None);
+                    let result = run_fleet_model_chaos::<StormSketch, _>(
+                        c,
+                        storm,
+                        topo,
+                        ds.dim() + 1,
+                        99,
+                        streams,
+                        plan,
+                        |_, _| {},
+                    );
+                    let ctx = format!("workers={workers} topo={topo:?} width={width:?}");
+                    assert_eq!(
+                        result.sketch.grid().counts_u32(),
+                        reference.sketch.grid().counts_u32(),
+                        "{ctx}: executor counters diverged from the threaded reference"
+                    );
+                    assert_eq!(result.sketch.count(), reference.sketch.count(), "{ctx}");
+                    assert_eq!(result.examples, reference.examples, "{ctx}");
+                    assert_eq!(result.rounds.len(), reference.rounds.len(), "{ctx}");
+                    // Device reports are schedule-independent too
+                    // (ingest timing aside — the executor does not
+                    // attribute wall time per device).
+                    for (a, b) in result.devices.iter().zip(&reference.devices) {
+                        assert_eq!(
+                            (a.id, a.examples, a.batches, a.rounds, a.deltas),
+                            (b.id, b.examples, b.batches, b.rounds, b.deltas),
+                            "{ctx}"
+                        );
+                        assert_eq!(
+                            (a.crashed_rounds, a.straggled, a.retransmits, a.sketch_bytes),
+                            (b.crashed_rounds, b.straggled, b.retransmits, b.sketch_bytes),
+                            "{ctx}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// On an ideal network with full quorums the executor's per-round
+    /// trace — and the per-stage byte accounting — is identical to the
+    /// threaded reference, not just the final counters: both schedulers
+    /// deliver the same frames on the same links in per-link FIFO order,
+    /// and round closes depend only on the per-epoch ack sets.
+    #[test]
+    fn executor_round_traces_and_bytes_match_threaded_on_ideal_network() {
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
+        let ds = scaled_ds();
+        for topo in [Topology::Star, Topology::Tree { fanout: 2 }, Topology::Chain] {
+            let cfg = small_fleet_cfg(5, 4);
+            let streams = partition_streams(&ds, 5, None);
+            let reference = run_fleet_model_threaded::<StormSketch, _>(
+                cfg,
+                storm,
+                topo,
+                ds.dim() + 1,
+                42,
+                streams,
+                None,
+                |_, _| {},
+            );
+            for workers in [1usize, 3] {
+                let mut c = cfg;
+                c.workers = workers;
+                let streams = partition_streams(&ds, 5, None);
+                let result = run_fleet_model_chaos::<StormSketch, _>(
+                    c,
+                    storm,
+                    topo,
+                    ds.dim() + 1,
+                    42,
+                    streams,
+                    None,
+                    |_, _| {},
+                );
+                let ctx = format!("workers={workers} topo={topo:?}");
+                let trace = |r: &FleetResult| {
+                    r.rounds
+                        .iter()
+                        .map(|s| (s.round, s.examples, s.leader_count, s.deltas))
+                        .collect::<Vec<_>>()
+                };
+                assert_eq!(trace(&result), trace(&reference), "{ctx}");
+                assert_eq!(result.network.bytes, reference.network.bytes, "{ctx}");
+                assert_eq!(result.network.messages, reference.network.messages, "{ctx}");
+                assert_eq!(result.network.rounds, reference.network.rounds, "{ctx}");
+                assert_eq!(result.network.retransmit_bytes(), 0, "{ctx}");
+            }
+        }
+    }
+
+    /// A deep tree bounds every merge node's fan-in; the executor must
+    /// still reproduce the one-shot reference through the multi-level
+    /// fold, and classification fleets ride the same scheduler.
+    #[test]
+    fn deep_tree_fleet_is_exact_for_both_tasks() {
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
+        let (reference, n) = reference_sketch(storm, 99);
+        let result = run_with(Topology::Deep { max_fan_in: 3 }, 9, 2);
+        assert_eq!(result.examples, n);
+        assert_eq!(result.sketch.grid().counts_u32(), reference.grid().counts_u32());
+
+        let clf_storm = StormConfig { task: Task::Classification, ..storm };
+        let ds = labelled_ds(240);
+        let clf_reference = classifier_reference(clf_storm, &ds, 99);
+        let mut cfg = small_fleet_cfg(9, 2);
+        cfg.workers = 4;
+        let streams = partition_streams(&ds, 9, None);
+        let result = run_fleet_model::<StormModel>(
+            cfg,
+            clf_storm,
+            Topology::Deep { max_fan_in: 3 },
+            ds.dim() + 1,
+            99,
+            streams,
+        );
+        assert_eq!(result.sketch.grid().counts_u32(), clf_reference.grid().counts_u32());
+        assert_eq!(result.sketch.count(), 240);
     }
 
     use crate::config::Task;

@@ -6,12 +6,14 @@
 //! the merged sketch. No raw example ever leaves a device.
 //!
 //! This module simulates that system faithfully enough to measure the
-//! claims: thread-per-device ingestion, bounded channels for backpressure,
-//! explicit link models (latency, bandwidth, byte counters), aggregation
-//! topologies (star / tree / chain), and an energy model comparing sketch
-//! shipping against raw-data shipping.
+//! claims: a worker-pool executor with arena device state (the default,
+//! scaling to million-device fleets) plus a thread-per-node reference
+//! scheduler, explicit link models (latency, bandwidth, byte counters),
+//! aggregation topologies (star / tree / deep tree / chain), and an
+//! energy model comparing sketch shipping against raw-data shipping.
 
 pub mod device;
+pub mod executor;
 pub mod faults;
 pub mod network;
 pub mod topology;

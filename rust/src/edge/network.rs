@@ -18,7 +18,10 @@ pub enum Message {
     /// receivers can deduplicate replayed frames: the exactly-once fold
     /// key is `(from, epoch)` — a sender never reuses an epoch tag for
     /// two different delta payloads (see `edge::faults` module docs).
-    Delta { from: usize, epoch: u64, payload: Vec<u8> },
+    /// The payload is reference-counted so chaos duplicates, multi-child
+    /// fan-out, and retry-until-confirmed re-sends share one frame
+    /// allocation instead of cloning the bytes per copy.
+    Delta { from: usize, epoch: u64, payload: Arc<[u8]> },
     /// Sender finished sync round `epoch` after ingesting `examples`
     /// within that round. One per round per child — the upstream barrier
     /// counts these.
@@ -127,9 +130,23 @@ impl LinkSnapshot {
     }
 }
 
+/// Where a link's frames land: a bounded channel (the thread-per-node
+/// runtime, with real backpressure) or a caller-drained outbox queue
+/// (the worker-pool executor — unbounded, drained deterministically at
+/// every scheduling step, so a send never blocks).
+#[derive(Clone)]
+enum Sink {
+    Channel(SyncSender<Message>),
+    Queue(Outbox),
+}
+
+/// A caller-drained message queue: the receiving half of a queue-backed
+/// [`Link`] (see [`Link::queue`]).
+pub type Outbox = Arc<Mutex<Vec<Message>>>;
+
 /// Sending half of a simulated link.
 pub struct Link {
-    tx: SyncSender<Message>,
+    sink: Sink,
     stats: Arc<LinkStats>,
     latency: Duration,
     /// Bytes per second; 0 = infinite.
@@ -148,13 +165,32 @@ impl Link {
         let stats = Arc::new(LinkStats::default());
         (
             Link {
-                tx,
+                sink: Sink::Channel(tx),
                 stats: stats.clone(),
                 latency: Duration::from_micros(latency_us),
                 bandwidth_bps,
             },
             rx,
             stats,
+        )
+    }
+
+    /// Create a queue-backed link for the cooperative executor: sends
+    /// append to the returned outbox (drained by the scheduler between
+    /// phases) under the same cost model and byte accounting as a
+    /// channel link. `stats` is shared so every child of one aggregation
+    /// stage accounts into that stage's single [`LinkStats`], exactly as
+    /// the channel runtime's per-stage links do.
+    pub fn queue(latency_us: u64, bandwidth_bps: u64, stats: Arc<LinkStats>) -> (Link, Outbox) {
+        let outbox: Outbox = Arc::new(Mutex::new(Vec::new()));
+        (
+            Link {
+                sink: Sink::Queue(outbox.clone()),
+                stats,
+                latency: Duration::from_micros(latency_us),
+                bandwidth_bps,
+            },
+            outbox,
         )
     }
 
@@ -180,8 +216,18 @@ impl Link {
         if !cost.is_zero() {
             std::thread::sleep(cost);
         }
+        let tx = match &self.sink {
+            Sink::Queue(outbox) => {
+                // Executor outbox: unbounded, caller-drained — a send
+                // always lands, so only the byte accounting applies.
+                outbox.lock().expect("outbox lock").push(msg);
+                self.account(bytes, epoch, retransmit);
+                return Ok(());
+            }
+            Sink::Channel(tx) => tx,
+        };
         // Try fast path, fall back to blocking and time the stall.
-        let msg = match self.tx.try_send(msg) {
+        let msg = match tx.try_send(msg) {
             Ok(()) => {
                 self.account(bytes, epoch, retransmit);
                 return Ok(());
@@ -195,7 +241,7 @@ impl Link {
             Err(TrySendError::Disconnected(_)) => return Err(()),
         };
         let t = std::time::Instant::now();
-        let result = self.tx.send(msg).map_err(|_| ());
+        let result = tx.send(msg).map_err(|_| ());
         self.stats
             .blocked_ns
             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -227,7 +273,7 @@ impl Link {
 impl Clone for Link {
     fn clone(&self) -> Self {
         Link {
-            tx: self.tx.clone(),
+            sink: self.sink.clone(),
             stats: self.stats.clone(),
             latency: self.latency,
             bandwidth_bps: self.bandwidth_bps,
@@ -240,7 +286,7 @@ mod tests {
     use super::*;
 
     fn delta(epoch: u64, len: usize) -> Message {
-        Message::Delta { from: 0, epoch, payload: vec![0u8; len] }
+        Message::Delta { from: 0, epoch, payload: vec![0u8; len].into() }
     }
 
     #[test]
@@ -305,6 +351,35 @@ mod tests {
         assert_eq!(merged.round_bytes(0), 30);
         assert_eq!(merged.round_bytes(2), 5);
         assert_eq!(merged.messages, 3);
+    }
+
+    #[test]
+    fn queue_sink_accounts_and_enqueues() {
+        let stats = Arc::new(LinkStats::default());
+        let (link, outbox) = Link::queue(0, 0, stats.clone());
+        link.send(delta(0, 100)).unwrap();
+        link.send_class(delta(1, 30), true).unwrap();
+        link.send(Message::Done { device_id: 0, examples: 1 }).unwrap();
+        let snap = stats.snapshot();
+        assert_eq!(snap.messages, 3);
+        assert_eq!(snap.bytes, 146);
+        assert_eq!(snap.round_retransmit_bytes(1), 30);
+        assert_eq!(snap.backpressure_events, 0, "queue sends never block");
+        let drained = std::mem::take(&mut *outbox.lock().unwrap());
+        assert_eq!(drained.len(), 3);
+        assert!(matches!(drained.last().unwrap(), Message::Done { .. }));
+    }
+
+    #[test]
+    fn cloned_delta_shares_one_payload_allocation() {
+        let m = delta(0, 64);
+        let c = m.clone();
+        match (&m, &c) {
+            (Message::Delta { payload: a, .. }, Message::Delta { payload: b, .. }) => {
+                assert!(Arc::ptr_eq(a, b), "clones must share the frame bytes");
+            }
+            _ => unreachable!(),
+        }
     }
 
     #[test]

@@ -17,6 +17,12 @@ pub enum Topology {
     /// Devices form a chain; each forwards its merged prefix downstream
     /// (the paper's "propagate along the edges" picture).
     Chain,
+    /// Multi-level aggregation tree whose *every* node — including the
+    /// leader — has at most `max_fan_in` children, so no node ever
+    /// buffers more than `max_fan_in` in-flight deltas regardless of
+    /// fleet size. This is the million-device shape: depth grows as
+    /// log_{fan_in}(n) while per-node memory stays constant.
+    Deep { max_fan_in: usize },
 }
 
 /// One aggregation stage: the devices/aggregators at `children` feed the
@@ -52,8 +58,13 @@ pub fn plan(topology: Topology, n: usize) -> Vec<Stage> {
             stages.push(Stage { parent: LEADER, children: vec![upstream] });
             stages
         }
-        Topology::Tree { fanout } => {
-            assert!(fanout >= 2, "tree fanout must be >= 2");
+        // A deep tree is a balanced tree whose cap applies to every
+        // node including the leader; the chunk planner below already
+        // guarantees that (the final stage has at most `fanout`
+        // children), so the two shapes share one implementation and
+        // `Deep` exists as the named million-device spelling.
+        Topology::Tree { fanout } | Topology::Deep { max_fan_in: fanout } => {
+            assert!(fanout >= 2, "tree fan-in must be >= 2");
             let mut level: Vec<usize> = (0..n).collect();
             let mut next_agg = n;
             let mut stages = Vec::new();
@@ -133,8 +144,41 @@ mod tests {
     }
 
     #[test]
+    fn deep_tree_bounds_every_node_including_leader() {
+        for (n, cap) in [(1usize, 2usize), (7, 2), (64, 4), (1000, 8), (4097, 16)] {
+            let p = plan(Topology::Deep { max_fan_in: cap }, n);
+            assert!(devices_covered(&p, n), "n={n} cap={cap}");
+            for s in &p {
+                assert!(
+                    s.children.len() <= cap,
+                    "node {} has {} children (cap {cap}, n={n})",
+                    s.parent,
+                    s.children.len()
+                );
+                assert!(s.children.len() >= 1);
+            }
+            assert_eq!(p.last().unwrap().parent, LEADER);
+        }
+    }
+
+    #[test]
+    fn deep_tree_matches_tree_of_same_fan_in() {
+        for n in [1usize, 5, 33, 260] {
+            assert_eq!(
+                plan(Topology::Deep { max_fan_in: 4 }, n),
+                plan(Topology::Tree { fanout: 4 }, n)
+            );
+        }
+    }
+
+    #[test]
     fn single_device_plans() {
-        for t in [Topology::Star, Topology::Chain, Topology::Tree { fanout: 2 }] {
+        for t in [
+            Topology::Star,
+            Topology::Chain,
+            Topology::Tree { fanout: 2 },
+            Topology::Deep { max_fan_in: 2 },
+        ] {
             let p = plan(t, 1);
             assert_eq!(p.last().unwrap().parent, LEADER);
             assert!(devices_covered(&p, 1));

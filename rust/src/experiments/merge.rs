@@ -70,6 +70,8 @@ pub fn run(effort: Effort, seed: u64) -> Table {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: width,
+            workers: 0,
+            fan_in: 2,
             seed,
         };
         let streams = partition_streams(ds, devices, None);

@@ -121,6 +121,8 @@ fn cmd_train(args: &[String]) -> i32 {
             "nonzero fraction in (0, 1] for --hash-family sparse (default 0.1)",
         )
         .opt("devices", Some("4"), "simulated edge devices")
+        .opt("workers", Some("0"), "executor worker threads (0 = one per hardware core)")
+        .opt("fan-in", Some("2"), "children per merge node for tree/deep topologies (>= 2)")
         .opt("sync-rounds", Some("1"), "delta sync rounds (training interleaves between rounds)")
         .opt("min-quorum", Some("0"), "children a barrier waits for (0 = all; stragglers fold late)")
         .opt("faults-seed", None, "seeded chaos schedule: drops/dups/reorders + straggler rounds + one crash")
@@ -129,7 +131,7 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("sigma", Some("0.3"), "DFO sphere radius")
         .opt("step", Some("0.6"), "DFO step size")
         .opt("seed", Some("0"), "run seed")
-        .opt("topology", Some("star"), "star | tree | chain")
+        .opt("topology", Some("star"), "star | tree | deep | chain (tree/deep use --fan-in)")
         .opt("backend", Some("rust"), "query backend: rust | xla")
         .opt("artifacts", Some("artifacts"), "artifact dir for the xla backend")
         .opt("checkpoint", None, "write final state to this path");
@@ -158,6 +160,9 @@ fn cmd_train(args: &[String]) -> i32 {
         };
         cfg.storm.hash_family = parse_hash_family(&parsed.get_string("hash-family"), density)?;
         cfg.fleet.devices = parsed.get_usize("devices")?;
+        cfg.fleet.workers = parsed.get_usize("workers")?;
+        cfg.fleet.fan_in = parsed.get_usize("fan-in")?;
+        anyhow::ensure!(cfg.fleet.fan_in >= 2, "--fan-in must be >= 2");
         cfg.fleet.sync_rounds = parsed.get_usize("sync-rounds")?;
         anyhow::ensure!(cfg.fleet.sync_rounds >= 1, "--sync-rounds must be >= 1");
         cfg.fleet.min_quorum = parsed.get_usize("min-quorum")?;
@@ -183,7 +188,8 @@ fn cmd_train(args: &[String]) -> i32 {
         };
         let topology = match parsed.get_string("topology").as_str() {
             "star" => Topology::Star,
-            "tree" => Topology::Tree { fanout: 2 },
+            "tree" => Topology::Tree { fanout: cfg.fleet.fan_in },
+            "deep" => Topology::Deep { max_fan_in: cfg.fleet.fan_in },
             "chain" => Topology::Chain,
             other => anyhow::bail!("unknown topology {other:?}"),
         };

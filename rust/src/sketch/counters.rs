@@ -111,6 +111,57 @@ impl CounterStore {
     fn total(&self) -> u64 {
         with_store!(self, d => d.iter().map(|c| c.to_u32() as u64).sum())
     }
+
+    /// Rebuild a store from little-endian arena bytes at `width`.
+    fn from_bytes(width: CounterWidth, src: &[u8]) -> CounterStore {
+        assert_eq!(src.len() % width.bytes(), 0, "from_bytes: ragged buffer");
+        match width {
+            CounterWidth::U8 => CounterStore::U8(src.to_vec()),
+            CounterWidth::U16 => CounterStore::U16(
+                src.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect(),
+            ),
+            CounterWidth::U32 => CounterStore::U32(
+                src.chunks_exact(4)
+                    .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Overwrite cells in place from little-endian arena bytes (reuses
+    /// the existing allocation; byte length must equal `len * width`).
+    fn load_bytes(&mut self, src: &[u8]) {
+        match self {
+            CounterStore::U8(d) => d.copy_from_slice(src),
+            CounterStore::U16(d) => {
+                for (c, b) in d.iter_mut().zip(src.chunks_exact(2)) {
+                    *c = u16::from_le_bytes([b[0], b[1]]);
+                }
+            }
+            CounterStore::U32(d) => {
+                for (c, b) in d.iter_mut().zip(src.chunks_exact(4)) {
+                    *c = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+            }
+        }
+    }
+
+    /// Serialize cells to little-endian arena bytes.
+    fn store_bytes(&self, dst: &mut [u8]) {
+        match self {
+            CounterStore::U8(d) => dst.copy_from_slice(d),
+            CounterStore::U16(d) => {
+                for (c, b) in d.iter().zip(dst.chunks_exact_mut(2)) {
+                    b.copy_from_slice(&c.to_le_bytes());
+                }
+            }
+            CounterStore::U32(d) => {
+                for (c, b) in d.iter().zip(dst.chunks_exact_mut(4)) {
+                    b.copy_from_slice(&c.to_le_bytes());
+                }
+            }
+        }
+    }
 }
 
 /// `dst[i] += src[i]` under `dst`'s overflow policy, both at their own
@@ -135,6 +186,31 @@ pub struct GridSnapshot {
     rows: usize,
     buckets: usize,
     store: CounterStore,
+}
+
+impl GridSnapshot {
+    /// Rebuild a snapshot from arena bytes (little-endian cells at
+    /// `width`). The SoA fleet executor keeps per-device snapshots in
+    /// one contiguous allocation and materializes this view per round.
+    pub(crate) fn from_native(
+        rows: usize,
+        buckets: usize,
+        width: CounterWidth,
+        src: &[u8],
+    ) -> Self {
+        assert_eq!(src.len(), rows * buckets * width.bytes(), "from_native: size mismatch");
+        GridSnapshot { rows, buckets, store: CounterStore::from_bytes(width, src) }
+    }
+
+    /// Serialize the snapshot cells back to arena bytes.
+    pub(crate) fn store_native(&self, dst: &mut [u8]) {
+        assert_eq!(
+            dst.len(),
+            self.store.len() * self.store.width().bytes(),
+            "store_native: size mismatch"
+        );
+        self.store.store_bytes(dst);
+    }
 }
 
 /// Dense row-major counter grid at a runtime-selected cell width.
@@ -273,6 +349,20 @@ impl CounterGrid {
     /// Native store access for the width-dispatched batch kernels.
     pub(crate) fn store_mut(&mut self) -> &mut CounterStore {
         &mut self.store
+    }
+
+    /// Overwrite this grid's cells from arena bytes (little-endian at
+    /// the grid's native width) — the load half of the SoA executor's
+    /// swap-in/swap-out of per-device state through one scratch sketch.
+    pub(crate) fn load_native(&mut self, src: &[u8]) {
+        assert_eq!(src.len(), self.bytes(), "load_native: size mismatch");
+        self.store.load_bytes(src);
+    }
+
+    /// Write this grid's cells to arena bytes at native width.
+    pub(crate) fn store_native(&self, dst: &mut [u8]) {
+        assert_eq!(dst.len(), self.bytes(), "store_native: size mismatch");
+        self.store.store_bytes(dst);
     }
 
     /// Counter memory in bytes (width-true: `cells x width.bytes()`).
@@ -456,6 +546,36 @@ mod tests {
         g.increment(1, 0);
         assert_eq!(g.row(0), vec![0, 0]);
         assert_eq!(g.row(1), vec![1, 0]);
+    }
+
+    #[test]
+    fn native_bytes_round_trip_every_width() {
+        for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
+            let mut g = CounterGrid::with_width(2, 3, true, width);
+            g.add_counts(&[1, 0, 200, 3, 0, 77]);
+            let mut arena = vec![0u8; g.bytes()];
+            g.store_native(&mut arena);
+            let mut back = CounterGrid::with_width(2, 3, true, width);
+            back.load_native(&arena);
+            assert_eq!(back, g, "{width:?}");
+            // Snapshot view over the same bytes sees the same counters.
+            let snap = GridSnapshot::from_native(2, 3, width, &arena);
+            assert_eq!(snap, g.snapshot(), "{width:?}");
+            let mut out = vec![0u8; arena.len()];
+            snap.store_native(&mut out);
+            assert_eq!(out, arena, "{width:?}");
+        }
+    }
+
+    #[test]
+    fn native_bytes_preserve_values_above_narrow_range() {
+        let mut g = CounterGrid::new(1, 2, true);
+        g.add_counts(&[70_000, u32::MAX]);
+        let mut arena = vec![0u8; g.bytes()];
+        g.store_native(&mut arena);
+        let mut back = CounterGrid::new(1, 2, true);
+        back.load_native(&arena);
+        assert_eq!(back.counts_u32(), vec![70_000, u32::MAX]);
     }
 
     #[test]

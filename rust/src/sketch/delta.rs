@@ -156,6 +156,72 @@ pub fn pool_delta(slot: &mut Option<SketchDelta>, delta: SketchDelta) {
     }
 }
 
+/// Fold every delta in `batch` into `acc`, sharding the per-cell
+/// addition across up to `workers` scoped threads by contiguous cell
+/// range — the leader's round fold at million-device fan-in.
+///
+/// Per cell this is bit-identical to the sequential
+/// [`SketchDelta::absorb`] chain: saturating (and wrapping) `u32`
+/// addition is associative and commutative per cell, so any
+/// shard/operand order yields the same value. The scalar fields fold
+/// the way the chain does: the epoch keeps the max, the count sums,
+/// and the width tag covers every operand width plus the fitted final
+/// maximum cell (for saturating grids, cells grow monotonically, so
+/// the final maximum equals the chain's running maximum and the width
+/// tag matches the sequential chain exactly; a wrapping accumulator
+/// could tag narrower than the chain, which is why this entry point is
+/// reserved for folds that are applied locally and never re-encoded).
+pub fn absorb_all_sharded(acc: &mut SketchDelta, batch: &[SketchDelta], workers: usize) {
+    if batch.is_empty() {
+        return;
+    }
+    for other in batch {
+        assert!(acc.cfg.merge_compatible(&other.cfg), "delta fold: config mismatch");
+        assert_eq!(acc.seed, other.seed, "delta fold: seed mismatch");
+        assert_eq!(acc.dim, other.dim, "delta fold: dim mismatch");
+        assert_eq!(acc.counts.len(), other.counts.len(), "delta fold: shape mismatch");
+    }
+    let cells = acc.counts.len();
+    let saturating = acc.cfg.saturating;
+    let shards = workers.max(1).min(cells.max(1));
+    let chunk = cells.div_ceil(shards);
+    let fold_range = |dst: &mut [u32], start: usize| -> u32 {
+        for other in batch {
+            let src = &other.counts[start..start + dst.len()];
+            if saturating {
+                for (c, o) in dst.iter_mut().zip(src) {
+                    *c = c.saturating_add(*o);
+                }
+            } else {
+                for (c, o) in dst.iter_mut().zip(src) {
+                    *c = c.wrapping_add(*o);
+                }
+            }
+        }
+        dst.iter().copied().max().unwrap_or(0)
+    };
+    let max_cell = if shards <= 1 || cells == 0 {
+        fold_range(&mut acc.counts, 0)
+    } else {
+        let mut shard_max = vec![0u32; acc.counts.chunks(chunk).count()];
+        std::thread::scope(|s| {
+            for ((ci, dst), mx) in
+                acc.counts.chunks_mut(chunk).enumerate().zip(shard_max.iter_mut())
+            {
+                let fold_range = &fold_range;
+                s.spawn(move || *mx = fold_range(dst, ci * chunk));
+            }
+        });
+        shard_max.into_iter().max().unwrap_or(0)
+    };
+    for other in batch {
+        acc.epoch = acc.epoch.max(other.epoch);
+        acc.count += other.count;
+        acc.width = acc.width.max(other.width);
+    }
+    acc.width = acc.width.max(CounterWidth::fitting(max_cell));
+}
+
 impl StormSketch {
     /// Freeze the current state for a later [`Self::delta_since`].
     pub fn snapshot(&self) -> SketchSnapshot {
@@ -361,6 +427,33 @@ mod tests {
         let older = SketchDelta::empty(1, cfg(), 3, 4);
         newer.absorb(&older);
         assert_eq!(newer.epoch, 9);
+    }
+
+    #[test]
+    fn sharded_fold_matches_sequential_absorb_chain() {
+        let mut rng = Xoshiro256::new(21);
+        let make = |rng: &mut Xoshiro256, n: usize, epoch: u64| {
+            let mut sk = StormSketch::new(cfg(), 3, 4);
+            insert_n(&mut sk, rng, n);
+            sk.delta_since(&StormSketch::new(cfg(), 3, 4).snapshot(), epoch)
+        };
+        let batch: Vec<SketchDelta> =
+            (0..7).map(|i| make(&mut rng, 5 + i as usize, i)).collect();
+        let mut sequential = SketchDelta::empty(0, cfg(), 3, 4);
+        for d in &batch {
+            sequential.absorb(d);
+        }
+        // Any shard count — including more shards than cells — yields
+        // the identical delta, field for field.
+        for workers in [1usize, 3, 8, 1000] {
+            let mut sharded = SketchDelta::empty(0, cfg(), 3, 4);
+            absorb_all_sharded(&mut sharded, &batch, workers);
+            assert_eq!(sharded, sequential, "workers={workers}");
+        }
+        // Empty batch is a no-op.
+        let mut acc = sequential.clone();
+        absorb_all_sharded(&mut acc, &[], 4);
+        assert_eq!(acc, sequential);
     }
 
     #[test]

@@ -105,6 +105,20 @@ pub trait RiskSketch: Send + Sized {
     /// Merge another model built with identical configuration/seeds.
     fn merge_from(&mut self, other: &Self);
 
+    /// Overwrite this model's counters and example count from arena
+    /// bytes (little-endian cells at the grid's native width). This is
+    /// the load half of the SoA fleet executor's state swap: a worker
+    /// keeps ONE scratch model (the hash bank is the expensive part and
+    /// is identical for every device built from the same config + seed)
+    /// and pages per-device counters in and out of one contiguous
+    /// allocation. `src` length must equal [`Self::bytes`].
+    fn load_state(&mut self, src: &[u8], count: u64);
+
+    /// Write this model's counters to arena bytes at native width (the
+    /// store half of the swap; the example count travels separately in
+    /// the executor's SoA column).
+    fn store_state(&self, dst: &mut [u8]);
+
     /// Downcast to the regression sketch when this model is one (the
     /// regression-only paths — linear partition warm starts, the XLA
     /// query backend — gate on this).
@@ -173,6 +187,16 @@ impl RiskSketch for StormSketch {
 
     fn merge_from(&mut self, other: &Self) {
         StormSketch::merge_from(self, other)
+    }
+
+    fn load_state(&mut self, src: &[u8], count: u64) {
+        let (grid, cnt) = self.parts_mut();
+        grid.load_native(src);
+        *cnt = count;
+    }
+
+    fn store_state(&self, dst: &mut [u8]) {
+        StormSketch::grid(self).store_native(dst);
     }
 
     fn as_regression(&self) -> Option<&StormSketch> {
@@ -264,6 +288,16 @@ impl RiskSketch for StormClassifierSketch {
 
     fn merge_from(&mut self, other: &Self) {
         StormClassifierSketch::merge_from(self, other)
+    }
+
+    fn load_state(&mut self, src: &[u8], count: u64) {
+        let (grid, cnt) = self.parts_mut();
+        grid.load_native(src);
+        *cnt = count;
+    }
+
+    fn store_state(&self, dst: &mut [u8]) {
+        StormClassifierSketch::grid(self).store_native(dst);
     }
 }
 
@@ -369,6 +403,14 @@ impl RiskSketch for StormModel {
             (StormModel::Classification(a), StormModel::Classification(b)) => a.merge_from(b),
             _ => panic!("merge: task mismatch"),
         }
+    }
+
+    fn load_state(&mut self, src: &[u8], count: u64) {
+        dispatch!(self, m => RiskSketch::load_state(m, src, count))
+    }
+
+    fn store_state(&self, dst: &mut [u8]) {
+        dispatch!(self, m => RiskSketch::store_state(m, dst))
     }
 
     fn as_regression(&self) -> Option<&StormSketch> {
@@ -505,6 +547,44 @@ mod tests {
         }
         assert_eq!(leader.grid().counts_u32(), device.grid().counts_u32());
         assert_eq!(leader.count(), device.count());
+    }
+
+    #[test]
+    fn state_swap_round_trips_counters_and_count() {
+        use crate::config::CounterWidth;
+        for task in [Task::Regression, Task::Classification] {
+            for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
+                let cfg = StormConfig {
+                    rows: 6,
+                    power: 3,
+                    saturating: true,
+                    counter_width: width,
+                    task,
+                    ..Default::default()
+                };
+                let mut rng = Xoshiro256::new(11);
+                let mut src = StormModel::new(cfg, 4, 42);
+                src.insert_batch(&labelled_stream(&mut rng, 40, 3));
+                let mut arena = vec![0u8; src.bytes()];
+                src.store_state(&mut arena);
+                // A freshly built model paged in from the arena is
+                // indistinguishable from the original: same counters,
+                // count, and risk estimates.
+                let mut dst = StormModel::new(cfg, 4, 42);
+                dst.load_state(&arena, src.count());
+                assert_eq!(dst.grid().counts_u32(), src.grid().counts_u32(), "{task:?} {width:?}");
+                assert_eq!(dst.count(), src.count());
+                let q = {
+                    let mut t = gen_ball_point(&mut rng, 3, 0.5);
+                    t.push(-1.0);
+                    t
+                };
+                assert_eq!(
+                    dst.estimate_risk_scaled(&q).to_bits(),
+                    src.estimate_risk_scaled(&q).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

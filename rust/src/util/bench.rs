@@ -4,6 +4,17 @@
 //! that drive this module: per-benchmark warmup, adaptive iteration count
 //! targeting a fixed measurement window, and mean / stddev / p50 / p99 /
 //! throughput reporting on stdout in a stable, grep-friendly format.
+//!
+//! Every suite is a plain standalone binary — regenerate any
+//! `BENCH_<name>.json` with:
+//!
+//! ```text
+//! cargo bench --bench bench_<name>            # full measurement window
+//! STORM_BENCH_FAST=1 cargo bench --bench bench_<name>   # CI-speed pass
+//! ```
+//!
+//! Each suite ends by calling [`JsonReporter::record_peak_rss`] so the
+//! JSON also carries the run's peak resident set size.
 
 use crate::util::mathx::{mean, percentile, variance};
 use std::time::Instant;
@@ -139,6 +150,25 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or 0 where the procfs field is unavailable
+/// (non-Linux). A high-water mark, not a current reading: call it at
+/// the end of a bench run to capture the run's worst-case footprint.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    parse_vm_hwm(&status).unwrap_or(0)
+}
+
+/// Parse the `VmHWM:` line of a `/proc/<pid>/status` dump into bytes.
+fn parse_vm_hwm(status: &str) -> Option<u64> {
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    // Format: `VmHWM:	   12345 kB`.
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// Collects the results of one bench suite and emits a machine-readable
 /// `BENCH_<suite>.json` alongside the human stdout report, so the perf
 /// trajectory is tracked across PRs (EXPERIMENTS.md §Perf and
@@ -197,6 +227,15 @@ impl JsonReporter {
     pub fn record_scalar(&mut self, name: &str, value: f64) {
         println!("metric {name:<35} value={value:.3}");
         self.entries.push(Entry::Scalar { name: name.to_string(), value });
+    }
+
+    /// Record the process peak RSS (see [`peak_rss_bytes`]) as a
+    /// `peak_rss_bytes` scalar. Every bench main calls this just before
+    /// [`JsonReporter::write`] so each `BENCH_<suite>.json` carries the
+    /// suite's memory high-water mark alongside its timings; 0 on
+    /// platforms without `/proc/self/status`.
+    pub fn record_peak_rss(&mut self) {
+        self.record_scalar("peak_rss_bytes", peak_rss_bytes() as f64);
     }
 
     /// Render all recorded results as a JSON array.
@@ -324,6 +363,16 @@ mod tests {
         assert!(json.contains("\"name\": \"wire_bytes_sparse\", \"value\": 512.000"));
         assert!(json.contains("\"name\": \"timed\""));
         assert_eq!(json.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn parses_vm_hwm_and_tolerates_absence() {
+        let status = "Name:\tstorm\nVmPeak:\t  999 kB\nVmHWM:\t   12345 kB\nThreads:\t4\n";
+        assert_eq!(parse_vm_hwm(status), Some(12345 * 1024));
+        assert_eq!(parse_vm_hwm("Name:\tstorm\n"), None);
+        assert_eq!(parse_vm_hwm("VmHWM:\tgarbage kB\n"), None);
+        #[cfg(target_os = "linux")]
+        assert!(peak_rss_bytes() > 0, "procfs should report a high-water mark on Linux");
     }
 
     #[test]

@@ -29,6 +29,8 @@ fn base_cfg(dataset: &str) -> RunConfig {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: None,
+            workers: 0,
+            fan_in: 2,
             seed: 2,
         },
         artifacts_dir: None,
@@ -142,6 +144,66 @@ fn chaotic_fleet_matches_ideal_fleet_counters_end_to_end() {
     assert_eq!(ideal.faults.total(), 0);
     assert!(chaotic.faults.total() > 0, "chaos was vacuous");
     assert_eq!(chaotic.rounds.len(), 4, "all rounds close under chaos");
+}
+
+/// Cheap procedural stream so the scale smoke costs bytes per device,
+/// not a dataset shard per device.
+struct SmokeStream {
+    left: usize,
+    state: u64,
+}
+
+impl storm::data::stream::StreamSource for SmokeStream {
+    fn next_example(&mut self) -> Option<storm::data::stream::Example> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        self.state = self.state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let u = |shift: u32| ((self.state >> shift) & 0xFFFF) as f64 / 65536.0 - 0.5;
+        Some(vec![u(3), u(19), u(35), u(51)])
+    }
+
+    fn remaining_hint(&self) -> Option<usize> {
+        Some(self.left)
+    }
+}
+
+/// CI `scale-smoke` leg: a 10k-device fleet through the worker-pool
+/// executor — star and fan-in-capped deep tree — must finish a 2-round
+/// sync in seconds, not minutes, and account every example exactly.
+/// Ignored by default (it is a wall-clock assertion, not a logic test);
+/// CI runs it with `cargo test -- --ignored scale_smoke`.
+#[test]
+#[ignore = "scale smoke: run explicitly (CI scale-smoke leg)"]
+fn scale_smoke_10k_devices_two_rounds() {
+    use storm::data::stream::StreamSource;
+    let devices = 10_000usize;
+    let per_device = 4usize;
+    let storm = StormConfig { rows: 8, power: 3, saturating: true, ..Default::default() };
+    for topo in [Topology::Star, Topology::Deep { max_fan_in: 16 }] {
+        let mut fleet = base_cfg("autos").fleet;
+        fleet.devices = devices;
+        fleet.batch = 4;
+        fleet.sync_rounds = 2;
+        fleet.workers = 2;
+        fleet.device_counter_width = Some(storm::config::CounterWidth::U8);
+        let streams: Vec<Box<dyn StreamSource>> = (0..devices)
+            .map(|d| {
+                Box::new(SmokeStream { left: per_device, state: d as u64 + 1 })
+                    as Box<dyn StreamSource>
+            })
+            .collect();
+        let r = storm::edge::fleet::run_fleet(fleet, storm, topo, 4, 17, streams);
+        assert_eq!(r.examples, (devices * per_device) as u64, "{topo:?}");
+        assert_eq!(r.rounds.len(), 2, "{topo:?}");
+        assert_eq!(r.sketch.count(), (devices * per_device) as u64, "{topo:?}");
+        assert!(
+            r.wall_secs < 60.0,
+            "{topo:?}: 10k-device round took {:.1}s — executor scaling regressed",
+            r.wall_secs
+        );
+    }
 }
 
 #[test]

@@ -354,6 +354,10 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: None,
+            // Rotate executor pool sizes: the schedule must never show
+            // in the counters.
+            workers: 1 + case % 3,
+            fan_in: 2,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -392,9 +396,10 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
         let n_examples = 80 + (rng.next_u64() % 140) as usize;
         let devices = 2 + (case % 4);
         let rounds = 2 + (case % 5);
-        let topo = match case % 3 {
+        let topo = match case % 4 {
             0 => Topology::Star,
             1 => Topology::Tree { fanout: 2 },
+            2 => Topology::Deep { max_fan_in: 3 },
             _ => Topology::Chain,
         };
         let storm = StormConfig {
@@ -422,6 +427,11 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             min_quorum: if case % 2 == 0 { 0 } else { 1 + case % devices },
             faults_seed: None,
             device_counter_width: None,
+            // The headline invariant must hold through the arena
+            // executor at every pool size — including pools larger
+            // than the fleet.
+            workers: [1, 2, 8][case % 3],
+            fan_in: 2,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -501,6 +511,9 @@ fn prop_widening_merge_exact_without_saturation() {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: Some(device_w),
+            // Widening merges must stay exact at every pool size.
+            workers: [1, 2, 8][case % 3],
+            fan_in: 2,
             seed: 0,
         };
         let leader_storm = StormConfig { counter_width: leader_w, ..storm_u32 };
@@ -676,6 +689,8 @@ fn prop_classifier_merge_equals_concatenation_all_widths_and_topologies() {
             min_quorum: 0,
             faults_seed: None,
             device_counter_width: None,
+            workers: 1 + case % 2,
+            fan_in: 2,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
