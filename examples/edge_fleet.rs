@@ -63,6 +63,9 @@ fn main() {
             // Worker-pool executor: 0 = one worker per hardware core.
             workers: 0,
             fan_in: 2,
+            // Delta-level DP and leader decay both off: the seed pipeline.
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 17,
         },
         artifacts_dir: Some("artifacts".to_string()),

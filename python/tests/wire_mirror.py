@@ -17,6 +17,7 @@ MAGIC = 0x53544F52
 FLAG_DENSE = 0
 FLAG_SPARSE = 1
 FLAG_TASK_CLASSIFICATION = 2
+FLAG_PRIVATE = 16
 
 
 def fnv1a(data: bytes) -> int:
@@ -60,22 +61,28 @@ def encode_delta(
     classification=False,
     family=0,
     density_permille=None,
+    private=False,
 ) -> bytes:
     """v2 (u32 dense-family regression) or v3 (narrow width,
-    classification, and/or a structured hash family).
+    classification, a structured hash family, and/or a private delta).
 
     ``family`` is the 2-bit code in flags bits 2-3 (0 = dense, 1 = sparse
     Rademacher, 2 = Hadamard); the sparse family appends its density
     per-mille as a little-endian u16 right after the flags byte.
+    ``private`` sets flags bit 4 (DP-noised increments) and forces v3.
     """
-    v3 = width_bytes != 4 or classification or family != 0
+    v3 = width_bytes != 4 or classification or family != 0 or private
     body = header(3 if v3 else 2, power, rows, dim, seed, count)
     body += struct.pack("<Q", epoch)
     if v3:
         body += bytes([width_bytes])
     tag_bits = 0
     if v3:
-        tag_bits = (FLAG_TASK_CLASSIFICATION if classification else 0) | (family << 2)
+        tag_bits = (
+            (FLAG_TASK_CLASSIFICATION if classification else 0)
+            | (family << 2)
+            | (FLAG_PRIVATE if private else 0)
+        )
     density = struct.pack("<H", density_permille) if (v3 and family == 1) else b""
     nonzero = [(i, c) for i, c in enumerate(counts) if c != 0]
     if len(nonzero) * 2 <= len(counts):  # populated fraction <= 50%
@@ -151,6 +158,12 @@ def fixtures():
         "GOLDEN_HADAMARD_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1, family=2),
         "GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX": encode_delta(
             **d16, width_bytes=2, classification=True, family=1, density_permille=100
+        ),
+        # Private deltas: flags bit 4 set (always v3, even u32 regression).
+        "GOLDEN_PRIVATE_U32_SPARSE_HEX": encode_delta(**s, private=True),
+        "GOLDEN_PRIVATE_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1, private=True),
+        "GOLDEN_PRIVATE_CLF_U16_DENSE_HEX": encode_delta(
+            **d16, width_bytes=2, classification=True, private=True
         ),
     }
 

@@ -29,6 +29,8 @@ fn fleet_cfg(devices: usize, sync_rounds: usize) -> FleetConfig {
         device_counter_width: None,
         workers: 0,
         fan_in: 2,
+        epsilon_per_round: 0.0,
+        decay_keep_permille: 1000,
         seed: 0,
     }
 }
@@ -202,6 +204,35 @@ fn main() {
             &format!("fleet_chaos_drops_drop{drop_per_mille}pm"),
             r.faults.drops as f64,
         );
+    }
+
+    section("fleet: private deltas + decayed leader (4 devices, star, 8 rounds)");
+    // EXPERIMENTS.md §Privacy + drift reads these scalars: the wire
+    // overhead of noised v3 frames (noising zero cells densifies a
+    // sparse round) and the wall cost of the leader's per-round decay
+    // pass, each against the same exact baseline run.
+    {
+        let streams = partition_streams(&ds, 4, None);
+        let exact =
+            run_fleet(fleet_cfg(4, 8), storm_cfg, Topology::Star, ds.dim() + 1, 3, streams);
+        let mut pcfg = fleet_cfg(4, 8);
+        pcfg.epsilon_per_round = 0.5;
+        let streams = partition_streams(&ds, 4, None);
+        let private = run_fleet(pcfg, storm_cfg, Topology::Star, ds.dim() + 1, 3, streams);
+        assert_eq!(private.examples, exact.examples, "DP must not drop examples");
+        json.record_scalar("fleet_net_bytes_exact_4dev_8rounds", exact.network.bytes as f64);
+        json.record_scalar(
+            "fleet_net_bytes_private_eps05_4dev_8rounds",
+            private.network.bytes as f64,
+        );
+        json.record_scalar("fleet_wall_secs_exact_4dev_8rounds", exact.wall_secs);
+        json.record_scalar("fleet_wall_secs_private_eps05_4dev_8rounds", private.wall_secs);
+        let mut dcfg = fleet_cfg(4, 8);
+        dcfg.decay_keep_permille = 900;
+        let streams = partition_streams(&ds, 4, None);
+        let decayed = run_fleet(dcfg, storm_cfg, Topology::Star, ds.dim() + 1, 3, streams);
+        assert_eq!(decayed.examples, exact.examples, "decay must not drop examples");
+        json.record_scalar("fleet_wall_secs_decay900_4dev_8rounds", decayed.wall_secs);
     }
 
     section("fleet: scale sweep (worker-pool executor, arena device state)");

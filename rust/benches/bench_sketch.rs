@@ -237,6 +237,30 @@ fn main() {
         },
     ));
 
+    section("sketch: private release + leader decay (delta-level DP)");
+    // Noised-delta encode: the two-sided geometric mechanism draws one
+    // integer per counter cell before encode, and noising zero cells
+    // densifies a frame — both overheads land here. EXPERIMENTS.md
+    // §Privacy + drift reads these scalars.
+    let mut noised = busy.clone();
+    storm::sketch::privacy::noise_delta(&mut noised, 0.5, 0xBE9C);
+    json.record_scalar("delta_wire_bytes_noised_eps05_64ex_R100", encode_delta(&noised).len() as f64);
+    json.record(bench_items(
+        "delta_noise_and_encode_eps05_R100",
+        cfg,
+        busy.counts.len() as u64,
+        || {
+            let mut d = busy.clone();
+            storm::sketch::privacy::noise_delta(&mut d, 0.5, 0xBE9C);
+            black_box(encode_delta(&d));
+        },
+    ));
+    // Decayed fold: the leader's per-round floor(c * keep / 1000) pass.
+    json.record(bench_items("leader_decay_keep900_R100", cfg, (100 * 16) as u64, || {
+        leader.decay(900);
+        black_box(leader.count());
+    }));
+
     section("sketch: counter-width tiers (u8 / u16 / u32)");
     // The width sweep: same geometry, same stream, three cell widths —
     // memory and dense-wire bytes scale 1:2:4 while the hash work is

@@ -333,6 +333,21 @@ pub struct FleetConfig {
     /// Maximum children per aggregation node for `tree` / `deep`
     /// topologies (must be >= 2). Star and chain ignore it.
     pub fan_in: usize,
+    /// Per-round differential-privacy budget for *delta-level* DP
+    /// (`[privacy] epsilon_per_round` / `--epsilon`): each device adds
+    /// two-sided geometric noise to its per-epoch delta counters before
+    /// encoding, so the coordinator only ever sees noised integers.
+    /// Spend composes linearly across sync rounds (sequential
+    /// composition); the driver surfaces the running ledger. 0 = off —
+    /// the shipped bytes are bit-identical to the non-private pipeline.
+    pub epsilon_per_round: f64,
+    /// Leader-side exponential counter decay at round boundaries, as the
+    /// *kept* fraction in per-mille (`[privacy] decay_keep`, a float in
+    /// (0, 1] in the TOML). 900 keeps 90% of every leader counter per
+    /// round (half-life ≈ 6.6 rounds), down-weighting stale data under
+    /// distribution shift. 1000 = off — the leader fold stays exactly
+    /// cumulative, preserving the bit-identity invariants.
+    pub decay_keep_permille: u16,
     pub seed: u64,
 }
 
@@ -350,6 +365,8 @@ impl Default for FleetConfig {
             device_counter_width: None,
             workers: 0,
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 0,
         }
     }
@@ -491,6 +508,18 @@ impl RunConfig {
                 }
                 ("fleet", "seed") => {
                     cfg.fleet.seed = value.as_usize().map_err(ConfigError::Parse)? as u64
+                }
+                ("privacy", "epsilon_per_round") => {
+                    cfg.fleet.epsilon_per_round =
+                        value.as_f64().map_err(ConfigError::Parse)?
+                }
+                ("privacy", "decay_keep") => {
+                    // Stored in per-mille like sparse_density; out-of-range
+                    // values survive the conversion so `validate` can
+                    // report them against (0, 1].
+                    let keep = value.as_f64().map_err(ConfigError::Parse)?;
+                    let permille = (keep * 1000.0).round().clamp(0.0, u16::MAX as f64);
+                    cfg.fleet.decay_keep_permille = permille as u16;
                 }
                 (s, k) => {
                     return Err(ConfigError::Parse(format!("unknown config key [{s}] {k}")));
@@ -714,6 +743,10 @@ device_counter_width = "u8"
 workers = 4
 fan_in = 8
 seed = 7
+
+[privacy]
+epsilon_per_round = 0.5
+decay_keep = 0.9
 "#,
         )
         .unwrap();
@@ -729,6 +762,8 @@ seed = 7
         assert_eq!(cfg.fleet.faults_seed, Some(1234));
         assert_eq!(cfg.fleet.workers, 4);
         assert_eq!(cfg.fleet.fan_in, 8);
+        assert_eq!(cfg.fleet.epsilon_per_round, 0.5);
+        assert_eq!(cfg.fleet.decay_keep_permille, 900);
         assert_eq!(cfg.artifacts_dir.as_deref(), Some("artifacts"));
     }
 
@@ -741,6 +776,31 @@ seed = 7
         assert_eq!(cfg.fleet.device_counter_width, None, "devices follow [storm] by default");
         assert_eq!(cfg.fleet.workers, 0, "default worker count is auto");
         assert_eq!(cfg.fleet.fan_in, 2, "default fan-in matches the seed tree fanout");
+        assert_eq!(cfg.fleet.epsilon_per_round, 0.0, "privacy defaults off");
+        assert_eq!(cfg.fleet.decay_keep_permille, 1000, "decay defaults off");
+    }
+
+    #[test]
+    fn privacy_knobs_parse_and_reject_bad_values() {
+        let cfg =
+            RunConfig::from_toml_str("[privacy]\nepsilon_per_round = 1.25\n").unwrap();
+        assert_eq!(cfg.fleet.epsilon_per_round, 1.25);
+        assert_eq!(cfg.fleet.decay_keep_permille, 1000, "decay stays off");
+        let cfg = RunConfig::from_toml_str("[privacy]\ndecay_keep = 0.5\n").unwrap();
+        assert_eq!(cfg.fleet.decay_keep_permille, 500);
+        // decay_keep = 1.0 (no decay) is the inclusive upper edge.
+        let cfg = RunConfig::from_toml_str("[privacy]\ndecay_keep = 1.0\n").unwrap();
+        assert_eq!(cfg.fleet.decay_keep_permille, 1000);
+        for bad in [
+            "epsilon_per_round = -0.5",
+            "decay_keep = 0.0",
+            "decay_keep = -0.1",
+            "decay_keep = 1.5",
+            "budget = 3",
+        ] {
+            let text = format!("[privacy]\n{bad}\n");
+            assert!(RunConfig::from_toml_str(&text).is_err(), "{bad} accepted");
+        }
     }
 
     #[test]

@@ -79,6 +79,20 @@ pub fn validate(cfg: &RunConfig) -> Result<(), String> {
             cfg.fleet.fan_in
         ));
     }
+    if !cfg.fleet.epsilon_per_round.is_finite() || cfg.fleet.epsilon_per_round < 0.0 {
+        return Err(format!(
+            "privacy.epsilon_per_round must be finite and >= 0 (got {}); 0 disables \
+             delta-level DP",
+            cfg.fleet.epsilon_per_round
+        ));
+    }
+    if cfg.fleet.decay_keep_permille == 0 || cfg.fleet.decay_keep_permille > 1000 {
+        return Err(format!(
+            "privacy.decay_keep must be in (0, 1] — the fraction of every leader \
+             counter kept per round (got {}); use 1.0 to disable decay",
+            cfg.fleet.decay_keep_permille as f64 / 1000.0
+        ));
+    }
     Ok(())
 }
 
@@ -164,6 +178,37 @@ mod tests {
         let mut c = base();
         c.fleet.fan_in = 0;
         assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.epsilon_per_round = -1.0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.epsilon_per_round = f64::NAN;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.epsilon_per_round = f64::INFINITY;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.decay_keep_permille = 0;
+        assert!(validate(&c).is_err());
+
+        let mut c = base();
+        c.fleet.decay_keep_permille = 1001;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn privacy_knob_edges_are_valid() {
+        let mut c = base();
+        c.fleet.epsilon_per_round = 0.0;
+        c.fleet.decay_keep_permille = 1000;
+        assert!(validate(&c).is_ok(), "both knobs off is the seed default");
+        c.fleet.epsilon_per_round = 1e9;
+        c.fleet.decay_keep_permille = 1;
+        assert!(validate(&c).is_ok(), "huge epsilon and aggressive decay are legal");
     }
 
     #[test]

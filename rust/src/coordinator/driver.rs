@@ -49,6 +49,13 @@ pub struct RoundPoint {
     /// Catch-up (retransmission) bytes within the round — nonzero only
     /// when faults made devices re-ship earlier rounds' increments.
     pub retransmit_bytes: u64,
+    /// Cumulative per-device privacy budget spent when the round closed:
+    /// `(round + 1) x epsilon_per_round` under basic sequential
+    /// composition. Retransmitted frames re-ship the *same* noised bytes
+    /// (the noise is seeded by `(family_seed, device, epoch)`), so
+    /// catch-up traffic never spends extra budget. 0.0 when privacy is
+    /// off.
+    pub epsilon_spent: f64,
 }
 
 /// Everything the driver measures.
@@ -92,6 +99,13 @@ pub struct TrainReport {
     /// Per-sync-round risk/bytes trace (the communication-vs-rounds
     /// curve; see EXPERIMENTS.md §Communication vs. rounds).
     pub rounds: Vec<RoundPoint>,
+    /// Total per-device epsilon the run spent — the epsilon ledger:
+    /// `sync_rounds x epsilon_per_round` composed sequentially. Every
+    /// device ships one noised delta per round against its own stream,
+    /// so the per-device spend (not the sum over devices) is the
+    /// meaningful privacy loss. 0.0 when `[privacy] epsilon_per_round`
+    /// is unset.
+    pub epsilon_total: f64,
 }
 
 impl TrainReport {
@@ -103,9 +117,14 @@ impl TrainReport {
         } else {
             String::new()
         };
+        let privacy = if self.epsilon_total > 0.0 {
+            format!(" epsilon={:.3}", self.epsilon_total)
+        } else {
+            String::new()
+        };
         match self.task {
             Task::Regression => format!(
-                "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}",
+                "{}: storm-mse={:.4e} ls-mse={:.4e} (ratio {:.2}) param-err={:.3} sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}{}",
                 self.dataset,
                 self.mse_storm,
                 self.mse_ls,
@@ -117,9 +136,10 @@ impl TrainReport {
                 self.network_bytes,
                 self.rounds.len().max(1),
                 chaos,
+                privacy,
             ),
             Task::Classification => format!(
-                "{}: margin-risk={:.4e} probe-risk={:.4e} acc={:.1}% sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}",
+                "{}: margin-risk={:.4e} probe-risk={:.4e} acc={:.1}% sketch={}B device-sketch={}B raw={}B net={}B rounds={}{}{}",
                 self.dataset,
                 self.mse_storm,
                 self.mse_ls,
@@ -130,6 +150,7 @@ impl TrainReport {
                 self.network_bytes,
                 self.rounds.len().max(1),
                 chaos,
+                privacy,
             ),
         }
     }
@@ -293,8 +314,14 @@ pub fn train(
             examples,
             bytes: result.network.round_bytes(round),
             retransmit_bytes: result.network.round_retransmit_bytes(round),
+            epsilon_spent: (round + 1) as f64 * cfg.fleet.epsilon_per_round,
         })
         .collect();
+    // The epsilon ledger composes sequentially over the rounds that
+    // actually closed: each round every device released one noised delta
+    // of its own stream's increments. Retransmits replay identical bytes
+    // (deterministic per-(device, epoch) noise), so they are not charged.
+    let epsilon_total = rounds.last().map_or(0.0, |r| r.epsilon_spent);
 
     // 4. Score against an exact reference on the same scaled data:
     //    least squares + MSE for regression; for classification, the
@@ -364,6 +391,7 @@ pub fn train(
         train_wall_secs: train_secs,
         trace,
         rounds,
+        epsilon_total,
     })
 }
 
@@ -396,6 +424,8 @@ mod tests {
                 device_counter_width: None,
                 workers: 0,
                 fan_in: 2,
+                epsilon_per_round: 0.0,
+                decay_keep_permille: 1000,
                 seed: 1,
             },
             artifacts_dir: None,
@@ -510,6 +540,54 @@ mod tests {
             assert!(r.retransmit_bytes <= r.bytes, "{r:?}");
         }
         assert!(a.summary().contains("faults="));
+    }
+
+    #[test]
+    fn private_training_reports_a_composed_epsilon_ledger() {
+        // Privacy on: the report carries the sequentially-composed
+        // per-device budget — exactly rounds x epsilon_per_round — the
+        // per-round ledger grows linearly, and the summary surfaces it.
+        let ds = synthetic::synth2d_regression(300, 0.5, 0.1, 0.02, 4);
+        let mut cfg = quick_cfg();
+        cfg.fleet.sync_rounds = 4;
+        cfg.fleet.epsilon_per_round = 0.75;
+        let a = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.rounds.len(), 4);
+        assert_eq!(a.epsilon_total, 4.0 * 0.75);
+        for (i, r) in a.rounds.iter().enumerate() {
+            assert_eq!(r.epsilon_spent, (i + 1) as f64 * 0.75, "{r:?}");
+        }
+        assert!(a.summary().contains("epsilon=3.000"), "{}", a.summary());
+        // Example accounting stays exact: only counter cells are noised.
+        assert_eq!(a.examples, 300);
+        // Deterministic noise seeds => deterministic private training.
+        let b = train(&cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.theta, b.theta);
+    }
+
+    #[test]
+    fn privacy_off_reports_a_zero_ledger_and_no_summary_field() {
+        let ds = synthetic::synth2d_regression(200, 0.4, 0.0, 0.05, 6);
+        let report = train(&quick_cfg(), ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(report.epsilon_total, 0.0);
+        assert!(report.rounds.iter().all(|r| r.epsilon_spent == 0.0));
+        assert!(!report.summary().contains("epsilon="), "{}", report.summary());
+    }
+
+    #[test]
+    fn decayed_training_still_learns_and_stays_deterministic() {
+        // Leader-side decay changes the sketch (old rounds fade) but the
+        // pipeline must still train a clearly-better-than-zero model and
+        // reproduce itself run to run.
+        let ds = synthetic::synth2d_regression(600, 0.7, 0.0, 0.02, 3);
+        let mut cfg = quick_cfg();
+        cfg.fleet.sync_rounds = 3;
+        cfg.fleet.decay_keep_permille = 800;
+        let a = train(&cfg, ds.clone(), Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.examples, 600, "device-side accounting is decay-free");
+        assert!(a.mse_storm.is_finite());
+        let b = train(&cfg, ds, Topology::Star, QueryBackend::Rust).unwrap();
+        assert_eq!(a.theta, b.theta);
     }
 
     #[test]

@@ -121,6 +121,32 @@ pub fn synth2d_regression(n: usize, slope: f64, intercept: f64, noise: f64, seed
     Dataset::new("synth2d-reg", x, y)
 }
 
+/// Non-stationary 2-D regression stream: the planted slope jumps from
+/// `slope_a` to `slope_b` at example `shift_at`, in stream order — the
+/// drift benchmark for exponentially-decayed leader counters. Rows are
+/// emitted in time order, so round r of an R-round sync covers the
+/// stream slice `[r*n/R, (r+1)*n/R)` and the shift lands mid-run.
+pub fn synth2d_drift(
+    n: usize,
+    slope_a: f64,
+    slope_b: f64,
+    shift_at: usize,
+    noise: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Xoshiro256::new(seed ^ 0xD81F);
+    let mut x = Matrix::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let slope = if r < shift_at { slope_a } else { slope_b };
+        let t = rng.uniform_range(-1.0, 1.0);
+        x[(r, 0)] = t;
+        x[(r, 1)] = 1.0;
+        y.push(slope * t + rng.gaussian() * noise);
+    }
+    Dataset::new("synth2d-drift", x, y)
+}
+
 /// 2-D synthetic binary classification for Figure 5: two gaussian blobs
 /// with labels in {-1, +1}, separated along a random direction.
 pub fn synth2d_classification(n: usize, margin: f64, noise: f64, seed: u64) -> Dataset {
@@ -191,6 +217,25 @@ mod tests {
         let theta = lstsq(&ds.x, &ds.y, 0.0, LstsqMethod::Qr);
         assert!((theta[0] - 0.8).abs() < 0.02, "slope={}", theta[0]);
         assert!((theta[1] - 0.1).abs() < 0.02, "intercept={}", theta[1]);
+    }
+
+    #[test]
+    fn synth2d_drift_plants_two_regimes() {
+        let n = 800;
+        let ds = synth2d_drift(n, 0.8, -0.8, n / 2, 0.01, 9);
+        assert_eq!(ds.x.shape(), (n, 2));
+        // LS on each half recovers its own slope; the halves disagree.
+        let half = |lo: usize, hi: usize| {
+            let sub = ds.subset(&(lo..hi).collect::<Vec<_>>(), "drift-half");
+            lstsq(&sub.x, &sub.y, 0.0, LstsqMethod::Qr)
+        };
+        let pre = half(0, n / 2);
+        let post = half(n / 2, n);
+        assert!((pre[0] - 0.8).abs() < 0.05, "pre slope {}", pre[0]);
+        assert!((post[0] + 0.8).abs() < 0.05, "post slope {}", post[0]);
+        // Deterministic per seed.
+        let again = synth2d_drift(n, 0.8, -0.8, n / 2, 0.01, 9);
+        assert_eq!(ds.y, again.y);
     }
 
     #[test]

@@ -26,7 +26,8 @@ use super::faults::{drain_due, ChaosLink, Delivery, FaultPlan};
 use super::network::Message;
 use crate::config::StormConfig;
 use crate::data::stream::StreamSource;
-use crate::sketch::delta::SketchSnapshot;
+use crate::sketch::delta::{SketchDelta, SketchSnapshot};
+use crate::sketch::privacy::noise_delta;
 use crate::sketch::serialize::encode_delta;
 use crate::sketch::RiskSketch;
 
@@ -56,6 +57,22 @@ pub struct DeviceConfig {
     /// `downtime` rounds starting at `round` (resolved fleet-wide from
     /// the plan's single crash/restart).
     pub crash: Option<(u64, u64)>,
+    /// Per-round differential-privacy budget. > 0 adds two-sided
+    /// geometric noise to every shipped delta's counters before encoding
+    /// (the wire copy only — the device's own sketch stays exact). The
+    /// noise is seeded from `(family_seed, id, epoch)`, so a retried or
+    /// catch-up frame for the same epoch re-ships byte-identical noise
+    /// and a retransmit never spends extra privacy budget. 0 = off,
+    /// bit-identical to the non-private pipeline.
+    pub epsilon: f64,
+}
+
+/// Deterministic per-(device, epoch) noise seed — see
+/// [`DeviceConfig::epsilon`].
+fn noise_seed(family_seed: u64, device: usize, epoch: u64) -> u64 {
+    family_seed
+        ^ (device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ epoch.wrapping_mul(0xD1B5_4A32_D192_ED03)
 }
 
 /// Summary the device thread returns.
@@ -146,6 +163,22 @@ impl DeviceMachine {
         self.buf_capacity
     }
 
+    /// Encode a delta for the wire, noising a copy first when delta-level
+    /// DP is on. Deterministic in `(family_seed, id, epoch)`.
+    fn ship_bytes(&self, delta: &SketchDelta, epoch: u64) -> Vec<u8> {
+        if self.cfg.epsilon > 0.0 {
+            let mut noised = delta.clone();
+            noise_delta(
+                &mut noised,
+                self.cfg.epsilon,
+                noise_seed(self.cfg.family_seed, self.cfg.id, epoch),
+            );
+            encode_delta(&noised)
+        } else {
+            encode_delta(delta)
+        }
+    }
+
     fn last_epoch(&self) -> u64 {
         self.cfg.rounds.max(1) as u64 - 1
     }
@@ -209,7 +242,7 @@ impl DeviceMachine {
         if !delta.is_empty() {
             let catchup = self.unshipped_from < epoch;
             match link.send_class(
-                Message::Delta { from: cfg.id, epoch, payload: encode_delta(&delta).into() },
+                Message::Delta { from: cfg.id, epoch, payload: self.ship_bytes(&delta, epoch).into() },
                 catchup,
             ) {
                 Ok(Delivery::Delivered) => {
@@ -282,7 +315,7 @@ impl DeviceMachine {
                 Message::Delta {
                     from: cfg.id,
                     epoch: last_epoch,
-                    payload: encode_delta(&delta).into(),
+                    payload: self.ship_bytes(&delta, last_epoch).into(),
                 },
                 retrying,
             ) {
@@ -358,6 +391,7 @@ mod tests {
             dim: 3,
             plan: None,
             crash: None,
+            epsilon: 0.0,
         }
     }
 
@@ -655,6 +689,52 @@ mod tests {
         let (merged, done, _) = reassemble(&msgs);
         assert_eq!(done, 50);
         assert_eq!(merged.grid().counts_u32(), reference_sketch(&ds).grid().counts_u32());
+    }
+
+    #[test]
+    fn private_device_ships_deterministic_noised_v3_frames() {
+        // epsilon > 0: every shipped frame carries the privacy bit on the
+        // v3 wire, two identical runs ship byte-identical frames (the
+        // no-double-spend property rests on this determinism), and the
+        // device's own report still accounts every example exactly.
+        let run = || {
+            let ds = toy_dataset(50);
+            let (link, rx, _) = Link::new(64, 0, 0);
+            let mut cfg = dev_cfg(11, 4);
+            cfg.epsilon = 0.8;
+            let report = run_device::<StormSketch>(
+                cfg,
+                Box::new(ReplayStream::new(ds)),
+                plain(link),
+            );
+            (report, rx.iter().collect::<Vec<Message>>())
+        };
+        let (report, msgs) = run();
+        assert_eq!(report.examples, 50);
+        let mut frames = 0;
+        for m in &msgs {
+            if let Message::Delta { payload, .. } = m {
+                frames += 1;
+                assert_eq!(
+                    u16::from_le_bytes(payload[4..6].try_into().unwrap()),
+                    3,
+                    "private deltas must ship the v3 wire"
+                );
+                let d = decode_delta(payload).unwrap();
+                assert!(d.private, "privacy bit must ride the wire");
+            }
+        }
+        assert!(frames > 0, "the device shipped nothing");
+        let (_, msgs_again) = run();
+        let payloads = |ms: &[Message]| {
+            ms.iter()
+                .filter_map(|m| match m {
+                    Message::Delta { payload, .. } => Some(payload.to_vec()),
+                    _ => None,
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(payloads(&msgs), payloads(&msgs_again), "noise must be seed-deterministic");
     }
 
     /// Labelled toy dataset: same features, ±1 labels.

@@ -292,6 +292,7 @@ pub(crate) fn run_fleet_pooled<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
             storm: device_storm,
             family_seed,
             dim,
+            epsilon: fleet.epsilon_per_round,
             plan: fault_plan,
             crash: crash.and_then(|(dev, at, down)| (dev == id).then_some((at, down))),
         };
@@ -321,6 +322,7 @@ pub(crate) fn run_fleet_pooled<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
         quorum,
         rounds as u64,
         workers,
+        fleet.decay_keep_permille,
     );
 
     // The cooperative round loop: device phase, then one leaf-to-leader

@@ -441,6 +441,7 @@ pub fn run_fleet_model_threaded<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
             dim,
             plan: fault_plan,
             crash: crash.and_then(|(dev, at, down)| (dev == id).then_some((at, down))),
+            epsilon: fleet.epsilon_per_round,
         };
         let link = uplink.remove(&id).expect("device uplink");
         device_handles.push(std::thread::spawn(move || run_device::<M>(cfg, stream, link)));
@@ -478,6 +479,7 @@ pub fn run_fleet_model_threaded<M: RiskSketch + 'static, F: FnMut(u64, &M)>(
         quorum,
         rounds as u64,
         1, // sequential folds: this is the reference schedule
+        fleet.decay_keep_permille,
     );
     while !leader.is_done() {
         match leader_rx.recv() {
@@ -691,6 +693,13 @@ pub(crate) struct LeaderMachine<M> {
     expect: usize,
     quorum: usize,
     fold_workers: usize,
+    /// Round-boundary exponential decay: every close first scales the
+    /// leader's counters (and count) to `decay_keep_permille / 1000`, so
+    /// the round's fresh increments enter at full weight while older
+    /// rounds fade geometrically. 1000 (the default) is an exact no-op —
+    /// the cumulative algebra and its bit-identity invariants hold only
+    /// there.
+    decay_keep_permille: u16,
     sketch: M,
     pending: BTreeMap<u64, RoundAccum>,
     round_stats: Vec<RoundStat>,
@@ -708,11 +717,13 @@ impl<M: RiskSketch> LeaderMachine<M> {
         quorum: usize,
         rounds: u64,
         fold_workers: usize,
+        decay_keep_permille: u16,
     ) -> LeaderMachine<M> {
         LeaderMachine {
             expect: children.len(),
             quorum,
             fold_workers: fold_workers.max(1),
+            decay_keep_permille,
             sketch,
             pending: BTreeMap::new(),
             round_stats: Vec::new(),
@@ -749,6 +760,7 @@ impl<M: RiskSketch> LeaderMachine<M> {
                 let sketch = &mut self.sketch;
                 let round_stats = &mut self.round_stats;
                 let fold_workers = self.fold_workers;
+                let decay_keep = self.decay_keep_permille;
                 end_round_and_drain(
                     &mut self.pending,
                     &mut self.next_round,
@@ -757,6 +769,11 @@ impl<M: RiskSketch> LeaderMachine<M> {
                     e,
                     |round, mut acc| {
                         acc.flush(fold_workers);
+                        // Round boundary: fade the past before folding the
+                        // present (exact no-op at the default 1000).
+                        if decay_keep < 1000 {
+                            sketch.decay(decay_keep);
+                        }
                         if let Some(delta) = &acc.delta {
                             sketch.apply_delta(delta);
                         }
@@ -812,6 +829,8 @@ mod tests {
             device_counter_width: None,
             workers: 0,
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 0,
         }
     }
@@ -1021,6 +1040,60 @@ mod tests {
                 assert_eq!(d.sketch_bytes, 12 * 8 * width.bytes(), "{width:?}");
             }
         }
+    }
+
+    #[test]
+    fn private_fleet_keeps_exact_tally_and_is_deterministic() {
+        // Delta-level DP: the leader's merged counters carry noise, but
+        // the example tally is exact (delta counts are never noised) and
+        // two identical runs agree bit-for-bit (seeded noise).
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
+        let (reference, n) = reference_sketch(storm, 99);
+        let ds = scaled_ds();
+        let mut cfg = small_fleet_cfg(4, 3);
+        cfg.epsilon_per_round = 0.5;
+        let run = || {
+            let streams = partition_streams(&ds, 4, None);
+            run_fleet(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams)
+        };
+        let result = run();
+        assert_eq!(result.examples, n);
+        assert_eq!(result.sketch.count(), n, "only counter cells are noised");
+        assert_eq!(result.rounds.len(), 3, "privacy never stalls a barrier");
+        assert_ne!(
+            result.sketch.grid().counts_u32(),
+            reference.grid().counts_u32(),
+            "epsilon = 0.5 noise must actually perturb the counters"
+        );
+        let again = run();
+        assert_eq!(result.sketch.grid().counts_u32(), again.sketch.grid().counts_u32());
+    }
+
+    #[test]
+    fn decayed_leader_down_weights_early_rounds() {
+        let storm = StormConfig { rows: 12, power: 3, saturating: true, ..Default::default() };
+        let (reference, n) = reference_sketch(storm, 99);
+        let ds = scaled_ds();
+        let mut cfg = small_fleet_cfg(4, 4);
+        cfg.decay_keep_permille = 500;
+        let streams = partition_streams(&ds, 4, None);
+        let result = run_fleet(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams);
+        assert_eq!(result.examples, n, "ingest accounting is unaffected by decay");
+        assert!(
+            result.sketch.count() < n,
+            "decay must shrink the effective example count ({} !< {n})",
+            result.sketch.count()
+        );
+        let mass = |g: &crate::sketch::counters::CounterGrid| {
+            g.counts_u32().iter().map(|&c| c as u64).sum::<u64>()
+        };
+        assert!(mass(result.sketch.grid()) < mass(reference.grid()));
+        // keep = 1.0 is the exact cumulative run, bit for bit.
+        cfg.decay_keep_permille = 1000;
+        let streams = partition_streams(&ds, 4, None);
+        let cumulative = run_fleet(cfg, storm, Topology::Star, ds.dim() + 1, 99, streams);
+        assert_eq!(cumulative.sketch.grid().counts_u32(), reference.grid().counts_u32());
+        assert_eq!(cumulative.sketch.count(), n);
     }
 
     #[test]

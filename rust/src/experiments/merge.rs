@@ -72,6 +72,8 @@ pub fn run(effort: Effort, seed: u64) -> Table {
             device_counter_width: width,
             workers: 0,
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed,
         };
         let streams = partition_streams(ds, devices, None);

@@ -16,6 +16,7 @@
 //! | merge    | mergeability / fleet equivalence   |
 //! | privacy  | DP release epsilon sweep           |
 //! | energy   | sketch-vs-raw transmit energy      |
+//! | drift    | decayed vs cumulative under shift  |
 
 pub mod fig2;
 pub mod fig3;
@@ -27,6 +28,7 @@ pub mod merge;
 pub mod ablate;
 pub mod privacy;
 pub mod energy;
+pub mod drift;
 
 use crate::metrics::export::Table;
 
@@ -76,6 +78,7 @@ pub fn run(id: &str, effort: Effort, seed: u64) -> Option<Vec<Table>> {
         "privacy" => vec![privacy::run(effort, seed)],
         "energy" => vec![energy::run()],
         "ablate" => vec![ablate::run(effort, seed)],
+        "drift" => vec![drift::run(effort, seed)],
         _ => return None,
     };
     Some(tables)
@@ -83,7 +86,8 @@ pub fn run(id: &str, effort: Effort, seed: u64) -> Option<Vec<Table>> {
 
 /// All known experiment ids.
 pub const ALL: &[&str] = &[
-    "table1", "fig2", "fig3a", "fig3b", "fig4", "fig5", "fig6", "merge", "privacy", "energy", "ablate",
+    "table1", "fig2", "fig3a", "fig3b", "fig4", "fig5", "fig6", "merge", "privacy", "energy",
+    "ablate", "drift",
 ];
 
 #[cfg(test)]

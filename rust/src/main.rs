@@ -126,6 +126,16 @@ fn cmd_train(args: &[String]) -> i32 {
         .opt("sync-rounds", Some("1"), "delta sync rounds (training interleaves between rounds)")
         .opt("min-quorum", Some("0"), "children a barrier waits for (0 = all; stragglers fold late)")
         .opt("faults-seed", None, "seeded chaos schedule: drops/dups/reorders + straggler rounds + one crash")
+        .opt(
+            "epsilon",
+            Some("0"),
+            "per-round differential-privacy budget per device (0 = off, bit-identical wire)",
+        )
+        .opt(
+            "decay-keep",
+            Some("1.0"),
+            "fraction of every leader counter kept per round in (0, 1] (1.0 = no decay)",
+        )
         .opt("iters", Some("400"), "DFO iterations (split across sync rounds)")
         .opt("queries", Some("8"), "DFO probes per iteration")
         .opt("sigma", Some("0.3"), "DFO sphere radius")
@@ -173,6 +183,17 @@ fn cmd_train(args: &[String]) -> i32 {
         if parsed.get("faults-seed").is_some() {
             cfg.fleet.faults_seed = Some(parsed.get_u64("faults-seed")?);
         }
+        cfg.fleet.epsilon_per_round = parsed.get_f64("epsilon")?;
+        anyhow::ensure!(
+            cfg.fleet.epsilon_per_round.is_finite() && cfg.fleet.epsilon_per_round >= 0.0,
+            "--epsilon must be finite and >= 0 (0 disables delta-level DP)"
+        );
+        let decay_keep = parsed.get_f64("decay-keep")?;
+        anyhow::ensure!(
+            decay_keep > 0.0 && decay_keep <= 1.0,
+            "--decay-keep must be a fraction in (0, 1], got {decay_keep}"
+        );
+        cfg.fleet.decay_keep_permille = (decay_keep * 1000.0).round() as u16;
         cfg.optimizer.iters = parsed.get_usize("iters")?;
         cfg.optimizer.queries = parsed.get_usize("queries")?;
         cfg.optimizer.sigma = parsed.get_f64("sigma")?;
@@ -231,12 +252,28 @@ fn cmd_train(args: &[String]) -> i32 {
                 report.fault_events, cfg.fleet.faults_seed, report.retransmit_bytes,
             );
         }
+        if report.epsilon_total > 0.0 {
+            println!(
+                "privacy: epsilon {} per round x {} rounds = {:.3} total (geometric noise on shipped deltas)",
+                cfg.fleet.epsilon_per_round,
+                report.rounds.len().max(1),
+                report.epsilon_total,
+            );
+        }
         if cfg.fleet.sync_rounds > 1 {
-            println!("round  examples  net_bytes  resend_bytes  est_risk");
+            // The eps_spent column appears only under privacy so the
+            // default table stays byte-stable for existing consumers.
+            let eps_col = report.epsilon_total > 0.0;
+            println!(
+                "round  examples  net_bytes  resend_bytes  est_risk{}",
+                if eps_col { "  eps_spent" } else { "" },
+            );
             for r in &report.rounds {
+                let eps =
+                    if eps_col { format!("  {:>9.3}", r.epsilon_spent) } else { String::new() };
                 println!(
-                    "{:>5}  {:>8}  {:>9}  {:>12}  {:.5}",
-                    r.round, r.examples, r.bytes, r.retransmit_bytes, r.risk
+                    "{:>5}  {:>8}  {:>9}  {:>12}  {:.5}{}",
+                    r.round, r.examples, r.bytes, r.retransmit_bytes, r.risk, eps
                 );
             }
         }

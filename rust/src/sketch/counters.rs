@@ -178,6 +178,15 @@ fn fold_into<D: CounterCell, S: CounterCell>(dst: &mut [D], src: &[S], saturatin
     }
 }
 
+/// `c -> floor(c * keep / 1000)` at the native width — the exponential
+/// decay step. Results never exceed the input, so no overflow policy is
+/// involved.
+fn decay_cells<C: CounterCell>(cells: &mut [C], keep_permille: u64) {
+    for c in cells.iter_mut() {
+        *c = C::from_u32_lossy((c.to_u32() as u64 * keep_permille / 1000) as u32);
+    }
+}
+
 /// A frozen copy of a grid's counters (at the grid's native width),
 /// taken at a sync barrier so the next round can ship only what changed
 /// ([`CounterGrid::delta_since`]).
@@ -329,6 +338,23 @@ impl CounterGrid {
     /// sites read as what they are.
     pub fn apply_delta(&mut self, delta: &[u32]) {
         self.add_counts(delta);
+    }
+
+    /// Exponential-decay step for non-stationary streams: scale every
+    /// cell to `floor(c * keep_permille / 1000)` at the native width.
+    /// Applied at round boundaries by a decaying leader, this turns the
+    /// cumulative grid into an exponentially-weighted one (half-life
+    /// `ln 2 / ln(1000 / keep)` rounds), so old concept mass fades
+    /// instead of anchoring risk estimates forever. Integer floor keeps
+    /// the grid in native counters; `keep_permille = 1000` is the exact
+    /// no-op spelling.
+    pub fn decay(&mut self, keep_permille: u16) {
+        assert!(keep_permille <= 1000, "decay keep fraction is per-mille in [0, 1000]");
+        if keep_permille == 1000 {
+            return;
+        }
+        let k = keep_permille as u64;
+        with_store!(&mut self.store, d => decay_cells(d, k));
     }
 
     /// Row `r`'s counters, widened to `u32`.
@@ -538,6 +564,39 @@ mod tests {
         g.add_counts(&[10, 2, 3]); // cell 0 clips at 255
         let delta = g.delta_since(&snap);
         assert_eq!(delta, vec![1, 2, 3], "clipped increments are lost, neighbours exact");
+    }
+
+    #[test]
+    fn decay_floors_at_every_width() {
+        for width in [CounterWidth::U8, CounterWidth::U16, CounterWidth::U32] {
+            let mut g = CounterGrid::with_width(1, 4, true, width);
+            g.add_counts(&[200, 3, 1, 0]);
+            g.decay(500);
+            assert_eq!(g.counts_u32(), vec![100, 1, 0, 0], "{width:?}");
+            // keep = 1000 is the exact no-op.
+            let before = g.clone();
+            g.decay(1000);
+            assert_eq!(g, before, "{width:?}");
+            // keep = 0 forgets everything.
+            g.decay(0);
+            assert_eq!(g.total(), 0, "{width:?}");
+        }
+    }
+
+    #[test]
+    fn repeated_decay_is_exponential() {
+        let mut g = CounterGrid::new(1, 1, true);
+        g.add_counts(&[1 << 20]);
+        for _ in 0..4 {
+            g.decay(500);
+        }
+        assert_eq!(g.get(0, 0), 1 << 16, "four halvings of 2^20");
+    }
+
+    #[test]
+    #[should_panic]
+    fn decay_rejects_keep_above_one() {
+        CounterGrid::new(1, 1, true).decay(1001);
     }
 
     #[test]

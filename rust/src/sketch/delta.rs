@@ -57,6 +57,11 @@ pub struct SketchDelta {
     pub width: CounterWidth,
     /// Dense row-major `R x B` counter increments (each `<= width.max_value()`).
     pub counts: Vec<u32>,
+    /// True when the increments carry DP noise
+    /// ([`super::privacy::noise_delta`]). Stamped on the v3 wire as a
+    /// flag bit; folding a private delta into anything marks the result
+    /// private (noise never washes out by merging).
+    pub private: bool,
 }
 
 impl SketchDelta {
@@ -70,6 +75,7 @@ impl SketchDelta {
             count: 0,
             width: cfg.counter_width,
             counts: vec![0; cfg.rows * cfg.buckets()],
+            private: false,
         }
     }
 
@@ -144,6 +150,7 @@ impl SketchDelta {
             .max(other.width)
             .max(CounterWidth::fitting(max_cell));
         self.count += other.count;
+        self.private |= other.private;
     }
 }
 
@@ -218,6 +225,7 @@ pub fn absorb_all_sharded(acc: &mut SketchDelta, batch: &[SketchDelta], workers:
         acc.epoch = acc.epoch.max(other.epoch);
         acc.count += other.count;
         acc.width = acc.width.max(other.width);
+        acc.private |= other.private;
     }
     acc.width = acc.width.max(CounterWidth::fitting(max_cell));
 }
@@ -243,6 +251,7 @@ impl StormSketch {
             count: self.count() - snap.count,
             width: self.config().counter_width,
             counts: self.grid().delta_since(&snap.grid),
+            private: false,
         }
     }
 
@@ -301,6 +310,7 @@ impl StormClassifierSketch {
             count: self.count() - snap.count,
             width: self.config().counter_width,
             counts: self.grid().delta_since(&snap.grid),
+            private: false,
         }
     }
 
@@ -481,6 +491,26 @@ mod tests {
         tiny.counts[1] = 1;
         wide.absorb(&tiny);
         assert_eq!(wide.width, crate::config::CounterWidth::U32);
+    }
+
+    #[test]
+    fn private_flag_is_sticky_across_folds() {
+        // Noise never washes out by merging: one private operand marks
+        // every downstream fold private, on both fold paths.
+        let mut a = SketchDelta::empty(0, cfg(), 3, 4);
+        let mut b = SketchDelta::empty(0, cfg(), 3, 4);
+        b.private = true;
+        a.merge_from(&b);
+        assert!(a.private);
+        let mut acc = SketchDelta::empty(0, cfg(), 3, 4);
+        let mut tagged = SketchDelta::empty(0, cfg(), 3, 4);
+        tagged.private = true;
+        absorb_all_sharded(&mut acc, &[SketchDelta::empty(0, cfg(), 3, 4), tagged], 4);
+        assert!(acc.private);
+        // And a clean fold stays clean.
+        let mut clean = SketchDelta::empty(0, cfg(), 3, 4);
+        clean.merge_from(&SketchDelta::empty(0, cfg(), 3, 4));
+        assert!(!clean.private);
     }
 
     #[test]

@@ -18,7 +18,11 @@
 //!   `[storm] task = "regression" | "classification"`;
 //! * [`delta`] — epoch-tagged counter deltas, the unit of round-based
 //!   fleet synchronization (`SketchDelta`, `SketchSnapshot`);
-//! * [`privacy`] — differentially-private release (Laplace count noise);
+//! * [`privacy`] — differential privacy: delta-level epsilon-DP via
+//!   two-sided geometric noise on shipped counter increments
+//!   ([`privacy::noise_delta`], `[privacy] epsilon_per_round`) and the
+//!   family-dispatched [`privacy::PrivateStormRelease`] for one-shot
+//!   noisy sketch publication;
 //! * [`serialize`] — the compact wire format devices ship over the
 //!   simulated network (dense v1, sparse delta v2, width- and
 //!   task-tagged v3);

@@ -105,6 +105,14 @@ pub trait RiskSketch: Send + Sized {
     /// Merge another model built with identical configuration/seeds.
     fn merge_from(&mut self, other: &Self);
 
+    /// Exponentially decay the counters *and* the example count to
+    /// `keep_permille / 1000` of their value (integer floor at the native
+    /// width) — the round-boundary down-weighting for non-stationary
+    /// streams (`[privacy] decay_keep`). 1000 is an exact no-op; smaller
+    /// values make the sketch a recency-weighted summary, trading the
+    /// exact merge algebra for drift tracking.
+    fn decay(&mut self, keep_permille: u16);
+
     /// Overwrite this model's counters and example count from arena
     /// bytes (little-endian cells at the grid's native width). This is
     /// the load half of the SoA fleet executor's state swap: a worker
@@ -187,6 +195,10 @@ impl RiskSketch for StormSketch {
 
     fn merge_from(&mut self, other: &Self) {
         StormSketch::merge_from(self, other)
+    }
+
+    fn decay(&mut self, keep_permille: u16) {
+        StormSketch::decay(self, keep_permille)
     }
 
     fn load_state(&mut self, src: &[u8], count: u64) {
@@ -288,6 +300,10 @@ impl RiskSketch for StormClassifierSketch {
 
     fn merge_from(&mut self, other: &Self) {
         StormClassifierSketch::merge_from(self, other)
+    }
+
+    fn decay(&mut self, keep_permille: u16) {
+        StormClassifierSketch::decay(self, keep_permille)
     }
 
     fn load_state(&mut self, src: &[u8], count: u64) {
@@ -403,6 +419,10 @@ impl RiskSketch for StormModel {
             (StormModel::Classification(a), StormModel::Classification(b)) => a.merge_from(b),
             _ => panic!("merge: task mismatch"),
         }
+    }
+
+    fn decay(&mut self, keep_permille: u16) {
+        dispatch!(self, m => RiskSketch::decay(m, keep_permille))
     }
 
     fn load_state(&mut self, src: &[u8], count: u64) {

@@ -1,14 +1,29 @@
 //! Differentially-private sketch release (paper §2.2, after Coleman &
 //! Shrivastava 2020).
 //!
-//! A STORM insert touches exactly `2 R` counters (2 per row), so the L1
-//! sensitivity of the counter array to one example is `2 R`. Adding
-//! Laplace(`2R / epsilon`) noise to every cell therefore releases the
-//! sketch with example-level epsilon-DP. Noise is added once, at release
-//! time, on a *copy* — the device keeps its exact counters for further
-//! streaming.
+//! A STORM regression insert touches exactly `2 R` counters (2 per row;
+//! the margin classifier touches `R`), so the L1 sensitivity of the
+//! counter array to one example is `2 R` (resp. `R`). Two mechanisms
+//! live here:
+//!
+//! * [`PrivateStormRelease`] — the one-shot real-valued release: add
+//!   Laplace(`2R / epsilon`) noise to every cell of a *copy* of the grid;
+//!   the device keeps its exact counters for further streaming. Queries
+//!   reconstruct the hash family from the shared (public) seed with the
+//!   **same family dispatch as [`StormSketch::new`]** — dense per-row
+//!   PRPs or the sparse/Hadamard structured banks — cached once at
+//!   release time, not rebuilt per query.
+//! * [`noise_delta`] — the round-pipeline mechanism: two-sided geometric
+//!   (discrete Laplace) noise on the integer counter increments of a
+//!   per-epoch [`SketchDelta`] before it is encoded, so narrow widths
+//!   and the v3 wire format carry private deltas unchanged. Per-round
+//!   epsilon spend is composed into a ledger by the coordinator.
 
-use super::storm::StormSketch;
+use super::delta::SketchDelta;
+use super::storm::{row_seeds, structured_bank, StormSketch, REGRESSION_ROW_SEED_MULT};
+use crate::config::{HashFamily, Task};
+use crate::lsh::bank::HashBank;
+use crate::lsh::prp::PairedRandomProjection;
 use crate::util::rng::{Rng, Xoshiro256};
 
 /// A privately-released view of a STORM sketch: real-valued noisy counts.
@@ -20,7 +35,11 @@ pub struct PrivateStormRelease {
     count: u64,
     /// The privacy budget this release satisfies.
     pub epsilon: f64,
-    hashes_seed_dim: (u64, usize, crate::config::StormConfig),
+    dim: usize,
+    /// The reconstructed hash bank — built once from the release's public
+    /// family seed with the same dispatch as the exact sketch, so every
+    /// query lands in the same buckets the device incremented.
+    bank: HashBank,
 }
 
 impl PrivateStormRelease {
@@ -36,34 +55,52 @@ impl PrivateStormRelease {
             .into_iter()
             .map(|c| c as f64 + rng.laplace(scale))
             .collect();
+        let cfg = sketch.config();
+        let (seed, dim) = (sketch.seed(), sketch.dim());
+        // Rebuild the hash family exactly as `StormSketch::new` does:
+        // dense rows become per-row PRPs fused into a bank; structured
+        // families dispatch straight to their seeded bank constructors.
+        let bank = match cfg.hash_family {
+            HashFamily::Dense => {
+                let hashes: Vec<PairedRandomProjection> = (0..cfg.rows)
+                    .map(|r| {
+                        PairedRandomProjection::new(
+                            dim,
+                            cfg.power,
+                            seed.wrapping_mul(REGRESSION_ROW_SEED_MULT).wrapping_add(r as u64),
+                        )
+                    })
+                    .collect();
+                HashBank::from_rows(&hashes)
+            }
+            _ => {
+                let seeds = row_seeds(seed, REGRESSION_ROW_SEED_MULT, cfg.rows);
+                structured_bank(cfg.hash_family, dim, cfg.power, &seeds)
+            }
+        };
         PrivateStormRelease {
             counts,
             rows: grid.rows(),
             buckets: grid.buckets(),
             count,
             epsilon,
-            hashes_seed_dim: (sketch.seed(), sketch.dim(), sketch.config()),
+            dim,
+            bank,
         }
     }
 
-    /// Query the noisy release exactly like the exact sketch (requires
-    /// reconstructing the hash family from the shared seed — releases are
-    /// paired with the family seed, which is public randomness in the
-    /// RACE/STORM privacy model).
+    /// Query the noisy release through the cached family bank — the same
+    /// buckets the exact sketch reads, for every hash family (the family
+    /// seed is public randomness in the RACE/STORM privacy model).
     pub fn estimate_risk(&self, theta_tilde: &[f64]) -> f64 {
-        let (seed, dim, cfg) = self.hashes_seed_dim;
-        assert_eq!(theta_tilde.len(), dim);
+        assert_eq!(theta_tilde.len(), self.dim);
         if self.count == 0 {
             return 0.0;
         }
+        let tail = HashBank::mips_tail(theta_tilde);
         let mut acc = 0.0;
         for r in 0..self.rows {
-            let h = crate::lsh::prp::PairedRandomProjection::new(
-                dim,
-                cfg.power,
-                seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r as u64),
-            );
-            let b = h.query_bucket(theta_tilde);
+            let b = self.bank.query_bucket(r, theta_tilde, tail);
             acc += self.counts[r * self.buckets + b];
         }
         acc / (self.rows as f64 * self.count as f64) / super::storm::SCALE
@@ -79,6 +116,32 @@ impl PrivateStormRelease {
     }
 }
 
+/// Epsilon-DP noise for a per-epoch delta: two-sided geometric noise on
+/// every counter increment, clamped to the delta's native counter width
+/// so the frame still encodes at its tagged width. The noise is drawn
+/// from `noise_seed` alone — deterministic, so a retransmitted or
+/// re-cut frame for the same `(device, epoch)` re-ships byte-identical
+/// noised counts and never spends budget twice.
+///
+/// Sensitivity follows the task: a regression insert touches 2 counters
+/// per row, a classifier insert 1, so one example moves the increment
+/// vector by `2R` (resp. `R`) in L1.
+pub fn noise_delta(delta: &mut SketchDelta, epsilon: f64, noise_seed: u64) {
+    assert!(epsilon > 0.0, "epsilon must be positive");
+    let sensitivity = match delta.cfg.task {
+        Task::Regression => 2.0 * delta.cfg.rows as f64,
+        Task::Classification => delta.cfg.rows as f64,
+    };
+    let alpha = (-epsilon / sensitivity).exp();
+    let max = delta.width.max_value() as i64;
+    let mut rng = Xoshiro256::new(noise_seed);
+    for c in delta.counts.iter_mut() {
+        let noised = (*c as i64 + rng.two_sided_geometric(alpha)).clamp(0, max);
+        *c = noised as u32;
+    }
+    delta.private = true;
+}
+
 /// Gaussian projection noise for attribute-level (epsilon, delta)-DP LSH
 /// (Kenthapadi et al.): returns hyperplane perturbation std for the given
 /// budget and an L2 clip bound of 1 (inputs live in the unit ball).
@@ -91,7 +154,7 @@ pub fn gaussian_projection_sigma(epsilon: f64, delta: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::StormConfig;
+    use crate::config::{CounterWidth, StormConfig};
     use crate::testing::{assert_close, gen_ball_point};
     use crate::util::rng::Xoshiro256;
 
@@ -115,6 +178,44 @@ mod tests {
         let exact = sk.estimate_risk(&q);
         let noisy = rel.estimate_risk(&q);
         assert_close(noisy, exact, 0.1 * exact.max(0.1));
+    }
+
+    #[test]
+    fn huge_epsilon_release_matches_exact_for_every_family() {
+        // Regression pin for the structured-family bucket bug: at near-zero
+        // noise the release must reproduce the exact sketch's estimate,
+        // which only happens if queries walk the same family-dispatched
+        // bank the device hashed into.
+        for family in [
+            HashFamily::Dense,
+            HashFamily::Sparse { density_permille: 200 },
+            HashFamily::Hadamard,
+        ] {
+            let cfg = StormConfig {
+                rows: 120,
+                power: 4,
+                saturating: true,
+                hash_family: family,
+                ..Default::default()
+            };
+            let mut sk = StormSketch::new(cfg, 4, 21);
+            let mut rng = Xoshiro256::new(99);
+            for _ in 0..300 {
+                let z = gen_ball_point(&mut rng, 4, 0.9);
+                sk.insert(&z);
+            }
+            let rel = PrivateStormRelease::release(&sk, 1e9, 77);
+            let mut qrng = Xoshiro256::new(7);
+            for _ in 0..5 {
+                let q = gen_ball_point(&mut qrng, 4, 0.8);
+                let exact = sk.estimate_risk(&q);
+                let noisy = rel.estimate_risk(&q);
+                assert!(
+                    (noisy - exact).abs() <= 1e-6 + 1e-6 * exact.abs(),
+                    "family {family}: noisy {noisy} vs exact {exact}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -142,6 +243,51 @@ mod tests {
         // Device keeps streaming afterwards.
         sk.insert(&[0.1, 0.1, 0.1, 0.1]);
         assert_eq!(sk.count(), 401);
+    }
+
+    fn small_delta(width: CounterWidth) -> SketchDelta {
+        let cfg = StormConfig {
+            rows: 2,
+            power: 2,
+            saturating: true,
+            counter_width: width,
+            ..Default::default()
+        };
+        let mut d = SketchDelta::empty(3, cfg, 3, 0xBEEF);
+        d.width = width;
+        d.count = 9;
+        d.counts = vec![0, 3, 250, 1, 0, 7, 2, 0];
+        d
+    }
+
+    #[test]
+    fn noise_delta_is_deterministic_and_marks_private() {
+        let mut a = small_delta(CounterWidth::U16);
+        let mut b = small_delta(CounterWidth::U16);
+        noise_delta(&mut a, 0.5, 42);
+        noise_delta(&mut b, 0.5, 42);
+        assert!(a.private && b.private);
+        assert_eq!(a.counts, b.counts, "same seed => byte-identical noised frame");
+        let mut c = small_delta(CounterWidth::U16);
+        noise_delta(&mut c, 0.5, 43);
+        assert_ne!(a.counts, c.counts, "different seed => different noise");
+    }
+
+    #[test]
+    fn noise_delta_clamps_to_the_native_width() {
+        let mut d = small_delta(CounterWidth::U8);
+        // Tight budget on a tall sketch => alpha near 1 => heavy noise.
+        noise_delta(&mut d, 0.01, 7);
+        assert!(d.counts.iter().all(|&c| c <= u8::MAX as u32), "{:?}", d.counts);
+    }
+
+    #[test]
+    fn noise_delta_huge_epsilon_is_identity_on_counts() {
+        let mut d = small_delta(CounterWidth::U32);
+        let before = d.counts.clone();
+        noise_delta(&mut d, 1e9, 11);
+        assert_eq!(d.counts, before, "alpha -> 0 => zero geometric noise");
+        assert!(d.private, "the frame is still tagged private");
     }
 
     #[test]

@@ -38,6 +38,8 @@
 //!                bit 1: task — 0 = regression, 1 = classification;
 //!                bits 2-3: hash family — 0 = dense Gaussian, 1 = sparse
 //!                Rademacher, 2 = fast-Hadamard, 3 rejected;
+//!                bit 4: privacy — the counter increments carry DP noise
+//!                ([`crate::sketch::privacy::noise_delta`]);
 //!                other bits reserved, rejected)
 //! density u16   (sparse *hash family* only: nonzero density per-mille,
 //!                1..=1000 — absent for every other family)
@@ -79,6 +81,13 @@
 //! dense frames leave the bits zero — every pre-family fixture in this
 //! file stays byte-identical. Family bits on a v1/v2 frame, family code
 //! 3, and an out-of-range density are all lying frames and rejected.
+//!
+//! The *privacy* bit (bit 4 of the v3 flags byte) marks a delta whose
+//! increments carry DP noise. Like the task and family tags, only v3 has
+//! room for it: a private delta always ships v3 (even u32 dense-family
+//! regression), privacy-off frames leave the bit zero and stay
+//! byte-identical to every pre-privacy fixture, and the bit on a v1/v2
+//! frame is rejected.
 
 use super::delta::SketchDelta;
 use super::storm::StormSketch;
@@ -101,6 +110,10 @@ const FLAG_TASK_CLASSIFICATION: u8 = 2;
 /// byte-identical.
 const FAMILY_SHIFT: u8 = 2;
 const FAMILY_MASK: u8 = 0b11 << FAMILY_SHIFT;
+/// Bit 4 of the v3 flags byte: the counter increments carry DP noise
+/// ([`crate::sketch::privacy::noise_delta`]). Clear when privacy is off,
+/// which keeps every pre-privacy frame byte-identical.
+const FLAG_PRIVATE: u8 = 16;
 
 fn family_to_code(f: HashFamily) -> u8 {
     match f {
@@ -247,6 +260,7 @@ pub fn encode_delta(delta: &SketchDelta) -> Vec<u8> {
     if delta.width == CounterWidth::U32
         && delta.cfg.task == Task::Regression
         && delta.cfg.hash_family == HashFamily::Dense
+        && !delta.private
     {
         encode_delta_version(delta, VERSION_DELTA)
     } else {
@@ -267,13 +281,16 @@ fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
     // carry dense-family regression frames only.
     debug_assert!(
         version == VERSION_WIDTH
-            || (delta.cfg.task == Task::Regression && delta.cfg.hash_family == HashFamily::Dense),
-        "classification and structured-family deltas must ship on the v3 wire"
+            || (delta.cfg.task == Task::Regression
+                && delta.cfg.hash_family == HashFamily::Dense
+                && !delta.private),
+        "classification, structured-family and private deltas must ship on the v3 wire"
     );
     let tag_bits = if version == VERSION_WIDTH {
         let task_bit =
             if delta.cfg.task == Task::Classification { FLAG_TASK_CLASSIFICATION } else { 0 };
-        task_bit | (family_to_code(delta.cfg.hash_family) << FAMILY_SHIFT)
+        let private_bit = if delta.private { FLAG_PRIVATE } else { 0 };
+        task_bit | (family_to_code(delta.cfg.hash_family) << FAMILY_SHIFT) | private_bit
     } else {
         0
     };
@@ -424,7 +441,13 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
         2 => (HashFamily::Hadamard, payload),
         _ => return Err(WireError::BadPayload("unknown hash-family code")),
     };
-    let mode = flags & !(FLAG_TASK_CLASSIFICATION | FAMILY_MASK);
+    // Bit 4 tags DP-noised increments; like the other tags it only
+    // exists on the v3 layout.
+    let private = flags & FLAG_PRIVATE != 0;
+    if private && version != VERSION_WIDTH {
+        return Err(WireError::BadPayload("privacy bit requires the v3 wire"));
+    }
+    let mode = flags & !(FLAG_TASK_CLASSIFICATION | FAMILY_MASK | FLAG_PRIVATE);
     let cfg = StormConfig {
         rows: rows as usize,
         power: power as u32,
@@ -497,6 +520,7 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
         count,
         width,
         counts,
+        private,
     })
 }
 
@@ -931,6 +955,12 @@ mod tests {
     const GOLDEN_SPARSE_FAM_U32_SPARSE_HEX: &str = "524f54530300020002000000030000008877665544332211050000000000000007000000000000000405fa000301030201040282e7e877";
     const GOLDEN_HADAMARD_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000010903010302010402c7adb999";
     const GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b0000000000000009000000000000000206640001002c0103000400050006000000bc02f4740a9e";
+    // Private deltas (flags bit 4 set; always v3 — even u32 dense-family
+    // regression, which would otherwise ship v2). Cross-computed with
+    // python/tests/wire_mirror.py like every fixture here.
+    const GOLDEN_PRIVATE_U32_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000041103010302010402fce4b6c8";
+    const GOLDEN_PRIVATE_U8_SPARSE_HEX: &str = "524f5453030002000200000003000000887766554433221105000000000000000700000000000000011103010302010402afc298d8";
+    const GOLDEN_PRIVATE_CLF_U16_DENSE_HEX: &str = "524f545303000200020000000200000001020304050607080b000000000000000900000000000000021201002c0103000400050006000000bc029c0ccd23";
 
     fn hex(bytes: &[u8]) -> String {
         bytes.iter().map(|b| format!("{b:02x}")).collect()
@@ -963,6 +993,7 @@ mod tests {
             count: 5,
             width,
             counts: vec![0, 3, 0, 1, 0, 0, 0, 2],
+            private: false,
         }
     }
 
@@ -976,6 +1007,7 @@ mod tests {
             count: 11,
             width: CounterWidth::U32,
             counts: vec![1, 2, 3, 4, 5, 6, 0, 7],
+            private: false,
         }
     }
 
@@ -996,6 +1028,7 @@ mod tests {
             count: 11,
             width: CounterWidth::U16,
             counts: vec![1, 300, 3, 4, 5, 6, 0, 700],
+            private: false,
         }
     }
 
@@ -1168,6 +1201,75 @@ mod tests {
         assert_eq!(back.cfg.task, Task::Classification);
         // The dense-fallback frame size includes the density field.
         assert_eq!(encode_delta(&clf).len(), delta_wire_bytes(&clf.cfg));
+    }
+
+    #[test]
+    fn golden_private_bytes_are_stable() {
+        // u32 sparse regression, private: the privacy bit alone forces
+        // the frame onto v3 (the non-private twin ships v2).
+        let mut u32_delta = golden_sparse_delta();
+        u32_delta.private = true;
+        let bytes = encode_delta(&u32_delta);
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 3);
+        assert_eq!(bytes[HEADER + 9] & FLAG_PRIVATE, FLAG_PRIVATE);
+        assert_eq!(
+            hex(&bytes),
+            GOLDEN_PRIVATE_U32_SPARSE_HEX,
+            "private u32 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_PRIVATE_U32_SPARSE_HEX)).unwrap(), u32_delta);
+
+        // u8 sparse, private.
+        let mut u8_delta = golden_sparse_delta_at(CounterWidth::U8);
+        u8_delta.private = true;
+        assert_eq!(
+            hex(&encode_delta(&u8_delta)),
+            GOLDEN_PRIVATE_U8_SPARSE_HEX,
+            "private u8 sparse wire encoding drifted — bump the wire version instead"
+        );
+        assert_eq!(decode_delta(&unhex(GOLDEN_PRIVATE_U8_SPARSE_HEX)).unwrap(), u8_delta);
+
+        // u16 dense classifier, private: task + width + privacy at once.
+        let mut clf = golden_dense_delta_u16();
+        clf.cfg.task = Task::Classification;
+        clf.private = true;
+        assert_eq!(
+            hex(&encode_delta(&clf)),
+            GOLDEN_PRIVATE_CLF_U16_DENSE_HEX,
+            "private classifier wire encoding drifted — bump the wire version instead"
+        );
+        let back = decode_delta(&unhex(GOLDEN_PRIVATE_CLF_U16_DENSE_HEX)).unwrap();
+        assert_eq!(back, clf);
+        assert!(back.private, "privacy bit round-trips");
+    }
+
+    #[test]
+    fn privacy_bit_on_pre_v3_versions_rejected() {
+        // A v2 frame whose flags byte smuggles the privacy bit is a lying
+        // frame even with a valid checksum: only v3 carries the tag.
+        let mut bytes = encode_delta(&sparse_delta());
+        assert_eq!(u16::from_le_bytes(bytes[4..6].try_into().unwrap()), 2);
+        bytes[HEADER + 8] |= FLAG_PRIVATE;
+        refix_crc(&mut bytes);
+        assert!(matches!(
+            decode_delta(&bytes),
+            Err(WireError::BadPayload("privacy bit requires the v3 wire"))
+        ));
+    }
+
+    #[test]
+    fn non_private_frames_never_set_the_privacy_bit() {
+        // The acceptance bar for the privacy tag: privacy off must not
+        // move a single byte at any width/task/family — the goldens above
+        // pin the exact bytes; here we state the mechanism directly.
+        let v2 = encode_delta(&sparse_delta());
+        assert_eq!(u16::from_le_bytes(v2[4..6].try_into().unwrap()), 2);
+        for width in [CounterWidth::U8, CounterWidth::U16] {
+            let flags = encode_delta(&golden_sparse_delta_at(width))[HEADER + 9];
+            assert_eq!(flags & FLAG_PRIVATE, 0, "{width:?}");
+        }
+        let clf = encode_delta(&golden_clf_delta_at(CounterWidth::U32));
+        assert_eq!(clf[HEADER + 9] & FLAG_PRIVATE, 0);
     }
 
     #[test]

@@ -25,13 +25,13 @@ use crate::util::mathx::norm2;
 /// Per-row seed stream for the regression PRP rows (and every structured
 /// family riding the same stream): row `r` of a sketch seeded `s` draws
 /// from `s * GOLDEN + r`.
-const REGRESSION_ROW_SEED_MULT: u64 = 0x9E3779B97F4A7C15;
+pub(crate) const REGRESSION_ROW_SEED_MULT: u64 = 0x9E3779B97F4A7C15;
 
 /// Per-row seed stream multiplier for the classifier's single-arm rows.
 const CLASSIFIER_ROW_SEED_MULT: u64 = 0x51afd6ed558ccd65;
 
 /// The per-row seeds a sketch's hash rows draw from.
-fn row_seeds(seed: u64, mult: u64, rows: usize) -> Vec<u64> {
+pub(crate) fn row_seeds(seed: u64, mult: u64, rows: usize) -> Vec<u64> {
     (0..rows as u64).map(|r| seed.wrapping_mul(mult).wrapping_add(r)).collect()
 }
 
@@ -39,7 +39,7 @@ fn row_seeds(seed: u64, mult: u64, rows: usize) -> Vec<u64> {
 /// derived from the per-row hashes elsewhere (so the scalar oracle and
 /// AOT paths keep their exact planes); this constructor serves the
 /// structured families, which exist *only* in bank form.
-fn structured_bank(family: HashFamily, dim: usize, p: u32, seeds: &[u64]) -> HashBank {
+pub(crate) fn structured_bank(family: HashFamily, dim: usize, p: u32, seeds: &[u64]) -> HashBank {
     match family {
         HashFamily::Dense => unreachable!("dense banks are built from per-row hashes"),
         HashFamily::Sparse { density_permille } => {
@@ -275,6 +275,17 @@ impl StormSketch {
 
     pub(crate) fn parts_mut(&mut self) -> (&mut CounterGrid, &mut u64) {
         (&mut self.grid, &mut self.count)
+    }
+
+    /// Exponential-decay step for non-stationary streams: scale every
+    /// counter AND the example count to `keep_permille / 1000` (integer
+    /// floor — see [`CounterGrid::decay`]). Applied at round boundaries
+    /// by a decaying leader, recent rounds dominate the risk surface
+    /// while old concept mass fades geometrically; the count decays in
+    /// lockstep so the `1/n` query normalization stays consistent.
+    pub fn decay(&mut self, keep_permille: u16) {
+        self.grid.decay(keep_permille);
+        self.count = self.count * keep_permille as u64 / 1000;
     }
 }
 
@@ -701,6 +712,15 @@ impl StormClassifierSketch {
     /// Grid + count accessors for the delta/serialize plumbing.
     pub(crate) fn parts_mut(&mut self) -> (&mut CounterGrid, &mut u64) {
         (&mut self.grid, &mut self.count)
+    }
+
+    /// Exponential-decay step — the classifier twin of
+    /// [`StormSketch::decay`]: counters and the example count both scale
+    /// to `keep_permille / 1000` (integer floor) so the margin-loss
+    /// normalization tracks the decayed mass.
+    pub fn decay(&mut self, keep_permille: u16) {
+        self.grid.decay(keep_permille);
+        self.count = self.count * keep_permille as u64 / 1000;
     }
 }
 

@@ -150,6 +150,29 @@ pub fn test_hash_family() -> crate::config::HashFamily {
     }
 }
 
+/// Per-round privacy budget the privacy-injectable sweeps should noise
+/// device deltas at: `STORM_TEST_PRIVACY=<epsilon>` (default `0.0`, the
+/// seed behaviour — privacy off, byte-identical wire). The CI matrix
+/// runs the suite once at a positive epsilon so the noised v3 wire path
+/// and the deterministic per-`(device, epoch)` noise ride the privacy
+/// invariants on every push. Malformed values panic loudly — a typo'd
+/// knob silently running the default would defeat that CI leg.
+pub fn test_privacy_epsilon() -> f64 {
+    match std::env::var("STORM_TEST_PRIVACY") {
+        Err(_) => 0.0,
+        Ok(v) => {
+            let eps = v.trim().parse::<f64>().unwrap_or_else(|_| {
+                panic!("STORM_TEST_PRIVACY must be an epsilon >= 0, got {v:?}")
+            });
+            assert!(
+                eps.is_finite() && eps >= 0.0,
+                "STORM_TEST_PRIVACY must be finite and >= 0, got {v:?}"
+            );
+            eps
+        }
+    }
+}
+
 /// Uniform f64 vector with entries in `[lo, hi)`.
 pub fn gen_vec(rng: &mut Xoshiro256, len: usize, lo: f64, hi: f64) -> Vec<f64> {
     (0..len).map(|_| rng.uniform_range(lo, hi)).collect()

@@ -63,7 +63,27 @@ pub trait Rng {
     /// Laplace(0, b) draw (used for epsilon-DP count noise).
     fn laplace(&mut self, b: f64) -> f64 {
         let u = self.uniform() - 0.5;
-        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+        // `uniform()` is `[0, 1)`, so `u = -0.5` is reachable and the raw
+        // inverse CDF would take `ln(0) = -inf`; clamp like `exponential`.
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).max(f64::MIN_POSITIVE).ln()
+    }
+
+    /// Two-sided geometric (discrete Laplace) draw: `P(Z = k) ∝ alpha^|k|`
+    /// for `alpha in [0, 1)`. The difference of two iid geometric variables
+    /// has exactly this law, which keeps the noise in integers — the
+    /// discrete analogue of [`Rng::laplace`] used for counter-level DP
+    /// (`alpha = exp(-epsilon / sensitivity)`).
+    fn two_sided_geometric(&mut self, alpha: f64) -> i64 {
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0, 1)");
+        if alpha == 0.0 {
+            return 0;
+        }
+        // G = floor(ln(U) / ln(alpha)) is Geometric(1 - alpha) counting
+        // failures: P(G >= k) = alpha^k. Clamp U away from 0 as above.
+        let ln_a = alpha.ln();
+        let g1 = (self.uniform().max(f64::MIN_POSITIVE).ln() / ln_a).floor() as i64;
+        let g2 = (self.uniform().max(f64::MIN_POSITIVE).ln() / ln_a).floor() as i64;
+        g1 - g2
     }
 
     /// Exponential(rate) draw.
@@ -221,6 +241,70 @@ mod tests {
         assert!(mean.abs() < 0.05, "mean={mean}");
         // Var(Laplace(b)) = 2 b^2 = 8
         assert!((var - 8.0).abs() < 0.4, "var={var}");
+    }
+
+    /// Replays a fixed word stream — lets the tests force the exact
+    /// `uniform() == 0` draw that used to send `laplace` to infinity.
+    struct ReplayRng {
+        words: Vec<u64>,
+        at: usize,
+    }
+
+    impl Rng for ReplayRng {
+        fn next_u64(&mut self) -> u64 {
+            let w = self.words[self.at % self.words.len()];
+            self.at += 1;
+            w
+        }
+    }
+
+    #[test]
+    fn laplace_is_finite_even_at_the_uniform_edges() {
+        // next_u64 = 0 gives uniform() = 0, i.e. u = -0.5 — the draw that
+        // used to produce -inf; u64::MAX probes the other edge.
+        for words in [vec![0u64], vec![u64::MAX], vec![0, u64::MAX]] {
+            let mut r = ReplayRng { words, at: 0 };
+            for _ in 0..8 {
+                for b in [1e-3, 1.0, 1e6] {
+                    let x = r.laplace(b);
+                    assert!(x.is_finite(), "laplace({b}) = {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn laplace_stream_has_no_non_finite_draws() {
+        let mut r = Xoshiro256::new(13);
+        for _ in 0..200_000 {
+            assert!(r.laplace(3.0).is_finite());
+        }
+    }
+
+    #[test]
+    fn two_sided_geometric_moments() {
+        let mut r = Xoshiro256::new(14);
+        let alpha: f64 = 0.6;
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.two_sided_geometric(alpha) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        // Var = 2 alpha / (1 - alpha)^2 = 7.5 at alpha = 0.6.
+        let want = 2.0 * alpha / ((1.0 - alpha) * (1.0 - alpha));
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - want).abs() < 0.4, "var={var} want={want}");
+    }
+
+    #[test]
+    fn two_sided_geometric_edges() {
+        let mut r = Xoshiro256::new(15);
+        for _ in 0..100 {
+            assert_eq!(r.two_sided_geometric(0.0), 0, "alpha = 0 is the no-noise spelling");
+        }
+        // The forced uniform() = 0 edge stays finite (i64, no panic).
+        let mut edge = ReplayRng { words: vec![0u64], at: 0 };
+        let z = edge.two_sided_geometric(0.9);
+        assert!(z.abs() < 1 << 40, "clamped edge draw stays bounded: {z}");
     }
 
     #[test]

@@ -130,6 +130,48 @@ fn train_with_sync_rounds_prints_round_table() {
 }
 
 #[test]
+fn train_with_privacy_and_decay_reports_the_ledger() {
+    let out = storm()
+        .args([
+            "train",
+            "--dataset",
+            "synth2d-reg",
+            "--rows",
+            "100",
+            "--iters",
+            "40",
+            "--devices",
+            "2",
+            "--sync-rounds",
+            "4",
+            "--epsilon",
+            "0.5",
+            "--decay-keep",
+            "0.9",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("epsilon=2.000"), "summary missing the ledger: {text}");
+    assert!(text.contains("privacy: epsilon 0.5 per round x 4 rounds = 2.000 total"), "{text}");
+    assert!(text.contains("round  examples  net_bytes  resend_bytes  est_risk  eps_spent"), "{text}");
+    assert!(text.contains("0.500") && text.contains("2.000"), "{text}");
+
+    // Out-of-range knobs are rejected up front.
+    let out = storm().args(["train", "--epsilon", "-1"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let out = storm().args(["train", "--decay-keep", "0"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    let out = storm().args(["train", "--decay-keep", "1.5"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+}
+
+#[test]
 fn train_rejects_bad_dataset_and_backend() {
     let out = storm().args(["train", "--dataset", "nope"]).output().unwrap();
     assert_eq!(out.status.code(), Some(1));

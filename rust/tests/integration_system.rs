@@ -31,6 +31,8 @@ fn base_cfg(dataset: &str) -> RunConfig {
             device_counter_width: None,
             workers: 0,
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 2,
         },
         artifacts_dir: None,

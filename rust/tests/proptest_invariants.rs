@@ -24,7 +24,8 @@ use storm::sketch::serialize::{
 use storm::sketch::storm::{StormClassifierSketch, StormSketch};
 use storm::sketch::RiskSketch;
 use storm::testing::{
-    assert_close, cases, gen_ball_point, gen_dim, test_counter_width, test_hash_family, test_task,
+    assert_close, cases, gen_ball_point, gen_dim, test_counter_width, test_hash_family,
+    test_privacy_epsilon, test_task,
 };
 use storm::util::mathx::{dot, norm2};
 use storm::util::rng::Rng;
@@ -358,6 +359,8 @@ fn prop_round_sync_bit_identical_to_oneshot() {
             // in the counters.
             workers: 1 + case % 3,
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -432,6 +435,8 @@ fn prop_chaotic_sync_bit_identical_to_fault_free_oneshot() {
             // than the fleet.
             workers: [1, 2, 8][case % 3],
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -514,6 +519,8 @@ fn prop_widening_merge_exact_without_saturation() {
             // Widening merges must stay exact at every pool size.
             workers: [1, 2, 8][case % 3],
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 0,
         };
         let leader_storm = StormConfig { counter_width: leader_w, ..storm_u32 };
@@ -691,6 +698,8 @@ fn prop_classifier_merge_equals_concatenation_all_widths_and_topologies() {
             device_counter_width: None,
             workers: 1 + case % 2,
             fan_in: 2,
+            epsilon_per_round: 0.0,
+            decay_keep_permille: 1000,
             seed: 0,
         };
         let streams = partition_streams(&ds, devices, None);
@@ -851,6 +860,157 @@ fn prop_hash_family_is_a_merge_barrier_on_the_wire() {
                 );
             }
         }
+    });
+}
+
+#[test]
+fn prop_privacy_off_frames_carry_no_bit_and_huge_epsilon_noise_is_zero() {
+    // Privacy satellite, part 1: with privacy off, every wire frame is
+    // the exact pre-privacy encoding — no privacy bit, bit-identical
+    // re-encode (the exact bytes are pinned by the golden fixtures in
+    // sketch::serialize and the Python wire mirror) — at every counter
+    // width, hash family and task the CI matrix sweeps. With privacy on,
+    // the frame upgrades to v3 with the bit set; at huge epsilon the
+    // two-sided geometric mechanism degenerates to exactly zero noise;
+    // and noise is a pure function of its seed, so the same release
+    // always ships the same bytes (the retransmit no-double-spend
+    // foundation).
+    use storm::sketch::privacy::noise_delta;
+    let task = test_task();
+    cases(40, 125, |rng, case| {
+        let d = gen_dim(rng, 1, 8);
+        let max_p = (d + 2).next_power_of_two() as u32;
+        let cfg = StormConfig {
+            rows: 1 + (case % 12),
+            power: (1 + (case % 5) as u32).min(max_p),
+            saturating: true,
+            counter_width: test_counter_width(),
+            task,
+            hash_family: test_hash_family(),
+        };
+        let seed = case as u64 ^ 0xB0FF;
+        let delta = match task {
+            Task::Regression => {
+                let mut sk = StormSketch::new(cfg, d, seed);
+                let snap = sk.snapshot();
+                for _ in 0..(1 + rng.next_u64() % 20) {
+                    sk.insert(&gen_ball_point(rng, d, 0.9));
+                }
+                sk.delta_since(&snap, case as u64)
+            }
+            Task::Classification => {
+                let mut sk = StormClassifierSketch::new(cfg, d, seed);
+                let snap = sk.snapshot();
+                for i in 0..(1 + rng.next_u64() % 20) {
+                    let x = gen_ball_point(rng, d, 0.9);
+                    sk.insert_labelled(&x, if i % 2 == 0 { 1.0 } else { -1.0 });
+                }
+                sk.delta_since(&snap, case as u64)
+            }
+        };
+        let bytes = encode_delta(&delta);
+        let back = decode_delta(&bytes).unwrap();
+        assert!(!back.private, "privacy off must never set the bit");
+        assert_eq!(back, delta);
+        assert_eq!(encode_delta(&back), bytes, "re-encode is byte-identical");
+        // Huge epsilon: alpha underflows to 0 => zero noise, exactly.
+        let mut huge = delta.clone();
+        noise_delta(&mut huge, 1e9, seed ^ 0x17);
+        assert!(huge.private);
+        assert_eq!(huge.counts, delta.counts);
+        assert_eq!(huge.count, delta.count);
+        let pbytes = encode_delta(&huge);
+        assert_eq!(
+            u16::from_le_bytes(pbytes[4..6].try_into().unwrap()),
+            3,
+            "private frames always ship v3"
+        );
+        assert_eq!(decode_delta(&pbytes).unwrap(), huge);
+        // Deterministic noise: same (epsilon, seed) => same bytes. The
+        // CI privacy leg overrides the epsilon via STORM_TEST_PRIVACY.
+        let knob = test_privacy_epsilon();
+        let eps = if knob > 0.0 { knob } else { 0.7 };
+        let mut a = delta.clone();
+        let mut b = delta.clone();
+        noise_delta(&mut a, eps, seed ^ 0x99);
+        noise_delta(&mut b, eps, seed ^ 0x99);
+        assert_eq!(a, b);
+        assert_eq!(encode_delta(&a), encode_delta(&b));
+    });
+}
+
+#[test]
+fn prop_private_chaotic_fleet_is_deterministic_with_exact_accounting() {
+    // Privacy satellite, part 2: under ANY seeded fault schedule a
+    // private fleet still closes every round — so the driver's epsilon
+    // ledger composes to exactly rounds x epsilon_per_round — keeps
+    // example accounting exact (only counter cells are noised), and is
+    // bit-for-bit reproducible: retransmitted frames re-ship the SAME
+    // noised bytes (noise is a pure function of (family_seed, device,
+    // epoch)), so catch-up traffic never draws fresh noise and never
+    // double-spends the budget.
+    let task = test_task();
+    let knob = test_privacy_epsilon();
+    let eps = if knob > 0.0 { knob } else { 0.4 };
+    cases(6, 126, |rng, case| {
+        let n_examples = 60 + (rng.next_u64() % 100) as usize;
+        let devices = 2 + (case % 3);
+        let rounds = 2 + (case % 3);
+        let storm = StormConfig {
+            rows: 6 + (case % 6),
+            power: 3,
+            saturating: true,
+            counter_width: test_counter_width(),
+            task,
+            hash_family: test_hash_family(),
+        };
+        let ds = task_ds(n_examples, case as u64 ^ 0xD9, task);
+        let family_seed = 0xD1CE ^ case as u64;
+        let plan = FaultPlan::from_seed(rng.next_u64());
+        let run = |eps: f64, plan: Option<FaultPlan>| {
+            let fleet = FleetConfig {
+                devices,
+                batch: 16,
+                channel_capacity: 2,
+                link_latency_us: 0,
+                link_bandwidth_bps: 0,
+                sync_rounds: rounds,
+                min_quorum: 0,
+                faults_seed: None,
+                device_counter_width: None,
+                workers: 1 + case % 3,
+                fan_in: 2,
+                epsilon_per_round: eps,
+                decay_keep_permille: 1000,
+                seed: 0,
+            };
+            let streams = partition_streams(&ds, devices, None);
+            run_fleet_model_chaos::<StormModel, _>(
+                fleet,
+                storm,
+                Topology::Star,
+                ds.dim() + 1,
+                family_seed,
+                streams,
+                plan,
+                |_, _| {},
+            )
+        };
+        let a = run(eps, Some(plan));
+        let b = run(eps, Some(plan));
+        let ctx = format!("devices={devices} rounds={rounds} task={task}");
+        assert_eq!(a.sketch.grid().counts_u32(), b.sketch.grid().counts_u32(), "{ctx}");
+        assert_eq!(a.sketch.count(), b.sketch.count(), "{ctx}");
+        assert_eq!(a.examples, n_examples as u64, "exact example accounting under DP: {ctx}");
+        assert_eq!(a.rounds.len(), rounds, "every round closes => ledger = rounds x eps: {ctx}");
+        // The noise actually moved the counters vs the exact run.
+        let exact = run(0.0, Some(plan));
+        assert_eq!(exact.examples, a.examples, "{ctx}");
+        assert_ne!(
+            a.sketch.grid().counts_u32(),
+            exact.sketch.grid().counts_u32(),
+            "noise was vacuous: {ctx}"
+        );
     });
 }
 
