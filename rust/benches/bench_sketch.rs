@@ -7,13 +7,18 @@
 //! `storm::util::bench::JsonReporter`) so the perf trajectory is tracked
 //! across PRs.
 
-use storm::config::{CounterWidth, StormConfig};
+use storm::config::{CounterWidth, HashFamily, StormConfig};
 use storm::lsh::bank::HashBank;
 use storm::lsh::prp::PairedRandomProjection;
+use storm::lsh::query::{CandidateSet, Probe, QueryEngine};
+use storm::optim::dfo::{DfoConfig, DfoOptimizer};
+use storm::optim::IncrementalOracle;
+use storm::sketch::model::StormModel;
 use storm::sketch::serialize::{
     decode, decode_delta, delta_wire_bytes, encode, encode_delta, wire_bytes,
 };
 use storm::sketch::storm::StormSketch;
+use storm::sketch::RiskSketch;
 use storm::testing::gen_ball_point;
 use storm::util::bench::{bench_items, black_box, config_from_env, section, JsonReporter};
 use storm::util::rng::Xoshiro256;
@@ -303,6 +308,95 @@ fn main() {
             &format!("sketch_width_{width}_sparse_delta_wire_bytes_2ex_R100"),
             encode_delta(&sk.delta_since(&snap, 1)).len() as f64,
         );
+    }
+
+    section("sketch: optimizer candidate queries (rank-1 incremental vs dense)");
+    // One optimizer step's candidate set at the paper-scale geometry
+    // (R = 100, p = 4, d = 256): 64 axis probes — a coordinate-descent
+    // bracket sweep, the engine's best case. The dense path materializes
+    // every candidate and re-projects it from scratch
+    // (~R * p * (d + 2) mul-adds each); the incremental engine projects
+    // the incumbent once and serves each probe as an O(R * p) rank-1
+    // update. EXPERIMENTS.md §Perf "optimizer query cost" reads the
+    // speedup scalars.
+    let d = 256usize;
+    for (name, family) in [
+        ("dense", HashFamily::Dense),
+        ("sparse", HashFamily::Sparse { density_permille: 300 }),
+        ("hadamard", HashFamily::Hadamard),
+    ] {
+        let scfg = StormConfig {
+            rows: 100,
+            power: 4,
+            saturating: true,
+            hash_family: family,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(6);
+        let mut model = StormModel::new(scfg, d + 1, 7);
+        let data: Vec<Vec<f64>> =
+            (0..256).map(|_| gen_ball_point(&mut rng, d + 1, 0.9)).collect();
+        model.insert_batch(&data);
+        let mut base = gen_ball_point(&mut rng, d, 0.7);
+        base.push(-1.0);
+        let probes: Vec<Probe> = (0..32)
+            .flat_map(|j| [Probe::Axis { k: j, value: 0.3 }, Probe::Axis { k: j, value: -0.3 }])
+            .collect();
+        let set = CandidateSet { base: &base, dirs: &[], probes: &probes };
+        let mut out = Vec::new();
+        let mut dense_cands = Vec::new();
+        let dense_res = bench_items(
+            &format!("oracle_step_dense_{name}_R100_d256"),
+            cfg,
+            probes.len() as u64,
+            || {
+                set.materialize(&mut dense_cands);
+                model.estimate_risk_batch(&dense_cands, &mut out);
+                black_box(out.len());
+            },
+        );
+        let mut engine = QueryEngine::new(model.bank());
+        let inc_res = bench_items(
+            &format!("oracle_step_incremental_{name}_R100_d256"),
+            cfg,
+            probes.len() as u64,
+            || {
+                model.estimate_risk_candidates(&mut engine, &set, &mut out);
+                black_box(out.len());
+            },
+        );
+        json.record_scalar(
+            &format!("oracle_step_speedup_{name}_R100_d256"),
+            dense_res.mean_s / inc_res.mean_s,
+        );
+        json.record(dense_res);
+        json.record(inc_res);
+    }
+    // A whole fused DFO step (k = 8 sphere probes, 4 antithetic pairs)
+    // at the same geometry: the incumbent moves every step, so each
+    // iteration pays one fresh base projection plus 4 direction
+    // projections shared across their antithetic pairs — the realistic
+    // per-step win (~2x) rather than the axis-sweep best case.
+    {
+        let scfg = StormConfig { rows: 100, power: 4, saturating: true, ..Default::default() };
+        let mut rng = Xoshiro256::new(6);
+        let mut model = StormModel::new(scfg, d + 1, 7);
+        let data: Vec<Vec<f64>> =
+            (0..256).map(|_| gen_ball_point(&mut rng, d + 1, 0.9)).collect();
+        model.insert_batch(&data);
+        let ocfg = DfoConfig { queries: 8, sigma: 0.2, step: 0.02, iters: 1, seed: 11 };
+        let mut opt = DfoOptimizer::new(ocfg, d);
+        let dense_res = bench_items("dfo_step_dense_R100_d256", cfg, 8, || {
+            black_box(opt.step(&model));
+        });
+        let oracle = IncrementalOracle::new(&model);
+        let mut opt = DfoOptimizer::new(ocfg, d);
+        let inc_res = bench_items("dfo_step_incremental_R100_d256", cfg, 8, || {
+            black_box(opt.step(&oracle));
+        });
+        json.record_scalar("dfo_step_speedup_R100_d256", dense_res.mean_s / inc_res.mean_s);
+        json.record(dense_res);
+        json.record(inc_res);
     }
 
     json.record_peak_rss();

@@ -245,10 +245,15 @@ pub fn train(
                 let theta = match backend {
                     QueryBackend::Rust => {
                         // Each DFO iteration submits its whole candidate
-                        // set through RiskOracle::risk_batch — the fused
-                        // hash-bank query kernels of BOTH tasks, zero
-                        // per-candidate allocation (EXPERIMENTS.md §Perf).
-                        opt.run(sketch, iters)
+                        // set through RiskOracle::risk_candidates — the
+                        // rank-1 incremental query engine serves every
+                        // probe in O(R * p) off the cached base
+                        // projections, for BOTH tasks and all hash
+                        // families (EXPERIMENTS.md §Perf; set
+                        // STORM_QUERY_INCREMENTAL=off to fall back to
+                        // the dense fused batch kernels).
+                        let oracle = crate::optim::IncrementalOracle::new(sketch);
+                        opt.run(&oracle, iters)
                     }
                     QueryBackend::Xla => {
                         // Gated to regression at entry.

@@ -26,6 +26,10 @@ pub struct XlaRiskOracle<'a> {
     /// Executions performed (for the batching-efficiency metric).
     executions: Cell<u64>,
     last_error: RefCell<Option<String>>,
+    /// Rescaled-candidate scratch reused across [`Self::risks`] calls —
+    /// zero per-candidate allocation in the steady state, matching the
+    /// convention of the sketch's `estimate_risk_batch`.
+    scaled: RefCell<Vec<Vec<f64>>>,
 }
 
 impl<'a> XlaRiskOracle<'a> {
@@ -40,17 +44,20 @@ impl<'a> XlaRiskOracle<'a> {
             evals: Cell::new(0),
             executions: Cell::new(0),
             last_error: RefCell::new(None),
+            scaled: RefCell::new(Vec::new()),
         }
     }
 
-    /// Rescale a query into the unit ball exactly like the rust path.
-    fn rescale(q: &[f64]) -> Vec<f64> {
+    /// Rescale a query into the unit ball exactly like the rust path,
+    /// into a reusable buffer (cleared first).
+    fn rescale_into(q: &[f64], out: &mut Vec<f64>) {
         let radius = crate::data::scale::query_radius();
         let n = norm2(q);
+        out.clear();
         if n <= radius {
-            q.to_vec()
+            out.extend_from_slice(q);
         } else {
-            q.iter().map(|v| v * radius / n).collect()
+            out.extend(q.iter().map(|v| v * radius / n));
         }
     }
 
@@ -58,9 +65,17 @@ impl<'a> XlaRiskOracle<'a> {
     /// `exe.query_size()` candidates.
     pub fn risks(&self, candidates: &[Vec<f64>]) -> Vec<f64> {
         let mut out = Vec::with_capacity(candidates.len());
+        let mut scaled = self.scaled.borrow_mut();
         for chunk in candidates.chunks(self.exe.query_size().max(1)) {
-            let scaled: Vec<Vec<f64>> = chunk.iter().map(|q| Self::rescale(q)).collect();
-            match self.exe.query_risks(&self.counts, self.n, &scaled) {
+            // Rescale into long-lived scratch buffers instead of a fresh
+            // Vec per candidate.
+            if scaled.len() < chunk.len() {
+                scaled.resize(chunk.len(), Vec::new());
+            }
+            for (slot, q) in scaled.iter_mut().zip(chunk) {
+                Self::rescale_into(q, slot);
+            }
+            match self.exe.query_risks(&self.counts, self.n, &scaled[..chunk.len()]) {
                 Ok(risks) => {
                     self.executions.set(self.executions.get() + 1);
                     self.evals.set(self.evals.get() + chunk.len() as u64);
@@ -106,8 +121,11 @@ impl RiskOracle for XlaRiskOracle<'_> {
     }
 }
 
-/// A fused DFO step that batches the baseline + k probes into a single
-/// XLA execution. Returns the new theta~ and the baseline risk.
+/// A fused DFO step that batches the k antithetic probes into a single
+/// XLA execution. The incumbent is never re-evaluated (the gradient uses
+/// only central differences), so a step costs exactly `k` queries —
+/// matching `DfoOptimizer::step`. Returns the new theta~ and the mean
+/// probe risk (the sigma-smoothed risk estimate at the pre-step iterate).
 pub fn fused_dfo_step(
     oracle: &XlaRiskOracle<'_>,
     theta_tilde: &mut Vec<f64>,
@@ -120,8 +138,7 @@ pub fn fused_dfo_step(
     use crate::util::rng::Rng;
     let dim = theta_tilde.len();
     let pairs = (queries / 2).max(1);
-    let mut candidates = Vec::with_capacity(2 * pairs + 1);
-    candidates.push(theta_tilde.clone());
+    let mut candidates = Vec::with_capacity(2 * pairs);
     let mut dirs = Vec::with_capacity(pairs);
     for _ in 0..pairs {
         let mut u = rng.sphere_vec(dim, 1.0);
@@ -135,19 +152,19 @@ pub fn fused_dfo_step(
         dirs.push(u);
     }
     let risks = oracle.risks(&candidates);
-    let base = risks[0];
     let mut grad = vec![0.0; dim];
     for (j, u) in dirs.iter().enumerate() {
-        let delta = 0.5 * (risks[1 + 2 * j] - risks[2 + 2 * j]);
+        let delta = 0.5 * (risks[2 * j] - risks[2 * j + 1]);
         axpy(&mut grad, delta, u);
     }
     let scale = dim as f64 / (pairs as f64 * sigma);
     for g in &mut grad {
         *g *= scale;
     }
+    let smoothed = risks.iter().sum::<f64>() / risks.len() as f64;
     axpy(theta_tilde, -step, &grad);
     theta_tilde[dim - 1] = -1.0;
-    base
+    smoothed
 }
 
 #[cfg(test)]
@@ -159,7 +176,8 @@ mod tests {
     #[test]
     fn rescale_preserves_direction() {
         let q = vec![3.0, 4.0];
-        let s = XlaRiskOracle::rescale(&q);
+        let mut s = vec![9.0; 7]; // stale scratch must be overwritten
+        XlaRiskOracle::rescale_into(&q, &mut s);
         let n = norm2(&s);
         assert!((n - crate::data::scale::query_radius()).abs() < 1e-12);
         assert!((s[0] / s[1] - 0.75).abs() < 1e-12);
@@ -168,6 +186,8 @@ mod tests {
     #[test]
     fn rescale_noop_inside_ball() {
         let q = vec![0.1, 0.1];
-        assert_eq!(XlaRiskOracle::rescale(&q), q);
+        let mut s = Vec::new();
+        XlaRiskOracle::rescale_into(&q, &mut s);
+        assert_eq!(s, q);
     }
 }

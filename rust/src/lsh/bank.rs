@@ -498,6 +498,137 @@ impl HashBank {
         }
         h
     }
+
+    /// Head projections of every plane in the bank: fills `out` with
+    /// `R * p` values, `out[r * p + j] = <w_head(r, j), v>`, the per-plane
+    /// head term before any tail contribution. This is the once-per-step
+    /// base pass of the incremental query engine
+    /// ([`crate::lsh::query::QueryEngine`]).
+    ///
+    /// Each plane's partial sum accumulates in ascending coordinate
+    /// order, so dense values are **bit-identical** to
+    /// `dot(&plane(r, j)[..d], v)` — the head term of the scalar query
+    /// oracle. Sparse reproduces the CSR run order and Hadamard the
+    /// shared row transform, again exactly the decisions' head terms.
+    pub fn project_all(&self, v: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(v.len(), self.dim, "bank projection dim mismatch");
+        let pu = self.p as usize;
+        out.clear();
+        out.resize(self.rows * pu, 0.0);
+        match &self.kind {
+            BankKind::Dense { transposed, kernel, .. } => {
+                for r in 0..self.rows {
+                    let trow = Self::trow(transposed, r, self.dim + 2, pu);
+                    let acc = &mut out[r * pu..(r + 1) * pu];
+                    for (i, &x) in v.iter().enumerate() {
+                        simd::axpy(*kernel, acc, x, &trow[i * pu..(i + 1) * pu]);
+                    }
+                }
+            }
+            BankKind::Sparse { bank_rows } => {
+                for (r, row) in bank_rows.iter().enumerate() {
+                    let acc = &mut out[r * pu..(r + 1) * pu];
+                    for (j, a) in acc.iter_mut().enumerate() {
+                        let lo = row.offsets[j] as usize;
+                        let hi = row.offsets[j + 1] as usize;
+                        let mut s = 0.0;
+                        for k in lo..hi {
+                            s += row.sign[k] * v[row.idx[k] as usize];
+                        }
+                        *a = s;
+                    }
+                }
+            }
+            BankKind::Hadamard { bank_rows } => {
+                for (r, row) in bank_rows.iter().enumerate() {
+                    let acc = &mut out[r * pu..(r + 1) * pu];
+                    HADAMARD_SCRATCH.with(|c| {
+                        let scratch = &mut *c.borrow_mut();
+                        row.planes.transform(v, scratch);
+                        for (j, a) in acc.iter_mut().enumerate() {
+                            *a = scratch[row.planes.selected_index(j)];
+                        }
+                    });
+                }
+            }
+        }
+    }
+
+    /// Column `k` of every plane's head: fills `out` with `R * p` values,
+    /// `out[r * p + j] = w_head(r, j)[k]` — the rank-1 update direction
+    /// for an axis perturbation of coordinate `k`. Dense gathers the
+    /// contiguous transposed column, sparse scans each plane's CSR run,
+    /// Hadamard evaluates `H(e_k)` per row (a signed ±1 column of the
+    /// effective projection matrix).
+    pub fn head_column(&self, k: usize, out: &mut Vec<f64>) {
+        assert!(k < self.dim, "head column {k} out of range (dim {})", self.dim);
+        let pu = self.p as usize;
+        out.clear();
+        out.resize(self.rows * pu, 0.0);
+        match &self.kind {
+            BankKind::Dense { transposed, .. } => {
+                for r in 0..self.rows {
+                    let trow = Self::trow(transposed, r, self.dim + 2, pu);
+                    out[r * pu..(r + 1) * pu].copy_from_slice(&trow[k * pu..(k + 1) * pu]);
+                }
+            }
+            BankKind::Sparse { bank_rows } => {
+                for (r, row) in bank_rows.iter().enumerate() {
+                    let dst = &mut out[r * pu..(r + 1) * pu];
+                    for (j, d) in dst.iter_mut().enumerate() {
+                        let lo = row.offsets[j] as usize;
+                        let hi = row.offsets[j + 1] as usize;
+                        for t in lo..hi {
+                            // Head indices ascend within a plane's run.
+                            match (row.idx[t] as usize).cmp(&k) {
+                                std::cmp::Ordering::Less => continue,
+                                std::cmp::Ordering::Equal => {
+                                    *d = row.sign[t];
+                                    break;
+                                }
+                                std::cmp::Ordering::Greater => break,
+                            }
+                        }
+                    }
+                }
+            }
+            BankKind::Hadamard { bank_rows } => {
+                for (r, row) in bank_rows.iter().enumerate() {
+                    let col = row.planes.basis_column(k);
+                    out[r * pu..(r + 1) * pu].copy_from_slice(&col);
+                }
+            }
+        }
+    }
+
+    /// Query-side tail coefficient of every plane: fills `out` with
+    /// `R * p` values, `out[r * p + j] = w(r, j)[d]` — the coefficient
+    /// multiplying the MIPS query tail in [`Self::query_bucket`]'s
+    /// decision. Cached once by the incremental query engine.
+    pub fn query_tail_coeffs(&self, out: &mut Vec<f64>) {
+        let pu = self.p as usize;
+        out.clear();
+        out.resize(self.rows * pu, 0.0);
+        match &self.kind {
+            BankKind::Dense { transposed, .. } => {
+                for r in 0..self.rows {
+                    let trow = Self::trow(transposed, r, self.dim + 2, pu);
+                    out[r * pu..(r + 1) * pu]
+                        .copy_from_slice(&trow[self.dim * pu..(self.dim + 1) * pu]);
+                }
+            }
+            BankKind::Sparse { bank_rows } => {
+                for (r, row) in bank_rows.iter().enumerate() {
+                    out[r * pu..(r + 1) * pu].copy_from_slice(&row.c_q);
+                }
+            }
+            BankKind::Hadamard { bank_rows } => {
+                for (r, row) in bank_rows.iter().enumerate() {
+                    out[r * pu..(r + 1) * pu].copy_from_slice(&row.col_q);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

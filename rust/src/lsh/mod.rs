@@ -24,7 +24,14 @@
 //!   to the scalar oracle;
 //! * [`structured`] — structured hyperplane families (sparse Rademacher
 //!   and fast-Hadamard SRP) that cut dense O(d)-per-plane projection cost
-//!   to a few adds per nonzero / one O(d log d) transform per row.
+//!   to a few adds per nonzero / one O(d log d) transform per row;
+//! * [`query`] — the rank-1 incremental query engine: caches the base
+//!   iterate's per-plane projections and squared norm once per optimizer
+//!   step and serves each candidate `theta~ + c * u` (or a single
+//!   coordinate set to a value) as an O(R * p) update instead of an
+//!   O(R * p * d) re-projection. Exact by linearity for every family;
+//!   see the module docs for the floating-point tie discussion and the
+//!   `STORM_QUERY_INCREMENTAL=off` escape hatch.
 //!
 //! **Hash families.** The sketch selects its hyperplane family through
 //! `[storm] hash_family` (`dense` default — the paper's Gaussian SRP,
@@ -45,6 +52,7 @@ pub mod compose;
 pub mod bank;
 pub mod simd;
 pub mod structured;
+pub mod query;
 
 /// A locality-sensitive hash function mapping vectors to bucket indices in
 /// `[0, range)`.

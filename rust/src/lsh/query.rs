@@ -1,0 +1,505 @@
+//! Rank-1 incremental query engine for the optimizer hot path.
+//!
+//! Every candidate an optimizer step evaluates differs from a shared
+//! base iterate `theta~` by a single coordinate (coordinate descent) or
+//! a single direction (DFO / SPSA antithetic pairs). SRP projections are
+//! linear, so instead of re-projecting each dense `d`-dim candidate
+//! through all `R * p` hyperplanes (`O(R * p * d)` per candidate), the
+//! engine caches the base iterate's per-plane head projections
+//! `P[r, j] = <w_head(r, j), theta~>` and squared norm once, then serves
+//! each candidate as a rank-1 update:
+//!
+//! * **axis probe** `q = theta~ with q[k] = value`:
+//!   `proj = P + (value - theta~[k]) * W[:, k]` and
+//!   `||q||^2 = ||theta~||^2 - theta~[k]^2 + value^2`;
+//! * **direction probe** `q = theta~ + c * u`:
+//!   `proj = P + c * U` (with `U = <w_head, u>` shared by the antithetic
+//!   `+-c` pair) and
+//!   `||q||^2 = ||theta~||^2 + 2c <theta~, u> + c^2 ||u||^2`.
+//!
+//! Both are `O(1)` per plane — `O(R * p)` per candidate — and exact by
+//! linearity for all three hash families: dense gathers a cached
+//! plane-transposed column, sparse gathers CSR columns, and Hadamard
+//! uses `H(e_k)`, a signed ±1 column of the effective projection matrix
+//! ([`crate::lsh::bank::HashBank::head_column`]). The unit-ball rescale
+//! of the dense query path (`s = radius / ||q||` when the candidate
+//! leaves the ball) distributes over the projection, so the decision per
+//! plane is `s * proj[j] + w_q[j] * tail >= 0` with
+//! `tail = sqrt(1 - s^2 ||q||^2)` — no dense vector is ever formed.
+//!
+//! **When is the incremental path exact?** Bucket decisions are sign
+//! tests of the same real-valued projection the dense path computes, so
+//! the two paths agree except when floating-point rounding (the scale
+//! `s` is applied to the accumulated projection instead of elementwise,
+//! and the squared norm is updated instead of recomputed) straddles an
+//! exact zero — a measure-zero set of ties. On continuous random inputs
+//! the buckets are identical with probability 1 (property-tested across
+//! families, widths, and tasks), and when every intermediate product and
+//! sum is exactly representable (dyadic-rational coordinates, in-ball
+//! candidates so `s = 1`) the paths are bit-identical; an axis probe
+//! whose `value` equals the base coordinate reuses the cached base
+//! projection and norm outright and is bit-identical unconditionally.
+//!
+//! Set `STORM_QUERY_INCREMENTAL=off` to force the dense-materialize
+//! fallback everywhere ([`incremental_enabled`]); the CI `query-dense`
+//! leg runs the whole suite that way, and the dense path stays behind as
+//! the bit-level regression oracle.
+
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use crate::lsh::bank::HashBank;
+use crate::lsh::simd::{self, Kernel};
+use crate::util::mathx::{axpy, dot};
+
+/// One candidate of an optimizer step, described relative to
+/// [`CandidateSet::base`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Probe {
+    /// The base iterate itself.
+    Base,
+    /// `base` with coordinate `k` *set* to `value` (coordinate descent's
+    /// golden-section probes; set — not added — so the materialized
+    /// vector reproduces the old slot-assignment bitwise).
+    Axis {
+        /// Coordinate index into the base vector.
+        k: usize,
+        /// New value of that coordinate.
+        value: f64,
+    },
+    /// `base + step * dirs[dir]` (DFO / SPSA antithetic probes; the two
+    /// arms of a pair share one direction projection).
+    Dir {
+        /// Index into [`CandidateSet::dirs`].
+        dir: usize,
+        /// Signed step length `c`.
+        step: f64,
+    },
+}
+
+/// A whole optimizer step's worth of risk queries: a shared base
+/// iterate, the direction vectors the probes reference, and the probes
+/// themselves. This is the contract between `optim` and the sketch query
+/// paths — [`crate::optim::RiskOracle::risk_candidates`] either serves
+/// it incrementally ([`QueryEngine`]) or materializes the dense
+/// candidates ([`CandidateSet::materialize`]) and calls the batched
+/// dense oracle.
+#[derive(Clone, Copy, Debug)]
+pub struct CandidateSet<'a> {
+    /// The base iterate `theta~` (full augmented length; the classifier
+    /// reads only the leading `d` coordinates, exactly like its dense
+    /// path).
+    pub base: &'a [f64],
+    /// Direction vectors referenced by [`Probe::Dir`] (same length as
+    /// `base`).
+    pub dirs: &'a [Vec<f64>],
+    /// The candidates, in evaluation order.
+    pub probes: &'a [Probe],
+}
+
+impl CandidateSet<'_> {
+    /// Number of candidates.
+    pub fn len(&self) -> usize {
+        self.probes.len()
+    }
+
+    /// True when the set has no probes.
+    pub fn is_empty(&self) -> bool {
+        self.probes.is_empty()
+    }
+
+    /// Materialize the dense candidate vectors into `out` (cleared
+    /// first), reproducing exactly — bit for bit — the vectors the
+    /// optimizers built before the incremental engine existed: clone the
+    /// base, then assign the axis slot or `axpy` the direction.
+    pub fn materialize(&self, out: &mut Vec<Vec<f64>>) {
+        out.clear();
+        out.reserve(self.probes.len());
+        for probe in self.probes {
+            let mut v = self.base.to_vec();
+            match *probe {
+                Probe::Base => {}
+                Probe::Axis { k, value } => v[k] = value,
+                Probe::Dir { dir, step } => axpy(&mut v, step, &self.dirs[dir]),
+            }
+            out.push(v);
+        }
+    }
+}
+
+static INCREMENTAL: OnceLock<bool> = OnceLock::new();
+
+/// Whether the incremental query path is enabled, resolved once per
+/// process: honours `STORM_QUERY_INCREMENTAL` (`off`/`0`/`false` force
+/// the dense-materialize fallback, `on`/`1`/`auto` re-enable it,
+/// anything else panics loudly rather than silently running the wrong
+/// path — same contract as `STORM_SIMD`).
+pub fn incremental_enabled() -> bool {
+    *INCREMENTAL.get_or_init(|| match std::env::var("STORM_QUERY_INCREMENTAL") {
+        Err(_) => true,
+        Ok(v) => match v.trim() {
+            "off" | "0" | "false" => false,
+            "" | "on" | "1" | "auto" | "true" => true,
+            other => panic!("STORM_QUERY_INCREMENTAL must be off|0|false|on|1|auto, got {other:?}"),
+        },
+    })
+}
+
+/// The incremental query engine: caches per-bank plane data (query-tail
+/// coefficients, axis columns) and per-step base state (projections,
+/// squared norm), and turns a [`CandidateSet`] into one query bucket per
+/// `(probe, row)` pair. One engine serves one bank; the base cache
+/// invalidates itself whenever the base slice changes, so optimizers
+/// just call [`Self::probe_buckets`] every step.
+#[derive(Debug)]
+pub struct QueryEngine {
+    rows: usize,
+    p: usize,
+    /// Head dimension the engine slices candidates to (`bank.dim()` —
+    /// the classifier's feature dim, the regression sketch's full
+    /// augmented dim).
+    dim: usize,
+    kernel: Kernel,
+    radius: f64,
+    /// Query-side tail coefficient per plane, `[R * p]`.
+    tail_q: Vec<f64>,
+    /// Cached base head (validates the per-step cache).
+    base: Vec<f64>,
+    base_valid: bool,
+    /// Cached base head projections, `[R * p]`.
+    base_proj: Vec<f64>,
+    base_norm_sq: f64,
+    /// Axis columns `W[:, k]`, cached across steps (coordinate descent
+    /// revisits every coordinate each sweep).
+    axis_cols: HashMap<usize, Vec<f64>>,
+    /// Per-set direction state (projection, `<base, u>`, `||u||^2`).
+    dir_proj: Vec<Vec<f64>>,
+    dir_dot: Vec<f64>,
+    dir_norm_sq: Vec<f64>,
+    /// Per-probe projection scratch, `[R * p]`.
+    proj: Vec<f64>,
+    /// Output buckets, probe-major `[probes * R]`.
+    buckets: Vec<usize>,
+}
+
+impl QueryEngine {
+    /// Build an engine for `bank`, caching its query-tail coefficients.
+    pub fn new(bank: &HashBank) -> Self {
+        let mut tail_q = Vec::new();
+        bank.query_tail_coeffs(&mut tail_q);
+        QueryEngine {
+            rows: bank.rows(),
+            p: bank.bits() as usize,
+            dim: bank.dim(),
+            kernel: simd::kernel(),
+            radius: crate::data::scale::query_radius(),
+            tail_q,
+            base: Vec::new(),
+            base_valid: false,
+            base_proj: Vec::new(),
+            base_norm_sq: 0.0,
+            axis_cols: HashMap::new(),
+            dir_proj: Vec::new(),
+            dir_dot: Vec::new(),
+            dir_norm_sq: Vec::new(),
+            proj: Vec::new(),
+            buckets: Vec::new(),
+        }
+    }
+
+    /// Query buckets for every probe of `set` against `bank`, returned
+    /// probe-major: bucket of probe `i` in row `r` at `[i * rows + r]`.
+    /// The base pass (`O(R * p * d)`) runs only when the base slice
+    /// changed since the last call; every probe after that costs
+    /// `O(R * p)` (plus one `O(R * p * d)` projection per *direction*,
+    /// shared by its antithetic pair).
+    pub fn probe_buckets(&mut self, bank: &HashBank, set: &CandidateSet) -> &[usize] {
+        assert_eq!(bank.rows(), self.rows, "engine bound to a different bank geometry");
+        assert_eq!(bank.bits() as usize, self.p, "engine bound to a different bank geometry");
+        assert_eq!(bank.dim(), self.dim, "engine bound to a different bank geometry");
+        assert!(set.base.len() >= self.dim, "candidate base shorter than bank dim");
+        let base = &set.base[..self.dim];
+        if !self.base_valid || self.base != base {
+            bank.project_all(base, &mut self.base_proj);
+            self.base_norm_sq = dot(base, base);
+            self.base.clear();
+            self.base.extend_from_slice(base);
+            self.base_valid = true;
+        }
+        // Per-set direction state: one head projection per direction,
+        // shared by every probe that references it.
+        self.dir_proj.resize(set.dirs.len(), Vec::new());
+        self.dir_dot.clear();
+        self.dir_norm_sq.clear();
+        for (i, u) in set.dirs.iter().enumerate() {
+            assert!(u.len() >= self.dim, "direction shorter than bank dim");
+            let head = &u[..self.dim];
+            let mut proj = std::mem::take(&mut self.dir_proj[i]);
+            bank.project_all(head, &mut proj);
+            self.dir_proj[i] = proj;
+            self.dir_dot.push(dot(base, head));
+            self.dir_norm_sq.push(dot(head, head));
+        }
+        self.buckets.clear();
+        self.buckets.resize(set.probes.len() * self.rows, 0);
+        let mut out = std::mem::take(&mut self.buckets);
+        for (i, probe) in set.probes.iter().enumerate() {
+            let slot = &mut out[i * self.rows..(i + 1) * self.rows];
+            match *probe {
+                Probe::Base => self.fold_base(slot),
+                // An axis probe outside the engine's head (the
+                // classifier's label slot) or one that re-states the
+                // base value leaves the head — and so the buckets —
+                // exactly equal to the base's.
+                Probe::Axis { k, value } if k >= self.dim || value == self.base[k] => {
+                    self.fold_base(slot)
+                }
+                Probe::Axis { k, value } => {
+                    let col = match self.axis_cols.entry(k) {
+                        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            let mut col = Vec::new();
+                            bank.head_column(k, &mut col);
+                            e.insert(col)
+                        }
+                    };
+                    self.proj.clear();
+                    self.proj.extend_from_slice(&self.base_proj);
+                    simd::axpy(self.kernel, &mut self.proj, value - self.base[k], col);
+                    let norm_sq = (self.base_norm_sq - self.base[k] * self.base[k]
+                        + value * value)
+                        .max(0.0);
+                    fold_rows(
+                        self.rows, self.p, self.radius, &self.tail_q, &self.proj, norm_sq, slot,
+                    );
+                }
+                Probe::Dir { dir, step } => {
+                    self.proj.clear();
+                    self.proj.extend_from_slice(&self.base_proj);
+                    simd::axpy(self.kernel, &mut self.proj, step, &self.dir_proj[dir]);
+                    let norm_sq = (self.base_norm_sq
+                        + 2.0 * step * self.dir_dot[dir]
+                        + step * step * self.dir_norm_sq[dir])
+                        .max(0.0);
+                    fold_rows(
+                        self.rows, self.p, self.radius, &self.tail_q, &self.proj, norm_sq, slot,
+                    );
+                }
+            }
+        }
+        self.buckets = out;
+        &self.buckets
+    }
+
+    /// Fold the cached base projections into `slot` (base-probe path,
+    /// reusing the cached squared norm exactly).
+    fn fold_base(&self, slot: &mut [usize]) {
+        fold_rows(
+            self.rows,
+            self.p,
+            self.radius,
+            &self.tail_q,
+            &self.base_proj,
+            self.base_norm_sq,
+            slot,
+        );
+    }
+}
+
+/// Sign-fold one candidate's per-plane projections into per-row query
+/// buckets: resolve the unit-ball rescale `s` and MIPS tail from the
+/// squared norm, then `bit j = [s * proj[r * p + j] + w_q * tail >= 0]`
+/// — the same decision [`HashBank::query_bucket`] makes on the dense
+/// vector, with the scale applied to the accumulated projection instead
+/// of elementwise.
+fn fold_rows(
+    rows: usize,
+    p: usize,
+    radius: f64,
+    tail_q: &[f64],
+    proj: &[f64],
+    norm_sq: f64,
+    slot: &mut [usize],
+) {
+    let n = norm_sq.sqrt();
+    let (s, tail) = if n <= radius {
+        (1.0, (1.0 - norm_sq).max(0.0).sqrt())
+    } else {
+        let s = radius / n;
+        (s, (1.0 - s * s * norm_sq).max(0.0).sqrt())
+    };
+    for (r, h) in slot.iter_mut().enumerate().take(rows) {
+        let mut bits = 0usize;
+        for j in 0..p {
+            if s * proj[r * p + j] + tail_q[r * p + j] * tail >= 0.0 {
+                bits |= 1 << j;
+            }
+        }
+        *h = bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::prp::PairedRandomProjection;
+    use crate::testing::{cases, gen_ball_point, gen_dim};
+    use crate::util::mathx::norm2;
+
+    fn mk_bank(family: usize, dim: usize, p: u32, rows: usize, seed: u64) -> HashBank {
+        let seeds: Vec<u64> = (0..rows as u64)
+            .map(|r| seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(r))
+            .collect();
+        match family {
+            0 => {
+                let hashes: Vec<PairedRandomProjection> =
+                    seeds.iter().map(|&s| PairedRandomProjection::new(dim, p, s)).collect();
+                HashBank::from_rows(&hashes)
+            }
+            1 => HashBank::sparse_from_seeds(dim, p, &seeds, 300),
+            _ => HashBank::hadamard_from_seeds(dim, p, &seeds),
+        }
+    }
+
+    /// The dense oracle: materialize, rescale elementwise, hash each row.
+    fn dense_buckets(bank: &HashBank, set: &CandidateSet) -> Vec<usize> {
+        let mut cands = Vec::new();
+        set.materialize(&mut cands);
+        let radius = crate::data::scale::query_radius();
+        let mut out = Vec::new();
+        for q in &cands {
+            let head = &q[..bank.dim()];
+            let n = norm2(head);
+            let scaled: Vec<f64> = if n <= radius {
+                head.to_vec()
+            } else {
+                head.iter().map(|v| v * radius / n).collect()
+            };
+            let tail = HashBank::mips_tail(&scaled);
+            for r in 0..bank.rows() {
+                out.push(bank.query_bucket(r, &scaled, tail));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn materialize_reproduces_manual_construction_bitwise() {
+        cases(30, 71, |rng, case| {
+            let dim = gen_dim(rng, 2, 10);
+            let base = gen_ball_point(rng, dim, 0.8);
+            let dir = gen_ball_point(rng, dim, 1.0);
+            let probes = [
+                Probe::Base,
+                Probe::Axis { k: case % dim, value: 0.25 },
+                Probe::Dir { dir: 0, step: 0.1 },
+                Probe::Dir { dir: 0, step: -0.1 },
+            ];
+            let dirs = [dir.clone()];
+            let set = CandidateSet { base: &base, dirs: &dirs, probes: &probes };
+            let mut got = Vec::new();
+            set.materialize(&mut got);
+            let mut ax = base.clone();
+            ax[case % dim] = 0.25;
+            let mut plus = base.clone();
+            axpy(&mut plus, 0.1, &dir);
+            let mut minus = base.clone();
+            axpy(&mut minus, -0.1, &dir);
+            let want = vec![base.clone(), ax, plus, minus];
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn incremental_buckets_match_dense_oracle_every_family() {
+        // Random continuous inputs: fp ties are measure-zero, so the
+        // rank-1 path must reproduce the dense-materialized buckets
+        // exactly — in and out of the unit ball, axis and direction
+        // probes, base re-evaluation included.
+        cases(40, 72, |rng, case| {
+            let dim = gen_dim(rng, 2, 16);
+            let p = 1 + (case % 8) as u32;
+            let family = case % 3;
+            let bank = mk_bank(family, dim, p, 4, case as u64 ^ 0xA11CE);
+            let mut base = gen_ball_point(rng, dim, 0.8);
+            if case % 4 == 0 {
+                // Out-of-ball base: the rescale path on every probe.
+                for v in &mut base {
+                    *v *= 5.0;
+                }
+            }
+            let dirs = vec![gen_ball_point(rng, dim, 1.0), gen_ball_point(rng, dim, 1.0)];
+            let probes = [
+                Probe::Base,
+                Probe::Axis { k: case % dim, value: 0.5 },
+                Probe::Axis { k: (case + 1) % dim, value: base[(case + 1) % dim] },
+                Probe::Dir { dir: 0, step: 0.2 },
+                Probe::Dir { dir: 0, step: -0.2 },
+                Probe::Dir { dir: 1, step: 1.5 },
+            ];
+            let set = CandidateSet { base: &base, dirs: &dirs, probes: &probes };
+            let mut engine = QueryEngine::new(&bank);
+            let got = engine.probe_buckets(&bank, &set).to_vec();
+            let want = dense_buckets(&bank, &set);
+            assert_eq!(got, want, "family {} dim {dim} p {p}", bank.family());
+            // Second call with the same base hits the cache — identical.
+            assert_eq!(engine.probe_buckets(&bank, &set), &want[..]);
+        });
+    }
+
+    #[test]
+    fn engine_revalidates_when_the_base_moves() {
+        let bank = mk_bank(0, 6, 4, 3, 99);
+        let mut engine = QueryEngine::new(&bank);
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let mut base = gen_ball_point(&mut rng, 6, 0.7);
+        let probes = [Probe::Base, Probe::Axis { k: 2, value: 0.3 }];
+        for step in 0..4 {
+            let set = CandidateSet { base: &base, dirs: &[], probes: &probes };
+            let got = engine.probe_buckets(&bank, &set).to_vec();
+            assert_eq!(got, dense_buckets(&bank, &set), "step {step}");
+            // Move the base like an optimizer accepting a probe.
+            base[step % 6] += 0.05;
+        }
+    }
+
+    #[test]
+    fn dyadic_inputs_are_bit_identical_to_the_dense_path() {
+        // Coarse dyadic-rational coordinates, ±1 sparse planes, in-ball
+        // candidates: every product and sum in both paths is exactly
+        // representable, so this is bit-identity, not just tie-free
+        // agreement. (The general-case guarantee is exactness up to
+        // measure-zero fp ties; here the ties cannot happen at all.)
+        let dim = 8;
+        let bank = mk_bank(1, dim, 6, 5, 0xD7AD1C);
+        let base: Vec<f64> = (0..dim).map(|i| (i as f64 - 3.0) / 16.0).collect();
+        let dirs: Vec<Vec<f64>> =
+            vec![(0..dim).map(|i| if i % 2 == 0 { 0.25 } else { -0.125 }).collect()];
+        let probes = [
+            Probe::Base,
+            Probe::Axis { k: 1, value: 0.375 },
+            Probe::Axis { k: 5, value: -0.5 },
+            Probe::Dir { dir: 0, step: 0.25 },
+            Probe::Dir { dir: 0, step: -0.25 },
+        ];
+        let set = CandidateSet { base: &base, dirs: &dirs, probes: &probes };
+        assert!(norm2(&base) <= crate::data::scale::query_radius(), "test must stay in-ball");
+        let mut engine = QueryEngine::new(&bank);
+        assert_eq!(engine.probe_buckets(&bank, &set), dense_buckets(&bank, &set));
+    }
+
+    #[test]
+    fn axis_probe_beyond_head_dim_folds_to_base() {
+        // The classifier's label slot: an axis probe at k >= bank.dim()
+        // cannot change the head, so its buckets equal the base's.
+        let bank = mk_bank(0, 4, 3, 3, 7);
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let mut base = gen_ball_point(&mut rng, 4, 0.6);
+        base.push(-1.0); // augmented label slot past the bank head
+        let probes = [Probe::Base, Probe::Axis { k: 4, value: 2.5 }];
+        let set = CandidateSet { base: &base, dirs: &[], probes: &probes };
+        let mut engine = QueryEngine::new(&bank);
+        let got = engine.probe_buckets(&bank, &set);
+        assert_eq!(&got[..3], &got[3..6]);
+    }
+}

@@ -162,6 +162,15 @@ fn side_bucket_tail_scalar(
     h
 }
 
+/// Scalar axpy over elements `start..`, shared by the `Kernel::Scalar`
+/// body and the vector kernels' remainder lanes.
+#[inline]
+fn axpy_scalar(y: &mut [f64], a: f64, x: &[f64], start: usize) {
+    for (yj, &xj) in y[start..].iter_mut().zip(&x[start..]) {
+        *yj += a * xj;
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::*;
@@ -271,6 +280,39 @@ mod x86 {
         }
         h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
     }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(y: &mut [f64], a: f64, x: &[f64]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = _mm256_set1_pd(a);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let acc = _mm256_add_pd(
+                _mm256_loadu_pd(yp.add(j)),
+                _mm256_mul_pd(av, _mm256_loadu_pd(xp.add(j))),
+            );
+            _mm256_storeu_pd(yp.add(j), acc);
+            j += 4;
+        }
+        super::axpy_scalar(y, a, x, j);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_sse2(y: &mut [f64], a: f64, x: &[f64]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let av = _mm_set1_pd(a);
+        let mut j = 0usize;
+        while j + 2 <= n {
+            let acc = _mm_add_pd(_mm_loadu_pd(yp.add(j)), _mm_mul_pd(av, _mm_loadu_pd(xp.add(j))));
+            _mm_storeu_pd(yp.add(j), acc);
+            j += 2;
+        }
+        super::axpy_scalar(y, a, x, j);
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -328,6 +370,20 @@ mod arm {
         }
         h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
     }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(y: &mut [f64], a: f64, x: &[f64]) {
+        let n = y.len();
+        let yp = y.as_mut_ptr();
+        let xp = x.as_ptr();
+        let mut j = 0usize;
+        while j + 2 <= n {
+            let acc = vaddq_f64(vld1q_f64(yp.add(j)), vmulq_n_f64(vld1q_f64(xp.add(j)), a));
+            vst1q_f64(yp.add(j), acc);
+            j += 2;
+        }
+        super::axpy_scalar(y, a, x, j);
+    }
 }
 
 /// Both PRP data buckets (`sign(s + t)`, `sign(t - s)` folds) for one
@@ -371,6 +427,26 @@ pub fn side_bucket_t(
         Kernel::Avx2 => unsafe { x86::side_bucket_avx2(trow, p, v, tail, tail_row) },
         #[cfg(target_arch = "aarch64")]
         Kernel::Neon => unsafe { arm::side_bucket_neon(trow, p, v, tail, tail_row) },
+    }
+}
+
+/// In-place rank-1 update `y[j] += a * x[j]` over equal-length slices —
+/// the per-plane axpy of the incremental query engine
+/// ([`crate::lsh::query::QueryEngine`]). Lane arithmetic is a separate
+/// multiply and add (no FMA contraction), and lanes never mix elements,
+/// so every element is **bit-identical** to the scalar statement under
+/// any kernel.
+#[inline]
+pub fn axpy(k: Kernel, y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len(), "axpy length mismatch");
+    match k {
+        Kernel::Scalar => axpy_scalar(y, a, x, 0),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => unsafe { x86::axpy_sse2(y, a, x) },
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => unsafe { x86::axpy_avx2(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { arm::axpy_neon(y, a, x) },
     }
 }
 
@@ -438,5 +514,30 @@ mod tests {
     fn kernel_name_is_stable() {
         assert_eq!(Kernel::Scalar.name(), "scalar");
         assert!(!kernel().name().is_empty());
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bitwise_all_remainders() {
+        // Lengths 0..=19 cover the vector main loop and every remainder
+        // count for 2- and 4-lane kernels.
+        let k = kernel();
+        cases(40, 29, |rng, case| {
+            let n = case % 20;
+            let x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let y0: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+            let a = rng.gaussian();
+            let mut y_k = y0.clone();
+            axpy(k, &mut y_k, a, &x);
+            let mut y_s = y0.clone();
+            axpy_scalar(&mut y_s, a, x.as_slice(), 0);
+            for j in 0..n {
+                assert_eq!(
+                    y_k[j].to_bits(),
+                    y_s[j].to_bits(),
+                    "kernel {} axpy diverged at {j} (n={n})",
+                    k.name()
+                );
+            }
+        });
     }
 }

@@ -11,10 +11,14 @@
 //! Each sweep refines every coordinate by golden-section search on the
 //! sketch estimate, with the bracket radius shrinking geometrically
 //! across sweeps. All evaluations go through the same [`RiskOracle`] the
-//! DFO path uses, so this optimizer works against the pure-rust sketch,
-//! composite sketches, private releases, and the XLA query executable.
+//! DFO path uses — as [`Probe::Axis`] candidates against the constant
+//! sweep iterate, which is the incremental query engine's best case:
+//! the base projection is cached once per coordinate and every bracket,
+//! section, and center probe costs `O(R * p)` — so this optimizer works
+//! against the pure-rust sketch, composite sketches, private releases,
+//! and the XLA query executable.
 
-use super::RiskOracle;
+use super::{CandidateSet, Probe, RiskOracle};
 
 /// Coordinate-descent configuration.
 #[derive(Clone, Copy, Debug)]
@@ -54,12 +58,12 @@ pub fn coordinate_descent(oracle: &dyn RiskOracle, cfg: CoordConfig) -> CoordRes
     let mut evals = 0u64;
     let mut radius = cfg.radius;
     let phi = (5f64.sqrt() - 1.0) / 2.0; // 0.618...
-    // Persistent scratch for the paired bracket probes (the only two
-    // independent evaluations per coordinate — the section iterations
-    // are inherently sequential): both candidate vectors are allocated
-    // once and overwritten in place each coordinate, and batched oracles
-    // evaluate the pair in one fused pass.
-    let mut probe_buf: Vec<Vec<f64>> = vec![vec![0.0; d + 1]; 2];
+    // Persistent scratch for the probe list and risks. Every evaluation
+    // of a coordinate search is an axis probe against the SAME base
+    // iterate (the old in-place slot mutation, expressed declaratively),
+    // so the incremental engine's base cache stays valid for the whole
+    // bracket + section + center sequence of a coordinate.
+    let mut probes: Vec<Probe> = Vec::with_capacity(2);
     let mut probe_risks: Vec<f64> = Vec::with_capacity(2);
     for _ in 0..cfg.sweeps {
         for j in 0..d {
@@ -70,19 +74,23 @@ pub fn coordinate_descent(oracle: &dyn RiskOracle, cfg: CoordConfig) -> CoordRes
             let mut hi = center + radius;
             let mut x1 = hi - phi * (hi - lo);
             let mut x2 = lo + phi * (hi - lo);
-            for (slot, &v) in probe_buf.iter_mut().zip(&[x1, x2]) {
-                slot.copy_from_slice(&theta_tilde);
-                slot[j] = v;
-            }
-            oracle.risk_batch(&probe_buf, &mut probe_risks);
+            probes.clear();
+            probes.push(Probe::Axis { k: j, value: x1 });
+            probes.push(Probe::Axis { k: j, value: x2 });
+            oracle.risk_candidates(
+                &CandidateSet { base: &theta_tilde, dirs: &[], probes: &probes },
+                &mut probe_risks,
+            );
             let (mut f1, mut f2) = (probe_risks[0], probe_risks[1]);
             evals += 2;
-            let mut eval_at = |v: f64, theta_tilde: &mut Vec<f64>| -> f64 {
-                let old = theta_tilde[j];
-                theta_tilde[j] = v;
-                let r = oracle.risk(theta_tilde);
-                theta_tilde[j] = old;
-                r
+            let mut eval_at = |v: f64| -> f64 {
+                probes.clear();
+                probes.push(Probe::Axis { k: j, value: v });
+                oracle.risk_candidates(
+                    &CandidateSet { base: &theta_tilde, dirs: &[], probes: &probes },
+                    &mut probe_risks,
+                );
+                probe_risks[0]
             };
             for _ in 0..cfg.section_iters {
                 if f1 <= f2 {
@@ -90,21 +98,22 @@ pub fn coordinate_descent(oracle: &dyn RiskOracle, cfg: CoordConfig) -> CoordRes
                     x2 = x1;
                     f2 = f1;
                     x1 = hi - phi * (hi - lo);
-                    f1 = eval_at(x1, &mut theta_tilde);
+                    f1 = eval_at(x1);
                 } else {
                     lo = x1;
                     x1 = x2;
                     f1 = f2;
                     x2 = lo + phi * (hi - lo);
-                    f2 = eval_at(x2, &mut theta_tilde);
+                    f2 = eval_at(x2);
                 }
                 evals += 1;
             }
             let best = if f1 <= f2 { x1 } else { x2 };
             let best_f = f1.min(f2);
             // Keep the move only if it does not degrade the estimate at
-            // the center (noise guard).
-            let center_f = eval_at(center, &mut theta_tilde);
+            // the center (noise guard). `value == center` folds to the
+            // cached base on the incremental path — a free re-read.
+            let center_f = eval_at(center);
             evals += 1;
             if best_f < center_f {
                 theta_tilde[j] = best;

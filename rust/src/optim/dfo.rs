@@ -1,20 +1,26 @@
 //! Derivative-free optimization — Algorithm 2 of the paper.
 //!
 //! Each iteration queries the sketch at `k` random points on a
-//! `sigma`-sphere centered at the current `theta~`, forms the smoothed
-//! random-direction gradient estimate
+//! `sigma`-sphere centered at the current `theta~`, spent as `k/2`
+//! antithetic pairs, and forms the smoothed central-difference gradient
+//! estimate
 //!
 //! ```text
-//! g_hat = (d+1)/(k * sigma) * sum_j (risk(theta~ + sigma u_j) - risk(theta~)) u_j
+//! g_hat = (d+1)/(k/2 * sigma) * sum_j 0.5 * (risk(theta~ + sigma u_j)
+//!                                          - risk(theta~ - sigma u_j)) u_j
 //! ```
 //!
-//! (the standard two-point sphere estimator; the baseline subtraction
-//! makes it unbiased for the smoothed objective and variance-bounded),
-//! steps `theta~ -= eta * g_hat`, and re-projects the last coordinate onto
+//! (the standard two-point sphere estimator; the antithetic difference
+//! makes it unbiased for the smoothed objective and variance-bounded
+//! without ever evaluating the incumbent itself), steps
+//! `theta~ -= eta * g_hat`, and re-projects the last coordinate onto
 //! the `-1` constraint — exactly the loop of Algorithm 2 with the gradient
-//! estimator made explicit.
+//! estimator made explicit. Candidates go to the oracle as a
+//! [`CandidateSet`] (base + direction probes), so the incremental engine
+//! serves each probe in `O(R * p)` with one shared projection per
+//! direction pair.
 
-use super::RiskOracle;
+use super::{CandidateSet, Probe, RiskOracle};
 use crate::config::OptimizerConfig;
 use crate::util::mathx::axpy;
 use crate::util::rng::{Rng, Xoshiro256};
@@ -36,12 +42,11 @@ pub struct DfoOptimizer {
     theta_tilde: Vec<f64>,
     rng: Xoshiro256,
     trace: Vec<TracePoint>,
-    /// Per-step scratch, reused across iterations: the candidate buffers
-    /// (baseline + antithetic probes, overwritten in place each step) and
-    /// the risks returned by the oracle's batch entry point. The probe
-    /// directions are fresh allocations per step — they come straight
-    /// from the RNG's `sphere_vec`.
-    candidates: Vec<Vec<f64>>,
+    /// Per-step scratch, reused across iterations: the probe list and
+    /// the risks returned by the oracle's candidate entry point. The
+    /// probe directions are fresh allocations per step — they come
+    /// straight from the RNG's `sphere_vec`.
+    probes: Vec<Probe>,
     dirs: Vec<Vec<f64>>,
     risks: Vec<f64>,
 }
@@ -57,7 +62,7 @@ impl DfoOptimizer {
             cfg,
             theta_tilde,
             trace: Vec::new(),
-            candidates: Vec::new(),
+            probes: Vec::new(),
             dirs: Vec::new(),
             risks: Vec::new(),
         }
@@ -92,8 +97,12 @@ impl DfoOptimizer {
         self.cfg.step = step;
     }
 
-    /// One Algorithm-2 iteration against the oracle. Returns the risk at
-    /// the *pre-step* iterate.
+    /// One Algorithm-2 iteration against the oracle. Returns the mean
+    /// probe risk — the Monte-Carlo estimate of the `sigma`-smoothed
+    /// risk at the *pre-step* iterate (telemetry; the gradient uses only
+    /// antithetic differences, so the incumbent `theta~` itself is never
+    /// re-evaluated and a step costs exactly `k` oracle queries, one
+    /// fewer than the seed's baseline-probing loop).
     ///
     /// The k queries are spent as k/2 *antithetic pairs* `theta +- sigma u`
     /// (central differences): sketch-estimate noise is correlated between
@@ -103,47 +112,42 @@ impl DfoOptimizer {
     pub fn step(&mut self, oracle: &dyn RiskOracle) -> f64 {
         let dim = self.theta_tilde.len();
         let pairs = (self.cfg.queries / 2).max(1);
-        // Assemble the whole candidate set — [baseline, +u_1, -u_1, ...]
-        // — and evaluate it through ONE oracle.risk_batch call: the
-        // sketch backend runs its fused bank kernel with scratch reuse,
-        // the XLA backend fuses the set into a single PJRT execution.
-        // Evaluation order (and therefore every estimate) is identical
-        // to the seed's scalar loop.
-        let total = 1 + 2 * pairs;
-        if self.candidates.len() != total || self.candidates[0].len() != dim {
-            self.candidates = vec![vec![0.0; dim]; total];
-        }
-        self.candidates[0].copy_from_slice(&self.theta_tilde);
+        // Assemble the whole step as a CandidateSet — [+u_1, -u_1, ...]
+        // relative to the shared base — and evaluate it through ONE
+        // oracle.risk_candidates call: the incremental engine serves each
+        // probe in O(R * p) with one projection per direction shared by
+        // its antithetic pair; dense backends materialize vectors
+        // bit-identical to the seed's explicit construction and run their
+        // fused batch kernels.
         self.dirs.clear();
+        self.probes.clear();
         for k in 0..pairs {
             let mut u = self.rng.sphere_vec(dim, 1.0);
             // Keep probes on the constraint surface: the last coordinate is
             // not a free parameter (Algorithm 2 projects it back), so
             // sampling it only injects variance.
             u[dim - 1] = 0.0;
-            let plus = &mut self.candidates[1 + 2 * k];
-            plus.copy_from_slice(&self.theta_tilde);
-            axpy(plus, self.cfg.sigma, &u);
-            let minus = &mut self.candidates[2 + 2 * k];
-            minus.copy_from_slice(&self.theta_tilde);
-            axpy(minus, -self.cfg.sigma, &u);
             self.dirs.push(u);
+            self.probes.push(Probe::Dir { dir: k, step: self.cfg.sigma });
+            self.probes.push(Probe::Dir { dir: k, step: -self.cfg.sigma });
         }
-        oracle.risk_batch(&self.candidates, &mut self.risks);
-        let base = self.risks[0];
+        let set =
+            CandidateSet { base: &self.theta_tilde, dirs: &self.dirs, probes: &self.probes };
+        oracle.risk_candidates(&set, &mut self.risks);
         let mut grad = vec![0.0; dim];
         for (j, u) in self.dirs.iter().enumerate() {
-            let delta = 0.5 * (self.risks[1 + 2 * j] - self.risks[2 + 2 * j]);
+            let delta = 0.5 * (self.risks[2 * j] - self.risks[2 * j + 1]);
             axpy(&mut grad, delta, u);
         }
         let scale = dim as f64 / (pairs as f64 * self.cfg.sigma);
         for g in &mut grad {
             *g *= scale;
         }
+        let smoothed = self.risks.iter().sum::<f64>() / self.risks.len() as f64;
         // Gradient step + constraint projection.
         axpy(&mut self.theta_tilde, -self.cfg.step, &grad);
         self.theta_tilde[dim - 1] = -1.0;
-        base
+        smoothed
     }
 
     /// Run `iters` iterations, then return the *tail average*
@@ -262,8 +266,9 @@ mod tests {
         let cfg = DfoConfig { queries: 8, sigma: 0.2, step: 0.1, iters: 1, seed: 5 };
         let mut opt = DfoOptimizer::new(cfg, 2);
         opt.step(&oracle);
-        // 1 baseline + k probes (k/2 antithetic pairs).
-        assert_eq!(oracle.evals(), 9);
+        // Exactly k probes (k/2 antithetic pairs) — the incumbent is
+        // never re-evaluated, so there is no baseline query.
+        assert_eq!(oracle.evals(), 8);
     }
 
     #[test]

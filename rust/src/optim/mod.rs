@@ -9,6 +9,21 @@
 //! Everything optimizes a [`RiskOracle`] — the sketch, a composite of
 //! sketches, an exact loss, or the AOT-compiled XLA query path all
 //! implement it, so the optimizer code is shared across all backends.
+//!
+//! **The `CandidateSet` contract.** Optimizer steps submit whole
+//! candidate sets as a [`CandidateSet`]: a shared base iterate plus
+//! [`Probe`]s describing each candidate relative to it (the base itself,
+//! one coordinate set to a value, or `base + c * u` along a direction).
+//! [`RiskOracle::risk_candidates`] is the single entry point: the
+//! default materializes the dense candidates (bit-identical to the
+//! vectors the optimizers used to build) and calls
+//! [`RiskOracle::risk_batch`], while [`IncrementalOracle`] routes the
+//! set through the rank-1 incremental query engine
+//! ([`crate::lsh::query`]) — `O(R * p)` per probe instead of
+//! `O(R * p * d)` — falling back to dense materialization when
+//! `STORM_QUERY_INCREMENTAL=off`. The incremental path is exact up to
+//! measure-zero floating-point bucket ties (see the `lsh::query` module
+//! docs for when it is bit-identical).
 
 pub mod dfo;
 pub mod coord;
@@ -17,6 +32,10 @@ pub mod sgd;
 pub mod linopt;
 pub mod schedule;
 
+use std::cell::{Cell, RefCell};
+
+pub use crate::lsh::query::{CandidateSet, Probe};
+use crate::lsh::query::{incremental_enabled, QueryEngine};
 use crate::sketch::model::StormModel;
 use crate::sketch::storm::{StormClassifierSketch, StormSketch};
 use crate::sketch::RiskSketch;
@@ -44,6 +63,18 @@ pub trait RiskOracle {
     fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
         out.clear();
         out.extend(candidates.iter().map(|q| self.risk(q)));
+    }
+
+    /// Evaluate a whole optimizer step's candidate set, one risk per
+    /// probe in order, written into `out` (cleared first). The default
+    /// materializes the dense candidates — reproducing exactly the
+    /// vectors the optimizers built before the incremental engine — and
+    /// submits them through [`Self::risk_batch`];
+    /// [`IncrementalOracle`] overrides this with the rank-1 path.
+    fn risk_candidates(&self, set: &CandidateSet, out: &mut Vec<f64>) {
+        let mut dense = Vec::new();
+        set.materialize(&mut dense);
+        self.risk_batch(&dense, out);
     }
 }
 
@@ -99,6 +130,74 @@ impl RiskOracle for StormModel {
 
     fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
         RiskSketch::estimate_risk_batch(self, candidates, out);
+    }
+}
+
+/// A [`RiskSketch`] wrapped with the rank-1 incremental query engine
+/// ([`crate::lsh::query::QueryEngine`]): candidate sets are served as
+/// `O(R * p)` per-probe updates of the cached base projections instead
+/// of dense `O(R * p * d)` re-projections. Scalar and batched queries
+/// delegate to the model unchanged, so wrapping is free for everything
+/// except [`RiskOracle::risk_candidates`]. The engine needs interior
+/// mutability (`&self` oracle calls), which is why this lives in a
+/// wrapper instead of inside the sketch — the sketch itself stays `Sync`
+/// for the fleet executors' scoped threads.
+///
+/// With `STORM_QUERY_INCREMENTAL=off` the wrapper materializes densely
+/// (into a reused scratch) and is bit-identical to the unwrapped model.
+pub struct IncrementalOracle<'a, M: RiskSketch> {
+    model: &'a M,
+    engine: RefCell<QueryEngine>,
+    dense: RefCell<Vec<Vec<f64>>>,
+    evals: Cell<u64>,
+}
+
+impl<'a, M: RiskSketch> IncrementalOracle<'a, M> {
+    /// Wrap `model`, binding an engine to its hash bank.
+    pub fn new(model: &'a M) -> Self {
+        IncrementalOracle {
+            engine: RefCell::new(QueryEngine::new(model.bank())),
+            model,
+            dense: RefCell::new(Vec::new()),
+            evals: Cell::new(0),
+        }
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &M {
+        self.model
+    }
+}
+
+impl<M: RiskSketch> RiskOracle for IncrementalOracle<'_, M> {
+    fn risk(&self, theta_tilde: &[f64]) -> f64 {
+        self.evals.set(self.evals.get() + 1);
+        self.model.estimate_risk_scaled(theta_tilde)
+    }
+
+    fn dim(&self) -> usize {
+        self.model.example_dim() - 1
+    }
+
+    fn evals(&self) -> u64 {
+        self.evals.get()
+    }
+
+    fn risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
+        self.evals.set(self.evals.get() + candidates.len() as u64);
+        self.model.estimate_risk_batch(candidates, out);
+    }
+
+    fn risk_candidates(&self, set: &CandidateSet, out: &mut Vec<f64>) {
+        self.evals.set(self.evals.get() + set.len() as u64);
+        if incremental_enabled() {
+            let mut engine = self.engine.borrow_mut();
+            self.model.estimate_risk_candidates(&mut engine, set, out);
+        } else {
+            let mut dense = self.dense.borrow_mut();
+            set.materialize(&mut dense);
+            self.model.estimate_risk_batch(&dense, out);
+        }
     }
 }
 

@@ -8,8 +8,7 @@
 //! paper's "we employ a simple optimization algorithm" invites — the
 //! `bench_ablate` target compares the two at matched query budgets.
 
-use super::RiskOracle;
-use crate::util::mathx::axpy;
+use super::{CandidateSet, Probe, RiskOracle};
 use crate::util::rng::{Rng, Xoshiro256};
 
 /// SPSA settings.
@@ -41,9 +40,13 @@ pub fn spsa(oracle: &dyn RiskOracle, cfg: SpsaConfig) -> Vec<f64> {
     let mut tail_sum = vec![0.0; d];
     let mut tail_n = 0u64;
     // The central-difference pair is the whole per-iteration candidate
-    // set — submit it through the oracle's batch entry point (fused on
-    // sketch/XLA backends). Buffers reused across iterations.
-    let mut candidates: Vec<Vec<f64>> = Vec::with_capacity(2);
+    // set — submit it as one CandidateSet through the oracle's candidate
+    // entry point: the incremental engine projects the perturbation
+    // direction once and serves both arms as O(R * p) updates; dense
+    // backends materialize vectors bit-identical to the old explicit
+    // clone-and-axpy construction. Buffers reused across iterations.
+    let probes = [Probe::Dir { dir: 0, step: cfg.c }, Probe::Dir { dir: 0, step: -cfg.c }];
+    let mut dirs: Vec<Vec<f64>> = vec![Vec::new()];
     let mut risks: Vec<f64> = Vec::with_capacity(2);
     for it in 0..cfg.iters {
         // Rademacher direction over the free coordinates.
@@ -51,19 +54,16 @@ pub fn spsa(oracle: &dyn RiskOracle, cfg: SpsaConfig) -> Vec<f64> {
         for v in delta.iter_mut().take(d) {
             *v = if rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
         }
-        let mut plus = theta_tilde.clone();
-        axpy(&mut plus, cfg.c, &delta);
-        let mut minus = theta_tilde.clone();
-        axpy(&mut minus, -cfg.c, &delta);
-        candidates.clear();
-        candidates.push(plus);
-        candidates.push(minus);
-        oracle.risk_batch(&candidates, &mut risks);
+        dirs[0] = delta;
+        oracle.risk_candidates(
+            &CandidateSet { base: &theta_tilde, dirs: &dirs, probes: &probes },
+            &mut risks,
+        );
         let g = (risks[0] - risks[1]) / (2.0 * cfg.c);
         // SPSA update: divide by the perturbation elementwise (delta_i =
         // +-1, so this is multiplication).
         for i in 0..d {
-            theta_tilde[i] -= cfg.a * g * delta[i];
+            theta_tilde[i] -= cfg.a * g * dirs[0][i];
         }
         theta_tilde[dim - 1] = -1.0;
         if it >= tail_start {

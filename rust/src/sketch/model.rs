@@ -32,6 +32,8 @@ use super::counters::CounterGrid;
 use super::delta::{SketchDelta, SketchSnapshot};
 use super::storm::{StormClassifierSketch, StormSketch};
 use crate::config::{StormConfig, Task};
+use crate::lsh::bank::HashBank;
+use crate::lsh::query::{CandidateSet, QueryEngine};
 use crate::util::mathx::norm2;
 
 /// Common behaviour of the trainable count-sketch models in this crate
@@ -69,6 +71,12 @@ pub trait RiskSketch: Send + Sized {
     /// The underlying counter grid.
     fn grid(&self) -> &CounterGrid;
 
+    /// The fused hash bank this model queries through. The incremental
+    /// query engine ([`QueryEngine`]) binds to it, so anything holding a
+    /// `RiskSketch` can build the rank-1 candidate path without knowing
+    /// the task.
+    fn bank(&self) -> &HashBank;
+
     /// Counter memory in bytes, width-true.
     fn bytes(&self) -> usize {
         self.grid().bytes()
@@ -91,6 +99,20 @@ pub trait RiskSketch: Send + Sized {
     /// [`Self::estimate_risk_scaled`], with scratch reuse instead of
     /// per-candidate allocation.
     fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>);
+
+    /// Serve a whole optimizer candidate set through the rank-1
+    /// incremental query engine: one estimate per probe, in order,
+    /// written into `out` (cleared first). `engine` must be bound to
+    /// [`Self::bank`]'s geometry (build it with
+    /// `QueryEngine::new(model.bank())`). Buckets — and hence estimates —
+    /// match dense materialization exactly except at measure-zero
+    /// floating-point hyperplane ties (see [`crate::lsh::query`]).
+    fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    );
 
     /// Freeze the current counters for a later [`Self::delta_since`].
     fn snapshot(&self) -> SketchSnapshot;
@@ -165,6 +187,10 @@ impl RiskSketch for StormSketch {
         StormSketch::grid(self)
     }
 
+    fn bank(&self) -> &HashBank {
+        StormSketch::bank(self)
+    }
+
     fn insert(&mut self, z: &[f64]) {
         StormSketch::insert(self, z)
     }
@@ -179,6 +205,15 @@ impl RiskSketch for StormSketch {
 
     fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
         StormSketch::estimate_risk_batch(self, candidates, out)
+    }
+
+    fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    ) {
+        StormSketch::estimate_risk_candidates(self, engine, set, out)
     }
 
     fn snapshot(&self) -> SketchSnapshot {
@@ -242,6 +277,10 @@ impl RiskSketch for StormClassifierSketch {
         StormClassifierSketch::grid(self)
     }
 
+    fn bank(&self) -> &HashBank {
+        StormClassifierSketch::bank(self)
+    }
+
     fn insert(&mut self, z: &[f64]) {
         let d = self.feature_dim();
         assert_eq!(z.len(), d + 1, "insert dim mismatch (examples are [x, y])");
@@ -284,6 +323,15 @@ impl RiskSketch for StormClassifierSketch {
             };
             out.push(est);
         }
+    }
+
+    fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    ) {
+        StormClassifierSketch::estimate_risk_candidates(self, engine, set, out)
     }
 
     fn snapshot(&self) -> SketchSnapshot {
@@ -385,6 +433,10 @@ impl RiskSketch for StormModel {
         dispatch!(self, m => m.grid())
     }
 
+    fn bank(&self) -> &HashBank {
+        dispatch!(self, m => RiskSketch::bank(m))
+    }
+
     fn insert(&mut self, z: &[f64]) {
         dispatch!(self, m => RiskSketch::insert(m, z))
     }
@@ -399,6 +451,15 @@ impl RiskSketch for StormModel {
 
     fn estimate_risk_batch(&self, candidates: &[Vec<f64>], out: &mut Vec<f64>) {
         dispatch!(self, m => RiskSketch::estimate_risk_batch(m, candidates, out))
+    }
+
+    fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    ) {
+        dispatch!(self, m => RiskSketch::estimate_risk_candidates(m, engine, set, out))
     }
 
     fn snapshot(&self) -> SketchSnapshot {

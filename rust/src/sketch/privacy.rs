@@ -24,6 +24,7 @@ use super::storm::{row_seeds, structured_bank, StormSketch, REGRESSION_ROW_SEED_
 use crate::config::{HashFamily, Task};
 use crate::lsh::bank::HashBank;
 use crate::lsh::prp::PairedRandomProjection;
+use crate::lsh::query::{CandidateSet, QueryEngine};
 use crate::util::rng::{Rng, Xoshiro256};
 
 /// A privately-released view of a STORM sketch: real-valued noisy counts.
@@ -104,6 +105,45 @@ impl PrivateStormRelease {
             acc += self.counts[r * self.buckets + b];
         }
         acc / (self.rows as f64 * self.count as f64) / super::storm::SCALE
+    }
+
+    /// The reconstructed family bank (public randomness; the incremental
+    /// query engine binds to it).
+    pub fn bank(&self) -> &HashBank {
+        &self.bank
+    }
+
+    /// Serve a whole optimizer candidate set against the noisy release
+    /// through the rank-1 incremental engine ([`crate::lsh::query`]):
+    /// the same buckets [`Self::estimate_risk`] walks per probe, read
+    /// from the real-valued noisy counts. `engine` must have been built
+    /// from [`Self::bank`]. Private training loops get the same
+    /// `O(R * p)`-per-probe hot path as the exact sketch.
+    pub fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        if set.is_empty() {
+            return;
+        }
+        assert_eq!(set.base.len(), self.dim, "query dim mismatch");
+        if self.count == 0 {
+            out.resize(set.len(), 0.0);
+            return;
+        }
+        let denom = self.rows as f64 * self.count as f64;
+        let buckets = engine.probe_buckets(&self.bank, set);
+        out.reserve(set.len());
+        for probe in buckets.chunks_exact(self.rows) {
+            let mut acc = 0.0;
+            for (r, &b) in probe.iter().enumerate() {
+                acc += self.counts[r * self.buckets + b];
+            }
+            out.push(acc / denom / super::storm::SCALE);
+        }
     }
 
     /// Noisy counter array (for transmission / inspection).
@@ -214,6 +254,53 @@ mod tests {
                     (noisy - exact).abs() <= 1e-6 + 1e-6 * exact.abs(),
                     "family {family}: noisy {noisy} vs exact {exact}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_sets_match_scalar_release_queries() {
+        // The incremental engine against the noisy release reads the
+        // same buckets as the scalar query path — estimates identical
+        // bit for bit on in-ball probes, for every hash family.
+        use crate::lsh::query::Probe;
+        for family in [
+            HashFamily::Dense,
+            HashFamily::Sparse { density_permille: 200 },
+            HashFamily::Hadamard,
+        ] {
+            let cfg = StormConfig {
+                rows: 60,
+                power: 3,
+                saturating: true,
+                hash_family: family,
+                ..Default::default()
+            };
+            let mut sk = StormSketch::new(cfg, 4, 13);
+            let mut rng = Xoshiro256::new(31);
+            for _ in 0..200 {
+                let z = gen_ball_point(&mut rng, 4, 0.9);
+                sk.insert(&z);
+            }
+            let rel = PrivateStormRelease::release(&sk, 2.0, 17);
+            let base = gen_ball_point(&mut rng, 4, 0.5);
+            let dirs = vec![gen_ball_point(&mut rng, 4, 0.2)];
+            let probes = [
+                Probe::Base,
+                Probe::Axis { k: 1, value: 0.2 },
+                Probe::Dir { dir: 0, step: 1.0 },
+                Probe::Dir { dir: 0, step: -1.0 },
+            ];
+            let set = CandidateSet { base: &base, dirs: &dirs, probes: &probes };
+            let mut engine = QueryEngine::new(rel.bank());
+            let mut got = Vec::new();
+            rel.estimate_risk_candidates(&mut engine, &set, &mut got);
+            let mut dense = Vec::new();
+            set.materialize(&mut dense);
+            assert_eq!(got.len(), dense.len());
+            for (q, g) in dense.iter().zip(&got) {
+                let want = rel.estimate_risk(q);
+                assert_eq!(g.to_bits(), want.to_bits(), "family {family}");
             }
         }
     }

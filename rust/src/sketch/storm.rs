@@ -20,6 +20,7 @@ use super::counters::{CounterCell, CounterGrid, CounterStore};
 use crate::config::{HashFamily, StormConfig, Task};
 use crate::lsh::bank::HashBank;
 use crate::lsh::prp::PairedRandomProjection;
+use crate::lsh::query::{CandidateSet, QueryEngine};
 use crate::util::mathx::norm2;
 
 /// Per-row seed stream for the regression PRP rows (and every structured
@@ -259,6 +260,41 @@ impl StormSketch {
     /// is just the SCALE-normalized readout.
     fn fused_estimate(&self, q: &[f64]) -> f64 {
         self.query(q) / SCALE
+    }
+
+    /// Serve a whole optimizer candidate set through the rank-1
+    /// incremental query engine ([`crate::lsh::query`]): one
+    /// SCALE-normalized risk estimate per probe, in order, written into
+    /// `out` (cleared first). `engine` must have been built from
+    /// [`Self::bank`]. Buckets — and hence estimates — match
+    /// [`Self::estimate_risk_batch`] on the materialized candidates
+    /// exactly except at measure-zero floating-point hyperplane ties.
+    pub fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        if set.is_empty() {
+            return;
+        }
+        assert_eq!(set.base.len(), self.dim, "query dim mismatch");
+        if self.count == 0 {
+            out.resize(set.len(), 0.0);
+            return;
+        }
+        let rows = self.cfg.rows;
+        let denom = rows as f64 * self.count as f64;
+        let buckets = engine.probe_buckets(&self.bank, set);
+        out.reserve(set.len());
+        for probe in buckets.chunks_exact(rows) {
+            let mut acc = 0.0;
+            for (r, &b) in probe.iter().enumerate() {
+                acc += self.grid.get(r, b) as f64;
+            }
+            out.push(acc / denom / SCALE);
+        }
     }
 
     /// Bulk-add a `[R, B]` histogram delta produced by the XLA insert
@@ -668,6 +704,43 @@ impl StormClassifierSketch {
         self.estimate_risk(&scaled)
     }
 
+    /// Serve a whole optimizer candidate set through the rank-1
+    /// incremental query engine ([`crate::lsh::query`]): one margin-risk
+    /// estimate per probe (with Theorem 3's `2^p` constant restored), in
+    /// order, written into `out` (cleared first). Candidates are the
+    /// *augmented* `theta~ = [theta, -1]` the optimizers carry; the
+    /// engine reads only the leading `d` head coordinates, exactly like
+    /// the dense path, so axis probes at the label slot fold to the
+    /// base. `engine` must have been built from [`Self::bank`].
+    pub fn estimate_risk_candidates(
+        &self,
+        engine: &mut QueryEngine,
+        set: &CandidateSet,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        if set.is_empty() {
+            return;
+        }
+        assert_eq!(set.base.len(), self.dim + 1, "query dim mismatch");
+        if self.count == 0 {
+            out.resize(set.len(), 0.0);
+            return;
+        }
+        let rows = self.cfg.rows;
+        let denom = rows as f64 * self.count as f64;
+        let restore = self.cfg.buckets() as f64;
+        let buckets = engine.probe_buckets(&self.bank, set);
+        out.reserve(set.len());
+        for probe in buckets.chunks_exact(rows) {
+            let mut acc = 0.0;
+            for (r, &b) in probe.iter().enumerate() {
+                acc += self.grid.get(r, b) as f64;
+            }
+            out.push(acc / denom * restore);
+        }
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -692,6 +765,13 @@ impl StormClassifierSketch {
 
     pub fn grid(&self) -> &CounterGrid {
         &self.grid
+    }
+
+    /// The fused projection bank (head dimension d — the incremental
+    /// query engine binds to it and ignores the label slot of augmented
+    /// candidates automatically).
+    pub fn bank(&self) -> &HashBank {
+        &self.bank
     }
 
     /// Per-row hash functions (tests verify the fused bank against

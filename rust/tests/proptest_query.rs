@@ -1,0 +1,256 @@
+//! Property tests for the rank-1 incremental query engine
+//! (`storm::lsh::query`): candidate-set risks must reproduce the
+//! dense-materialized oracle across every hash family, counter width,
+//! and task, and whole optimizer trajectories driven through
+//! [`IncrementalOracle`] must match the dense path.
+//!
+//! Sweeps honour the framework knobs (`storm::testing`):
+//! `STORM_TEST_CASES=<m>` multiplies case budgets,
+//! `STORM_TEST_REPLAY=<seed>:<case>` replays one case, and
+//! `STORM_TEST_WIDTH=u8|u16|u32` picks the counter width. The CI
+//! `query-dense` leg re-runs this whole file with
+//! `STORM_QUERY_INCREMENTAL=off`, which flips [`IncrementalOracle`] to
+//! the dense-materialize fallback — the trajectory properties then pin
+//! the fallback's bit-identity to the bare model oracle, while the
+//! direct engine properties keep exercising the rank-1 kernels
+//! themselves.
+
+use storm::config::{HashFamily, StormConfig, Task};
+use storm::lsh::query::{CandidateSet, Probe, QueryEngine};
+use storm::optim::coord::{coordinate_descent, CoordConfig};
+use storm::optim::dfo::{DfoConfig, DfoOptimizer};
+use storm::optim::spsa::{spsa, SpsaConfig};
+use storm::optim::{IncrementalOracle, RiskOracle};
+use storm::sketch::model::StormModel;
+use storm::sketch::RiskSketch;
+use storm::testing::{assert_allclose, cases, gen_ball_point, gen_dim, test_counter_width};
+use storm::util::rng::Xoshiro256;
+
+const FAMILIES: [HashFamily; 3] = [
+    HashFamily::Dense,
+    HashFamily::Sparse { density_permille: 300 },
+    HashFamily::Hadamard,
+];
+
+fn stream(rng: &mut Xoshiro256, task: Task, n: usize, d: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| match task {
+            Task::Regression => gen_ball_point(rng, d + 1, 0.9),
+            Task::Classification => {
+                let mut z = gen_ball_point(rng, d, 0.9);
+                z.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+                z
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_candidate_risks_match_dense_every_family_width_and_task() {
+    // The engine's buckets are sign tests of the same real projections
+    // the dense path computes, so on continuous random inputs (fp ties
+    // are measure-zero) the estimates must agree bit for bit — in and
+    // out of the unit ball, axis probes (including the label slot and a
+    // value re-stating the base), and shared-direction antithetic pairs.
+    cases(20, 301, |rng, case| {
+        let width = test_counter_width();
+        for &family in &FAMILIES {
+            for task in [Task::Regression, Task::Classification] {
+                let d = gen_dim(rng, 2, 10);
+                let cfg = StormConfig {
+                    rows: 10 + 10 * (case % 3),
+                    power: 1 + (case % 5) as u32,
+                    saturating: true,
+                    counter_width: width,
+                    hash_family: family,
+                    task,
+                    ..Default::default()
+                };
+                let mut model = StormModel::new(cfg, d + 1, case as u64 ^ 0x51EE);
+                model.insert_batch(&stream(rng, task, 60, d));
+                let mut base = gen_ball_point(rng, d, 0.7);
+                if case % 4 == 0 {
+                    // Far out of the ball: every probe rescales.
+                    for v in &mut base {
+                        *v *= 6.0;
+                    }
+                }
+                base.push(-1.0);
+                let mut dirs =
+                    vec![gen_ball_point(rng, d + 1, 1.0), gen_ball_point(rng, d + 1, 1.0)];
+                for u in &mut dirs {
+                    u[d] = 0.0;
+                }
+                let probes = [
+                    Probe::Base,
+                    Probe::Axis { k: case % d, value: 0.4 },
+                    Probe::Axis { k: (case + 1) % d, value: base[(case + 1) % d] },
+                    Probe::Axis { k: d, value: -1.0 },
+                    Probe::Dir { dir: 0, step: 0.15 },
+                    Probe::Dir { dir: 0, step: -0.15 },
+                    Probe::Dir { dir: 1, step: 1.1 },
+                ];
+                let set = CandidateSet { base: &base, dirs: &dirs, probes: &probes };
+                let mut engine = QueryEngine::new(model.bank());
+                let mut inc = Vec::new();
+                model.estimate_risk_candidates(&mut engine, &set, &mut inc);
+                let mut dense_cands = Vec::new();
+                set.materialize(&mut dense_cands);
+                let mut dense = Vec::new();
+                model.estimate_risk_batch(&dense_cands, &mut dense);
+                assert_eq!(inc.len(), dense.len());
+                for (i, (a, b)) in inc.iter().zip(&dense).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{family} {task:?} d={d} probe {i}: incremental {a} != dense {b}"
+                    );
+                }
+                // The second serve hits the cached base — still identical.
+                let mut again = Vec::new();
+                model.estimate_risk_candidates(&mut engine, &set, &mut again);
+                assert_eq!(inc, again);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_empty_model_candidates_are_all_zero() {
+    cases(8, 303, |rng, case| {
+        let d = gen_dim(rng, 2, 6);
+        let task = if case % 2 == 0 { Task::Regression } else { Task::Classification };
+        let cfg = StormConfig { rows: 8, power: 3, saturating: true, task, ..Default::default() };
+        let model = StormModel::new(cfg, d + 1, 3);
+        let mut base = gen_ball_point(rng, d, 0.5);
+        base.push(-1.0);
+        let probes = [Probe::Base, Probe::Axis { k: 0, value: 0.1 }];
+        let set = CandidateSet { base: &base, dirs: &[], probes: &probes };
+        let mut engine = QueryEngine::new(model.bank());
+        let mut out = vec![7.0; 5]; // stale scratch must be cleared
+        model.estimate_risk_candidates(&mut engine, &set, &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    });
+}
+
+#[test]
+fn prop_dfo_trajectory_matches_dense_path() {
+    // End to end: the same optimizer seed driven through the
+    // IncrementalOracle must land on the same model as the bare
+    // dense-batch oracle. Estimates are bit-identical wherever no fp
+    // bucket tie occurs (measure-zero on random data), so the
+    // trajectories agree to fp-noise tolerance.
+    cases(4, 304, |rng, case| {
+        let d = 3 + case % 3;
+        let task = if case % 2 == 0 { Task::Regression } else { Task::Classification };
+        let cfg = StormConfig {
+            rows: 40,
+            power: 3,
+            saturating: true,
+            hash_family: FAMILIES[case % 3],
+            task,
+            ..Default::default()
+        };
+        let mut model = StormModel::new(cfg, d + 1, 11 + case as u64);
+        model.insert_batch(&stream(rng, task, 150, d));
+        let ocfg = DfoConfig { queries: 6, sigma: 0.15, step: 0.1, iters: 25, seed: 17 };
+        let dense = DfoOptimizer::new(ocfg, d).run(&model, 25);
+        let oracle = IncrementalOracle::new(&model);
+        let inc = DfoOptimizer::new(ocfg, d).run(&oracle, 25);
+        assert_allclose(&dense, &inc, 1e-12);
+        assert_eq!(oracle.evals(), 25 * 6, "k queries per step, no baseline");
+    });
+}
+
+#[test]
+fn prop_coordinate_descent_trajectory_matches_dense_path() {
+    cases(4, 305, |rng, case| {
+        let d = 3 + case % 2;
+        let task = if case % 2 == 0 { Task::Classification } else { Task::Regression };
+        let cfg = StormConfig {
+            rows: 50,
+            power: 3,
+            saturating: true,
+            hash_family: FAMILIES[(case + 1) % 3],
+            task,
+            ..Default::default()
+        };
+        let mut model = StormModel::new(cfg, d + 1, 23 + case as u64);
+        model.insert_batch(&stream(rng, task, 150, d));
+        let ccfg = CoordConfig { sweeps: 3, radius: 0.5, shrink: 0.6, section_iters: 6 };
+        let dense = coordinate_descent(&model, ccfg);
+        let inc = coordinate_descent(&IncrementalOracle::new(&model), ccfg);
+        assert_allclose(&dense.theta, &inc.theta, 1e-12);
+        assert_allclose(&dense.trace, &inc.trace, 1e-12);
+        assert_eq!(dense.evals, inc.evals);
+    });
+}
+
+#[test]
+fn prop_spsa_trajectory_matches_dense_path() {
+    cases(4, 306, |rng, case| {
+        let d = 2 + case % 3;
+        let task = if case % 2 == 0 { Task::Regression } else { Task::Classification };
+        let cfg = StormConfig {
+            rows: 40,
+            power: 3,
+            saturating: true,
+            hash_family: FAMILIES[(case + 2) % 3],
+            task,
+            ..Default::default()
+        };
+        let mut model = StormModel::new(cfg, d + 1, 31 + case as u64);
+        model.insert_batch(&stream(rng, task, 120, d));
+        let scfg = SpsaConfig { c: 0.2, a: 0.1, iters: 60, seed: 29 };
+        let dense = spsa(&model, scfg);
+        let inc = spsa(&IncrementalOracle::new(&model), scfg);
+        assert_allclose(&dense, &inc, 1e-12);
+    });
+}
+
+#[test]
+fn coarse_step_candidates_are_bit_identical_to_dense() {
+    // Exact-equality pin at coarse steps where fp ties are impossible:
+    // dyadic-rational base/directions/values, ±1 sparse planes, and
+    // in-ball candidates (the classifier head skips the augmented -1, so
+    // s = 1 and no rescale rounding exists on either path). Every
+    // intermediate product and sum is exactly representable, so the
+    // incremental estimates equal the dense ones bit for bit — not just
+    // tie-free-equal.
+    let d = 8;
+    let cfg = StormConfig {
+        rows: 12,
+        power: 5,
+        saturating: true,
+        hash_family: HashFamily::Sparse { density_permille: 400 },
+        task: Task::Classification,
+        ..Default::default()
+    };
+    let mut model = StormModel::new(cfg, d + 1, 0xC0A5);
+    let mut rng = Xoshiro256::new(41);
+    model.insert_batch(&stream(&mut rng, Task::Classification, 100, d));
+    let mut base: Vec<f64> = (0..d).map(|i| (i as f64 - 4.0) / 16.0).collect();
+    base.push(-1.0);
+    let mut dir: Vec<f64> = (0..d).map(|i| if i % 2 == 0 { 0.25 } else { -0.125 }).collect();
+    dir.push(0.0);
+    let dirs = vec![dir];
+    let probes = [
+        Probe::Base,
+        Probe::Axis { k: 2, value: 0.375 },
+        Probe::Axis { k: 6, value: -0.5 },
+        Probe::Dir { dir: 0, step: 0.25 },
+        Probe::Dir { dir: 0, step: -0.25 },
+        Probe::Axis { k: d, value: -1.0 },
+    ];
+    let set = CandidateSet { base: &base, dirs: &dirs, probes: &probes };
+    let mut engine = QueryEngine::new(model.bank());
+    let mut inc = Vec::new();
+    model.estimate_risk_candidates(&mut engine, &set, &mut inc);
+    let mut dense_cands = Vec::new();
+    set.materialize(&mut dense_cands);
+    let mut dense = Vec::new();
+    model.estimate_risk_batch(&dense_cands, &mut dense);
+    assert_eq!(inc.len(), dense.len());
+    for (i, (a, b)) in inc.iter().zip(&dense).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "probe {i}: {a} vs {b}");
+    }
+}
