@@ -1,0 +1,29 @@
+//! Fuzz target: full-sketch wire decoding must never panic.
+//!
+//! `decode` is the v1-compatible full-sketch entry point: it rebuilds a
+//! live [`storm::sketch::storm::StormSketch`] (hash family and all) from
+//! the embedded seed. Arbitrary bytes must yield either a sketch or a
+//! structured `WireError` — any panic, unbounded allocation, or
+//! arithmetic overflow is a wire-safety bug. Dense-family frames that
+//! decode successfully must re-encode to a frame that decodes to the
+//! same counters (the v1 wire only speaks the dense family, so the
+//! round-trip leg is gated on it).
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use storm::config::HashFamily;
+use storm::sketch::serialize::{decode, encode};
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(sketch) = decode(data) {
+        if sketch.config().hash_family == HashFamily::Dense {
+            let bytes = encode(&sketch);
+            let again = decode(&bytes).expect("re-encoded frame must decode");
+            assert_eq!(again.grid().counts_u32(), sketch.grid().counts_u32());
+            assert_eq!(again.count(), sketch.count());
+            assert_eq!(again.seed(), sketch.seed());
+            assert_eq!(again.dim(), sketch.dim());
+        }
+    }
+});

@@ -1,0 +1,22 @@
+//! Fuzz target: delta wire decoding must never panic.
+//!
+//! `decode_delta` handles the v1/v2/v3 frames — the largest attack
+//! surface on the wire (varint gap coding, width negotiation, the v3
+//! task/family/privacy flag bits). Arbitrary bytes must yield either a
+//! delta or a structured `WireError`. Frames that decode successfully
+//! must survive a v3 re-encode/re-decode round trip as an identical
+//! [`storm::sketch::delta::SketchDelta`] (the width tag rides the
+//! struct, so equality covers it).
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use storm::sketch::serialize::{decode_delta, encode_delta_v3};
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(delta) = decode_delta(data) {
+        let bytes = encode_delta_v3(&delta);
+        let again = decode_delta(&bytes).expect("re-encoded delta must decode");
+        assert_eq!(delta, again, "delta decode/encode round-trip drifted");
+    }
+});

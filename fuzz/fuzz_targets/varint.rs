@@ -1,0 +1,22 @@
+//! Fuzz target: LEB128 varint stream decoding must never panic.
+//!
+//! `fuzz_varint_stream` drains a byte slice through the same
+//! `WireReader::varint` path the sparse decoder uses. Any decoded value
+//! must re-encode to a canonical byte string that decodes back to the
+//! same value (varints are canonical on this wire — no overlong forms
+//! are ever produced by the encoder).
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use storm::sketch::serialize::{fuzz_varint_stream, varint_to_bytes};
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok(values) = fuzz_varint_stream(data) {
+        for v in values {
+            let bytes = varint_to_bytes(v);
+            let back = fuzz_varint_stream(&bytes).expect("canonical varint must decode");
+            assert_eq!(back, vec![v], "varint round-trip drifted");
+        }
+    }
+});

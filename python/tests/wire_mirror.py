@@ -13,11 +13,27 @@ spec, not like the rust code.
 
 import struct
 
+# Wire-constant table. `stormlint` (tools/stormlint) extracts every
+# ALL_CAPS assignment below and diffs it against both the Rust codec
+# (rust/src/sketch/serialize.rs) and its own embedded snapshot — renaming
+# or re-valuing any of these without updating all three sides fails lint.
 MAGIC = 0x53544F52
+VERSION_DENSE = 1  # v1: full dense u32 sketch
+VERSION_DELTA = 2  # v2: epoch-tagged u32 delta
+VERSION_WIDTH = 3  # v3: width/task/family/privacy-tagged delta
 FLAG_DENSE = 0
 FLAG_SPARSE = 1
 FLAG_TASK_CLASSIFICATION = 2
 FLAG_PRIVATE = 16
+FAMILY_SHIFT = 2
+FAMILY_MASK = 0b11 << FAMILY_SHIFT
+FAMILY_DENSE = 0
+FAMILY_SPARSE = 1
+FAMILY_HADAMARD = 2
+HEADER = 4 + 2 + 2 + 4 + 4 + 8 + 8  # magic..count, all versions
+HEADER_V2 = HEADER + 8 + 1  # + epoch + flags
+HEADER_V3 = HEADER + 8 + 1 + 1  # + epoch + width + flags
+MAX_CELLS = 1 << 26  # decoder allocation ceiling (rows * buckets)
 
 
 def fnv1a(data: bytes) -> int:
@@ -44,7 +60,7 @@ def header(version, power, rows, dim, seed, count) -> bytes:
 
 
 def encode_v1(power, rows, dim, seed, count, counts) -> bytes:
-    body = header(1, power, rows, dim, seed, count)
+    body = header(VERSION_DENSE, power, rows, dim, seed, count)
     body += b"".join(struct.pack("<I", c) for c in counts)
     return body + struct.pack("<I", fnv1a(body))
 
@@ -71,8 +87,8 @@ def encode_delta(
     per-mille as a little-endian u16 right after the flags byte.
     ``private`` sets flags bit 4 (DP-noised increments) and forces v3.
     """
-    v3 = width_bytes != 4 or classification or family != 0 or private
-    body = header(3 if v3 else 2, power, rows, dim, seed, count)
+    v3 = width_bytes != 4 or classification or family != FAMILY_DENSE or private
+    body = header(VERSION_WIDTH if v3 else VERSION_DELTA, power, rows, dim, seed, count)
     body += struct.pack("<Q", epoch)
     if v3:
         body += bytes([width_bytes])
@@ -80,10 +96,10 @@ def encode_delta(
     if v3:
         tag_bits = (
             (FLAG_TASK_CLASSIFICATION if classification else 0)
-            | (family << 2)
+            | (family << FAMILY_SHIFT)
             | (FLAG_PRIVATE if private else 0)
         )
-    density = struct.pack("<H", density_permille) if (v3 and family == 1) else b""
+    density = struct.pack("<H", density_permille) if (v3 and family == FAMILY_SPARSE) else b""
     nonzero = [(i, c) for i, c in enumerate(counts) if c != 0]
     if len(nonzero) * 2 <= len(counts):  # populated fraction <= 50%
         body += bytes([FLAG_SPARSE | tag_bits]) + density
@@ -118,7 +134,7 @@ DENSE_U16 = dict(
 def encode_v3_u32_regression(spec) -> bytes:
     """The explicit v3-at-u32 regression frame (rust encode_delta_v3;
     the implicit encoder ships u32 regression deltas as v2 instead)."""
-    body = header(3, spec["power"], spec["rows"], spec["dim"], spec["seed"], spec["count"])
+    body = header(VERSION_WIDTH, spec["power"], spec["rows"], spec["dim"], spec["seed"], spec["count"])
     body += struct.pack("<Q", spec["epoch"])
     body += bytes([4])
     nonzero = [(i, c) for i, c in enumerate(spec["counts"]) if c != 0]
@@ -153,11 +169,14 @@ def fixtures():
         # Structured hash families: family bits 2-3 set (always v3); the
         # sparse family carries its density per-mille after the flags.
         "GOLDEN_SPARSE_FAM_U32_SPARSE_HEX": encode_delta(
-            **s, family=1, density_permille=250
+            **s, family=FAMILY_SPARSE, density_permille=250
         ),
-        "GOLDEN_HADAMARD_U8_SPARSE_HEX": encode_delta(**s, width_bytes=1, family=2),
+        "GOLDEN_HADAMARD_U8_SPARSE_HEX": encode_delta(
+            **s, width_bytes=1, family=FAMILY_HADAMARD
+        ),
         "GOLDEN_SPARSE_FAM_CLF_U16_DENSE_HEX": encode_delta(
-            **d16, width_bytes=2, classification=True, family=1, density_permille=100
+            **d16, width_bytes=2, classification=True,
+            family=FAMILY_SPARSE, density_permille=100
         ),
         # Private deltas: flags bit 4 set (always v3, even u32 regression).
         "GOLDEN_PRIVATE_U32_SPARSE_HEX": encode_delta(**s, private=True),

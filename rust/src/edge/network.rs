@@ -240,7 +240,7 @@ impl Link {
             }
             Err(TrySendError::Disconnected(_)) => return Err(()),
         };
-        let t = std::time::Instant::now();
+        let t = crate::util::timer::Timer::start();
         let result = tx.send(msg).map_err(|_| ());
         self.stats
             .blocked_ns

@@ -27,6 +27,19 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts via PJRT and executes
 //! them from the hot path; Python never runs at request time.
+//!
+//! ## Lint posture
+//!
+//! `unsafe` is denied crate-wide; the one audited exception is
+//! [`lsh::simd`], which scopes its own `#![allow(unsafe_code)]` and
+//! denies `unsafe_op_in_unsafe_fn`. The repo-specific invariants the
+//! compiler can't see (seeded determinism, panic-free wire decoding,
+//! scalar-ordered float reductions) are enforced by `tools/stormlint`
+//! — `cargo run -p stormlint`.
+
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::dbg_macro, clippy::todo, clippy::unimplemented, clippy::mem_forget)]
 
 pub mod util;
 pub mod testing;

@@ -45,7 +45,7 @@
 //! leg runs the whole suite that way, and the dense path stays behind as
 //! the bit-level regression oracle.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::OnceLock;
 
 use crate::lsh::bank::HashBank;
@@ -170,8 +170,11 @@ pub struct QueryEngine {
     base_proj: Vec<f64>,
     base_norm_sq: f64,
     /// Axis columns `W[:, k]`, cached across steps (coordinate descent
-    /// revisits every coordinate each sweep).
-    axis_cols: HashMap<usize, Vec<f64>>,
+    /// revisits every coordinate each sweep). A BTreeMap keeps the
+    /// cache's iteration order deterministic (stormlint:
+    /// `randomized-hasher`) — lookups here are O(log sweeps), dwarfed by
+    /// the column fills they cache.
+    axis_cols: BTreeMap<usize, Vec<f64>>,
     /// Per-set direction state (projection, `<base, u>`, `||u||^2`).
     dir_proj: Vec<Vec<f64>>,
     dir_dot: Vec<f64>,
@@ -198,7 +201,7 @@ impl QueryEngine {
             base_valid: false,
             base_proj: Vec::new(),
             base_norm_sq: 0.0,
-            axis_cols: HashMap::new(),
+            axis_cols: BTreeMap::new(),
             dir_proj: Vec::new(),
             dir_dot: Vec::new(),
             dir_norm_sq: Vec::new(),
@@ -256,8 +259,8 @@ impl QueryEngine {
                 }
                 Probe::Axis { k, value } => {
                     let col = match self.axis_cols.entry(k) {
-                        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-                        std::collections::hash_map::Entry::Vacant(e) => {
+                        std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+                        std::collections::btree_map::Entry::Vacant(e) => {
                             let mut col = Vec::new();
                             bank.head_column(k, &mut col);
                             e.insert(col)

@@ -33,9 +33,19 @@
 //!
 //! Kernel selection happens once per process ([`kernel`]): AVX2 when the
 //! CPU reports it, else SSE2 (the x86-64 baseline); NEON on aarch64 (the
-//! baseline there); scalar elsewhere. Set `STORM_SIMD=off` (or
+//! baseline there); scalar elsewhere — and always scalar under Miri,
+//! which interprets no vendor intrinsics. Set `STORM_SIMD=off` (or
 //! `scalar`) to force the scalar fallback — the CI `simd-off` leg runs
 //! the whole suite this way to pin the fallback against the oracle.
+//!
+//! This module is the crate's **only** home for `unsafe`
+//! (`#![deny(unsafe_code)]` at the crate root, stormlint's
+//! `unsafe-outside-simd` rule): every site below carries a `// SAFETY:`
+//! comment and `unsafe_op_in_unsafe_fn` is denied, so even inside
+//! `unsafe fn` each operation sits in an audited `unsafe {}` block.
+
+#![allow(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 use std::sync::OnceLock;
 
@@ -74,18 +84,24 @@ impl Kernel {
 }
 
 fn detect() -> Kernel {
-    #[cfg(target_arch = "x86_64")]
+    // Miri interprets MIR, not vendor intrinsics: route dispatch to the
+    // scalar oracle so `cargo miri test` runs the whole suite.
+    #[cfg(miri)]
+    {
+        Kernel::Scalar
+    }
+    #[cfg(all(not(miri), target_arch = "x86_64"))]
     {
         if std::arch::is_x86_feature_detected!("avx2") {
             return Kernel::Avx2;
         }
         Kernel::Sse2
     }
-    #[cfg(target_arch = "aarch64")]
+    #[cfg(all(not(miri), target_arch = "aarch64"))]
     {
         Kernel::Neon
     }
-    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[cfg(not(any(miri, target_arch = "x86_64", target_arch = "aarch64")))]
     {
         Kernel::Scalar
     }
@@ -175,32 +191,45 @@ fn axpy_scalar(y: &mut [f64], a: f64, x: &[f64], start: usize) {
 mod x86 {
     use std::arch::x86_64::*;
 
+    // SAFETY: `#[target_feature(enable = "avx2")]` makes this fn unsafe;
+    // the only callers are the `data_pair_t` dispatch arms, which reach
+    // it solely when `detect()` saw `is_x86_feature_detected!("avx2")`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn data_pair_avx2(trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
-        let d = z.len();
-        let base = trow.as_ptr();
-        let zero = _mm256_setzero_pd();
-        let tailv = _mm256_set1_pd(tail);
-        let mut pos = 0usize;
-        let mut neg = 0usize;
-        let mut j = 0usize;
-        while j + 4 <= p {
-            let mut acc = zero;
-            for (i, &zi) in z.iter().enumerate() {
-                let w = _mm256_loadu_pd(base.add(i * p + j));
-                acc = _mm256_add_pd(acc, _mm256_mul_pd(w, _mm256_set1_pd(zi)));
+        // SAFETY: the dispatcher asserts trow.len() == (d + 2) * p. The
+        // deepest 4-wide unaligned load starts at (d + 1) * p + j with
+        // j + 4 <= p, i.e. ends at (d + 2) * p - 1 — in bounds; AVX2 is
+        // available per the fn's contract above.
+        unsafe {
+            let d = z.len();
+            let base = trow.as_ptr();
+            let zero = _mm256_setzero_pd();
+            let tailv = _mm256_set1_pd(tail);
+            let mut pos = 0usize;
+            let mut neg = 0usize;
+            let mut j = 0usize;
+            while j + 4 <= p {
+                let mut acc = zero;
+                for (i, &zi) in z.iter().enumerate() {
+                    let w = _mm256_loadu_pd(base.add(i * p + j));
+                    acc = _mm256_add_pd(acc, _mm256_mul_pd(w, _mm256_set1_pd(zi)));
+                }
+                let t = _mm256_mul_pd(_mm256_loadu_pd(base.add((d + 1) * p + j)), tailv);
+                let pm =
+                    _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_add_pd(acc, t), zero));
+                let nm =
+                    _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_sub_pd(t, acc), zero));
+                pos |= (pm as usize) << j;
+                neg |= (nm as usize) << j;
+                j += 4;
             }
-            let t = _mm256_mul_pd(_mm256_loadu_pd(base.add((d + 1) * p + j)), tailv);
-            let pm = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_add_pd(acc, t), zero));
-            let nm = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_sub_pd(t, acc), zero));
-            pos |= (pm as usize) << j;
-            neg |= (nm as usize) << j;
-            j += 4;
+            let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
+            (pos | rp, neg | rn)
         }
-        let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
-        (pos | rp, neg | rn)
     }
 
+    // SAFETY: `#[target_feature(enable = "avx2")]` makes this fn unsafe;
+    // only the dispatch arms call it, after runtime AVX2 detection.
     #[target_feature(enable = "avx2")]
     pub unsafe fn side_bucket_avx2(
         trow: &[f64],
@@ -209,51 +238,68 @@ mod x86 {
         tail: f64,
         tail_row: usize,
     ) -> usize {
-        let base = trow.as_ptr();
-        let zero = _mm256_setzero_pd();
-        let tailv = _mm256_set1_pd(tail);
-        let mut h = 0usize;
-        let mut j = 0usize;
-        while j + 4 <= p {
-            let mut acc = zero;
-            for (i, &vi) in v.iter().enumerate() {
-                let w = _mm256_loadu_pd(base.add(i * p + j));
-                acc = _mm256_add_pd(acc, _mm256_mul_pd(w, _mm256_set1_pd(vi)));
+        // SAFETY: the dispatcher asserts trow.len() == (v.len() + 2) * p
+        // and tail_row <= v.len() + 1, so the deepest 4-wide load ends at
+        // (v.len() + 2) * p - 1 — in bounds; AVX2 is available per the
+        // fn's contract above.
+        unsafe {
+            let base = trow.as_ptr();
+            let zero = _mm256_setzero_pd();
+            let tailv = _mm256_set1_pd(tail);
+            let mut h = 0usize;
+            let mut j = 0usize;
+            while j + 4 <= p {
+                let mut acc = zero;
+                for (i, &vi) in v.iter().enumerate() {
+                    let w = _mm256_loadu_pd(base.add(i * p + j));
+                    acc = _mm256_add_pd(acc, _mm256_mul_pd(w, _mm256_set1_pd(vi)));
+                }
+                let t = _mm256_mul_pd(_mm256_loadu_pd(base.add(tail_row * p + j)), tailv);
+                let m =
+                    _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_add_pd(acc, t), zero));
+                h |= (m as usize) << j;
+                j += 4;
             }
-            let t = _mm256_mul_pd(_mm256_loadu_pd(base.add(tail_row * p + j)), tailv);
-            let m = _mm256_movemask_pd(_mm256_cmp_pd::<_CMP_GE_OQ>(_mm256_add_pd(acc, t), zero));
-            h |= (m as usize) << j;
-            j += 4;
+            h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
         }
-        h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
     }
 
+    // SAFETY: `#[target_feature(enable = "sse2")]` makes this fn unsafe
+    // even though SSE2 is the x86-64 baseline — every x86-64 CPU may
+    // call it; the dispatch arms are the only callers.
     #[target_feature(enable = "sse2")]
     pub unsafe fn data_pair_sse2(trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
-        let d = z.len();
-        let base = trow.as_ptr();
-        let zero = _mm_setzero_pd();
-        let tailv = _mm_set1_pd(tail);
-        let mut pos = 0usize;
-        let mut neg = 0usize;
-        let mut j = 0usize;
-        while j + 2 <= p {
-            let mut acc = zero;
-            for (i, &zi) in z.iter().enumerate() {
-                let w = _mm_loadu_pd(base.add(i * p + j));
-                acc = _mm_add_pd(acc, _mm_mul_pd(w, _mm_set1_pd(zi)));
+        // SAFETY: same bounds argument as the AVX2 twin with 2-wide
+        // loads: the deepest load ends at (d + 2) * p - 1, within the
+        // dispatcher-asserted trow length; SSE2 is baseline on x86-64.
+        unsafe {
+            let d = z.len();
+            let base = trow.as_ptr();
+            let zero = _mm_setzero_pd();
+            let tailv = _mm_set1_pd(tail);
+            let mut pos = 0usize;
+            let mut neg = 0usize;
+            let mut j = 0usize;
+            while j + 2 <= p {
+                let mut acc = zero;
+                for (i, &zi) in z.iter().enumerate() {
+                    let w = _mm_loadu_pd(base.add(i * p + j));
+                    acc = _mm_add_pd(acc, _mm_mul_pd(w, _mm_set1_pd(zi)));
+                }
+                let t = _mm_mul_pd(_mm_loadu_pd(base.add((d + 1) * p + j)), tailv);
+                let pm = _mm_movemask_pd(_mm_cmpge_pd(_mm_add_pd(acc, t), zero));
+                let nm = _mm_movemask_pd(_mm_cmpge_pd(_mm_sub_pd(t, acc), zero));
+                pos |= (pm as usize) << j;
+                neg |= (nm as usize) << j;
+                j += 2;
             }
-            let t = _mm_mul_pd(_mm_loadu_pd(base.add((d + 1) * p + j)), tailv);
-            let pm = _mm_movemask_pd(_mm_cmpge_pd(_mm_add_pd(acc, t), zero));
-            let nm = _mm_movemask_pd(_mm_cmpge_pd(_mm_sub_pd(t, acc), zero));
-            pos |= (pm as usize) << j;
-            neg |= (nm as usize) << j;
-            j += 2;
+            let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
+            (pos | rp, neg | rn)
         }
-        let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
-        (pos | rp, neg | rn)
     }
 
+    // SAFETY: `#[target_feature(enable = "sse2")]` — baseline on x86-64;
+    // only the dispatch arms call it.
     #[target_feature(enable = "sse2")]
     pub unsafe fn side_bucket_sse2(
         trow: &[f64],
@@ -262,56 +308,76 @@ mod x86 {
         tail: f64,
         tail_row: usize,
     ) -> usize {
-        let base = trow.as_ptr();
-        let zero = _mm_setzero_pd();
-        let tailv = _mm_set1_pd(tail);
-        let mut h = 0usize;
-        let mut j = 0usize;
-        while j + 2 <= p {
-            let mut acc = zero;
-            for (i, &vi) in v.iter().enumerate() {
-                let w = _mm_loadu_pd(base.add(i * p + j));
-                acc = _mm_add_pd(acc, _mm_mul_pd(w, _mm_set1_pd(vi)));
+        // SAFETY: same bounds argument as the AVX2 twin with 2-wide
+        // loads over the dispatcher-asserted trow length; SSE2 is
+        // baseline on x86-64.
+        unsafe {
+            let base = trow.as_ptr();
+            let zero = _mm_setzero_pd();
+            let tailv = _mm_set1_pd(tail);
+            let mut h = 0usize;
+            let mut j = 0usize;
+            while j + 2 <= p {
+                let mut acc = zero;
+                for (i, &vi) in v.iter().enumerate() {
+                    let w = _mm_loadu_pd(base.add(i * p + j));
+                    acc = _mm_add_pd(acc, _mm_mul_pd(w, _mm_set1_pd(vi)));
+                }
+                let t = _mm_mul_pd(_mm_loadu_pd(base.add(tail_row * p + j)), tailv);
+                let m = _mm_movemask_pd(_mm_cmpge_pd(_mm_add_pd(acc, t), zero));
+                h |= (m as usize) << j;
+                j += 2;
             }
-            let t = _mm_mul_pd(_mm_loadu_pd(base.add(tail_row * p + j)), tailv);
-            let m = _mm_movemask_pd(_mm_cmpge_pd(_mm_add_pd(acc, t), zero));
-            h |= (m as usize) << j;
-            j += 2;
+            h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
         }
-        h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
     }
 
+    // SAFETY: `#[target_feature(enable = "avx2")]` — only the `axpy`
+    // dispatch arm calls it, after runtime AVX2 detection.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy_avx2(y: &mut [f64], a: f64, x: &[f64]) {
-        let n = y.len();
-        let yp = y.as_mut_ptr();
-        let xp = x.as_ptr();
-        let av = _mm256_set1_pd(a);
-        let mut j = 0usize;
-        while j + 4 <= n {
-            let acc = _mm256_add_pd(
-                _mm256_loadu_pd(yp.add(j)),
-                _mm256_mul_pd(av, _mm256_loadu_pd(xp.add(j))),
-            );
-            _mm256_storeu_pd(yp.add(j), acc);
-            j += 4;
+        // SAFETY: the dispatcher asserts y.len() == x.len(); every
+        // 4-wide load/store covers j..j + 4 with j + 4 <= n, so both
+        // pointers stay inside their slices. y and x are distinct
+        // borrows (&mut vs &), so the store never aliases the loads.
+        unsafe {
+            let n = y.len();
+            let yp = y.as_mut_ptr();
+            let xp = x.as_ptr();
+            let av = _mm256_set1_pd(a);
+            let mut j = 0usize;
+            while j + 4 <= n {
+                let acc = _mm256_add_pd(
+                    _mm256_loadu_pd(yp.add(j)),
+                    _mm256_mul_pd(av, _mm256_loadu_pd(xp.add(j))),
+                );
+                _mm256_storeu_pd(yp.add(j), acc);
+                j += 4;
+            }
+            super::axpy_scalar(y, a, x, j);
         }
-        super::axpy_scalar(y, a, x, j);
     }
 
+    // SAFETY: `#[target_feature(enable = "sse2")]` — baseline on x86-64;
+    // only the `axpy` dispatch arm calls it.
     #[target_feature(enable = "sse2")]
     pub unsafe fn axpy_sse2(y: &mut [f64], a: f64, x: &[f64]) {
-        let n = y.len();
-        let yp = y.as_mut_ptr();
-        let xp = x.as_ptr();
-        let av = _mm_set1_pd(a);
-        let mut j = 0usize;
-        while j + 2 <= n {
-            let acc = _mm_add_pd(_mm_loadu_pd(yp.add(j)), _mm_mul_pd(av, _mm_loadu_pd(xp.add(j))));
-            _mm_storeu_pd(yp.add(j), acc);
-            j += 2;
+        // SAFETY: same argument as the AVX2 twin with 2-wide loads and
+        // stores bounded by j + 2 <= n over non-aliasing slices.
+        unsafe {
+            let n = y.len();
+            let yp = y.as_mut_ptr();
+            let xp = x.as_ptr();
+            let av = _mm_set1_pd(a);
+            let mut j = 0usize;
+            while j + 2 <= n {
+                let acc =
+                    _mm_add_pd(_mm_loadu_pd(yp.add(j)), _mm_mul_pd(av, _mm_loadu_pd(xp.add(j))));
+                _mm_storeu_pd(yp.add(j), acc);
+                j += 2;
+            }
+            super::axpy_scalar(y, a, x, j);
         }
-        super::axpy_scalar(y, a, x, j);
     }
 }
 
@@ -319,34 +385,50 @@ mod x86 {
 mod arm {
     use std::arch::aarch64::*;
 
+    // SAFETY: NEON intrinsics are unsafe fns; NEON is the aarch64
+    // baseline, so this is callable from any aarch64 context. The input
+    // is a plain SIMD value — no memory access at all.
     #[inline]
     unsafe fn ge_zero_mask(v: float64x2_t) -> usize {
-        let m = vcgeq_f64(v, vdupq_n_f64(0.0));
-        ((vgetq_lane_u64::<0>(m) & 1) | ((vgetq_lane_u64::<1>(m) & 1) << 1)) as usize
+        // SAFETY: pure lane compare and extract on an owned vector
+        // value; no pointers involved.
+        unsafe {
+            let m = vcgeq_f64(v, vdupq_n_f64(0.0));
+            ((vgetq_lane_u64::<0>(m) & 1) | ((vgetq_lane_u64::<1>(m) & 1) << 1)) as usize
+        }
     }
 
+    // SAFETY: `#[target_feature(enable = "neon")]` — baseline on
+    // aarch64; only the dispatch arms call it.
     #[target_feature(enable = "neon")]
     pub unsafe fn data_pair_neon(trow: &[f64], p: usize, z: &[f64], tail: f64) -> (usize, usize) {
-        let d = z.len();
-        let base = trow.as_ptr();
-        let mut pos = 0usize;
-        let mut neg = 0usize;
-        let mut j = 0usize;
-        while j + 2 <= p {
-            let mut acc = vdupq_n_f64(0.0);
-            for (i, &zi) in z.iter().enumerate() {
-                let w = vld1q_f64(base.add(i * p + j));
-                acc = vaddq_f64(acc, vmulq_n_f64(w, zi));
+        // SAFETY: the dispatcher asserts trow.len() == (d + 2) * p; the
+        // deepest 2-wide load starts at (d + 1) * p + j with j + 2 <= p,
+        // ending at (d + 2) * p - 1 — in bounds. NEON is baseline.
+        unsafe {
+            let d = z.len();
+            let base = trow.as_ptr();
+            let mut pos = 0usize;
+            let mut neg = 0usize;
+            let mut j = 0usize;
+            while j + 2 <= p {
+                let mut acc = vdupq_n_f64(0.0);
+                for (i, &zi) in z.iter().enumerate() {
+                    let w = vld1q_f64(base.add(i * p + j));
+                    acc = vaddq_f64(acc, vmulq_n_f64(w, zi));
+                }
+                let t = vmulq_n_f64(vld1q_f64(base.add((d + 1) * p + j)), tail);
+                pos |= ge_zero_mask(vaddq_f64(acc, t)) << j;
+                neg |= ge_zero_mask(vsubq_f64(t, acc)) << j;
+                j += 2;
             }
-            let t = vmulq_n_f64(vld1q_f64(base.add((d + 1) * p + j)), tail);
-            pos |= ge_zero_mask(vaddq_f64(acc, t)) << j;
-            neg |= ge_zero_mask(vsubq_f64(t, acc)) << j;
-            j += 2;
+            let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
+            (pos | rp, neg | rn)
         }
-        let (rp, rn) = super::data_pair_tail_scalar(trow, p, z, tail, j);
-        (pos | rp, neg | rn)
     }
 
+    // SAFETY: `#[target_feature(enable = "neon")]` — baseline on
+    // aarch64; only the dispatch arms call it.
     #[target_feature(enable = "neon")]
     pub unsafe fn side_bucket_neon(
         trow: &[f64],
@@ -355,34 +437,46 @@ mod arm {
         tail: f64,
         tail_row: usize,
     ) -> usize {
-        let base = trow.as_ptr();
-        let mut h = 0usize;
-        let mut j = 0usize;
-        while j + 2 <= p {
-            let mut acc = vdupq_n_f64(0.0);
-            for (i, &vi) in v.iter().enumerate() {
-                let w = vld1q_f64(base.add(i * p + j));
-                acc = vaddq_f64(acc, vmulq_n_f64(w, vi));
+        // SAFETY: the dispatcher asserts trow.len() == (v.len() + 2) * p
+        // and tail_row <= v.len() + 1, bounding every 2-wide load by
+        // (v.len() + 2) * p - 1. NEON is baseline.
+        unsafe {
+            let base = trow.as_ptr();
+            let mut h = 0usize;
+            let mut j = 0usize;
+            while j + 2 <= p {
+                let mut acc = vdupq_n_f64(0.0);
+                for (i, &vi) in v.iter().enumerate() {
+                    let w = vld1q_f64(base.add(i * p + j));
+                    acc = vaddq_f64(acc, vmulq_n_f64(w, vi));
+                }
+                let t = vmulq_n_f64(vld1q_f64(base.add(tail_row * p + j)), tail);
+                h |= ge_zero_mask(vaddq_f64(acc, t)) << j;
+                j += 2;
             }
-            let t = vmulq_n_f64(vld1q_f64(base.add(tail_row * p + j)), tail);
-            h |= ge_zero_mask(vaddq_f64(acc, t)) << j;
-            j += 2;
+            h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
         }
-        h | super::side_bucket_tail_scalar(trow, p, v, tail, tail_row, j)
     }
 
+    // SAFETY: `#[target_feature(enable = "neon")]` — baseline on
+    // aarch64; only the `axpy` dispatch arm calls it.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy_neon(y: &mut [f64], a: f64, x: &[f64]) {
-        let n = y.len();
-        let yp = y.as_mut_ptr();
-        let xp = x.as_ptr();
-        let mut j = 0usize;
-        while j + 2 <= n {
-            let acc = vaddq_f64(vld1q_f64(yp.add(j)), vmulq_n_f64(vld1q_f64(xp.add(j)), a));
-            vst1q_f64(yp.add(j), acc);
-            j += 2;
+        // SAFETY: the dispatcher asserts y.len() == x.len(); loads and
+        // stores cover j..j + 2 with j + 2 <= n over non-aliasing
+        // slices (&mut vs &).
+        unsafe {
+            let n = y.len();
+            let yp = y.as_mut_ptr();
+            let xp = x.as_ptr();
+            let mut j = 0usize;
+            while j + 2 <= n {
+                let acc = vaddq_f64(vld1q_f64(yp.add(j)), vmulq_n_f64(vld1q_f64(xp.add(j)), a));
+                vst1q_f64(yp.add(j), acc);
+                j += 2;
+            }
+            super::axpy_scalar(y, a, x, j);
         }
-        super::axpy_scalar(y, a, x, j);
     }
 }
 
@@ -396,10 +490,16 @@ pub fn data_pair_t(k: Kernel, trow: &[f64], p: usize, z: &[f64], tail: f64) -> (
     debug_assert_eq!(trow.len(), (z.len() + 2) * p);
     match k {
         Kernel::Scalar => data_pair_tail_scalar(trow, p, z, tail, 0),
+        // SAFETY: SSE2 is the x86-64 baseline; the slice-length contract
+        // is the debug_assert above (and every caller builds trow that
+        // way via the bank's transposed layout).
         #[cfg(target_arch = "x86_64")]
         Kernel::Sse2 => unsafe { x86::data_pair_sse2(trow, p, z, tail) },
+        // SAFETY: `Kernel::Avx2` exists only after
+        // `is_x86_feature_detected!("avx2")` succeeded in `detect()`.
         #[cfg(target_arch = "x86_64")]
         Kernel::Avx2 => unsafe { x86::data_pair_avx2(trow, p, z, tail) },
+        // SAFETY: NEON is the aarch64 baseline.
         #[cfg(target_arch = "aarch64")]
         Kernel::Neon => unsafe { arm::data_pair_neon(trow, p, z, tail) },
     }
@@ -421,10 +521,15 @@ pub fn side_bucket_t(
     debug_assert!(tail_row == v.len() || tail_row == v.len() + 1);
     match k {
         Kernel::Scalar => side_bucket_tail_scalar(trow, p, v, tail, tail_row, 0),
+        // SAFETY: SSE2 is the x86-64 baseline; slice-length contract per
+        // the debug_asserts above.
         #[cfg(target_arch = "x86_64")]
         Kernel::Sse2 => unsafe { x86::side_bucket_sse2(trow, p, v, tail, tail_row) },
+        // SAFETY: `Kernel::Avx2` exists only after runtime AVX2
+        // detection in `detect()`.
         #[cfg(target_arch = "x86_64")]
         Kernel::Avx2 => unsafe { x86::side_bucket_avx2(trow, p, v, tail, tail_row) },
+        // SAFETY: NEON is the aarch64 baseline.
         #[cfg(target_arch = "aarch64")]
         Kernel::Neon => unsafe { arm::side_bucket_neon(trow, p, v, tail, tail_row) },
     }
@@ -441,10 +546,15 @@ pub fn axpy(k: Kernel, y: &mut [f64], a: f64, x: &[f64]) {
     debug_assert_eq!(y.len(), x.len(), "axpy length mismatch");
     match k {
         Kernel::Scalar => axpy_scalar(y, a, x, 0),
+        // SAFETY: SSE2 is the x86-64 baseline; equal lengths per the
+        // debug_assert above.
         #[cfg(target_arch = "x86_64")]
         Kernel::Sse2 => unsafe { x86::axpy_sse2(y, a, x) },
+        // SAFETY: `Kernel::Avx2` exists only after runtime AVX2
+        // detection in `detect()`.
         #[cfg(target_arch = "x86_64")]
         Kernel::Avx2 => unsafe { x86::axpy_avx2(y, a, x) },
+        // SAFETY: NEON is the aarch64 baseline.
         #[cfg(target_arch = "aarch64")]
         Kernel::Neon => unsafe { arm::axpy_neon(y, a, x) },
     }
@@ -514,6 +624,16 @@ mod tests {
     fn kernel_name_is_stable() {
         assert_eq!(Kernel::Scalar.name(), "scalar");
         assert!(!kernel().name().is_empty());
+    }
+
+    #[test]
+    fn miri_and_simd_off_route_to_scalar() {
+        // Under Miri the dispatch must resolve scalar (no vendor
+        // intrinsics in the interpreter); elsewhere this just pins the
+        // STORM_SIMD=scalar contract used by the simd-off CI leg.
+        if cfg!(miri) {
+            assert_eq!(kernel(), Kernel::Scalar);
+        }
     }
 
     #[test]

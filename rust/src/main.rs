@@ -7,6 +7,9 @@
 //! * `sketch`     — build a sketch of a dataset and print its stats
 //! * `info`       — registry, artifact manifest and version info
 
+#![deny(unsafe_code)]
+#![deny(clippy::dbg_macro, clippy::todo, clippy::unimplemented, clippy::mem_forget)]
+
 use storm::config::{RunConfig, StormConfig};
 use storm::coordinator::driver::{train, QueryBackend};
 use storm::data::registry;

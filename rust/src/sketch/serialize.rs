@@ -188,30 +188,101 @@ fn put_varint(out: &mut Vec<u8>, mut v: u64) {
     }
 }
 
-fn get_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, WireError> {
-    let mut val = 0u64;
-    let mut shift = 0u32;
-    loop {
-        if *pos >= bytes.len() {
-            return Err(WireError::Truncated(bytes.len()));
-        }
-        if shift >= 64 {
-            return Err(WireError::BadPayload("varint longer than 64 bits"));
-        }
-        let b = bytes[*pos];
-        *pos += 1;
-        let payload = b & 0x7f;
-        // The tenth byte holds only the top bit of a u64: anything more
-        // would be silently shifted out — reject, don't truncate.
-        if shift == 63 && payload > 1 {
-            return Err(WireError::BadPayload("varint overflows 64 bits"));
-        }
-        val |= (payload as u64) << shift;
-        if b & 0x80 == 0 {
-            return Ok(val);
-        }
-        shift += 7;
+/// Bounds-checked sequential reader over an untrusted frame body. Every
+/// accessor surfaces a [`WireError`] instead of panicking — no indexing,
+/// no `unwrap`, no unchecked arithmetic (stormlint's `wire-*` rules hold
+/// the decode paths to this). `Truncated` always reports the *full*
+/// frame length, matching the hand-rolled bounds checks this replaced.
+struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Full frame length (body plus CRC), reported by `Truncated`.
+    total: usize,
+}
+
+impl<'a> WireReader<'a> {
+    fn new(buf: &'a [u8], total: usize) -> WireReader<'a> {
+        WireReader { buf, pos: 0, total }
     }
+
+    /// Bytes not yet consumed.
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated(self.total))?;
+        let slice = self.buf.get(self.pos..end).ok_or(WireError::Truncated(self.total))?;
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        let b = self.take(1)?;
+        b.first().copied().ok_or(WireError::Truncated(self.total))
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?.try_into().map_err(|_| WireError::Truncated(self.total))?;
+        Ok(u16::from_le_bytes(b))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?.try_into().map_err(|_| WireError::Truncated(self.total))?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?.try_into().map_err(|_| WireError::Truncated(self.total))?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// LEB128 varint, at most 64 payload bits.
+    fn varint(&mut self) -> Result<u64, WireError> {
+        let mut val = 0u64;
+        let mut shift = 0u32;
+        loop {
+            if self.remaining() == 0 {
+                return Err(WireError::Truncated(self.total));
+            }
+            if shift >= 64 {
+                return Err(WireError::BadPayload("varint longer than 64 bits"));
+            }
+            let b = self.u8()?;
+            let payload = b & 0x7f;
+            // The tenth byte holds only the top bit of a u64: anything more
+            // would be silently shifted out — reject, don't truncate.
+            if shift == 63 && payload > 1 {
+                return Err(WireError::BadPayload("varint overflows 64 bits"));
+            }
+            val |= (payload as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(val);
+            }
+            shift = shift.saturating_add(7);
+        }
+    }
+}
+
+/// Decode a stream of back-to-back varints. Fuzz/corpus entry point
+/// (`fuzz/fuzz_targets/varint.rs` and the replay test), not part of the
+/// wire format proper.
+#[doc(hidden)]
+pub fn fuzz_varint_stream(bytes: &[u8]) -> Result<Vec<u64>, WireError> {
+    let mut rd = WireReader::new(bytes, bytes.len());
+    let mut out = Vec::new();
+    while rd.remaining() != 0 {
+        out.push(rd.varint()?);
+    }
+    Ok(out)
+}
+
+/// Encode one value as a varint (fuzz-roundtrip helper).
+#[doc(hidden)]
+pub fn varint_to_bytes(v: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_varint(&mut out, v);
+    out
 }
 
 fn put_header(out: &mut Vec<u8>, version: u16, cfg: &StormConfig, dim: usize, seed: u64, count: u64) {
@@ -357,53 +428,64 @@ fn encode_delta_version(delta: &SketchDelta, version: u16) -> Vec<u8> {
 /// yields a [`WireError`], never a panic; a sparse run value the
 /// declared width cannot hold is rejected, not clipped.
 pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
-    if bytes.len() < HEADER + 4 {
-        return Err(WireError::Truncated(bytes.len()));
+    let total = bytes.len();
+    if total < HEADER.saturating_add(4) {
+        return Err(WireError::Truncated(total));
     }
-    let body = &bytes[..bytes.len() - 4];
-    let crc_got = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let split = total.saturating_sub(4);
+    let body = bytes.get(..split).ok_or(WireError::Truncated(total))?;
+    let crc_bytes: [u8; 4] = bytes
+        .get(split..)
+        .and_then(|t| t.try_into().ok())
+        .ok_or(WireError::Truncated(total))?;
+    let crc_got = u32::from_le_bytes(crc_bytes);
     let crc_want = fnv1a(body);
     if crc_got != crc_want {
         return Err(WireError::BadChecksum { got: crc_got, want: crc_want });
     }
-    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let mut rd = WireReader::new(body, total);
+    let magic = rd.u32()?;
     if magic != MAGIC {
         return Err(WireError::BadMagic(magic));
     }
-    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    let version = rd.u16()?;
     if version != VERSION_DENSE && version != VERSION_DELTA && version != VERSION_WIDTH {
         return Err(WireError::BadVersion(version));
     }
-    let power = u16::from_le_bytes(bytes[6..8].try_into().unwrap());
-    let rows = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    let dim = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
-    let seed = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
-    let count = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+    let power = rd.u16()?;
+    let rows = rd.u32()?;
+    let dim = rd.u32()?;
+    let seed = rd.u64()?;
+    let count = rd.u64()?;
     if power == 0 || power > 24 || rows == 0 {
         return Err(WireError::BadHeader { rows, power });
     }
     let buckets = 1usize << power;
-    let cells = rows as usize * buckets;
+    let cells = (rows as usize)
+        .checked_mul(buckets)
+        .ok_or(WireError::BadHeader { rows, power })?;
     if cells > MAX_CELLS {
         return Err(WireError::BadHeader { rows, power });
     }
     // v1/v2 frames predate the width byte: they are u32 by definition.
-    let (epoch, width, flags, payload) = match version {
-        VERSION_DENSE => (0u64, CounterWidth::U32, FLAG_DENSE, &body[HEADER..]),
+    // The reader sits right after the shared header here, so each arm
+    // just consumes its own extension fields in order.
+    let (epoch, width, flags) = match version {
+        VERSION_DENSE => (0u64, CounterWidth::U32, FLAG_DENSE),
         VERSION_DELTA => {
             if body.len() < HEADER_V2 {
-                return Err(WireError::Truncated(bytes.len()));
+                return Err(WireError::Truncated(total));
             }
-            let epoch = u64::from_le_bytes(body[HEADER..HEADER + 8].try_into().unwrap());
-            (epoch, CounterWidth::U32, body[HEADER + 8], &body[HEADER_V2..])
+            let epoch = rd.u64()?;
+            (epoch, CounterWidth::U32, rd.u8()?)
         }
         _ => {
             if body.len() < HEADER_V3 {
-                return Err(WireError::Truncated(bytes.len()));
+                return Err(WireError::Truncated(total));
             }
-            let epoch = u64::from_le_bytes(body[HEADER..HEADER + 8].try_into().unwrap());
-            let width = width_from_byte(body[HEADER + 8])?;
-            (epoch, width, body[HEADER + 9], &body[HEADER_V3..])
+            let epoch = rd.u64()?;
+            let width = width_from_byte(rd.u8()?)?;
+            (epoch, width, rd.u8()?)
         }
     };
     // Bit 1 of the flags byte tags the task; only v3 frames have it
@@ -426,19 +508,19 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
     if family_code != 0 && version != VERSION_WIDTH {
         return Err(WireError::BadPayload("hash-family bits require the v3 wire"));
     }
-    let (family, payload) = match family_code {
-        0 => (HashFamily::Dense, payload),
+    let family = match family_code {
+        0 => HashFamily::Dense,
         1 => {
-            if payload.len() < 2 {
-                return Err(WireError::Truncated(bytes.len()));
+            if rd.remaining() < 2 {
+                return Err(WireError::Truncated(total));
             }
-            let density = u16::from_le_bytes(payload[..2].try_into().unwrap());
+            let density = rd.u16()?;
             if density == 0 || density > 1000 {
                 return Err(WireError::BadPayload("sparse-family density out of range"));
             }
-            (HashFamily::Sparse { density_permille: density }, &payload[2..])
+            HashFamily::Sparse { density_permille: density }
         }
-        2 => (HashFamily::Hadamard, payload),
+        2 => HashFamily::Hadamard,
         _ => return Err(WireError::BadPayload("unknown hash-family code")),
     };
     // Bit 4 tags DP-noised increments; like the other tags it only
@@ -460,30 +542,38 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
     let counts = match mode {
         FLAG_DENSE => {
             let cell_bytes = if version == VERSION_WIDTH { width.bytes() } else { 4 };
-            if payload.len() != cells * cell_bytes {
-                return Err(WireError::Truncated(bytes.len()));
+            let want = cells.checked_mul(cell_bytes).ok_or(WireError::Truncated(total))?;
+            if rd.remaining() != want {
+                return Err(WireError::Truncated(total));
             }
+            let payload = rd.take(want)?;
             let mut counts = vec![0u32; cells];
-            for (i, cell) in counts.iter_mut().enumerate() {
-                let at = i * cell_bytes;
+            for (cell, chunk) in counts.iter_mut().zip(payload.chunks_exact(cell_bytes)) {
                 *cell = match cell_bytes {
-                    1 => payload[at] as u32,
-                    2 => u16::from_le_bytes(payload[at..at + 2].try_into().unwrap()) as u32,
-                    _ => u32::from_le_bytes(payload[at..at + 4].try_into().unwrap()),
+                    1 => chunk.first().copied().map(u32::from).ok_or(WireError::Truncated(total))?,
+                    2 => {
+                        let b: [u8; 2] =
+                            chunk.try_into().map_err(|_| WireError::Truncated(total))?;
+                        u16::from_le_bytes(b) as u32
+                    }
+                    _ => {
+                        let b: [u8; 4] =
+                            chunk.try_into().map_err(|_| WireError::Truncated(total))?;
+                        u32::from_le_bytes(b)
+                    }
                 };
             }
             counts
         }
         FLAG_SPARSE => {
-            let mut pos = 0usize;
-            let ncells = get_varint(payload, &mut pos)?;
-            if ncells as usize > cells {
+            let ncells = rd.varint()?;
+            if ncells > cells as u64 {
                 return Err(WireError::BadPayload("sparse cell count exceeds grid"));
             }
             let mut counts = vec![0u32; cells];
             let mut idx: u64 = 0;
             for i in 0..ncells {
-                let gap = get_varint(payload, &mut pos)?;
+                let gap = rd.varint()?;
                 if i > 0 && gap == 0 {
                     return Err(WireError::BadPayload("non-increasing sparse index"));
                 }
@@ -493,7 +583,7 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
                 if idx >= cells as u64 {
                     return Err(WireError::BadPayload("sparse index out of range"));
                 }
-                let cnt = get_varint(payload, &mut pos)?;
+                let cnt = rd.varint()?;
                 if cnt == 0 || cnt > u32::MAX as u64 {
                     return Err(WireError::BadPayload("sparse count out of range"));
                 }
@@ -502,9 +592,12 @@ pub fn decode_delta(bytes: &[u8]) -> Result<SketchDelta, WireError> {
                 if cnt > width.max_value() as u64 {
                     return Err(WireError::BadPayload("sparse count exceeds declared width"));
                 }
-                counts[idx as usize] = cnt as u32;
+                let cell = counts
+                    .get_mut(idx as usize)
+                    .ok_or(WireError::BadPayload("sparse index out of range"))?;
+                *cell = cnt as u32;
             }
-            if pos != payload.len() {
+            if rd.remaining() != 0 {
                 return Err(WireError::BadPayload("trailing bytes after sparse cells"));
             }
             counts
@@ -533,6 +626,14 @@ pub fn decode(bytes: &[u8]) -> Result<StormSketch, WireError> {
     let delta = decode_delta(bytes)?;
     if delta.cfg.task != Task::Regression {
         return Err(WireError::BadPayload("classification frame on full-sketch decode"));
+    }
+    // Rebuilding the hash family allocates `dim`-proportional plane
+    // storage, so the full-sketch path bounds the claimed dimension the
+    // way the shared header bounds the cell count — a frame outside the
+    // bound is rejected, never allocated for (and `dim = 0` would trip
+    // the sketch constructor's geometry assert).
+    if delta.dim == 0 || delta.dim > MAX_CELLS {
+        return Err(WireError::BadPayload("example dimension out of range"));
     }
     Ok(StormSketch::from_delta(&delta))
 }
@@ -1448,13 +1549,16 @@ mod tests {
         for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
             buf.clear();
             put_varint(&mut buf, v);
-            let mut pos = 0;
-            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
-            assert_eq!(pos, buf.len());
+            let mut rd = WireReader::new(&buf, buf.len());
+            assert_eq!(rd.varint().unwrap(), v);
+            assert_eq!(rd.remaining(), 0);
+            assert_eq!(fuzz_varint_stream(&buf).unwrap(), vec![v]);
+            assert_eq!(varint_to_bytes(v), buf);
         }
         // 11-byte varint: more than 64 bits -> error, not wraparound.
         let over = [0x80u8; 10];
-        let mut pos = 0;
-        assert!(get_varint(&over, &mut pos).is_err());
+        let mut rd = WireReader::new(&over, over.len());
+        assert!(rd.varint().is_err());
+        assert!(fuzz_varint_stream(&over).is_err());
     }
 }

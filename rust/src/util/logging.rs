@@ -1,11 +1,16 @@
 //! Tiny `log`-facade backend: leveled, timestamped stderr logging with a
 //! `STORM_LOG` environment filter (error|warn|info|debug|trace).
 
+use crate::util::timer::Timer;
 use log::{Level, LevelFilter, Metadata, Record};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use std::sync::OnceLock;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+/// Process start reference for the relative timestamps, captured lazily
+/// on the first log line through the repo's one wall-clock home
+/// ([`crate::util::timer::Timer`] — stormlint's `wall-clock` rule keeps
+/// `Instant::now` out of everywhere else).
+static START: OnceLock<Timer> = OnceLock::new();
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
 struct StderrLogger;
@@ -19,7 +24,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed();
+        let t = START.get_or_init(Timer::start).elapsed();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",

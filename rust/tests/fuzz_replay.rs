@@ -1,0 +1,99 @@
+//! Stable-Rust replay of the checked-in fuzz seed corpus.
+//!
+//! The fuzz targets under `fuzz/fuzz_targets/` only build with cargo-fuzz
+//! on nightly; this test re-runs the exact same invariants over every
+//! seed in `fuzz/corpus/` on stable, so tier-1 CI catches a regression
+//! on any input a past fuzzing run (or a hand-written malformed frame)
+//! found interesting. Each replay also floors the corpus size — a seed
+//! directory that silently shrinks fails loudly here.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use storm::config::HashFamily;
+use storm::sketch::serialize::{
+    decode, decode_delta, encode, encode_delta_v3, fuzz_varint_stream, varint_to_bytes,
+};
+
+fn corpus_dir(target: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fuzz/corpus").join(target)
+}
+
+/// Every seed for `target`, sorted by file name for stable replay order.
+fn seeds(target: &str, min: usize) -> Vec<(String, Vec<u8>)> {
+    let dir = corpus_dir(target);
+    let mut out: Vec<(String, Vec<u8>)> = fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("fuzz corpus dir {} missing: {e}", dir.display()))
+        .map(|entry| {
+            let entry = entry.expect("corpus dir entry");
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let bytes = fs::read(entry.path()).expect("corpus seed readable");
+            (name, bytes)
+        })
+        .collect();
+    out.sort();
+    assert!(out.len() >= min, "{target} corpus shrank: {} < {min} seeds", out.len());
+    out
+}
+
+/// Mirror of `fuzz_targets/decode.rs`: no panic on any seed, and every
+/// dense-family frame that decodes survives an encode/decode round trip.
+#[test]
+fn replay_decode_corpus() {
+    let mut ok = 0usize;
+    for (name, data) in seeds("decode", 20) {
+        if let Ok(sketch) = decode(&data) {
+            ok += 1;
+            if sketch.config().hash_family == HashFamily::Dense {
+                let bytes = encode(&sketch);
+                let again = decode(&bytes)
+                    .unwrap_or_else(|e| panic!("{name}: re-encoded frame failed: {e}"));
+                assert_eq!(again.grid().counts_u32(), sketch.grid().counts_u32(), "{name}");
+                assert_eq!(again.count(), sketch.count(), "{name}");
+                assert_eq!(again.seed(), sketch.seed(), "{name}");
+                assert_eq!(again.dim(), sketch.dim(), "{name}");
+            }
+        }
+    }
+    // The golden regression frames must keep decoding (classification
+    // goldens are rejected by the full-sketch path by design).
+    assert!(ok >= 10, "only {ok} decode seeds parsed — golden frames regressed");
+}
+
+/// Mirror of `fuzz_targets/decode_delta.rs`: no panic on any seed, and
+/// every decodable frame is a fixed point of the v3 re-encode.
+#[test]
+fn replay_decode_delta_corpus() {
+    let mut ok = 0usize;
+    for (name, data) in seeds("decode_delta", 20) {
+        if let Ok(delta) = decode_delta(&data) {
+            ok += 1;
+            let bytes = encode_delta_v3(&delta);
+            let again = decode_delta(&bytes)
+                .unwrap_or_else(|e| panic!("{name}: re-encoded delta failed: {e}"));
+            assert_eq!(delta, again, "{name}: delta round-trip drifted");
+        }
+    }
+    // All fifteen golden frames (v1/v2/v3, every width/family/task/privacy
+    // combination) must keep decoding as deltas.
+    assert!(ok >= 15, "only {ok} delta seeds parsed — golden frames regressed");
+}
+
+/// Mirror of `fuzz_targets/varint.rs`: no panic on any seed, and every
+/// decoded value re-encodes canonically.
+#[test]
+fn replay_varint_corpus() {
+    let mut ok = 0usize;
+    for (name, data) in seeds("varint", 8) {
+        if let Ok(values) = fuzz_varint_stream(&data) {
+            ok += 1;
+            for v in values {
+                let bytes = varint_to_bytes(v);
+                let back = fuzz_varint_stream(&bytes)
+                    .unwrap_or_else(|e| panic!("{name}: canonical varint failed: {e}"));
+                assert_eq!(back, vec![v], "{name}: varint round-trip drifted");
+            }
+        }
+    }
+    assert!(ok >= 6, "only {ok} varint seeds parsed — boundary seeds regressed");
+}

@@ -1,0 +1,463 @@
+//! A deliberately small lexical view of a Rust source file.
+//!
+//! stormlint's rules are token-level, not AST-level, so all the lexer
+//! has to get right is *what is code and what is not*: comments
+//! (line, nested block, doc), string literals (plain, raw, byte), and
+//! char literals are blanked out of the "code" view and comment text is
+//! kept per line (the `// SAFETY:` and `stormlint::allow(...)` checks
+//! read it). On top of the blanked text it resolves three kinds of
+//! regions by brace matching:
+//!
+//! * `#[cfg(test)] mod` bodies (skipped by the determinism and wire
+//!   rules — tests may index, unwrap and sleep as they like),
+//! * `fn` bodies with their names,
+//! * `impl` blocks with their header text.
+//!
+//! Line numbers are 1-based everywhere, matching compiler diagnostics.
+
+/// One source line, split into its code and comment parts.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// The line with comment text, string contents and char literals
+    /// replaced by spaces. Quote characters themselves are kept.
+    pub code: String,
+    /// Concatenated comment text on this line (without the `//` / `/*`
+    /// markers), both standalone and trailing comments.
+    pub comment: String,
+}
+
+/// A function body region: `[body_start, body_end]` line range of the
+/// braces, plus the line the `fn` keyword sits on.
+#[derive(Debug, Clone)]
+pub struct FnRegion {
+    pub name: String,
+    pub fn_line: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// An `impl` block region with its full header text (everything between
+/// the `impl` keyword and the opening brace, whitespace-normalized).
+#[derive(Debug, Clone)]
+pub struct ImplRegion {
+    pub header: String,
+    pub body_start: usize,
+    pub body_end: usize,
+}
+
+/// The lexed file: per-line code/comment views plus resolved regions.
+#[derive(Debug, Default)]
+pub struct FileView {
+    pub lines: Vec<Line>,
+    /// Line ranges (inclusive) of `#[cfg(test)] mod` bodies.
+    pub test_regions: Vec<(usize, usize)>,
+    pub fns: Vec<FnRegion>,
+    pub impls: Vec<ImplRegion>,
+}
+
+impl FileView {
+    pub fn parse(source: &str) -> FileView {
+        let lines = blank(source);
+        let code: String = lines
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        let test_regions = find_test_regions(&code);
+        let fns = find_fns(&code);
+        let impls = find_impls(&code);
+        FileView { lines, test_regions, fns, impls }
+    }
+
+    /// Is `line` (1-based) inside a `#[cfg(test)] mod` body?
+    pub fn in_test_region(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(s, e)| line >= s && line <= e)
+    }
+}
+
+/// Blank comments, strings and char literals out of `source`,
+/// collecting comment text per line.
+fn blank(source: &str) -> Vec<Line> {
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut code = String::new();
+    let mut comment = String::new();
+    let push_line = |lines: &mut Vec<Line>, code: &mut String, comment: &mut String| {
+        let n = lines.len();
+        lines[n - 1] = Line { code: std::mem::take(code), comment: std::mem::take(comment) };
+        lines.push(Line::default());
+    };
+
+    let b = source.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                push_line(&mut lines, &mut code, &mut comment);
+                i += 1;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                // Line comment (incl. /// and //!): comment text until EOL.
+                code.push(' ');
+                code.push(' ');
+                i += 2;
+                while i < b.len() && b[i] != b'\n' {
+                    comment.push(b[i] as char);
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Block comment; Rust block comments nest.
+                let mut depth = 1usize;
+                code.push(' ');
+                code.push(' ');
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        push_line(&mut lines, &mut code, &mut comment);
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        comment.push_str("/*");
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        if depth > 0 {
+                            comment.push_str("*/");
+                        }
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        comment.push(b[i] as char);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                // Plain (or byte) string literal: blank the contents.
+                code.push('"');
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' if i + 1 < b.len() => {
+                            code.push(' ');
+                            code.push(' ');
+                            i += 2;
+                        }
+                        b'"' => {
+                            code.push('"');
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            push_line(&mut lines, &mut code, &mut comment);
+                            i += 1;
+                        }
+                        _ => {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            b'r' if is_raw_string_start(b, i) => {
+                // Raw string r"..." / r#"..."# (any hash count).
+                code.push(' ');
+                i += 1;
+                let mut hashes = 0usize;
+                while i < b.len() && b[i] == b'#' {
+                    hashes += 1;
+                    code.push(' ');
+                    i += 1;
+                }
+                code.push('"');
+                i += 1; // opening quote
+                'raw: while i < b.len() {
+                    if b[i] == b'\n' {
+                        push_line(&mut lines, &mut code, &mut comment);
+                        i += 1;
+                        continue;
+                    }
+                    if b[i] == b'"' {
+                        let mut ok = true;
+                        for k in 0..hashes {
+                            if i + 1 + k >= b.len() || b[i + 1 + k] != b'#' {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            code.push('"');
+                            for _ in 0..hashes {
+                                code.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            b'\'' if is_char_literal(b, i) => {
+                // Char literal (not a lifetime): blank the contents.
+                code.push('\'');
+                i += 1;
+                if i < b.len() && b[i] == b'\\' {
+                    code.push(' ');
+                    i += 1;
+                }
+                while i < b.len() && b[i] != b'\'' && b[i] != b'\n' {
+                    code.push(' ');
+                    i += 1;
+                }
+                if i < b.len() && b[i] == b'\'' {
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    let n = lines.len();
+    lines[n - 1] = Line { code, comment };
+    lines
+}
+
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    // `r"`, `r#"`, `r##"`, ... — and not part of a longer identifier.
+    if i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_') {
+        return false;
+    }
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    // 'x' or '\n' (escape) — a lifetime like 'a has no closing quote
+    // right after one payload char.
+    if i + 2 < b.len() && b[i + 1] == b'\\' {
+        return true;
+    }
+    i + 2 < b.len() && b[i + 2] == b'\'' && b[i + 1] != b'\''
+}
+
+/// Map a byte offset in the joined code string to a 1-based line.
+fn line_of(code: &str, offset: usize) -> usize {
+    code.as_bytes()[..offset].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+/// Find the matching close brace for the `{` at `open`, returning its
+/// byte offset (the input is blanked, so braces in strings/comments are
+/// already gone).
+fn match_brace(code: &str, open: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    debug_assert_eq!(b[open], b'{');
+    let mut depth = 0usize;
+    for (k, &c) in b.iter().enumerate().skip(open) {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// All word-bounded occurrences of `word` in `code`, as byte offsets.
+pub fn word_offsets(code: &str, word: &str) -> Vec<usize> {
+    let b = code.as_bytes();
+    let w = word.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident_byte(b[at - 1]);
+        let end = at + w.len();
+        let after_ok = end >= b.len() || !is_ident_byte(b[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + 1;
+    }
+    out
+}
+
+fn find_test_regions(code: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find("#[cfg(test)]") {
+        let at = from + pos;
+        from = at + 1;
+        // The attribute must introduce a `mod` (possibly after more
+        // attributes); find the next `mod` keyword, then its `{`.
+        let tail = &code[at..];
+        let Some(mod_rel) = word_offsets(tail, "mod").first().copied() else { continue };
+        let Some(brace_rel) = tail[mod_rel..].find('{') else { continue };
+        let open = at + mod_rel + brace_rel;
+        if let Some(close) = match_brace(code, open) {
+            out.push((line_of(code, open), line_of(code, close)));
+        }
+    }
+    out
+}
+
+fn find_fns(code: &str) -> Vec<FnRegion> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    for at in word_offsets(code, "fn") {
+        // Identifier after `fn`.
+        let mut j = at + 2;
+        while j < b.len() && (b[j] as char).is_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue;
+        }
+        let name = code[name_start..j].to_string();
+        // Body: the next `{` before a `;` (a `;` first means a trait
+        // method declaration without a body).
+        let mut k = j;
+        let mut open = None;
+        while k < b.len() {
+            match b[k] {
+                b'{' => {
+                    open = Some(k);
+                    break;
+                }
+                b';' => break,
+                _ => k += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        if let Some(close) = match_brace(code, open) {
+            out.push(FnRegion {
+                name,
+                fn_line: line_of(code, at),
+                body_start: line_of(code, open),
+                body_end: line_of(code, close),
+            });
+        }
+    }
+    out
+}
+
+fn find_impls(code: &str) -> Vec<ImplRegion> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    for at in word_offsets(code, "impl") {
+        let mut k = at;
+        let mut open = None;
+        while k < b.len() {
+            match b[k] {
+                b'{' => {
+                    open = Some(k);
+                    break;
+                }
+                b';' => break,
+                _ => k += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        if let Some(close) = match_brace(code, open) {
+            let header: String = code[at..open].split_whitespace().collect::<Vec<_>>().join(" ");
+            out.push(ImplRegion {
+                header,
+                body_start: line_of(code, open),
+                body_end: line_of(code, close),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = \"unsafe HashMap\"; // unsafe comment\nlet c = 'u';\n";
+        let v = FileView::parse(src);
+        assert!(!v.lines[0].code.contains("unsafe"));
+        assert!(!v.lines[0].code.contains("HashMap"));
+        assert!(v.lines[0].comment.contains("unsafe comment"));
+        assert!(!v.lines[1].code.contains('u'));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* a /* nested */ still comment */ fn f() {}\nlet r = r#\"raw \"q\" unsafe\"#;\n";
+        let v = FileView::parse(src);
+        assert!(v.lines[0].code.contains("fn f()"));
+        assert!(v.lines[0].comment.contains("still comment"));
+        assert!(!v.lines[1].code.contains("unsafe"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a [u8]) -> &'a [u8] { x }\n";
+        let v = FileView::parse(src);
+        assert!(v.lines[0].code.contains("&'a [u8]"));
+        assert_eq!(v.fns.len(), 1);
+        assert_eq!(v.fns[0].name, "f");
+    }
+
+    #[test]
+    fn test_regions_and_fn_bodies_resolve() {
+        let src = "\
+fn outer() {
+    inner();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        assert!(true);
+    }
+}
+";
+        let v = FileView::parse(src);
+        assert_eq!(v.test_regions.len(), 1);
+        assert!(v.in_test_region(8));
+        assert!(!v.in_test_region(2));
+        let names: Vec<_> = v.fns.iter().map(|f| f.name.as_str()).collect();
+        assert!(names.contains(&"outer") && names.contains(&"t"));
+    }
+
+    #[test]
+    fn impl_headers_resolve() {
+        let src = "struct W;\nimpl<'a> Wire<'a> for W {\n    fn go(&self) {}\n}\n";
+        let v = FileView::parse(src);
+        assert_eq!(v.impls.len(), 1);
+        assert!(v.impls[0].header.contains("Wire"));
+        assert_eq!(v.impls[0].body_start, 2);
+        assert_eq!(v.impls[0].body_end, 4);
+    }
+
+    #[test]
+    fn word_offsets_respect_boundaries() {
+        let code = "unsafe unsafer do_unsafe unsafe";
+        assert_eq!(word_offsets(code, "unsafe").len(), 2);
+    }
+}

@@ -1,0 +1,154 @@
+//! stormlint — STORM's repo-specific static-analysis pass.
+//!
+//! The merge proofs (bit-identical folds, panic-free decode of
+//! untrusted frames, audited `unsafe`) rest on coding rules the
+//! compiler does not enforce. This crate enforces them:
+//!
+//! * **L1 unsafe containment** — `unsafe` only in `lsh/simd.rs`, and
+//!   every site there carries a `// SAFETY:` comment
+//!   (`unsafe-outside-simd`, `missing-safety-comment`).
+//! * **L2 determinism** — no randomized-hasher `HashMap`/`HashSet`, no
+//!   wall-clock reads outside `util/timer.rs`/benches, no raw
+//!   `thread::spawn` outside the executor/fleet, no `mul_add` (FMA) in
+//!   bit-identity-critical modules (`randomized-hasher`, `wall-clock`,
+//!   `raw-thread-spawn`, `fma-contraction`).
+//! * **L3 wire safety** — decode paths in `sketch/serialize.rs` must be
+//!   panic-free: no indexing, no `unwrap`/`expect`, no unchecked
+//!   arithmetic (`wire-panic`, `wire-index`, `wire-arith`).
+//! * **L4 mirror drift** — the wire constant table in `serialize.rs`
+//!   must match `python/tests/wire_mirror.py` and the snapshot in
+//!   [`mirror::EXPECTED`] (`wire-mirror-drift`).
+//!
+//! Escape hatch: a comment containing `stormlint::allow(rule-name)` on
+//! the offending line (trailing) or the line above suppresses that rule
+//! there. See `tools/stormlint/README.md` for the catalog.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub mod lexer;
+pub mod mirror;
+pub mod rules;
+
+/// One lint violation, printed as `file:line: error[rule]: message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: &str) -> Finding {
+        Finding { file: file.to_string(), line, rule, message: message.to_string() }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: error[{}]: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint one source file given its repo-relative path (the path selects
+/// which rules and allowlists apply).
+pub fn lint_source(rel_path: &str, source: &str) -> Vec<Finding> {
+    let view = lexer::FileView::parse(source);
+    rules::check_file(rel_path, &view)
+}
+
+/// The directories lint_tree walks, relative to the repo root. Test
+/// *files* are still scanned — only `#[cfg(test)] mod` regions get the
+/// relaxed determinism/wire rules, while L1 containment applies
+/// everywhere.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "tools/stormlint/src"];
+
+/// Lint the whole repo tree rooted at `root`: every `.rs` file under
+/// [`SCAN_DIRS`] plus the L4 mirror diff. Findings come back sorted by
+/// path then line. I/O errors surface as findings too (rule
+/// `wire-mirror-drift` for the two mirror files, since a missing mirror
+/// *is* drift).
+pub fn lint_tree(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    for dir in SCAN_DIRS {
+        let mut files = Vec::new();
+        collect_rs_files(&root.join(dir), &mut files);
+        files.sort();
+        for path in files {
+            let rel = rel_path(root, &path);
+            match fs::read_to_string(&path) {
+                Ok(src) => findings.extend(lint_source(&rel, &src)),
+                Err(e) => findings.push(Finding::new(
+                    &rel,
+                    1,
+                    "io-error",
+                    &format!("could not read file: {e}"),
+                )),
+            }
+        }
+    }
+
+    // L4: both mirror files must exist and agree.
+    let rust_wire = root.join(mirror::RUST_WIRE_PATH);
+    let py_mirror = root.join(mirror::PY_MIRROR_PATH);
+    match (fs::read_to_string(&rust_wire), fs::read_to_string(&py_mirror)) {
+        (Ok(r), Ok(p)) => findings.extend(mirror::check_mirror(&r, &p)),
+        (r, p) => {
+            if let Err(e) = r {
+                findings.push(Finding::new(
+                    mirror::RUST_WIRE_PATH,
+                    1,
+                    rules::RULE_WIRE_MIRROR_DRIFT,
+                    &format!("could not read the Rust wire codec: {e}"),
+                ));
+            }
+            if let Err(e) = p {
+                findings.push(Finding::new(
+                    mirror::PY_MIRROR_PATH,
+                    1,
+                    rules::RULE_WIRE_MIRROR_DRIFT,
+                    &format!("could not read the Python wire mirror: {e}"),
+                ));
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_renders_navigable() {
+        let f = Finding::new("rust/src/lsh/query.rs", 48, rules::RULE_RANDOMIZED_HASHER, "msg");
+        assert_eq!(
+            f.to_string(),
+            "rust/src/lsh/query.rs:48: error[randomized-hasher]: msg"
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! CLI entry point: `cargo run -p stormlint [repo-root]`.
+//!
+//! Lints the repo tree and prints one `file:line: error[rule]: message`
+//! line per violation (one-click navigable in CI logs and editors).
+//! Exits 1 if anything was found, 0 on a clean tree.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    // Default to the workspace root: this crate lives at
+    // <root>/tools/stormlint, so the manifest dir's grandparent is the
+    // repo root whether invoked via `cargo run -p stormlint` from
+    // anywhere in the workspace or as a bare binary.
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+    });
+
+    let findings = stormlint::lint_tree(&root);
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("stormlint: clean (rules L1-L4, tree {})", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("stormlint: {} violation(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

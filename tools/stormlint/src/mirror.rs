@@ -1,0 +1,408 @@
+//! L4: wire-constant mirror drift.
+//!
+//! The Python golden-fixture mirror (`python/tests/wire_mirror.py`)
+//! re-implements the encoder so fixtures can be cross-checked outside
+//! Rust. Its constant table must track `sketch/serialize.rs` exactly;
+//! this module extracts both tables (evaluating the small const
+//! expressions each side uses) and diffs them against each other *and*
+//! against an embedded snapshot, so a change to either file without a
+//! matching update to the other — or to the snapshot here — fails lint.
+
+use std::collections::BTreeMap;
+
+use crate::lexer::FileView;
+use crate::rules::RULE_WIRE_MIRROR_DRIFT;
+use crate::Finding;
+
+pub const RUST_WIRE_PATH: &str = "rust/src/sketch/serialize.rs";
+pub const PY_MIRROR_PATH: &str = "python/tests/wire_mirror.py";
+
+/// The agreed wire-constant table. Extending the wire format means
+/// updating serialize.rs, wire_mirror.py *and* this snapshot in one PR —
+/// which is exactly the point.
+pub const EXPECTED: &[(&str, u64)] = &[
+    ("MAGIC", 0x53544F52),
+    ("VERSION_DENSE", 1),
+    ("VERSION_DELTA", 2),
+    ("VERSION_WIDTH", 3),
+    ("FLAG_DENSE", 0),
+    ("FLAG_SPARSE", 1),
+    ("FLAG_TASK_CLASSIFICATION", 2),
+    ("FLAG_PRIVATE", 16),
+    ("FAMILY_SHIFT", 2),
+    ("FAMILY_MASK", 12),
+    ("FAMILY_DENSE", 0),
+    ("FAMILY_SPARSE", 1),
+    ("FAMILY_HADAMARD", 2),
+    ("HEADER", 32),
+    ("HEADER_V2", 41),
+    ("HEADER_V3", 42),
+    ("MAX_CELLS", 67_108_864),
+];
+
+/// A constant with the 1-based line it was defined on.
+pub type ConstTable = BTreeMap<String, (u64, usize)>;
+
+/// Extract `const NAME: ty = expr;` items plus the `family_to_code`
+/// match arms (as `FAMILY_<VARIANT>`) from Rust source.
+pub fn extract_rust_constants(source: &str) -> ConstTable {
+    let view = FileView::parse(source);
+    let mut table = ConstTable::new();
+
+    for (idx, l) in view.lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let code = l.code.trim();
+        let rest = code
+            .strip_prefix("pub const ")
+            .or_else(|| code.strip_prefix("const "));
+        let Some(rest) = rest else { continue };
+        let Some((name, tail)) = rest.split_once(':') else { continue };
+        let Some((_ty, expr)) = tail.split_once('=') else { continue };
+        let expr = expr.trim().trim_end_matches(';').trim();
+        let env: BTreeMap<String, u64> =
+            table.iter().map(|(k, &(v, _))| (k.clone(), v)).collect();
+        if let Some(v) = eval_expr(expr, &env) {
+            table.insert(name.trim().to_string(), (v, line_no));
+        }
+    }
+
+    // family_to_code match arms: `HashFamily::Dense => 0,` etc.
+    let mut in_family_fn = false;
+    for (idx, l) in view.lines.iter().enumerate() {
+        let code = l.code.as_str();
+        if code.contains("fn family_to_code") {
+            in_family_fn = true;
+        }
+        if !in_family_fn {
+            continue;
+        }
+        if let Some(pos) = code.find("HashFamily::") {
+            let after = &code[pos + "HashFamily::".len()..];
+            let variant: String = after
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if let Some(arrow) = after.find("=>") {
+                let value = after[arrow + 2..]
+                    .trim()
+                    .trim_end_matches(',')
+                    .trim();
+                if let Some(v) = eval_expr(value, &BTreeMap::new()) {
+                    table.insert(format!("FAMILY_{}", variant.to_uppercase()), (v, idx + 1));
+                }
+            }
+        }
+        // The match fits in one fn; stop at its closing brace.
+        if code.trim() == "}" && code.starts_with('}') {
+            in_family_fn = false;
+        }
+    }
+
+    table
+}
+
+/// Extract top-level `NAME = expr` assignments (ALL_CAPS names) from the
+/// Python mirror.
+pub fn extract_python_constants(source: &str) -> ConstTable {
+    let mut table = ConstTable::new();
+    for (idx, raw) in source.lines().enumerate() {
+        // Top level only — the encoders indent their code.
+        if raw.starts_with(|c: char| c.is_whitespace()) {
+            continue;
+        }
+        let line = raw.split('#').next().unwrap_or("");
+        let Some((name, expr)) = line.split_once('=') else { continue };
+        let name = name.trim();
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+            || !name.starts_with(|c: char| c.is_ascii_uppercase())
+        {
+            continue;
+        }
+        // `==` comparisons are not assignments.
+        if expr.starts_with('=') {
+            continue;
+        }
+        let env: BTreeMap<String, u64> =
+            table.iter().map(|(k, &(v, _))| (k.clone(), v)).collect();
+        if let Some(v) = eval_expr(expr.trim(), &env) {
+            table.insert(name.to_string(), (v, idx + 1));
+        }
+    }
+    table
+}
+
+/// Diff both extracted tables against [`EXPECTED`].
+pub fn check_mirror(rust_src: &str, py_src: &str) -> Vec<Finding> {
+    let rust = extract_rust_constants(rust_src);
+    let py = extract_python_constants(py_src);
+    let mut out = Vec::new();
+
+    for &(name, want) in EXPECTED {
+        match rust.get(name) {
+            None => out.push(Finding::new(
+                RUST_WIRE_PATH,
+                1,
+                RULE_WIRE_MIRROR_DRIFT,
+                &format!("wire constant {name} not found in the Rust codec"),
+            )),
+            Some(&(got, line)) if got != want => out.push(Finding::new(
+                RUST_WIRE_PATH,
+                line,
+                RULE_WIRE_MIRROR_DRIFT,
+                &format!(
+                    "wire constant {name} = {got} in the Rust codec, but the agreed \
+                     table says {want}; update wire_mirror.py and the stormlint \
+                     snapshot together if the format really changed"
+                ),
+            )),
+            Some(_) => {}
+        }
+        match py.get(name) {
+            None => out.push(Finding::new(
+                PY_MIRROR_PATH,
+                1,
+                RULE_WIRE_MIRROR_DRIFT,
+                &format!("wire constant {name} not found in the Python mirror"),
+            )),
+            Some(&(got, line)) if got != want => out.push(Finding::new(
+                PY_MIRROR_PATH,
+                line,
+                RULE_WIRE_MIRROR_DRIFT,
+                &format!(
+                    "wire constant {name} = {got} in the Python mirror, but the Rust \
+                     codec says {want}"
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+    out
+}
+
+// ---- tiny const-expression evaluator ----
+//
+// Handles exactly what the two constant tables use: integer literals
+// (decimal / 0x / 0b, `_` separators, Rust type suffixes), previously
+// defined names, `+`, `-`, `<<`, and parentheses. Rust precedence:
+// additive binds tighter than shifts.
+
+fn eval_expr(expr: &str, env: &BTreeMap<String, u64>) -> Option<u64> {
+    let tokens = tokenize(expr)?;
+    let mut pos = 0usize;
+    let v = parse_shift(&tokens, &mut pos, env)?;
+    if pos == tokens.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(u64),
+    Ident(String),
+    Plus,
+    Minus,
+    Shl,
+    LParen,
+    RParen,
+}
+
+fn tokenize(expr: &str) -> Option<Vec<Tok>> {
+    let b = expr.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        match b[i] {
+            b' ' | b'\t' => i += 1,
+            b'+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            b'-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            b'<' if i + 1 < b.len() && b[i + 1] == b'<' => {
+                out.push(Tok::Shl);
+                i += 2;
+            }
+            b'(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.push(Tok::Num(parse_int(&expr[start..i])?));
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                out.push(Tok::Ident(expr[start..i].to_string()));
+            }
+            _ => return None,
+        }
+    }
+    Some(out)
+}
+
+fn parse_int(lit: &str) -> Option<u64> {
+    let clean: String = lit.chars().filter(|&c| c != '_').collect();
+    // Strip a Rust type suffix (u8/u16/u32/u64/usize/i32/...).
+    let strip = |s: &str| -> String {
+        for suf in ["usize", "isize", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8"] {
+            if let Some(head) = s.strip_suffix(suf) {
+                if !head.is_empty() {
+                    return head.to_string();
+                }
+            }
+        }
+        s.to_string()
+    };
+    let clean = strip(&clean);
+    if let Some(hex) = clean.strip_prefix("0x").or_else(|| clean.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else if let Some(bin) = clean.strip_prefix("0b").or_else(|| clean.strip_prefix("0B")) {
+        u64::from_str_radix(bin, 2).ok()
+    } else {
+        clean.parse().ok()
+    }
+}
+
+fn parse_shift(tokens: &[Tok], pos: &mut usize, env: &BTreeMap<String, u64>) -> Option<u64> {
+    let mut v = parse_add(tokens, pos, env)?;
+    while *pos < tokens.len() && tokens[*pos] == Tok::Shl {
+        *pos += 1;
+        let rhs = parse_add(tokens, pos, env)?;
+        v = v.checked_shl(u32::try_from(rhs).ok()?)?;
+    }
+    Some(v)
+}
+
+fn parse_add(tokens: &[Tok], pos: &mut usize, env: &BTreeMap<String, u64>) -> Option<u64> {
+    let mut v = parse_atom(tokens, pos, env)?;
+    while *pos < tokens.len() {
+        match tokens[*pos] {
+            Tok::Plus => {
+                *pos += 1;
+                v = v.checked_add(parse_atom(tokens, pos, env)?)?;
+            }
+            Tok::Minus => {
+                *pos += 1;
+                v = v.checked_sub(parse_atom(tokens, pos, env)?)?;
+            }
+            _ => break,
+        }
+    }
+    Some(v)
+}
+
+fn parse_atom(tokens: &[Tok], pos: &mut usize, env: &BTreeMap<String, u64>) -> Option<u64> {
+    match tokens.get(*pos)? {
+        Tok::Num(n) => {
+            *pos += 1;
+            Some(*n)
+        }
+        Tok::Ident(name) => {
+            *pos += 1;
+            env.get(name).copied()
+        }
+        Tok::LParen => {
+            *pos += 1;
+            let v = parse_shift(tokens, pos, env)?;
+            if tokens.get(*pos)? != &Tok::RParen {
+                return None;
+            }
+            *pos += 1;
+            Some(v)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluator_matches_rust_semantics() {
+        let env = BTreeMap::from([("HEADER".to_string(), 32u64), ("FAMILY_SHIFT".to_string(), 2u64)]);
+        assert_eq!(eval_expr("0x53544F52", &env), Some(0x53544F52));
+        assert_eq!(eval_expr("4 + 2 + 2 + 4 + 4 + 8 + 8", &env), Some(32));
+        assert_eq!(eval_expr("HEADER + 8 + 1", &env), Some(41));
+        assert_eq!(eval_expr("1 << 26", &env), Some(67_108_864));
+        assert_eq!(eval_expr("0b11 << FAMILY_SHIFT", &env), Some(12));
+        // `+` binds tighter than `<<` in Rust: 1 << 2 + 1 == 8.
+        assert_eq!(eval_expr("1 << 2 + 1", &env), Some(8));
+        assert_eq!(eval_expr("(1 << 2) + 1", &env), Some(5));
+        assert_eq!(eval_expr("67_108_864usize", &env), Some(67_108_864));
+        assert_eq!(eval_expr("nope", &env), None);
+    }
+
+    #[test]
+    fn rust_extraction_handles_the_codec_shapes() {
+        let src = "\
+const MAGIC: u32 = 0x53544F52;
+const FAMILY_SHIFT: u8 = 2;
+const FAMILY_MASK: u8 = 0b11 << FAMILY_SHIFT;
+/// Shared header.
+const HEADER: usize = 4 + 2 + 2 + 4 + 4 + 8 + 8;
+const HEADER_V2: usize = HEADER + 8 + 1;
+
+fn family_to_code(f: HashFamily) -> u8 {
+    match f {
+        HashFamily::Dense => 0,
+        HashFamily::Sparse { .. } => 1,
+        HashFamily::Hadamard => 2,
+    }
+}
+";
+        let t = extract_rust_constants(src);
+        assert_eq!(t.get("MAGIC").map(|v| v.0), Some(0x53544F52));
+        assert_eq!(t.get("FAMILY_MASK").map(|v| v.0), Some(12));
+        assert_eq!(t.get("HEADER_V2").map(|v| v.0), Some(41));
+        assert_eq!(t.get("FAMILY_DENSE").map(|v| v.0), Some(0));
+        assert_eq!(t.get("FAMILY_SPARSE").map(|v| v.0), Some(1));
+        assert_eq!(t.get("FAMILY_HADAMARD").map(|v| v.0), Some(2));
+    }
+
+    #[test]
+    fn python_extraction_skips_indented_and_comments() {
+        let src = "\
+MAGIC = 0x53544F52  # frame magic
+HEADER = 4 + 2 + 2 + 4 + 4 + 8 + 8
+MAX_CELLS = 1 << 26
+def header():
+    local = 1
+";
+        let t = extract_python_constants(src);
+        assert_eq!(t.get("MAGIC").map(|v| v.0), Some(0x53544F52));
+        assert_eq!(t.get("HEADER").map(|v| v.0), Some(32));
+        assert_eq!(t.get("MAX_CELLS").map(|v| v.0), Some(67_108_864));
+        assert!(t.get("local").is_none());
+    }
+
+    #[test]
+    fn drift_is_detected_in_either_direction() {
+        let rust_ok = "const MAGIC: u32 = 0x53544F52;";
+        let py_drifted = "MAGIC = 0x53544F53\n";
+        let findings = check_mirror(rust_ok, py_drifted);
+        assert!(findings
+            .iter()
+            .any(|f| f.file == PY_MIRROR_PATH && f.message.contains("MAGIC")));
+        // The truncated sources above are missing most constants too.
+        assert!(findings.iter().all(|f| f.rule == RULE_WIRE_MIRROR_DRIFT));
+    }
+}

@@ -1,0 +1,605 @@
+//! The STORM-specific lint rules (L1–L3).
+//!
+//! Each rule is token-level over the blanked code view from
+//! [`crate::lexer`], scoped by path allowlists, by `#[cfg(test)] mod`
+//! regions (tests may index, unwrap and sleep), and by the
+//! `stormlint::allow(rule)` comment escape hatch. The L4 mirror-drift
+//! rule lives in [`crate::mirror`] because it compares two files rather
+//! than scanning one.
+
+use crate::lexer::{word_offsets, FileView};
+use crate::Finding;
+
+/// Rule identifiers, as printed in diagnostics and named in
+/// `stormlint::allow(...)` comments.
+pub const RULE_UNSAFE_OUTSIDE_SIMD: &str = "unsafe-outside-simd";
+pub const RULE_MISSING_SAFETY_COMMENT: &str = "missing-safety-comment";
+pub const RULE_RANDOMIZED_HASHER: &str = "randomized-hasher";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_RAW_THREAD_SPAWN: &str = "raw-thread-spawn";
+pub const RULE_FMA_CONTRACTION: &str = "fma-contraction";
+pub const RULE_WIRE_PANIC: &str = "wire-panic";
+pub const RULE_WIRE_INDEX: &str = "wire-index";
+pub const RULE_WIRE_ARITH: &str = "wire-arith";
+pub const RULE_WIRE_MIRROR_DRIFT: &str = "wire-mirror-drift";
+
+/// The one file allowed to contain `unsafe`.
+const UNSAFE_ALLOWLIST: &[&str] = &["lsh/simd.rs"];
+/// Files allowed to read the wall clock (plus anything under benches/).
+const WALL_CLOCK_ALLOWLIST: &[&str] = &["util/timer.rs", "util/bench.rs"];
+/// Files allowed to spawn raw threads (scoped `thread::scope` workers
+/// elsewhere don't match the `thread::spawn` token and stay legal).
+const THREAD_SPAWN_ALLOWLIST: &[&str] = &["edge/executor.rs", "edge/fleet.rs"];
+/// Module prefixes whose float reductions must stay scalar-ordered:
+/// `mul_add` (FMA contraction) would change results across targets.
+const FMA_SCOPES: &[&str] = &["lsh/", "sketch/", "edge/"];
+/// The wire codec file, home of the L3 rules.
+const WIRE_FILE: &str = "sketch/serialize.rs";
+
+fn path_ends_with(rel_path: &str, suffix: &str) -> bool {
+    let p = rel_path.replace('\\', "/");
+    p.ends_with(suffix)
+}
+
+fn in_allowlist(rel_path: &str, list: &[&str]) -> bool {
+    list.iter().any(|s| path_ends_with(rel_path, s))
+}
+
+fn in_benches(rel_path: &str) -> bool {
+    rel_path.replace('\\', "/").contains("benches/")
+}
+
+fn in_fma_scope(rel_path: &str) -> bool {
+    let p = rel_path.replace('\\', "/");
+    FMA_SCOPES.iter().any(|s| p.contains(&format!("src/{s}")))
+}
+
+/// Does a comment on `line` (1-based) or the line above carry a
+/// `stormlint::allow(rule)` escape hatch naming `rule`?
+fn allowed_by_comment(view: &FileView, line: usize, rule: &str) -> bool {
+    let check = |idx: usize| -> bool {
+        view.lines
+            .get(idx)
+            .map(|l| comment_allows(&l.comment, rule))
+            .unwrap_or(false)
+    };
+    // Own line (trailing comment), or the previous line (standalone).
+    check(line.wrapping_sub(1)) || (line >= 2 && check(line - 2))
+}
+
+fn comment_allows(comment: &str, rule: &str) -> bool {
+    let mut rest = comment;
+    while let Some(pos) = rest.find("stormlint::allow(") {
+        let inner = &rest[pos + "stormlint::allow(".len()..];
+        if let Some(end) = inner.find(')') {
+            if inner[..end]
+                .split(',')
+                .any(|r| r.trim() == rule)
+            {
+                return true;
+            }
+            rest = &inner[end..];
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Walk upward from `line` looking for a `// SAFETY:` comment, skipping
+/// lines that are blank or carry only attributes/other comments. This
+/// accepts the idiomatic shape
+/// ```text
+/// // SAFETY: AVX2 confirmed by the dispatcher.
+/// #[target_feature(enable = "avx2")]
+/// unsafe fn kernel(...) { ... }
+/// ```
+fn has_safety_comment(view: &FileView, line: usize) -> bool {
+    // Trailing comment on the same line counts too.
+    let mut idx = line; // 1-based; view.lines[idx - 1] is `line`.
+    loop {
+        let Some(l) = view.lines.get(idx - 1) else { return false };
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+        if idx != line {
+            let code = l.code.trim();
+            // Comment-only and blank lines have empty code after
+            // blanking; attributes may sit between the comment and the
+            // unsafe fn (`#[target_feature(...)]`).
+            let skippable = code.is_empty()
+                || code.starts_with("#[")
+                || code.starts_with("#!")
+                || code.ends_with(")]");
+            if !skippable {
+                return false;
+            }
+        }
+        if idx == 1 {
+            return false;
+        }
+        idx -= 1;
+    }
+}
+
+fn line_of_offset(code: &str, offset: usize) -> usize {
+    code.as_bytes()[..offset].iter().filter(|&&c| c == b'\n').count() + 1
+}
+
+fn joined_code(view: &FileView) -> String {
+    view.lines
+        .iter()
+        .map(|l| l.code.as_str())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Run every single-file rule against one source file.
+pub fn check_file(rel_path: &str, view: &FileView) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let code = joined_code(view);
+
+    check_unsafe(rel_path, view, &code, &mut out);
+    check_determinism(rel_path, view, &code, &mut out);
+    check_wire_safety(rel_path, view, &code, &mut out);
+
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+/// L1: `unsafe` containment and SAFETY comments.
+fn check_unsafe(rel_path: &str, view: &FileView, code: &str, out: &mut Vec<Finding>) {
+    for at in word_offsets(code, "unsafe") {
+        let line = line_of_offset(code, at);
+        if !in_allowlist(rel_path, UNSAFE_ALLOWLIST) {
+            if allowed_by_comment(view, line, RULE_UNSAFE_OUTSIDE_SIMD) {
+                continue;
+            }
+            out.push(Finding::new(
+                rel_path,
+                line,
+                RULE_UNSAFE_OUTSIDE_SIMD,
+                "`unsafe` is confined to lsh/simd.rs; move the code or route it \
+                 through the audited SIMD module",
+            ));
+        } else {
+            if allowed_by_comment(view, line, RULE_MISSING_SAFETY_COMMENT) {
+                continue;
+            }
+            if !has_safety_comment(view, line) {
+                out.push(Finding::new(
+                    rel_path,
+                    line,
+                    RULE_MISSING_SAFETY_COMMENT,
+                    "every `unsafe` block/fn needs a `// SAFETY:` comment stating \
+                     the invariant that makes it sound",
+                ));
+            }
+        }
+    }
+}
+
+/// L2: determinism — no randomized hashers, wall clocks, raw thread
+/// spawns, or FMA contraction in bit-identity-critical modules.
+fn check_determinism(rel_path: &str, view: &FileView, code: &str, out: &mut Vec<Finding>) {
+    // Test modules may use all of these freely.
+    let flag = |out: &mut Vec<Finding>, view: &FileView, line: usize, rule: &'static str, msg: &str| {
+        if view.in_test_region(line) || allowed_by_comment(view, line, rule) {
+            return;
+        }
+        out.push(Finding::new(rel_path, line, rule, msg));
+    };
+
+    for word in ["HashMap", "HashSet"] {
+        for at in word_offsets(code, word) {
+            let line = line_of_offset(code, at);
+            flag(
+                out,
+                view,
+                line,
+                RULE_RANDOMIZED_HASHER,
+                "std HashMap/HashSet iterate in randomized-hasher order; use \
+                 BTreeMap/BTreeSet (or a seeded hasher) so folds stay bit-identical",
+            );
+        }
+    }
+
+    if !in_allowlist(rel_path, WALL_CLOCK_ALLOWLIST) && !in_benches(rel_path) {
+        for pat in ["SystemTime::now", "Instant::now"] {
+            let mut from = 0usize;
+            while let Some(pos) = code[from..].find(pat) {
+                let at = from + pos;
+                from = at + 1;
+                let line = line_of_offset(code, at);
+                flag(
+                    out,
+                    view,
+                    line,
+                    RULE_WALL_CLOCK,
+                    "wall-clock reads live in util/timer.rs and benches only; take a \
+                     Timer (or a caller-supplied timestamp) instead",
+                );
+            }
+        }
+    }
+
+    if !in_allowlist(rel_path, THREAD_SPAWN_ALLOWLIST) {
+        let mut from = 0usize;
+        while let Some(pos) = code[from..].find("thread::spawn") {
+            let at = from + pos;
+            from = at + 1;
+            let line = line_of_offset(code, at);
+            flag(
+                out,
+                view,
+                line,
+                RULE_RAW_THREAD_SPAWN,
+                "raw thread::spawn is confined to edge/executor.rs and edge/fleet.rs; \
+                 route concurrency through the worker-pool executor",
+            );
+        }
+    }
+
+    if in_fma_scope(rel_path) {
+        for at in word_offsets(code, "mul_add") {
+            let line = line_of_offset(code, at);
+            flag(
+                out,
+                view,
+                line,
+                RULE_FMA_CONTRACTION,
+                "mul_add fuses with different rounding than mul-then-add; the \
+                 bit-identity-critical modules must keep scalar-ordered float ops",
+            );
+        }
+    }
+}
+
+/// Is `line` inside a decode-path region of the wire codec: a fn whose
+/// name starts with `decode`, the varint/width helpers, fuzz entry
+/// points, or any fn inside an `impl` block mentioning `WireReader`?
+fn in_decode_path(view: &FileView, line: usize) -> bool {
+    let decode_fn = view.fns.iter().any(|f| {
+        line >= f.body_start
+            && line <= f.body_end
+            && (f.name.starts_with("decode")
+                || f.name == "width_from_byte"
+                || f.name.starts_with("fuzz_varint")
+                || f.name == "get_varint")
+    });
+    let reader_impl = view
+        .impls
+        .iter()
+        .any(|i| i.header.contains("WireReader") && line >= i.body_start && line <= i.body_end);
+    decode_fn || reader_impl
+}
+
+/// L3: wire safety — decode paths in sketch/serialize.rs must be
+/// panic-free: no slice indexing, no unwrap/expect, no unchecked
+/// arithmetic. Untrusted bytes must only ever surface as `WireError`.
+fn check_wire_safety(rel_path: &str, view: &FileView, code: &str, out: &mut Vec<Finding>) {
+    if !path_ends_with(rel_path, WIRE_FILE) {
+        return;
+    }
+    let b = code.as_bytes();
+
+    let relevant = |view: &FileView, line: usize, rule: &str| -> bool {
+        in_decode_path(view, line) && !view.in_test_region(line) && !allowed_by_comment(view, line, rule)
+    };
+
+    // Panicking constructs.
+    const PANIC_TOKENS: &[&str] = &[
+        ".unwrap()",
+        ".expect(",
+        "panic!",
+        "unreachable!",
+        "todo!",
+        "unimplemented!",
+        "assert!(",
+        "assert_eq!(",
+        "assert_ne!(",
+        "debug_assert",
+    ];
+    for tok in PANIC_TOKENS {
+        let mut from = 0usize;
+        while let Some(pos) = code[from..].find(tok) {
+            let at = from + pos;
+            from = at + 1;
+            let line = line_of_offset(code, at);
+            if !relevant(view, line, RULE_WIRE_PANIC) {
+                continue;
+            }
+            out.push(Finding::new(
+                rel_path,
+                line,
+                RULE_WIRE_PANIC,
+                "decode paths must not panic on untrusted bytes; return a WireError",
+            ));
+        }
+    }
+
+    // Slice indexing: `[` whose previous non-space char ends an
+    // expression (identifier, `)`, `]`). `#[...]` attributes and array
+    // type syntax `[u8; 4]` start after non-expression chars and don't
+    // match.
+    for (at, &c) in b.iter().enumerate() {
+        if c != b'[' {
+            continue;
+        }
+        let mut j = at;
+        let mut prev = 0u8;
+        while j > 0 {
+            j -= 1;
+            if b[j] != b' ' {
+                prev = b[j];
+                break;
+            }
+        }
+        let indexing = prev.is_ascii_alphanumeric() || prev == b'_' || prev == b')' || prev == b']';
+        if !indexing {
+            continue;
+        }
+        let line = line_of_offset(code, at);
+        if !relevant(view, line, RULE_WIRE_INDEX) {
+            continue;
+        }
+        out.push(Finding::new(
+            rel_path,
+            line,
+            RULE_WIRE_INDEX,
+            "slice indexing panics on short frames; use .get(..) and map the \
+             miss to WireError::Truncated",
+        ));
+    }
+
+    // Unchecked arithmetic: binary `+`, `-`, `*` (and their `=` forms)
+    // following an expression. Shifts stay legal — decode guards their
+    // operands with explicit range checks before shifting.
+    for (at, &c) in b.iter().enumerate() {
+        if c != b'+' && c != b'-' && c != b'*' {
+            continue;
+        }
+        // `->` return arrow, `+=`-style second char, `**`-like doubles.
+        if c == b'-' && at + 1 < b.len() && b[at + 1] == b'>' {
+            continue;
+        }
+        if at > 0 && (b[at - 1] == b'+' || b[at - 1] == b'-' || b[at - 1] == b'*') {
+            continue;
+        }
+        let mut j = at;
+        let mut prev = 0u8;
+        while j > 0 {
+            j -= 1;
+            if b[j] != b' ' {
+                prev = b[j];
+                break;
+            }
+        }
+        let binary = prev.is_ascii_alphanumeric() || prev == b'_' || prev == b')' || prev == b']';
+        if !binary {
+            continue;
+        }
+        let line = line_of_offset(code, at);
+        if !relevant(view, line, RULE_WIRE_ARITH) {
+            continue;
+        }
+        out.push(Finding::new(
+            rel_path,
+            line,
+            RULE_WIRE_ARITH,
+            "unchecked arithmetic can overflow on adversarial headers; use \
+             checked_add/checked_mul (or saturating ops) and surface WireError",
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::FileView;
+
+    fn lint(path: &str, src: &str) -> Vec<Finding> {
+        check_file(path, &FileView::parse(src))
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- L1 ----
+
+    #[test]
+    fn unsafe_outside_simd_is_flagged() {
+        let f = lint("rust/src/sketch/race.rs", "fn f() { unsafe { std::hint::unreachable_unchecked() } }\n");
+        assert!(rules_of(&f).contains(&RULE_UNSAFE_OUTSIDE_SIMD));
+    }
+
+    #[test]
+    fn unsafe_in_simd_with_safety_comment_passes() {
+        let src = "\
+// SAFETY: caller checked AVX2 via the dispatcher.
+#[target_feature(enable = \"avx2\")]
+unsafe fn kernel(x: &[f32]) {}
+";
+        let f = lint("rust/src/lsh/simd.rs", src);
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn unsafe_in_simd_without_safety_comment_fails() {
+        let f = lint("rust/src/lsh/simd.rs", "unsafe fn kernel(x: &[f32]) {}\n");
+        assert_eq!(rules_of(&f), vec![RULE_MISSING_SAFETY_COMMENT]);
+    }
+
+    #[test]
+    fn trailing_safety_comment_counts() {
+        let f = lint(
+            "rust/src/lsh/simd.rs",
+            "let v = unsafe { load(ptr) }; // SAFETY: ptr is in-bounds by the loop guard.\n",
+        );
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn unsafe_in_comment_or_string_is_ignored() {
+        let f = lint(
+            "rust/src/sketch/race.rs",
+            "// this code is never unsafe\nlet s = \"unsafe\";\n",
+        );
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    // ---- L2 ----
+
+    #[test]
+    fn hashmap_is_flagged_outside_tests() {
+        let f = lint("rust/src/lsh/query.rs", "use std::collections::HashMap;\n");
+        assert_eq!(rules_of(&f), vec![RULE_RANDOMIZED_HASHER]);
+    }
+
+    #[test]
+    fn hashmap_in_test_mod_passes() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+}
+";
+        let f = lint("rust/src/lsh/query.rs", src);
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn wall_clock_flagged_outside_timer() {
+        let f = lint("rust/src/edge/network.rs", "let t = std::time::Instant::now();\n");
+        assert_eq!(rules_of(&f), vec![RULE_WALL_CLOCK]);
+    }
+
+    #[test]
+    fn wall_clock_allowed_in_timer_and_benches() {
+        assert!(lint("rust/src/util/timer.rs", "let t = Instant::now();\n").is_empty());
+        assert!(lint("rust/src/util/bench.rs", "let t = Instant::now();\n").is_empty());
+        assert!(lint("rust/benches/bench_fleet.rs", "let t = Instant::now();\n").is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_confined_to_executor_and_fleet() {
+        let f = lint("rust/src/sketch/storm.rs", "std::thread::spawn(|| {});\n");
+        assert_eq!(rules_of(&f), vec![RULE_RAW_THREAD_SPAWN]);
+        assert!(lint("rust/src/edge/executor.rs", "std::thread::spawn(|| {});\n").is_empty());
+        assert!(lint("rust/src/edge/fleet.rs", "std::thread::spawn(|| {});\n").is_empty());
+    }
+
+    #[test]
+    fn scoped_threads_stay_legal() {
+        let f = lint("rust/src/sketch/storm.rs", "std::thread::scope(|s| { s.spawn(|| {}); });\n");
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn mul_add_flagged_in_bit_identity_scopes_only() {
+        let f = lint("rust/src/lsh/srp.rs", "let y = a.mul_add(b, c);\n");
+        assert_eq!(rules_of(&f), vec![RULE_FMA_CONTRACTION]);
+        assert!(lint("rust/src/linalg/matrix.rs", "let y = a.mul_add(b, c);\n").is_empty());
+    }
+
+    #[test]
+    fn escape_hatch_comment_suppresses() {
+        let src = "\
+// stormlint::allow(randomized-hasher) -- keyed by opaque ids, order never observed
+use std::collections::HashMap;
+";
+        assert!(lint("rust/src/lsh/query.rs", src).is_empty());
+        let trailing = "use std::collections::HashMap; // stormlint::allow(randomized-hasher)\n";
+        assert!(lint("rust/src/lsh/query.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn escape_hatch_names_must_match() {
+        let src = "\
+// stormlint::allow(wall-clock)
+use std::collections::HashMap;
+";
+        let f = lint("rust/src/lsh/query.rs", src);
+        assert_eq!(rules_of(&f), vec![RULE_RANDOMIZED_HASHER]);
+    }
+
+    // ---- L3 ----
+
+    #[test]
+    fn wire_unwrap_in_decode_fn_fails() {
+        let src = "\
+pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
+    let x = bytes.get(0).unwrap();
+    Ok(Frame { x: *x })
+}
+";
+        let f = lint("rust/src/sketch/serialize.rs", src);
+        assert!(rules_of(&f).contains(&RULE_WIRE_PANIC));
+    }
+
+    #[test]
+    fn wire_indexing_in_decode_fn_fails() {
+        let src = "\
+pub fn decode_delta(bytes: &[u8]) -> u8 {
+    bytes[0]
+}
+";
+        let f = lint("rust/src/sketch/serialize.rs", src);
+        assert!(rules_of(&f).contains(&RULE_WIRE_INDEX));
+    }
+
+    #[test]
+    fn wire_unchecked_add_in_reader_impl_fails() {
+        let src = "\
+struct WireReader<'a> { buf: &'a [u8], pos: usize }
+impl<'a> WireReader<'a> {
+    fn take(&mut self, n: usize) -> usize {
+        self.pos + n
+    }
+}
+";
+        let f = lint("rust/src/sketch/serialize.rs", src);
+        assert!(rules_of(&f).contains(&RULE_WIRE_ARITH));
+    }
+
+    #[test]
+    fn encode_paths_are_out_of_scope() {
+        let src = "\
+pub fn encode(counts: &[u64]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(counts[0] as u8 + 1);
+    out
+}
+";
+        let f = lint("rust/src/sketch/serialize.rs", src);
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn checked_ops_and_get_pass_in_decode() {
+        let src = "\
+pub fn decode(bytes: &[u8]) -> Result<u32, WireError> {
+    let end = 4usize.checked_add(bytes.len()).ok_or(WireError::Truncated(0))?;
+    let head = bytes.get(..4).ok_or(WireError::Truncated(end))?;
+    head.try_into().map(u32::from_le_bytes).map_err(|_| WireError::Truncated(end))
+}
+";
+        let f = lint("rust/src/sketch/serialize.rs", src);
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+
+    #[test]
+    fn wire_rules_skip_test_mods() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn decode_helper(bytes: &[u8]) -> u8 {
+        bytes[0]
+    }
+}
+";
+        let f = lint("rust/src/sketch/serialize.rs", src);
+        assert!(f.is_empty(), "unexpected findings: {f:?}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Acceptance tests for the issue's headline criteria:
+//!
+//! * a seeded violation of each rule L1–L4 makes the pass fail
+//!   (non-empty findings ⇒ the CLI exits non-zero),
+//! * the real repo tree lints clean,
+//! * the extracted wire-constant tables match the agreed snapshot.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use stormlint::{lint_tree, mirror, rules};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+/// Build a throwaway tree seeded with one violation per rule.
+fn write_seeded_tree(root: &Path) {
+    let w = |rel: &str, body: &str| {
+        let path = root.join(rel);
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(path, body).unwrap();
+    };
+
+    // L1: unsafe outside simd.rs, and unsafe in simd.rs without SAFETY.
+    w(
+        "rust/src/sketch/race.rs",
+        "pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n",
+    );
+    w(
+        "rust/src/lsh/simd.rs",
+        "pub unsafe fn kernel(x: *const f32) -> f32 { unsafe { *x } }\n",
+    );
+
+    // L2: randomized hasher, wall clock, raw spawn, FMA.
+    w(
+        "rust/src/lsh/query.rs",
+        "use std::collections::HashMap;\npub fn t() { let _ = std::time::Instant::now(); }\n\
+         pub fn s() { std::thread::spawn(|| {}); }\npub fn m(a: f64) -> f64 { a.mul_add(2.0, 1.0) }\n",
+    );
+
+    // L3: indexing, unwrap and unchecked arithmetic in a decode path,
+    // plus a drifted constant table for L4.
+    w(
+        "rust/src/sketch/serialize.rs",
+        "const MAGIC: u32 = 0x53544F51;\n\
+         pub fn decode(bytes: &[u8]) -> u32 {\n\
+             let n = bytes.len() + 4;\n\
+             let _ = bytes.get(0).unwrap();\n\
+             (bytes[0] as u32) + (n as u32)\n\
+         }\n",
+    );
+
+    // L4 python side: present but drifted too.
+    w("python/tests/wire_mirror.py", "MAGIC = 0x53544F50\n");
+}
+
+#[test]
+fn seeded_violations_trip_every_rule() {
+    let dir = std::env::temp_dir().join(format!("stormlint-seeded-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    write_seeded_tree(&dir);
+
+    let findings = lint_tree(&dir);
+    let hit = |rule: &str| findings.iter().any(|f| f.rule == rule);
+
+    assert!(hit(rules::RULE_UNSAFE_OUTSIDE_SIMD), "L1 containment: {findings:#?}");
+    assert!(hit(rules::RULE_MISSING_SAFETY_COMMENT), "L1 SAFETY: {findings:#?}");
+    assert!(hit(rules::RULE_RANDOMIZED_HASHER), "L2 hasher: {findings:#?}");
+    assert!(hit(rules::RULE_WALL_CLOCK), "L2 clock: {findings:#?}");
+    assert!(hit(rules::RULE_RAW_THREAD_SPAWN), "L2 spawn: {findings:#?}");
+    assert!(hit(rules::RULE_FMA_CONTRACTION), "L2 fma: {findings:#?}");
+    assert!(hit(rules::RULE_WIRE_PANIC), "L3 panic: {findings:#?}");
+    assert!(hit(rules::RULE_WIRE_INDEX), "L3 index: {findings:#?}");
+    assert!(hit(rules::RULE_WIRE_ARITH), "L3 arith: {findings:#?}");
+    assert!(hit(rules::RULE_WIRE_MIRROR_DRIFT), "L4 drift: {findings:#?}");
+
+    // Non-empty findings are exactly what makes the CLI exit non-zero.
+    assert!(!findings.is_empty());
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repo_tree_is_clean() {
+    let findings = lint_tree(&repo_root());
+    assert!(
+        findings.is_empty(),
+        "the repo tree must lint clean; found:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn wire_constant_tables_match_the_snapshot() {
+    let rust_src = fs::read_to_string(repo_root().join(mirror::RUST_WIRE_PATH))
+        .expect("rust wire codec readable");
+    let py_src = fs::read_to_string(repo_root().join(mirror::PY_MIRROR_PATH))
+        .expect("python wire mirror readable");
+
+    let rust = mirror::extract_rust_constants(&rust_src);
+    let py = mirror::extract_python_constants(&py_src);
+
+    for &(name, want) in mirror::EXPECTED {
+        assert_eq!(
+            rust.get(name).map(|v| v.0),
+            Some(want),
+            "rust constant {name} drifted from the agreed table"
+        );
+        assert_eq!(
+            py.get(name).map(|v| v.0),
+            Some(want),
+            "python constant {name} drifted from the agreed table"
+        );
+    }
+}
